@@ -1,0 +1,52 @@
+//! End-to-end driver: MOF Generation campaign with automatic distributed
+//! memory management (paper Fig 10).
+//!
+//! A thinker steers generate → assemble → score rounds; candidate blocks
+//! travel as proxies and the physics surrogate runs as the compiled
+//! `mof_score_c256` PJRT artifact (L1 Pallas scorer). Compares the number
+//! of active proxied objects under default vs ownership management.
+//!
+//! Run with: `cargo run --release --example mof_ownership`
+
+use proxystore::apps::mof::{run, MemoryMode, MofConfig};
+use proxystore::error::Result;
+use proxystore::runtime::{default_artifacts_dir, ModelRegistry};
+
+fn main() -> Result<()> {
+    let reg = ModelRegistry::load(default_artifacts_dir())?;
+    let cfg = MofConfig {
+        rounds: 8,
+        generators: 3,
+        top_k: 4,
+        ..Default::default()
+    };
+    println!("MOF Generation — {cfg:?}\n");
+
+    for mode in [MemoryMode::Default, MemoryMode::Ownership] {
+        let report = run(&cfg, &reg, mode)?;
+        println!("[{}]", mode.label());
+        println!("  best candidate score: {:.4}", report.best_score);
+        println!(
+            "  active proxies: peak {} → final {}",
+            report.series.peak_active(),
+            report.series.final_active()
+        );
+        // A low-fi sparkline of the active-proxies series.
+        let max = report.series.peak_active().max(1);
+        let spark: String = report
+            .series
+            .samples
+            .iter()
+            .map(|(_, a, _)| {
+                const RAMP: [char; 5] = [' ', '.', ':', '*', '#'];
+                RAMP[((a * 4) / max).clamp(0, 4) as usize]
+            })
+            .collect();
+        println!("  |{spark}|\n");
+    }
+    println!(
+        "paper's Fig 10: ownership evicts proxies when lifetimes end while \
+         default management accumulates them for the whole campaign."
+    );
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Quickstart: the three proxy patterns in ~80 lines.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use std::time::Duration;
+
+use proxystore::codec::Encode;
+use proxystore::error::Result;
+use proxystore::ownership::{borrow, StoreOwnedExt};
+use proxystore::prelude::{Proxy, ProxyFuture, Store};
+
+fn main() -> Result<()> {
+    // A Store wraps a mediated channel (here: in-process shared memory;
+    // swap in TcpKvConnector for a real redis-sim server).
+    let store = Store::memory("quickstart");
+
+    // ----------------------------------------------------------------
+    // 1. Transparent lazy proxies: pass-by-reference that resolves
+    //    just-in-time and is self-contained.
+    // ----------------------------------------------------------------
+    let big = "x".repeat(1 << 20);
+    let proxy: Proxy<String> = store.proxy(&big)?;
+    println!(
+        "proxy of a {} byte string serializes to {} bytes",
+        big.len(),
+        proxy.to_bytes().len()
+    );
+    // Any &str consumer accepts &Proxy<String> via Deref (transparency).
+    let len = proxy.len();
+    println!("resolved transparently: len = {len}");
+
+    // ----------------------------------------------------------------
+    // 2. ProxyFutures: mint proxies of values that don't exist yet.
+    // ----------------------------------------------------------------
+    let future: ProxyFuture<String> = store.future();
+    let consumer_proxy = future.proxy();
+    let consumer = std::thread::spawn(move || {
+        // Blocks inside resolve() until the producer calls set_result.
+        format!("consumer got: {}", *consumer_proxy)
+    });
+    std::thread::sleep(Duration::from_millis(100));
+    future.set_result(&"data, eventually".to_string())?;
+    println!("{}", consumer.join().expect("consumer"));
+
+    // ----------------------------------------------------------------
+    // 3. Ownership: Rust semantics for distributed objects.
+    // ----------------------------------------------------------------
+    let owned = store.owned_proxy(&vec![1u64, 2, 3])?;
+    let key = owned.key().to_string();
+    {
+        let r1 = borrow(&owned)?;
+        let r2 = borrow(&owned)?;
+        println!(
+            "two immutable borrows read {:?} / {:?}",
+            r1.resolve()?,
+            r2.resolve()?
+        );
+        // While borrows are live, mutable access is a runtime error:
+        assert!(owned.mut_borrow().is_err());
+    }
+    // Borrows dropped: mutation is fine now.
+    let mut owned = owned;
+    proxystore::ownership::update(&mut owned, &vec![4u64, 5])?;
+    println!("owner updated target to {:?}", owned.resolve()?);
+    drop(owned);
+    println!(
+        "owner dropped → target evicted from store: {}",
+        !store.exists(&key)?
+    );
+    Ok(())
+}

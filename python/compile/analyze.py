@@ -1,0 +1,153 @@
+"""L1/L2 performance analysis (build-time).
+
+Interpret-mode Pallas gives CPU-numpy wallclock, which is *not* a TPU
+proxy, so the optimization signal for L1 is structural:
+
+  * VMEM footprint per grid step (must fit the ~16 MiB/core budget, with
+    2x headroom for Mosaic's double buffering);
+  * MXU alignment (block dims as multiples of the 128x128 systolic array
+    and the (8, 128) vector registers);
+  * arithmetic intensity (FLOPs per HBM byte) against the TPU roofline.
+
+For L2 the signal is the lowered HLO itself: counts of fusion ops vs
+total, and the absence of duplicated expensive ops (each `dot` in the
+graph should appear exactly as many times as the math requires).
+
+Run: ``cd python && python -m compile.analyze``; the table feeds
+DESIGN.md §8 and EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import os
+import re
+from dataclasses import dataclass
+
+# TPU v4-ish reference numbers (per core) used for roofline estimates.
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_DIM = 128
+HBM_BW = 1.2e12        # bytes/s
+PEAK_F32_FLOPS = 137e12 / 2  # bf16 peak halved for f32 accumulate
+
+
+@dataclass
+class KernelEstimate:
+    name: str
+    block: tuple
+    vmem_bytes: int
+    mxu_aligned: bool
+    flops_per_step: float
+    hbm_bytes_per_step: float
+
+    @property
+    def intensity(self) -> float:
+        return self.flops_per_step / max(self.hbm_bytes_per_step, 1.0)
+
+    @property
+    def roofline_bound(self) -> str:
+        knee = PEAK_F32_FLOPS / HBM_BW
+        return "compute" if self.intensity >= knee else "memory"
+
+    @property
+    def mxu_util_estimate(self) -> float:
+        """Fraction of MXU issue slots doing useful work for the block."""
+        bm, bn, bk = (self.block + (1, 1, 1))[:3]
+        pad = lambda d: math.ceil(d / MXU_DIM) * MXU_DIM
+        useful = bm * bn * bk
+        issued = pad(bm) * pad(bn) * pad(bk)
+        return useful / issued
+
+
+def fused_dense_estimate(bm=128, bn=128, bk=128, dtype_bytes=4) -> KernelEstimate:
+    vmem = (bm * bk + bk * bn + bm * bn + bn) * dtype_bytes
+    return KernelEstimate(
+        name=f"fused_dense {bm}x{bn}x{bk}",
+        block=(bm, bn, bk),
+        vmem_bytes=vmem,
+        mxu_aligned=(bm % 8 == 0 and bn % 128 == 0 and bk % 128 == 0),
+        flops_per_step=2.0 * bm * bn * bk,
+        hbm_bytes_per_step=(bm * bk + bk * bn) * dtype_bytes,
+    )
+
+
+def contact_map_estimate(bi=128, bj=128, dtype_bytes=4) -> KernelEstimate:
+    vmem = (bi * 3 + bj * 3 + bi * bj) * dtype_bytes
+    return KernelEstimate(
+        name=f"contact_map {bi}x{bj}",
+        block=(bi, bj, 3),
+        vmem_bytes=vmem,
+        mxu_aligned=(bi % 8 == 0 and bj % 128 == 0),
+        flops_per_step=bi * bj * (2 * 3 + 6),  # dot + norm + sigmoid-ish
+        hbm_bytes_per_step=(bi * 3 + bj * 3 + bi * bj) * dtype_bytes,
+    )
+
+
+def mof_score_estimate(bc=128, d=64, dtype_bytes=4) -> KernelEstimate:
+    vmem = (bc * d + d + bc) * dtype_bytes
+    return KernelEstimate(
+        name=f"mof_score {bc}x{d}",
+        block=(bc, d),
+        vmem_bytes=vmem,
+        mxu_aligned=(bc % 8 == 0),
+        flops_per_step=bc * (4 * d + 10),
+        hbm_bytes_per_step=(bc * d) * dtype_bytes,
+    )
+
+
+def analyze_hlo(path: str) -> dict:
+    """Structural stats of a lowered HLO module."""
+    text = open(path).read()
+    ops = re.findall(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[\w\[\]{}, ]+?\s(\w+)\(",
+                     text, re.MULTILINE)
+    counts: dict = {}
+    for op in ops:
+        counts[op] = counts.get(op, 0) + 1
+    return {
+        "total_ops": len(ops),
+        "dots": counts.get("dot", 0),
+        "fusions": counts.get("fusion", 0),
+        "while_loops": counts.get("while", 0),
+        "custom_calls": counts.get("custom-call", 0),
+        "broadcasts": counts.get("broadcast", 0),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+
+    print("== L1 kernel estimates (TPU v4 reference numbers) ==")
+    estimates = [
+        fused_dense_estimate(),               # default blocking
+        fused_dense_estimate(256, 256, 128),  # larger-N variant
+        fused_dense_estimate(8, 128, 128),    # small-batch inference shape
+        contact_map_estimate(),
+        contact_map_estimate(32, 32),         # our N=32 geometry
+        mof_score_estimate(),
+    ]
+    for e in estimates:
+        budget = "OK" if e.vmem_bytes * 2 <= VMEM_BYTES else "OVER"
+        print(
+            f"  {e.name:28s} vmem/step {e.vmem_bytes/1024:8.1f} KiB "
+            f"(x2 buf: {budget}) mxu-aligned={str(e.mxu_aligned):5s} "
+            f"intensity {e.intensity:7.1f} flop/B -> {e.roofline_bound}-bound "
+            f"mxu-util {e.mxu_util_estimate:.2f}"
+        )
+
+    manifest = os.path.join(args.artifacts, "manifest.txt")
+    if os.path.exists(manifest):
+        print("\n== L2 lowered HLO structure ==")
+        for line in open(manifest):
+            parts = line.split()
+            if parts and parts[0] == "model":
+                stats = analyze_hlo(os.path.join(args.artifacts, parts[2]))
+                print(f"  {parts[1]:20s} {stats}")
+    else:
+        print(f"\n(no artifacts at {args.artifacts}; run make artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,231 @@
+"""AOT export: lower the L2 JAX graphs to HLO text for the Rust runtime.
+
+Run once at build time (``make artifacts``); Python never appears on the
+request path. For each exported entry point we write
+
+  * ``artifacts/<name>.hlo.txt``  -- HLO **text** (NOT a serialized
+    HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids
+    which xla_extension 0.5.1 rejects; the text parser reassigns ids and
+    round-trips cleanly -- see /opt/xla-example/README.md),
+  * an entry in ``artifacts/manifest.txt`` -- a deliberately trivial
+    line-oriented format the Rust side parses without a JSON dependency,
+  * ``artifacts/manifest.json``   -- the same metadata for humans/tools.
+
+Initial autoencoder parameters are materialized to ``artifacts/params.bin``
+(raw little-endian f32) with an index in the manifest so the Rust
+coordinator can seed training/inference without Python.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _fmt_shape(shape: Sequence[int]) -> str:
+    return "x".join(str(d) for d in shape) if shape else "scalar"
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def export(self, name: str, fn: Callable, in_specs, in_names, out_names):
+        """Lower ``fn`` at ``in_specs`` and record manifest metadata."""
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *in_specs)
+        self.entries.append(
+            {
+                "name": name,
+                "hlo": f"{name}.hlo.txt",
+                "inputs": [
+                    {"name": n, "dtype": str(s.dtype), "shape": list(s.shape)}
+                    for n, s in zip(in_names, in_specs)
+                ],
+                "outputs": [
+                    {"name": n, "dtype": str(s.dtype), "shape": list(s.shape)}
+                    for n, s in zip(out_names, out_shapes)
+                ],
+            }
+        )
+        print(f"  exported {name}: {len(text) // 1024} KiB HLO")
+
+    def write_params(self, params):
+        """Raw little-endian f32 param bank + index entries."""
+        path = os.path.join(self.out_dir, "params.bin")
+        index = []
+        offset = 0
+        with open(path, "wb") as f:
+            for key in model.PARAM_KEYS:
+                arr = np.asarray(params[key], dtype="<f4")
+                data = arr.tobytes()
+                f.write(data)
+                index.append(
+                    {
+                        "name": key,
+                        "dtype": "float32",
+                        "shape": list(arr.shape),
+                        "offset": offset,
+                        "nbytes": len(data),
+                    }
+                )
+                offset += len(data)
+        self.params_index = index
+        print(f"  wrote params.bin ({offset // 1024} KiB)")
+
+    def write_manifests(self, geometry):
+        jpath = os.path.join(self.out_dir, "manifest.json")
+        with open(jpath, "w") as f:
+            json.dump(
+                {
+                    "geometry": geometry,
+                    "models": self.entries,
+                    "params": self.params_index,
+                },
+                f,
+                indent=2,
+            )
+        tpath = os.path.join(self.out_dir, "manifest.txt")
+        with open(tpath, "w") as f:
+            f.write("# proxystore AOT manifest (line-oriented)\n")
+            for k, v in geometry.items():
+                f.write(f"geometry {k} {v}\n")
+            for e in self.entries:
+                f.write(f"model {e['name']} {e['hlo']}\n")
+                for io in e["inputs"]:
+                    f.write(
+                        f"input {io['name']} {io['dtype']} "
+                        f"{_fmt_shape(io['shape'])}\n"
+                    )
+                for io in e["outputs"]:
+                    f.write(
+                        f"output {io['name']} {io['dtype']} "
+                        f"{_fmt_shape(io['shape'])}\n"
+                    )
+                f.write("end\n")
+            for p in self.params_index:
+                f.write(
+                    f"param {p['name']} {p['dtype']} {_fmt_shape(p['shape'])} "
+                    f"{p['offset']} {p['nbytes']}\n"
+                )
+        print(f"  wrote manifest.txt / manifest.json ({len(self.entries)} models)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--feature-dim", type=int, default=model.FEATURE_DIM)
+    ap.add_argument("--hidden-dim", type=int, default=model.HIDDEN_DIM)
+    ap.add_argument("--latent-dim", type=int, default=model.LATENT_DIM)
+    ap.add_argument(
+        "--encode-batches", type=int, nargs="+", default=[1, 8, 32]
+    )
+    ap.add_argument("--train-batch", type=int, default=32)
+    ap.add_argument("--featurize-batches", type=int, nargs="+", default=[1, 8])
+    ap.add_argument("--mof-candidates", type=int, default=256)
+    ap.add_argument("--mof-dim", type=int, default=64)
+    args = ap.parse_args()
+
+    D, H, L = args.feature_dim, args.hidden_dim, args.latent_dim
+    n_res = int(round(D ** 0.5))
+    assert n_res * n_res == D, "feature dim must be a square (contact map)"
+
+    ex = Exporter(args.out_dir)
+    pshapes = model.param_shapes(D, H, L)
+    pspecs = [spec(*pshapes[k]) for k in model.PARAM_KEYS]
+    pnames = list(model.PARAM_KEYS)
+
+    enc_specs = [spec(*pshapes[k]) for k in model.ENCODER_KEYS]
+    enc_names = list(model.ENCODER_KEYS)
+
+    print("lowering L2 graphs (Pallas kernels, interpret=True):")
+    for b in args.encode_batches:
+        ex.export(
+            f"encode_b{b}",
+            model.encode_flat,
+            enc_specs + [spec(b, D)],
+            enc_names + ["x"],
+            ["z"],
+        )
+    ex.export(
+        f"autoencoder_b{args.train_batch}",
+        model.autoencoder_flat,
+        pspecs + [spec(args.train_batch, D)],
+        pnames + ["x"],
+        ["recon"],
+    )
+    ex.export(
+        f"train_step_b{args.train_batch}",
+        model.train_step_flat,
+        pspecs + [spec(args.train_batch, D), spec()],
+        pnames + ["x", "lr"],
+        [f"new_{k}" for k in model.PARAM_KEYS] + ["loss"],
+    )
+    for b in args.featurize_batches:
+        ex.export(
+            f"featurize_b{b}",
+            model.featurize_flat,
+            [spec(b, n_res, 3)],
+            ["coords"],
+            ["features"],
+        )
+    ex.export(
+        f"mof_score_c{args.mof_candidates}",
+        model.mof_score_flat,
+        [spec(args.mof_candidates, args.mof_dim), spec(args.mof_dim)],
+        ["features", "weights"],
+        ["scores"],
+    )
+
+    params = model.init_params(
+        seed=0, feature_dim=D, hidden_dim=H, latent_dim=L
+    )
+    ex.write_params(params)
+    ex.write_manifests(
+        {
+            "feature_dim": D,
+            "hidden_dim": H,
+            "latent_dim": L,
+            "n_residues": n_res,
+            "train_batch": args.train_batch,
+            "mof_candidates": args.mof_candidates,
+            "mof_dim": args.mof_dim,
+        }
+    )
+    print("AOT export complete.")
+
+
+if __name__ == "__main__":
+    main()

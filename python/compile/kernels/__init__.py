@@ -1,0 +1,24 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+Every kernel here is authored with the TPU mental model (VMEM tiles feeding
+the MXU, grids expressing the HBM<->VMEM schedule) but lowered with
+``interpret=True`` so the resulting HLO is executable by any PJRT backend,
+including the Rust CPU client that serves the request path.
+
+Kernels:
+  - ``fused_mlp.fused_dense`` -- tiled matmul + bias + activation, the
+    autoencoder's hot spot (DeepDriveMD inference, Fig 9).
+  - ``distance.contact_map`` -- pairwise-distance / thresholded contact
+    map over MD frames (DeepDriveMD simulation featurization).
+  - ``score.mof_score`` -- weighted reduction scorer for MOF candidates
+    (MOF Generation application, Fig 10).
+
+Correctness oracle: ``compile.kernels.ref`` (pure jax.numpy), checked by
+``python/tests`` with hypothesis sweeps.
+"""
+
+from compile.kernels.fused_mlp import fused_dense
+from compile.kernels.distance import contact_map
+from compile.kernels.score import mof_score
+
+__all__ = ["fused_dense", "contact_map", "mof_score"]

@@ -1,0 +1,95 @@
+"""Pairwise-distance / contact-map featurizer as a tiled Pallas kernel.
+
+DeepDriveMD featurizes each MD frame into a residue-residue contact map
+(1.0 where the pairwise distance is under a cutoff) that feeds the
+autoencoder. For an ``(N, 3)`` coordinate frame the naive jnp version
+materializes the full ``(N, N, 3)`` difference tensor; this kernel instead
+tiles the output map so only an ``(bi, 3)`` row tile and ``(bj, 3)`` column
+tile of coordinates are resident per grid step.
+
+TPU adaptation: on GPU this is a classic "one threadblock per output tile"
+kernel with coordinate staging in shared memory; here the BlockSpec grid
+plays the threadblock role and VMEM the staging role. The distance math is
+pure VPU (elementwise + small reduction) -- no MXU involvement -- so block
+shapes are chosen for the (8, 128) vector lanes rather than the systolic
+array: row blocks of 128 x column blocks of 128 keep the output tile at
+64 KiB and the coordinate tiles under 2 KiB each.
+
+Lowered with ``interpret=True``; validated against ``ref.contact_map_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.fused_mlp import pick_block
+
+
+def _contact_map_kernel(xi_ref, xj_ref, o_ref, *, cutoff: float,
+                        soft: bool):
+    """One (i, j) output tile: pairwise distances between row/col tiles."""
+    xi = xi_ref[...].astype(jnp.float32)  # (bi, 3)
+    xj = xj_ref[...].astype(jnp.float32)  # (bj, 3)
+    # |xi - xj|^2 = |xi|^2 + |xj|^2 - 2 xi.xj -- the dot form maps onto the
+    # MXU for large tiles and avoids the (bi, bj, 3) broadcast intermediate.
+    sq_i = jnp.sum(xi * xi, axis=-1, keepdims=True)       # (bi, 1)
+    sq_j = jnp.sum(xj * xj, axis=-1, keepdims=True).T     # (1, bj)
+    cross = jnp.dot(xi, xj.T, preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(sq_i + sq_j - 2.0 * cross, 0.0)
+    if soft:
+        # Smooth contact: sigmoid((cutoff^2 - d^2) / cutoff^2); keeps the
+        # featurizer differentiable for the train path.
+        o_ref[...] = jax.nn.sigmoid((cutoff * cutoff - d2) / (cutoff * cutoff))
+    else:
+        o_ref[...] = (d2 < cutoff * cutoff).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cutoff", "soft", "block_i", "block_j")
+)
+def contact_map(
+    coords: jax.Array,
+    *,
+    cutoff: float = 8.0,
+    soft: bool = True,
+    block_i: int = 128,
+    block_j: int = 128,
+) -> jax.Array:
+    """Compute the ``(N, N)`` contact map of an ``(N, 3)`` coordinate frame.
+
+    Args:
+      coords: ``(N, 3)`` atom/residue positions.
+      cutoff: contact distance threshold (angstroms in the MD application).
+      soft: if true, emit a smooth sigmoid contact value instead of a 0/1
+        indicator (differentiable; used on the training path).
+      block_i/block_j: output tile shape.
+
+    Returns:
+      ``(N, N)`` float32 contact map.
+    """
+    n, d = coords.shape
+    if d != 3:
+        raise ValueError(f"coords must be (N, 3), got {coords.shape}")
+
+    bi = pick_block(n, block_i)
+    bj = pick_block(n, block_j)
+    grid = (n // bi, n // bj)
+
+    kernel = functools.partial(
+        _contact_map_kernel, cutoff=float(cutoff), soft=soft
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, 3), lambda i, j: (i, 0)),
+            pl.BlockSpec((bj, 3), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bi, bj), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(coords, coords)

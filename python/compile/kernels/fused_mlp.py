@@ -1,0 +1,142 @@
+"""Fused dense layer (matmul + bias + activation) as a tiled Pallas kernel.
+
+This is the compute hot spot of the DeepDriveMD autoencoder (Fig 9): every
+inference round-trip is a stack of dense layers, and fusing the bias add and
+activation into the matmul epilogue removes two extra HBM round trips per
+layer.
+
+TPU adaptation (paper ran on A100 GPUs):
+  * CUDA threadblock tiles in shared memory  ->  ``BlockSpec`` tiles in VMEM.
+  * Tensor-core WMMA fragments               ->  MXU-shaped inner matmul
+    (block shapes kept to multiples of the (8, 128) register lanes; the
+    default 128x128x128 blocking matches the 128x128 systolic array).
+  * ``cp.async`` double buffering            ->  expressed by the grid: the
+    K axis is the innermost grid dimension, so Mosaic pipelines the next
+    (x, w) tiles into VMEM while the current block multiplies.
+  * Epilogue fusion (bias+act) happens on the last K step while the
+    accumulator tile is still resident in VMEM.
+
+The accumulator is the output tile itself: its BlockSpec index map is
+invariant along the K grid axis, so Pallas keeps the tile resident in VMEM
+across all K steps and writes it back to HBM exactly once.
+
+VMEM budget per grid step with the default 128-blocks (f32):
+  x tile 128x128 (64 KiB) + w tile 128x128 (64 KiB) + out/acc tile 128x128
+  (64 KiB) + bias slice (0.5 KiB) ~= 192 KiB, far under the ~16 MiB/core
+  budget; even 512-wide N blocks stay < 2 MiB.
+
+Lowered with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); numerics are validated against ``ref.fused_dense_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Activation = Literal["relu", "gelu", "tanh", "none"]
+
+
+def apply_activation(x: jax.Array, activation: Activation) -> jax.Array:
+    """Epilogue nonlinearity; shared with the reference oracle."""
+    if activation == "relu":
+        return jnp.maximum(x, 0.0)
+    if activation == "gelu":
+        # tanh-approximated GELU: cheap on the VPU, matches ref oracle.
+        c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+        return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+    if activation == "tanh":
+        return jnp.tanh(x)
+    if activation == "none":
+        return x
+    raise ValueError(f"unknown activation: {activation!r}")
+
+
+def _fused_dense_kernel(x_ref, w_ref, b_ref, o_ref, *,
+                        k_steps: int, activation: Activation):
+    """One (m, n, k) grid step: o += x_tile @ w_tile, epilogue on last k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero_acc():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-shaped block matmul; accumulate in f32.
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        out = o_ref[...] + b_ref[...].astype(o_ref.dtype)
+        o_ref[...] = apply_activation(out, activation)
+
+
+def pick_block(dim: int, preferred: int) -> int:
+    """Largest block <= preferred that divides dim (dims here are powers of
+    two or small multiples, so this terminates at 1 in the worst case)."""
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "block_m", "block_n", "block_k")
+)
+def fused_dense(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    activation: Activation = "relu",
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Compute ``activation(x @ w + b)`` with a tiled Pallas kernel.
+
+    Args:
+      x: ``(M, K)`` input batch.
+      w: ``(K, N)`` weight matrix.
+      b: ``(N,)`` bias.
+      activation: epilogue nonlinearity fused into the last K step.
+      block_m/block_n/block_k: VMEM tile shape; defaults match the MXU.
+
+    Returns:
+      ``(M, N)`` activations with ``x``'s dtype.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: x{x.shape} @ w{w.shape}")
+    if b.shape != (n,):
+        raise ValueError(f"bias shape {b.shape} != ({n},)")
+
+    bm = pick_block(m, block_m)
+    bn = pick_block(n, block_n)
+    bk = pick_block(k, block_k)
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+
+    kernel = functools.partial(
+        _fused_dense_kernel, k_steps=k_steps, activation=activation
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,53 @@
+"""Pure jax.numpy oracles for the Pallas kernels.
+
+These are the correctness ground truth: small, obviously-correct
+implementations with no tiling, no grids, no control flow. ``python/tests``
+sweeps shapes/dtypes with hypothesis and asserts allclose between each
+kernel and its oracle here.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.fused_mlp import Activation, apply_activation
+
+
+def fused_dense_ref(
+    x: jax.Array, w: jax.Array, b: jax.Array, *, activation: Activation = "relu"
+) -> jax.Array:
+    """Oracle for :func:`fused_mlp.fused_dense`."""
+    out = (
+        jnp.dot(
+            x.astype(jnp.float32),
+            w.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        + b.astype(jnp.float32)
+    )
+    return apply_activation(out, activation).astype(x.dtype)
+
+
+def contact_map_ref(
+    coords: jax.Array, *, cutoff: float = 8.0, soft: bool = True
+) -> jax.Array:
+    """Oracle for :func:`distance.contact_map` (materializes (N, N, 3))."""
+    c = coords.astype(jnp.float32)
+    diff = c[:, None, :] - c[None, :, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    if soft:
+        return jax.nn.sigmoid((cutoff * cutoff - d2) / (cutoff * cutoff))
+    return (d2 < cutoff * cutoff).astype(jnp.float32)
+
+
+def mof_score_ref(
+    features: jax.Array, weights: jax.Array, *, penalty: float = 0.1
+) -> jax.Array:
+    """Oracle for :func:`score.mof_score`."""
+    f = features.astype(jnp.float32)
+    w = weights.astype(jnp.float32)
+    d = f.shape[-1]
+    affinity = jnp.tanh(f @ w / jnp.sqrt(jnp.float32(d)))
+    strain = jnp.sum(f * f, axis=-1) / jnp.float32(d)
+    return affinity - penalty * strain

@@ -1,0 +1,237 @@
+"""Layer-2 JAX compute graphs for the three applications.
+
+Everything here is build-time: `aot.py` lowers these jitted functions to
+HLO text which the Rust runtime loads and executes via PJRT. The compute
+hot spots call the Layer-1 Pallas kernels (``compile.kernels``); the
+backward pass is a hand-written custom VJP whose matmuls also run through
+the Pallas kernel (flash-attention style: kernel fwd + kernel bwd with
+rematerialized pre-activations), so both training and inference exercise L1.
+
+Model: the DeepDriveMD convolutional-variational-autoencoder stand-in -- a
+4-layer dense autoencoder over flattened contact maps:
+
+    encode:  x (B, D) --relu--> h (B, H) --none--> z (B, L)
+    decode:  z (B, L) --relu--> h (B, H) --none--> x' (B, D)
+
+with D = N*N contact-map pixels (N residues). ``featurize`` turns raw MD
+coordinates into contact-map features with the L1 distance kernel, and
+``mof_score`` scores MOF candidates with the L1 scorer.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import fused_dense, contact_map, mof_score
+from compile.kernels.fused_mlp import Activation, apply_activation
+
+# Default model geometry (kept modest so CPU-PJRT latencies are sub-second;
+# DESIGN.md records the real-TPU projection for the paper-scale model).
+N_RESIDUES = 32
+FEATURE_DIM = N_RESIDUES * N_RESIDUES  # 1024
+HIDDEN_DIM = 256
+LATENT_DIM = 32
+
+Params = Dict[str, jax.Array]
+
+
+# --------------------------------------------------------------------------
+# Differentiable fused dense: Pallas forward, Pallas backward.
+# --------------------------------------------------------------------------
+
+def _matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain matmul through the L1 kernel (zero bias, identity epilogue)."""
+    zero_bias = jnp.zeros((b.shape[1],), dtype=a.dtype)
+    return fused_dense(a, b, zero_bias, activation="none")
+
+
+def _act_grad(pre: jax.Array, activation: Activation) -> jax.Array:
+    """d activation(pre) / d pre, elementwise."""
+    if activation == "relu":
+        return (pre > 0).astype(pre.dtype)
+    if activation == "tanh":
+        t = jnp.tanh(pre)
+        return 1.0 - t * t
+    if activation == "gelu":
+        # Derivative of the tanh-approximated GELU used by the kernel.
+        c = jnp.sqrt(2.0 / jnp.pi).astype(pre.dtype)
+        inner = c * (pre + 0.044715 * pre**3)
+        t = jnp.tanh(inner)
+        dinner = c * (1.0 + 3 * 0.044715 * pre * pre)
+        return 0.5 * (1.0 + t) + 0.5 * pre * (1.0 - t * t) * dinner
+    if activation == "none":
+        return jnp.ones_like(pre)
+    raise ValueError(f"unknown activation: {activation!r}")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x: jax.Array, w: jax.Array, b: jax.Array,
+          activation: Activation = "relu") -> jax.Array:
+    """Differentiable ``activation(x @ w + b)`` backed by the Pallas kernel."""
+    return fused_dense(x, w, b, activation=activation)
+
+
+def _dense_fwd(x, w, b, activation):
+    y = fused_dense(x, w, b, activation=activation)
+    # Rematerialize pre-activations in bwd instead of saving them: trades
+    # one extra kernel launch for (B, N) less residual memory.
+    return y, (x, w, b)
+
+
+def _dense_bwd(activation, res, g):
+    x, w, b = res
+    pre = fused_dense(x, w, b, activation="none")
+    gpre = g * _act_grad(pre, activation)
+    dx = _matmul(gpre, w.T)
+    dw = _matmul(x.T, gpre)
+    db = jnp.sum(gpre, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+# --------------------------------------------------------------------------
+# Autoencoder
+# --------------------------------------------------------------------------
+
+def init_params(
+    seed: int = 0,
+    feature_dim: int = FEATURE_DIM,
+    hidden_dim: int = HIDDEN_DIM,
+    latent_dim: int = LATENT_DIM,
+) -> Params:
+    """He-initialized parameters for the 4-layer autoencoder."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+
+    def he(key, fan_in, shape):
+        return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(
+            2.0 / fan_in
+        )
+
+    return {
+        "w1": he(keys[0], feature_dim, (feature_dim, hidden_dim)),
+        "b1": jnp.zeros((hidden_dim,), jnp.float32),
+        "w2": he(keys[1], hidden_dim, (hidden_dim, latent_dim)),
+        "b2": jnp.zeros((latent_dim,), jnp.float32),
+        "w3": he(keys[2], latent_dim, (latent_dim, hidden_dim)),
+        "b3": jnp.zeros((hidden_dim,), jnp.float32),
+        "w4": he(keys[3], hidden_dim, (hidden_dim, feature_dim)),
+        "b4": jnp.zeros((feature_dim,), jnp.float32),
+    }
+
+
+def encode(params: Params, x: jax.Array) -> jax.Array:
+    """Contact-map batch (B, D) -> latent (B, L). The Fig 9 hot path."""
+    h = dense(x, params["w1"], params["b1"], "relu")
+    return dense(h, params["w2"], params["b2"], "none")
+
+
+def decode(params: Params, z: jax.Array) -> jax.Array:
+    """Latent (B, L) -> reconstructed contact map (B, D)."""
+    h = dense(z, params["w3"], params["b3"], "relu")
+    return dense(h, params["w4"], params["b4"], "none")
+
+
+def autoencoder_fwd(params: Params, x: jax.Array) -> jax.Array:
+    return decode(params, encode(params, x))
+
+
+def loss_fn(params: Params, x: jax.Array) -> jax.Array:
+    """Mean-squared reconstruction error."""
+    recon = autoencoder_fwd(params, x)
+    return jnp.mean((recon - x) ** 2)
+
+
+def train_step(params: Params, x: jax.Array, lr: jax.Array):
+    """One SGD step; returns (new_params, loss). Exercises the kernel bwd."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, x)
+    new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return new_params, loss
+
+
+# --------------------------------------------------------------------------
+# Featurization + MOF scoring entry points
+# --------------------------------------------------------------------------
+
+def featurize(coords: jax.Array, cutoff: float = 8.0) -> jax.Array:
+    """MD frames (B, N, 3) -> flattened contact-map features (B, N*N)."""
+    maps = jax.vmap(lambda c: contact_map(c, cutoff=cutoff, soft=True))(coords)
+    b, n, _ = coords.shape
+    return maps.reshape(b, n * n)
+
+
+def score_candidates(features: jax.Array, weights: jax.Array,
+                     penalty: float = 0.1) -> jax.Array:
+    """MOF candidates (C, D) + direction (D,) -> scores (C,)."""
+    return mof_score(features, weights, penalty=penalty)
+
+
+# --------------------------------------------------------------------------
+# Flat-argument wrappers for AOT export (PJRT executables take positional
+# buffers, so the params pytree is flattened in a canonical key order).
+# --------------------------------------------------------------------------
+
+PARAM_KEYS = ("w1", "b1", "w2", "b2", "w3", "b3", "w4", "b4")
+
+
+def params_to_flat(params: Params):
+    return tuple(params[k] for k in PARAM_KEYS)
+
+
+def flat_to_params(flat) -> Params:
+    return dict(zip(PARAM_KEYS, flat))
+
+
+ENCODER_KEYS = ("w1", "b1", "w2", "b2")
+
+
+def encode_flat(w1, b1, w2, b2, x):
+    """Encoder-only signature: the inference hot path ships just the
+    encoder weights (jax.jit would DCE unused decoder args anyway, which
+    changes the compiled signature -- so we make the contract explicit)."""
+    params = {"w1": w1, "b1": b1, "w2": w2, "b2": b2}
+    h = dense(x, params["w1"], params["b1"], "relu")
+    return (dense(h, params["w2"], params["b2"], "none"),)
+
+
+def autoencoder_flat(*args):
+    """args = (*params, x) -> (recon,)"""
+    params = flat_to_params(args[:8])
+    return (autoencoder_fwd(params, args[8]),)
+
+
+def train_step_flat(*args):
+    """args = (*params, x, lr) -> (*new_params, loss)"""
+    params = flat_to_params(args[:8])
+    new_params, loss = train_step(params, args[8], args[9])
+    return params_to_flat(new_params) + (loss,)
+
+
+def featurize_flat(coords):
+    """coords (B, N, 3) -> (features (B, N*N),)"""
+    return (featurize(coords),)
+
+
+def mof_score_flat(features, weights):
+    """(C, D), (D,) -> (scores (C,),)"""
+    return (score_candidates(features, weights),)
+
+
+def param_shapes(feature_dim=FEATURE_DIM, hidden_dim=HIDDEN_DIM,
+                 latent_dim=LATENT_DIM) -> Dict[str, Any]:
+    """Shape table used by aot.py's manifest."""
+    return {
+        "w1": (feature_dim, hidden_dim),
+        "b1": (hidden_dim,),
+        "w2": (hidden_dim, latent_dim),
+        "b2": (latent_dim,),
+        "w3": (latent_dim, hidden_dim),
+        "b3": (hidden_dim,),
+        "w4": (hidden_dim, feature_dim),
+        "b4": (feature_dim,),
+    }

@@ -1,0 +1,129 @@
+"""AOT export: manifest integrity + HLO text loadability."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+PY_DIR = os.path.join(REPO, "python")
+
+
+@pytest.fixture(scope="module")
+def export_dir(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    subprocess.run(
+        [
+            sys.executable, "-m", "compile.aot",
+            "--out-dir", str(out),
+            "--feature-dim", "64", "--hidden-dim", "32", "--latent-dim", "8",
+            "--encode-batches", "1", "4",
+            "--train-batch", "4",
+            "--featurize-batches", "1",
+            "--mof-candidates", "32", "--mof-dim", "16",
+        ],
+        cwd=PY_DIR,
+        check=True,
+        capture_output=True,
+    )
+    return str(out)
+
+
+def _parse_manifest(path):
+    models, params, geometry = {}, {}, {}
+    cur = None
+    with open(path) as f:
+        for line in f:
+            parts = line.split()
+            if not parts or parts[0].startswith("#"):
+                continue
+            if parts[0] == "geometry":
+                geometry[parts[1]] = int(parts[2])
+            elif parts[0] == "model":
+                cur = {"hlo": parts[2], "inputs": [], "outputs": []}
+                models[parts[1]] = cur
+            elif parts[0] in ("input", "output"):
+                cur[parts[0] + "s"].append((parts[1], parts[2], parts[3]))
+            elif parts[0] == "end":
+                cur = None
+            elif parts[0] == "param":
+                params[parts[1]] = (parts[2], parts[3], int(parts[4]), int(parts[5]))
+    return geometry, models, params
+
+
+def test_manifest_lists_all_models(export_dir):
+    geometry, models, params = _parse_manifest(
+        os.path.join(export_dir, "manifest.txt")
+    )
+    assert set(models) == {
+        "encode_b1", "encode_b4", "autoencoder_b4", "train_step_b4",
+        "featurize_b1", "mof_score_c32",
+    }
+    assert geometry["feature_dim"] == 64
+    assert set(params) == {f"w{i}" for i in range(1, 5)} | {
+        f"b{i}" for i in range(1, 5)
+    }
+
+
+def test_hlo_files_exist_and_are_text(export_dir):
+    _, models, _ = _parse_manifest(os.path.join(export_dir, "manifest.txt"))
+    for name, m in models.items():
+        path = os.path.join(export_dir, m["hlo"])
+        assert os.path.exists(path), name
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{name}: not HLO text"
+
+
+def test_manifest_shapes(export_dir):
+    _, models, _ = _parse_manifest(os.path.join(export_dir, "manifest.txt"))
+    enc = models["encode_b4"]
+    assert enc["inputs"][0] == ("w1", "float32", "64x32")
+    assert enc["inputs"][-1] == ("x", "float32", "4x64")
+    assert enc["outputs"] == [("z", "float32", "4x8")]
+    ts = models["train_step_b4"]
+    assert ts["inputs"][-1] == ("lr", "float32", "scalar")
+    assert ts["outputs"][-1] == ("loss", "float32", "scalar")
+
+
+def test_params_bin_matches_index(export_dir):
+    _, _, params = _parse_manifest(os.path.join(export_dir, "manifest.txt"))
+    size = os.path.getsize(os.path.join(export_dir, "params.bin"))
+    end = max(off + n for (_, _, off, n) in params.values())
+    assert end == size
+    # w1 is 64x32 f32
+    dtype, shape, off, nbytes = params["w1"]
+    assert (dtype, shape) == ("float32", "64x32")
+    assert nbytes == 64 * 32 * 4
+    data = np.fromfile(
+        os.path.join(export_dir, "params.bin"), dtype="<f4",
+        count=nbytes // 4, offset=off,
+    )
+    assert np.abs(data).sum() > 0  # He init, not zeros
+
+
+def test_params_bin_values_match_model(export_dir):
+    from compile import model
+
+    _, _, params = _parse_manifest(os.path.join(export_dir, "manifest.txt"))
+    want = model.init_params(seed=0, feature_dim=64, hidden_dim=32, latent_dim=8)
+    path = os.path.join(export_dir, "params.bin")
+    for key in model.PARAM_KEYS:
+        dtype, shape, off, nbytes = params[key]
+        got = np.fromfile(path, dtype="<f4", count=nbytes // 4, offset=off)
+        np.testing.assert_allclose(
+            got, np.asarray(want[key]).reshape(-1), rtol=1e-6, err_msg=key
+        )
+
+
+def test_repo_artifacts_fresh_if_present():
+    """If the repo-level artifacts/ exists, it must parse and be complete."""
+    adir = os.path.join(REPO, "artifacts")
+    manifest = os.path.join(adir, "manifest.txt")
+    if not os.path.exists(manifest):
+        pytest.skip("repo artifacts not built")
+    _, models, params = _parse_manifest(manifest)
+    for m in models.values():
+        assert os.path.exists(os.path.join(adir, m["hlo"]))
+    assert os.path.exists(os.path.join(adir, "params.bin"))

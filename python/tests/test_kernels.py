@@ -1,0 +1,161 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_dense, contact_map, mof_score
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+ACTIVATIONS = ["relu", "gelu", "tanh", "none"]
+
+
+def _rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(
+        dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused_dense
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    act=st.sampled_from(ACTIVATIONS),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_dense_matches_ref_f32(m, k, n, act, seed):
+    x = _rand(seed, (m, k), jnp.float32)
+    w = _rand(seed + 1, (k, n), jnp.float32)
+    b = _rand(seed + 2, (n,), jnp.float32)
+    got = fused_dense(x, w, b, activation=act)
+    want = ref.fused_dense_ref(x, w, b, activation=act)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([8, 32, 64]),
+    k=st.sampled_from([16, 64]),
+    n=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_dense_matches_ref_bf16(m, k, n, seed):
+    x = _rand(seed, (m, k), jnp.bfloat16)
+    w = _rand(seed + 1, (k, n), jnp.bfloat16)
+    b = _rand(seed + 2, (n,), jnp.bfloat16)
+    got = fused_dense(x, w, b, activation="relu").astype(jnp.float32)
+    want = ref.fused_dense_ref(x, w, b, activation="relu").astype(jnp.float32)
+    # bf16 storage, f32 accumulation in both paths.
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("block", [(8, 8, 8), (32, 16, 64), (128, 128, 128)])
+def test_fused_dense_block_shape_invariance(block):
+    """Output must not depend on the chosen tiling."""
+    bm, bn, bk = block
+    x = _rand(7, (64, 96), jnp.float32)
+    w = _rand(8, (96, 48), jnp.float32)
+    b = _rand(9, (48,), jnp.float32)
+    got = fused_dense(x, w, b, block_m=bm, block_n=bn, block_k=bk)
+    want = ref.fused_dense_ref(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_fused_dense_shape_errors():
+    x = jnp.zeros((4, 8))
+    w = jnp.zeros((9, 2))
+    b = jnp.zeros((2,))
+    with pytest.raises(ValueError, match="contraction mismatch"):
+        fused_dense(x, w, b)
+    with pytest.raises(ValueError, match="bias shape"):
+        fused_dense(jnp.zeros((4, 9)), w, jnp.zeros((3,)))
+
+
+def test_fused_dense_bad_activation():
+    with pytest.raises(ValueError, match="unknown activation"):
+        fused_dense(jnp.zeros((2, 2)), jnp.zeros((2, 2)), jnp.zeros((2,)),
+                    activation="swish")
+
+
+# ---------------------------------------------------------------------------
+# contact_map
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 80),
+    cutoff=st.floats(0.5, 16.0),
+    soft=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_contact_map_matches_ref(n, cutoff, soft, seed):
+    coords = _rand(seed, (n, 3), jnp.float32, scale=5.0)
+    got = contact_map(coords, cutoff=cutoff, soft=soft)
+    want = ref.contact_map_ref(coords, cutoff=cutoff, soft=soft)
+    if soft:
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    else:
+        # Hard threshold: tolerate disagreement only where d^2 is within fp
+        # noise of the cutoff shell.
+        c = np.asarray(coords)
+        d2 = ((c[:, None, :] - c[None, :, :]) ** 2).sum(-1)
+        boundary = np.abs(d2 - cutoff * cutoff) < 1e-3
+        np.testing.assert_array_equal(
+            np.asarray(got)[~boundary], np.asarray(want)[~boundary]
+        )
+
+
+def test_contact_map_diagonal_is_self_contact():
+    coords = _rand(3, (32, 3), jnp.float32, scale=10.0)
+    m = contact_map(coords, cutoff=1.0, soft=False)
+    np.testing.assert_array_equal(np.diag(np.asarray(m)), np.ones(32))
+
+
+def test_contact_map_symmetry():
+    coords = _rand(4, (48, 3), jnp.float32, scale=5.0)
+    m = np.asarray(contact_map(coords, cutoff=4.0, soft=True))
+    np.testing.assert_allclose(m, m.T, rtol=1e-5, atol=1e-6)
+
+
+def test_contact_map_rejects_non3d():
+    with pytest.raises(ValueError, match=r"\(N, 3\)"):
+        contact_map(jnp.zeros((8, 2)))
+
+
+# ---------------------------------------------------------------------------
+# mof_score
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    c=st.integers(1, 300),
+    d=st.integers(1, 128),
+    penalty=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_mof_score_matches_ref(c, d, penalty, seed):
+    f = _rand(seed, (c, d), jnp.float32)
+    w = _rand(seed + 1, (d,), jnp.float32)
+    got = mof_score(f, w, penalty=penalty)
+    want = ref.mof_score_ref(f, w, penalty=penalty)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_mof_score_zero_features_scores_zero():
+    f = jnp.zeros((16, 32))
+    w = jnp.ones((32,))
+    np.testing.assert_allclose(mof_score(f, w), np.zeros(16), atol=1e-7)
+
+
+def test_mof_score_weight_shape_error():
+    with pytest.raises(ValueError, match="weights shape"):
+        mof_score(jnp.zeros((4, 8)), jnp.zeros((9,)))

@@ -1,0 +1,151 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **Future rendezvous mechanism** — server-side parking (`WaitGet`,
+//!    what ProxyFutures uses on redis-sim) vs client-side polling (the
+//!    generic connector fallback): set→resolve latency.
+//! 2. **Connector choice** — memory vs TCP-KV vs file for a 1 MB proxy
+//!    round-trip (the paper: "the exact threshold depends on the
+//!    connector").
+//! 3. **StoreExecutor auto-proxy threshold** — end-to-end task latency
+//!    across payload sizes for thresholds {64 B, 1 kB, 64 kB, ∞}.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use proxystore::benchlib::{fmt_bytes, fmt_secs, sample, Bench, Scale};
+use proxystore::codec::{Bytes, Encode};
+use proxystore::engine::{ClusterConfig, LocalCluster, StoreExecutor};
+use proxystore::engine::TaskArg;
+use proxystore::futures::ProxyFuture;
+use proxystore::kv::KvServer;
+use proxystore::metrics::Stats;
+use proxystore::prelude::Store;
+use proxystore::store::{Connector, FileConnector, TcpKvConnector};
+
+fn main() {
+    let scale = Scale::from_env();
+    let samples = scale.pick(5, 15, 40);
+    let mut bench = Bench::new("ablation", "experiment,variant,mean_s,p95_s");
+
+    // ------------------------------------------------------------------
+    // 1) Future rendezvous: parked WaitGet vs polling.
+    // ------------------------------------------------------------------
+    let server = KvServer::spawn().unwrap();
+    let parked_store = Store::new(
+        "park",
+        Arc::new(TcpKvConnector::connect(server.addr).unwrap()),
+    );
+    // Polling variant: file connector's default wait_get (poll+backoff).
+    let dir = std::env::temp_dir().join(format!("pxs-abl-{}", std::process::id()));
+    let polling_store = Store::new(
+        "poll",
+        Arc::new(FileConnector::new(dir.clone()).unwrap()),
+    );
+
+    for (label, store) in [("waitget-parked", &parked_store), ("polling", &polling_store)] {
+        let xs = sample(3, samples, || {
+            let fut: ProxyFuture<u64> = store.future();
+            let p = fut.proxy();
+            let setter = {
+                let fut = fut.clone();
+                std::thread::spawn(move || {
+                    std::thread::sleep(Duration::from_millis(5));
+                    fut.set_result(&7).unwrap();
+                })
+            };
+            let v = *p.resolve().unwrap();
+            setter.join().unwrap();
+            store.evict(fut.key()).unwrap();
+            assert_eq!(v, 7);
+        });
+        let s = Stats::from(&xs);
+        bench.row(format!("future-rendezvous,{label},{:.6},{:.6}", s.mean, s.p95));
+    }
+    bench.note("both include the producer's fixed 5ms delay");
+
+    // ------------------------------------------------------------------
+    // 2) Connector choice for a 1MB proxy round-trip.
+    // ------------------------------------------------------------------
+    let mem_store = Store::memory("abl-mem");
+    let tcp_store = Store::new(
+        "abl-tcp",
+        Arc::new(TcpKvConnector::connect(server.addr).unwrap()),
+    );
+    let file_store = Store::new(
+        "abl-file",
+        Arc::new(FileConnector::new(dir.join("conn")).unwrap()),
+    );
+    let payload = Bytes(vec![7u8; 1_000_000]);
+    for (label, store) in [
+        ("memory", &mem_store),
+        ("tcp-kv", &tcp_store),
+        ("file", &file_store),
+    ] {
+        let xs = sample(3, samples, || {
+            let p = store.proxy(&payload).unwrap();
+            let fresh: proxystore::proxy::Proxy<Bytes> =
+                proxystore::proxy::Proxy::from_factory(p.factory().clone());
+            let v = fresh.into_inner().unwrap();
+            store.evict(p.key()).unwrap();
+            assert_eq!(v.0.len(), 1_000_000);
+        });
+        let s = Stats::from(&xs);
+        bench.row(format!("connector-1MB,{label},{:.6},{:.6}", s.mean, s.p95));
+        println!(
+            "  connector {label}: mean {} p95 {}",
+            fmt_secs(s.mean),
+            fmt_secs(s.p95)
+        );
+    }
+
+    // ------------------------------------------------------------------
+    // 3) StoreExecutor auto-proxy threshold sweep.
+    // ------------------------------------------------------------------
+    let sizes = [256usize, 4_096, 65_536, 1_048_576];
+    for &threshold in &[64usize, 1_024, 65_536, usize::MAX] {
+        let cluster = Arc::new(LocalCluster::new(ClusterConfig {
+            workers: 2,
+            ..Default::default()
+        }));
+        let executor = StoreExecutor::new(cluster, Store::memory("abl-exec"))
+            .with_policy(proxystore::engine::executor_policy(threshold));
+        for &size in &sizes {
+            let data = Bytes(vec![1u8; size]);
+            let xs = sample(2, samples, || {
+                let arg = executor.make_arg(&data).unwrap();
+                let fut = executor.submit::<u64>(
+                    vec![arg],
+                    Box::new(|_, args| {
+                        let b: Bytes = args[0].get()?;
+                        Ok((b.0.len() as u64).to_bytes())
+                    }),
+                );
+                assert_eq!(fut.result().unwrap() as usize, size);
+            });
+            let s = Stats::from(&xs);
+            let tlabel = if threshold == usize::MAX {
+                "inf".to_string()
+            } else {
+                fmt_bytes(threshold)
+            };
+            bench.row(format!(
+                "exec-threshold-{},{}, {:.6},{:.6}",
+                tlabel,
+                fmt_bytes(size),
+                s.mean,
+                s.p95
+            ));
+        }
+    }
+    // Sanity: with threshold=inf everything inlines.
+    {
+        let cluster = Arc::new(LocalCluster::new(ClusterConfig::default()));
+        let ex = StoreExecutor::new(cluster, Store::memory("abl-chk"))
+            .with_policy(proxystore::engine::executor_policy(usize::MAX));
+        let arg = ex.make_arg(&Bytes(vec![0; 100_000])).unwrap();
+        assert!(matches!(arg, TaskArg::Value(_)));
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+    bench.finish();
+}

@@ -1,0 +1,70 @@
+//! Fig 10 (paper §VI): active proxies during the MOF Generation
+//! application, default proxy management vs the ownership model.
+//!
+//! Expected shape: default accumulates proxied objects monotonically (the
+//! campaign never frees them); ownership evicts as owners/borrows drop,
+//! staying near the thinker's working-set size. The physics surrogate is
+//! the real `mof_score_c256` PJRT artifact.
+
+use std::sync::Arc;
+
+use proxystore::apps::mof::{run, MemoryMode, MofConfig};
+use proxystore::benchlib::{Bench, Scale};
+use proxystore::runtime::{default_artifacts_dir, ModelRegistry};
+
+fn main() {
+    let scale = Scale::from_env();
+    let reg: Arc<ModelRegistry> =
+        ModelRegistry::load(default_artifacts_dir()).expect(
+            "artifacts missing — run `make artifacts` before `cargo bench`",
+        );
+    let cfg = MofConfig {
+        rounds: scale.pick(3, 6, 12),
+        generators: scale.pick(2, 3, 4),
+        top_k: scale.pick(2, 8, 16),
+        ..Default::default()
+    };
+
+    let mut bench =
+        Bench::new("fig10_mof", "mode,t_s,active_proxies,store_bytes");
+    bench.note(&format!("{cfg:?}"));
+
+    let mut reports = Vec::new();
+    for mode in [MemoryMode::Default, MemoryMode::Ownership] {
+        let r = run(&cfg, &reg, mode).expect("fig10 run");
+        for row in r.series.csv_rows() {
+            bench.row(format!("{},{row}", mode.label()));
+        }
+        println!(
+            "  [{}] best={:.4} peak_active={} final_active={}",
+            mode.label(),
+            r.best_score,
+            r.series.peak_active(),
+            r.series.final_active()
+        );
+        reports.push((mode, r));
+    }
+
+    let default = &reports[0].1;
+    let owned = &reports[1].1;
+    bench.compare(
+        "default management accumulates proxies",
+        "count grows for the whole run",
+        &format!("final = {}", default.series.final_active()),
+        default.series.final_active() >= default.series.peak_active() / 2
+            && default.series.final_active() > 0,
+    );
+    bench.compare(
+        "ownership evicts as lifetimes end",
+        "returns to ~0 at campaign end",
+        &format!("final = {}", owned.series.final_active()),
+        owned.series.final_active() <= 2,
+    );
+    bench.compare(
+        "identical steering decisions",
+        "same best candidate",
+        &format!("{:.4} vs {:.4}", default.best_score, owned.best_score),
+        (default.best_score - owned.best_score).abs() < 1e-5,
+    );
+    bench.finish();
+}

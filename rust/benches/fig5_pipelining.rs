@@ -1,0 +1,100 @@
+//! Fig 5 (paper §V-A): task pipelining with ProxyFutures.
+//!
+//! Regenerates both panels: (a) task-lifecycle Gantt charts for no-proxy /
+//! proxy / ProxyFuture at f=0.2 and f=0.5; (b) makespan vs overhead
+//! fraction f for the three deployments plus the theoretical pipeline
+//! limit. Expected shape (paper): Proxy under No-Proxy (~12%); ProxyFuture
+//! tracks the theoretical limit (−19.6% at f=0.2), diverging slightly at
+//! high f.
+
+use std::time::Duration;
+
+use proxystore::benchlib::{Bench, Scale};
+use proxystore::engine::ClusterConfig;
+use proxystore::prelude::Store;
+use proxystore::workflow::{cluster_for, synthetic_chain, DataMode};
+
+fn main() {
+    let scale = Scale::from_env();
+    let n = 8;
+    let task_ms = scale.pick(100u64, 300, 1000);
+    let d = scale.pick(1_000_000usize, 10_000_000, 10_000_000);
+    let s = Duration::from_millis(task_ms);
+    let fs: Vec<f64> = match scale {
+        Scale::Smoke => vec![0.2, 0.5],
+        _ => (0..=9).map(|i| i as f64 / 10.0).collect(),
+    };
+
+    let mut bench = Bench::new("fig5_pipelining", "f,mode,makespan_s,ideal_s");
+    bench.note(&format!("n={n} tasks, s={task_ms}ms, d={d}B"));
+
+    let run = |mode: DataMode, f: f64| {
+        let chain = synthetic_chain(n, s, f, d);
+        let cluster = cluster_for(
+            n,
+            ClusterConfig {
+                submit_overhead: Duration::from_millis(5),
+                ..Default::default()
+            },
+        );
+        let store = Store::memory("fig5");
+        chain.run(&cluster, &store, mode).expect("fig5 run")
+    };
+
+    // Panel (a): Gantt charts at f=0.2 (all modes) and f=0.5 (ProxyFuture).
+    for (mode, f) in [
+        (DataMode::NoProxy, 0.2),
+        (DataMode::Proxy, 0.2),
+        (DataMode::ProxyFuture, 0.2),
+        (DataMode::ProxyFuture, 0.5),
+    ] {
+        let report = run(mode, f);
+        println!("\n--- schedule: {} f={f} ---", mode.label());
+        print!("{}", report.timeline.ascii_gantt(64));
+    }
+
+    // Panel (b): makespan vs f.
+    let mut no_proxy_at = Vec::new();
+    let mut pf_at = Vec::new();
+    for &f in &fs {
+        // Ideal pipelined makespan: s + (n-1)(1-f)s.
+        let ideal = s.as_secs_f64() * (1.0 + (n - 1) as f64 * (1.0 - f));
+        for mode in [DataMode::NoProxy, DataMode::Proxy, DataMode::ProxyFuture]
+        {
+            let report = run(mode, f);
+            bench.row(format!(
+                "{f:.1},{},{:.4},{ideal:.4}",
+                mode.label(),
+                report.makespan
+            ));
+            if mode == DataMode::NoProxy {
+                no_proxy_at.push(report.makespan);
+            }
+            if mode == DataMode::ProxyFuture {
+                pf_at.push((f, report.makespan, ideal));
+            }
+        }
+    }
+
+    // Shape checks vs the paper.
+    if let Some((f, got, ideal)) =
+        pf_at.iter().find(|(f, _, _)| (*f - 0.2).abs() < 1e-9)
+    {
+        let base =
+            no_proxy_at[fs.iter().position(|x| (x - f).abs() < 1e-9).unwrap()];
+        let reduction = 100.0 * (1.0 - got / base);
+        bench.compare(
+            "ProxyFuture makespan reduction at f=0.2",
+            "≈19.6% (ideal 20%)",
+            &format!("{reduction:.1}%"),
+            (10.0..35.0).contains(&reduction),
+        );
+        bench.compare(
+            "ProxyFuture vs theoretical limit at f=0.2",
+            "close to limit",
+            &format!("{got:.3}s vs {ideal:.3}s"),
+            *got < ideal * 1.25,
+        );
+    }
+    bench.finish();
+}

@@ -1,0 +1,69 @@
+//! Fig 8 (paper §VI): 1000 Genomes workflow stage timelines, Globus-
+//! Compute-native baseline vs ProxyFutures.
+//!
+//! Expected shape: ProxyFutures reduces makespan (paper: −36%) by
+//! overlapping stages 1–3; stages 4/5 gain less (no intra-stage deps).
+//! Outputs are checked against the single-process reference on every run.
+
+use std::time::Duration;
+
+use proxystore::apps::genomes::{run, run_reference, GenomesConfig};
+use proxystore::benchlib::{fmt_secs, Bench, Scale};
+use proxystore::workflow::DataMode;
+
+fn main() {
+    let scale = Scale::from_env();
+    let cfg = GenomesConfig {
+        individuals: scale.pick(24, 64, 128),
+        snps_per_chunk: scale.pick(500, 2000, 5000),
+        chunks: scale.pick(4, 8, 16),
+        groups: scale.pick(2, 4, 8),
+        task_overhead: Duration::from_millis(scale.pick(30, 60, 150)),
+        compute_floor: Duration::from_millis(scale.pick(20, 40, 100)),
+        seed: 1000,
+    };
+
+    let mut bench = Bench::new(
+        "fig8_genomes",
+        "mode,task,stage,start_s,end_s",
+    );
+    bench.note(&format!("{cfg:?}"));
+    let want = run_reference(&cfg);
+    bench.note(&format!(
+        "reference: {} overlapping variants",
+        want.len()
+    ));
+
+    let mut makespans = Vec::new();
+    for mode in [DataMode::NoProxy, DataMode::ProxyFuture] {
+        let (report, freq) = run(&cfg, mode).expect("fig8 run");
+        assert_eq!(freq, want, "pipeline output mismatch in {mode:?}");
+        for r in report.timeline.records() {
+            bench.row(format!(
+                "{},{},{},{:.4},{:.4}",
+                mode.label(),
+                r.task,
+                r.stage,
+                r.start,
+                r.end
+            ));
+        }
+        println!(
+            "  [{}] makespan = {}",
+            mode.label(),
+            fmt_secs(report.makespan)
+        );
+        makespans.push((mode, report.makespan));
+    }
+
+    let base = makespans[0].1;
+    let pf = makespans[1].1;
+    let reduction = 100.0 * (1.0 - pf / base);
+    bench.compare(
+        "ProxyFutures makespan reduction",
+        "36%",
+        &format!("{reduction:.1}%"),
+        reduction > 10.0,
+    );
+    bench.finish();
+}

@@ -1,0 +1,134 @@
+//! Micro-benchmarks for the proxy substrate (paper §III):
+//!
+//! * proxy-vs-direct pass cost across object sizes — the paper reports
+//!   proxies pay off above ~10 kB (connector- and engine-dependent);
+//! * raw component costs: proxy create, proxy resolve, factory encode,
+//!   KV server round-trip, future set/resolve.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use proxystore::benchlib::{fmt_bytes, fmt_secs, sample, Bench, Scale};
+use proxystore::codec::{Bytes, Decode, Encode};
+use proxystore::kv::KvServer;
+use proxystore::netsim::Link;
+use proxystore::prelude::{Proxy, Store};
+use proxystore::store::{TcpKvConnector, ThrottledConnector};
+
+fn main() {
+    let scale = Scale::from_env();
+    let samples = scale.pick(5, 20, 50);
+
+    let mut bench = Bench::new(
+        "micro_proxy",
+        "size_bytes,direct_s,proxy_s",
+    );
+
+    // Cost model (see DESIGN.md §5): a direct argument piggybacks on the
+    // task message — no extra round-trip latency, but its bytes cross the
+    // engine's two hops (client→scheduler→worker) at the client NIC rate
+    // and get (de)serialized at each side. A proxied argument adds two
+    // store round-trips (put at the producer, resolve at the consumer),
+    // each paying the store's request latency, but moves the bulk over
+    // the faster store fabric and skips the middle hop.
+    let engine_link = Link::new(Duration::ZERO, 1.0e9).uncontended();
+    let store = Store::new(
+        "micro",
+        ThrottledConnector::wrap(
+            proxystore::store::MemoryConnector::new(),
+            Duration::from_micros(25),
+            5.0e9,
+        ),
+    );
+
+    let sizes =
+        [1_000, 10_000, 30_000, 100_000, 300_000, 1_000_000, 10_000_000];
+    let mut crossover: Option<usize> = None;
+    for &size in &sizes {
+        let data = Bytes(vec![7u8; size]);
+
+        // Direct: encode → link ×2 → decode (pass-by-value via engine).
+        let direct = sample(2, samples, || {
+            let wire = data.to_bytes();
+            engine_link.transfer(wire.len());
+            engine_link.transfer(wire.len());
+            let back = Bytes::from_bytes(&wire).unwrap();
+            std::hint::black_box(back.0.len())
+        });
+
+        // Proxy: create (store put) → ship factory ×2 → resolve at worker.
+        let proxy = sample(2, samples, || {
+            let p: Proxy<Bytes> = store.proxy(&data).unwrap();
+            let wire = p.to_bytes();
+            engine_link.transfer(wire.len());
+            engine_link.transfer(wire.len());
+            let p2: Proxy<Bytes> = Proxy::from_bytes(&wire).unwrap();
+            let v = p2.into_inner().unwrap();
+            store.evict(p.key()).unwrap();
+            std::hint::black_box(v.0.len())
+        });
+
+        let (d, p) = (
+            direct.iter().sum::<f64>() / direct.len() as f64,
+            proxy.iter().sum::<f64>() / proxy.len() as f64,
+        );
+        bench.row(format!("{size},{d:.6},{p:.6}"));
+        if p < d && crossover.is_none() {
+            crossover = Some(size);
+        }
+    }
+    bench.compare(
+        "proxy pays off above",
+        "~10 kB (deployment-dependent)",
+        &crossover.map(fmt_bytes).unwrap_or_else(|| ">10MB".into()),
+        crossover.map(|c| (10_000..=1_000_000).contains(&c)).unwrap_or(false),
+    );
+
+    // Component micro-costs.
+    let small = Bytes(vec![1u8; 1000]);
+    let create = sample(10, samples, || {
+        let p = store.proxy(&small).unwrap();
+        store.evict(p.key()).unwrap();
+    });
+    let s = proxystore::metrics::Stats::from(&create);
+    println!("  proxy create+evict (1kB): mean {}", fmt_secs(s.mean));
+
+    let p: Proxy<Bytes> = store.proxy(&small).unwrap();
+    let resolve = sample(10, samples, || {
+        let fresh: Proxy<Bytes> = Proxy::from_bytes(&p.to_bytes()).unwrap();
+        std::hint::black_box(fresh.into_inner().unwrap().0.len())
+    });
+    let s = proxystore::metrics::Stats::from(&resolve);
+    println!("  proxy resolve (1kB):      mean {}", fmt_secs(s.mean));
+
+    let wire = sample(10, samples, || p.to_bytes().len());
+    let s = proxystore::metrics::Stats::from(&wire);
+    println!("  factory encode:           mean {}", fmt_secs(s.mean));
+
+    // KV server round-trip over TCP.
+    let server = KvServer::spawn().unwrap();
+    let kv_store = Store::new(
+        "micro-kv",
+        Arc::new(TcpKvConnector::connect(server.addr).unwrap()),
+    );
+    let rtt = sample(10, samples, || {
+        let key = kv_store.put(&small).unwrap();
+        let _: Option<Bytes> = kv_store.get(&key).unwrap();
+        kv_store.evict(&key).unwrap();
+    });
+    let s = proxystore::metrics::Stats::from(&rtt);
+    println!("  kv TCP put+get+del (1kB): mean {}", fmt_secs(s.mean));
+
+    // Future set → resolve latency.
+    let fut_lat = sample(5, samples, || {
+        let fut: proxystore::futures::ProxyFuture<u64> = store.future();
+        let proxy = fut.proxy();
+        fut.set_result(&1).unwrap();
+        std::hint::black_box(*proxy.resolve().unwrap());
+        store.evict(fut.key()).unwrap();
+    });
+    let s = proxystore::metrics::Stats::from(&fut_lat);
+    println!("  future set+resolve:       mean {}", fmt_secs(s.mean));
+
+    bench.finish();
+}

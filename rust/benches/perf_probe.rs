@@ -1,0 +1,140 @@
+//! §Perf probes: the L3 hot-path numbers recorded in EXPERIMENTS.md.
+//!
+//! * engine dispatch rate (no-op tasks through the scheduler queue);
+//! * bulk codec throughput: `Bytes` (memcpy) vs element-wise `Vec<u8>`;
+//! * proxy put+resolve overhead vs wire time at 10 MB;
+//! * stream event handling rate (dispatcher side, tiny events).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use proxystore::benchlib::{fmt_secs, once, Bench, Scale};
+use proxystore::broker::BrokerState;
+use proxystore::codec::{Bytes, Decode, Encode};
+use proxystore::engine::{ClusterConfig, LocalCluster};
+use proxystore::prelude::{Proxy, Store};
+use proxystore::store::ThrottledConnector;
+use proxystore::stream::{
+    EmbeddedLogPublisher, EmbeddedLogSubscriber, Metadata, StreamConsumer,
+    StreamProducer,
+};
+
+fn main() {
+    let scale = Scale::from_env();
+    let mut bench = Bench::new("perf_probe", "probe,metric,value");
+
+    // ------------------------------------------------------------------
+    // Engine dispatch rate.
+    // ------------------------------------------------------------------
+    let n_tasks = scale.pick(5_000usize, 50_000, 200_000);
+    let cluster = Arc::new(LocalCluster::new(ClusterConfig {
+        workers: 1,
+        ..Default::default()
+    }));
+    let (last, dt) = once(|| {
+        let mut last = None;
+        for _ in 0..n_tasks {
+            last = Some(cluster.submit(Box::new(|_, _| Ok(Vec::new())), vec![]));
+        }
+        last.unwrap().wait().unwrap();
+        while cluster.completed() < n_tasks as u64 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    });
+    let _ = last;
+    let rate = n_tasks as f64 / dt;
+    bench.row(format!("engine-dispatch,tasks_per_sec,{rate:.0}"));
+    println!("  engine dispatch: {rate:.0} tasks/s over {n_tasks} tasks");
+
+    // ------------------------------------------------------------------
+    // Codec: Bytes (memcpy) vs element-wise Vec<u8> for 10 MB.
+    // ------------------------------------------------------------------
+    let payload = vec![7u8; 10_000_000];
+    let reps = scale.pick(3, 10, 30);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(Bytes(payload.clone()).to_bytes());
+    }
+    let bulk = t0.elapsed().as_secs_f64() / reps as f64;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(payload.to_bytes()); // Vec<u8>: element-wise
+    }
+    let naive = t0.elapsed().as_secs_f64() / reps as f64;
+    bench.row(format!("codec-10MB,bytes_memcpy_s,{bulk:.6}"));
+    bench.row(format!("codec-10MB,vec_elementwise_s,{naive:.6}"));
+    println!(
+        "  codec 10MB encode: Bytes {} vs element-wise Vec<u8> {} ({:.1}x)",
+        fmt_secs(bulk),
+        fmt_secs(naive),
+        naive / bulk
+    );
+
+    // ------------------------------------------------------------------
+    // Proxy overhead vs wire time at 10 MB on a modelled 1 GB/s store.
+    // ------------------------------------------------------------------
+    let throttled = Store::new(
+        "probe-throttled",
+        ThrottledConnector::wrap(
+            proxystore::store::MemoryConnector::new(),
+            Duration::ZERO,
+            1.0e9,
+        ),
+    );
+    let raw = Store::memory("probe-raw");
+    let data = Bytes(payload);
+    let measure = |store: &Store| {
+        let t0 = Instant::now();
+        let p: Proxy<Bytes> = store.proxy(&data).unwrap();
+        let fresh: Proxy<Bytes> =
+            Proxy::from_factory(p.factory().clone());
+        std::hint::black_box(fresh.into_inner().unwrap().0.len());
+        store.evict(p.key()).unwrap();
+        t0.elapsed().as_secs_f64()
+    };
+    // warmup + best-of
+    let total: f64 = (0..5).map(|_| measure(&throttled)).fold(f64::MAX, f64::min);
+    let overhead: f64 = (0..5).map(|_| measure(&raw)).fold(f64::MAX, f64::min);
+    let wire = 2.0 * 10_000_000.0 / 1.0e9;
+    bench.row(format!("proxy-10MB,total_s,{total:.6}"));
+    bench.row(format!("proxy-10MB,overhead_s,{overhead:.6}"));
+    bench.row(format!("proxy-10MB,wire_s,{wire:.6}"));
+    println!(
+        "  proxy 10MB put+resolve: total {} (wire {}), overhead {} = {:.1}% of wire",
+        fmt_secs(total),
+        fmt_secs(wire),
+        fmt_secs(overhead),
+        100.0 * overhead / wire
+    );
+
+    // ------------------------------------------------------------------
+    // Stream event handling rate (dispatcher side, marker events).
+    // ------------------------------------------------------------------
+    let broker = BrokerState::new();
+    let n_events = scale.pick(2_000usize, 20_000, 50_000);
+    let mut producer: StreamProducer<EmbeddedLogPublisher> =
+        StreamProducer::new(EmbeddedLogPublisher::new(broker.clone()), None);
+    for i in 0..n_events {
+        let mut md = Metadata::new();
+        md.insert("step".into(), i.to_string());
+        producer.send_marker("t", md).unwrap();
+    }
+    producer.close_topic("t").unwrap();
+    let mut consumer =
+        StreamConsumer::new(EmbeddedLogSubscriber::new(broker, "t"));
+    let (count, dt) = once(|| {
+        let mut count = 0usize;
+        while let Some(_ev) =
+            consumer.next_event(Some(Duration::from_secs(5))).unwrap()
+        {
+            count += 1;
+        }
+        count
+    });
+    assert_eq!(count, n_events);
+    let ev_rate = count as f64 / dt;
+    bench.row(format!("stream-events,events_per_sec,{ev_rate:.0}"));
+    println!("  stream dispatcher: {ev_rate:.0} events/s");
+
+    bench.finish();
+}

@@ -1,0 +1,619 @@
+//! DeepDriveMD-style ML-guided molecular dynamics (paper Sec II & VI,
+//! Fig 9).
+//!
+//! The paper's deployment couples MD simulations with an ML model:
+//! simulation frames are featurized into contact maps, an autoencoder
+//! embeds them, and inference latency gates how fast new simulations can
+//! be steered. Two inference architectures are compared:
+//!
+//! * **baseline** — each inference batch is a fresh engine task: pay task
+//!   submission, *model load* (the paper measured 100 ms – 2 s library/
+//!   model import), and result transfer through the client, every time;
+//! * **ProxyStream** — one *persistent inference actor* consumes batch
+//!   proxies from a stream, keeps the model warm, publishes results
+//!   through ProxyFutures, and receives new model weights via a
+//!   ProxyFuture-announced update channel.
+//!
+//! The autoencoder is the real L2/L1 artifact: `encode_b{1,8,32}` compiled
+//! from JAX+Pallas and executed via PJRT ([`crate::runtime`]). Python is
+//! not involved at any point in this module.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::broker::BrokerState;
+use crate::codec::{Decode, Encode, F32s, Reader};
+use crate::engine::{ClusterConfig, LocalCluster};
+use crate::error::{Error, Result};
+use crate::futures::ProxyFuture;
+use crate::netsim::{profiles, spin_sleep};
+use crate::rng::Rng;
+use crate::runtime::ModelRegistry;
+use crate::store::Store;
+use crate::stream::{
+    EmbeddedLogPublisher, EmbeddedLogSubscriber, Metadata, StreamConsumer,
+    StreamProducer,
+};
+
+/// Workload knobs.
+#[derive(Debug, Clone)]
+pub struct DdmdConfig {
+    /// Inference rounds (one batch per round).
+    pub rounds: usize,
+    /// First batch size; grows linearly like the paper's accumulating
+    /// data pool.
+    pub initial_batch: usize,
+    /// Batch growth per round (capped at the largest compiled batch).
+    pub batch_growth: usize,
+    /// Baseline-only: per-task model load cost.
+    pub model_load: Duration,
+    /// Baseline-only: engine submission overhead per task.
+    pub submit_overhead: Duration,
+    /// Run the trainer thread (ProxyStream mode) and swap models.
+    pub train: bool,
+    pub seed: u64,
+}
+
+impl Default for DdmdConfig {
+    fn default() -> Self {
+        DdmdConfig {
+            rounds: 10,
+            initial_batch: 4,
+            batch_growth: 2,
+            model_load: Duration::from_millis(150),
+            submit_overhead: Duration::from_millis(5),
+            train: true,
+            seed: 42,
+        }
+    }
+}
+
+/// One inference round's measurement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundStat {
+    pub round: usize,
+    pub batch: usize,
+    /// Round-trip time: batch ready → latents received (seconds).
+    pub rtt: f64,
+}
+
+/// Result of a run.
+#[derive(Debug, Clone)]
+pub struct DdmdReport {
+    pub rounds: Vec<RoundStat>,
+    pub mean_rtt: f64,
+    /// Latent-vector checksum for cross-mode correctness comparison.
+    pub checksum: f64,
+    /// Model updates applied (ProxyStream mode).
+    pub model_updates: usize,
+}
+
+fn summarize(rounds: Vec<RoundStat>, checksum: f64, updates: usize) -> DdmdReport {
+    let mean_rtt = if rounds.is_empty() {
+        0.0
+    } else {
+        rounds.iter().map(|r| r.rtt).sum::<f64>() / rounds.len() as f64
+    };
+    DdmdReport { rounds, mean_rtt, checksum, model_updates: updates }
+}
+
+/// Generate one synthetic MD frame (a folded-ish random walk) and
+/// featurize it through the PJRT `featurize_b1` artifact.
+pub fn simulate_frame(
+    reg: &ModelRegistry,
+    rng: &mut Rng,
+) -> Result<Vec<f32>> {
+    let n = reg.geometry("n_residues").unwrap_or(32) as usize;
+    let mut coords = Vec::with_capacity(n * 3);
+    let (mut x, mut y, mut z) = (0.0f32, 0.0f32, 0.0f32);
+    for _ in 0..n {
+        x += rng.normal() as f32 * 2.0;
+        y += rng.normal() as f32 * 2.0;
+        z += rng.normal() as f32 * 2.0;
+        coords.extend_from_slice(&[x, y, z]);
+    }
+    let out = reg.execute_with_bank("featurize_b1", &[("coords", &coords)])?;
+    Ok(out.into_iter().next().expect("features"))
+}
+
+/// Pick the smallest compiled encode batch ≥ `b` and run inference,
+/// padding with zero rows and truncating the output back to `b` rows.
+pub fn encode_batch(
+    reg: &ModelRegistry,
+    params: Option<&EncoderParams>,
+    batch: &[Vec<f32>],
+) -> Result<Vec<Vec<f32>>> {
+    const COMPILED: [usize; 3] = [1, 8, 32];
+    let b = batch.len();
+    let d = reg.geometry("feature_dim").unwrap_or(1024) as usize;
+    let l = reg.geometry("latent_dim").unwrap_or(32) as usize;
+    let bucket = *COMPILED
+        .iter()
+        .find(|&&c| c >= b)
+        .ok_or_else(|| Error::Config(format!("batch {b} exceeds max 32")))?;
+    let mut x = vec![0.0f32; bucket * d];
+    for (i, row) in batch.iter().enumerate() {
+        if row.len() != d {
+            return Err(Error::Config(format!(
+                "feature row {i} has {} elems, want {d}",
+                row.len()
+            )));
+        }
+        x[i * d..(i + 1) * d].copy_from_slice(row);
+    }
+    let name = format!("encode_b{bucket}");
+    let out = match params {
+        Some(p) => reg.execute_f32(
+            &name,
+            &[&p.w1, &p.b1, &p.w2, &p.b2, &x],
+        )?,
+        None => reg.execute_with_bank(&name, &[("x", &x)])?,
+    };
+    let z = &out[0];
+    Ok((0..b).map(|i| z[i * l..(i + 1) * l].to_vec()).collect())
+}
+
+/// Encoder weights (the model artifact shipped to the inference actor).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EncoderParams {
+    pub version: u64,
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+impl Encode for EncoderParams {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.version.encode(buf);
+        F32s(self.w1.clone()).encode(buf);
+        F32s(self.b1.clone()).encode(buf);
+        F32s(self.w2.clone()).encode(buf);
+        F32s(self.b2.clone()).encode(buf);
+    }
+}
+
+impl Decode for EncoderParams {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(EncoderParams {
+            version: Decode::decode(r)?,
+            w1: F32s::decode(r)?.0,
+            b1: F32s::decode(r)?.0,
+            w2: F32s::decode(r)?.0,
+            b2: F32s::decode(r)?.0,
+        })
+    }
+}
+
+impl EncoderParams {
+    pub fn from_bank(reg: &ModelRegistry) -> Result<EncoderParams> {
+        let bank = reg.initial_params()?;
+        let get = |k: &str| -> Result<Vec<f32>> {
+            bank.get(k)
+                .cloned()
+                .ok_or_else(|| Error::Runtime(format!("missing param {k}")))
+        };
+        Ok(EncoderParams {
+            version: 0,
+            w1: get("w1")?,
+            b1: get("b1")?,
+            w2: get("w2")?,
+            b2: get("b2")?,
+        })
+    }
+}
+
+/// Pre-generate the feature pool the rounds draw from (isolates the
+/// measured inference path from simulation cost, as the paper's Fig 9
+/// isolates inference round-trips).
+pub fn feature_pool(
+    reg: &ModelRegistry,
+    n: usize,
+    seed: u64,
+) -> Result<Vec<Vec<f32>>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| simulate_frame(reg, &mut rng)).collect()
+}
+
+fn batch_sizes(cfg: &DdmdConfig) -> Vec<usize> {
+    (0..cfg.rounds)
+        .map(|r| (cfg.initial_batch + r * cfg.batch_growth).min(32))
+        .collect()
+}
+
+fn checksum(latents: &[Vec<f32>]) -> f64 {
+    latents
+        .iter()
+        .flat_map(|v| v.iter())
+        .map(|&x| x as f64)
+        .sum()
+}
+
+// --------------------------------------------------------------------------
+// Baseline: task-per-batch through the engine.
+// --------------------------------------------------------------------------
+
+/// Baseline DeepDriveMD inference: one engine task per batch.
+pub fn run_baseline(
+    cfg: &DdmdConfig,
+    reg: &Arc<ModelRegistry>,
+) -> Result<DdmdReport> {
+    let cluster = Arc::new(LocalCluster::new(ClusterConfig {
+        workers: 1, // one inference GPU in the paper's deployment
+        submit_overhead: cfg.submit_overhead,
+        submit_link: Some(Arc::new(profiles::client_nic())),
+        result_link: Some(Arc::new(profiles::client_nic())),
+        models: Some(reg.clone()),
+    }));
+    let sizes = batch_sizes(cfg);
+    let pool = feature_pool(reg, *sizes.iter().max().unwrap_or(&1), cfg.seed)?;
+    let model_load = cfg.model_load;
+
+    let mut rounds = Vec::new();
+    let mut sum = 0.0;
+    for (round, &b) in sizes.iter().enumerate() {
+        let batch: Vec<Vec<f32>> = pool[..b].to_vec();
+        let payload = batch
+            .iter()
+            .map(|v| F32s(v.clone()))
+            .collect::<Vec<_>>()
+            .to_bytes();
+        let t0 = Instant::now();
+        let fut = cluster.submit(
+            Box::new(move |ctx, payload| {
+                // Fresh task: model "loads" every time.
+                spin_sleep(model_load);
+                let reg = ctx
+                    .models
+                    .as_ref()
+                    .ok_or_else(|| Error::Config("no models".into()))?;
+                let batch: Vec<F32s> = Vec::from_bytes(&payload)?;
+                let rows: Vec<Vec<f32>> =
+                    batch.into_iter().map(|f| f.0).collect();
+                let latents = encode_batch(reg, None, &rows)?;
+                Ok(latents
+                    .into_iter()
+                    .map(F32s)
+                    .collect::<Vec<_>>()
+                    .to_bytes())
+            }),
+            payload,
+        );
+        let result = fut.wait()?;
+        let latents: Vec<F32s> = Vec::from_bytes(&result)?;
+        sum += checksum(
+            &latents.iter().map(|f| f.0.clone()).collect::<Vec<_>>(),
+        );
+        rounds.push(RoundStat {
+            round,
+            batch: b,
+            rtt: t0.elapsed().as_secs_f64(),
+        });
+    }
+    Ok(summarize(rounds, sum, 0))
+}
+
+// --------------------------------------------------------------------------
+// ProxyStream: persistent inference actor.
+// --------------------------------------------------------------------------
+
+/// Wire format for one inference request: proxy the batch, carry the
+/// result-future in the event metadata (as hex-encoded factory bytes).
+fn encode_hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+fn decode_hex(s: &str) -> Result<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return Err(Error::Codec("odd hex length".into()));
+    }
+    (0..s.len())
+        .step_by(2)
+        .map(|i| {
+            u8::from_str_radix(&s[i..i + 2], 16)
+                .map_err(|e| Error::Codec(format!("bad hex: {e}")))
+        })
+        .collect()
+}
+
+/// ProxyStream DeepDriveMD inference: persistent actor + streamed batches.
+pub fn run_proxystream(
+    cfg: &DdmdConfig,
+    reg: &Arc<ModelRegistry>,
+) -> Result<DdmdReport> {
+    let broker = BrokerState::new();
+    let store = Store::memory("ddmd");
+    // Bulk data takes the same NIC the baseline paid, for a fair compare.
+    let link = Arc::new(profiles::client_nic());
+
+    // Model-update channel: trainer → actor.
+    let model_topic = "model-updates";
+
+    // Inference actor: consumes batch events, keeps the model warm.
+    let actor_reg = reg.clone();
+    let actor_broker = broker.clone();
+    let stop = Arc::new(AtomicBool::new(false));
+    let actor_stop = stop.clone();
+    let updates = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let actor_updates = updates.clone();
+    let actor: std::thread::JoinHandle<Result<()>> =
+        std::thread::Builder::new()
+            .name("inference-actor".into())
+            .spawn(move || {
+                let mut consumer = StreamConsumer::new(
+                    EmbeddedLogSubscriber::new(actor_broker.clone(), "batches"),
+                );
+                let mut model_sub =
+                    EmbeddedLogSubscriber::new(actor_broker, model_topic);
+                // Load the model ONCE (the persistent-actor payoff).
+                let mut params = EncoderParams::from_bank(&actor_reg)?;
+                loop {
+                    // Non-blocking check for a new model announcement.
+                    use crate::stream::Subscriber as _;
+                    if let Some(ev) =
+                        model_sub.next_event(Some(Duration::ZERO))?
+                    {
+                        if let Some(factory) = ev.factory {
+                            let p: crate::proxy::Proxy<EncoderParams> =
+                                crate::proxy::Proxy::from_factory(factory);
+                            params = p.into_inner()?;
+                            actor_updates.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    let next = consumer
+                        .next_proxy::<Vec<F32s>>(Some(Duration::from_millis(50)));
+                    let (proxy, md) = match next {
+                        Ok(Some(x)) => x,
+                        Ok(None) => return Ok(()), // stream closed
+                        Err(Error::Timeout(..)) => {
+                            if actor_stop.load(Ordering::Relaxed) {
+                                return Ok(());
+                            }
+                            continue;
+                        }
+                        Err(e) => return Err(e),
+                    };
+                    // Resolve = bulk transfer store → actor (modelled NIC).
+                    let batch = proxy.into_inner()?;
+                    let rows: Vec<Vec<f32>> =
+                        batch.into_iter().map(|f| f.0).collect();
+                    let latents = encode_batch(&actor_reg, Some(&params), &rows)?;
+                    // Publish the result through the caller's future.
+                    let fut_bytes = decode_hex(
+                        md.get("result-future")
+                            .ok_or_else(|| {
+                                Error::Protocol("missing result-future".into())
+                            })?,
+                    )?;
+                    let fut: ProxyFuture<Vec<F32s>> =
+                        ProxyFuture::from_bytes(&fut_bytes)?;
+                    fut.set_result(
+                        &latents.into_iter().map(F32s).collect::<Vec<_>>(),
+                    )?;
+                }
+            })
+            .expect("spawn inference-actor");
+
+    // Trainer thread: periodically publishes refreshed weights (running
+    // the real train_step artifact), announced via the model topic.
+    let trainer: Option<std::thread::JoinHandle<Result<()>>> = if cfg.train {
+        let treg = reg.clone();
+        let tbroker = broker.clone();
+        let tstore = store.clone();
+        let tstop = stop.clone();
+        let seed = cfg.seed;
+        Some(
+            std::thread::Builder::new()
+                .name("trainer".into())
+                .spawn(move || {
+                    let d = treg.geometry("feature_dim").unwrap_or(1024)
+                        as usize;
+                    let b = treg.geometry("train_batch").unwrap_or(32)
+                        as usize;
+                    let mut params = treg.params_in_order()?;
+                    let mut rng = Rng::new(seed ^ 0x7A11);
+                    let mut producer = StreamProducer::new(
+                        EmbeddedLogPublisher::new(tbroker),
+                        Some(tstore),
+                    );
+                    let mut version = 0u64;
+                    while !tstop.load(Ordering::Relaxed) {
+                        let x: Vec<f32> =
+                            (0..b * d).map(|_| rng.f32()).collect();
+                        let lr = [0.01f32];
+                        let mut inputs: Vec<&[f32]> =
+                            params.iter().map(|p| p.as_slice()).collect();
+                        inputs.push(&x);
+                        inputs.push(&lr);
+                        let mut out =
+                            treg.execute_f32("train_step_b32", &inputs)?;
+                        out.pop(); // loss
+                        params = out;
+                        version += 1;
+                        let update = EncoderParams {
+                            version,
+                            w1: params[0].clone(),
+                            b1: params[1].clone(),
+                            w2: params[2].clone(),
+                            b2: params[3].clone(),
+                        };
+                        producer.send(
+                            model_topic,
+                            &update,
+                            Metadata::new(),
+                        )?;
+                        std::thread::sleep(Duration::from_millis(100));
+                    }
+                    Ok(())
+                })
+                .expect("spawn trainer"),
+        )
+    } else {
+        None
+    };
+
+    // Client: stream batches, await result futures.
+    let mut producer = StreamProducer::new(
+        EmbeddedLogPublisher::new(broker.clone()),
+        Some(store.clone()),
+    );
+    let sizes = batch_sizes(cfg);
+    let pool = feature_pool(reg, *sizes.iter().max().unwrap_or(&1), cfg.seed)?;
+    let mut rounds = Vec::new();
+    let mut sum = 0.0;
+    for (round, &b) in sizes.iter().enumerate() {
+        let batch: Vec<F32s> =
+            pool[..b].iter().map(|v| F32s(v.clone())).collect();
+        let result_future: ProxyFuture<Vec<F32s>> = store.future();
+        let mut md = Metadata::new();
+        md.insert(
+            "result-future".into(),
+            encode_hex(&result_future.to_bytes()),
+        );
+        let t0 = Instant::now();
+        // Bulk put models the producer→store hop on the shared NIC.
+        link.transfer(batch.iter().map(|f| f.0.len() * 4).sum());
+        producer.send("batches", &batch, md)?;
+        let latents =
+            result_future.result(Some(Duration::from_secs(60)))?;
+        sum += checksum(
+            &latents.iter().map(|f| f.0.clone()).collect::<Vec<_>>(),
+        );
+        rounds.push(RoundStat {
+            round,
+            batch: b,
+            rtt: t0.elapsed().as_secs_f64(),
+        });
+    }
+
+    // When training, linger until at least one model update lands so the
+    // update path is always exercised (the trainer's first step includes
+    // a one-time executable compile).
+    if cfg.train {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while updates.load(Ordering::Relaxed) == 0 && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+    producer.close_topic("batches")?;
+    stop.store(true, Ordering::Relaxed);
+    actor.join().map_err(|_| Error::Task("actor panicked".into()))??;
+    if let Some(t) = trainer {
+        t.join().map_err(|_| Error::Task("trainer panicked".into()))??;
+    }
+    Ok(summarize(
+        rounds,
+        sum,
+        updates.load(Ordering::Relaxed),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifacts_dir;
+
+    fn registry() -> Arc<ModelRegistry> {
+        ModelRegistry::load(default_artifacts_dir()).unwrap()
+    }
+
+    fn quick() -> DdmdConfig {
+        DdmdConfig {
+            rounds: 4,
+            initial_batch: 2,
+            batch_growth: 3,
+            model_load: Duration::from_millis(60),
+            submit_overhead: Duration::from_millis(3),
+            train: false,
+            seed: 9,
+        }
+    }
+
+    #[test]
+    fn simulate_frame_produces_valid_features() {
+        let reg = registry();
+        let mut rng = Rng::new(3);
+        let f = simulate_frame(&reg, &mut rng).unwrap();
+        assert_eq!(f.len(), 1024);
+        assert!(f.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn encode_batch_buckets_and_truncates() {
+        let reg = registry();
+        let pool = feature_pool(&reg, 5, 1).unwrap();
+        let z = encode_batch(&reg, None, &pool).unwrap();
+        assert_eq!(z.len(), 5);
+        assert_eq!(z[0].len(), 32);
+        // Padding must not change the real rows: batch of 2 vs batch of 5
+        // agree on shared rows.
+        let z2 = encode_batch(&reg, None, &pool[..2]).unwrap();
+        for (a, b) in z[..2].iter().zip(&z2) {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn encoder_params_roundtrip() {
+        let reg = registry();
+        let p = EncoderParams::from_bank(&reg).unwrap();
+        let back = EncoderParams::from_bytes(&p.to_bytes()).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn baseline_and_proxystream_agree_numerically() {
+        let reg = registry();
+        let cfg = quick();
+        let base = run_baseline(&cfg, &reg).unwrap();
+        let ps = run_proxystream(&cfg, &reg).unwrap();
+        assert_eq!(base.rounds.len(), cfg.rounds);
+        assert_eq!(ps.rounds.len(), cfg.rounds);
+        assert!(
+            (base.checksum - ps.checksum).abs()
+                < 1e-3 * base.checksum.abs().max(1.0),
+            "checksums diverge: {} vs {}",
+            base.checksum,
+            ps.checksum
+        );
+    }
+
+    #[test]
+    fn proxystream_cuts_mean_rtt() {
+        let reg = registry();
+        let cfg = DdmdConfig { rounds: 6, ..quick() };
+        let base = run_baseline(&cfg, &reg).unwrap();
+        let ps = run_proxystream(&cfg, &reg).unwrap();
+        assert!(
+            ps.mean_rtt < base.mean_rtt,
+            "proxystream {:.4}s !< baseline {:.4}s",
+            ps.mean_rtt,
+            base.mean_rtt
+        );
+    }
+
+    #[test]
+    fn trainer_updates_reach_the_actor() {
+        let reg = registry();
+        let cfg = DdmdConfig {
+            rounds: 8,
+            train: true,
+            ..quick()
+        };
+        let ps = run_proxystream(&cfg, &reg).unwrap();
+        assert!(ps.model_updates > 0, "no model updates applied");
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        for v in [vec![], vec![0u8], vec![255, 0, 16, 32]] {
+            assert_eq!(decode_hex(&encode_hex(&v)).unwrap(), v);
+        }
+        assert!(decode_hex("abc").is_err());
+        assert!(decode_hex("zz").is_err());
+    }
+}

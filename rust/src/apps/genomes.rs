@@ -1,0 +1,474 @@
+//! 1000 Genomes mutational-overlap workflow (paper Sec II & VI, Fig 8).
+//!
+//! The real pipeline identifies mutational overlaps among the 2504
+//! genomes of the 1000 Genomes Project. The dataset is a bulk download we
+//! cannot assume, so a seeded synthetic genotype generator reproduces the
+//! pipeline's *data-flow structure* faithfully (DESIGN.md §3 documents the
+//! substitution): the five stages, their fan-out, their data volumes, and
+//! their per-task startup overheads are all preserved.
+//!
+//! Stages (matching the paper's description):
+//! 1. `individuals`  — per chunk: extract each individual's variant set;
+//! 2. `merge`        — combine chunk results per individual group;
+//! 3. `sifting`      — score variants, select those with phenotype effect;
+//! 4. `overlap`      — per pair-group: mutation overlap of selected
+//!                      variants between individuals;
+//! 5. `frequency`    — frequency of overlapping variants.
+//!
+//! The whole thing compiles to a [`Pipeline`] so it runs under any
+//! [`DataMode`]; Fig 8 compares `NoProxy` (the Globus-Compute-native
+//! futures baseline) with `ProxyFuture`.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::codec::{Decode, Encode};
+use crate::engine::{ClusterConfig, LocalCluster};
+use crate::error::Result;
+use crate::rng::Rng;
+use crate::store::Store;
+use crate::workflow::{DataMode, Pipeline, PipelineTask, RunReport, WorkFn};
+
+/// Workload scale knobs.
+#[derive(Debug, Clone)]
+pub struct GenomesConfig {
+    /// Number of individuals (the paper's full dataset has 2504).
+    pub individuals: usize,
+    /// SNP count per chunk.
+    pub snps_per_chunk: usize,
+    /// Chunk count (stage-1 fan-out).
+    pub chunks: usize,
+    /// Individual groups for merge / overlap fan-out.
+    pub groups: usize,
+    /// Per-task startup overhead (library loading etc.).
+    pub task_overhead: Duration,
+    /// Per-task compute sleep floor (simulated work beyond the real
+    /// computation, which is small at this scale).
+    pub compute_floor: Duration,
+    /// RNG seed for the synthetic genotypes.
+    pub seed: u64,
+}
+
+impl Default for GenomesConfig {
+    fn default() -> Self {
+        GenomesConfig {
+            individuals: 64,
+            snps_per_chunk: 2000,
+            chunks: 8,
+            groups: 4,
+            task_overhead: Duration::from_millis(60),
+            compute_floor: Duration::from_millis(40),
+            seed: 1000,
+        }
+    }
+}
+
+/// A genotype chunk: `snps × individuals` matrix of 0/1/2 allele counts,
+/// plus the global SNP-id offset of its first row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Chunk {
+    pub snp_offset: u32,
+    pub individuals: u32,
+    /// Row-major `snps × individuals`.
+    pub genotypes: Vec<u8>,
+}
+
+impl Encode for Chunk {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.snp_offset.encode(buf);
+        self.individuals.encode(buf);
+        crate::codec::Bytes(self.genotypes.clone()).encode(buf);
+    }
+}
+
+impl Decode for Chunk {
+    fn decode(r: &mut crate::codec::Reader<'_>) -> Result<Self> {
+        Ok(Chunk {
+            snp_offset: Decode::decode(r)?,
+            individuals: Decode::decode(r)?,
+            genotypes: crate::codec::Bytes::decode(r)?.0,
+        })
+    }
+}
+
+/// Generate the synthetic dataset: `chunks` genotype chunks.
+pub fn generate_dataset(cfg: &GenomesConfig) -> Vec<Chunk> {
+    let mut rng = Rng::new(cfg.seed);
+    (0..cfg.chunks)
+        .map(|c| {
+            let mut genotypes =
+                Vec::with_capacity(cfg.snps_per_chunk * cfg.individuals);
+            for _snp in 0..cfg.snps_per_chunk {
+                // Rare-variant skew: most SNPs are absent in most people.
+                let maf = rng.f64() * 0.1;
+                for _ind in 0..cfg.individuals {
+                    let dose = if rng.chance(maf) {
+                        if rng.chance(0.1) { 2 } else { 1 }
+                    } else {
+                        0
+                    };
+                    genotypes.push(dose);
+                }
+            }
+            Chunk {
+                snp_offset: (c * cfg.snps_per_chunk) as u32,
+                individuals: cfg.individuals as u32,
+                genotypes,
+            }
+        })
+        .collect()
+}
+
+/// Stage 1: per-individual variant ids within one chunk.
+pub fn extract_individuals(chunk: &Chunk) -> Vec<Vec<u32>> {
+    let n_ind = chunk.individuals as usize;
+    let mut per_ind: Vec<Vec<u32>> = vec![Vec::new(); n_ind];
+    for (row, geno) in chunk.genotypes.chunks(n_ind).enumerate() {
+        let snp_id = chunk.snp_offset + row as u32;
+        for (ind, &g) in geno.iter().enumerate() {
+            if g > 0 {
+                per_ind[ind].push(snp_id);
+            }
+        }
+    }
+    per_ind
+}
+
+/// Stage 3: deterministic SIFT-like score in [0,1) per SNP; variants
+/// scoring under the threshold are "selected" (phenotype-affecting).
+pub fn sift_select(chunk: &Chunk, threshold: f64) -> Vec<u32> {
+    let n_ind = chunk.individuals as usize;
+    (0..chunk.genotypes.len() / n_ind)
+        .filter_map(|row| {
+            let snp_id = chunk.snp_offset + row as u32;
+            // Deterministic pseudo-score derived from the SNP id.
+            let mut r = Rng::new(0x5157 ^ u64::from(snp_id));
+            if r.f64() < threshold {
+                Some(snp_id)
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+/// Stage 4: pairwise overlap counts among a group of individuals,
+/// restricted to selected variants.
+pub fn mutation_overlap(
+    individuals: &[Vec<u32>],
+    selected: &std::collections::BTreeSet<u32>,
+) -> Vec<(u32, u32, u32)> {
+    let filtered: Vec<std::collections::BTreeSet<u32>> = individuals
+        .iter()
+        .map(|v| v.iter().copied().filter(|id| selected.contains(id)).collect())
+        .collect();
+    let mut out = Vec::new();
+    for i in 0..filtered.len() {
+        for j in (i + 1)..filtered.len() {
+            let shared = filtered[i].intersection(&filtered[j]).count() as u32;
+            out.push((i as u32, j as u32, shared));
+        }
+    }
+    out
+}
+
+/// Stage 5: how many individuals carry each selected, overlapping variant.
+pub fn variant_frequency(
+    individuals: &[Vec<u32>],
+    selected: &std::collections::BTreeSet<u32>,
+) -> BTreeMap<u32, u32> {
+    let mut freq = BTreeMap::new();
+    for ind in individuals {
+        for id in ind {
+            if selected.contains(id) {
+                *freq.entry(*id).or_insert(0) += 1;
+            }
+        }
+    }
+    freq.retain(|_, c| *c >= 2); // overlapping = carried by ≥2 individuals
+    freq
+}
+
+/// Pure single-process reference for correctness checks.
+pub fn run_reference(cfg: &GenomesConfig) -> BTreeMap<u32, u32> {
+    let dataset = generate_dataset(cfg);
+    let mut merged: Vec<Vec<u32>> = vec![Vec::new(); cfg.individuals];
+    let mut selected = std::collections::BTreeSet::new();
+    for chunk in &dataset {
+        for (ind, vars) in extract_individuals(chunk).into_iter().enumerate() {
+            merged[ind].extend(vars);
+        }
+        selected.extend(sift_select(chunk, 0.3));
+    }
+    variant_frequency(&merged, &selected)
+}
+
+const SIFT_THRESHOLD: f64 = 0.3;
+
+/// Build the five-stage DAG.
+///
+/// Graph: chunk c → individuals(c); individuals(*) → merge(g) per group;
+/// chunk c → sifting(c); merge(g) + sifting(*) → overlap(g);
+/// merge(*) + sifting(*) → frequency.
+pub fn build_pipeline(cfg: &GenomesConfig) -> Result<Pipeline> {
+    let dataset = generate_dataset(cfg);
+    let n_groups = cfg.groups.min(cfg.individuals).max(1);
+    let ind_per_group = cfg.individuals.div_ceil(n_groups);
+    let overhead = cfg.task_overhead;
+    let compute = cfg.compute_floor;
+
+    let mut tasks: Vec<PipelineTask> = Vec::new();
+
+    // Stage 1: individuals, one task per chunk. Inputs: none (the chunk
+    // rides inside the work closure, standing in for the "fetch" stage).
+    let mut s1_ids = Vec::new();
+    for (c, chunk) in dataset.iter().enumerate() {
+        let chunk = chunk.clone();
+        let work: WorkFn = Arc::new(move |_ctx, _inputs| {
+            let per_ind = extract_individuals(&chunk);
+            Ok(per_ind.to_bytes())
+        });
+        s1_ids.push(tasks.len());
+        tasks.push(PipelineTask {
+            name: format!("individuals-{c}"),
+            stage: "1-individuals".into(),
+            deps: vec![],
+            overhead,
+            compute,
+            work: Some(work),
+            output_bytes: 0,
+        });
+    }
+
+    // Stage 2: merge, one task per individual group, over all chunks.
+    let mut s2_ids = Vec::new();
+    for g in 0..n_groups {
+        let lo = g * ind_per_group;
+        let hi = ((g + 1) * ind_per_group).min(cfg.individuals);
+        let work: WorkFn = Arc::new(move |_ctx, inputs| {
+            let mut merged: Vec<Vec<u32>> = vec![Vec::new(); hi - lo];
+            for raw in &inputs {
+                let per_ind = Vec::<Vec<u32>>::from_bytes(raw)?;
+                for (ind, vars) in per_ind.iter().enumerate() {
+                    if (lo..hi).contains(&ind) {
+                        merged[ind - lo].extend(vars.iter().copied());
+                    }
+                }
+            }
+            Ok(merged.to_bytes())
+        });
+        s2_ids.push(tasks.len());
+        tasks.push(PipelineTask {
+            name: format!("merge-{g}"),
+            stage: "2-merge".into(),
+            deps: s1_ids.clone(),
+            overhead,
+            compute,
+            work: Some(work),
+            output_bytes: 0,
+        });
+    }
+
+    // Stage 3: sifting, one task per chunk (no deps: works on raw chunk).
+    let mut s3_ids = Vec::new();
+    for (c, chunk) in dataset.iter().enumerate() {
+        let chunk = chunk.clone();
+        let work: WorkFn = Arc::new(move |_ctx, _inputs| {
+            Ok(sift_select(&chunk, SIFT_THRESHOLD).to_bytes())
+        });
+        s3_ids.push(tasks.len());
+        tasks.push(PipelineTask {
+            name: format!("sifting-{c}"),
+            stage: "3-sifting".into(),
+            deps: vec![],
+            overhead,
+            compute,
+            work: Some(work),
+            output_bytes: 0,
+        });
+    }
+
+    // Stage 4: overlap per group: deps = merge(g) + all sifting tasks.
+    let mut s4_ids = Vec::new();
+    for g in 0..n_groups {
+        let mut deps = vec![s2_ids[g]];
+        deps.extend(&s3_ids);
+        let work: WorkFn = Arc::new(move |_ctx, inputs| {
+            let merged = Vec::<Vec<u32>>::from_bytes(&inputs[0])?;
+            let mut selected = std::collections::BTreeSet::new();
+            for raw in &inputs[1..] {
+                selected.extend(Vec::<u32>::from_bytes(raw)?);
+            }
+            let overlaps = mutation_overlap(&merged, &selected);
+            Ok(overlaps.to_bytes())
+        });
+        s4_ids.push(tasks.len());
+        tasks.push(PipelineTask {
+            name: format!("overlap-{g}"),
+            stage: "4-overlap".into(),
+            deps,
+            overhead,
+            compute,
+            work: Some(work),
+            output_bytes: 0,
+        });
+    }
+
+    // Stage 5: frequency over all merged groups + sifting.
+    {
+        let mut deps = s2_ids.clone();
+        deps.extend(&s3_ids);
+        let n_merge = s2_ids.len();
+        let work: WorkFn = Arc::new(move |_ctx, inputs| {
+            let mut individuals: Vec<Vec<u32>> = Vec::new();
+            for raw in &inputs[..n_merge] {
+                individuals.extend(Vec::<Vec<u32>>::from_bytes(raw)?);
+            }
+            let mut selected = std::collections::BTreeSet::new();
+            for raw in &inputs[n_merge..] {
+                selected.extend(Vec::<u32>::from_bytes(raw)?);
+            }
+            let freq = variant_frequency(&individuals, &selected);
+            Ok(freq.to_bytes())
+        });
+        tasks.push(PipelineTask {
+            name: "frequency".into(),
+            stage: "5-frequency".into(),
+            deps,
+            overhead,
+            compute,
+            work: Some(work),
+            output_bytes: 0,
+        });
+    }
+
+    // Overlap tasks are sinks too; keep only `frequency` as the checked
+    // sink by adding a tiny join task? No: multiple sinks are fine — the
+    // report returns all of them.
+    Pipeline::new(tasks)
+}
+
+/// Run the workflow end-to-end under a mode; returns the run report plus
+/// the decoded frequency table (for correctness checks).
+pub fn run(
+    cfg: &GenomesConfig,
+    mode: DataMode,
+) -> Result<(RunReport, BTreeMap<u32, u32>)> {
+    let pipeline = build_pipeline(cfg)?;
+    let n = pipeline.tasks.len();
+    let cluster = Arc::new(LocalCluster::new(ClusterConfig {
+        workers: n,
+        submit_overhead: Duration::from_millis(2),
+        ..Default::default()
+    }));
+    let store = Store::memory("genomes");
+    let report = pipeline.run(&cluster, &store, mode)?;
+    let freq_bytes = report
+        .sink_outputs
+        .iter()
+        .rev()
+        .find(|(i, _)| pipeline.tasks[*i].stage == "5-frequency")
+        .map(|(_, b)| b.clone())
+        .expect("frequency sink present");
+    let freq = BTreeMap::<u32, u32>::from_bytes(&freq_bytes)?;
+    Ok((report, freq))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> GenomesConfig {
+        GenomesConfig {
+            individuals: 12,
+            snps_per_chunk: 200,
+            chunks: 3,
+            groups: 2,
+            task_overhead: Duration::from_millis(10),
+            compute_floor: Duration::from_millis(5),
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn dataset_is_deterministic_and_sparse() {
+        let cfg = tiny();
+        let a = generate_dataset(&cfg);
+        let b = generate_dataset(&cfg);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+        let nonzero: usize = a[0].genotypes.iter().filter(|&&g| g > 0).count();
+        let total = a[0].genotypes.len();
+        assert!(nonzero > 0 && nonzero < total / 4, "{nonzero}/{total}");
+    }
+
+    #[test]
+    fn stage_functions_consistent() {
+        let cfg = tiny();
+        let ds = generate_dataset(&cfg);
+        let per_ind = extract_individuals(&ds[0]);
+        assert_eq!(per_ind.len(), cfg.individuals);
+        // Every reported variant is indeed nonzero in the matrix.
+        for (ind, vars) in per_ind.iter().enumerate() {
+            for &v in vars {
+                let row = (v - ds[0].snp_offset) as usize;
+                assert!(ds[0].genotypes[row * cfg.individuals + ind] > 0);
+            }
+        }
+        let sel = sift_select(&ds[0], 0.3);
+        assert!(!sel.is_empty());
+        assert!(sel.len() < cfg.snps_per_chunk);
+        // Threshold monotonicity.
+        assert!(sift_select(&ds[0], 0.9).len() >= sel.len());
+        assert_eq!(sift_select(&ds[0], 0.0).len(), 0);
+    }
+
+    #[test]
+    fn reference_run_is_nonempty() {
+        let freq = run_reference(&tiny());
+        assert!(!freq.is_empty());
+        assert!(freq.values().all(|&c| c >= 2));
+    }
+
+    #[test]
+    fn pipeline_matches_reference_all_modes() {
+        let cfg = tiny();
+        let want = run_reference(&cfg);
+        for mode in
+            [DataMode::NoProxy, DataMode::Proxy, DataMode::ProxyFuture]
+        {
+            let (_report, freq) = run(&cfg, mode).unwrap();
+            assert_eq!(freq, want, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn proxyfuture_reduces_makespan() {
+        let cfg = GenomesConfig {
+            task_overhead: Duration::from_millis(50),
+            compute_floor: Duration::from_millis(25),
+            ..tiny()
+        };
+        let (base, _) = run(&cfg, DataMode::NoProxy).unwrap();
+        let (pf, _) = run(&cfg, DataMode::ProxyFuture).unwrap();
+        assert!(
+            pf.makespan < base.makespan,
+            "ProxyFuture {:.3}s !< baseline {:.3}s",
+            pf.makespan,
+            base.makespan
+        );
+    }
+
+    #[test]
+    fn stage_envelopes_overlap_under_proxyfuture() {
+        let cfg = tiny();
+        let (report, _) = run(&cfg, DataMode::ProxyFuture).unwrap();
+        let s1 = report.timeline.stage_envelope("compute");
+        assert!(s1.is_some());
+        // Stage-level rendering works through task name prefixes.
+        let recs = report.timeline.records();
+        assert!(recs.iter().any(|r| r.task.starts_with("individuals-")));
+        assert!(recs.iter().any(|r| r.task == "frequency"));
+    }
+}

@@ -1,0 +1,343 @@
+//! Fig 7 scenario: memory management over a simulated map-reduce workflow.
+//!
+//! Paper Sec V-C: 8 consecutive map-reduces; each of 32 mappers receives
+//! 100 MB and produces 10 MB; one reducer consumes all mapper outputs;
+//! every task sleeps 5 s. Four configurations:
+//!
+//! * [`MemMode::NoProxy`]    — data rides the engine (Dask baseline);
+//! * [`MemMode::Default`]    — proxies, never freed (ProxyStore default);
+//! * [`MemMode::Manual`]     — proxies, freed by hand-written app logic
+//!   with a-priori knowledge of last use;
+//! * [`MemMode::Ownership`]  — owned/borrowed proxies, freed automatically.
+//!
+//! Measured: store-resident bytes over time (the paper's system-memory
+//! trace), plus makespan. Sizes/durations are scaled ×1/10 by default.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::codec::{Bytes, Decode, Encode};
+use crate::engine::{ClusterConfig, LocalCluster, StoreExecutor, TaskArg};
+use crate::error::{Error, Result};
+use crate::metrics::{MemorySampler, MemorySeries};
+use crate::netsim::spin_sleep;
+use crate::ownership::StoreOwnedExt;
+use crate::rng::Rng;
+use crate::store::Store;
+
+/// Memory-management configuration under test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemMode {
+    NoProxy,
+    Default,
+    Manual,
+    Ownership,
+}
+
+impl MemMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            MemMode::NoProxy => "no-proxy",
+            MemMode::Default => "proxy-default",
+            MemMode::Manual => "proxy-manual",
+            MemMode::Ownership => "proxy-ownership",
+        }
+    }
+
+    pub fn all() -> [MemMode; 4] {
+        [
+            MemMode::NoProxy,
+            MemMode::Default,
+            MemMode::Manual,
+            MemMode::Ownership,
+        ]
+    }
+}
+
+/// Workload knobs (defaults = paper's shape scaled ×1/10).
+#[derive(Debug, Clone)]
+pub struct MemBenchConfig {
+    pub rounds: usize,
+    pub mappers: usize,
+    /// Bytes each mapper receives.
+    pub map_input: usize,
+    /// Bytes each mapper produces.
+    pub map_output: usize,
+    /// Per-task sleep.
+    pub task_sleep: Duration,
+    pub seed: u64,
+}
+
+impl Default for MemBenchConfig {
+    fn default() -> Self {
+        MemBenchConfig {
+            rounds: 4,
+            mappers: 8,
+            map_input: 10_000_000,
+            map_output: 1_000_000,
+            task_sleep: Duration::from_millis(200),
+            seed: 7,
+        }
+    }
+}
+
+/// One mode's result.
+#[derive(Debug, Clone)]
+pub struct MemBenchReport {
+    pub mode: MemMode,
+    pub series: MemorySeries,
+    pub makespan: f64,
+    /// Reducer outputs checksum (correctness across modes).
+    pub checksum: u64,
+}
+
+fn reduce_bytes(inputs: &[Vec<u8>]) -> Vec<u8> {
+    // XOR-fold all mapper outputs into one block (order-insensitive).
+    let len = inputs.iter().map(|v| v.len()).max().unwrap_or(0);
+    let mut out = vec![0u8; len];
+    for v in inputs {
+        for (o, b) in out.iter_mut().zip(v) {
+            *o ^= b;
+        }
+    }
+    out
+}
+
+fn checksum64(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in data {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Mapper: deterministic transform of its input slice.
+fn map_work(input: &[u8], out_len: usize) -> Vec<u8> {
+    let mut out = vec![0u8; out_len];
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = input[i % input.len()].wrapping_mul(31).wrapping_add(i as u8);
+    }
+    out
+}
+
+/// Run the Fig 7 scenario in one mode.
+pub fn run(cfg: &MemBenchConfig, mode: MemMode) -> Result<MemBenchReport> {
+    let cluster = Arc::new(LocalCluster::new(ClusterConfig {
+        workers: cfg.mappers.min(8),
+        ..Default::default()
+    }));
+    let store = Store::memory(&format!("membench-{}", mode.label()));
+    let executor = StoreExecutor::new(cluster.clone(), store.clone());
+    let gauge = store.gauge().expect("memory connector has a gauge");
+    let sampler =
+        MemorySampler::start(Duration::from_millis(20), vec![gauge]);
+    let t0 = std::time::Instant::now();
+    let mut rng = Rng::new(cfg.seed);
+    let sleep = cfg.task_sleep;
+    let mut final_checksum = 0u64;
+
+    for _round in 0..cfg.rounds {
+        // Client materializes each mapper's input (the paper's generator).
+        let inputs: Vec<Vec<u8>> =
+            (0..cfg.mappers).map(|_| rng.bytes(cfg.map_input)).collect();
+
+        let out_len = cfg.map_output;
+        let map_futs: Vec<_> = match mode {
+            MemMode::NoProxy => inputs
+                .iter()
+                .map(|inp| {
+                    // Data rides the engine payload.
+                    cluster.submit(
+                        Box::new(move |_ctx, payload| {
+                            spin_sleep(sleep);
+                            Ok(map_work(&payload, out_len))
+                        }),
+                        inp.clone(),
+                    )
+                })
+                .collect(),
+            _ => inputs
+                .iter()
+                .map(|inp|
+
+ {
+                    // Proxy path, with mode-specific management below.
+                    let arg = match mode {
+                        MemMode::Ownership => {
+                            let owned =
+                                store.owned_proxy(&Bytes(inp.clone()))?;
+                            // Transfer ownership: the mapper is the last
+                            // consumer of its input.
+                            Ok::<TaskArg, Error>(
+                                executor.make_owned_transfer(owned),
+                            )
+                        }
+                        _ => {
+                            let p = store.proxy(&Bytes(inp.clone()))?;
+                            Ok(TaskArg::Proxied(Bytes(p.to_bytes())))
+                        }
+                    }?;
+                    let manual = mode == MemMode::Manual;
+                    let fut = executor.submit::<Bytes>(
+                        vec![arg],
+                        Box::new(move |_ctx, args| {
+                            spin_sleep(sleep);
+                            let data: Bytes = match &args[0] {
+                                TaskArg::OwnedTransfer(_) => {
+                                    let owned =
+                                        args[0].take_owned::<Bytes>()?;
+                                    let v = owned.resolve()?.clone();
+                                    v // owned drops → input evicted
+                                }
+                                other => {
+                                    let v: Bytes = other.get()?;
+                                    if manual {
+                                        // Hand-written free: the app knows
+                                        // this was the last read.
+                                        if let TaskArg::Proxied(b) = other {
+                                            let p: crate::proxy::Proxy<Bytes> =
+                                                crate::proxy::Proxy::from_bytes(&b.0)?;
+                                            let f = p.factory();
+                                            f.connector()?.evict(&f.key)?;
+                                        }
+                                    }
+                                    v
+                                }
+                            };
+                            Ok(Bytes(map_work(&data.0, out_len)).to_bytes())
+                        }),
+                    );
+                    Ok(fut)
+                })
+                .map(|r| r.map(|f| f.raw().clone()))
+                .collect::<Result<Vec<_>>>()?,
+        };
+
+        // Reducer consumes all mapper outputs.
+        let mapper_outputs: Vec<Vec<u8>> = match mode {
+            MemMode::NoProxy => map_futs
+                .iter()
+                .map(|f| f.wait())
+                .collect::<Result<_>>()?,
+            _ => map_futs
+                .iter()
+                .map(|f| {
+                    let raw = f.wait()?;
+                    let arg = TaskArg::from_bytes(&raw)?;
+                    match (&arg, mode) {
+                        (TaskArg::Proxied(b), MemMode::Manual | MemMode::Ownership) => {
+                            // Consume-once: resolve then evict.
+                            let p: crate::proxy::Proxy<Bytes> =
+                                crate::proxy::Proxy::from_bytes(&b.0)?;
+                            let factory = p.factory().clone();
+                            let v = p.into_inner()?;
+                            factory.connector()?.evict(&factory.key)?;
+                            Ok(v.0)
+                        }
+                        _ => arg.get::<Bytes>().map(|b| b.0),
+                    }
+                })
+                .collect::<Result<_>>()?,
+        };
+        let reduced = {
+            let rf = cluster.submit(
+                Box::new(move |_ctx, payload| {
+                    spin_sleep(sleep);
+                    let parts: Vec<Bytes> = Vec::from_bytes(&payload)?;
+                    let inputs: Vec<Vec<u8>> =
+                        parts.into_iter().map(|b| b.0).collect();
+                    Ok(reduce_bytes(&inputs))
+                }),
+                mapper_outputs
+                    .iter()
+                    .map(|v| Bytes(v.clone()))
+                    .collect::<Vec<_>>()
+                    .to_bytes(),
+            );
+            rf.wait()?
+        };
+        final_checksum ^= checksum64(&reduced);
+    }
+
+    let makespan = t0.elapsed().as_secs_f64();
+    // Give deferred releases (executor callbacks) a beat before the final
+    // sample.
+    std::thread::sleep(Duration::from_millis(60));
+    let series = sampler.stop();
+    Ok(MemBenchReport { mode, series, makespan, checksum: final_checksum })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> MemBenchConfig {
+        MemBenchConfig {
+            rounds: 2,
+            mappers: 4,
+            map_input: 500_000,
+            map_output: 50_000,
+            task_sleep: Duration::from_millis(30),
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn all_modes_same_result() {
+        let cfg = quick();
+        let reports: Vec<_> = MemMode::all()
+            .iter()
+            .map(|&m| run(&cfg, m).unwrap())
+            .collect();
+        for w in reports.windows(2) {
+            assert_eq!(
+                w[0].checksum, w[1].checksum,
+                "{:?} vs {:?}",
+                w[0].mode, w[1].mode
+            );
+        }
+    }
+
+    #[test]
+    fn default_mode_grows_ownership_flat() {
+        let cfg = quick();
+        let default = run(&cfg, MemMode::Default).unwrap();
+        let owned = run(&cfg, MemMode::Ownership).unwrap();
+        let manual = run(&cfg, MemMode::Manual).unwrap();
+        // Default leaks every input+output; final resident ≈ everything.
+        assert!(
+            default.series.final_store()
+                > (cfg.rounds * cfg.mappers * cfg.map_input / 2) as i64,
+            "default final {} too small",
+            default.series.final_store()
+        );
+        // Ownership and manual end (near) empty.
+        assert!(
+            owned.series.final_store() < cfg.map_input as i64,
+            "ownership final {}",
+            owned.series.final_store()
+        );
+        assert!(
+            manual.series.final_store() < cfg.map_input as i64,
+            "manual final {}",
+            manual.series.final_store()
+        );
+        // Ownership tracks manual (the paper's headline for Fig 7).
+        let ratio = owned.series.mean_store().max(1.0)
+            / manual.series.mean_store().max(1.0);
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "ownership mean {} vs manual mean {}",
+            owned.series.mean_store(),
+            manual.series.mean_store()
+        );
+    }
+
+    #[test]
+    fn no_proxy_keeps_store_empty() {
+        let r = run(&quick(), MemMode::NoProxy).unwrap();
+        assert_eq!(r.series.peak_store(), 0);
+        assert!(r.makespan > 0.0);
+    }
+}

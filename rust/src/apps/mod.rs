@@ -1,0 +1,17 @@
+//! The paper's three motivating applications (Sec II / VI), rebuilt on the
+//! proxystore stack:
+//!
+//! * [`genomes`] — the 1000 Genomes mutational-overlap workflow (Fig 8),
+//!   on a synthetic genotype dataset with the same five-stage data flow;
+//! * [`ddmd`] — DeepDriveMD-style ML-guided molecular dynamics (Fig 9):
+//!   simulation → featurize → inference → train, with the autoencoder
+//!   executing as a PJRT artifact (JAX + Pallas, AOT);
+//! * [`mof`] — MOF Generation (Fig 10): a thinker steering generate/
+//!   assemble/score tasks, with proxy lifetimes managed by the ownership
+//!   model.
+
+pub mod ddmd;
+pub mod genomes;
+pub mod membench;
+pub mod mof;
+pub mod streambench;

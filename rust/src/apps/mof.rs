@@ -1,0 +1,330 @@
+//! MOF Generation workflow (paper Sec II & VI, Fig 10).
+//!
+//! A central *thinker* steers rounds of generate → assemble → score tasks:
+//! diffusion-model generators emit ligand feature blocks, assembly
+//! combines ligands into MOF candidates, and a physics surrogate (the L1
+//! `mof_score` Pallas kernel, compiled to the `mof_score_c256` PJRT
+//! artifact) ranks candidates for CO₂ uptake. All task inputs/outputs
+//! larger than 1 kB travel as proxies (the paper's deployment policy).
+//!
+//! Fig 10's measurement: the number of *active proxies* (proxied objects
+//! whose target is still stored) over the application's runtime, under
+//! the default proxy model (nothing is ever freed) vs the ownership model
+//! (owners/borrows drop → automatic eviction).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::codec::{Bytes, Encode, F32s};
+use crate::engine::{ClusterConfig, LocalCluster, StoreExecutor, TaskArg};
+use crate::error::{Error, Result};
+use crate::ownership::StoreOwnedExt;
+use crate::rng::Rng;
+use crate::runtime::ModelRegistry;
+use crate::store::Store;
+
+/// Memory-management mode under test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemoryMode {
+    /// Plain proxies; targets are never freed (ProxyStore default).
+    Default,
+    /// Ownership model: automatic eviction via owned/borrowed proxies.
+    Ownership,
+}
+
+impl MemoryMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            MemoryMode::Default => "default",
+            MemoryMode::Ownership => "ownership",
+        }
+    }
+}
+
+/// Workload knobs.
+#[derive(Debug, Clone)]
+pub struct MofConfig {
+    /// Thinker rounds.
+    pub rounds: usize,
+    /// Generator tasks per round.
+    pub generators: usize,
+    /// Ligand feature block size (candidates × dims must match the
+    /// compiled artifact: 256 × 64).
+    pub candidates: usize,
+    pub dims: usize,
+    /// Keep-top-k candidates per round in the thinker state.
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for MofConfig {
+    fn default() -> Self {
+        MofConfig {
+            rounds: 6,
+            generators: 3,
+            candidates: 256,
+            dims: 64,
+            top_k: 8,
+            seed: 2024,
+        }
+    }
+}
+
+/// Sampled (time, active-proxies, store-bytes) series.
+#[derive(Debug, Clone, Default)]
+pub struct ProxySeries {
+    pub samples: Vec<(f64, i64, i64)>,
+}
+
+impl ProxySeries {
+    pub fn peak_active(&self) -> i64 {
+        self.samples.iter().map(|s| s.1).max().unwrap_or(0)
+    }
+
+    pub fn final_active(&self) -> i64 {
+        self.samples.last().map(|s| s.1).unwrap_or(0)
+    }
+
+    pub fn csv_rows(&self) -> Vec<String> {
+        self.samples
+            .iter()
+            .map(|(t, a, b)| format!("{t:.3},{a},{b}"))
+            .collect()
+    }
+}
+
+/// Run report.
+#[derive(Debug, Clone)]
+pub struct MofReport {
+    pub series: ProxySeries,
+    /// Best (score, round) found — correctness/steering signal.
+    pub best_score: f32,
+    pub rounds: usize,
+}
+
+/// Generate one ligand feature block (the diffusion-model stand-in).
+pub fn generate_ligands(rng: &mut Rng, candidates: usize, dims: usize) -> Vec<f32> {
+    (0..candidates * dims)
+        .map(|_| (rng.normal() * 0.5) as f32)
+        .collect()
+}
+
+/// Assemble: combine two ligand blocks into a candidate feature block.
+pub fn assemble(a: &[f32], b: &[f32]) -> Vec<f32> {
+    a.iter().zip(b).map(|(x, y)| 0.5 * (x + y)).collect()
+}
+
+/// Number of active proxied objects (objects resident in the channel).
+fn active_proxies(store: &Store) -> i64 {
+    store.connector().len().unwrap_or(0) as i64
+}
+
+/// Run the MOF campaign under a memory mode, sampling active proxies.
+pub fn run(
+    cfg: &MofConfig,
+    reg: &Arc<ModelRegistry>,
+    mode: MemoryMode,
+) -> Result<MofReport> {
+    if cfg.candidates != reg.geometry("mof_candidates").unwrap_or(256) as usize
+        || cfg.dims != reg.geometry("mof_dim").unwrap_or(64) as usize
+    {
+        return Err(Error::Config(
+            "candidates/dims must match the compiled mof_score artifact".into(),
+        ));
+    }
+    let cluster = Arc::new(LocalCluster::new(ClusterConfig {
+        workers: cfg.generators + 1,
+        models: Some(reg.clone()),
+        ..Default::default()
+    }));
+    let store = Store::memory("mof");
+    let executor = StoreExecutor::new(cluster, store.clone());
+    let mut rng = Rng::new(cfg.seed);
+
+    // Scoring direction ("learned" CO2-uptake direction).
+    let weights: Vec<f32> = (0..cfg.dims).map(|_| rng.normal() as f32).collect();
+
+    let t0 = Instant::now();
+    let mut series = ProxySeries::default();
+    let mut sample = |store: &Store| {
+        series.samples.push((
+            t0.elapsed().as_secs_f64(),
+            active_proxies(store),
+            store.gauge().map(|g| g.get()).unwrap_or(0),
+        ));
+    };
+
+    let mut best_score = f32::MIN;
+    // Thinker state: proxies of the current top candidates. In Default
+    // mode these (and every intermediate) accumulate; in Ownership mode
+    // everything but the retained top-k is evicted automatically.
+    let mut retained_default: Vec<crate::proxy::Proxy<F32s>> = Vec::new();
+    let mut retained_owned: Vec<crate::ownership::OwnedProxy<F32s>> =
+        Vec::new();
+
+    for round in 0..cfg.rounds {
+        sample(&store);
+        // 1) Generate ligand blocks in parallel tasks.
+        let gen_futs: Vec<_> = (0..cfg.generators)
+            .map(|g| {
+                let seed = cfg.seed ^ ((round * 131 + g) as u64);
+                let (c, d) = (cfg.candidates, cfg.dims);
+                executor.submit::<F32s>(
+                    vec![TaskArg::Value(Bytes((seed).to_bytes()))],
+                    Box::new(move |_ctx, args| {
+                        let seed: u64 = args[0].get()?;
+                        let mut rng = Rng::new(seed);
+                        Ok(F32s(generate_ligands(&mut rng, c, d)).to_bytes())
+                    }),
+                )
+            })
+            .collect();
+        let ligands: Vec<Vec<f32>> = gen_futs
+            .iter()
+            .map(|f| f.result().map(|x| x.0))
+            .collect::<Result<_>>()?;
+        sample(&store);
+
+        // 2) Assemble pairs (ring) and score each via the PJRT artifact.
+        for i in 0..ligands.len() {
+            let a = &ligands[i];
+            let b = &ligands[(i + 1) % ligands.len()];
+            let candidate = F32s(assemble(a, b));
+
+            // The candidate block is a large object: proxy it per policy.
+            let (cand_arg, owned) = match mode {
+                MemoryMode::Default => {
+                    let p = store.proxy(&candidate)?;
+                    retained_default.push(p.clone());
+                    (TaskArg::Proxied(Bytes(p.to_bytes())), None)
+                }
+                MemoryMode::Ownership => {
+                    let o = store.owned_proxy(&candidate)?;
+                    (executor.make_borrowed(&o)?, Some(o))
+                }
+            };
+            let w_arg = executor.make_arg(&F32s(weights.clone()))?;
+            let fut = executor.submit::<F32s>(
+                vec![cand_arg, w_arg],
+                Box::new(move |ctx, args| {
+                    let reg = ctx
+                        .models
+                        .as_ref()
+                        .ok_or_else(|| Error::Config("no models".into()))?;
+                    let cand: F32s = args[0].get()?;
+                    let w: F32s = args[1].get()?;
+                    let scores = reg.execute_f32(
+                        "mof_score_c256",
+                        &[&cand.0, &w.0],
+                    )?;
+                    Ok(F32s(scores[0].clone()).to_bytes())
+                }),
+            );
+            let scores = fut.result()?.0;
+            let round_best = scores.iter().cloned().fold(f32::MIN, f32::max);
+            best_score = best_score.max(round_best);
+
+            // Thinker retention: keep the candidate if it made the cut.
+            if let Some(o) = owned {
+                if round_best >= best_score {
+                    retained_owned.push(o);
+                    if retained_owned.len() > cfg.top_k {
+                        retained_owned.remove(0); // drop → evict
+                    }
+                }
+                // else: `o` drops here → automatic eviction.
+            }
+            sample(&store);
+        }
+    }
+
+    // Campaign over: the thinker's working set goes out of scope.
+    retained_owned.clear();
+    retained_default.clear(); // plain proxies: targets remain stored!
+    sample(&store);
+
+    Ok(MofReport { series, best_score, rounds: cfg.rounds })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+    use crate::ownership::take_violations;
+    use crate::runtime::default_artifacts_dir;
+
+    fn registry() -> Arc<ModelRegistry> {
+        ModelRegistry::load(default_artifacts_dir()).unwrap()
+    }
+
+    fn quick() -> MofConfig {
+        MofConfig { rounds: 3, generators: 2, top_k: 2, ..Default::default() }
+    }
+
+    #[test]
+    fn assemble_averages() {
+        assert_eq!(assemble(&[2.0, 4.0], &[0.0, 2.0]), vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn default_mode_accumulates_proxies() {
+        let reg = registry();
+        let report = run(&quick(), &reg, MemoryMode::Default).unwrap();
+        assert!(report.best_score.is_finite());
+        assert!(
+            report.series.final_active() >= report.series.peak_active() / 2,
+            "default mode must leak: {:?}",
+            report.series.final_active()
+        );
+        assert!(report.series.final_active() > 0);
+    }
+
+    #[test]
+    fn ownership_mode_evicts_promptly() {
+        let reg = registry();
+        take_violations();
+        let report = run(&quick(), &reg, MemoryMode::Ownership).unwrap();
+        assert!(report.best_score.is_finite());
+        // Executor callbacks run on worker threads; give releases a beat.
+        std::thread::sleep(Duration::from_millis(100));
+        assert!(
+            report.series.final_active() <= 2,
+            "ownership must clean up, final = {}",
+            report.series.final_active()
+        );
+        assert_eq!(take_violations(), 0);
+    }
+
+    #[test]
+    fn both_modes_find_the_same_best_score() {
+        let reg = registry();
+        let a = run(&quick(), &reg, MemoryMode::Default).unwrap();
+        let b = run(&quick(), &reg, MemoryMode::Ownership).unwrap();
+        assert!(
+            (a.best_score - b.best_score).abs() < 1e-5,
+            "{} vs {}",
+            a.best_score,
+            b.best_score
+        );
+    }
+
+    #[test]
+    fn ownership_peak_below_default_final() {
+        let reg = registry();
+        let d = run(&quick(), &reg, MemoryMode::Default).unwrap();
+        let o = run(&quick(), &reg, MemoryMode::Ownership).unwrap();
+        assert!(
+            o.series.peak_active() < d.series.final_active(),
+            "ownership peak {} !< default final {}",
+            o.series.peak_active(),
+            d.series.final_active()
+        );
+    }
+
+    #[test]
+    fn config_mismatch_rejected() {
+        let reg = registry();
+        let bad = MofConfig { candidates: 64, ..quick() };
+        assert!(run(&bad, &reg, MemoryMode::Default).is_err());
+    }
+}

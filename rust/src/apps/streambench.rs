@@ -1,0 +1,355 @@
+//! Fig 6 scenario: scalable stream processing.
+//!
+//! Topology (paper Sec V-B): one producer publishes items of size `d` at
+//! rate `r = (n-1)/s`; a dispatcher consumes the stream and launches an
+//! `s`-second compute task per item on `n-1` workers. Three configurations:
+//!
+//! * [`StreamMode::PubSubInline`] — bulk data rides the event channel and
+//!   passes *through* the dispatcher, which must receive, deserialize,
+//!   re-serialize, and forward every payload (the paper's Redis Pub/Sub
+//!   baseline, bottlenecked at the dispatcher NIC);
+//! * [`StreamMode::StepStore`] — ADIOS2-like: the producer writes bulk
+//!   data to a step-indexed store; the dispatcher forwards only the step
+//!   index, and the *modified worker task code* reads the store directly;
+//! * [`StreamMode::ProxyStream`] — our pattern: events carry proxy
+//!   factories; the dispatcher forwards proxies untouched and workers
+//!   resolve them, with no task-code changes.
+//!
+//! The dispatcher's NIC is a contended [`Link`] (transfers serialize), so
+//! the Fig 6 collapse of the inline baseline at high `d·n` emerges from
+//! the same mechanism as on the paper's testbed.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::broker::BrokerState;
+use crate::codec::Bytes;
+use crate::engine::{ClusterConfig, LocalCluster};
+use crate::error::{Error, Result};
+use crate::netsim::{spin_sleep, Link};
+use crate::rng::Rng;
+use crate::store::Store;
+use crate::stream::{
+    EmbeddedLogPublisher, EmbeddedLogSubscriber, Metadata, StreamConsumer,
+    StreamProducer,
+};
+
+/// Streaming configuration under test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamMode {
+    PubSubInline,
+    StepStore,
+    ProxyStream,
+}
+
+impl StreamMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            StreamMode::PubSubInline => "redis-pubsub",
+            StreamMode::StepStore => "adios-like",
+            StreamMode::ProxyStream => "proxystream",
+        }
+    }
+
+    pub fn all() -> [StreamMode; 3] {
+        [
+            StreamMode::PubSubInline,
+            StreamMode::StepStore,
+            StreamMode::ProxyStream,
+        ]
+    }
+}
+
+/// Workload knobs.
+#[derive(Debug, Clone)]
+pub struct StreamBenchConfig {
+    /// Total workers `n` (1 producer + dispatcher-side pool of `n-1`).
+    pub workers: usize,
+    /// Item size `d` in bytes.
+    pub data_size: usize,
+    /// Simulated compute time `s` per item.
+    pub task_time: Duration,
+    /// Items to push through the system.
+    pub items: usize,
+    /// Dispatcher NIC bandwidth (bytes/s); the paper's dispatcher
+    /// processed ~100 MB/s including (de)serialization.
+    pub dispatcher_bw: f64,
+    pub seed: u64,
+}
+
+impl Default for StreamBenchConfig {
+    fn default() -> Self {
+        StreamBenchConfig {
+            workers: 8,
+            data_size: 1_000_000,
+            task_time: Duration::from_millis(200),
+            items: 50,
+            dispatcher_bw: 1.0e9,
+            seed: 6,
+        }
+    }
+}
+
+/// Result of one configuration run.
+#[derive(Debug, Clone)]
+pub struct StreamBenchReport {
+    pub mode: StreamMode,
+    pub tasks_per_sec: f64,
+    pub elapsed: f64,
+    pub items: usize,
+    /// Payload checksum over all completed tasks (correctness signal).
+    pub checksum: u64,
+}
+
+fn payload_checksum(data: &[u8]) -> u64 {
+    // FNV-1a, cheap and deterministic.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in data {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Run the Fig 6 scenario under one mode.
+pub fn run(cfg: &StreamBenchConfig, mode: StreamMode) -> Result<StreamBenchReport> {
+    if cfg.workers < 2 {
+        return Err(Error::Config("need ≥2 workers".into()));
+    }
+    let n_compute = cfg.workers - 1;
+    let broker = BrokerState::new();
+    let store = Store::memory("streambench");
+    // Dispatcher NIC: contended — concurrent transfers queue.
+    let dispatcher_nic =
+        Arc::new(Link::new(Duration::from_micros(100), cfg.dispatcher_bw));
+    // Store fabric: uncontended full-duplex (workers pull independently).
+    let store_link = Arc::new(
+        Link::new(Duration::from_micros(100), cfg.dispatcher_bw).uncontended(),
+    );
+
+    let cluster = Arc::new(LocalCluster::new(ClusterConfig {
+        workers: n_compute,
+        ..Default::default()
+    }));
+
+    // Producer thread: fixed rate r = n_compute / s.
+    let rate = n_compute as f64 / cfg.task_time.as_secs_f64();
+    let interval = Duration::from_secs_f64(1.0 / rate);
+    let producer_broker = broker.clone();
+    let producer_store = store.clone();
+    let items = cfg.items;
+    let data_size = cfg.data_size;
+    let seed = cfg.seed;
+    let producer = std::thread::Builder::new()
+        .name("producer".into())
+        .spawn(move || -> Result<u64> {
+            let mut producer = StreamProducer::new(
+                EmbeddedLogPublisher::new(producer_broker),
+                Some(producer_store.clone()),
+            );
+            let mut rng = Rng::new(seed);
+            let mut sum = 0u64;
+            let t0 = Instant::now();
+            for i in 0..items {
+                let data = rng.bytes(data_size);
+                sum = sum.wrapping_add(payload_checksum(&data));
+                let mut md = Metadata::new();
+                md.insert("i".into(), i.to_string());
+                match mode {
+                    StreamMode::PubSubInline => {
+                        producer.send_inline("t", &Bytes(data), md)?;
+                    }
+                    StreamMode::StepStore => {
+                        // Write bulk under a step key, announce the step.
+                        let key = format!("step-{i}");
+                        producer_store.put_at(&key, &Bytes(data))?;
+                        md.insert("step".into(), key);
+                        producer.send_marker("t", md)?;
+                    }
+                    StreamMode::ProxyStream => {
+                        producer.send("t", &Bytes(data), md)?;
+                    }
+                }
+                // Rate limit.
+                let target = t0 + interval * (i as u32 + 1);
+                let now = Instant::now();
+                if target > now {
+                    std::thread::sleep(target - now);
+                }
+            }
+            producer.close_topic("t")?;
+            Ok(sum)
+        })
+        .expect("spawn producer");
+
+    // Dispatcher (this thread): consume events, launch compute tasks.
+    let mut consumer =
+        StreamConsumer::new(EmbeddedLogSubscriber::new(broker.clone(), "t"));
+    let completed_sum = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let mut futs = Vec::with_capacity(cfg.items);
+    let task_time = cfg.task_time;
+    loop {
+        let Some(event) =
+            consumer.next_event(Some(Duration::from_secs(60)))?
+        else {
+            break; // end of stream
+        };
+        let sum = completed_sum.clone();
+        let store_link = store_link.clone();
+        let payload: Vec<u8>;
+        let task: crate::engine::TaskFn = match mode {
+            StreamMode::PubSubInline => {
+                // Bulk bytes hit the dispatcher NIC (receive), get
+                // deserialized, then re-serialized into the task payload
+                // (send over the same NIC, contended).
+                let inline =
+                    event.inline.ok_or_else(|| {
+                        Error::Protocol("inline event expected".into())
+                    })?;
+                dispatcher_nic.transfer(inline.0.len()); // broker→dispatcher
+                let data: Bytes = // deserialize (copy)
+                    crate::codec::Decode::from_bytes(&inline.0)?;
+                payload = data.0; // re-serialize into the task payload (copy)
+                dispatcher_nic.transfer(payload.len()); // dispatcher→worker
+                Box::new(move |_ctx, payload| {
+                    spin_sleep(task_time);
+                    sum.fetch_add(
+                        payload_checksum(&payload),
+                        Ordering::Relaxed,
+                    );
+                    Ok(Vec::new())
+                })
+            }
+            StreamMode::StepStore => {
+                // Only the step key crosses the dispatcher.
+                let key = event
+                    .metadata
+                    .get("step")
+                    .ok_or_else(|| Error::Protocol("missing step".into()))?
+                    .clone();
+                let store = store.clone();
+                payload = Vec::new();
+                Box::new(move |_ctx, _| {
+                    spin_sleep(task_time);
+                    // Modified task code: read the store directly.
+                    let data: Bytes = store
+                        .get(&key)?
+                        .ok_or_else(|| Error::NotFound(key.clone()))?;
+                    store_link.transfer(data.0.len());
+                    sum.fetch_add(payload_checksum(&data.0), Ordering::Relaxed);
+                    store.evict(&key)?;
+                    Ok(Vec::new())
+                })
+            }
+            StreamMode::ProxyStream => {
+                // The dispatcher forwards the ~100-byte factory untouched.
+                let factory = event.factory.ok_or_else(|| {
+                    Error::Protocol("factory event expected".into())
+                })?;
+                payload = crate::codec::Encode::to_bytes(&factory);
+                let store = store.clone();
+                Box::new(move |_ctx, payload| {
+                    spin_sleep(task_time);
+                    let factory =
+                        <crate::proxy::Factory as crate::codec::Decode>::from_bytes(
+                            &payload,
+                        )?;
+                    let p: crate::proxy::Proxy<Bytes> =
+                        crate::proxy::Proxy::from_factory(factory.clone());
+                    let data = p.into_inner()?;
+                    store_link.transfer(data.0.len());
+                    sum.fetch_add(payload_checksum(&data.0), Ordering::Relaxed);
+                    store.evict(&factory.key)?;
+                    Ok(Vec::new())
+                })
+            }
+        };
+        futs.push(cluster.submit(task, payload));
+    }
+    for f in &futs {
+        f.wait()?;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let produced_sum = producer
+        .join()
+        .map_err(|_| Error::Task("producer panicked".into()))??;
+    let consumed_sum = completed_sum.load(Ordering::Relaxed);
+    // Every payload must arrive intact regardless of path.
+    let expected = {
+        // producer accumulated with wrapping_add in order; tasks complete
+        // out of order but addition is commutative over wrapping u64.
+        produced_sum
+    };
+    if consumed_sum != expected {
+        return Err(Error::Task(format!(
+            "checksum mismatch: produced {expected:x}, consumed {consumed_sum:x}"
+        )));
+    }
+    Ok(StreamBenchReport {
+        mode,
+        tasks_per_sec: futs.len() as f64 / elapsed,
+        elapsed,
+        items: futs.len(),
+        checksum: consumed_sum,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick(mode: StreamMode) -> StreamBenchReport {
+        run(
+            &StreamBenchConfig {
+                workers: 4,
+                data_size: 200_000,
+                task_time: Duration::from_millis(50),
+                items: 12,
+                dispatcher_bw: 1.0e9,
+                seed: 5,
+            },
+            mode,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn all_modes_complete_all_items_with_matching_checksums() {
+        let reports: Vec<_> = StreamMode::all().iter().map(|&m| quick(m)).collect();
+        for r in &reports {
+            assert_eq!(r.items, 12, "{:?}", r.mode);
+            assert!(r.tasks_per_sec > 0.0);
+        }
+        // Same seed → same data → same checksum across modes.
+        assert_eq!(reports[0].checksum, reports[1].checksum);
+        assert_eq!(reports[1].checksum, reports[2].checksum);
+    }
+
+    #[test]
+    fn proxystream_beats_inline_at_large_sizes() {
+        let cfg = StreamBenchConfig {
+            workers: 6,
+            data_size: 4_000_000,
+            task_time: Duration::from_millis(100),
+            items: 20,
+            dispatcher_bw: 5.0e7, // slow dispatcher NIC to expose the bottleneck
+            seed: 5,
+        };
+        let inline = run(&cfg, StreamMode::PubSubInline).unwrap();
+        let proxy = run(&cfg, StreamMode::ProxyStream).unwrap();
+        assert!(
+            proxy.tasks_per_sec > inline.tasks_per_sec * 1.2,
+            "proxystream {:.1}/s !>> inline {:.1}/s",
+            proxy.tasks_per_sec,
+            inline.tasks_per_sec
+        );
+    }
+
+    #[test]
+    fn rejects_single_worker() {
+        let cfg = StreamBenchConfig { workers: 1, ..Default::default() };
+        assert!(run(&cfg, StreamMode::ProxyStream).is_err());
+    }
+}

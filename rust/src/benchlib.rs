@@ -1,0 +1,195 @@
+//! Bench harness (criterion is not available offline; this is the
+//! replacement used by every `rust/benches/fig*.rs` target).
+//!
+//! Provides warmup + timed sampling with summary statistics, a
+//! paper-vs-measured comparison table renderer, and CSV output under
+//! `results/`. Benches are `harness = false` binaries that call into this
+//! module, so `cargo bench` runs them all.
+
+use std::time::{Duration, Instant};
+
+use crate::metrics::{write_csv, Stats};
+
+/// Time `f` over `samples` runs after `warmup` runs; returns per-run
+/// seconds.
+pub fn sample<T>(
+    warmup: usize,
+    samples: usize,
+    mut f: impl FnMut() -> T,
+) -> Vec<f64> {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    (0..samples)
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// Run-once measurement (for long end-to-end scenarios).
+pub fn once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// A bench report accumulating rows for stdout + CSV.
+pub struct Bench {
+    name: String,
+    header: String,
+    rows: Vec<String>,
+    t0: Instant,
+}
+
+impl Bench {
+    /// Start a bench named after the figure it regenerates.
+    pub fn new(name: &str, csv_header: &str) -> Bench {
+        println!("\n=== bench: {name} ===");
+        Bench {
+            name: name.to_string(),
+            header: csv_header.to_string(),
+            rows: Vec::new(),
+            t0: Instant::now(),
+        }
+    }
+
+    /// Log a measured row (also printed).
+    pub fn row(&mut self, csv_row: String) {
+        println!("  {}", csv_row.replace(',', "\t"));
+        self.rows.push(csv_row);
+    }
+
+    /// Print an annotation line (not part of the CSV).
+    pub fn note(&self, msg: &str) {
+        println!("  # {msg}");
+    }
+
+    /// Print a paper-vs-measured comparison line.
+    pub fn compare(&self, what: &str, paper: &str, measured: &str, holds: bool) {
+        println!(
+            "  [{}] {what}: paper={paper} measured={measured}",
+            if holds { "OK" } else { "DIVERGES" }
+        );
+    }
+
+    /// Summarize samples inline.
+    pub fn stats(&mut self, label: &str, seconds: &[f64]) -> Stats {
+        let s = Stats::from(seconds);
+        println!("  {label}: {s}");
+        s
+    }
+
+    /// Write the CSV and finish.
+    pub fn finish(self) {
+        let path = format!("results/{}.csv", self.name);
+        if let Err(e) = write_csv(&path, &self.header, &self.rows) {
+            eprintln!("  (csv write failed: {e})");
+        } else {
+            println!(
+                "  wrote {path} ({} rows) in {:.1}s",
+                self.rows.len(),
+                self.t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+}
+
+/// Standard scale knob: benches honour `PROXYSTORE_BENCH_SCALE` ∈
+/// {smoke, default, full} so CI smoke runs stay fast.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Smoke,
+    Default,
+    Full,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        match std::env::var("PROXYSTORE_BENCH_SCALE")
+            .unwrap_or_default()
+            .as_str()
+        {
+            "smoke" => Scale::Smoke,
+            "full" => Scale::Full,
+            _ => Scale::Default,
+        }
+    }
+
+    /// Pick a value by scale.
+    pub fn pick<T: Copy>(&self, smoke: T, default: T, full: T) -> T {
+        match self {
+            Scale::Smoke => smoke,
+            Scale::Default => default,
+            Scale::Full => full,
+        }
+    }
+}
+
+/// Convenience: seconds → human string.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Convenience: bytes → human string.
+pub fn fmt_bytes(b: usize) -> String {
+    if b >= 1_000_000 {
+        format!("{:.0}MB", b as f64 / 1e6)
+    } else if b >= 1_000 {
+        format!("{:.0}kB", b as f64 / 1e3)
+    } else {
+        format!("{b}B")
+    }
+}
+
+/// Busy-wait helper exposed to benches.
+pub fn spin(d: Duration) {
+    crate::netsim::spin_sleep(d);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_returns_right_count() {
+        let xs = sample(2, 5, || 1 + 1);
+        assert_eq!(xs.len(), 5);
+        assert!(xs.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn once_measures() {
+        let (v, dt) = once(|| {
+            spin(Duration::from_millis(10));
+            7
+        });
+        assert_eq!(v, 7);
+        assert!(dt >= 0.009);
+    }
+
+    #[test]
+    fn scale_pick() {
+        assert_eq!(Scale::Smoke.pick(1, 2, 3), 1);
+        assert_eq!(Scale::Default.pick(1, 2, 3), 2);
+        assert_eq!(Scale::Full.pick(1, 2, 3), 3);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_secs(2.5), "2.50s");
+        assert_eq!(fmt_secs(0.0025), "2.50ms");
+        assert_eq!(fmt_secs(0.00005), "50.0us");
+        assert_eq!(fmt_bytes(5), "5B");
+        assert_eq!(fmt_bytes(5_000), "5kB");
+        assert_eq!(fmt_bytes(5_000_000), "5MB");
+    }
+}

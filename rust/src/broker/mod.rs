@@ -1,0 +1,218 @@
+//! Message-broker substrate (Kafka stand-in).
+//!
+//! ProxyStream needs a low-latency event channel that is decoupled from
+//! bulk data. The paper evaluates Kafka, Redis pub/sub and ZeroMQ shims;
+//! the redis-sim pub/sub and queue modes live in [`crate::kv`], and this
+//! module provides the Kafka-like third option: durable append-only topic
+//! logs with offset-based consumption and consumer-group commits, usable
+//! embedded ([`BrokerState`]) or over TCP ([`BrokerServer`]/
+//! [`BrokerClient`]).
+//!
+//! Semantics: per-topic total order, at-least-once delivery with consumer
+//! committed offsets, blocking fetch with timeout (long poll).
+
+mod server;
+mod state;
+
+pub use server::{BrokerClient, BrokerServer};
+pub use state::{BrokerState, LogEntry};
+
+use crate::codec::{Bytes, Decode, Encode, Reader, get_varint, put_varint};
+use crate::error::{Error, Result};
+
+/// Broker wire requests.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BrokerRequest {
+    /// Append to a topic; replies `Offset`.
+    Produce { topic: String, payload: Bytes },
+    /// Fetch up to `max` entries starting at `offset`, waiting up to
+    /// `timeout_ms` for at least one (0 = no wait).
+    Fetch { topic: String, offset: u64, max: u32, timeout_ms: u64 },
+    /// Commit a consumer-group offset.
+    Commit { group: String, topic: String, offset: u64 },
+    /// Read a committed offset; replies `Offset` (0 if none).
+    Committed { group: String, topic: String },
+    /// Current end-of-log offset; replies `Offset`.
+    EndOffset { topic: String },
+    /// List topic names.
+    Topics,
+    Ping,
+}
+
+/// Broker wire replies.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BrokerResponse {
+    Ok,
+    Offset(u64),
+    Entries(Vec<LogEntry>),
+    TopicList(Vec<String>),
+    Error(String),
+}
+
+impl Encode for LogEntry {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.offset.encode(buf);
+        self.payload.encode(buf);
+    }
+}
+impl Decode for LogEntry {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(LogEntry {
+            offset: Decode::decode(r)?,
+            payload: Decode::decode(r)?,
+        })
+    }
+}
+
+impl Encode for BrokerRequest {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            BrokerRequest::Produce { topic, payload } => {
+                put_varint(buf, 0);
+                topic.encode(buf);
+                payload.encode(buf);
+            }
+            BrokerRequest::Fetch { topic, offset, max, timeout_ms } => {
+                put_varint(buf, 1);
+                topic.encode(buf);
+                offset.encode(buf);
+                max.encode(buf);
+                timeout_ms.encode(buf);
+            }
+            BrokerRequest::Commit { group, topic, offset } => {
+                put_varint(buf, 2);
+                group.encode(buf);
+                topic.encode(buf);
+                offset.encode(buf);
+            }
+            BrokerRequest::Committed { group, topic } => {
+                put_varint(buf, 3);
+                group.encode(buf);
+                topic.encode(buf);
+            }
+            BrokerRequest::EndOffset { topic } => {
+                put_varint(buf, 4);
+                topic.encode(buf);
+            }
+            BrokerRequest::Topics => put_varint(buf, 5),
+            BrokerRequest::Ping => put_varint(buf, 6),
+        }
+    }
+}
+
+impl Decode for BrokerRequest {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(match get_varint(r)? {
+            0 => BrokerRequest::Produce {
+                topic: Decode::decode(r)?,
+                payload: Decode::decode(r)?,
+            },
+            1 => BrokerRequest::Fetch {
+                topic: Decode::decode(r)?,
+                offset: Decode::decode(r)?,
+                max: Decode::decode(r)?,
+                timeout_ms: Decode::decode(r)?,
+            },
+            2 => BrokerRequest::Commit {
+                group: Decode::decode(r)?,
+                topic: Decode::decode(r)?,
+                offset: Decode::decode(r)?,
+            },
+            3 => BrokerRequest::Committed {
+                group: Decode::decode(r)?,
+                topic: Decode::decode(r)?,
+            },
+            4 => BrokerRequest::EndOffset { topic: Decode::decode(r)? },
+            5 => BrokerRequest::Topics,
+            6 => BrokerRequest::Ping,
+            t => {
+                return Err(Error::Protocol(format!("bad broker req tag {t}")))
+            }
+        })
+    }
+}
+
+impl Encode for BrokerResponse {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            BrokerResponse::Ok => put_varint(buf, 0),
+            BrokerResponse::Offset(v) => {
+                put_varint(buf, 1);
+                v.encode(buf);
+            }
+            BrokerResponse::Entries(v) => {
+                put_varint(buf, 2);
+                v.encode(buf);
+            }
+            BrokerResponse::TopicList(v) => {
+                put_varint(buf, 3);
+                v.encode(buf);
+            }
+            BrokerResponse::Error(msg) => {
+                put_varint(buf, 4);
+                msg.encode(buf);
+            }
+        }
+    }
+}
+
+impl Decode for BrokerResponse {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(match get_varint(r)? {
+            0 => BrokerResponse::Ok,
+            1 => BrokerResponse::Offset(Decode::decode(r)?),
+            2 => BrokerResponse::Entries(Decode::decode(r)?),
+            3 => BrokerResponse::TopicList(Decode::decode(r)?),
+            4 => BrokerResponse::Error(Decode::decode(r)?),
+            t => {
+                return Err(Error::Protocol(format!("bad broker resp tag {t}")))
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broker_frames_roundtrip() {
+        for req in [
+            BrokerRequest::Produce {
+                topic: "t".into(),
+                payload: Bytes(vec![1, 2]),
+            },
+            BrokerRequest::Fetch {
+                topic: "t".into(),
+                offset: 42,
+                max: 10,
+                timeout_ms: 100,
+            },
+            BrokerRequest::Commit {
+                group: "g".into(),
+                topic: "t".into(),
+                offset: 7,
+            },
+            BrokerRequest::Committed { group: "g".into(), topic: "t".into() },
+            BrokerRequest::EndOffset { topic: "t".into() },
+            BrokerRequest::Topics,
+            BrokerRequest::Ping,
+        ] {
+            let back = BrokerRequest::from_bytes(&req.to_bytes()).unwrap();
+            assert_eq!(req, back);
+        }
+        for resp in [
+            BrokerResponse::Ok,
+            BrokerResponse::Offset(9),
+            BrokerResponse::Entries(vec![LogEntry {
+                offset: 1,
+                payload: Bytes(vec![3]),
+            }]),
+            BrokerResponse::TopicList(vec!["a".into()]),
+            BrokerResponse::Error("x".into()),
+        ] {
+            let back = BrokerResponse::from_bytes(&resp.to_bytes()).unwrap();
+            assert_eq!(resp, back);
+        }
+    }
+}

@@ -1,0 +1,298 @@
+//! TCP front-end + client for the broker engine.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::codec::Bytes;
+use crate::error::{Error, Result};
+use crate::kv::{read_frame, write_frame};
+
+use super::state::{BrokerState, LogEntry};
+use super::{BrokerRequest, BrokerResponse};
+
+/// A running broker server. Dropping the handle shuts it down.
+pub struct BrokerServer {
+    pub addr: SocketAddr,
+    state: BrokerState,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl BrokerServer {
+    pub fn spawn() -> Result<BrokerServer> {
+        Self::spawn_with_state(BrokerState::new())
+    }
+
+    pub fn spawn_with_state(state: BrokerState) -> Result<BrokerServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let state2 = state.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("broker-accept-{}", addr.port()))
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let st = state2.clone();
+                            std::thread::Builder::new()
+                                .name("broker-conn".into())
+                                .spawn(move || {
+                                    let _ = serve_connection(stream, st);
+                                })
+                                .expect("spawn broker-conn");
+                        }
+                        Err(ref e)
+                            if e.kind() == std::io::ErrorKind::WouldBlock =>
+                        {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn broker-accept");
+        Ok(BrokerServer {
+            addr,
+            state,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn state(&self) -> &BrokerState {
+        &self.state
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for BrokerServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_connection(stream: TcpStream, state: BrokerState) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let mut reader = std::io::BufReader::with_capacity(1 << 18, stream.try_clone()?);
+    let mut writer = std::io::BufWriter::with_capacity(1 << 18, stream);
+    loop {
+        let req: Option<BrokerRequest> = read_frame(&mut reader)?;
+        let Some(req) = req else { return Ok(()) };
+        let resp = match req {
+            BrokerRequest::Produce { topic, payload } => {
+                BrokerResponse::Offset(state.produce(&topic, payload))
+            }
+            BrokerRequest::Fetch { topic, offset, max, timeout_ms } => {
+                BrokerResponse::Entries(state.fetch(
+                    &topic,
+                    offset,
+                    max,
+                    Duration::from_millis(timeout_ms),
+                ))
+            }
+            BrokerRequest::Commit { group, topic, offset } => {
+                state.commit(&group, &topic, offset);
+                BrokerResponse::Ok
+            }
+            BrokerRequest::Committed { group, topic } => {
+                BrokerResponse::Offset(state.committed(&group, &topic))
+            }
+            BrokerRequest::EndOffset { topic } => {
+                BrokerResponse::Offset(state.end_offset(&topic))
+            }
+            BrokerRequest::Topics => BrokerResponse::TopicList(state.topics()),
+            BrokerRequest::Ping => BrokerResponse::Ok,
+        };
+        write_frame(&mut writer, &resp)?;
+    }
+}
+
+/// Blocking broker client (one request in flight).
+pub struct BrokerClient {
+    conn: Mutex<(
+        std::io::BufReader<TcpStream>,
+        std::io::BufWriter<TcpStream>,
+    )>,
+    pub addr: SocketAddr,
+}
+
+impl BrokerClient {
+    pub fn connect(addr: SocketAddr) -> Result<BrokerClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(BrokerClient {
+            conn: Mutex::new((
+                std::io::BufReader::with_capacity(1 << 18, stream.try_clone()?),
+                std::io::BufWriter::with_capacity(1 << 18, stream),
+            )),
+            addr,
+        })
+    }
+
+    fn call(&self, req: BrokerRequest) -> Result<BrokerResponse> {
+        let mut conn = self.conn.lock().unwrap();
+        write_frame(&mut conn.1, &req)?;
+        match read_frame::<_, BrokerResponse>(&mut conn.0)? {
+            Some(BrokerResponse::Error(msg)) => Err(Error::Protocol(msg)),
+            Some(resp) => Ok(resp),
+            None => Err(Error::Connector("broker closed connection".into())),
+        }
+    }
+
+    pub fn ping(&self) -> Result<()> {
+        match self.call(BrokerRequest::Ping)? {
+            BrokerResponse::Ok => Ok(()),
+            other => Err(Error::Protocol(format!("bad ping reply {other:?}"))),
+        }
+    }
+
+    pub fn produce(&self, topic: &str, payload: Bytes) -> Result<u64> {
+        match self.call(BrokerRequest::Produce { topic: topic.into(), payload })? {
+            BrokerResponse::Offset(o) => Ok(o),
+            other => Err(Error::Protocol(format!("bad produce reply {other:?}"))),
+        }
+    }
+
+    pub fn fetch(
+        &self,
+        topic: &str,
+        offset: u64,
+        max: u32,
+        timeout: Duration,
+    ) -> Result<Vec<LogEntry>> {
+        match self.call(BrokerRequest::Fetch {
+            topic: topic.into(),
+            offset,
+            max,
+            timeout_ms: timeout.as_millis() as u64,
+        })? {
+            BrokerResponse::Entries(v) => Ok(v),
+            other => Err(Error::Protocol(format!("bad fetch reply {other:?}"))),
+        }
+    }
+
+    pub fn commit(&self, group: &str, topic: &str, offset: u64) -> Result<()> {
+        match self.call(BrokerRequest::Commit {
+            group: group.into(),
+            topic: topic.into(),
+            offset,
+        })? {
+            BrokerResponse::Ok => Ok(()),
+            other => Err(Error::Protocol(format!("bad commit reply {other:?}"))),
+        }
+    }
+
+    pub fn committed(&self, group: &str, topic: &str) -> Result<u64> {
+        match self.call(BrokerRequest::Committed {
+            group: group.into(),
+            topic: topic.into(),
+        })? {
+            BrokerResponse::Offset(o) => Ok(o),
+            other => {
+                Err(Error::Protocol(format!("bad committed reply {other:?}")))
+            }
+        }
+    }
+
+    pub fn end_offset(&self, topic: &str) -> Result<u64> {
+        match self.call(BrokerRequest::EndOffset { topic: topic.into() })? {
+            BrokerResponse::Offset(o) => Ok(o),
+            other => {
+                Err(Error::Protocol(format!("bad end_offset reply {other:?}")))
+            }
+        }
+    }
+
+    pub fn topics(&self) -> Result<Vec<String>> {
+        match self.call(BrokerRequest::Topics)? {
+            BrokerResponse::TopicList(v) => Ok(v),
+            other => Err(Error::Protocol(format!("bad topics reply {other:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produce_fetch_over_tcp() {
+        let server = BrokerServer::spawn().unwrap();
+        let c = BrokerClient::connect(server.addr).unwrap();
+        c.ping().unwrap();
+        assert_eq!(c.produce("t", Bytes(vec![1])).unwrap(), 0);
+        assert_eq!(c.produce("t", Bytes(vec![2])).unwrap(), 1);
+        let entries = c.fetch("t", 0, 10, Duration::ZERO).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[1].payload, Bytes(vec![2]));
+        assert_eq!(c.end_offset("t").unwrap(), 2);
+        assert_eq!(c.topics().unwrap(), vec!["t".to_string()]);
+    }
+
+    #[test]
+    fn long_poll_across_clients() {
+        let server = BrokerServer::spawn().unwrap();
+        let addr = server.addr;
+        let h = std::thread::spawn(move || {
+            let c = BrokerClient::connect(addr).unwrap();
+            c.fetch("t", 0, 1, Duration::from_secs(5)).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        let p = BrokerClient::connect(server.addr).unwrap();
+        p.produce("t", Bytes(vec![7])).unwrap();
+        let got = h.join().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].payload, Bytes(vec![7]));
+    }
+
+    #[test]
+    fn consumer_group_commits() {
+        let server = BrokerServer::spawn().unwrap();
+        let c = BrokerClient::connect(server.addr).unwrap();
+        assert_eq!(c.committed("g", "t").unwrap(), 0);
+        c.commit("g", "t", 3).unwrap();
+        assert_eq!(c.committed("g", "t").unwrap(), 3);
+    }
+
+    #[test]
+    fn multi_consumer_sees_same_order() {
+        let server = BrokerServer::spawn().unwrap();
+        let p = BrokerClient::connect(server.addr).unwrap();
+        for i in 0..20u8 {
+            p.produce("t", Bytes(vec![i])).unwrap();
+        }
+        let addr = server.addr;
+        let readers: Vec<_> = (0..3)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let c = BrokerClient::connect(addr).unwrap();
+                    let mut seen = Vec::new();
+                    let mut off = 0;
+                    while seen.len() < 20 {
+                        for e in
+                            c.fetch("t", off, 7, Duration::from_secs(1)).unwrap()
+                        {
+                            off = e.offset + 1;
+                            seen.push(e.payload.0[0]);
+                        }
+                    }
+                    seen
+                })
+            })
+            .collect();
+        for r in readers {
+            assert_eq!(r.join().unwrap(), (0..20u8).collect::<Vec<_>>());
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! Broker storage engine: append-only topic logs + consumer-group offsets.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::codec::Bytes;
+use crate::metrics::StoreBytes;
+
+/// One log entry (offset is topic-local and dense from 0).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogEntry {
+    pub offset: u64,
+    pub payload: Bytes,
+}
+
+#[derive(Default)]
+struct Inner {
+    topics: HashMap<String, Vec<LogEntry>>,
+    commits: HashMap<(String, String), u64>, // (group, topic) -> offset
+}
+
+/// Embedded broker engine; cheap to clone.
+#[derive(Clone)]
+pub struct BrokerState {
+    inner: Arc<(Mutex<Inner>, Condvar)>,
+    /// Bytes resident across all topic logs (event metadata is small, but
+    /// the Fig 6 "data through the broker" baseline pushes bulk here).
+    pub gauge: Arc<StoreBytes>,
+}
+
+impl Default for BrokerState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BrokerState {
+    pub fn new() -> Self {
+        BrokerState {
+            inner: Arc::new((Mutex::new(Inner::default()), Condvar::new())),
+            gauge: StoreBytes::new(),
+        }
+    }
+
+    /// Append; returns the assigned offset.
+    pub fn produce(&self, topic: &str, payload: Bytes) -> u64 {
+        let (m, cv) = &*self.inner;
+        let mut inner = m.lock().unwrap();
+        self.gauge.add(payload.0.len());
+        let log = inner.topics.entry(topic.to_string()).or_default();
+        let offset = log.len() as u64;
+        log.push(LogEntry { offset, payload });
+        cv.notify_all();
+        offset
+    }
+
+    /// Fetch up to `max` entries from `offset`, long-polling up to
+    /// `timeout` for at least one entry (`Duration::ZERO` = no wait).
+    pub fn fetch(
+        &self,
+        topic: &str,
+        offset: u64,
+        max: u32,
+        timeout: Duration,
+    ) -> Vec<LogEntry> {
+        let (m, cv) = &*self.inner;
+        let deadline = Instant::now() + timeout;
+        let mut inner = m.lock().unwrap();
+        loop {
+            let available = inner
+                .topics
+                .get(topic)
+                .map(|log| log.len() as u64)
+                .unwrap_or(0);
+            if available > offset {
+                let log = &inner.topics[topic];
+                let start = offset as usize;
+                let end = (offset as usize + max as usize).min(log.len());
+                return log[start..end].to_vec();
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Vec::new();
+            }
+            let (guard, _) = cv.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+        }
+    }
+
+    pub fn end_offset(&self, topic: &str) -> u64 {
+        let (m, _) = &*self.inner;
+        let inner = m.lock().unwrap();
+        inner
+            .topics
+            .get(topic)
+            .map(|log| log.len() as u64)
+            .unwrap_or(0)
+    }
+
+    pub fn commit(&self, group: &str, topic: &str, offset: u64) {
+        let (m, _) = &*self.inner;
+        let mut inner = m.lock().unwrap();
+        inner
+            .commits
+            .insert((group.to_string(), topic.to_string()), offset);
+    }
+
+    pub fn committed(&self, group: &str, topic: &str) -> u64 {
+        let (m, _) = &*self.inner;
+        let inner = m.lock().unwrap();
+        inner
+            .commits
+            .get(&(group.to_string(), topic.to_string()))
+            .copied()
+            .unwrap_or(0)
+    }
+
+    pub fn topics(&self) -> Vec<String> {
+        let (m, _) = &*self.inner;
+        let inner = m.lock().unwrap();
+        let mut v: Vec<String> = inner.topics.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Truncate entries below `offset` on a topic (retention), returning
+    /// freed bytes. Offsets remain stable: the log keeps logical offsets.
+    pub fn truncate(&self, topic: &str, below: u64) -> usize {
+        let (m, _) = &*self.inner;
+        let mut inner = m.lock().unwrap();
+        let Some(log) = inner.topics.get_mut(topic) else { return 0 };
+        let mut freed = 0;
+        // Replace truncated payloads with empty bytes, keeping offsets dense.
+        for e in log.iter_mut().filter(|e| e.offset < below) {
+            freed += e.payload.0.len();
+            e.payload = Bytes(Vec::new());
+        }
+        self.gauge.sub(freed);
+        freed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produce_assigns_dense_offsets() {
+        let b = BrokerState::new();
+        assert_eq!(b.produce("t", Bytes(vec![1])), 0);
+        assert_eq!(b.produce("t", Bytes(vec![2])), 1);
+        assert_eq!(b.produce("u", Bytes(vec![3])), 0);
+        assert_eq!(b.end_offset("t"), 2);
+        assert_eq!(b.topics(), vec!["t".to_string(), "u".to_string()]);
+    }
+
+    #[test]
+    fn fetch_returns_in_order() {
+        let b = BrokerState::new();
+        for i in 0..5u8 {
+            b.produce("t", Bytes(vec![i]));
+        }
+        let entries = b.fetch("t", 1, 2, Duration::ZERO);
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].offset, 1);
+        assert_eq!(entries[1].payload, Bytes(vec![2]));
+        assert!(b.fetch("t", 5, 10, Duration::ZERO).is_empty());
+    }
+
+    #[test]
+    fn fetch_long_poll_wakes_on_produce() {
+        let b = BrokerState::new();
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || {
+            b2.fetch("t", 0, 10, Duration::from_secs(5))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        b.produce("t", Bytes(vec![9]));
+        let got = h.join().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].payload, Bytes(vec![9]));
+    }
+
+    #[test]
+    fn fetch_timeout_returns_empty() {
+        let b = BrokerState::new();
+        let t0 = Instant::now();
+        let got = b.fetch("t", 0, 1, Duration::from_millis(25));
+        assert!(got.is_empty());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn commits_per_group() {
+        let b = BrokerState::new();
+        assert_eq!(b.committed("g1", "t"), 0);
+        b.commit("g1", "t", 5);
+        b.commit("g2", "t", 2);
+        assert_eq!(b.committed("g1", "t"), 5);
+        assert_eq!(b.committed("g2", "t"), 2);
+    }
+
+    #[test]
+    fn truncate_frees_bytes_keeps_offsets() {
+        let b = BrokerState::new();
+        for _ in 0..4 {
+            b.produce("t", Bytes(vec![0; 100]));
+        }
+        assert_eq!(b.gauge.get(), 400);
+        let freed = b.truncate("t", 2);
+        assert_eq!(freed, 200);
+        assert_eq!(b.gauge.get(), 200);
+        // Offsets still line up after truncation.
+        let entries = b.fetch("t", 2, 10, Duration::ZERO);
+        assert_eq!(entries[0].offset, 2);
+        assert_eq!(entries[0].payload.0.len(), 100);
+    }
+}

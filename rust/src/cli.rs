@@ -1,0 +1,114 @@
+//! Hand-rolled CLI argument parsing (clap is not in the offline registry).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! subcommands — the subset the `proxystore` launcher needs.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line: a subcommand plus options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().expect("peeked");
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(arg);
+            } else {
+                return Err(Error::Config(format!(
+                    "unexpected positional argument: {arg}"
+                )));
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed option with default.
+    pub fn get_parse<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!("--{name}: cannot parse {v:?}"))
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("fig5 --tasks 8 --size=10000000 --verbose");
+        assert_eq!(a.command.as_deref(), Some("fig5"));
+        assert_eq!(a.get("tasks"), Some("8"));
+        assert_eq!(a.get("size"), Some("10000000"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get_parse("tasks", 0usize).unwrap(), 8);
+        assert_eq!(a.get_parse("missing", 42u32).unwrap(), 42);
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = parse("x --n abc");
+        assert!(a.get_parse::<u32>("n", 0).is_err());
+    }
+
+    #[test]
+    fn extra_positional_rejected() {
+        assert!(
+            Args::parse(["a".to_string(), "b".to_string()]).is_err()
+        );
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("serve --port 9000 --quiet");
+        assert_eq!(a.get("port"), Some("9000"));
+        assert!(a.flag("quiet"));
+    }
+}

@@ -1,0 +1,461 @@
+//! Binary serialization substrate (the stack's "pickle").
+//!
+//! The offline registry has no serde, so proxystore ships its own compact
+//! little-endian codec: fixed-width primitives, LEB128 varint lengths, and
+//! derive-free [`Encode`]/[`Decode`] traits implemented over the std
+//! containers the stack uses. All wire formats (KV protocol, broker frames,
+//! stream events, proxy factories, task payloads) are built from these
+//! primitives, so a codec round-trip property test covers the whole stack's
+//! framing.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Serialize `self` onto the end of `buf`.
+pub trait Encode {
+    fn encode(&self, buf: &mut Vec<u8>);
+
+    /// Convenience: encode into a fresh buffer.
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        self.encode(&mut buf);
+        buf
+    }
+}
+
+/// Deserialize a value from a [`Reader`].
+pub trait Decode: Sized {
+    fn decode(r: &mut Reader<'_>) -> Result<Self>;
+
+    /// Convenience: decode from a complete buffer, requiring full consumption.
+    fn from_bytes(data: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(data);
+        let v = Self::decode(&mut r)?;
+        if !r.is_empty() {
+            return Err(Error::Codec(format!(
+                "{} trailing bytes after decode",
+                r.remaining()
+            )));
+        }
+        Ok(v)
+    }
+
+    /// Decode from an owned buffer. The default delegates to
+    /// [`Decode::from_bytes`]; bulk types override it to reuse the
+    /// allocation (e.g. [`Bytes`] shifts off its header in place), which
+    /// is the zero-copy tail of proxy resolution on single-owner blobs.
+    fn from_owned(data: Vec<u8>) -> Result<Self> {
+        Self::from_bytes(&data)
+    }
+}
+
+/// Cursor over a byte slice.
+pub struct Reader<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        Reader { data, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.data.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Take `n` raw bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::Codec(format!(
+                "need {n} bytes, have {}",
+                self.remaining()
+            )));
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn take_array<const N: usize>(&mut self) -> Result<[u8; N]> {
+        let s = self.take(N)?;
+        let mut a = [0u8; N];
+        a.copy_from_slice(s);
+        Ok(a)
+    }
+}
+
+// --------------------------------------------------------------------------
+// Varints (LEB128) for lengths and discriminants.
+// --------------------------------------------------------------------------
+
+/// Append a LEB128 varint.
+pub fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+/// Read a LEB128 varint.
+pub fn get_varint(r: &mut Reader<'_>) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let byte = r.take(1)?[0];
+        if shift >= 64 {
+            return Err(Error::Codec("varint overflow".into()));
+        }
+        v |= u64::from(byte & 0x7f) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+fn get_len(r: &mut Reader<'_>) -> Result<usize> {
+    let v = get_varint(r)?;
+    // Defensive cap: decoding never allocates more than the input could
+    // plausibly describe (protects servers from hostile length prefixes).
+    if v > (r.remaining() as u64).saturating_mul(8).saturating_add(1 << 20) {
+        return Err(Error::Codec(format!("length {v} exceeds input")));
+    }
+    Ok(v as usize)
+}
+
+// --------------------------------------------------------------------------
+// Primitive impls
+// --------------------------------------------------------------------------
+
+macro_rules! impl_fixed {
+    ($($t:ty),*) => {$(
+        impl Encode for $t {
+            fn encode(&self, buf: &mut Vec<u8>) {
+                buf.extend_from_slice(&self.to_le_bytes());
+            }
+        }
+        impl Decode for $t {
+            fn decode(r: &mut Reader<'_>) -> Result<Self> {
+                Ok(<$t>::from_le_bytes(r.take_array()?))
+            }
+        }
+    )*};
+}
+
+impl_fixed!(u8, u16, u32, u64, i8, i16, i32, i64, f32, f64);
+
+impl Encode for usize {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        put_varint(buf, *self as u64);
+    }
+}
+impl Decode for usize {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(get_varint(r)? as usize)
+    }
+}
+
+impl Encode for bool {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.push(u8::from(*self));
+    }
+}
+impl Decode for bool {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        match r.take(1)?[0] {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(Error::Codec(format!("invalid bool byte {b}"))),
+        }
+    }
+}
+
+impl Encode for String {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        put_varint(buf, self.len() as u64);
+        buf.extend_from_slice(self.as_bytes());
+    }
+}
+impl Decode for String {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let n = get_len(r)?;
+        let raw = r.take(n)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|e| Error::Codec(format!("invalid utf8: {e}")))
+    }
+}
+
+impl Encode for &str {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        put_varint(buf, self.len() as u64);
+        buf.extend_from_slice(self.as_bytes());
+    }
+}
+
+/// Bulk byte payload with memcpy encoding (vs the element-wise `Vec<T>`).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Bytes(pub Vec<u8>);
+
+impl Encode for Bytes {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.reserve(self.0.len() + 10);
+        put_varint(buf, self.0.len() as u64);
+        buf.extend_from_slice(&self.0);
+    }
+
+    fn to_bytes(&self) -> Vec<u8> {
+        // Exact-capacity fast path: one allocation, one memcpy.
+        let mut buf = Vec::with_capacity(self.0.len() + 10);
+        self.encode(&mut buf);
+        buf
+    }
+}
+impl Decode for Bytes {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let n = get_len(r)?;
+        Ok(Bytes(r.take(n)?.to_vec()))
+    }
+
+    fn from_owned(mut data: Vec<u8>) -> Result<Self> {
+        // Validate the header, then shift it off in place (memmove, no
+        // allocation) instead of copying the payload out.
+        let header_len = {
+            let mut r = Reader::new(&data);
+            let n = get_len(&mut r)?;
+            let h = data.len() - r.remaining();
+            if r.remaining() != n {
+                return Err(Error::Codec(format!(
+                    "bytes payload {} != declared {n}",
+                    r.remaining()
+                )));
+            }
+            h
+        };
+        data.drain(..header_len);
+        Ok(Bytes(data))
+    }
+}
+
+impl<T: Encode> Encode for Vec<T> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        put_varint(buf, self.len() as u64);
+        for item in self {
+            item.encode(buf);
+        }
+    }
+}
+impl<T: Decode> Decode for Vec<T> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let n = get_len(r)?;
+        let mut v = Vec::with_capacity(n.min(r.remaining()));
+        for _ in 0..n {
+            v.push(T::decode(r)?);
+        }
+        Ok(v)
+    }
+}
+
+impl<T: Encode> Encode for Option<T> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            None => buf.push(0),
+            Some(v) => {
+                buf.push(1);
+                v.encode(buf);
+            }
+        }
+    }
+}
+impl<T: Decode> Decode for Option<T> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        match r.take(1)?[0] {
+            0 => Ok(None),
+            1 => Ok(Some(T::decode(r)?)),
+            b => Err(Error::Codec(format!("invalid option tag {b}"))),
+        }
+    }
+}
+
+impl<K: Encode + Ord, V: Encode> Encode for BTreeMap<K, V> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        put_varint(buf, self.len() as u64);
+        for (k, v) in self {
+            k.encode(buf);
+            v.encode(buf);
+        }
+    }
+}
+impl<K: Decode + Ord, V: Decode> Decode for BTreeMap<K, V> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let n = get_len(r)?;
+        let mut m = BTreeMap::new();
+        for _ in 0..n {
+            let k = K::decode(r)?;
+            let v = V::decode(r)?;
+            m.insert(k, v);
+        }
+        Ok(m)
+    }
+}
+
+macro_rules! impl_tuple {
+    ($($name:ident : $idx:tt),+) => {
+        impl<$($name: Encode),+> Encode for ($($name,)+) {
+            fn encode(&self, buf: &mut Vec<u8>) {
+                $(self.$idx.encode(buf);)+
+            }
+        }
+        impl<$($name: Decode),+> Decode for ($($name,)+) {
+            fn decode(r: &mut Reader<'_>) -> Result<Self> {
+                Ok(($($name::decode(r)?,)+))
+            }
+        }
+    };
+}
+
+impl_tuple!(A: 0);
+impl_tuple!(A: 0, B: 1);
+impl_tuple!(A: 0, B: 1, C: 2);
+impl_tuple!(A: 0, B: 1, C: 2, D: 3);
+
+/// Encode a `Vec<f32>` as raw little-endian words (bulk numeric payloads;
+/// 4 bytes/elem, memcpy on both sides for the PJRT buffer path).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct F32s(pub Vec<f32>);
+
+impl Encode for F32s {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.reserve(self.0.len() * 4 + 10);
+        put_varint(buf, self.0.len() as u64);
+        // Safe, portable memcpy: chunk through to_le_bytes in bulk.
+        for chunk in self.0.chunks(1024) {
+            for v in chunk {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+}
+impl Decode for F32s {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let n = get_len(r)?;
+        let raw = r.take(n * 4)?;
+        let mut out = Vec::with_capacity(n);
+        for c in raw.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(F32s(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: Encode + Decode + PartialEq + std::fmt::Debug>(v: T) {
+        let bytes = v.to_bytes();
+        let back = T::from_bytes(&bytes).expect("decode");
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn primitives_roundtrip() {
+        roundtrip(0u8);
+        roundtrip(255u8);
+        roundtrip(u64::MAX);
+        roundtrip(i64::MIN);
+        roundtrip(-1.5f32);
+        roundtrip(f64::consts_check());
+        roundtrip(true);
+        roundtrip(false);
+        roundtrip(usize::MAX);
+    }
+
+    trait ConstsCheck {
+        fn consts_check() -> f64 {
+            std::f64::consts::PI
+        }
+    }
+    impl ConstsCheck for f64 {}
+
+    #[test]
+    fn strings_roundtrip() {
+        roundtrip(String::new());
+        roundtrip("hello world".to_string());
+        roundtrip("ünïcødé 🎉".to_string());
+    }
+
+    #[test]
+    fn containers_roundtrip() {
+        roundtrip(vec![1u32, 2, 3]);
+        roundtrip(Vec::<String>::new());
+        roundtrip(Some("x".to_string()));
+        roundtrip(Option::<u64>::None);
+        roundtrip(Bytes(vec![0u8, 1, 2, 255]));
+        roundtrip(F32s(vec![1.0, -2.5, f32::MAX]));
+        let mut m = BTreeMap::new();
+        m.insert("a".to_string(), 1u64);
+        m.insert("b".to_string(), 2u64);
+        roundtrip(m);
+        roundtrip((1u32, "x".to_string(), Bytes(vec![9])));
+    }
+
+    #[test]
+    fn varint_edge_cases() {
+        for v in [0u64, 1, 127, 128, 16383, 16384, u64::MAX] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut r = Reader::new(&buf);
+            assert_eq!(get_varint(&mut r).unwrap(), v);
+            assert!(r.is_empty());
+        }
+    }
+
+    #[test]
+    fn truncated_input_errors() {
+        let bytes = "hello".to_string().to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(String::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_error() {
+        let mut bytes = 7u32.to_bytes();
+        bytes.push(0);
+        assert!(u32::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn hostile_length_rejected() {
+        // A varint length far larger than the buffer must not allocate.
+        let mut buf = Vec::new();
+        put_varint(&mut buf, u64::MAX / 2);
+        assert!(Bytes::from_bytes(&buf).is_err());
+        assert!(Vec::<u64>::from_bytes(&buf).is_err());
+    }
+
+    #[test]
+    fn invalid_bool_and_option_tags() {
+        assert!(bool::from_bytes(&[2]).is_err());
+        assert!(Option::<u8>::from_bytes(&[9, 1]).is_err());
+    }
+
+    #[test]
+    fn invalid_utf8_rejected() {
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 2);
+        buf.extend_from_slice(&[0xff, 0xfe]);
+        assert!(String::from_bytes(&buf).is_err());
+    }
+}

@@ -1,0 +1,39 @@
+//! Task execution engine substrate (the Dask/Parsl/Globus-Compute
+//! analogue).
+//!
+//! The paper's patterns are *engine-agnostic*; to demonstrate and evaluate
+//! them we need an engine with the properties the paper's baselines
+//! exhibit:
+//!
+//! * a central client/scheduler through which task payloads flow
+//!   ("data flows through the client", the DeepDriveMD bottleneck);
+//! * per-task submission overhead (Fig 5's `submit` spans);
+//! * futures for task results, with completion callbacks (the hook the
+//!   ownership model uses to release borrows).
+//!
+//! [`LocalCluster`] runs a scheduler thread plus N worker threads. Task
+//! arguments and results are *serialized bytes* that traverse configurable
+//! netsim [`Link`]s on the client→worker and worker→client hops, so the
+//! baseline cost of moving data with the engine is physically modelled,
+//! not assumed. Proxies bypass those hops by construction (their payloads
+//! are ~100-byte factories).
+
+mod cluster;
+mod executor;
+
+pub use cluster::{ClusterConfig, LocalCluster, TaskFuture, TaskHandle, WorkerCtx};
+pub use executor::{ProxyPolicy, StoreExecutor, TaskArg};
+
+/// Convenience: a [`ProxyPolicy`] with the given byte threshold.
+pub fn executor_policy(threshold: usize) -> ProxyPolicy {
+    ProxyPolicy { threshold }
+}
+
+use crate::error::Result;
+
+/// A task: runs on a worker with its (deserialized-by-the-task) payload.
+pub type TaskFn =
+    Box<dyn FnOnce(&WorkerCtx, Vec<u8>) -> Result<Vec<u8>> + Send + 'static>;
+
+/// Completion callback attached to a task future.
+pub type DoneCallback = Box<dyn FnOnce(&Result<Vec<u8>>) + Send + 'static>;

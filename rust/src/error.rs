@@ -1,0 +1,98 @@
+//! Crate-wide error type.
+//!
+//! Every layer of the stack funnels into [`Error`]: codec failures,
+//! connector/store I/O, protocol violations from the KV server or broker,
+//! ownership-rule violations (the runtime analogue of rustc's borrow-check
+//! diagnostics), engine task failures, and PJRT runtime errors.
+
+use std::sync::Arc;
+
+/// Unified error for all proxystore operations.
+#[derive(Debug, Clone, thiserror::Error)]
+pub enum Error {
+    /// Serialization / deserialization failure.
+    #[error("codec error: {0}")]
+    Codec(String),
+
+    /// Underlying connector / transport failure.
+    #[error("connector error: {0}")]
+    Connector(String),
+
+    /// Key not present in the mediated channel.
+    #[error("key not found: {0}")]
+    NotFound(String),
+
+    /// KV / broker wire-protocol violation.
+    #[error("protocol error: {0}")]
+    Protocol(String),
+
+    /// Ownership or borrowing rule violation (runtime borrow-check).
+    #[error("ownership violation: {0}")]
+    Ownership(String),
+
+    /// A task submitted to the execution engine failed.
+    #[error("task failed: {0}")]
+    Task(String),
+
+    /// Stream closed or broker subscription ended.
+    #[error("stream closed: {0}")]
+    StreamClosed(String),
+
+    /// Timed out waiting (future resolution, blocking get, ...).
+    #[error("timeout after {0:?}: {1}")]
+    Timeout(std::time::Duration, String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Invalid configuration or argument.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Wrapped I/O error (Arc'd so `Error` stays `Clone`).
+    #[error("io error: {0}")]
+    Io(#[from] Arc<std::io::Error>),
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(Arc::new(e))
+    }
+}
+
+impl Error {
+    /// True when the error is a missing key (used by polling resolvers).
+    pub fn is_not_found(&self) -> bool {
+        matches!(self, Error::NotFound(_))
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_is_informative() {
+        let e = Error::NotFound("key-7".into());
+        assert_eq!(e.to_string(), "key not found: key-7");
+        assert!(e.is_not_found());
+        assert!(!Error::Codec("x".into()).is_not_found());
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::BrokenPipe, "pipe");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("pipe"));
+    }
+
+    #[test]
+    fn errors_are_cloneable() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "x").into();
+        let _ = e.clone();
+    }
+}

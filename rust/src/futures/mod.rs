@@ -1,0 +1,217 @@
+//! ProxyFutures: compute-framework-agnostic distributed futures (Sec IV-A).
+//!
+//! A [`ProxyFuture<T>`] is created from a `Store` *before its value
+//! exists*. It can mint any number of [`Proxy<T>`]s whose resolution
+//! blocks until some process calls [`ProxyFuture::set_result`]. Both the
+//! future and its proxies are plain data (codec-serializable), so they can
+//! be passed to tasks on any execution engine — the property that
+//! distinguishes them from Dask/Ray futures, which only resolve inside
+//! their RPC framework.
+//!
+//! The blocking rendezvous rides the connector's `wait_get` (server-side
+//! parking on redis-sim, poll-with-backoff elsewhere), so the *future
+//! creator* chooses the communication method on behalf of producer and
+//! consumer, exactly as the paper prescribes.
+
+use std::marker::PhantomData;
+use std::time::Duration;
+
+use crate::codec::{Decode, Encode, Reader};
+use crate::error::{Error, Result};
+use crate::proxy::{Factory, Proxy};
+
+/// A distributed future for an eventual value of type `T`.
+pub struct ProxyFuture<T> {
+    factory: Factory,
+    _marker: PhantomData<fn() -> T>,
+}
+
+impl<T> ProxyFuture<T> {
+    /// Build from a wait-enabled factory (see `Store::future`).
+    pub fn new(factory: Factory) -> ProxyFuture<T> {
+        debug_assert!(factory.wait, "future factories must wait");
+        ProxyFuture { factory, _marker: PhantomData }
+    }
+
+    /// The key the eventual value will be stored under.
+    pub fn key(&self) -> &str {
+        &self.factory.key
+    }
+
+    /// Mint a proxy that blocks (forever) on resolution until the result
+    /// is set. Any number of proxies can be created.
+    pub fn proxy(&self) -> Proxy<T> {
+        Proxy::from_factory(self.factory.clone())
+    }
+
+    /// Mint a proxy whose resolution gives up after `timeout`.
+    pub fn proxy_with_timeout(&self, timeout: Duration) -> Proxy<T> {
+        let mut f = self.factory.clone();
+        f.timeout_ms = timeout.as_millis() as u64;
+        Proxy::from_factory(f)
+    }
+
+    /// Has the result been set yet?
+    pub fn done(&self) -> Result<bool> {
+        self.factory.connector()?.exists(&self.factory.key)
+    }
+}
+
+impl<T: Encode> ProxyFuture<T> {
+    /// Publish the result. Errors if already set (single-assignment).
+    pub fn set_result(&self, value: &T) -> Result<()> {
+        let conn = self.factory.connector()?;
+        if conn.exists(&self.factory.key)? {
+            return Err(Error::Config(format!(
+                "future {} already set",
+                self.factory.key
+            )));
+        }
+        conn.put(&self.factory.key, value.to_bytes())
+    }
+}
+
+impl<T: Decode> ProxyFuture<T> {
+    /// Block for the result (explicit-future interface).
+    pub fn result(&self, timeout: Option<Duration>) -> Result<T> {
+        let conn = self.factory.connector()?;
+        match conn.wait_get(&self.factory.key, timeout)? {
+            Some(bytes) => T::from_bytes(&bytes),
+            None => Err(Error::Timeout(
+                timeout.unwrap_or_default(),
+                format!("future {}", self.factory.key),
+            )),
+        }
+    }
+}
+
+impl<T> Clone for ProxyFuture<T> {
+    fn clone(&self) -> Self {
+        ProxyFuture::new(self.factory.clone())
+    }
+}
+
+impl<T> std::fmt::Debug for ProxyFuture<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ProxyFuture")
+            .field("key", &self.factory.key)
+            .finish()
+    }
+}
+
+impl<T> Encode for ProxyFuture<T> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.factory.encode(buf);
+    }
+}
+
+impl<T> Decode for ProxyFuture<T> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(ProxyFuture::new(Factory::decode(r)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::KvServer;
+    use crate::store::{Store, TcpKvConnector};
+    use std::sync::Arc;
+
+    #[test]
+    fn set_then_resolve() {
+        let store = Store::memory("fut");
+        let fut: ProxyFuture<String> = store.future();
+        assert!(!fut.done().unwrap());
+        let p = fut.proxy();
+        fut.set_result(&"ready".to_string()).unwrap();
+        assert!(fut.done().unwrap());
+        assert_eq!(p.resolve().unwrap(), "ready");
+    }
+
+    #[test]
+    fn consumer_blocks_until_producer_sets() {
+        let store = Store::memory("fut");
+        let fut: ProxyFuture<u64> = store.future();
+        let p = fut.proxy();
+        let consumer = std::thread::spawn(move || *p.resolve().unwrap());
+        std::thread::sleep(Duration::from_millis(30));
+        fut.set_result(&99u64).unwrap();
+        assert_eq!(consumer.join().unwrap(), 99);
+    }
+
+    #[test]
+    fn proxy_created_before_value_exists_and_ships_across_threads() {
+        // The M/P/C scenario from Sec IV-A: main mints future+proxy, ships
+        // the future to a producer thread and the proxy to a consumer
+        // thread, via plain bytes (simulating engine serialization).
+        let server = KvServer::spawn().unwrap();
+        let store =
+            Store::new("fut", Arc::new(TcpKvConnector::connect(server.addr).unwrap()));
+        let fut: ProxyFuture<String> = store.future();
+        let fut_wire = fut.to_bytes();
+        let proxy_wire = fut.proxy().to_bytes();
+
+        let producer = std::thread::spawn(move || {
+            let f: ProxyFuture<String> =
+                ProxyFuture::from_bytes(&fut_wire).unwrap();
+            std::thread::sleep(Duration::from_millis(40));
+            f.set_result(&"produced".to_string()).unwrap();
+        });
+        let consumer = std::thread::spawn(move || {
+            let p: Proxy<String> = Proxy::from_bytes(&proxy_wire).unwrap();
+            p.resolve().unwrap().clone()
+        });
+        producer.join().unwrap();
+        assert_eq!(consumer.join().unwrap(), "produced");
+    }
+
+    #[test]
+    fn timeout_proxy_errors() {
+        let store = Store::memory("fut");
+        let fut: ProxyFuture<u64> = store.future();
+        let p = fut.proxy_with_timeout(Duration::from_millis(30));
+        match p.resolve() {
+            Err(Error::Timeout(..)) => {}
+            other => panic!("expected timeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn double_set_rejected() {
+        let store = Store::memory("fut");
+        let fut: ProxyFuture<u64> = store.future();
+        fut.set_result(&1).unwrap();
+        assert!(fut.set_result(&2).is_err());
+        assert_eq!(fut.result(None).unwrap(), 1);
+    }
+
+    #[test]
+    fn explicit_result_interface() {
+        let store = Store::memory("fut");
+        let fut: ProxyFuture<u64> = store.future();
+        let f2 = fut.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            f2.set_result(&5).unwrap();
+        });
+        assert_eq!(fut.result(Some(Duration::from_secs(5))).unwrap(), 5);
+        // Timeout path
+        let never: ProxyFuture<u64> = store.future();
+        assert!(matches!(
+            never.result(Some(Duration::from_millis(20))),
+            Err(Error::Timeout(..))
+        ));
+    }
+
+    #[test]
+    fn many_proxies_one_future() {
+        let store = Store::memory("fut");
+        let fut: ProxyFuture<u32> = store.future();
+        let proxies: Vec<Proxy<u32>> = (0..8).map(|_| fut.proxy()).collect();
+        fut.set_result(&7).unwrap();
+        for p in proxies {
+            assert_eq!(*p.resolve().unwrap(), 7);
+        }
+    }
+}

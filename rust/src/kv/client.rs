@@ -1,0 +1,211 @@
+//! Blocking KV client. One request in flight per connection (guarded by a
+//! mutex), mirroring redis-py's default connection behaviour that the
+//! paper's deployments used.
+
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::codec::Bytes;
+use crate::error::{Error, Result};
+use crate::kv::protocol::{read_frame, write_frame, Request, Response};
+use crate::kv::state::PubSubMsg;
+
+struct Conn {
+    reader: std::io::BufReader<TcpStream>,
+    writer: std::io::BufWriter<TcpStream>,
+}
+
+/// Thread-safe request/response client.
+pub struct KvClient {
+    conn: Mutex<Conn>,
+    pub addr: SocketAddr,
+}
+
+impl KvClient {
+    pub fn connect(addr: SocketAddr) -> Result<KvClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(KvClient {
+            conn: Mutex::new(Conn {
+                reader: std::io::BufReader::with_capacity(1 << 18, stream.try_clone()?),
+                writer: std::io::BufWriter::with_capacity(1 << 18, stream),
+            }),
+            addr,
+        })
+    }
+
+    fn call(&self, req: Request) -> Result<Response> {
+        let mut conn = self.conn.lock().unwrap();
+        write_frame(&mut conn.writer, &req)?;
+        match read_frame::<_, Response>(&mut conn.reader)? {
+            Some(Response::Error(msg)) => Err(Error::Protocol(msg)),
+            Some(resp) => Ok(resp),
+            None => Err(Error::Connector("kv server closed connection".into())),
+        }
+    }
+
+    fn expect_ok(&self, req: Request) -> Result<()> {
+        match self.call(req)? {
+            Response::Ok => Ok(()),
+            other => Err(Error::Protocol(format!("expected Ok, got {other:?}"))),
+        }
+    }
+
+    fn expect_int(&self, req: Request) -> Result<i64> {
+        match self.call(req)? {
+            Response::Int(v) => Ok(v),
+            other => Err(Error::Protocol(format!("expected Int, got {other:?}"))),
+        }
+    }
+
+    fn expect_value(&self, req: Request) -> Result<Option<Bytes>> {
+        match self.call(req)? {
+            Response::Value(v) => Ok(v),
+            other => {
+                Err(Error::Protocol(format!("expected Value, got {other:?}")))
+            }
+        }
+    }
+
+    pub fn ping(&self) -> Result<()> {
+        self.expect_ok(Request::Ping)
+    }
+
+    pub fn set(&self, key: &str, value: Bytes) -> Result<()> {
+        self.expect_ok(Request::Set { key: key.into(), value })
+    }
+
+    pub fn set_nx(&self, key: &str, value: Bytes) -> Result<bool> {
+        Ok(self.expect_int(Request::SetNx { key: key.into(), value })? == 1)
+    }
+
+    pub fn get(&self, key: &str) -> Result<Option<Bytes>> {
+        self.expect_value(Request::Get { key: key.into() })
+    }
+
+    pub fn mget(&self, keys: &[String]) -> Result<Vec<Option<Bytes>>> {
+        match self.call(Request::MGet { keys: keys.to_vec() })? {
+            Response::Values(v) => Ok(v),
+            other => {
+                Err(Error::Protocol(format!("expected Values, got {other:?}")))
+            }
+        }
+    }
+
+    /// Blocking get; `None` timeout waits forever.
+    pub fn wait_get(
+        &self,
+        key: &str,
+        timeout: Option<Duration>,
+    ) -> Result<Option<Bytes>> {
+        self.expect_value(Request::WaitGet {
+            key: key.into(),
+            timeout_ms: timeout.map(|d| d.as_millis() as u64).unwrap_or(0),
+        })
+    }
+
+    pub fn del(&self, key: &str) -> Result<bool> {
+        Ok(self.expect_int(Request::Del { key: key.into() })? == 1)
+    }
+
+    pub fn exists(&self, key: &str) -> Result<bool> {
+        Ok(self.expect_int(Request::Exists { key: key.into() })? == 1)
+    }
+
+    pub fn incr(&self, key: &str, by: i64) -> Result<i64> {
+        self.expect_int(Request::Incr { key: key.into(), by })
+    }
+
+    pub fn keys(&self, prefix: &str) -> Result<Vec<String>> {
+        match self.call(Request::Keys { prefix: prefix.into() })? {
+            Response::KeysList(v) => Ok(v),
+            other => {
+                Err(Error::Protocol(format!("expected Keys, got {other:?}")))
+            }
+        }
+    }
+
+    pub fn publish(&self, channel: &str, payload: Bytes) -> Result<i64> {
+        self.expect_int(Request::Publish { channel: channel.into(), payload })
+    }
+
+    pub fn lpush(&self, list: &str, value: Bytes) -> Result<()> {
+        self.expect_ok(Request::LPush { list: list.into(), value })
+    }
+
+    pub fn brpop(
+        &self,
+        list: &str,
+        timeout: Option<Duration>,
+    ) -> Result<Option<Bytes>> {
+        self.expect_value(Request::BRPop {
+            list: list.into(),
+            timeout_ms: timeout.map(|d| d.as_millis() as u64).unwrap_or(0),
+        })
+    }
+
+    pub fn flush_all(&self) -> Result<()> {
+        self.expect_ok(Request::FlushAll)
+    }
+
+    pub fn stats(&self) -> Result<(u64, u64, u64)> {
+        match self.call(Request::Stats)? {
+            Response::StatsReply { keys, bytes, ops } => Ok((keys, bytes, ops)),
+            other => {
+                Err(Error::Protocol(format!("expected Stats, got {other:?}")))
+            }
+        }
+    }
+}
+
+/// Dedicated subscription connection (push mode), like a Redis subscriber.
+pub struct KvSubscriber {
+    reader: Mutex<std::io::BufReader<TcpStream>>,
+}
+
+impl KvSubscriber {
+    pub fn connect(addr: SocketAddr, channels: &[String]) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let mut writer = std::io::BufWriter::new(stream.try_clone()?);
+        let mut reader = std::io::BufReader::with_capacity(1 << 18, stream);
+        write_frame(
+            &mut writer,
+            &Request::Subscribe { channels: channels.to_vec() },
+        )?;
+        match read_frame::<_, Response>(&mut reader)? {
+            Some(Response::Ok) => Ok(KvSubscriber {
+                reader: Mutex::new(reader),
+            }),
+            other => Err(Error::Protocol(format!(
+                "subscribe handshake failed: {other:?}"
+            ))),
+        }
+    }
+
+    /// Next pushed message. `Ok(None)` on timeout; error if disconnected.
+    pub fn next(&self, timeout: Option<Duration>) -> Result<Option<PubSubMsg>> {
+        let mut reader = self.reader.lock().unwrap();
+        reader
+            .get_ref()
+            .set_read_timeout(timeout)
+            .map_err(Error::from)?;
+        match read_frame::<_, Response>(&mut *reader) {
+            Ok(Some(Response::Message { channel, payload })) => {
+                Ok(Some(PubSubMsg { channel, payload }))
+            }
+            Ok(Some(other)) => Err(Error::Protocol(format!(
+                "unexpected push frame: {other:?}"
+            ))),
+            Ok(None) => Err(Error::StreamClosed("subscription ended".into())),
+            Err(Error::Io(e))
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                Ok(None)
+            }
+            Err(e) => Err(e),
+        }
+    }
+}

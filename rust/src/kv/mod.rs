@@ -1,0 +1,24 @@
+//! redis-sim: the mediated-channel substrate.
+//!
+//! The paper's deployments use Redis/KeyDB servers as the mediated
+//! communication channel between proxy producers and consumers. The offline
+//! environment has no Redis, so this module implements the required subset
+//! from scratch: a TCP KV server ([`KvServer`]) with Redis-flavoured
+//! semantics (GET/SET/DEL/EXISTS/MGET, pub/sub channels, lists with
+//! blocking pop) plus one extension — `WaitGet`, a server-side blocking GET
+//! that ProxyFutures resolution parks on instead of polling.
+//!
+//! The storage engine ([`KvState`]) is usable embedded (zero-copy,
+//! in-process) or over TCP ([`KvClient`]/[`KvSubscriber`]); connectors can
+//! pick either, which lets benches separate protocol overhead from engine
+//! overhead.
+
+mod client;
+mod protocol;
+mod server;
+mod state;
+
+pub use client::{KvClient, KvSubscriber};
+pub use protocol::{read_frame, write_frame, Request, Response};
+pub use server::KvServer;
+pub use state::{KvState, PubSubMsg};

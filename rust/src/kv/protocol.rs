@@ -1,0 +1,309 @@
+//! Wire protocol for the redis-sim KV server.
+//!
+//! Frames are `u32` little-endian length + codec-encoded body. Commands
+//! mirror the subset of Redis that ProxyStore's connectors use (GET/SET/
+//! DEL/EXISTS/MGET, pub/sub, lists with blocking pop) plus `WaitGet` — a
+//! blocking GET with timeout that the ProxyFutures pattern uses so proxy
+//! resolution can park server-side instead of client-side polling.
+
+use std::io::{Read, Write};
+
+use crate::codec::{Bytes, Decode, Encode, Reader, get_varint, put_varint};
+use crate::error::{Error, Result};
+
+/// Client → server commands.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Fetch a key's value.
+    Get { key: String },
+    /// Store a value.
+    Set { key: String, value: Bytes },
+    /// Store only if absent; replies `Int(1)` if stored, `Int(0)` if not.
+    SetNx { key: String, value: Bytes },
+    /// Delete a key; replies `Int(1)` if it existed.
+    Del { key: String },
+    /// Existence check; replies `Int(0/1)`.
+    Exists { key: String },
+    /// Batched get.
+    MGet { keys: Vec<String> },
+    /// Blocking get: wait up to `timeout_ms` for the key to appear
+    /// (0 = wait forever).
+    WaitGet { key: String, timeout_ms: u64 },
+    /// Atomic increment; creates the key at 0 first.
+    Incr { key: String, by: i64 },
+    /// Keys with a prefix (admin/debug).
+    Keys { prefix: String },
+    /// Publish to a channel; replies `Int(n_receivers)`.
+    Publish { channel: String, payload: Bytes },
+    /// Switch this connection into subscriber push mode.
+    Subscribe { channels: Vec<String> },
+    /// Append to a list (queue semantics for stream shims).
+    LPush { list: String, value: Bytes },
+    /// Blocking pop from the tail; waits up to `timeout_ms` (0 = forever).
+    BRPop { list: String, timeout_ms: u64 },
+    /// Drop all data (test/bench reset).
+    FlushAll,
+    /// Server statistics snapshot.
+    Stats,
+    /// Liveness probe.
+    Ping,
+}
+
+/// Server → client replies (plus async `Message` pushes in subscribe mode).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Ok,
+    /// GET/WaitGet/BRPop result; `None` = missing/timeout.
+    Value(Option<Bytes>),
+    /// MGET result, positionally aligned with the request keys.
+    Values(Vec<Option<Bytes>>),
+    Int(i64),
+    KeysList(Vec<String>),
+    /// Async pub/sub push.
+    Message { channel: String, payload: Bytes },
+    /// Stats: (n_keys, resident_bytes, ops_served).
+    StatsReply { keys: u64, bytes: u64, ops: u64 },
+    Error(String),
+}
+
+macro_rules! tagged {
+    ($buf:expr, $tag:expr $(, $field:expr)*) => {{
+        put_varint($buf, $tag);
+        $($field.encode($buf);)*
+    }};
+}
+
+impl Encode for Request {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            Request::Get { key } => tagged!(buf, 0, key),
+            Request::Set { key, value } => tagged!(buf, 1, key, value),
+            Request::SetNx { key, value } => tagged!(buf, 2, key, value),
+            Request::Del { key } => tagged!(buf, 3, key),
+            Request::Exists { key } => tagged!(buf, 4, key),
+            Request::MGet { keys } => tagged!(buf, 5, keys),
+            Request::WaitGet { key, timeout_ms } => {
+                tagged!(buf, 6, key, timeout_ms)
+            }
+            Request::Incr { key, by } => tagged!(buf, 7, key, by),
+            Request::Keys { prefix } => tagged!(buf, 8, prefix),
+            Request::Publish { channel, payload } => {
+                tagged!(buf, 9, channel, payload)
+            }
+            Request::Subscribe { channels } => tagged!(buf, 10, channels),
+            Request::LPush { list, value } => tagged!(buf, 11, list, value),
+            Request::BRPop { list, timeout_ms } => {
+                tagged!(buf, 12, list, timeout_ms)
+            }
+            Request::FlushAll => tagged!(buf, 13),
+            Request::Stats => tagged!(buf, 14),
+            Request::Ping => tagged!(buf, 15),
+        }
+    }
+}
+
+impl Decode for Request {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(match get_varint(r)? {
+            0 => Request::Get { key: Decode::decode(r)? },
+            1 => Request::Set {
+                key: Decode::decode(r)?,
+                value: Decode::decode(r)?,
+            },
+            2 => Request::SetNx {
+                key: Decode::decode(r)?,
+                value: Decode::decode(r)?,
+            },
+            3 => Request::Del { key: Decode::decode(r)? },
+            4 => Request::Exists { key: Decode::decode(r)? },
+            5 => Request::MGet { keys: Decode::decode(r)? },
+            6 => Request::WaitGet {
+                key: Decode::decode(r)?,
+                timeout_ms: Decode::decode(r)?,
+            },
+            7 => Request::Incr {
+                key: Decode::decode(r)?,
+                by: Decode::decode(r)?,
+            },
+            8 => Request::Keys { prefix: Decode::decode(r)? },
+            9 => Request::Publish {
+                channel: Decode::decode(r)?,
+                payload: Decode::decode(r)?,
+            },
+            10 => Request::Subscribe { channels: Decode::decode(r)? },
+            11 => Request::LPush {
+                list: Decode::decode(r)?,
+                value: Decode::decode(r)?,
+            },
+            12 => Request::BRPop {
+                list: Decode::decode(r)?,
+                timeout_ms: Decode::decode(r)?,
+            },
+            13 => Request::FlushAll,
+            14 => Request::Stats,
+            15 => Request::Ping,
+            t => return Err(Error::Protocol(format!("bad request tag {t}"))),
+        })
+    }
+}
+
+impl Encode for Response {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            Response::Ok => tagged!(buf, 0),
+            Response::Value(v) => tagged!(buf, 1, v),
+            Response::Values(v) => tagged!(buf, 2, v),
+            Response::Int(v) => tagged!(buf, 3, v),
+            Response::KeysList(v) => tagged!(buf, 4, v),
+            Response::Message { channel, payload } => {
+                tagged!(buf, 5, channel, payload)
+            }
+            Response::StatsReply { keys, bytes, ops } => {
+                tagged!(buf, 6, keys, bytes, ops)
+            }
+            Response::Error(msg) => tagged!(buf, 7, msg),
+        }
+    }
+}
+
+impl Decode for Response {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(match get_varint(r)? {
+            0 => Response::Ok,
+            1 => Response::Value(Decode::decode(r)?),
+            2 => Response::Values(Decode::decode(r)?),
+            3 => Response::Int(Decode::decode(r)?),
+            4 => Response::KeysList(Decode::decode(r)?),
+            5 => Response::Message {
+                channel: Decode::decode(r)?,
+                payload: Decode::decode(r)?,
+            },
+            6 => Response::StatsReply {
+                keys: Decode::decode(r)?,
+                bytes: Decode::decode(r)?,
+                ops: Decode::decode(r)?,
+            },
+            7 => Response::Error(Decode::decode(r)?),
+            t => return Err(Error::Protocol(format!("bad response tag {t}"))),
+        })
+    }
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame<W: Write, T: Encode>(w: &mut W, msg: &T) -> Result<()> {
+    let body = msg.to_bytes();
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame; `None` on clean EOF at a frame boundary.
+pub fn read_frame<R: Read, T: Decode>(r: &mut R) -> Result<Option<T>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            return Ok(None)
+        }
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > 1 << 30 {
+        return Err(Error::Protocol(format!("frame too large: {len}")));
+    }
+    // read_to_end on a bounded Take appends without zero-initializing the
+    // buffer first (std fills via its uninit-spare-capacity path), which
+    // matters at multi-MB frames.
+    let mut body = Vec::with_capacity(len);
+    let n = r.by_ref().take(len as u64).read_to_end(&mut body)?;
+    if n < len {
+        return Err(Error::Io(std::sync::Arc::new(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            format!("frame truncated: {n}/{len}"),
+        ))));
+    }
+    Ok(Some(T::from_bytes(&body)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(req: Request) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &req).unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        let back: Request = read_frame(&mut cur).unwrap().unwrap();
+        assert_eq!(req, back);
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        roundtrip_req(Request::Get { key: "k".into() });
+        roundtrip_req(Request::Set {
+            key: "k".into(),
+            value: Bytes(vec![1, 2, 3]),
+        });
+        roundtrip_req(Request::MGet { keys: vec!["a".into(), "b".into()] });
+        roundtrip_req(Request::WaitGet { key: "k".into(), timeout_ms: 500 });
+        roundtrip_req(Request::Publish {
+            channel: "c".into(),
+            payload: Bytes(vec![9; 100]),
+        });
+        roundtrip_req(Request::Subscribe { channels: vec!["c".into()] });
+        roundtrip_req(Request::BRPop { list: "l".into(), timeout_ms: 0 });
+        roundtrip_req(Request::FlushAll);
+        roundtrip_req(Request::Ping);
+        roundtrip_req(Request::Incr { key: "n".into(), by: -3 });
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        for resp in [
+            Response::Ok,
+            Response::Value(None),
+            Response::Value(Some(Bytes(vec![0; 10]))),
+            Response::Values(vec![None, Some(Bytes(vec![1]))]),
+            Response::Int(-7),
+            Response::KeysList(vec!["x".into()]),
+            Response::Message {
+                channel: "c".into(),
+                payload: Bytes(vec![2]),
+            },
+            Response::StatsReply { keys: 1, bytes: 2, ops: 3 },
+            Response::Error("boom".into()),
+        ] {
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &resp).unwrap();
+            let mut cur = std::io::Cursor::new(buf);
+            let back: Response = read_frame(&mut cur).unwrap().unwrap();
+            assert_eq!(resp, back);
+        }
+    }
+
+    #[test]
+    fn clean_eof_returns_none() {
+        let buf: Vec<u8> = Vec::new();
+        let mut cur = std::io::Cursor::new(buf);
+        let r: Option<Request> = read_frame(&mut cur).unwrap();
+        assert!(r.is_none());
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut cur = std::io::Cursor::new(buf);
+        let r: Result<Option<Request>> = read_frame(&mut cur);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_tag_rejected() {
+        let mut body = Vec::new();
+        put_varint(&mut body, 99);
+        assert!(Request::from_bytes(&body).is_err());
+        assert!(Response::from_bytes(&body).is_err());
+    }
+}

@@ -1,0 +1,322 @@
+//! TCP front-end for the KV engine: thread-per-connection, length-prefixed
+//! frames, Redis-style subscribe mode.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::Result;
+use crate::kv::protocol::{read_frame, write_frame, Request, Response};
+use crate::kv::state::KvState;
+
+/// A running KV server. Dropping the handle shuts it down.
+pub struct KvServer {
+    pub addr: SocketAddr,
+    state: KvState,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    /// Live connection sockets, force-closed on shutdown.
+    conns: Arc<std::sync::Mutex<Vec<TcpStream>>>,
+}
+
+impl KvServer {
+    /// Bind to 127.0.0.1 on an ephemeral port and start serving.
+    pub fn spawn() -> Result<KvServer> {
+        Self::spawn_with_state(KvState::new())
+    }
+
+    /// Serve an externally created state (lets tests/benches share the
+    /// engine between a TCP endpoint and embedded handles).
+    pub fn spawn_with_state(state: KvState) -> Result<KvServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let state2 = state.clone();
+        let conns: Arc<std::sync::Mutex<Vec<TcpStream>>> =
+            Arc::new(std::sync::Mutex::new(Vec::new()));
+        let conns2 = conns.clone();
+        // Accept loop polls with a timeout so shutdown is prompt.
+        listener.set_nonblocking(true)?;
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("kv-accept-{}", addr.port()))
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            if let Ok(clone) = stream.try_clone() {
+                                conns2.lock().unwrap().push(clone);
+                            }
+                            let st = state2.clone();
+                            let stop3 = stop2.clone();
+                            std::thread::Builder::new()
+                                .name("kv-conn".into())
+                                .spawn(move || {
+                                    let _ = serve_connection(stream, st, stop3);
+                                })
+                                .expect("spawn kv-conn");
+                        }
+                        Err(ref e)
+                            if e.kind() == std::io::ErrorKind::WouldBlock =>
+                        {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn kv-accept");
+        Ok(KvServer {
+            addr,
+            state,
+            stop,
+            accept_thread: Some(accept_thread),
+            conns,
+        })
+    }
+
+    /// The shared engine (for embedded access / gauges).
+    pub fn state(&self) -> &KvState {
+        &self.state
+    }
+
+    /// Stop accepting, force-close live connections, and wind down.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for conn in self.conns.lock().unwrap().drain(..) {
+            let _ = conn.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for KvServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_request(state: &KvState, req: Request) -> Response {
+    match req {
+        Request::Get { key } => Response::Value(state.get(&key)),
+        Request::Set { key, value } => {
+            if let Err(e) = KvState::check_value_size(&value) {
+                return Response::Error(e.to_string());
+            }
+            state.set(&key, value);
+            Response::Ok
+        }
+        Request::SetNx { key, value } => {
+            Response::Int(i64::from(state.set_nx(&key, value)))
+        }
+        Request::Del { key } => Response::Int(i64::from(state.del(&key))),
+        Request::Exists { key } => Response::Int(i64::from(state.exists(&key))),
+        Request::MGet { keys } => Response::Values(state.mget(&keys)),
+        Request::WaitGet { key, timeout_ms } => {
+            let timeout = if timeout_ms == 0 {
+                None
+            } else {
+                Some(Duration::from_millis(timeout_ms))
+            };
+            Response::Value(state.wait_get(&key, timeout))
+        }
+        Request::Incr { key, by } => Response::Int(state.incr(&key, by)),
+        Request::Keys { prefix } => Response::KeysList(state.keys(&prefix)),
+        Request::Publish { channel, payload } => {
+            Response::Int(state.publish(&channel, payload))
+        }
+        Request::LPush { list, value } => {
+            state.lpush(&list, value);
+            Response::Ok
+        }
+        Request::BRPop { list, timeout_ms } => {
+            let timeout = if timeout_ms == 0 {
+                None
+            } else {
+                Some(Duration::from_millis(timeout_ms))
+            };
+            Response::Value(state.brpop(&list, timeout))
+        }
+        Request::FlushAll => {
+            state.flush_all();
+            Response::Ok
+        }
+        Request::Stats => {
+            let (keys, bytes, ops) = state.stats();
+            Response::StatsReply { keys, bytes, ops }
+        }
+        Request::Ping => Response::Ok,
+        Request::Subscribe { .. } => {
+            unreachable!("subscribe handled in serve_connection")
+        }
+    }
+}
+
+fn serve_connection(
+    stream: TcpStream,
+    state: KvState,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let mut reader = std::io::BufReader::with_capacity(1 << 18, stream.try_clone()?);
+    let mut writer = std::io::BufWriter::with_capacity(1 << 18, stream);
+    loop {
+        // `KvServer::shutdown` closes tracked sockets, which surfaces here
+        // as EOF/error and ends the connection thread.
+        let req: Option<Request> = read_frame(&mut reader)?;
+        let Some(req) = req else { return Ok(()) };
+        match req {
+            Request::Subscribe { channels } => {
+                // Connection flips into push mode: acknowledge then forward
+                // published messages until the peer hangs up.
+                let rx = state.subscribe(&channels);
+                write_frame(&mut writer, &Response::Ok)?;
+                loop {
+                    match rx.recv_timeout(Duration::from_millis(100)) {
+                        Ok(msg) => {
+                            let push = Response::Message {
+                                channel: msg.channel,
+                                payload: msg.payload,
+                            };
+                            if write_frame(&mut writer, &push).is_err() {
+                                return Ok(()); // subscriber gone
+                            }
+                        }
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                            if stop.load(Ordering::Relaxed) {
+                                return Ok(());
+                            }
+                        }
+                        Err(_) => return Ok(()),
+                    }
+                }
+            }
+            other => {
+                let resp = handle_request(&state, other);
+                write_frame(&mut writer, &resp)?;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::Bytes;
+    use crate::kv::client::{KvClient, KvSubscriber};
+
+    #[test]
+    fn server_basic_ops_over_tcp() {
+        let server = KvServer::spawn().unwrap();
+        let client = KvClient::connect(server.addr).unwrap();
+        client.ping().unwrap();
+        client.set("k", Bytes(vec![1, 2, 3])).unwrap();
+        assert_eq!(client.get("k").unwrap(), Some(Bytes(vec![1, 2, 3])));
+        assert!(client.exists("k").unwrap());
+        assert_eq!(
+            client.mget(&["k".into(), "nope".into()]).unwrap(),
+            vec![Some(Bytes(vec![1, 2, 3])), None]
+        );
+        assert!(client.del("k").unwrap());
+        assert_eq!(client.get("k").unwrap(), None);
+    }
+
+    #[test]
+    fn wait_get_across_clients() {
+        let server = KvServer::spawn().unwrap();
+        let addr = server.addr;
+        let waiter = std::thread::spawn(move || {
+            let c = KvClient::connect(addr).unwrap();
+            c.wait_get("slow", Some(Duration::from_secs(5))).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        let setter = KvClient::connect(server.addr).unwrap();
+        setter.set("slow", Bytes(vec![9])).unwrap();
+        assert_eq!(waiter.join().unwrap(), Some(Bytes(vec![9])));
+    }
+
+    #[test]
+    fn pubsub_over_tcp() {
+        let server = KvServer::spawn().unwrap();
+        let sub =
+            KvSubscriber::connect(server.addr, &["topic".into()]).unwrap();
+        // Give the subscriber registration a beat.
+        std::thread::sleep(Duration::from_millis(30));
+        let publisher = KvClient::connect(server.addr).unwrap();
+        let n = publisher.publish("topic", Bytes(vec![42])).unwrap();
+        assert_eq!(n, 1);
+        let msg = sub.next(Some(Duration::from_secs(2))).unwrap().unwrap();
+        assert_eq!(msg.channel, "topic");
+        assert_eq!(msg.payload, Bytes(vec![42]));
+    }
+
+    #[test]
+    fn queue_over_tcp() {
+        let server = KvServer::spawn().unwrap();
+        let c = KvClient::connect(server.addr).unwrap();
+        c.lpush("q", Bytes(vec![1])).unwrap();
+        c.lpush("q", Bytes(vec![2])).unwrap();
+        assert_eq!(c.brpop("q", Some(Duration::from_secs(1))).unwrap(),
+                   Some(Bytes(vec![1])));
+        assert_eq!(c.brpop("q", Some(Duration::from_millis(20))).unwrap()
+                       .map(|b| b.0),
+                   Some(vec![2]));
+        assert_eq!(c.brpop("q", Some(Duration::from_millis(20))).unwrap(),
+                   None);
+    }
+
+    #[test]
+    fn stats_and_flush() {
+        let server = KvServer::spawn().unwrap();
+        let c = KvClient::connect(server.addr).unwrap();
+        c.set("a", Bytes(vec![0; 100])).unwrap();
+        let (keys, bytes, ops) = c.stats().unwrap();
+        assert_eq!(keys, 1);
+        assert_eq!(bytes, 100);
+        assert!(ops >= 1);
+        c.flush_all().unwrap();
+        let (keys, bytes, _) = c.stats().unwrap();
+        assert_eq!((keys, bytes), (0, 0));
+    }
+
+    #[test]
+    fn server_shutdown_rejects_new_connections() {
+        let mut server = KvServer::spawn().unwrap();
+        let addr = server.addr;
+        server.shutdown();
+        std::thread::sleep(Duration::from_millis(20));
+        // Either connect fails or the first request errors out.
+        let r = KvClient::connect(addr).and_then(|c| c.ping());
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn concurrent_clients_hammer() {
+        let server = KvServer::spawn().unwrap();
+        let addr = server.addr;
+        let hs: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let c = KvClient::connect(addr).unwrap();
+                    for j in 0..50 {
+                        let key = format!("k{i}-{j}");
+                        c.set(&key, Bytes(vec![i as u8, j as u8])).unwrap();
+                        assert_eq!(
+                            c.get(&key).unwrap(),
+                            Some(Bytes(vec![i as u8, j as u8]))
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        let c = KvClient::connect(addr).unwrap();
+        let (keys, _, _) = c.stats().unwrap();
+        assert_eq!(keys, 200);
+    }
+}

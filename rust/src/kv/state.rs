@@ -1,0 +1,446 @@
+//! Shared KV state: the storage engine behind both the TCP server and the
+//! embedded (in-process) handle.
+//!
+//! A single `Mutex<Inner>` + `Condvar` implements the blocking commands
+//! (`WaitGet`, `BRPop`): writers notify, blocked readers re-check their
+//! predicate. Pub/sub fan-out happens under the same lock for a consistent
+//! receiver count but the actual channel sends never block (unbounded
+//! `mpsc`), so a slow subscriber cannot stall writers — matching Redis'
+//! fire-and-forget pub/sub semantics.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::codec::Bytes;
+use crate::error::{Error, Result};
+use crate::metrics::StoreBytes;
+
+/// A pub/sub push delivered to a subscriber connection.
+#[derive(Debug, Clone)]
+pub struct PubSubMsg {
+    pub channel: String,
+    pub payload: Bytes,
+}
+
+#[derive(Default)]
+struct Inner {
+    data: HashMap<String, Arc<Vec<u8>>>,
+    lists: HashMap<String, VecDeque<Bytes>>,
+    counters: HashMap<String, i64>,
+    subscribers: HashMap<String, Vec<mpsc::Sender<PubSubMsg>>>,
+}
+
+/// The storage engine. Cheap to clone (Arc inside).
+#[derive(Clone)]
+pub struct KvState {
+    inner: Arc<(Mutex<Inner>, Condvar)>,
+    /// Bytes resident across values + list entries (Fig 7/10 gauge).
+    pub gauge: Arc<StoreBytes>,
+    ops: Arc<AtomicU64>,
+}
+
+impl Default for KvState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl KvState {
+    pub fn new() -> Self {
+        KvState {
+            inner: Arc::new((Mutex::new(Inner::default()), Condvar::new())),
+            gauge: StoreBytes::new(),
+            ops: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    fn bump(&self) {
+        self.ops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn ops_served(&self) -> u64 {
+        self.ops.load(Ordering::Relaxed)
+    }
+
+    pub fn set(&self, key: &str, value: Bytes) {
+        self.bump();
+        let (m, cv) = &*self.inner;
+        let mut inner = m.lock().unwrap();
+        self.gauge.add(value.0.len());
+        if let Some(old) =
+            inner.data.insert(key.to_string(), Arc::new(value.0))
+        {
+            self.gauge.sub(old.len());
+        }
+        cv.notify_all();
+    }
+
+    /// Returns true if stored (key was absent).
+    pub fn set_nx(&self, key: &str, value: Bytes) -> bool {
+        self.bump();
+        let (m, cv) = &*self.inner;
+        let mut inner = m.lock().unwrap();
+        if inner.data.contains_key(key) {
+            return false;
+        }
+        self.gauge.add(value.0.len());
+        inner.data.insert(key.to_string(), Arc::new(value.0));
+        cv.notify_all();
+        true
+    }
+
+    pub fn get(&self, key: &str) -> Option<Bytes> {
+        self.get_shared(key).map(|b| Bytes(b.to_vec()))
+    }
+
+    /// Zero-copy read: the returned `Arc` shares the stored allocation.
+    /// This is the embedded-connector hot path (proxy resolution).
+    pub fn get_shared(&self, key: &str) -> Option<Arc<Vec<u8>>> {
+        self.bump();
+        let (m, _) = &*self.inner;
+        m.lock().unwrap().data.get(key).cloned()
+    }
+
+    pub fn mget(&self, keys: &[String]) -> Vec<Option<Bytes>> {
+        self.bump();
+        let (m, _) = &*self.inner;
+        let inner = m.lock().unwrap();
+        keys.iter()
+            .map(|k| inner.data.get(k).map(|b| Bytes(b.to_vec())))
+            .collect()
+    }
+
+    /// Blocking get: wait for the key up to `timeout` (`None` = forever).
+    pub fn wait_get(&self, key: &str, timeout: Option<Duration>) -> Option<Bytes> {
+        self.wait_get_shared(key, timeout).map(|b| Bytes(b.to_vec()))
+    }
+
+    /// Blocking zero-copy read (see [`KvState::get_shared`]).
+    pub fn wait_get_shared(
+        &self,
+        key: &str,
+        timeout: Option<Duration>,
+    ) -> Option<Arc<Vec<u8>>> {
+        self.bump();
+        let (m, cv) = &*self.inner;
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let mut inner = m.lock().unwrap();
+        loop {
+            if let Some(v) = inner.data.get(key) {
+                return Some(v.clone());
+            }
+            match deadline {
+                None => inner = cv.wait(inner).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return None;
+                    }
+                    let (guard, res) = cv.wait_timeout(inner, d - now).unwrap();
+                    inner = guard;
+                    if res.timed_out() && !inner.data.contains_key(key) {
+                        return None;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Returns true if the key existed.
+    pub fn del(&self, key: &str) -> bool {
+        self.bump();
+        let (m, _) = &*self.inner;
+        let mut inner = m.lock().unwrap();
+        match inner.data.remove(key) {
+            Some(old) => {
+                self.gauge.sub(old.len());
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn exists(&self, key: &str) -> bool {
+        self.bump();
+        let (m, _) = &*self.inner;
+        m.lock().unwrap().data.contains_key(key)
+    }
+
+    pub fn incr(&self, key: &str, by: i64) -> i64 {
+        self.bump();
+        let (m, _) = &*self.inner;
+        let mut inner = m.lock().unwrap();
+        let v = inner.counters.entry(key.to_string()).or_insert(0);
+        *v += by;
+        *v
+    }
+
+    pub fn keys(&self, prefix: &str) -> Vec<String> {
+        self.bump();
+        let (m, _) = &*self.inner;
+        let inner = m.lock().unwrap();
+        let mut out: Vec<String> = inner
+            .data
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect();
+        out.sort();
+        out
+    }
+
+    pub fn lpush(&self, list: &str, value: Bytes) {
+        self.bump();
+        let (m, cv) = &*self.inner;
+        let mut inner = m.lock().unwrap();
+        self.gauge.add(value.0.len());
+        inner
+            .lists
+            .entry(list.to_string())
+            .or_default()
+            .push_front(value);
+        cv.notify_all();
+    }
+
+    /// Blocking pop from the tail (FIFO with lpush).
+    pub fn brpop(&self, list: &str, timeout: Option<Duration>) -> Option<Bytes> {
+        self.bump();
+        let (m, cv) = &*self.inner;
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let mut inner = m.lock().unwrap();
+        loop {
+            if let Some(q) = inner.lists.get_mut(list) {
+                if let Some(v) = q.pop_back() {
+                    self.gauge.sub(v.0.len());
+                    return Some(v);
+                }
+            }
+            match deadline {
+                None => inner = cv.wait(inner).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return None;
+                    }
+                    let (guard, _) = cv.wait_timeout(inner, d - now).unwrap();
+                    inner = guard;
+                    if Instant::now() >= d {
+                        let empty = inner
+                            .lists
+                            .get(list)
+                            .map(|q| q.is_empty())
+                            .unwrap_or(true);
+                        if empty {
+                            return None;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Register a subscriber; returns the receiving end.
+    pub fn subscribe(&self, channels: &[String]) -> mpsc::Receiver<PubSubMsg> {
+        self.bump();
+        let (tx, rx) = mpsc::channel();
+        let (m, _) = &*self.inner;
+        let mut inner = m.lock().unwrap();
+        for c in channels {
+            inner
+                .subscribers
+                .entry(c.clone())
+                .or_default()
+                .push(tx.clone());
+        }
+        rx
+    }
+
+    /// Publish; returns the number of live receivers.
+    pub fn publish(&self, channel: &str, payload: Bytes) -> i64 {
+        self.bump();
+        let (m, _) = &*self.inner;
+        let mut inner = m.lock().unwrap();
+        let mut delivered = 0;
+        if let Some(subs) = inner.subscribers.get_mut(channel) {
+            subs.retain(|tx| {
+                let ok = tx
+                    .send(PubSubMsg {
+                        channel: channel.to_string(),
+                        payload: payload.clone(),
+                    })
+                    .is_ok();
+                if ok {
+                    delivered += 1;
+                }
+                ok
+            });
+        }
+        delivered
+    }
+
+    pub fn flush_all(&self) {
+        self.bump();
+        let (m, cv) = &*self.inner;
+        let mut inner = m.lock().unwrap();
+        let freed: usize = inner.data.values().map(|v| v.len()).sum::<usize>()
+            + inner
+                .lists
+                .values()
+                .flat_map(|q| q.iter().map(|v| v.0.len()))
+                .sum::<usize>();
+        self.gauge.sub(freed);
+        inner.data.clear();
+        inner.lists.clear();
+        inner.counters.clear();
+        cv.notify_all();
+    }
+
+    pub fn stats(&self) -> (u64, u64, u64) {
+        let (m, _) = &*self.inner;
+        let inner = m.lock().unwrap();
+        (
+            inner.data.len() as u64,
+            self.gauge.get().max(0) as u64,
+            self.ops_served(),
+        )
+    }
+
+    /// Validate key size limits (paper notes Redis' 512 MB value cap).
+    pub fn check_value_size(value: &Bytes) -> Result<()> {
+        const MAX: usize = 512 * 1024 * 1024;
+        if value.0.len() > MAX {
+            return Err(Error::Protocol(format!(
+                "value {} bytes exceeds 512MB cap",
+                value.0.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_del_roundtrip() {
+        let kv = KvState::new();
+        assert!(kv.get("k").is_none());
+        kv.set("k", Bytes(vec![1, 2, 3]));
+        assert_eq!(kv.get("k"), Some(Bytes(vec![1, 2, 3])));
+        assert!(kv.exists("k"));
+        assert_eq!(kv.gauge.get(), 3);
+        assert!(kv.del("k"));
+        assert!(!kv.del("k"));
+        assert_eq!(kv.gauge.get(), 0);
+    }
+
+    #[test]
+    fn overwrite_adjusts_gauge() {
+        let kv = KvState::new();
+        kv.set("k", Bytes(vec![0; 100]));
+        kv.set("k", Bytes(vec![0; 40]));
+        assert_eq!(kv.gauge.get(), 40);
+        assert_eq!(kv.gauge.peak(), 140); // transiently both resident
+    }
+
+    #[test]
+    fn set_nx_only_first_wins() {
+        let kv = KvState::new();
+        assert!(kv.set_nx("k", Bytes(vec![1])));
+        assert!(!kv.set_nx("k", Bytes(vec![2])));
+        assert_eq!(kv.get("k"), Some(Bytes(vec![1])));
+    }
+
+    #[test]
+    fn wait_get_times_out() {
+        let kv = KvState::new();
+        let t0 = Instant::now();
+        let v = kv.wait_get("missing", Some(Duration::from_millis(30)));
+        assert!(v.is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn wait_get_wakes_on_set() {
+        let kv = KvState::new();
+        let kv2 = kv.clone();
+        let h = std::thread::spawn(move || {
+            kv2.wait_get("later", Some(Duration::from_secs(5)))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        kv.set("later", Bytes(vec![7]));
+        assert_eq!(h.join().unwrap(), Some(Bytes(vec![7])));
+    }
+
+    #[test]
+    fn list_fifo_and_blocking_pop() {
+        let kv = KvState::new();
+        kv.lpush("q", Bytes(vec![1]));
+        kv.lpush("q", Bytes(vec![2]));
+        assert_eq!(kv.brpop("q", None), Some(Bytes(vec![1])));
+        assert_eq!(kv.brpop("q", None), Some(Bytes(vec![2])));
+        assert_eq!(kv.brpop("q", Some(Duration::from_millis(10))), None);
+
+        let kv2 = kv.clone();
+        let h = std::thread::spawn(move || kv2.brpop("q", None));
+        std::thread::sleep(Duration::from_millis(20));
+        kv.lpush("q", Bytes(vec![3]));
+        assert_eq!(h.join().unwrap(), Some(Bytes(vec![3])));
+        assert_eq!(kv.gauge.get(), 0);
+    }
+
+    #[test]
+    fn pubsub_fanout_and_counts() {
+        let kv = KvState::new();
+        let rx1 = kv.subscribe(&["c".to_string()]);
+        let rx2 = kv.subscribe(&["c".to_string()]);
+        assert_eq!(kv.publish("c", Bytes(vec![5])), 2);
+        assert_eq!(rx1.recv().unwrap().payload, Bytes(vec![5]));
+        assert_eq!(rx2.recv().unwrap().payload, Bytes(vec![5]));
+        assert_eq!(kv.publish("nobody", Bytes(vec![1])), 0);
+        drop(rx1);
+        assert_eq!(kv.publish("c", Bytes(vec![6])), 1);
+    }
+
+    #[test]
+    fn incr_and_keys() {
+        let kv = KvState::new();
+        assert_eq!(kv.incr("n", 2), 2);
+        assert_eq!(kv.incr("n", -5), -3);
+        kv.set("a:1", Bytes(vec![]));
+        kv.set("a:2", Bytes(vec![]));
+        kv.set("b:1", Bytes(vec![]));
+        assert_eq!(kv.keys("a:"), vec!["a:1".to_string(), "a:2".to_string()]);
+    }
+
+    #[test]
+    fn flush_all_resets_gauge() {
+        let kv = KvState::new();
+        kv.set("a", Bytes(vec![0; 10]));
+        kv.lpush("l", Bytes(vec![0; 5]));
+        kv.flush_all();
+        assert_eq!(kv.gauge.get(), 0);
+        assert!(kv.get("a").is_none());
+        let (keys, bytes, _) = kv.stats();
+        assert_eq!((keys, bytes), (0, 0));
+    }
+
+    #[test]
+    fn value_size_cap() {
+        assert!(KvState::check_value_size(&Bytes(vec![0; 10])).is_ok());
+        // Don't actually allocate 512MB; fabricate a length via from_raw parts
+        // is unsafe -- just trust the threshold logic with a boundary test.
+    }
+
+    #[test]
+    fn mget_alignment() {
+        let kv = KvState::new();
+        kv.set("x", Bytes(vec![1]));
+        let got = kv.mget(&["x".into(), "y".into(), "x".into()]);
+        assert_eq!(got, vec![Some(Bytes(vec![1])), None, Some(Bytes(vec![1]))]);
+    }
+}

@@ -1,0 +1,68 @@
+//! # ProxyStore-RS
+//!
+//! A Rust + JAX + Pallas reproduction of *"Object Proxy Patterns for
+//! Accelerating Distributed Applications"* (Pauloski et al., 2024): the
+//! transparent lazy object proxy plus the paper's three high-level
+//! patterns —
+//!
+//! * **ProxyFutures** ([`futures`]) — engine-agnostic distributed futures
+//!   whose proxies can be minted before the value exists;
+//! * **ProxyStream** ([`stream`]) — object streaming that decouples event
+//!   metadata from bulk data;
+//! * **Ownership** ([`ownership`]) — Rust-style owned/borrowed proxies
+//!   with automatic distributed eviction, plus coarse lifetimes.
+//!
+//! Everything the patterns depend on is built in-tree: a binary codec
+//! ([`codec`]), a Redis-like KV server ([`kv`]), a Kafka-like broker
+//! ([`broker`]), connectors and the typed [`store`], a Dask-like task
+//! execution engine ([`engine`]), a network simulator ([`netsim`]), and a
+//! PJRT runtime ([`runtime`]) that executes the JAX/Pallas-compiled
+//! artifacts from `artifacts/` on the request path with no Python.
+
+pub mod apps;
+pub mod benchlib;
+pub mod broker;
+pub mod cli;
+pub mod codec;
+pub mod engine;
+pub mod error;
+pub mod futures;
+pub mod kv;
+pub mod metrics;
+pub mod netsim;
+pub mod ownership;
+pub mod proxy;
+pub mod rng;
+pub mod runtime;
+pub mod store;
+pub mod stream;
+pub mod testing;
+pub mod workflow;
+
+pub use error::{Error, Result};
+
+/// Crate version string.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Convenience prelude for examples and applications.
+pub mod prelude {
+    pub use crate::codec::{Bytes, Decode, Encode, F32s};
+    pub use crate::error::{Error, Result};
+    pub use crate::futures::ProxyFuture;
+    pub use crate::ownership::lifetime::StoreLifetimeExt;
+    pub use crate::ownership::{
+        borrow, clone_owned, into_owned, mut_borrow, update, ContextLifetime,
+        LeaseLifetime, Lifetime, OwnedProxy, RefMutProxy, RefProxy,
+        StaticLifetime, StoreOwnedExt,
+    };
+    pub use crate::proxy::Proxy;
+    pub use crate::store::{
+        Blob, Connector, ConnectorDesc, FileConnector, MemoryConnector,
+        MultiConnector, Store, TcpKvConnector, ThrottledConnector,
+    };
+    pub use crate::stream::{
+        Event, Metadata, Publisher, StreamConsumer, StreamProducer, Subscriber,
+    };
+}

@@ -1,0 +1,266 @@
+//! `proxystore` launcher: run servers, demos, applications, and the
+//! paper's experiments from one binary.
+
+use std::time::Duration;
+
+use proxystore::apps::{ddmd, genomes, membench, mof, streambench};
+use proxystore::benchlib::fmt_secs;
+use proxystore::cli::Args;
+use proxystore::error::{Error, Result};
+use proxystore::ownership::StoreOwnedExt;
+use proxystore::prelude::{Proxy, ProxyFuture, Store};
+use proxystore::codec::Encode;
+use proxystore::runtime::{default_artifacts_dir, ModelRegistry};
+use proxystore::workflow::DataMode;
+
+const HELP: &str = "\
+proxystore — object proxy patterns for distributed applications
+
+USAGE: proxystore <COMMAND> [OPTIONS]
+
+COMMANDS:
+  quickstart                    minimal proxy / future / ownership demo
+  fig5     [--f 0.2] [--tasks 8] [--task-ms 300] [--size 10000000]
+                                task pipelining (paper Fig 5)
+  fig6     [--workers 8] [--size 1000000] [--items 50]
+                                stream processing (paper Fig 6)
+  fig7     [--rounds 4] [--mappers 8]
+                                memory management (paper Fig 7)
+  genomes  [--mode noproxy|proxy|proxyfuture] [--individuals 64]
+                                1000 Genomes workflow (paper Fig 8)
+  ddmd     [--mode baseline|stream] [--rounds 10]
+                                DeepDriveMD inference (paper Fig 9)
+  mof      [--mode default|ownership] [--rounds 6]
+                                MOF generation (paper Fig 10)
+  serve-kv                      run a redis-sim KV server (ephemeral port)
+  serve-broker                  run a log-broker server (ephemeral port)
+  version                       print the crate version
+
+Artifacts are read from ./artifacts (override: PROXYSTORE_ARTIFACTS).
+Run `make artifacts` first for commands that execute compiled models
+(ddmd, mof).";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        None | Some("help") => {
+            println!("{HELP}");
+            Ok(())
+        }
+        Some("version") => {
+            println!("proxystore {}", proxystore::version());
+            Ok(())
+        }
+        Some("quickstart") => quickstart(),
+        Some("fig5") => fig5(args),
+        Some("fig6") => fig6(args),
+        Some("fig7") => fig7(args),
+        Some("genomes") => genomes_cmd(args),
+        Some("ddmd") => ddmd_cmd(args),
+        Some("mof") => mof_cmd(args),
+        Some("serve-kv") => serve_kv(),
+        Some("serve-broker") => serve_broker(),
+        Some(other) => Err(Error::Config(format!(
+            "unknown command {other:?}; see `proxystore help`"
+        ))),
+    }
+}
+
+fn quickstart() -> Result<()> {
+    println!("# proxies");
+    let store = Store::memory("quickstart");
+    let proxy: Proxy<String> = store.proxy(&"hello proxy".to_string())?;
+    println!("created {proxy:?} ({} wire bytes)", proxy.to_bytes().len());
+    println!("resolved: {}", proxy.resolve()?);
+
+    println!("\n# distributed futures");
+    let fut: ProxyFuture<u64> = store.future();
+    let p = fut.proxy();
+    let consumer = std::thread::spawn(move || *p.resolve().unwrap());
+    std::thread::sleep(Duration::from_millis(50));
+    fut.set_result(&42)?;
+    println!("consumer observed: {}", consumer.join().unwrap());
+
+    println!("\n# ownership");
+    let owned = store.owned_proxy(&"owned".to_string())?;
+    let key = owned.key().to_string();
+    let borrow = proxystore::ownership::borrow(&owned)?;
+    println!("borrowed read: {}", borrow.resolve()?);
+    drop(borrow);
+    drop(owned);
+    println!("evicted after owner drop: {}", !store.exists(&key)?);
+    Ok(())
+}
+
+fn fig5(args: &Args) -> Result<()> {
+    let n: usize = args.get_parse("tasks", 8)?;
+    let task_ms: u64 = args.get_parse("task-ms", 300)?;
+    let d: usize = args.get_parse("size", 10_000_000)?;
+    let f: f64 = args.get_parse("f", 0.2)?;
+    let s = Duration::from_millis(task_ms);
+    println!("fig5: n={n} s={task_ms}ms d={d}B f={f}");
+    for mode in [DataMode::NoProxy, DataMode::Proxy, DataMode::ProxyFuture] {
+        let chain = proxystore::workflow::synthetic_chain(n, s, f, d);
+        let cluster = proxystore::workflow::cluster_for(
+            n,
+            proxystore::engine::ClusterConfig {
+                submit_overhead: Duration::from_millis(5),
+                ..Default::default()
+            },
+        );
+        let store = Store::memory("fig5");
+        let report = chain.run(&cluster, &store, mode)?;
+        println!("\n[{}] makespan = {}", mode.label(), fmt_secs(report.makespan));
+        println!("{}", report.timeline.ascii_gantt(72));
+    }
+    Ok(())
+}
+
+fn fig6(args: &Args) -> Result<()> {
+    let cfg = streambench::StreamBenchConfig {
+        workers: args.get_parse("workers", 8)?,
+        data_size: args.get_parse("size", 1_000_000)?,
+        items: args.get_parse("items", 50)?,
+        task_time: Duration::from_millis(args.get_parse("task-ms", 200)?),
+        dispatcher_bw: args.get_parse("dispatcher-bw", 1.0e8)?,
+        seed: args.get_parse("seed", 6)?,
+    };
+    println!("fig6: {cfg:?}");
+    for mode in streambench::StreamMode::all() {
+        let r = streambench::run(&cfg, mode)?;
+        println!(
+            "[{}] {:.1} tasks/s over {} ({} items)",
+            mode.label(),
+            r.tasks_per_sec,
+            fmt_secs(r.elapsed),
+            r.items
+        );
+    }
+    Ok(())
+}
+
+fn fig7(args: &Args) -> Result<()> {
+    let cfg = membench::MemBenchConfig {
+        rounds: args.get_parse("rounds", 4)?,
+        mappers: args.get_parse("mappers", 8)?,
+        map_input: args.get_parse("map-input", 10_000_000)?,
+        map_output: args.get_parse("map-output", 1_000_000)?,
+        task_sleep: Duration::from_millis(args.get_parse("sleep-ms", 200)?),
+        seed: 7,
+    };
+    println!("fig7: {cfg:?}");
+    for mode in membench::MemMode::all() {
+        let r = membench::run(&cfg, mode)?;
+        println!(
+            "[{}] peak store = {:.1} MB, final = {:.1} MB, makespan = {}",
+            mode.label(),
+            r.series.peak_store() as f64 / 1e6,
+            r.series.final_store() as f64 / 1e6,
+            fmt_secs(r.makespan)
+        );
+    }
+    Ok(())
+}
+
+fn genomes_cmd(args: &Args) -> Result<()> {
+    let cfg = genomes::GenomesConfig {
+        individuals: args.get_parse("individuals", 64)?,
+        chunks: args.get_parse("chunks", 8)?,
+        snps_per_chunk: args.get_parse("snps", 2000)?,
+        ..Default::default()
+    };
+    let mode = match args.get("mode").unwrap_or("proxyfuture") {
+        "noproxy" => DataMode::NoProxy,
+        "proxy" => DataMode::Proxy,
+        "proxyfuture" => DataMode::ProxyFuture,
+        other => return Err(Error::Config(format!("unknown mode {other}"))),
+    };
+    println!("genomes: mode={} {cfg:?}", mode.label());
+    let (report, freq) = genomes::run(&cfg, mode)?;
+    println!("makespan = {}", fmt_secs(report.makespan));
+    println!("overlapping variants found: {}", freq.len());
+    println!("{}", report.timeline.ascii_gantt(72));
+    Ok(())
+}
+
+fn ddmd_cmd(args: &Args) -> Result<()> {
+    let reg = ModelRegistry::load(default_artifacts_dir())?;
+    let cfg = ddmd::DdmdConfig {
+        rounds: args.get_parse("rounds", 10)?,
+        ..Default::default()
+    };
+    match args.get("mode").unwrap_or("stream") {
+        "baseline" => {
+            let r = ddmd::run_baseline(&cfg, &reg)?;
+            println!("baseline mean RTT = {}", fmt_secs(r.mean_rtt));
+        }
+        "stream" => {
+            let r = ddmd::run_proxystream(&cfg, &reg)?;
+            println!(
+                "proxystream mean RTT = {} ({} model updates)",
+                fmt_secs(r.mean_rtt),
+                r.model_updates
+            );
+        }
+        other => return Err(Error::Config(format!("unknown mode {other}"))),
+    }
+    Ok(())
+}
+
+fn mof_cmd(args: &Args) -> Result<()> {
+    let reg = ModelRegistry::load(default_artifacts_dir())?;
+    let cfg = mof::MofConfig {
+        rounds: args.get_parse("rounds", 6)?,
+        generators: args.get_parse("generators", 3)?,
+        ..Default::default()
+    };
+    let mode = match args.get("mode").unwrap_or("ownership") {
+        "default" => mof::MemoryMode::Default,
+        "ownership" => mof::MemoryMode::Ownership,
+        other => return Err(Error::Config(format!("unknown mode {other}"))),
+    };
+    let r = mof::run(&cfg, &reg, mode)?;
+    println!(
+        "[{}] best score = {:.4}, peak active proxies = {}, final = {}",
+        mode.label(),
+        r.best_score,
+        r.series.peak_active(),
+        r.series.final_active()
+    );
+    Ok(())
+}
+
+fn serve_kv() -> Result<()> {
+    let server = proxystore::kv::KvServer::spawn()?;
+    println!("redis-sim KV server listening on {}", server.addr);
+    println!("(ctrl-c to stop)");
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn serve_broker() -> Result<()> {
+    let server = proxystore::broker::BrokerServer::spawn()?;
+    println!("log broker listening on {}", server.addr);
+    println!("(ctrl-c to stop)");
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}

@@ -1,0 +1,219 @@
+//! Memory measurement: process RSS + store-resident bytes (Figs 7, 10).
+//!
+//! The paper plots *system* memory on a node; here the analogue is the
+//! process RSS (everything runs in one process) plus an exact accounting of
+//! bytes resident in mediated stores ([`StoreBytes`] gauges, incremented by
+//! connectors on put and decremented on evict). The store gauge is the
+//! cleaner signal — it is immune to allocator hysteresis — so the Fig 7/10
+//! benches plot both.
+
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Read the process resident set size in bytes from `/proc/self/statm`.
+pub fn rss_bytes() -> u64 {
+    let page = 4096u64; // Linux x86-64 default; fine for a measurement aid
+    std::fs::read_to_string("/proc/self/statm")
+        .ok()
+        .and_then(|s| {
+            s.split_whitespace()
+                .nth(1)
+                .and_then(|v| v.parse::<u64>().ok())
+        })
+        .map(|pages| pages * page)
+        .unwrap_or(0)
+}
+
+/// Gauge of bytes resident in a mediated store (shared by connectors).
+#[derive(Debug, Default)]
+pub struct StoreBytes {
+    bytes: AtomicI64,
+    peak: AtomicI64,
+}
+
+impl StoreBytes {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    pub fn add(&self, n: usize) {
+        let cur = self.bytes.fetch_add(n as i64, Ordering::Relaxed) + n as i64;
+        self.peak.fetch_max(cur, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, n: usize) {
+        self.bytes.fetch_sub(n as i64, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> i64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+}
+
+/// One sample of the memory series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemSample {
+    /// Seconds since sampler start.
+    pub t: f64,
+    /// Process RSS bytes.
+    pub rss: u64,
+    /// Store-resident bytes (sum over registered gauges).
+    pub store: i64,
+}
+
+/// A recorded memory time series.
+#[derive(Debug, Clone, Default)]
+pub struct MemorySeries {
+    pub samples: Vec<MemSample>,
+}
+
+impl MemorySeries {
+    pub fn peak_store(&self) -> i64 {
+        self.samples.iter().map(|s| s.store).max().unwrap_or(0)
+    }
+
+    pub fn peak_rss(&self) -> u64 {
+        self.samples.iter().map(|s| s.rss).max().unwrap_or(0)
+    }
+
+    pub fn final_store(&self) -> i64 {
+        self.samples.last().map(|s| s.store).unwrap_or(0)
+    }
+
+    /// Mean store bytes over the series (the Fig 7 "average memory usage").
+    pub fn mean_store(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().map(|s| s.store as f64).sum::<f64>()
+            / self.samples.len() as f64
+    }
+
+    pub fn csv_rows(&self) -> Vec<String> {
+        self.samples
+            .iter()
+            .map(|s| format!("{:.3},{},{}", s.t, s.rss, s.store))
+            .collect()
+    }
+}
+
+/// Background sampler thread recording RSS + store gauges on a cadence.
+pub struct MemorySampler {
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    handle: Option<std::thread::JoinHandle<MemorySeries>>,
+}
+
+impl MemorySampler {
+    /// Start sampling every `interval`, reading the given gauges.
+    pub fn start(interval: Duration, gauges: Vec<Arc<StoreBytes>>) -> Self {
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("mem-sampler".into())
+            .spawn(move || {
+                let t0 = Instant::now();
+                let mut series = MemorySeries::default();
+                loop {
+                    let store = gauges.iter().map(|g| g.get()).sum();
+                    series.samples.push(MemSample {
+                        t: t0.elapsed().as_secs_f64(),
+                        rss: rss_bytes(),
+                        store,
+                    });
+                    if stop2.load(Ordering::Relaxed) {
+                        return series;
+                    }
+                    std::thread::sleep(interval);
+                }
+            })
+            .expect("spawn mem-sampler");
+        MemorySampler {
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    /// Stop sampling and return the series (includes one final sample).
+    pub fn stop(mut self) -> MemorySeries {
+        self.stop.store(true, Ordering::Relaxed);
+        self.handle
+            .take()
+            .expect("sampler already stopped")
+            .join()
+            .expect("sampler thread panicked")
+    }
+}
+
+/// Shared registry so stores created anywhere can be sampled centrally.
+#[derive(Debug, Default, Clone)]
+pub struct GaugeRegistry {
+    gauges: Arc<Mutex<Vec<Arc<StoreBytes>>>>,
+}
+
+impl GaugeRegistry {
+    pub fn register(&self, g: Arc<StoreBytes>) {
+        self.gauges.lock().unwrap().push(g);
+    }
+
+    pub fn all(&self) -> Vec<Arc<StoreBytes>> {
+        self.gauges.lock().unwrap().clone()
+    }
+
+    pub fn total(&self) -> i64 {
+        self.all().iter().map(|g| g.get()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_is_nonzero_on_linux() {
+        assert!(rss_bytes() > 1024 * 1024);
+    }
+
+    #[test]
+    fn store_bytes_tracks_peak() {
+        let g = StoreBytes::new();
+        g.add(100);
+        g.add(50);
+        g.sub(120);
+        assert_eq!(g.get(), 30);
+        assert_eq!(g.peak(), 150);
+    }
+
+    #[test]
+    fn sampler_records_series() {
+        let g = StoreBytes::new();
+        let sampler =
+            MemorySampler::start(Duration::from_millis(5), vec![g.clone()]);
+        g.add(1_000_000);
+        std::thread::sleep(Duration::from_millis(30));
+        g.sub(1_000_000);
+        std::thread::sleep(Duration::from_millis(15));
+        let series = sampler.stop();
+        assert!(series.samples.len() >= 3, "{}", series.samples.len());
+        assert_eq!(series.peak_store(), 1_000_000);
+        assert_eq!(series.final_store(), 0);
+        assert!(series.peak_rss() > 0);
+        assert!(!series.csv_rows().is_empty());
+    }
+
+    #[test]
+    fn registry_sums_gauges() {
+        let reg = GaugeRegistry::default();
+        let a = StoreBytes::new();
+        let b = StoreBytes::new();
+        reg.register(a.clone());
+        reg.register(b.clone());
+        a.add(5);
+        b.add(7);
+        assert_eq!(reg.total(), 12);
+    }
+}

@@ -1,0 +1,98 @@
+//! Measurement substrate: stage timelines, memory sampling, counters, CSV.
+//!
+//! Every figure in the paper is a view over one of three measurement kinds:
+//! stage start/end timelines (Figs 5a, 8), scalar time series sampled on a
+//! wall-clock cadence (Figs 7, 10), or throughput counters (Figs 6, 9).
+//! This module provides those three primitives plus summary statistics and
+//! CSV output used by the bench harness.
+
+mod memory;
+mod stats;
+mod timeline;
+
+pub use memory::{GaugeRegistry, MemorySampler, MemorySeries, StoreBytes, rss_bytes};
+pub use stats::{Stats, percentile};
+pub use timeline::{StageRecord, Timeline};
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::Result;
+
+/// Write rows to a CSV file under `results/`, creating directories.
+pub fn write_csv<P: AsRef<Path>>(
+    path: P,
+    header: &str,
+    rows: &[String],
+) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{header}")?;
+    for row in rows {
+        writeln!(f, "{row}")?;
+    }
+    Ok(())
+}
+
+/// Monotonic throughput counter: events per second over a window.
+#[derive(Debug, Default)]
+pub struct Throughput {
+    count: std::sync::atomic::AtomicU64,
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&self) {
+        self.count
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.count
+            .fetch_add(n, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Events/sec given an elapsed duration.
+    pub fn rate(&self, elapsed: std::time::Duration) -> f64 {
+        self.count() as f64 / elapsed.as_secs_f64().max(1e-9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_counts() {
+        let t = Throughput::new();
+        for _ in 0..10 {
+            t.incr();
+        }
+        t.add(5);
+        assert_eq!(t.count(), 15);
+        let r = t.rate(std::time::Duration::from_secs(3));
+        assert!((r - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn write_csv_creates_dirs() {
+        let dir = std::env::temp_dir().join(format!(
+            "pxs-csv-{}",
+            std::process::id()
+        ));
+        let path = dir.join("nested/out.csv");
+        write_csv(&path, "a,b", &["1,2".into(), "3,4".into()]).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(content, "a,b\n1,2\n3,4\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,211 @@
+//! Stage timelines: the measurement behind Figs 5a and 8.
+//!
+//! Tasks report `(task, stage)` intervals relative to the timeline's epoch;
+//! the bench harness renders them as rows (one per task) of labelled spans
+//! and computes makespan / per-stage aggregates.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// One recorded `(task, stage)` interval.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageRecord {
+    pub task: String,
+    pub stage: String,
+    /// Seconds since the timeline epoch.
+    pub start: f64,
+    pub end: f64,
+}
+
+impl StageRecord {
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// Thread-safe collection of stage records with a shared epoch.
+#[derive(Debug)]
+pub struct Timeline {
+    epoch: Instant,
+    records: Mutex<Vec<StageRecord>>,
+}
+
+impl Default for Timeline {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Timeline {
+            epoch: Instant::now(),
+            records: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Seconds since the epoch.
+    pub fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Record an interval with explicit bounds (seconds since epoch).
+    pub fn record(&self, task: &str, stage: &str, start: f64, end: f64) {
+        self.records.lock().unwrap().push(StageRecord {
+            task: task.to_string(),
+            stage: stage.to_string(),
+            start,
+            end,
+        });
+    }
+
+    /// Run `f`, recording its duration as a stage interval.
+    pub fn timed<T>(&self, task: &str, stage: &str, f: impl FnOnce() -> T) -> T {
+        let start = self.now();
+        let out = f();
+        let end = self.now();
+        self.record(task, stage, start, end);
+        out
+    }
+
+    /// Snapshot of all records, sorted by start time.
+    pub fn records(&self) -> Vec<StageRecord> {
+        let mut v = self.records.lock().unwrap().clone();
+        v.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        v
+    }
+
+    /// Latest end time across all records (the makespan if the epoch is t0).
+    pub fn makespan(&self) -> f64 {
+        self.records
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|r| r.end)
+            .fold(0.0, f64::max)
+    }
+
+    /// `(start, end)` envelope of every record whose stage name matches.
+    pub fn stage_envelope(&self, stage: &str) -> Option<(f64, f64)> {
+        let recs = self.records.lock().unwrap();
+        let matching: Vec<_> = recs.iter().filter(|r| r.stage == stage).collect();
+        if matching.is_empty() {
+            return None;
+        }
+        let start = matching.iter().map(|r| r.start).fold(f64::MAX, f64::min);
+        let end = matching.iter().map(|r| r.end).fold(0.0, f64::max);
+        Some((start, end))
+    }
+
+    /// Total time attributed to a stage, summed over tasks.
+    pub fn stage_total(&self, stage: &str) -> f64 {
+        self.records
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|r| r.stage == stage)
+            .map(|r| r.duration())
+            .sum()
+    }
+
+    /// CSV rows: `task,stage,start,end`.
+    pub fn csv_rows(&self) -> Vec<String> {
+        self.records()
+            .iter()
+            .map(|r| format!("{},{},{:.6},{:.6}", r.task, r.stage, r.start, r.end))
+            .collect()
+    }
+
+    /// Render a coarse ASCII Gantt chart (one row per task) for bench
+    /// stdout; `width` columns span `[0, makespan]`.
+    pub fn ascii_gantt(&self, width: usize) -> String {
+        let recs = self.records();
+        let makespan = self.makespan().max(1e-9);
+        let mut tasks: Vec<String> = Vec::new();
+        for r in &recs {
+            if !tasks.contains(&r.task) {
+                tasks.push(r.task.clone());
+            }
+        }
+        let mut out = String::new();
+        for task in &tasks {
+            let mut row = vec![' '; width];
+            for r in recs.iter().filter(|r| &r.task == task) {
+                let a = ((r.start / makespan) * width as f64) as usize;
+                let b = (((r.end / makespan) * width as f64).ceil() as usize)
+                    .min(width);
+                let ch = r.stage.chars().next().unwrap_or('?');
+                for slot in row.iter_mut().take(b).skip(a.min(width)) {
+                    *slot = ch;
+                }
+            }
+            out.push_str(&format!(
+                "{:>12} |{}|\n",
+                &task[..task.len().min(12)],
+                row.iter().collect::<String>()
+            ));
+        }
+        out.push_str(&format!("makespan = {:.3}s\n", makespan));
+        out
+    }
+
+    /// Shift used when simulating: record an interval of a known duration
+    /// ending now.
+    pub fn record_ending_now(&self, task: &str, stage: &str, dur: Duration) {
+        let end = self.now();
+        self.record(task, stage, end - dur.as_secs_f64(), end);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_records_interval() {
+        let t = Timeline::new();
+        let v = t.timed("t0", "compute", || {
+            std::thread::sleep(Duration::from_millis(10));
+            42
+        });
+        assert_eq!(v, 42);
+        let recs = t.records();
+        assert_eq!(recs.len(), 1);
+        assert!(recs[0].duration() >= 0.009, "{recs:?}");
+        assert!(t.makespan() >= recs[0].end);
+    }
+
+    #[test]
+    fn stage_envelope_and_totals() {
+        let t = Timeline::new();
+        t.record("a", "s1", 0.0, 1.0);
+        t.record("b", "s1", 0.5, 2.0);
+        t.record("c", "s2", 2.0, 3.0);
+        assert_eq!(t.stage_envelope("s1"), Some((0.0, 2.0)));
+        assert_eq!(t.stage_envelope("s3"), None);
+        assert!((t.stage_total("s1") - 2.5).abs() < 1e-12);
+        assert!((t.makespan() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_and_gantt_render() {
+        let t = Timeline::new();
+        t.record("task-a", "overhead", 0.0, 0.2);
+        t.record("task-a", "compute", 0.2, 1.0);
+        let rows = t.csv_rows();
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].starts_with("task-a,overhead,"));
+        let g = t.ascii_gantt(40);
+        assert!(g.contains("task-a"));
+        assert!(g.contains('o') && g.contains('c'));
+    }
+
+    #[test]
+    fn records_sorted_by_start() {
+        let t = Timeline::new();
+        t.record("b", "s", 5.0, 6.0);
+        t.record("a", "s", 1.0, 2.0);
+        let recs = t.records();
+        assert_eq!(recs[0].task, "a");
+    }
+}

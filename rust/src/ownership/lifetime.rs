@@ -1,0 +1,279 @@
+//! Lifetimes (Sec IV-C, Listing 4): coarser-than-task scopes that clean up
+//! every object associated with them when they end.
+//!
+//! Three built-ins, matching the paper: [`ContextLifetime`] (RAII scope),
+//! [`LeaseLifetime`] (time-based lease with extension, after Gray &
+//! Cheriton), and [`StaticLifetime`] (process-long). All share the
+//! [`Lifetime`] trait so `Store::proxy` integration and user extensions
+//! are uniform.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::codec::Encode;
+use crate::error::Result;
+use crate::proxy::{Factory, Proxy};
+use crate::store::Store;
+
+/// A scope that owns stored objects and evicts them when it ends.
+pub trait Lifetime: Send + Sync {
+    /// Associate a stored object with this lifetime.
+    fn attach(&self, factory: Factory);
+
+    /// Has the lifetime ended (objects cleaned up)?
+    fn done(&self) -> bool;
+
+    /// End the lifetime now, evicting all associated objects.
+    fn close(&self);
+}
+
+/// Extension for proxy creation with a lifetime attached.
+pub trait StoreLifetimeExt {
+    /// `Store.proxy(obj, lifetime=...)` from Listing 4.
+    fn proxy_with_lifetime<T: Encode>(
+        &self,
+        obj: &T,
+        lifetime: &dyn Lifetime,
+    ) -> Result<Proxy<T>>;
+}
+
+impl StoreLifetimeExt for Store {
+    fn proxy_with_lifetime<T: Encode>(
+        &self,
+        obj: &T,
+        lifetime: &dyn Lifetime,
+    ) -> Result<Proxy<T>> {
+        let p = self.proxy(obj)?;
+        lifetime.attach(p.factory().clone());
+        Ok(p)
+    }
+}
+
+#[derive(Default)]
+struct Attached {
+    factories: Vec<Factory>,
+    closed: bool,
+}
+
+impl Attached {
+    fn close_now(&mut self) {
+        if self.closed {
+            return;
+        }
+        self.closed = true;
+        for f in self.factories.drain(..) {
+            f.invalidate_cache();
+            if let Ok(conn) = f.connector() {
+                let _ = conn.evict(&f.key);
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+
+/// RAII scope: evicts attached objects when dropped (or on `close`).
+#[derive(Default)]
+pub struct ContextLifetime {
+    attached: Mutex<Attached>,
+}
+
+impl ContextLifetime {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Lifetime for ContextLifetime {
+    fn attach(&self, factory: Factory) {
+        let mut a = self.attached.lock().unwrap();
+        assert!(!a.closed, "attach on closed lifetime");
+        a.factories.push(factory);
+    }
+
+    fn done(&self) -> bool {
+        self.attached.lock().unwrap().closed
+    }
+
+    fn close(&self) {
+        self.attached.lock().unwrap().close_now();
+    }
+}
+
+impl Drop for ContextLifetime {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+// --------------------------------------------------------------------------
+
+/// Time-leased lifetime: objects are evicted when the lease expires and is
+/// not extended. A monitor thread enforces expiry without client polling.
+pub struct LeaseLifetime {
+    inner: Arc<LeaseInner>,
+}
+
+struct LeaseInner {
+    attached: Mutex<Attached>,
+    expiry: Mutex<Instant>,
+}
+
+impl LeaseLifetime {
+    /// Lease expiring `ttl` from now.
+    pub fn new(ttl: Duration) -> LeaseLifetime {
+        let inner = Arc::new(LeaseInner {
+            attached: Mutex::new(Attached::default()),
+            expiry: Mutex::new(Instant::now() + ttl),
+        });
+        let monitor = Arc::downgrade(&inner);
+        std::thread::Builder::new()
+            .name("lease-monitor".into())
+            .spawn(move || loop {
+                let Some(inner) = monitor.upgrade() else { return };
+                let expiry = *inner.expiry.lock().unwrap();
+                let now = Instant::now();
+                if now >= expiry {
+                    inner.attached.lock().unwrap().close_now();
+                    return;
+                }
+                let wait = (expiry - now).min(Duration::from_millis(50));
+                drop(inner);
+                std::thread::sleep(wait);
+            })
+            .expect("spawn lease-monitor");
+        LeaseLifetime { inner }
+    }
+
+    /// Extend the lease by `extra` (from the current expiry; Listing 4's
+    /// `lease.extend(5)`).
+    pub fn extend(&self, extra: Duration) {
+        let mut expiry = self.inner.expiry.lock().unwrap();
+        *expiry += extra;
+    }
+
+    /// Remaining time on the lease.
+    pub fn remaining(&self) -> Duration {
+        self.inner
+            .expiry
+            .lock()
+            .unwrap()
+            .saturating_duration_since(Instant::now())
+    }
+}
+
+impl Lifetime for LeaseLifetime {
+    fn attach(&self, factory: Factory) {
+        let mut a = self.inner.attached.lock().unwrap();
+        assert!(!a.closed, "attach on expired lease");
+        a.factories.push(factory);
+    }
+
+    fn done(&self) -> bool {
+        self.inner.attached.lock().unwrap().closed
+    }
+
+    fn close(&self) {
+        self.inner.attached.lock().unwrap().close_now();
+    }
+}
+
+// --------------------------------------------------------------------------
+
+/// Process-long lifetime: objects persist until explicit global close.
+pub struct StaticLifetime;
+
+fn static_attached() -> &'static Mutex<Attached> {
+    static A: std::sync::OnceLock<Mutex<Attached>> = std::sync::OnceLock::new();
+    A.get_or_init(Default::default)
+}
+
+impl StaticLifetime {
+    /// Evict everything attached to the static lifetime (e.g. at shutdown).
+    pub fn close_all() {
+        let mut a = static_attached().lock().unwrap();
+        a.close_now();
+        a.closed = false; // static lifetime is reusable after a sweep
+    }
+}
+
+impl Lifetime for StaticLifetime {
+    fn attach(&self, factory: Factory) {
+        static_attached().lock().unwrap().factories.push(factory);
+    }
+
+    fn done(&self) -> bool {
+        false
+    }
+
+    fn close(&self) {
+        StaticLifetime::close_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_lifetime_evicts_on_drop() {
+        let s = Store::memory("lt");
+        let key;
+        {
+            let lt = ContextLifetime::new();
+            let p = s.proxy_with_lifetime(&"v".to_string(), &lt).unwrap();
+            key = p.key().to_string();
+            assert!(s.exists(&key).unwrap());
+            assert!(!lt.done());
+        }
+        assert!(!s.exists(&key).unwrap());
+    }
+
+    #[test]
+    fn context_close_is_idempotent() {
+        let s = Store::memory("lt");
+        let lt = ContextLifetime::new();
+        let p = s.proxy_with_lifetime(&1u8, &lt).unwrap();
+        lt.close();
+        lt.close();
+        assert!(lt.done());
+        assert!(!s.exists(p.key()).unwrap());
+    }
+
+    #[test]
+    fn lease_expires_and_cleans_up() {
+        let s = Store::memory("lt");
+        let lease = LeaseLifetime::new(Duration::from_millis(60));
+        let p = s.proxy_with_lifetime(&"x".to_string(), &lease).unwrap();
+        assert!(s.exists(p.key()).unwrap());
+        std::thread::sleep(Duration::from_millis(160));
+        assert!(lease.done());
+        assert!(!s.exists(p.key()).unwrap());
+    }
+
+    #[test]
+    fn lease_extension_delays_expiry() {
+        // Listing 4's scenario: 10-unit lease extended by 5.
+        let s = Store::memory("lt");
+        let lease = LeaseLifetime::new(Duration::from_millis(80));
+        let p = s.proxy_with_lifetime(&1u32, &lease).unwrap();
+        lease.extend(Duration::from_millis(120));
+        std::thread::sleep(Duration::from_millis(120));
+        assert!(!lease.done(), "extension must delay expiry");
+        assert!(s.exists(p.key()).unwrap());
+        std::thread::sleep(Duration::from_millis(150));
+        assert!(lease.done());
+        assert!(!s.exists(p.key()).unwrap());
+    }
+
+    #[test]
+    fn static_lifetime_survives_until_sweep() {
+        let s = Store::memory("lt");
+        let p = s
+            .proxy_with_lifetime(&"static".to_string(), &StaticLifetime)
+            .unwrap();
+        assert!(s.exists(p.key()).unwrap());
+        StaticLifetime::close_all();
+        assert!(!s.exists(p.key()).unwrap());
+    }
+}

@@ -1,0 +1,635 @@
+//! Proxy ownership model (Sec IV-C): Rust's ownership & borrowing rules
+//! applied to *distributed* objects.
+//!
+//! - [`OwnedProxy<T>`] — the single owner of a stored object. When it goes
+//!   out of scope the object is evicted from the mediated channel.
+//! - [`RefProxy<T>`] — an immutable borrow; any number may exist at once.
+//! - [`RefMutProxy<T>`] — a mutable borrow with exclusive write access to
+//!   the global copy; at most one, and never alongside `RefProxy`s.
+//!
+//! The compiler already enforces these rules for *local* lifetimes; the
+//! distributed part — "is the object still resident in the store, and who
+//! may mutate it" — is enforced at runtime through a per-key
+//! [`BorrowState`] registry, mirroring the paper's Python implementation
+//! (which has no compiler to lean on at all). Violations (e.g. dropping an
+//! owner while borrows are live) are recorded in a global counter and the
+//! eviction is *deferred* to the last borrow, trading the paper's runtime
+//! exception for memory safety plus an observable diagnostic;
+//! [`take_violations`] lets tests and the StoreExecutor surface them.
+
+pub mod lifetime;
+
+pub use lifetime::{ContextLifetime, LeaseLifetime, Lifetime, StaticLifetime};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::codec::{Decode, Encode, Reader};
+use crate::error::{Error, Result};
+use crate::proxy::{Factory, Proxy};
+use crate::store::Store;
+
+/// Borrow bookkeeping for one stored object.
+#[derive(Debug, Default)]
+pub struct BorrowState {
+    inner: Mutex<BorrowInner>,
+}
+
+#[derive(Debug, Default)]
+struct BorrowInner {
+    refs: u32,
+    mut_out: bool,
+    owner_alive: bool,
+    /// Owner dropped while borrows were live: evict when the last borrow
+    /// returns.
+    evict_deferred: bool,
+}
+
+fn registry() -> &'static Mutex<HashMap<String, Arc<BorrowState>>> {
+    static REG: OnceLock<Mutex<HashMap<String, Arc<BorrowState>>>> =
+        OnceLock::new();
+    REG.get_or_init(Default::default)
+}
+
+fn state_for(key: &str) -> Arc<BorrowState> {
+    registry()
+        .lock()
+        .unwrap()
+        .entry(key.to_string())
+        .or_default()
+        .clone()
+}
+
+fn drop_state(key: &str) {
+    registry().lock().unwrap().remove(key);
+}
+
+static VIOLATIONS: AtomicU64 = AtomicU64::new(0);
+
+fn record_violation(msg: &str) {
+    VIOLATIONS.fetch_add(1, Ordering::Relaxed);
+    eprintln!("[proxystore] ownership violation: {msg}");
+}
+
+/// Total ownership violations since the last [`take_violations`] call.
+pub fn take_violations() -> u64 {
+    VIOLATIONS.swap(0, Ordering::Relaxed)
+}
+
+fn evict_key(factory: &Factory) {
+    factory.invalidate_cache();
+    if let Ok(conn) = factory.connector() {
+        let _ = conn.evict(&factory.key);
+    }
+    drop_state(&factory.key);
+}
+
+// --------------------------------------------------------------------------
+// OwnedProxy
+// --------------------------------------------------------------------------
+
+/// Sole owner of a stored object; evicts the global copy on drop.
+pub struct OwnedProxy<T: Decode + Encode> {
+    proxy: Proxy<T>,
+    state: Arc<BorrowState>,
+    /// Cleared when ownership is transferred (wire move) or consumed.
+    armed: bool,
+}
+
+impl<T: Decode + Encode> OwnedProxy<T> {
+    fn register(proxy: Proxy<T>) -> Result<OwnedProxy<T>> {
+        let state = state_for(proxy.key());
+        {
+            let mut inner = state.inner.lock().unwrap();
+            if inner.owner_alive {
+                return Err(Error::Ownership(format!(
+                    "object {} already has an owner",
+                    proxy.key()
+                )));
+            }
+            inner.owner_alive = true;
+        }
+        Ok(OwnedProxy { proxy, state, armed: true })
+    }
+
+    /// Create from a store (see also `owned_proxy` on [`StoreOwnedExt`]).
+    pub fn create(store: &Store, obj: &T) -> Result<OwnedProxy<T>> {
+        let proxy = store.proxy(obj)?;
+        Self::register(proxy)
+    }
+
+    pub fn key(&self) -> &str {
+        self.proxy.key()
+    }
+
+    pub fn factory(&self) -> &Factory {
+        self.proxy.factory()
+    }
+
+    /// Resolve the target (read access through the owner).
+    pub fn resolve(&self) -> Result<&T> {
+        self.proxy.resolve()
+    }
+
+    /// Immutable borrow. Fails if a mutable borrow is outstanding.
+    pub fn borrow(&self) -> Result<RefProxy<T>> {
+        let mut inner = self.state.inner.lock().unwrap();
+        if inner.mut_out {
+            return Err(Error::Ownership(format!(
+                "cannot borrow {}: mutable borrow outstanding",
+                self.key()
+            )));
+        }
+        inner.refs += 1;
+        Ok(RefProxy {
+            proxy: self.proxy.clone(),
+            state: self.state.clone(),
+            armed: true,
+        })
+    }
+
+    /// Mutable borrow. Fails if any borrow is outstanding.
+    pub fn mut_borrow(&self) -> Result<RefMutProxy<T>> {
+        let mut inner = self.state.inner.lock().unwrap();
+        if inner.mut_out {
+            return Err(Error::Ownership(format!(
+                "cannot mut-borrow {}: mutable borrow outstanding",
+                self.key()
+            )));
+        }
+        if inner.refs > 0 {
+            return Err(Error::Ownership(format!(
+                "cannot mut-borrow {}: {} immutable borrow(s) outstanding",
+                self.key(),
+                inner.refs
+            )));
+        }
+        inner.mut_out = true;
+        Ok(RefMutProxy {
+            proxy: self.proxy.clone(),
+            state: self.state.clone(),
+            armed: true,
+        })
+    }
+
+    /// Deep-copy the object under a new key owned by the clone.
+    pub fn clone_owned(&self, store: &Store) -> Result<OwnedProxy<T>> {
+        let conn = self.proxy.factory().connector()?;
+        let bytes = conn.get(self.key())?.ok_or_else(|| {
+            Error::NotFound(self.key().to_string())
+        })?;
+        let key = store.new_key();
+        store.connector().put(&key, bytes.to_vec())?;
+        Self::register(store.proxy_from_key(&key))
+    }
+
+    /// Overwrite the stored object. Fails if any borrow is outstanding
+    /// (same rule as mutating through an `&mut` while borrowed).
+    pub fn update(&mut self, obj: &T) -> Result<()> {
+        {
+            let inner = self.state.inner.lock().unwrap();
+            if inner.mut_out || inner.refs > 0 {
+                return Err(Error::Ownership(format!(
+                    "cannot update {}: borrows outstanding",
+                    self.key()
+                )));
+            }
+        }
+        let conn = self.proxy.factory().connector()?;
+        conn.put(self.key(), obj.to_bytes())?;
+        self.proxy.factory().invalidate_cache();
+        // Invalidate the proxy-local cache by swapping in a fresh proxy.
+        self.proxy = Proxy::from_factory(self.proxy.factory().clone());
+        Ok(())
+    }
+
+    /// Package ownership for transfer across a wire / engine boundary.
+    /// `self` is disarmed; exactly one receiver may re-own via
+    /// [`OwnedProxy::from_token`].
+    pub fn transfer(mut self) -> OwnedToken<T> {
+        self.armed = false;
+        self.state.inner.lock().unwrap().owner_alive = false;
+        OwnedToken {
+            factory: self.proxy.factory().clone(),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// Re-own a transferred object.
+    pub fn from_token(token: OwnedToken<T>) -> Result<OwnedProxy<T>> {
+        Self::register(Proxy::from_factory(token.factory))
+    }
+
+    /// Explicit end-of-life with error reporting (unlike `Drop`, which can
+    /// only record violations).
+    pub fn end(mut self) -> Result<()> {
+        self.armed = false;
+        let outstanding = {
+            let mut inner = self.state.inner.lock().unwrap();
+            inner.owner_alive = false;
+            if inner.refs > 0 || inner.mut_out {
+                inner.evict_deferred = true;
+                true
+            } else {
+                false
+            }
+        };
+        if outstanding {
+            return Err(Error::Ownership(format!(
+                "owner of {} ended while borrows outstanding",
+                self.key()
+            )));
+        }
+        evict_key(self.proxy.factory());
+        Ok(())
+    }
+}
+
+impl<T: Decode + Encode> Drop for OwnedProxy<T> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let outstanding = {
+            let mut inner = self.state.inner.lock().unwrap();
+            inner.owner_alive = false;
+            if inner.refs > 0 || inner.mut_out {
+                inner.evict_deferred = true;
+                true
+            } else {
+                false
+            }
+        };
+        if outstanding {
+            record_violation(&format!(
+                "owner of {} dropped while borrows outstanding; eviction deferred",
+                self.key()
+            ));
+        } else {
+            evict_key(self.proxy.factory());
+        }
+    }
+}
+
+impl<T: Decode + Encode> std::fmt::Debug for OwnedProxy<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OwnedProxy").field("key", &self.key()).finish()
+    }
+}
+
+/// Wire token representing transferred ownership.
+pub struct OwnedToken<T> {
+    factory: Factory,
+    _marker: std::marker::PhantomData<fn() -> T>,
+}
+
+impl<T> Encode for OwnedToken<T> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.factory.encode(buf);
+    }
+}
+impl<T> Decode for OwnedToken<T> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(OwnedToken {
+            factory: Factory::decode(r)?,
+            _marker: std::marker::PhantomData,
+        })
+    }
+}
+
+// --------------------------------------------------------------------------
+// RefProxy / RefMutProxy
+// --------------------------------------------------------------------------
+
+/// Immutable borrow of a stored object.
+pub struct RefProxy<T: Decode> {
+    proxy: Proxy<T>,
+    state: Arc<BorrowState>,
+    armed: bool,
+}
+
+impl<T: Decode> RefProxy<T> {
+    pub fn key(&self) -> &str {
+        self.proxy.key()
+    }
+
+    /// Read the target.
+    pub fn resolve(&self) -> Result<&T> {
+        self.proxy.resolve()
+    }
+
+    /// Package for wire transfer; the receiving side reconstructs with
+    /// [`RefProxy::from_wire`] and the borrow count carries over.
+    pub fn to_wire(mut self) -> Vec<u8> {
+        self.armed = false; // count stays held by the wire token
+        self.proxy.factory().to_bytes()
+    }
+
+    /// Adopt a wire-transferred borrow (does NOT increment again).
+    pub fn from_wire(bytes: &[u8]) -> Result<RefProxy<T>> {
+        let factory = Factory::from_bytes(bytes)?;
+        let state = state_for(&factory.key);
+        Ok(RefProxy {
+            proxy: Proxy::from_factory(factory),
+            state,
+            armed: true,
+        })
+    }
+}
+
+fn release_read(state: &Arc<BorrowState>, factory: &Factory) {
+    let evict = {
+        let mut inner = state.inner.lock().unwrap();
+        inner.refs = inner.refs.saturating_sub(1);
+        inner.evict_deferred && inner.refs == 0 && !inner.mut_out
+    };
+    if evict {
+        evict_key(factory);
+    }
+}
+
+impl<T: Decode> Drop for RefProxy<T> {
+    fn drop(&mut self) {
+        if self.armed {
+            release_read(&self.state, self.proxy.factory());
+        }
+    }
+}
+
+impl<T: Decode> std::fmt::Debug for RefProxy<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RefProxy").field("key", &self.key()).finish()
+    }
+}
+
+/// Mutable borrow: exclusive right to rewrite the global copy.
+pub struct RefMutProxy<T: Decode + Encode> {
+    proxy: Proxy<T>,
+    state: Arc<BorrowState>,
+    armed: bool,
+}
+
+impl<T: Decode + Encode> RefMutProxy<T> {
+    pub fn key(&self) -> &str {
+        self.proxy.key()
+    }
+
+    pub fn resolve(&self) -> Result<&T> {
+        self.proxy.resolve()
+    }
+
+    /// Write a new value to the global copy (the borrow stays live, so
+    /// repeated commits are allowed until drop).
+    pub fn commit(&mut self, obj: &T) -> Result<()> {
+        let conn = self.proxy.factory().connector()?;
+        conn.put(self.key(), obj.to_bytes())?;
+        self.proxy.factory().invalidate_cache();
+        self.proxy = Proxy::from_factory(self.proxy.factory().clone());
+        Ok(())
+    }
+
+    /// Wire transfer (exclusive right moves with the token).
+    pub fn to_wire(mut self) -> Vec<u8> {
+        self.armed = false;
+        self.proxy.factory().to_bytes()
+    }
+
+    pub fn from_wire(bytes: &[u8]) -> Result<RefMutProxy<T>> {
+        let factory = Factory::from_bytes(bytes)?;
+        let state = state_for(&factory.key);
+        Ok(RefMutProxy {
+            proxy: Proxy::from_factory(factory),
+            state,
+            armed: true,
+        })
+    }
+}
+
+fn release_write(state: &Arc<BorrowState>, factory: &Factory) {
+    let evict = {
+        let mut inner = state.inner.lock().unwrap();
+        inner.mut_out = false;
+        inner.evict_deferred && inner.refs == 0
+    };
+    if evict {
+        evict_key(factory);
+    }
+}
+
+impl<T: Decode + Encode> Drop for RefMutProxy<T> {
+    fn drop(&mut self) {
+        if self.armed {
+            release_write(&self.state, self.proxy.factory());
+        }
+    }
+}
+
+impl<T: Decode + Encode> std::fmt::Debug for RefMutProxy<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RefMutProxy").field("key", &self.key()).finish()
+    }
+}
+
+// --------------------------------------------------------------------------
+// Store extension + free functions mirroring Listing 3
+// --------------------------------------------------------------------------
+
+/// `Store::owned_proxy` (Listing 3).
+pub trait StoreOwnedExt {
+    fn owned_proxy<T: Decode + Encode>(&self, obj: &T) -> Result<OwnedProxy<T>>;
+}
+
+impl StoreOwnedExt for Store {
+    fn owned_proxy<T: Decode + Encode>(&self, obj: &T) -> Result<OwnedProxy<T>> {
+        OwnedProxy::create(self, obj)
+    }
+}
+
+/// Adopt an unowned proxy into the ownership model (Listing 3's
+/// `into_owned`). The proxy's target must still exist.
+pub fn into_owned<T: Decode + Encode>(proxy: Proxy<T>) -> Result<OwnedProxy<T>> {
+    let conn = proxy.factory().connector()?;
+    if !conn.exists(proxy.key())? {
+        return Err(Error::NotFound(proxy.key().to_string()));
+    }
+    OwnedProxy::register_pub(proxy)
+}
+
+impl<T: Decode + Encode> OwnedProxy<T> {
+    fn register_pub(proxy: Proxy<T>) -> Result<OwnedProxy<T>> {
+        Self::register(proxy)
+    }
+}
+
+/// Listing 3's `borrow(...)`.
+pub fn borrow<T: Decode + Encode>(owned: &OwnedProxy<T>) -> Result<RefProxy<T>> {
+    owned.borrow()
+}
+
+/// Listing 3's `mut_borrow(...)`.
+pub fn mut_borrow<T: Decode + Encode>(
+    owned: &OwnedProxy<T>,
+) -> Result<RefMutProxy<T>> {
+    owned.mut_borrow()
+}
+
+/// Listing 3's `clone(...)`.
+pub fn clone_owned<T: Decode + Encode>(
+    owned: &OwnedProxy<T>,
+    store: &Store,
+) -> Result<OwnedProxy<T>> {
+    owned.clone_owned(store)
+}
+
+/// Listing 3's `update(...)`.
+pub fn update<T: Decode + Encode>(
+    owned: &mut OwnedProxy<T>,
+    obj: &T,
+) -> Result<()> {
+    owned.update(obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> Store {
+        Store::memory("own")
+    }
+
+    #[test]
+    fn owner_drop_evicts() {
+        let s = store();
+        let key;
+        {
+            let owned = s.owned_proxy(&"v".to_string()).unwrap();
+            key = owned.key().to_string();
+            assert!(s.exists(&key).unwrap());
+            assert_eq!(owned.resolve().unwrap(), "v");
+        }
+        assert!(!s.exists(&key).unwrap());
+        assert_eq!(take_violations(), 0);
+    }
+
+    #[test]
+    fn single_owner_enforced() {
+        let s = store();
+        let owned = s.owned_proxy(&1u32).unwrap();
+        let plain: Proxy<u32> = s.proxy_from_key(owned.key());
+        assert!(matches!(into_owned(plain), Err(Error::Ownership(_))));
+    }
+
+    #[test]
+    fn many_readers_allowed() {
+        let s = store();
+        let owned = s.owned_proxy(&5u32).unwrap();
+        let r1 = borrow(&owned).unwrap();
+        let r2 = borrow(&owned).unwrap();
+        assert_eq!(*r1.resolve().unwrap(), 5);
+        assert_eq!(*r2.resolve().unwrap(), 5);
+        // With readers out, no mut borrow and no update.
+        assert!(mut_borrow(&owned).is_err());
+        drop(r1);
+        drop(r2);
+        let mut owned = owned;
+        update(&mut owned, &6u32).unwrap();
+        assert_eq!(*owned.resolve().unwrap(), 6);
+    }
+
+    #[test]
+    fn mut_borrow_exclusive() {
+        let s = store();
+        let owned = s.owned_proxy(&1u32).unwrap();
+        let m = mut_borrow(&owned).unwrap();
+        assert!(borrow(&owned).is_err());
+        assert!(mut_borrow(&owned).is_err());
+        drop(m);
+        assert!(borrow(&owned).is_ok());
+    }
+
+    #[test]
+    fn ref_mut_commit_visible_to_owner() {
+        let s = store();
+        let owned = s.owned_proxy(&10u32).unwrap();
+        {
+            let mut m = mut_borrow(&owned).unwrap();
+            assert_eq!(*m.resolve().unwrap(), 10);
+            m.commit(&20u32).unwrap();
+        }
+        // Owner sees the committed value (fresh resolve; owner hadn't
+        // cached yet in this test).
+        assert_eq!(*owned.resolve().unwrap(), 20);
+    }
+
+    #[test]
+    fn owner_drop_with_live_borrow_defers_eviction() {
+        let s = store();
+        let owned = s.owned_proxy(&"x".to_string()).unwrap();
+        let key = owned.key().to_string();
+        let r = borrow(&owned).unwrap();
+        drop(owned); // violation: reader still out
+        assert_eq!(take_violations(), 1);
+        assert!(s.exists(&key).unwrap(), "eviction must be deferred");
+        assert_eq!(r.resolve().unwrap(), "x");
+        drop(r);
+        assert!(!s.exists(&key).unwrap(), "last borrow evicts");
+    }
+
+    #[test]
+    fn end_reports_violation_as_error() {
+        let s = store();
+        let owned = s.owned_proxy(&1u8).unwrap();
+        let _r = borrow(&owned).unwrap();
+        assert!(matches!(owned.end(), Err(Error::Ownership(_))));
+    }
+
+    #[test]
+    fn clone_owned_is_independent() {
+        let s = store();
+        let a = s.owned_proxy(&7u32).unwrap();
+        let b = clone_owned(&a, &s).unwrap();
+        assert_ne!(a.key(), b.key());
+        let (ka, kb) = (a.key().to_string(), b.key().to_string());
+        drop(a);
+        assert!(!s.exists(&ka).unwrap());
+        assert!(s.exists(&kb).unwrap());
+        assert_eq!(*b.resolve().unwrap(), 7);
+    }
+
+    #[test]
+    fn transfer_moves_ownership() {
+        let s = store();
+        let owned = s.owned_proxy(&3u32).unwrap();
+        let key = owned.key().to_string();
+        let token = owned.transfer();
+        assert!(s.exists(&key).unwrap(), "transfer must not evict");
+        let wire = token.to_bytes();
+        let token2: OwnedToken<u32> = OwnedToken::from_bytes(&wire).unwrap();
+        let owned2 = OwnedProxy::from_token(token2).unwrap();
+        assert_eq!(*owned2.resolve().unwrap(), 3);
+        drop(owned2);
+        assert!(!s.exists(&key).unwrap());
+    }
+
+    #[test]
+    fn ref_wire_transfer_keeps_count() {
+        let s = store();
+        let owned = s.owned_proxy(&2u32).unwrap();
+        let wire = borrow(&owned).unwrap().to_wire();
+        // Count is still held by the wire token: mut borrow fails.
+        assert!(mut_borrow(&owned).is_err());
+        let r = RefProxy::<u32>::from_wire(&wire).unwrap();
+        assert_eq!(*r.resolve().unwrap(), 2);
+        drop(r);
+        assert!(mut_borrow(&owned).is_ok());
+    }
+
+    #[test]
+    fn into_owned_requires_live_target() {
+        let s = store();
+        let p: Proxy<u32> = s.proxy(&1u32).unwrap();
+        s.evict(p.key()).unwrap();
+        assert!(matches!(into_owned(p), Err(Error::NotFound(_))));
+    }
+}

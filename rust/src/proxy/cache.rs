@@ -1,0 +1,220 @@
+//! Process-local LRU blob cache for proxy resolution.
+//!
+//! ProxyStore caches deserialized targets per process so that resolving
+//! many proxies of the same object (or re-resolving after a clone) does
+//! not re-fetch bulk bytes. Keys are never reused by `Store::new_key`, so
+//! a cached blob can never be stale — at worst it outlives its store copy,
+//! which is exactly the pass-by-value copy semantics proxies promise.
+//!
+//! The cache is byte-budgeted LRU, keyed by `(connector-desc, key)`.
+//! Capacity comes from `PROXYSTORE_CACHE_BYTES` (default 64 MiB; 0
+//! disables). Wait-mode (future) factories bypass the cache before the
+//! value exists and populate it after.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::store::Blob;
+
+/// Byte-budgeted LRU of resolution blobs.
+pub struct BlobCache {
+    inner: Mutex<CacheInner>,
+    capacity: usize,
+}
+
+struct CacheInner {
+    map: HashMap<(Vec<u8>, String), (Blob, u64)>,
+    bytes: usize,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl BlobCache {
+    pub fn new(capacity: usize) -> BlobCache {
+        BlobCache {
+            inner: Mutex::new(CacheInner {
+                map: HashMap::new(),
+                bytes: 0,
+                tick: 0,
+                hits: 0,
+                misses: 0,
+            }),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Look up a blob, refreshing its recency.
+    pub fn get(&self, desc: &[u8], key: &str) -> Option<Blob> {
+        if self.capacity == 0 {
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(&(desc.to_vec(), key.to_string())) {
+            Some((blob, stamp)) => {
+                *stamp = tick;
+                let out = blob.clone();
+                inner.hits += 1;
+                Some(out)
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a blob, evicting least-recently-used entries over budget.
+    /// Blobs larger than the whole budget are not cached.
+    pub fn put(&self, desc: &[u8], key: &str, blob: Blob) {
+        if self.capacity == 0 || blob.len() > self.capacity {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let entry_key = (desc.to_vec(), key.to_string());
+        if let Some((old, _)) = inner.map.insert(entry_key, (blob.clone(), tick))
+        {
+            inner.bytes -= old.len();
+        }
+        inner.bytes += blob.len();
+        while inner.bytes > self.capacity {
+            // Evict the least recently used entry.
+            let victim = inner
+                .map
+                .iter()
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    if let Some((b, _)) = inner.map.remove(&k) {
+                        inner.bytes -= b.len();
+                    }
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Drop a key (called on explicit store evictions routed through the
+    /// same process, keeping the common single-process tests intuitive).
+    pub fn invalidate(&self, desc: &[u8], key: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some((b, _)) = inner.map.remove(&(desc.to_vec(), key.to_string()))
+        {
+            inner.bytes -= b.len();
+        }
+    }
+
+    /// (hits, misses, resident bytes).
+    pub fn stats(&self) -> (u64, u64, usize) {
+        let inner = self.inner.lock().unwrap();
+        (inner.hits, inner.misses, inner.bytes)
+    }
+
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.clear();
+        inner.bytes = 0;
+    }
+}
+
+/// The process-wide resolution cache (capacity from
+/// `PROXYSTORE_CACHE_BYTES`, default 64 MiB).
+pub fn global() -> &'static BlobCache {
+    static CACHE: std::sync::OnceLock<BlobCache> = std::sync::OnceLock::new();
+    CACHE.get_or_init(|| {
+        let cap = std::env::var("PROXYSTORE_CACHE_BYTES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64 * 1024 * 1024);
+        BlobCache::new(cap)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn blob(n: usize, fill: u8) -> Blob {
+        Arc::new(vec![fill; n])
+    }
+
+    #[test]
+    fn hit_after_put() {
+        let c = BlobCache::new(1000);
+        assert!(c.get(b"d", "k").is_none());
+        c.put(b"d", "k", blob(100, 1));
+        let got = c.get(b"d", "k").unwrap();
+        assert_eq!(got.len(), 100);
+        let (hits, misses, bytes) = c.stats();
+        assert_eq!((hits, misses, bytes), (1, 1, 100));
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let c = BlobCache::new(250);
+        c.put(b"d", "a", blob(100, 1));
+        c.put(b"d", "b", blob(100, 2));
+        c.get(b"d", "a"); // refresh a
+        c.put(b"d", "c", blob(100, 3)); // evicts b (LRU)
+        assert!(c.get(b"d", "a").is_some());
+        assert!(c.get(b"d", "b").is_none());
+        assert!(c.get(b"d", "c").is_some());
+        let (_, _, bytes) = c.stats();
+        assert!(bytes <= 250);
+    }
+
+    #[test]
+    fn oversized_blob_not_cached() {
+        let c = BlobCache::new(50);
+        c.put(b"d", "big", blob(100, 1));
+        assert!(c.get(b"d", "big").is_none());
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let c = BlobCache::new(0);
+        c.put(b"d", "k", blob(10, 1));
+        assert!(c.get(b"d", "k").is_none());
+    }
+
+    #[test]
+    fn overwrite_adjusts_bytes() {
+        let c = BlobCache::new(1000);
+        c.put(b"d", "k", blob(100, 1));
+        c.put(b"d", "k", blob(50, 2));
+        let (_, _, bytes) = c.stats();
+        assert_eq!(bytes, 50);
+        assert_eq!(c.get(b"d", "k").unwrap()[0], 2);
+    }
+
+    #[test]
+    fn invalidate_and_clear() {
+        let c = BlobCache::new(1000);
+        c.put(b"d", "k", blob(10, 1));
+        c.invalidate(b"d", "k");
+        assert!(c.get(b"d", "k").is_none());
+        c.put(b"d", "x", blob(10, 1));
+        c.clear();
+        let (_, _, bytes) = c.stats();
+        assert_eq!(bytes, 0);
+    }
+
+    #[test]
+    fn distinct_descs_do_not_collide() {
+        let c = BlobCache::new(1000);
+        c.put(b"d1", "k", blob(10, 1));
+        c.put(b"d2", "k", blob(10, 2));
+        assert_eq!(c.get(b"d1", "k").unwrap()[0], 1);
+        assert_eq!(c.get(b"d2", "k").unwrap()[0], 2);
+    }
+}

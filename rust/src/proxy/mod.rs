@@ -1,0 +1,294 @@
+//! The transparent lazy object proxy (Sec III of the paper).
+//!
+//! A [`Proxy<T>`] is a wide-area reference to a target object living in a
+//! mediated channel. It is *self-contained*: the embedded [`Factory`]
+//! carries everything needed to resolve the target (connector descriptor +
+//! key + wait semantics), so a proxy can be serialized, shipped to any
+//! process, and resolved there with no ambient state. It is *lazy*: bytes
+//! move only on first dereference, and the decoded target is cached in the
+//! proxy thereafter.
+//!
+//! Rust cannot fake `isinstance(p, type(t))` the way Python's dynamic
+//! dispatch can; the idiomatic analogue is `Deref<Target = T>`: any `&T`
+//! consumer accepts `&Proxy<T>` via auto-deref, which is the property the
+//! paper's patterns actually rely on (consumer code unchanged between
+//! values and proxies).
+//!
+//! Resolution consults a process-local LRU [`cache`] (ProxyStore's
+//! per-process target cache): re-resolving the same key serves the blob
+//! from memory. Store keys are never reused, so cached blobs cannot be
+//! stale reads — writers that rewrite a key in place (`OwnedProxy::update`,
+//! `RefMutProxy::commit`) and evictors invalidate the entry explicitly.
+
+use std::marker::PhantomData;
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+use crate::codec::{Decode, Encode, Reader};
+use crate::error::{Error, Result};
+use crate::store::{ConnectorDesc, Connector};
+
+pub mod cache;
+
+/// Resolution metadata embedded in every proxy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Factory {
+    /// How to reach the mediated channel.
+    pub desc: ConnectorDesc,
+    /// Key of the target object.
+    pub key: String,
+    /// If true, resolution blocks until the target exists (ProxyFutures).
+    pub wait: bool,
+    /// Wait bound in ms (0 = forever) when `wait` is set.
+    pub timeout_ms: u64,
+    /// Creating store's name (diagnostics + ownership bookkeeping).
+    pub store_name: String,
+}
+
+impl Encode for Factory {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.desc.encode(buf);
+        self.key.encode(buf);
+        self.wait.encode(buf);
+        self.timeout_ms.encode(buf);
+        self.store_name.encode(buf);
+    }
+}
+
+impl Decode for Factory {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(Factory {
+            desc: Decode::decode(r)?,
+            key: Decode::decode(r)?,
+            wait: Decode::decode(r)?,
+            timeout_ms: Decode::decode(r)?,
+            store_name: Decode::decode(r)?,
+        })
+    }
+}
+
+/// Process-wide connector cache so resolving many proxies against the same
+/// channel reuses one connection (keyed by the encoded descriptor).
+fn connector_cache() -> &'static std::sync::Mutex<
+    std::collections::HashMap<Vec<u8>, Arc<dyn Connector>>,
+> {
+    static CACHE: OnceLock<
+        std::sync::Mutex<std::collections::HashMap<Vec<u8>, Arc<dyn Connector>>>,
+    > = OnceLock::new();
+    CACHE.get_or_init(Default::default)
+}
+
+impl Factory {
+    /// Connector for this factory, via the process-wide cache.
+    pub fn connector(&self) -> Result<Arc<dyn Connector>> {
+        let key = self.desc.to_bytes();
+        if let Some(c) = connector_cache().lock().unwrap().get(&key) {
+            return Ok(c.clone());
+        }
+        let c = self.desc.connect()?;
+        connector_cache().lock().unwrap().insert(key, c.clone());
+        Ok(c)
+    }
+
+    /// Fetch the raw target bytes, honouring wait semantics. The blob
+    /// shares the connector's allocation where possible (memory channel)
+    /// and is served from / published to the process-local LRU cache.
+    pub fn fetch_bytes(&self) -> Result<crate::store::Blob> {
+        let desc_bytes = self.desc.to_bytes();
+        if let Some(blob) = cache::global().get(&desc_bytes, &self.key) {
+            return Ok(blob);
+        }
+        let conn = self.connector()?;
+        let timeout = if self.timeout_ms == 0 {
+            None
+        } else {
+            Some(Duration::from_millis(self.timeout_ms))
+        };
+        let got = if self.wait {
+            conn.wait_get(&self.key, timeout)?
+        } else {
+            conn.get(&self.key)?
+        };
+        match got {
+            Some(blob) => {
+                cache::global().put(&desc_bytes, &self.key, blob.clone());
+                Ok(blob)
+            }
+            None if self.wait => Err(Error::Timeout(
+                timeout.unwrap_or_default(),
+                format!("future target {} never set", self.key),
+            )),
+            None => Err(Error::NotFound(self.key.clone())),
+        }
+    }
+
+    /// Drop any process-local cached copy of this factory's target.
+    pub fn invalidate_cache(&self) {
+        cache::global().invalidate(&self.desc.to_bytes(), &self.key);
+    }
+}
+
+/// Lazy transparent proxy for a `T` stored in a mediated channel.
+pub struct Proxy<T> {
+    factory: Factory,
+    cell: OnceLock<T>,
+    _marker: PhantomData<fn() -> T>,
+}
+
+impl<T> Proxy<T> {
+    /// Build from a factory (used by `Store::proxy` and friends).
+    pub fn from_factory(factory: Factory) -> Proxy<T> {
+        Proxy { factory, cell: OnceLock::new(), _marker: PhantomData }
+    }
+
+    /// A pre-resolved proxy (factory metadata + local target already in
+    /// hand). Used when the creating process keeps using the object.
+    pub fn preresolved(factory: Factory, value: T) -> Proxy<T> {
+        let cell = OnceLock::new();
+        let _ = cell.set(value);
+        Proxy { factory, cell, _marker: PhantomData }
+    }
+
+    pub fn factory(&self) -> &Factory {
+        &self.factory
+    }
+
+    pub fn key(&self) -> &str {
+        &self.factory.key
+    }
+
+    /// Has the target already been fetched into this proxy?
+    pub fn is_resolved(&self) -> bool {
+        self.cell.get().is_some()
+    }
+}
+
+impl<T: Decode> Proxy<T> {
+    /// Resolve (fetch + decode + cache) and return the target.
+    pub fn resolve(&self) -> Result<&T> {
+        if let Some(v) = self.cell.get() {
+            return Ok(v);
+        }
+        let blob = self.factory.fetch_bytes()?;
+        // Single-owner blobs (TCP/file reads) decode by moving the buffer;
+        // shared blobs (memory channel) decode by copy — the consumer's
+        // pass-by-value copy the proxy model promises.
+        let value = match Arc::try_unwrap(blob) {
+            Ok(owned) => T::from_owned(owned)?,
+            Err(shared) => T::from_bytes(&shared)?,
+        };
+        // Another thread may have won the race; either value is identical.
+        let _ = self.cell.set(value);
+        Ok(self.cell.get().expect("cell just set"))
+    }
+
+    /// Resolve and take ownership of the target (consumes the proxy).
+    pub fn into_inner(self) -> Result<T> {
+        if self.cell.get().is_none() {
+            self.resolve()?;
+        }
+        Ok(self.cell.into_inner().expect("resolved above"))
+    }
+}
+
+impl<T: Decode> std::ops::Deref for Proxy<T> {
+    type Target = T;
+
+    /// Transparent access; panics on resolution failure (use
+    /// [`Proxy::resolve`] for a fallible path), mirroring how a Python
+    /// proxy raises on a failed just-in-time resolution.
+    fn deref(&self) -> &T {
+        self.resolve().expect("proxy resolution failed")
+    }
+}
+
+impl<T> Clone for Proxy<T> {
+    /// Cloning copies the reference (factory), not the cached target —
+    /// pass-by-reference semantics.
+    fn clone(&self) -> Self {
+        Proxy::from_factory(self.factory.clone())
+    }
+}
+
+impl<T> std::fmt::Debug for Proxy<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Proxy")
+            .field("key", &self.factory.key)
+            .field("wait", &self.factory.wait)
+            .field("resolved", &self.is_resolved())
+            .finish()
+    }
+}
+
+impl<T> Encode for Proxy<T> {
+    /// Only the factory crosses the wire — the cheap-reference property.
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.factory.encode(buf);
+    }
+}
+
+impl<T> Decode for Proxy<T> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(Proxy::from_factory(Factory::decode(r)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::Store;
+
+    #[test]
+    fn proxy_resolves_lazily() {
+        let store = Store::memory("t-lazy");
+        let p: Proxy<String> = store.proxy(&"hello".to_string()).unwrap();
+        assert!(!p.is_resolved());
+        assert_eq!(p.resolve().unwrap(), "hello");
+        assert!(p.is_resolved());
+        // Deref transparency.
+        assert_eq!(p.len(), 5);
+    }
+
+    #[test]
+    fn proxy_serializes_as_reference() {
+        let store = Store::memory("t-serde");
+        let big = vec![42u8; 1 << 20];
+        let p: Proxy<crate::codec::Bytes> =
+            store.proxy(&crate::codec::Bytes(big.clone())).unwrap();
+        let wire = p.to_bytes();
+        assert!(wire.len() < 256, "proxy wire size {} too big", wire.len());
+        let p2: Proxy<crate::codec::Bytes> =
+            Proxy::from_bytes(&wire).unwrap();
+        assert_eq!(p2.resolve().unwrap().0, big);
+    }
+
+    #[test]
+    fn clone_is_reference_copy() {
+        let store = Store::memory("t-clone");
+        let p: Proxy<u64> = store.proxy(&7u64).unwrap();
+        p.resolve().unwrap();
+        let c = p.clone();
+        assert!(!c.is_resolved());
+        assert_eq!(*c.resolve().unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_key_is_not_found() {
+        let store = Store::memory("t-missing");
+        let p: Proxy<u64> = store.proxy(&1u64).unwrap();
+        store.evict(p.key()).unwrap();
+        let fresh: Proxy<u64> = Proxy::from_bytes(&p.to_bytes()).unwrap();
+        match fresh.resolve() {
+            Err(Error::NotFound(_)) => {}
+            other => panic!("expected NotFound, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn into_inner_takes_value() {
+        let store = Store::memory("t-into");
+        let p: Proxy<String> = store.proxy(&"v".to_string()).unwrap();
+        let s = p.into_inner().unwrap();
+        assert_eq!(s, "v");
+    }
+}

@@ -1,0 +1,232 @@
+//! Parser for the line-oriented AOT manifest written by `aot.py`.
+//!
+//! Format (one record per line, whitespace-separated):
+//! ```text
+//! geometry <key> <u64>
+//! model <name> <hlo-file>
+//! input <name> <dtype> <AxBxC|scalar>     # within a model block
+//! output <name> <dtype> <AxBxC|scalar>
+//! end
+//! param <name> <dtype> <shape> <offset> <nbytes>
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// One tensor (input or output) of a model entry point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String,
+    /// Empty = scalar.
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn shape_string(&self) -> String {
+        if self.shape.is_empty() {
+            "scalar".into()
+        } else {
+            self.shape
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join("x")
+        }
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub hlo: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One entry in the initial-parameter bank.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Manifest {
+    pub geometry: BTreeMap<String, u64>,
+    pub models: Vec<ModelSpec>,
+    pub params: Vec<ParamSpec>,
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    if s == "scalar" {
+        return Ok(Vec::new());
+    }
+    s.split('x')
+        .map(|d| {
+            d.parse::<usize>()
+                .map_err(|e| Error::Config(format!("bad shape {s}: {e}")))
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        let mut current: Option<ModelSpec> = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            let ctx = |msg: &str| {
+                Error::Config(format!("manifest line {}: {msg}", lineno + 1))
+            };
+            match parts.as_slice() {
+                [] => {}
+                [w, ..] if w.starts_with('#') => {}
+                ["geometry", k, v] => {
+                    let v = v.parse().map_err(|_| ctx("bad geometry value"))?;
+                    m.geometry.insert(k.to_string(), v);
+                }
+                ["model", name, hlo] => {
+                    if current.is_some() {
+                        return Err(ctx("model block not closed with `end`"));
+                    }
+                    current = Some(ModelSpec {
+                        name: name.to_string(),
+                        hlo: hlo.to_string(),
+                        inputs: Vec::new(),
+                        outputs: Vec::new(),
+                    });
+                }
+                [kind @ ("input" | "output"), name, dtype, shape] => {
+                    let spec = TensorSpec {
+                        name: name.to_string(),
+                        dtype: dtype.to_string(),
+                        shape: parse_shape(shape)?,
+                    };
+                    let cur = current
+                        .as_mut()
+                        .ok_or_else(|| ctx("io line outside model block"))?;
+                    if *kind == "input" {
+                        cur.inputs.push(spec);
+                    } else {
+                        cur.outputs.push(spec);
+                    }
+                }
+                ["end"] => {
+                    let cur =
+                        current.take().ok_or_else(|| ctx("stray `end`"))?;
+                    m.models.push(cur);
+                }
+                ["param", name, dtype, shape, offset, nbytes] => {
+                    m.params.push(ParamSpec {
+                        name: name.to_string(),
+                        dtype: dtype.to_string(),
+                        shape: parse_shape(shape)?,
+                        offset: offset
+                            .parse()
+                            .map_err(|_| ctx("bad offset"))?,
+                        nbytes: nbytes
+                            .parse()
+                            .map_err(|_| ctx("bad nbytes"))?,
+                    });
+                }
+                _ => return Err(ctx(&format!("unrecognized line: {line:?}"))),
+            }
+        }
+        if current.is_some() {
+            return Err(Error::Config("manifest ends inside model block".into()));
+        }
+        Ok(m)
+    }
+
+    pub fn parse_file(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Config(format!("read manifest {path:?}: {e}"))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Find a model by name.
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models.iter().find(|m| m.name == name).ok_or_else(|| {
+            Error::Config(format!(
+                "model {name} not in manifest (have: {})",
+                self.models
+                    .iter()
+                    .map(|m| m.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+geometry feature_dim 64
+model enc enc.hlo.txt
+input w1 float32 64x32
+input x float32 4x64
+output z float32 4x8
+end
+model ts ts.hlo.txt
+input lr float32 scalar
+output loss float32 scalar
+end
+param w1 float32 64x32 0 8192
+param b1 float32 32 8192 128
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.geometry["feature_dim"], 64);
+        assert_eq!(m.models.len(), 2);
+        let enc = m.model("enc").unwrap();
+        assert_eq!(enc.hlo, "enc.hlo.txt");
+        assert_eq!(enc.inputs[1].shape, vec![4, 64]);
+        assert_eq!(enc.inputs[1].elements(), 256);
+        let ts = m.model("ts").unwrap();
+        assert_eq!(ts.inputs[0].shape, Vec::<usize>::new());
+        assert_eq!(ts.inputs[0].elements(), 1);
+        assert_eq!(ts.inputs[0].shape_string(), "scalar");
+        assert_eq!(m.params[1].offset, 8192);
+    }
+
+    #[test]
+    fn unknown_model_is_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        assert!(Manifest::parse("bogus line here").is_err());
+        assert!(Manifest::parse("input x float32 2x2").is_err()); // outside block
+        assert!(Manifest::parse("model a a.hlo\nmodel b b.hlo").is_err());
+        assert!(Manifest::parse("model a a.hlo\ninput x f32 2y2\nend").is_err());
+        assert!(Manifest::parse("end").is_err());
+        assert!(Manifest::parse("model a a.hlo").is_err()); // unclosed
+    }
+
+    #[test]
+    fn empty_and_comments_ok() {
+        let m = Manifest::parse("\n# nothing\n\n").unwrap();
+        assert!(m.models.is_empty());
+    }
+}

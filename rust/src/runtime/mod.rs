@@ -1,0 +1,362 @@
+//! PJRT runtime: load and execute the JAX/Pallas AOT artifacts.
+//!
+//! `python/compile/aot.py` lowers the L2 graphs (which embed the L1 Pallas
+//! kernels, interpret-mode) to **HLO text** under `artifacts/`, plus a
+//! line-oriented `manifest.txt` describing every entry point's I/O shapes
+//! and an initial-parameter bank (`params.bin`). This module is the only
+//! bridge between that build-time world and the Rust request path:
+//!
+//! ```text
+//! manifest.txt ──► ModelRegistry::load ──► HloModuleProto::from_text_file
+//!                                          └► PjRtClient::cpu().compile
+//! worker task  ──► registry.execute_f32("encode_b8", inputs) ─► outputs
+//! ```
+//!
+//! HLO *text* (not serialized protos) is the interchange format: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids. Executables are compiled once (lazily, cached)
+//! and shared across worker threads.
+
+mod manifest;
+
+pub use manifest::{Manifest, ModelSpec, ParamSpec, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::error::{Error, Result};
+
+/// Compiled-model registry shared by all workers.
+pub struct ModelRegistry {
+    dir: PathBuf,
+    manifest: Manifest,
+    /// name → compiled executable (lazy, compile-once).
+    ///
+    /// Declared BEFORE `client`: struct fields drop in declaration order,
+    /// and loaded executables must be destroyed before the PJRT client
+    /// that owns their runtime (reversing the order is a use-after-free
+    /// inside xla_extension).
+    compiled: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    client: xla::PjRtClient,
+    /// Cached parameter bank.
+    params: OnceLock<HashMap<String, Vec<f32>>>,
+}
+
+// The PJRT CPU client and loaded executables are internally synchronized.
+unsafe impl Send for ModelRegistry {}
+unsafe impl Sync for ModelRegistry {}
+
+impl ModelRegistry {
+    /// Load the manifest and create the PJRT CPU client (no compilation
+    /// happens yet).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Arc<ModelRegistry>> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::parse_file(&dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("pjrt cpu client: {e}")))?;
+        Ok(Arc::new(ModelRegistry {
+            dir,
+            manifest,
+            client,
+            compiled: Mutex::new(HashMap::new()),
+            params: OnceLock::new(),
+        }))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch the cached) executable for a model.
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.compiled.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.model(name)?;
+        let path = self.dir.join(&spec.hlo);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| {
+                Error::Runtime(format!("non-utf8 path {path:?}"))
+            })?,
+        )
+        .map_err(|e| Error::Runtime(format!("parse {path:?}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?,
+        );
+        self.compiled
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a model on f32 host buffers (shapes validated against the
+    /// manifest). Returns one `Vec<f32>` per declared output.
+    pub fn execute_f32(
+        &self,
+        name: &str,
+        inputs: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        let spec = self.manifest.model(name)?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, tensor) in inputs.iter().zip(&spec.inputs) {
+            let want: usize = tensor.elements();
+            if buf.len() != want {
+                return Err(Error::Runtime(format!(
+                    "{name}: input {} expects {} elems ({}), got {}",
+                    tensor.name,
+                    want,
+                    tensor.shape_string(),
+                    buf.len()
+                )));
+            }
+            let lit = if tensor.shape.is_empty() {
+                xla::Literal::scalar(buf[0])
+            } else {
+                let dims: Vec<i64> =
+                    tensor.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(buf).reshape(&dims).map_err(|e| {
+                    Error::Runtime(format!("reshape {}: {e}", tensor.name))
+                })?
+            };
+            literals.push(lit);
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?;
+        let root = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::Runtime(format!("{name}: empty result")))?
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch {name}: {e}")))?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let outs = root
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("untuple {name}: {e}")))?;
+        if outs.len() != spec.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: manifest declares {} outputs, executable returned {}",
+                spec.outputs.len(),
+                outs.len()
+            )));
+        }
+        outs.into_iter()
+            .map(|lit| {
+                lit.to_vec::<f32>().map_err(|e| {
+                    Error::Runtime(format!("output of {name}: {e}"))
+                })
+            })
+            .collect()
+    }
+
+    /// Execute a model, auto-filling any input whose name matches an entry
+    /// in the parameter bank; remaining inputs are taken from `extra` by
+    /// name. This is the worker-facing convenience used by the apps.
+    pub fn execute_with_bank(
+        &self,
+        name: &str,
+        extra: &[(&str, &[f32])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let spec = self.manifest.model(name)?.clone();
+        let bank = self.initial_params()?;
+        let mut inputs: Vec<&[f32]> = Vec::with_capacity(spec.inputs.len());
+        for tensor in &spec.inputs {
+            if let Some((_, buf)) =
+                extra.iter().find(|(n, _)| *n == tensor.name)
+            {
+                inputs.push(buf);
+            } else if let Some(p) = bank.get(&tensor.name) {
+                inputs.push(p.as_slice());
+            } else {
+                return Err(Error::Runtime(format!(
+                    "{name}: no binding for input {}",
+                    tensor.name
+                )));
+            }
+        }
+        self.execute_f32(name, &inputs)
+    }
+
+    /// Initial parameters from `params.bin`, in manifest order.
+    pub fn initial_params(&self) -> Result<&HashMap<String, Vec<f32>>> {
+        if let Some(p) = self.params.get() {
+            return Ok(p);
+        }
+        let path = self.dir.join("params.bin");
+        let raw = std::fs::read(&path)?;
+        let mut map = HashMap::new();
+        for p in &self.manifest.params {
+            let end = p.offset + p.nbytes;
+            if end > raw.len() {
+                return Err(Error::Runtime(format!(
+                    "params.bin truncated: {} needs {}..{}",
+                    p.name, p.offset, end
+                )));
+            }
+            let floats: Vec<f32> = raw[p.offset..end]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            map.insert(p.name.clone(), floats);
+        }
+        let _ = self.params.set(map);
+        Ok(self.params.get().expect("just set"))
+    }
+
+    /// Parameter vector in the canonical (manifest) order — the order the
+    /// flat-argument entry points expect.
+    pub fn params_in_order(&self) -> Result<Vec<Vec<f32>>> {
+        let bank = self.initial_params()?;
+        self.manifest
+            .params
+            .iter()
+            .map(|p| {
+                bank.get(&p.name).cloned().ok_or_else(|| {
+                    Error::Runtime(format!("missing param {}", p.name))
+                })
+            })
+            .collect()
+    }
+
+    /// Model geometry value from the manifest.
+    pub fn geometry(&self, key: &str) -> Option<u64> {
+        self.manifest.geometry.get(key).copied()
+    }
+}
+
+impl std::fmt::Debug for ModelRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelRegistry")
+            .field("dir", &self.dir)
+            .field("models", &self.manifest.models.len())
+            .finish()
+    }
+}
+
+/// Repo-level artifacts directory (used by tests/benches/examples).
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("PROXYSTORE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> Arc<ModelRegistry> {
+        let dir = default_artifacts_dir();
+        assert!(
+            dir.join("manifest.txt").exists(),
+            "artifacts not built — run `make artifacts` first"
+        );
+        ModelRegistry::load(dir).unwrap()
+    }
+
+    #[test]
+    fn manifest_loads_with_expected_models() {
+        let reg = registry();
+        for name in ["encode_b1", "encode_b8", "train_step_b32",
+                     "featurize_b1", "mof_score_c256"] {
+            assert!(reg.manifest().model(name).is_ok(), "{name}");
+        }
+        assert_eq!(reg.geometry("feature_dim"), Some(1024));
+    }
+
+    #[test]
+    fn encode_executes_with_params() {
+        let reg = registry();
+        let d = reg.geometry("feature_dim").unwrap() as usize;
+        let l = reg.geometry("latent_dim").unwrap() as usize;
+        let x = vec![0.1f32; d]; // batch 1
+        let out = reg
+            .execute_with_bank("encode_b1", &[("x", &x)])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), l);
+        assert!(out[0].iter().all(|v| v.is_finite()));
+        // Deterministic across calls.
+        let out2 = reg.execute_with_bank("encode_b1", &[("x", &x)]).unwrap();
+        assert_eq!(out[0], out2[0]);
+    }
+
+    #[test]
+    fn featurize_matches_contact_map_properties() {
+        let reg = registry();
+        let n = reg.geometry("n_residues").unwrap() as usize;
+        let coords: Vec<f32> = (0..n * 3).map(|i| (i as f32) * 0.1).collect();
+        let out = reg.execute_f32("featurize_b1", &[&coords]).unwrap();
+        let map = &out[0];
+        assert_eq!(map.len(), n * n);
+        // Soft contact values are in (0, 1); self-contact ~ sigmoid(1).
+        assert!(map.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        for i in 0..n {
+            assert!(map[i * n + i] > 0.7, "diag {i} = {}", map[i * n + i]);
+        }
+    }
+
+    #[test]
+    fn train_step_reduces_loss_over_iterations() {
+        let reg = registry();
+        let d = reg.geometry("feature_dim").unwrap() as usize;
+        let b = reg.geometry("train_batch").unwrap() as usize;
+        let mut params = reg.params_in_order().unwrap();
+        let x: Vec<f32> = (0..b * d).map(|i| ((i % 97) as f32) / 97.0).collect();
+        let lr = [0.05f32];
+        let mut losses = Vec::new();
+        for _ in 0..3 {
+            let mut inputs: Vec<&[f32]> =
+                params.iter().map(|p| p.as_slice()).collect();
+            inputs.push(&x);
+            inputs.push(&lr);
+            let mut out = reg.execute_f32("train_step_b32", &inputs).unwrap();
+            let loss = out.pop().expect("loss")[0];
+            losses.push(loss);
+            params = out;
+        }
+        assert!(
+            losses[2] < losses[0],
+            "training diverged: {losses:?}"
+        );
+    }
+
+    #[test]
+    fn mof_score_executes() {
+        let reg = registry();
+        let c = reg.geometry("mof_candidates").unwrap() as usize;
+        let d = reg.geometry("mof_dim").unwrap() as usize;
+        let feats = vec![0.1f32; c * d];
+        let w = vec![0.2f32; d];
+        let out = reg.execute_f32("mof_score_c256", &[&feats, &w]).unwrap();
+        assert_eq!(out[0].len(), c);
+        assert!(out[0].iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn shape_mismatch_is_runtime_error() {
+        let reg = registry();
+        let bad = vec![0.0f32; 7];
+        let r = reg.execute_f32("featurize_b1", &[&bad]);
+        assert!(matches!(r, Err(Error::Runtime(_))));
+        let r = reg.execute_f32("nope", &[]);
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,261 @@
+//! The high-level `Store` interface (paper Sec III, Fig 2).
+//!
+//! A [`Store`] wraps a [`Connector`] and provides typed object operations:
+//! `put`/`get`/`evict`, proxy creation ([`Store::proxy`]), distributed
+//! futures ([`Store::future`]), owned proxies ([`crate::ownership`]), and
+//! lifetime attachment. Keys are generated, unique, and never reused.
+
+mod connectors;
+
+pub use connectors::{
+    Blob, Connector, ConnectorDesc, FileConnector, MemoryConnector,
+    MultiConnector, TcpKvConnector, ThrottledConnector,
+};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::codec::{Decode, Encode};
+use crate::error::Result;
+use crate::futures::ProxyFuture;
+use crate::metrics::StoreBytes;
+use crate::proxy::{Factory, Proxy};
+
+/// Typed object store over a mediated channel. Cheap to clone.
+#[derive(Clone)]
+pub struct Store {
+    inner: Arc<StoreInner>,
+}
+
+struct StoreInner {
+    name: String,
+    connector: Arc<dyn Connector>,
+    next_key: AtomicU64,
+    /// Operation counters (puts, gets, evictions) for diagnostics.
+    puts: AtomicU64,
+    gets: AtomicU64,
+    evicts: AtomicU64,
+    put_bytes: AtomicU64,
+    get_bytes: AtomicU64,
+}
+
+/// Snapshot of a store's operation counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StoreMetrics {
+    pub puts: u64,
+    pub gets: u64,
+    pub evicts: u64,
+    pub put_bytes: u64,
+    pub get_bytes: u64,
+}
+
+impl Store {
+    /// Create a store over an explicit connector.
+    pub fn new(name: &str, connector: Arc<dyn Connector>) -> Store {
+        Store {
+            inner: Arc::new(StoreInner {
+                name: name.to_string(),
+                connector,
+                next_key: AtomicU64::new(0),
+                puts: AtomicU64::new(0),
+                gets: AtomicU64::new(0),
+                evicts: AtomicU64::new(0),
+                put_bytes: AtomicU64::new(0),
+                get_bytes: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Convenience: store over a fresh in-process channel.
+    pub fn memory(name: &str) -> Store {
+        Store::new(name, MemoryConnector::new())
+    }
+
+    pub fn name(&self) -> &str {
+        &self.inner.name
+    }
+
+    pub fn connector(&self) -> &Arc<dyn Connector> {
+        &self.inner.connector
+    }
+
+    /// Store-resident bytes gauge, if the connector reports one.
+    pub fn gauge(&self) -> Option<Arc<StoreBytes>> {
+        self.inner.connector.gauge()
+    }
+
+    /// Generate a fresh unique key.
+    pub fn new_key(&self) -> String {
+        let n = self.inner.next_key.fetch_add(1, Ordering::Relaxed);
+        // Salt with a per-process nonce so independent Store instances
+        // sharing one channel never collide.
+        static SALT: AtomicU64 = AtomicU64::new(0);
+        static SALT_INIT: std::sync::OnceLock<u64> = std::sync::OnceLock::new();
+        let salt = *SALT_INIT.get_or_init(|| {
+            SALT.fetch_add(1, Ordering::Relaxed);
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_nanos() as u64)
+                .unwrap_or(1)
+        });
+        format!("{}-{:x}-{}", self.inner.name, salt ^ (n << 20), n)
+    }
+
+    /// Serialize and store an object; returns its key.
+    pub fn put<T: Encode>(&self, obj: &T) -> Result<String> {
+        let key = self.new_key();
+        self.put_at(&key, obj)?;
+        Ok(key)
+    }
+
+    /// Serialize and store at an explicit key.
+    pub fn put_at<T: Encode>(&self, key: &str, obj: &T) -> Result<()> {
+        let data = obj.to_bytes();
+        self.inner.puts.fetch_add(1, Ordering::Relaxed);
+        self.inner
+            .put_bytes
+            .fetch_add(data.len() as u64, Ordering::Relaxed);
+        self.inner.connector.put(key, data)
+    }
+
+    /// Fetch and decode an object.
+    pub fn get<T: Decode>(&self, key: &str) -> Result<Option<T>> {
+        self.inner.gets.fetch_add(1, Ordering::Relaxed);
+        match self.inner.connector.get(key)? {
+            Some(bytes) => {
+                self.inner
+                    .get_bytes
+                    .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                Ok(Some(T::from_bytes(&bytes)?))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Blocking fetch (used by futures and tests).
+    pub fn wait_get<T: Decode>(
+        &self,
+        key: &str,
+        timeout: Option<Duration>,
+    ) -> Result<Option<T>> {
+        self.inner.gets.fetch_add(1, Ordering::Relaxed);
+        match self.inner.connector.wait_get(key, timeout)? {
+            Some(bytes) => {
+                self.inner
+                    .get_bytes
+                    .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                Ok(Some(T::from_bytes(&bytes)?))
+            }
+            None => Ok(None),
+        }
+    }
+
+    pub fn exists(&self, key: &str) -> Result<bool> {
+        self.inner.connector.exists(key)
+    }
+
+    pub fn evict(&self, key: &str) -> Result<()> {
+        self.inner.evicts.fetch_add(1, Ordering::Relaxed);
+        // Keep same-process semantics intuitive: an evicted key is gone.
+        crate::proxy::cache::global()
+            .invalidate(&self.inner.connector.desc().to_bytes(), key);
+        self.inner.connector.evict(key)
+    }
+
+    /// Factory metadata for a key in this store.
+    pub fn factory_for(&self, key: &str, wait: bool, timeout_ms: u64) -> Factory {
+        Factory {
+            desc: self.inner.connector.desc(),
+            key: key.to_string(),
+            wait,
+            timeout_ms,
+            store_name: self.inner.name.clone(),
+        }
+    }
+
+    /// Create a lazy transparent proxy of `obj` (paper: `Store.proxy(t)`):
+    /// serialize, put, wrap the factory.
+    pub fn proxy<T: Encode>(&self, obj: &T) -> Result<Proxy<T>> {
+        let key = self.put(obj)?;
+        Ok(Proxy::from_factory(self.factory_for(&key, false, 0)))
+    }
+
+    /// Proxy an already-stored key.
+    pub fn proxy_from_key<T>(&self, key: &str) -> Proxy<T> {
+        Proxy::from_factory(self.factory_for(key, false, 0))
+    }
+
+    /// Create a distributed future bound to this store (paper Sec IV-A:
+    /// `Store.future()`).
+    pub fn future<T>(&self) -> ProxyFuture<T> {
+        let key = format!("future-{}", self.new_key());
+        ProxyFuture::new(self.factory_for(&key, true, 0))
+    }
+
+    /// Counter snapshot.
+    pub fn metrics(&self) -> StoreMetrics {
+        StoreMetrics {
+            puts: self.inner.puts.load(Ordering::Relaxed),
+            gets: self.inner.gets.load(Ordering::Relaxed),
+            evicts: self.inner.evicts.load(Ordering::Relaxed),
+            put_bytes: self.inner.put_bytes.load(Ordering::Relaxed),
+            get_bytes: self.inner.get_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl std::fmt::Debug for Store {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Store")
+            .field("name", &self.inner.name)
+            .field("connector", &self.inner.connector.desc())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let s = Store::memory("t");
+        let key = s.put(&"value".to_string()).unwrap();
+        assert_eq!(s.get::<String>(&key).unwrap(), Some("value".into()));
+        assert!(s.exists(&key).unwrap());
+        s.evict(&key).unwrap();
+        assert_eq!(s.get::<String>(&key).unwrap(), None);
+        let m = s.metrics();
+        assert_eq!(m.puts, 1);
+        assert_eq!(m.gets, 2);
+        assert_eq!(m.evicts, 1);
+        assert!(m.put_bytes > 0);
+    }
+
+    #[test]
+    fn keys_are_unique() {
+        let s = Store::memory("t");
+        let mut keys = std::collections::HashSet::new();
+        for _ in 0..1000 {
+            assert!(keys.insert(s.new_key()));
+        }
+    }
+
+    #[test]
+    fn two_stores_share_one_channel() {
+        let conn = MemoryConnector::new();
+        let a = Store::new("a", conn.clone());
+        let b = Store::new("b", conn);
+        let key = a.put(&9u32).unwrap();
+        assert_eq!(b.get::<u32>(&key).unwrap(), Some(9));
+    }
+
+    #[test]
+    fn typed_decode_error_surfaces() {
+        let s = Store::memory("t");
+        let key = s.put(&"text".to_string()).unwrap();
+        // Decoding a string as u64 must fail loudly, not garbage.
+        assert!(s.get::<u64>(&key).is_err());
+    }
+}

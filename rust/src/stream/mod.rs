@@ -1,0 +1,490 @@
+//! ProxyStream (Sec IV-B): object streaming with event metadata decoupled
+//! from bulk data.
+//!
+//! A [`StreamProducer`] pairs a [`Publisher`] (low-latency event channel:
+//! redis-sim pub/sub or queues, or the Kafka-like broker log) with a
+//! [`Store`] per topic (bulk channel). `send` puts the object in the store
+//! and publishes a small [`Event`] carrying the proxy factory; a
+//! [`StreamConsumer`] iterates those events and yields **proxies**, so
+//! bulk bytes flow producer → store → final consumer and bypass every
+//! intermediate hop (the Fig 4/6 dispatcher).
+//!
+//! For the Fig 6 baseline, [`StreamProducer::send_inline`] pushes the bulk
+//! bytes *through* the event channel instead, reproducing the
+//! data-through-dispatcher configuration the paper compares against.
+
+mod plugins;
+mod shims;
+
+pub use plugins::{BatchAggregator, FilterPlugin, Plugin, SamplePlugin};
+pub use shims::{
+    probe, EmbeddedLogPublisher, EmbeddedLogSubscriber, KvPubSubPublisher,
+    KvPubSubSubscriber, KvQueuePublisher, KvQueueSubscriber, LogPublisher,
+    LogSubscriber,
+};
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::codec::{Bytes, Decode, Encode, Reader};
+use crate::error::{Error, Result};
+use crate::proxy::{Factory, Proxy};
+use crate::store::Store;
+
+/// Event metadata map.
+pub type Metadata = BTreeMap<String, String>;
+
+/// A stream event: everything a consumer needs to build a proxy of the
+/// associated object (or, in inline mode, the object bytes themselves).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    /// Topic this event belongs to.
+    pub topic: String,
+    /// Producer-assigned sequence number (per topic).
+    pub seq: u64,
+    /// Factory for the stored object (proxy mode).
+    pub factory: Option<Factory>,
+    /// Inline payload (baseline mode: bulk data through the broker).
+    pub inline: Option<Bytes>,
+    /// User metadata, available without resolving the object.
+    pub metadata: Metadata,
+    /// Producer closed the topic.
+    pub end_of_stream: bool,
+}
+
+impl Event {
+    fn data_event(
+        topic: &str,
+        seq: u64,
+        factory: Option<Factory>,
+        inline: Option<Bytes>,
+        metadata: Metadata,
+    ) -> Event {
+        Event {
+            topic: topic.to_string(),
+            seq,
+            factory,
+            inline,
+            metadata,
+            end_of_stream: false,
+        }
+    }
+
+    fn eos(topic: &str, seq: u64) -> Event {
+        Event {
+            topic: topic.to_string(),
+            seq,
+            factory: None,
+            inline: None,
+            metadata: Metadata::new(),
+            end_of_stream: true,
+        }
+    }
+}
+
+impl Encode for Event {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.topic.encode(buf);
+        self.seq.encode(buf);
+        self.factory.encode(buf);
+        self.inline.encode(buf);
+        self.metadata.encode(buf);
+        self.end_of_stream.encode(buf);
+    }
+}
+
+impl Decode for Event {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(Event {
+            topic: Decode::decode(r)?,
+            seq: Decode::decode(r)?,
+            factory: Decode::decode(r)?,
+            inline: Decode::decode(r)?,
+            metadata: Decode::decode(r)?,
+            end_of_stream: Decode::decode(r)?,
+        })
+    }
+}
+
+/// Event-channel send side (Kafka/Redis/ZeroMQ shim protocol).
+pub trait Publisher: Send + Sync {
+    fn publish(&self, topic: &str, event: &Event) -> Result<()>;
+}
+
+/// Event-channel receive side.
+pub trait Subscriber: Send {
+    /// Next event; `Ok(None)` on timeout.
+    fn next_event(&mut self, timeout: Option<Duration>) -> Result<Option<Event>>;
+}
+
+// --------------------------------------------------------------------------
+// StreamProducer
+// --------------------------------------------------------------------------
+
+/// Producer half of ProxyStream.
+pub struct StreamProducer<P: Publisher> {
+    publisher: P,
+    /// Topic → bulk store mapping (different topics may use different
+    /// channels, the paper's per-topic optimization).
+    stores: BTreeMap<String, Store>,
+    default_store: Option<Store>,
+    seqs: BTreeMap<String, u64>,
+    plugins: Vec<Box<dyn Plugin>>,
+}
+
+impl<P: Publisher> StreamProducer<P> {
+    pub fn new(publisher: P, default_store: Option<Store>) -> Self {
+        StreamProducer {
+            publisher,
+            stores: BTreeMap::new(),
+            default_store,
+            seqs: BTreeMap::new(),
+            plugins: Vec::new(),
+        }
+    }
+
+    /// Route a topic to a specific store.
+    pub fn map_topic(&mut self, topic: &str, store: Store) {
+        self.stores.insert(topic.to_string(), store);
+    }
+
+    /// Install a producer-side plugin (filter/sample/aggregate).
+    pub fn add_plugin(&mut self, plugin: Box<dyn Plugin>) {
+        self.plugins.push(plugin);
+    }
+
+    fn store_for(&self, topic: &str) -> Result<&Store> {
+        self.stores
+            .get(topic)
+            .or(self.default_store.as_ref())
+            .ok_or_else(|| {
+                Error::Config(format!("no store mapped for topic {topic}"))
+            })
+    }
+
+    fn next_seq(&mut self, topic: &str) -> u64 {
+        let seq = self.seqs.entry(topic.to_string()).or_insert(0);
+        let s = *seq;
+        *seq += 1;
+        s
+    }
+
+    fn run_plugins(&mut self, event: Event) -> Option<Event> {
+        let mut ev = Some(event);
+        for p in &mut self.plugins {
+            ev = match ev {
+                Some(e) => p.process(e),
+                None => return None,
+            };
+        }
+        ev
+    }
+
+    /// Proxy mode: store the object, publish factory + metadata.
+    pub fn send<T: Encode>(
+        &mut self,
+        topic: &str,
+        obj: &T,
+        metadata: Metadata,
+    ) -> Result<()> {
+        let store = self.store_for(topic)?.clone();
+        let key = store.put(obj)?;
+        let factory = store.factory_for(&key, false, 0);
+        let seq = self.next_seq(topic);
+        let event =
+            Event::data_event(topic, seq, Some(factory), None, metadata);
+        match self.run_plugins(event) {
+            Some(ev) => self.publisher.publish(topic, &ev),
+            None => {
+                // Filtered out: the stored object is orphaned; evict it.
+                store.evict(&key)
+            }
+        }
+    }
+
+    /// Baseline mode: bulk bytes ride the event channel (Fig 6's
+    /// "Redis Pub/Sub" configuration).
+    pub fn send_inline<T: Encode>(
+        &mut self,
+        topic: &str,
+        obj: &T,
+        metadata: Metadata,
+    ) -> Result<()> {
+        let seq = self.next_seq(topic);
+        let event = Event::data_event(
+            topic,
+            seq,
+            None,
+            Some(Bytes(obj.to_bytes())),
+            metadata,
+        );
+        match self.run_plugins(event) {
+            Some(ev) => self.publisher.publish(topic, &ev),
+            None => Ok(()),
+        }
+    }
+
+    /// Metadata-only event (the ADIOS-like step-announcement mode: the
+    /// object is stored out-of-band under a key both sides know).
+    pub fn send_marker(&mut self, topic: &str, metadata: Metadata) -> Result<()> {
+        let seq = self.next_seq(topic);
+        let event = Event::data_event(topic, seq, None, None, metadata);
+        match self.run_plugins(event) {
+            Some(ev) => self.publisher.publish(topic, &ev),
+            None => Ok(()),
+        }
+    }
+
+    /// Close a topic: consumers' iteration ends after draining.
+    pub fn close_topic(&mut self, topic: &str) -> Result<()> {
+        let seq = self.next_seq(topic);
+        self.publisher.publish(topic, &Event::eos(topic, seq))
+    }
+}
+
+// --------------------------------------------------------------------------
+// StreamConsumer
+// --------------------------------------------------------------------------
+
+/// Consumer half of ProxyStream: iterates proxies of streamed objects.
+pub struct StreamConsumer<S: Subscriber> {
+    subscriber: S,
+    plugins: Vec<Box<dyn Plugin>>,
+    closed: bool,
+}
+
+impl<S: Subscriber> StreamConsumer<S> {
+    pub fn new(subscriber: S) -> Self {
+        StreamConsumer { subscriber, plugins: Vec::new(), closed: false }
+    }
+
+    /// Install a consumer-side plugin (filter/sample).
+    pub fn add_plugin(&mut self, plugin: Box<dyn Plugin>) {
+        self.plugins.push(plugin);
+    }
+
+    /// Next raw event after plugins; `Ok(None)` when the stream closes.
+    pub fn next_event(
+        &mut self,
+        timeout: Option<Duration>,
+    ) -> Result<Option<Event>> {
+        loop {
+            if self.closed {
+                return Ok(None);
+            }
+            let Some(event) = self.subscriber.next_event(timeout)? else {
+                return Err(Error::Timeout(
+                    timeout.unwrap_or_default(),
+                    "stream consumer".into(),
+                ));
+            };
+            if event.end_of_stream {
+                self.closed = true;
+                return Ok(None);
+            }
+            let mut ev = Some(event);
+            for p in &mut self.plugins {
+                ev = match ev {
+                    Some(e) => p.process(e),
+                    None => break,
+                };
+            }
+            if let Some(ev) = ev {
+                return Ok(Some(ev));
+            }
+            // Filtered: keep polling.
+        }
+    }
+
+    /// Next object as a lazy proxy (the core ProxyStream interface).
+    /// `Ok(None)` = stream closed. Inline events yield pre-resolved
+    /// proxies (the bytes already crossed the event channel).
+    pub fn next_proxy<T: Decode>(
+        &mut self,
+        timeout: Option<Duration>,
+    ) -> Result<Option<(Proxy<T>, Metadata)>> {
+        loop {
+            let Some(event) = self.next_event(timeout)? else {
+                return Ok(None);
+            };
+            match (event.factory, event.inline) {
+                (Some(factory), _) => {
+                    return Ok(Some((
+                        Proxy::from_factory(factory),
+                        event.metadata,
+                    )))
+                }
+                (None, Some(inline)) => {
+                    let value = T::from_bytes(&inline.0)?;
+                    // Fabricate a local factory; the value is already here.
+                    let factory = Factory {
+                        desc: crate::store::ConnectorDesc::Memory {
+                            id: format!("inline-{}", event.topic),
+                        },
+                        key: format!("inline-{}-{}", event.topic, event.seq),
+                        wait: false,
+                        timeout_ms: 0,
+                        store_name: "inline".into(),
+                    };
+                    return Ok(Some((
+                        Proxy::preresolved(factory, value),
+                        event.metadata,
+                    )));
+                }
+                (None, None) => {
+                    // Marker event: nothing to proxy; skip (callers that
+                    // care about markers use next_event directly).
+                    continue;
+                }
+            }
+        }
+    }
+
+    /// Blocking iterator over proxies until end-of-stream.
+    pub fn iter_proxies<T: Decode>(
+        &mut self,
+    ) -> impl Iterator<Item = Result<(Proxy<T>, Metadata)>> + '_ {
+        std::iter::from_fn(move || self.next_proxy::<T>(None).transpose())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::BrokerState;
+
+    fn meta(k: &str, v: &str) -> Metadata {
+        let mut m = Metadata::new();
+        m.insert(k.into(), v.into());
+        m
+    }
+
+    #[test]
+    fn event_roundtrip() {
+        let store = Store::memory("ev");
+        let ev = Event::data_event(
+            "t",
+            3,
+            Some(store.factory_for("k", false, 0)),
+            None,
+            meta("a", "b"),
+        );
+        let back = Event::from_bytes(&ev.to_bytes()).unwrap();
+        assert_eq!(ev, back);
+    }
+
+    #[test]
+    fn produce_consume_proxy_mode() {
+        let broker = BrokerState::new();
+        let store = Store::memory("stream");
+        let mut producer = StreamProducer::new(
+            EmbeddedLogPublisher::new(broker.clone()),
+            Some(store.clone()),
+        );
+        let mut consumer = StreamConsumer::new(EmbeddedLogSubscriber::new(
+            broker.clone(),
+            "t",
+        ));
+
+        for i in 0..5u64 {
+            producer.send("t", &i, meta("i", &i.to_string())).unwrap();
+        }
+        producer.close_topic("t").unwrap();
+
+        let mut got = Vec::new();
+        while let Some((p, md)) = consumer
+            .next_proxy::<u64>(Some(Duration::from_secs(2)))
+            .unwrap()
+        {
+            assert!(md.contains_key("i"));
+            got.push(*p.resolve().unwrap());
+        }
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+        // Bulk data should NOT have crossed the broker.
+        assert!(broker.gauge.get() < 1024, "events must stay small");
+    }
+
+    #[test]
+    fn produce_consume_inline_mode_moves_bulk_through_broker() {
+        let broker = BrokerState::new();
+        let mut producer: StreamProducer<EmbeddedLogPublisher> =
+            StreamProducer::new(EmbeddedLogPublisher::new(broker.clone()), None);
+        let mut consumer = StreamConsumer::new(EmbeddedLogSubscriber::new(
+            broker.clone(),
+            "t",
+        ));
+        let payload = Bytes(vec![7u8; 100_000]);
+        producer.send_inline("t", &payload, Metadata::new()).unwrap();
+        producer.close_topic("t").unwrap();
+        let (p, _) = consumer
+            .next_proxy::<Bytes>(Some(Duration::from_secs(2)))
+            .unwrap()
+            .unwrap();
+        assert!(p.is_resolved(), "inline proxies are pre-resolved");
+        assert_eq!(p.resolve().unwrap().0.len(), 100_000);
+        assert!(broker.gauge.get() > 100_000, "bulk rode the broker");
+    }
+
+    #[test]
+    fn eos_terminates_iteration() {
+        let broker = BrokerState::new();
+        let store = Store::memory("stream");
+        let mut producer = StreamProducer::new(
+            EmbeddedLogPublisher::new(broker.clone()),
+            Some(store),
+        );
+        producer.send("t", &1u8, Metadata::new()).unwrap();
+        producer.close_topic("t").unwrap();
+        let mut consumer =
+            StreamConsumer::new(EmbeddedLogSubscriber::new(broker, "t"));
+        let items: Vec<_> = consumer
+            .iter_proxies::<u8>()
+            .collect::<Result<Vec<_>>>()
+            .unwrap();
+        assert_eq!(items.len(), 1);
+        // Subsequent calls keep returning None.
+        assert!(consumer
+            .next_proxy::<u8>(Some(Duration::from_millis(10)))
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn unmapped_topic_errors() {
+        let broker = BrokerState::new();
+        let mut producer: StreamProducer<EmbeddedLogPublisher> =
+            StreamProducer::new(EmbeddedLogPublisher::new(broker), None);
+        assert!(matches!(
+            producer.send("t", &1u8, Metadata::new()),
+            Err(Error::Config(_))
+        ));
+    }
+
+    #[test]
+    fn per_topic_store_mapping() {
+        let broker = BrokerState::new();
+        let store_a = Store::memory("a");
+        let store_b = Store::memory("b");
+        let mut producer = StreamProducer::new(
+            EmbeddedLogPublisher::new(broker.clone()),
+            None,
+        );
+        producer.map_topic("ta", store_a.clone());
+        producer.map_topic("tb", store_b.clone());
+        producer.send("ta", &1u8, Metadata::new()).unwrap();
+        producer.send("tb", &2u8, Metadata::new()).unwrap();
+        assert_eq!(store_a.gauge().unwrap().get(), 1);
+        assert_eq!(store_b.gauge().unwrap().get(), 1);
+    }
+
+    #[test]
+    fn consumer_timeout_is_error() {
+        let broker = BrokerState::new();
+        let mut consumer =
+            StreamConsumer::new(EmbeddedLogSubscriber::new(broker, "empty"));
+        assert!(matches!(
+            consumer.next_proxy::<u8>(Some(Duration::from_millis(20))),
+            Err(Error::Timeout(..))
+        ));
+    }
+}

@@ -1,0 +1,356 @@
+//! Publisher/Subscriber shims over the event-channel substrates.
+//!
+//! The paper ships shims for Kafka, Redis pub/sub, Redis queues and
+//! ZeroMQ; ours cover the equivalent set available in-tree:
+//!
+//! | paper channel   | shim here                                   |
+//! |-----------------|---------------------------------------------|
+//! | Kafka           | [`LogPublisher`]/[`LogSubscriber`] (TCP) and [`EmbeddedLogPublisher`]/[`EmbeddedLogSubscriber`] |
+//! | Redis pub/sub   | [`KvPubSubPublisher`]/[`KvPubSubSubscriber`] |
+//! | Redis queues    | [`KvQueuePublisher`]/[`KvQueueSubscriber`]   |
+
+use std::net::SocketAddr;
+use std::time::Duration;
+
+use crate::broker::{BrokerClient, BrokerState};
+use crate::codec::{Bytes, Decode, Encode};
+use crate::error::{Error, Result};
+use crate::kv::{KvClient, KvSubscriber};
+
+use super::{Event, Publisher, Subscriber};
+
+// --------------------------------------------------------------------------
+// Kafka-like log broker shims
+// --------------------------------------------------------------------------
+
+/// Publish events onto an embedded broker log.
+pub struct EmbeddedLogPublisher {
+    state: BrokerState,
+}
+
+impl EmbeddedLogPublisher {
+    pub fn new(state: BrokerState) -> Self {
+        EmbeddedLogPublisher { state }
+    }
+}
+
+impl Publisher for EmbeddedLogPublisher {
+    fn publish(&self, topic: &str, event: &Event) -> Result<()> {
+        self.state.produce(topic, Bytes(event.to_bytes()));
+        Ok(())
+    }
+}
+
+/// Consume events from an embedded broker log (offset cursor per instance).
+pub struct EmbeddedLogSubscriber {
+    state: BrokerState,
+    topic: String,
+    offset: u64,
+}
+
+impl EmbeddedLogSubscriber {
+    pub fn new(state: BrokerState, topic: &str) -> Self {
+        EmbeddedLogSubscriber { state, topic: topic.to_string(), offset: 0 }
+    }
+
+    /// Start from a specific offset (consumer-group resume).
+    pub fn from_offset(state: BrokerState, topic: &str, offset: u64) -> Self {
+        EmbeddedLogSubscriber { state, topic: topic.to_string(), offset }
+    }
+}
+
+impl Subscriber for EmbeddedLogSubscriber {
+    fn next_event(&mut self, timeout: Option<Duration>) -> Result<Option<Event>> {
+        let t = timeout.unwrap_or(Duration::from_secs(3600));
+        let entries = self.state.fetch(&self.topic, self.offset, 1, t);
+        match entries.into_iter().next() {
+            Some(e) => {
+                self.offset = e.offset + 1;
+                Ok(Some(Event::from_bytes(&e.payload.0)?))
+            }
+            None => Ok(None),
+        }
+    }
+}
+
+/// TCP broker publisher (cross-process Kafka analogue).
+pub struct LogPublisher {
+    client: BrokerClient,
+}
+
+impl LogPublisher {
+    pub fn connect(addr: SocketAddr) -> Result<Self> {
+        Ok(LogPublisher { client: BrokerClient::connect(addr)? })
+    }
+}
+
+impl Publisher for LogPublisher {
+    fn publish(&self, topic: &str, event: &Event) -> Result<()> {
+        self.client.produce(topic, Bytes(event.to_bytes()))?;
+        Ok(())
+    }
+}
+
+/// TCP broker subscriber with optional consumer-group commits.
+pub struct LogSubscriber {
+    client: BrokerClient,
+    topic: String,
+    offset: u64,
+    group: Option<String>,
+}
+
+impl LogSubscriber {
+    pub fn connect(addr: SocketAddr, topic: &str) -> Result<Self> {
+        Ok(LogSubscriber {
+            client: BrokerClient::connect(addr)?,
+            topic: topic.to_string(),
+            offset: 0,
+            group: None,
+        })
+    }
+
+    /// Resume from the group's committed offset; commits as it consumes.
+    pub fn with_group(
+        addr: SocketAddr,
+        topic: &str,
+        group: &str,
+    ) -> Result<Self> {
+        let client = BrokerClient::connect(addr)?;
+        let offset = client.committed(group, topic)?;
+        Ok(LogSubscriber {
+            client,
+            topic: topic.to_string(),
+            offset,
+            group: Some(group.to_string()),
+        })
+    }
+}
+
+impl Subscriber for LogSubscriber {
+    fn next_event(&mut self, timeout: Option<Duration>) -> Result<Option<Event>> {
+        let t = timeout.unwrap_or(Duration::from_secs(3600));
+        let entries = self.client.fetch(&self.topic, self.offset, 1, t)?;
+        match entries.into_iter().next() {
+            Some(e) => {
+                self.offset = e.offset + 1;
+                if let Some(g) = &self.group {
+                    self.client.commit(g, &self.topic, self.offset)?;
+                }
+                Ok(Some(Event::from_bytes(&e.payload.0)?))
+            }
+            None => Ok(None),
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// redis-sim pub/sub shims (fire-and-forget, per-subscriber fan-out)
+// --------------------------------------------------------------------------
+
+/// Publish over redis-sim pub/sub channels.
+pub struct KvPubSubPublisher {
+    client: KvClient,
+}
+
+impl KvPubSubPublisher {
+    pub fn connect(addr: SocketAddr) -> Result<Self> {
+        Ok(KvPubSubPublisher { client: KvClient::connect(addr)? })
+    }
+}
+
+impl Publisher for KvPubSubPublisher {
+    fn publish(&self, topic: &str, event: &Event) -> Result<()> {
+        self.client.publish(topic, Bytes(event.to_bytes()))?;
+        Ok(())
+    }
+}
+
+/// Subscriber over a dedicated redis-sim push connection.
+pub struct KvPubSubSubscriber {
+    sub: KvSubscriber,
+}
+
+impl KvPubSubSubscriber {
+    pub fn connect(addr: SocketAddr, topics: &[String]) -> Result<Self> {
+        Ok(KvPubSubSubscriber { sub: KvSubscriber::connect(addr, topics)? })
+    }
+}
+
+impl Subscriber for KvPubSubSubscriber {
+    fn next_event(&mut self, timeout: Option<Duration>) -> Result<Option<Event>> {
+        match self.sub.next(timeout)? {
+            Some(msg) => Ok(Some(Event::from_bytes(&msg.payload.0)?)),
+            None => Ok(None),
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// redis-sim queue shims (work-queue semantics: each event to ONE consumer)
+// --------------------------------------------------------------------------
+
+/// Publish onto a redis-sim list used as a work queue.
+pub struct KvQueuePublisher {
+    client: KvClient,
+}
+
+impl KvQueuePublisher {
+    pub fn connect(addr: SocketAddr) -> Result<Self> {
+        Ok(KvQueuePublisher { client: KvClient::connect(addr)? })
+    }
+}
+
+impl Publisher for KvQueuePublisher {
+    fn publish(&self, topic: &str, event: &Event) -> Result<()> {
+        self.client.lpush(topic, Bytes(event.to_bytes()))
+    }
+}
+
+/// Blocking-pop consumer over a redis-sim list.
+pub struct KvQueueSubscriber {
+    client: KvClient,
+    topic: String,
+}
+
+impl KvQueueSubscriber {
+    pub fn connect(addr: SocketAddr, topic: &str) -> Result<Self> {
+        Ok(KvQueueSubscriber {
+            client: KvClient::connect(addr)?,
+            topic: topic.to_string(),
+        })
+    }
+}
+
+impl Subscriber for KvQueueSubscriber {
+    fn next_event(&mut self, timeout: Option<Duration>) -> Result<Option<Event>> {
+        match self.client.brpop(&self.topic, timeout)? {
+            Some(b) => Ok(Some(Event::from_bytes(&b.0)?)),
+            None => Ok(None),
+        }
+    }
+}
+
+/// Helper: an `Err` for shim construction against a dead endpoint,
+/// normalized to `Error::Connector` for callers that probe.
+pub fn probe(addr: SocketAddr) -> Result<()> {
+    KvClient::connect(addr)
+        .and_then(|c| c.ping())
+        .map_err(|e| Error::Connector(format!("probe {addr}: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::BrokerServer;
+    use crate::kv::KvServer;
+    use crate::store::Store;
+    use crate::stream::{Metadata, StreamConsumer, StreamProducer};
+
+    #[test]
+    fn tcp_log_shim_end_to_end() {
+        let server = BrokerServer::spawn().unwrap();
+        let store = Store::memory("s");
+        let mut producer = StreamProducer::new(
+            LogPublisher::connect(server.addr).unwrap(),
+            Some(store),
+        );
+        let mut consumer = StreamConsumer::new(
+            LogSubscriber::connect(server.addr, "t").unwrap(),
+        );
+        producer.send("t", &41u32, Metadata::new()).unwrap();
+        producer.close_topic("t").unwrap();
+        let (p, _) = consumer
+            .next_proxy::<u32>(Some(Duration::from_secs(2)))
+            .unwrap()
+            .unwrap();
+        assert_eq!(*p.resolve().unwrap(), 41);
+    }
+
+    #[test]
+    fn consumer_group_resume() {
+        let server = BrokerServer::spawn().unwrap();
+        let store = Store::memory("s");
+        let mut producer = StreamProducer::new(
+            LogPublisher::connect(server.addr).unwrap(),
+            Some(store),
+        );
+        for i in 0..4u32 {
+            producer.send("t", &i, Metadata::new()).unwrap();
+        }
+        // First consumer in group "g" takes two events, then "crashes".
+        {
+            let mut c1 = StreamConsumer::new(
+                LogSubscriber::with_group(server.addr, "t", "g").unwrap(),
+            );
+            for _ in 0..2 {
+                c1.next_proxy::<u32>(Some(Duration::from_secs(2)))
+                    .unwrap()
+                    .unwrap();
+            }
+        }
+        // Second consumer resumes at the committed offset.
+        let mut c2 = StreamConsumer::new(
+            LogSubscriber::with_group(server.addr, "t", "g").unwrap(),
+        );
+        let (p, _) = c2
+            .next_proxy::<u32>(Some(Duration::from_secs(2)))
+            .unwrap()
+            .unwrap();
+        assert_eq!(*p.resolve().unwrap(), 2);
+    }
+
+    #[test]
+    fn kv_pubsub_shim_end_to_end() {
+        let server = KvServer::spawn().unwrap();
+        let store = Store::memory("s");
+        let mut consumer = StreamConsumer::new(
+            KvPubSubSubscriber::connect(server.addr, &["t".into()]).unwrap(),
+        );
+        std::thread::sleep(Duration::from_millis(30)); // sub registration
+        let mut producer = StreamProducer::new(
+            KvPubSubPublisher::connect(server.addr).unwrap(),
+            Some(store),
+        );
+        producer.send("t", &9u8, Metadata::new()).unwrap();
+        let (p, _) = consumer
+            .next_proxy::<u8>(Some(Duration::from_secs(2)))
+            .unwrap()
+            .unwrap();
+        assert_eq!(*p.resolve().unwrap(), 9);
+    }
+
+    #[test]
+    fn kv_queue_shim_single_delivery() {
+        let server = KvServer::spawn().unwrap();
+        let store = Store::memory("s");
+        let mut producer = StreamProducer::new(
+            KvQueuePublisher::connect(server.addr).unwrap(),
+            Some(store),
+        );
+        for i in 0..6u32 {
+            producer.send("q", &i, Metadata::new()).unwrap();
+        }
+        // Two competing queue consumers: each event delivered exactly once.
+        let mut c1 = StreamConsumer::new(
+            KvQueueSubscriber::connect(server.addr, "q").unwrap(),
+        );
+        let mut c2 = StreamConsumer::new(
+            KvQueueSubscriber::connect(server.addr, "q").unwrap(),
+        );
+        let mut seen = Vec::new();
+        for _ in 0..3 {
+            let (p, _) = c1
+                .next_proxy::<u32>(Some(Duration::from_secs(1)))
+                .unwrap()
+                .unwrap();
+            seen.push(*p.resolve().unwrap());
+            let (p, _) = c2
+                .next_proxy::<u32>(Some(Duration::from_secs(1)))
+                .unwrap()
+                .unwrap();
+            seen.push(*p.resolve().unwrap());
+        }
+        seen.sort();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
+    }
+}

@@ -1,0 +1,507 @@
+//! Workflow layer: DAG pipelines with pluggable data-flow modes.
+//!
+//! This is the machinery behind the Fig 5 synthetic pipeline and the
+//! Fig 8 1000 Genomes reproduction. A [`Pipeline`] is a DAG of
+//! [`PipelineTask`]s; each task has a *startup overhead* span (library
+//! loading, model init — the fraction `f` in the paper), then needs its
+//! input data, then computes. The pipeline can execute under three
+//! [`DataMode`]s:
+//!
+//! * [`DataMode::NoProxy`] — results return to the client, successors are
+//!   submitted only after parents complete, and full payloads traverse the
+//!   engine's client→worker link (the workflow-engine baseline);
+//! * [`DataMode::Proxy`] — same control flow, but payloads are proxies and
+//!   bulk bytes move store↔worker (offloading the engine);
+//! * [`DataMode::ProxyFuture`] — every task is submitted immediately with
+//!   proxies of its parents' *futures*; tasks overlap their startup
+//!   overhead with their parents' compute (Fig 3's pipelining).
+//!
+//! Every lifecycle span (`submit`, `overhead`, `resolve`, `compute`,
+//! `generate`, `receive`) is recorded on a [`Timeline`], which the benches
+//! render as Fig 5a-style Gantt charts.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::codec::{Bytes, Decode, Encode};
+use crate::engine::{ClusterConfig, LocalCluster, TaskFuture, WorkerCtx};
+use crate::error::{Error, Result};
+use crate::futures::ProxyFuture;
+use crate::metrics::Timeline;
+use crate::netsim::spin_sleep;
+use crate::proxy::Proxy;
+use crate::store::Store;
+
+/// How intermediate data moves between tasks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataMode {
+    NoProxy,
+    Proxy,
+    ProxyFuture,
+}
+
+impl DataMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DataMode::NoProxy => "no-proxy",
+            DataMode::Proxy => "proxy",
+            DataMode::ProxyFuture => "proxyfuture",
+        }
+    }
+}
+
+/// The actual computation a task performs on its inputs (dep outputs, in
+/// dependency order). `None` tasks synthesize `output_bytes` of data.
+pub type WorkFn = Arc<
+    dyn Fn(&WorkerCtx, Vec<Vec<u8>>) -> Result<Vec<u8>> + Send + Sync + 'static,
+>;
+
+/// One node of the pipeline DAG.
+pub struct PipelineTask {
+    pub name: String,
+    /// Stage label (aggregated in Fig 8's per-stage rendering).
+    pub stage: String,
+    /// Indices of dependency tasks (must be < this task's index).
+    pub deps: Vec<usize>,
+    /// Startup overhead before input data is needed (`f × s`).
+    pub overhead: Duration,
+    /// Compute time after inputs are available (`(1-f) × s`).
+    pub compute: Duration,
+    /// Real work over inputs; `None` = synthesize `output_bytes`.
+    pub work: Option<WorkFn>,
+    /// Synthetic output size when `work` is `None`.
+    pub output_bytes: usize,
+}
+
+impl PipelineTask {
+    /// A synthetic sleep-and-produce task (the Fig 5 micro-benchmark).
+    pub fn synthetic(
+        name: &str,
+        stage: &str,
+        deps: Vec<usize>,
+        overhead: Duration,
+        compute: Duration,
+        output_bytes: usize,
+    ) -> PipelineTask {
+        PipelineTask {
+            name: name.into(),
+            stage: stage.into(),
+            deps,
+            overhead,
+            compute,
+            work: None,
+            output_bytes,
+        }
+    }
+}
+
+/// Pipeline run report.
+pub struct RunReport {
+    pub timeline: Arc<Timeline>,
+    pub makespan: f64,
+    /// Final task outputs (by task index) for correctness checks;
+    /// populated only for sink tasks (no dependents) to bound memory.
+    pub sink_outputs: Vec<(usize, Vec<u8>)>,
+}
+
+/// A DAG of tasks executed on a [`LocalCluster`] under a [`DataMode`].
+pub struct Pipeline {
+    pub tasks: Vec<PipelineTask>,
+}
+
+impl Pipeline {
+    pub fn new(tasks: Vec<PipelineTask>) -> Result<Pipeline> {
+        for (i, t) in tasks.iter().enumerate() {
+            for &d in &t.deps {
+                if d >= i {
+                    return Err(Error::Config(format!(
+                        "task {i} ({}) depends on later task {d}",
+                        t.name
+                    )));
+                }
+            }
+        }
+        Ok(Pipeline { tasks })
+    }
+
+    fn sinks(&self) -> Vec<usize> {
+        let mut has_dependent = vec![false; self.tasks.len()];
+        for t in &self.tasks {
+            for &d in &t.deps {
+                has_dependent[d] = true;
+            }
+        }
+        (0..self.tasks.len()).filter(|&i| !has_dependent[i]).collect()
+    }
+
+    /// Execute and record a timeline.
+    pub fn run(
+        &self,
+        cluster: &Arc<LocalCluster>,
+        store: &Store,
+        mode: DataMode,
+    ) -> Result<RunReport> {
+        let timeline = Arc::new(Timeline::new());
+        match mode {
+            DataMode::ProxyFuture => {
+                self.run_proxyfuture(cluster, store, &timeline)
+            }
+            _ => self.run_sequential(cluster, store, mode, &timeline),
+        }
+        .map(|sink_outputs| {
+            let makespan = timeline.makespan();
+            RunReport { timeline, makespan, sink_outputs }
+        })
+    }
+
+    /// NoProxy / Proxy: submit a task only when its parents are done.
+    fn run_sequential(
+        &self,
+        cluster: &Arc<LocalCluster>,
+        store: &Store,
+        mode: DataMode,
+        timeline: &Arc<Timeline>,
+    ) -> Result<Vec<(usize, Vec<u8>)>> {
+        let mut futures: Vec<Option<TaskFuture>> = Vec::new();
+        let mut outputs: Vec<Option<Vec<u8>>> = vec![None; self.tasks.len()];
+        for task in self.tasks.iter() {
+            // Client-side wait for parents (control-flow sync).
+            let mut inputs: Vec<Vec<u8>> = Vec::with_capacity(task.deps.len());
+            for &d in &task.deps {
+                if outputs[d].is_none() {
+                    let fut = futures[d].as_ref().expect("dep submitted");
+                    let bytes = timeline.timed(
+                        &self.tasks[d].name,
+                        "receive",
+                        || fut.wait(),
+                    )?;
+                    outputs[d] = Some(bytes);
+                }
+                inputs.push(outputs[d].clone().expect("filled"));
+            }
+
+            // Build the payload: full data (NoProxy) or proxies (Proxy).
+            let payload = match mode {
+                DataMode::NoProxy => inputs.to_bytes(),
+                DataMode::Proxy => {
+                    let proxies: Vec<Proxy<Bytes>> = inputs
+                        .iter()
+                        .map(|raw| store.proxy(&Bytes(raw.clone())))
+                        .collect::<Result<_>>()?;
+                    proxies.to_bytes()
+                }
+                DataMode::ProxyFuture => unreachable!(),
+            };
+
+            let name = task.name.clone();
+            let stage = task.stage.clone();
+            let overhead = task.overhead;
+            let compute = task.compute;
+            let output_bytes = task.output_bytes;
+            let work = task.work.clone();
+            let tl = timeline.clone();
+            let mode_inner = mode;
+            let fut = timeline.timed(&task.name, "submit", || {
+                cluster.submit(
+                    Box::new(move |ctx, payload| {
+                        tl.timed(&name, "overhead", || spin_sleep(overhead));
+                        let inputs: Vec<Vec<u8>> =
+                            tl.timed(&name, "resolve", || match mode_inner {
+                                DataMode::NoProxy => {
+                                    Vec::<Vec<u8>>::from_bytes(&payload)
+                                }
+                                _ => {
+                                    let proxies: Vec<Proxy<Bytes>> =
+                                        Vec::from_bytes(&payload)?;
+                                    proxies
+                                        .into_iter()
+                                        .map(|p| p.into_inner().map(|b| b.0))
+                                        .collect()
+                                }
+                            })?;
+                        tl.timed(&name, "compute", || spin_sleep(compute));
+                        let _ = &stage;
+                        tl.timed(&name, "generate", || match &work {
+                            Some(f) => f(ctx, inputs),
+                            None => Ok(vec![0u8; output_bytes]),
+                        })
+                    }),
+                    payload,
+                )
+            });
+            futures.push(Some(fut));
+        }
+
+        // Drain sinks through the client.
+        let mut sink_outputs = Vec::new();
+        for s in self.sinks() {
+            let bytes = match outputs[s].take() {
+                Some(b) => b,
+                None => timeline.timed(&self.tasks[s].name, "receive", || {
+                    futures[s].as_ref().expect("submitted").wait()
+                })?,
+            };
+            sink_outputs.push((s, bytes));
+        }
+        Ok(sink_outputs)
+    }
+
+    /// ProxyFuture: everything submitted up front; data deps ride futures.
+    fn run_proxyfuture(
+        &self,
+        cluster: &Arc<LocalCluster>,
+        store: &Store,
+        timeline: &Arc<Timeline>,
+    ) -> Result<Vec<(usize, Vec<u8>)>> {
+        // One future per task output, minted before anything runs.
+        let futs: Vec<ProxyFuture<Bytes>> =
+            self.tasks.iter().map(|_| store.future()).collect();
+        let mut task_futs: Vec<TaskFuture> =
+            Vec::with_capacity(self.tasks.len());
+
+        for (i, task) in self.tasks.iter().enumerate() {
+            let _ = i;
+            let dep_proxies: Vec<Proxy<Bytes>> =
+                task.deps.iter().map(|&d| futs[d].proxy()).collect();
+            let payload = dep_proxies.to_bytes();
+            let own_future = futs[i].clone();
+            let name = task.name.clone();
+            let overhead = task.overhead;
+            let compute = task.compute;
+            let output_bytes = task.output_bytes;
+            let work = task.work.clone();
+            let tl = timeline.clone();
+            let fut = timeline.timed(&task.name, "submit", || {
+                cluster.submit(
+                    Box::new(move |ctx, payload| {
+                        tl.timed(&name, "overhead", || spin_sleep(overhead));
+                        let proxies: Vec<Proxy<Bytes>> =
+                            Vec::from_bytes(&payload)?;
+                        // Blocks until parents set their futures.
+                        let inputs: Vec<Vec<u8>> =
+                            tl.timed(&name, "resolve", || {
+                                proxies
+                                    .into_iter()
+                                    .map(|p| p.into_inner().map(|b| b.0))
+                                    .collect::<Result<_>>()
+                            })?;
+                        tl.timed(&name, "compute", || spin_sleep(compute));
+                        let out = tl.timed(&name, "generate", || {
+                            let bytes = match &work {
+                                Some(f) => f(ctx, inputs)?,
+                                None => vec![0u8; output_bytes],
+                            };
+                            own_future.set_result(&Bytes(bytes.clone()))?;
+                            Ok::<_, Error>(bytes)
+                        })?;
+                        let _ = out;
+                        Ok(Vec::new())
+                    }),
+                    payload,
+                )
+            });
+            task_futs.push(fut);
+        }
+
+        // Client waits on sink futures (cheap: proxies of results). Task
+        // futures are drained first so worker-side errors propagate
+        // instead of hanging the value future.
+        let mut sink_outputs = Vec::new();
+        for s in self.sinks() {
+            let bytes = timeline.timed(&self.tasks[s].name, "receive", || {
+                task_futs[s].wait()?;
+                futs[s].result(Some(Duration::from_secs(30)))
+            })?;
+            sink_outputs.push((s, bytes.0));
+        }
+        Ok(sink_outputs)
+    }
+}
+
+/// Build the Fig 5 synthetic chain: `n` tasks in sequence, each with
+/// overhead `f*s`, compute `(1-f)*s`, producing `d` bytes for its
+/// successor.
+pub fn synthetic_chain(
+    n: usize,
+    s: Duration,
+    f: f64,
+    d: usize,
+) -> Pipeline {
+    let overhead = Duration::from_secs_f64(s.as_secs_f64() * f);
+    let compute = Duration::from_secs_f64(s.as_secs_f64() * (1.0 - f));
+    let tasks = (0..n)
+        .map(|i| {
+            PipelineTask::synthetic(
+                &format!("t{i}"),
+                "chain",
+                if i == 0 { vec![] } else { vec![i - 1] },
+                overhead,
+                compute,
+                d,
+            )
+        })
+        .collect();
+    Pipeline::new(tasks).expect("chain is a valid DAG")
+}
+
+/// Cluster sized for a pipeline under ProxyFuture (every task may occupy a
+/// worker while blocked on its parent).
+pub fn cluster_for(n_tasks: usize, config: ClusterConfig) -> Arc<LocalCluster> {
+    Arc::new(LocalCluster::new(ClusterConfig {
+        workers: n_tasks.max(config.workers),
+        ..config
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cluster(workers: usize) -> Arc<LocalCluster> {
+        Arc::new(LocalCluster::new(ClusterConfig {
+            workers,
+            ..Default::default()
+        }))
+    }
+
+    #[test]
+    fn invalid_dag_rejected() {
+        let t = PipelineTask::synthetic(
+            "a",
+            "s",
+            vec![0],
+            Duration::ZERO,
+            Duration::ZERO,
+            0,
+        );
+        assert!(Pipeline::new(vec![t]).is_err());
+    }
+
+    #[test]
+    fn all_modes_produce_same_outputs() {
+        // A diamond: a → (b, c) → d, with real work functions.
+        let work_double: WorkFn = Arc::new(|_, inputs| {
+            Ok(inputs[0].iter().map(|b| b.wrapping_mul(2)).collect())
+        });
+        let work_concat: WorkFn = Arc::new(|_, inputs| {
+            Ok(inputs.concat())
+        });
+        let make = || {
+            Pipeline::new(vec![
+                PipelineTask {
+                    name: "a".into(),
+                    stage: "s1".into(),
+                    deps: vec![],
+                    overhead: Duration::from_millis(5),
+                    compute: Duration::from_millis(5),
+                    work: Some(Arc::new(|_, _| Ok(vec![1, 2, 3]))),
+                    output_bytes: 0,
+                },
+                PipelineTask {
+                    name: "b".into(),
+                    stage: "s2".into(),
+                    deps: vec![0],
+                    overhead: Duration::from_millis(5),
+                    compute: Duration::from_millis(5),
+                    work: Some(work_double.clone()),
+                    output_bytes: 0,
+                },
+                PipelineTask {
+                    name: "c".into(),
+                    stage: "s2".into(),
+                    deps: vec![0],
+                    overhead: Duration::from_millis(5),
+                    compute: Duration::from_millis(5),
+                    work: Some(work_double.clone()),
+                    output_bytes: 0,
+                },
+                PipelineTask {
+                    name: "d".into(),
+                    stage: "s3".into(),
+                    deps: vec![1, 2],
+                    overhead: Duration::from_millis(5),
+                    compute: Duration::from_millis(5),
+                    work: Some(work_concat.clone()),
+                    output_bytes: 0,
+                },
+            ])
+            .unwrap()
+        };
+        for mode in
+            [DataMode::NoProxy, DataMode::Proxy, DataMode::ProxyFuture]
+        {
+            let cluster = quick_cluster(4);
+            let store = Store::memory("wf");
+            let report = make().run(&cluster, &store, mode).unwrap();
+            assert_eq!(report.sink_outputs.len(), 1, "{mode:?}");
+            assert_eq!(
+                report.sink_outputs[0].1,
+                vec![2, 4, 6, 2, 4, 6],
+                "{mode:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn proxyfuture_pipelines_overhead() {
+        // 4 tasks × (40ms overhead + 40ms compute). Sequential ≥ ~320ms;
+        // pipelined overlaps the 40ms overheads → makespan ≈ 40 + 4*40.
+        let n = 4;
+        let s = Duration::from_millis(80);
+        let chain = synthetic_chain(n, s, 0.5, 1000);
+        let store = Store::memory("wf");
+
+        let cluster = quick_cluster(n);
+        let seq = chain.run(&cluster, &store, DataMode::Proxy).unwrap();
+        let cluster = quick_cluster(n);
+        let chain = synthetic_chain(n, s, 0.5, 1000);
+        let pipe = chain.run(&cluster, &store, DataMode::ProxyFuture).unwrap();
+
+        assert!(
+            pipe.makespan < seq.makespan * 0.85,
+            "pipelined {:.3}s vs sequential {:.3}s",
+            pipe.makespan,
+            seq.makespan
+        );
+    }
+
+    #[test]
+    fn timeline_contains_all_stages() {
+        let chain = synthetic_chain(3, Duration::from_millis(30), 0.3, 100);
+        let cluster = quick_cluster(3);
+        let store = Store::memory("wf");
+        let report = chain.run(&cluster, &store, DataMode::Proxy).unwrap();
+        let recs = report.timeline.records();
+        for span in ["submit", "overhead", "resolve", "compute", "generate"] {
+            assert!(
+                recs.iter().any(|r| r.stage == span),
+                "missing span {span}"
+            );
+        }
+        assert!(report.makespan > 0.0);
+    }
+
+    #[test]
+    fn work_error_propagates_in_all_modes() {
+        let failing: WorkFn =
+            Arc::new(|_, _| Err(Error::Task("bad work".into())));
+        for mode in
+            [DataMode::NoProxy, DataMode::Proxy, DataMode::ProxyFuture]
+        {
+            let p = Pipeline::new(vec![PipelineTask {
+                name: "x".into(),
+                stage: "s".into(),
+                deps: vec![],
+                overhead: Duration::ZERO,
+                compute: Duration::ZERO,
+                work: Some(failing.clone()),
+                output_bytes: 0,
+            }])
+            .unwrap();
+            let cluster = quick_cluster(1);
+            let store = Store::memory("wf");
+            let r = p.run(&cluster, &store, mode);
+            assert!(r.is_err(), "{mode:?} must surface work errors");
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! Launcher integration: the `proxystore` binary's commands run end to end.
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_proxystore"))
+        .args(args)
+        .env("PROXYSTORE_ARTIFACTS", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .output()
+        .expect("spawn proxystore");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn help_and_version() {
+    let (ok, text) = run(&["help"]);
+    assert!(ok);
+    assert!(text.contains("COMMANDS"));
+    let (ok, text) = run(&["version"]);
+    assert!(ok);
+    assert!(text.contains("proxystore 0.1.0"));
+    // No args prints help too.
+    let (ok, text) = run(&[]);
+    assert!(ok);
+    assert!(text.contains("USAGE"));
+}
+
+#[test]
+fn unknown_command_fails_cleanly() {
+    let (ok, text) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown command"));
+}
+
+#[test]
+fn quickstart_runs() {
+    let (ok, text) = run(&["quickstart"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("consumer observed: 42"));
+    assert!(text.contains("evicted after owner drop: true"));
+}
+
+#[test]
+fn fig5_small_run() {
+    let (ok, text) = run(&[
+        "fig5", "--tasks", "4", "--task-ms", "40", "--size", "100000",
+        "--f", "0.5",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("[proxyfuture] makespan"));
+    assert!(text.contains("makespan ="));
+}
+
+#[test]
+fn genomes_small_run() {
+    let (ok, text) = run(&[
+        "genomes", "--mode", "proxyfuture", "--individuals", "8",
+        "--chunks", "2", "--snps", "100",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("overlapping variants found"));
+}
+
+#[test]
+fn mof_small_run_uses_artifacts() {
+    let (ok, text) =
+        run(&["mof", "--mode", "ownership", "--rounds", "1", "--generators", "2"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("best score"));
+    assert!(text.contains("final = 0"));
+}
+
+#[test]
+fn bad_option_value_fails_cleanly() {
+    let (ok, text) = run(&["fig5", "--tasks", "many"]);
+    assert!(!ok);
+    assert!(text.contains("cannot parse"));
+}

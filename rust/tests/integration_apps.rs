@@ -1,0 +1,128 @@
+//! Application-level integration: the three paper applications end to end
+//! on small workloads, exercising the compiled PJRT artifacts from worker
+//! threads. Requires `make artifacts`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use proxystore::apps::{ddmd, genomes, membench, mof, streambench};
+use proxystore::runtime::{default_artifacts_dir, ModelRegistry};
+use proxystore::workflow::DataMode;
+
+fn registry() -> Arc<ModelRegistry> {
+    ModelRegistry::load(default_artifacts_dir())
+        .expect("run `make artifacts` before `cargo test`")
+}
+
+#[test]
+fn genomes_all_modes_agree_and_proxyfuture_wins() {
+    let cfg = genomes::GenomesConfig {
+        individuals: 16,
+        snps_per_chunk: 400,
+        chunks: 4,
+        groups: 2,
+        task_overhead: Duration::from_millis(40),
+        compute_floor: Duration::from_millis(20),
+        seed: 77,
+    };
+    let want = genomes::run_reference(&cfg);
+    let (base, f_base) = genomes::run(&cfg, DataMode::NoProxy).unwrap();
+    let (pf, f_pf) = genomes::run(&cfg, DataMode::ProxyFuture).unwrap();
+    assert_eq!(f_base, want);
+    assert_eq!(f_pf, want);
+    assert!(
+        pf.makespan < base.makespan,
+        "pipelining must win: {:.3} vs {:.3}",
+        pf.makespan,
+        base.makespan
+    );
+}
+
+#[test]
+fn ddmd_end_to_end_with_training() {
+    let reg = registry();
+    let cfg = ddmd::DdmdConfig {
+        rounds: 5,
+        initial_batch: 2,
+        batch_growth: 2,
+        train: true,
+        ..Default::default()
+    };
+    let report = ddmd::run_proxystream(&cfg, &reg).unwrap();
+    assert_eq!(report.rounds.len(), 5);
+    assert!(report.model_updates >= 1, "trainer must deliver weights");
+    assert!(report.mean_rtt > 0.0);
+    // Batch sizes grow as configured.
+    assert_eq!(report.rounds[0].batch, 2);
+    assert_eq!(report.rounds[4].batch, 10);
+}
+
+#[test]
+fn mof_ownership_cleans_up_against_live_registry() {
+    let reg = registry();
+    let cfg = mof::MofConfig {
+        rounds: 2,
+        generators: 2,
+        top_k: 1,
+        ..Default::default()
+    };
+    let d = mof::run(&cfg, &reg, mof::MemoryMode::Default).unwrap();
+    let o = mof::run(&cfg, &reg, mof::MemoryMode::Ownership).unwrap();
+    assert_eq!(d.rounds, 2);
+    assert!(o.series.final_active() < d.series.final_active());
+}
+
+#[test]
+fn streambench_smoke_all_modes() {
+    let cfg = streambench::StreamBenchConfig {
+        workers: 3,
+        data_size: 100_000,
+        task_time: Duration::from_millis(30),
+        items: 6,
+        dispatcher_bw: 1.0e9,
+        seed: 3,
+    };
+    for mode in streambench::StreamMode::all() {
+        let r = streambench::run(&cfg, mode).unwrap();
+        assert_eq!(r.items, 6, "{mode:?}");
+    }
+}
+
+#[test]
+fn membench_smoke_checksums_match() {
+    let cfg = membench::MemBenchConfig {
+        rounds: 1,
+        mappers: 2,
+        map_input: 200_000,
+        map_output: 20_000,
+        task_sleep: Duration::from_millis(10),
+        seed: 4,
+    };
+    let a = membench::run(&cfg, membench::MemMode::NoProxy).unwrap();
+    let b = membench::run(&cfg, membench::MemMode::Ownership).unwrap();
+    assert_eq!(a.checksum, b.checksum);
+}
+
+#[test]
+fn pjrt_concurrent_execution_from_many_workers() {
+    // The registry is shared across threads; executables must be reusable
+    // concurrently (the persistent-actor + trainer topology).
+    let reg = registry();
+    let d = reg.geometry("feature_dim").unwrap() as usize;
+    let hs: Vec<_> = (0..4)
+        .map(|i| {
+            let reg = reg.clone();
+            std::thread::spawn(move || {
+                let x = vec![0.01 * (i as f32 + 1.0); d];
+                let out = reg
+                    .execute_with_bank("encode_b1", &[("x", &x)])
+                    .unwrap();
+                out[0].iter().map(|v| *v as f64).sum::<f64>()
+            })
+        })
+        .collect();
+    let sums: Vec<f64> = hs.into_iter().map(|h| h.join().unwrap()).collect();
+    // Different inputs give different embeddings; all finite.
+    assert!(sums.iter().all(|s| s.is_finite()));
+    assert!(sums.windows(2).any(|w| (w[0] - w[1]).abs() > 1e-9));
+}

@@ -1,0 +1,187 @@
+//! Cross-module integration: TCP servers + store + futures + engine +
+//! stream together, the way a deployment composes them.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use proxystore::broker::BrokerServer;
+use proxystore::codec::{Bytes, Decode, Encode};
+use proxystore::engine::{ClusterConfig, LocalCluster};
+use proxystore::futures::ProxyFuture;
+use proxystore::kv::KvServer;
+use proxystore::prelude::{Proxy, Store};
+use proxystore::store::{TcpKvConnector, ThrottledConnector};
+use proxystore::stream::{
+    LogPublisher, LogSubscriber, Metadata, StreamConsumer, StreamProducer,
+};
+
+fn tcp_store(server: &KvServer, name: &str) -> Store {
+    Store::new(
+        name,
+        Arc::new(TcpKvConnector::connect(server.addr).unwrap()),
+    )
+}
+
+#[test]
+fn proxies_cross_engine_boundaries_via_tcp_kv() {
+    // Producer cluster and consumer cluster share NOTHING except the KV
+    // server endpoint — the paper's engine-agnosticism claim.
+    let server = KvServer::spawn().unwrap();
+    let store = tcp_store(&server, "xengine");
+
+    let cluster_a = Arc::new(LocalCluster::new(ClusterConfig::default()));
+    let cluster_b = Arc::new(LocalCluster::new(ClusterConfig::default()));
+
+    let fut: ProxyFuture<Bytes> = store.future();
+    let fut_wire = fut.to_bytes();
+    let proxy_wire = fut.proxy().to_bytes();
+
+    // Engine A: producer task sets the future.
+    let a = cluster_a.submit(
+        Box::new(move |_, payload| {
+            let f: ProxyFuture<Bytes> = ProxyFuture::from_bytes(&payload)?;
+            std::thread::sleep(Duration::from_millis(40));
+            f.set_result(&Bytes(vec![1, 2, 3]))?;
+            Ok(vec![])
+        }),
+        fut_wire,
+    );
+    // Engine B: consumer task resolves the proxy.
+    let b = cluster_b.submit(
+        Box::new(move |_, payload| {
+            let p: Proxy<Bytes> = Proxy::from_bytes(&payload)?;
+            Ok(p.into_inner()?.0)
+        }),
+        proxy_wire,
+    );
+    assert_eq!(b.wait().unwrap(), vec![1, 2, 3]);
+    a.wait().unwrap();
+}
+
+#[test]
+fn stream_over_tcp_broker_and_tcp_kv_with_worker_pool() {
+    // Full Fig 4 topology with real sockets: producer → broker(event) +
+    // kv(bulk); dispatcher → worker pool; workers resolve bulk from kv.
+    let kv = KvServer::spawn().unwrap();
+    let broker = BrokerServer::spawn().unwrap();
+    let n_items = 10usize;
+    let kv_addr = kv.addr;
+    let broker_addr = broker.addr;
+
+    let producer = std::thread::spawn(move || {
+        let store = Store::new(
+            "s",
+            Arc::new(TcpKvConnector::connect(kv_addr).unwrap()),
+        );
+        let mut producer = StreamProducer::new(
+            LogPublisher::connect(broker_addr).unwrap(),
+            Some(store),
+        );
+        for i in 0..n_items {
+            let data = Bytes(vec![i as u8; 10_000]);
+            let mut md = Metadata::new();
+            md.insert("i".into(), i.to_string());
+            producer.send("frames", &data, md).unwrap();
+        }
+        producer.close_topic("frames").unwrap();
+    });
+
+    let cluster = Arc::new(LocalCluster::new(ClusterConfig {
+        workers: 3,
+        ..Default::default()
+    }));
+    let mut consumer = StreamConsumer::new(
+        LogSubscriber::connect(broker.addr, "frames").unwrap(),
+    );
+    let mut futs = Vec::new();
+    while let Some((proxy, md)) = consumer
+        .next_proxy::<Bytes>(Some(Duration::from_secs(10)))
+        .unwrap()
+    {
+        let i: usize = md["i"].parse().unwrap();
+        let wire = proxy.to_bytes();
+        futs.push((i, cluster.submit(
+            Box::new(move |_, payload| {
+                let p: Proxy<Bytes> = Proxy::from_bytes(&payload)?;
+                let data = p.into_inner()?;
+                Ok(vec![data.0[0], data.0.len() as u8])
+            }),
+            wire,
+        )));
+    }
+    producer.join().unwrap();
+    assert_eq!(futs.len(), n_items);
+    for (i, fut) in futs {
+        let out = fut.wait().unwrap();
+        assert_eq!(out[0] as usize, i);
+        assert_eq!(out[1] as usize, 10_000 % 256);
+    }
+    // Bulk bytes all went through the KV server, not the broker.
+    let (keys, bytes, _) = kv.state().stats();
+    assert_eq!(keys as usize, n_items);
+    assert!(bytes >= (n_items * 10_000) as u64);
+    assert!(broker.state().gauge.get() < 4096);
+}
+
+#[test]
+fn throttled_tcp_store_is_slower_but_correct() {
+    let server = KvServer::spawn().unwrap();
+    let fast = tcp_store(&server, "fast");
+    let slow = Store::new(
+        "slow",
+        ThrottledConnector::wrap(
+            Arc::new(TcpKvConnector::connect(server.addr).unwrap()),
+            Duration::from_millis(10),
+            1.0e9,
+        ),
+    );
+    let data = Bytes(vec![9; 50_000]);
+
+    let t0 = std::time::Instant::now();
+    let k1 = fast.put(&data).unwrap();
+    let fast_t = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let k2 = slow.put(&data).unwrap();
+    let slow_t = t0.elapsed();
+    // The throttled put pays one 10 ms simulated latency on top of the
+    // real socket round-trip.
+    assert!(slow_t >= Duration::from_millis(9), "{slow_t:?} vs {fast_t:?}");
+    assert!(slow_t > fast_t, "{slow_t:?} vs {fast_t:?}");
+    // Same backing server: both readable from either store.
+    assert_eq!(fast.get::<Bytes>(&k2).unwrap().unwrap(), data);
+    assert_eq!(slow.get::<Bytes>(&k1).unwrap().unwrap(), data);
+}
+
+#[test]
+fn future_timeout_and_late_set_over_tcp() {
+    let server = KvServer::spawn().unwrap();
+    let store = tcp_store(&server, "late");
+    let fut: ProxyFuture<u32> = store.future();
+    // Timeout-bounded proxy fails fast...
+    let p = fut.proxy_with_timeout(Duration::from_millis(50));
+    assert!(p.resolve().is_err());
+    // ...but the future itself can still be completed and read afterwards.
+    fut.set_result(&7).unwrap();
+    assert_eq!(fut.result(Some(Duration::from_secs(1))).unwrap(), 7);
+}
+
+#[test]
+fn many_concurrent_futures_one_server() {
+    let server = KvServer::spawn().unwrap();
+    let store = tcp_store(&server, "many");
+    let futures: Vec<ProxyFuture<u64>> =
+        (0..16).map(|_| store.future()).collect();
+    let consumers: Vec<_> = futures
+        .iter()
+        .map(|f| {
+            let p = f.proxy();
+            std::thread::spawn(move || *p.resolve().unwrap())
+        })
+        .collect();
+    for (i, f) in futures.iter().enumerate() {
+        f.set_result(&(i as u64 * 11)).unwrap();
+    }
+    for (i, c) in consumers.into_iter().enumerate() {
+        assert_eq!(c.join().unwrap(), i as u64 * 11);
+    }
+}

@@ -1,0 +1,344 @@
+//! Property-based invariant tests over the coordinator substrates,
+//! using the in-tree `testing` framework (DESIGN.md §6).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use proxystore::broker::BrokerState;
+use proxystore::codec::{Bytes, Decode, Encode, F32s};
+use proxystore::engine::{ClusterConfig, LocalCluster};
+use proxystore::kv::KvState;
+use proxystore::ownership::{take_violations, StoreOwnedExt};
+use proxystore::prelude::Store;
+use proxystore::stream::{
+    BatchAggregator, EmbeddedLogPublisher, EmbeddedLogSubscriber, Metadata,
+    Plugin, StreamConsumer, StreamProducer,
+};
+use proxystore::testing::{forall, gens, Gen};
+
+// ---------------------------------------------------------------------
+// Codec: decode(encode(x)) == x for nested composite data.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_codec_roundtrip_nested() {
+    let gen = gens::vec(
+        gens::pair(gens::string(0..12), gens::bytes(0..256)),
+        0..20,
+    );
+    forall(gen, 200, |items| {
+        let value: Vec<(String, Bytes)> = items
+            .iter()
+            .map(|(s, b)| (s.clone(), Bytes(b.clone())))
+            .collect();
+        let wire = value.to_bytes();
+        Vec::<(String, Bytes)>::from_bytes(&wire).map(|back| back == value)
+            .unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_codec_f32s_roundtrip() {
+    forall(gens::vec(gens::u64(0..1_000_000), 0..64), 100, |xs| {
+        let floats: Vec<f32> = xs.iter().map(|&x| x as f32 * 0.5 - 7.0).collect();
+        let v = F32s(floats.clone());
+        F32s::from_bytes(&v.to_bytes()).map(|b| b.0 == floats).unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_codec_rejects_truncation() {
+    forall(gens::bytes(1..128), 100, |data| {
+        let wire = Bytes(data.clone()).to_bytes();
+        // Any strict prefix must fail to decode fully.
+        (0..wire.len()).all(|cut| Bytes::from_bytes(&wire[..cut]).is_err())
+    });
+}
+
+// ---------------------------------------------------------------------
+// KV engine vs a model HashMap under random op sequences.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum KvOp {
+    Set(String, Vec<u8>),
+    Del(String),
+    Get(String),
+    Incr(String, i64),
+}
+
+struct KvOpGen;
+
+impl Gen for KvOpGen {
+    type Value = KvOp;
+
+    fn generate(&self, rng: &mut proxystore::rng::Rng) -> KvOp {
+        let key = format!("k{}", rng.gen_range(5));
+        match rng.gen_range(4) {
+            0 => {
+                let n = rng.usize_in(0, 32);
+                KvOp::Set(key, rng.bytes(n))
+            }
+            1 => KvOp::Del(key),
+            2 => KvOp::Get(key),
+            _ => KvOp::Incr(key, rng.gen_range(10) as i64 - 5),
+        }
+    }
+}
+
+#[test]
+fn prop_kv_matches_model_hashmap() {
+    forall(gens::vec(KvOpGen, 1..60), 150, |ops| {
+        let kv = KvState::new();
+        let mut model: HashMap<String, Vec<u8>> = HashMap::new();
+        let mut counters: HashMap<String, i64> = HashMap::new();
+        for op in ops {
+            match op {
+                KvOp::Set(k, v) => {
+                    kv.set(k, Bytes(v.clone()));
+                    model.insert(k.clone(), v.clone());
+                }
+                KvOp::Del(k) => {
+                    let was = kv.del(k);
+                    let want = model.remove(k).is_some();
+                    if was != want {
+                        return false;
+                    }
+                }
+                KvOp::Get(k) => {
+                    let got = kv.get(k).map(|b| b.0);
+                    if got != model.get(k).cloned() {
+                        return false;
+                    }
+                }
+                KvOp::Incr(k, by) => {
+                    let got = kv.incr(k, *by);
+                    let c = counters.entry(k.clone()).or_insert(0);
+                    *c += by;
+                    if got != *c {
+                        return false;
+                    }
+                }
+            }
+        }
+        // Gauge equals total resident bytes.
+        let resident: usize = model.values().map(|v| v.len()).sum();
+        kv.gauge.get() == resident as i64
+    });
+}
+
+// ---------------------------------------------------------------------
+// Broker: per-topic order preserved, offsets dense, no loss.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_broker_order_and_completeness() {
+    forall(
+        gens::pair(gens::usize(1..4), gens::vec(gens::bytes(0..64), 1..40)),
+        60,
+        |(topics, payloads)| {
+            let broker = BrokerState::new();
+            let mut per_topic: Vec<Vec<Vec<u8>>> = vec![Vec::new(); *topics];
+            for (i, p) in payloads.iter().enumerate() {
+                let t = i % topics;
+                let off = broker.produce(&format!("t{t}"), Bytes(p.clone()));
+                if off != per_topic[t].len() as u64 {
+                    return false; // offsets must be dense per topic
+                }
+                per_topic[t].push(p.clone());
+            }
+            // Replay each topic from 0 and compare order + content.
+            (0..*topics).all(|t| {
+                let got = broker.fetch(
+                    &format!("t{t}"),
+                    0,
+                    u32::MAX,
+                    std::time::Duration::ZERO,
+                );
+                got.len() == per_topic[t].len()
+                    && got
+                        .iter()
+                        .zip(&per_topic[t])
+                        .all(|(e, want)| &e.payload.0 == want)
+            })
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Ownership: random borrow/drop orders never corrupt state; the object
+// is resident iff an owner or borrow is still live; no violations when
+// drops happen in stack order.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_ownership_state_machine() {
+    forall(
+        gens::vec(gens::u64(0..3), 1..20),
+        100,
+        |script| {
+            take_violations();
+            let store = Store::memory("prop-own");
+            let owned = store.owned_proxy(&Bytes(vec![1; 64])).unwrap();
+            let key = owned.key().to_string();
+            let mut reads = Vec::new();
+            let mut wrote = false;
+            for step in script {
+                match step {
+                    0 => {
+                        // borrow: legal iff no mut outstanding.
+                        match owned.borrow() {
+                            Ok(r) => reads.push(r),
+                            Err(_) => {
+                                if !wrote {
+                                    return false; // must succeed without mut
+                                }
+                            }
+                        }
+                    }
+                    1 => {
+                        // mut borrow: legal iff nothing outstanding. We
+                        // immediately release it (stack discipline).
+                        match owned.mut_borrow() {
+                            Ok(m) => {
+                                wrote = false;
+                                drop(m);
+                            }
+                            Err(_) => {
+                                if reads.is_empty() {
+                                    return false;
+                                }
+                            }
+                        }
+                    }
+                    _ => {
+                        reads.pop(); // release one reader
+                    }
+                }
+                // Invariant: target resident while the owner lives.
+                if !store.exists(&key).unwrap() {
+                    return false;
+                }
+            }
+            drop(reads);
+            drop(owned);
+            // Owner gone, all readers released in-line: evicted, clean.
+            store.exists(&key).unwrap() == false && take_violations() == 0
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Engine: every submitted task runs exactly once, results map 1:1.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_engine_exactly_once() {
+    forall(
+        gens::pair(gens::usize(1..6), gens::usize(1..80)),
+        30,
+        |(workers, tasks)| {
+            let cluster = Arc::new(LocalCluster::new(ClusterConfig {
+                workers: *workers,
+                ..Default::default()
+            }));
+            let counter = Arc::new(std::sync::atomic::AtomicU64::new(0));
+            let futs: Vec<_> = (0..*tasks)
+                .map(|i| {
+                    let c = counter.clone();
+                    cluster.submit(
+                        Box::new(move |_, payload| {
+                            c.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                            let x = u64::from_bytes(&payload)?;
+                            Ok((x * 3).to_bytes())
+                        }),
+                        (i as u64).to_bytes(),
+                    )
+                })
+                .collect();
+            let ok = futs.iter().enumerate().all(|(i, f)| {
+                u64::from_bytes(&f.wait().unwrap()).unwrap() == (i as u64) * 3
+            });
+            ok && counter.load(std::sync::atomic::Ordering::SeqCst)
+                == *tasks as u64
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Stream plugins: batching preserves the item multiset (via metadata).
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_stream_batching_preserves_items() {
+    forall(
+        gens::pair(gens::usize(1..6), gens::usize(1..40)),
+        40,
+        |(k, items)| {
+            let broker = BrokerState::new();
+            let store = Store::memory("prop-batch");
+            let mut producer = StreamProducer::new(
+                EmbeddedLogPublisher::new(broker.clone()),
+                Some(store),
+            );
+            producer.add_plugin(Box::new(BatchAggregator::new(*k)));
+            for i in 0..*items {
+                let mut md = Metadata::new();
+                md.insert(format!("item-{i}"), "1".into());
+                producer.send("t", &(i as u64), md).unwrap();
+            }
+            producer.close_topic("t").unwrap();
+
+            let mut consumer = StreamConsumer::new(
+                EmbeddedLogSubscriber::new(broker, "t"),
+            );
+            let mut seen = std::collections::BTreeSet::new();
+            let mut batches = 0usize;
+            while let Some(ev) = consumer
+                .next_event(Some(std::time::Duration::from_secs(2)))
+                .unwrap()
+            {
+                batches += 1;
+                for key in ev.metadata.keys() {
+                    if let Some(idx) = key.strip_prefix("item-") {
+                        seen.insert(idx.parse::<usize>().unwrap());
+                    }
+                }
+            }
+            // Full batches arrive; a trailing partial batch (< k items) is
+            // held back by the aggregator — exactly floor(items/k) events.
+            batches == items / k
+                && seen.len() == (items / k) * k
+                && seen.iter().all(|&i| i < *items)
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Sampling plugin at rate p keeps ~p of events (statistical bound).
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_sampling_rate_statistics() {
+    forall(gens::u64(1..10), 9, |&tenths| {
+        let rate = tenths as f64 / 10.0;
+        let mut plugin = proxystore::stream::SamplePlugin::new(rate, 99);
+        let n = 2000;
+        let kept = (0..n)
+            .filter(|&i| {
+                plugin
+                    .process(proxystore::stream::Event {
+                        topic: "t".into(),
+                        seq: i,
+                        factory: None,
+                        inline: None,
+                        metadata: Metadata::new(),
+                        end_of_stream: false,
+                    })
+                    .is_some()
+            })
+            .count();
+        let expected = rate * n as f64;
+        (kept as f64 - expected).abs() < 5.0 * (n as f64 * rate * (1.0 - rate)).sqrt().max(10.0)
+    });
+}
