@@ -8,56 +8,81 @@
 use std::sync::Arc;
 
 /// Unified error for all proxystore operations.
-#[derive(Debug, Clone, thiserror::Error)]
+///
+/// `Display` and `std::error::Error` are implemented by hand: the crate is
+/// dependency-free (no `thiserror`), matching the in-tree philosophy.
+#[derive(Debug, Clone)]
 pub enum Error {
     /// Serialization / deserialization failure.
-    #[error("codec error: {0}")]
     Codec(String),
 
     /// Underlying connector / transport failure.
-    #[error("connector error: {0}")]
     Connector(String),
 
     /// Key not present in the mediated channel.
-    #[error("key not found: {0}")]
     NotFound(String),
 
     /// KV / broker wire-protocol violation.
-    #[error("protocol error: {0}")]
     Protocol(String),
 
     /// Ownership or borrowing rule violation (runtime borrow-check).
-    #[error("ownership violation: {0}")]
     Ownership(String),
 
     /// A task submitted to the execution engine failed.
-    #[error("task failed: {0}")]
     Task(String),
 
     /// Stream closed or broker subscription ended.
-    #[error("stream closed: {0}")]
     StreamClosed(String),
 
     /// Timed out waiting (future resolution, blocking get, ...).
-    #[error("timeout after {0:?}: {1}")]
     Timeout(std::time::Duration, String),
 
     /// PJRT / XLA runtime failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Invalid configuration or argument.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Wrapped I/O error (Arc'd so `Error` stays `Clone`).
-    #[error("io error: {0}")]
-    Io(#[from] Arc<std::io::Error>),
+    Io(Arc<std::io::Error>),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Codec(m) => write!(f, "codec error: {m}"),
+            Error::Connector(m) => write!(f, "connector error: {m}"),
+            Error::NotFound(k) => write!(f, "key not found: {k}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
+            Error::Ownership(m) => write!(f, "ownership violation: {m}"),
+            Error::Task(m) => write!(f, "task failed: {m}"),
+            Error::StreamClosed(m) => write!(f, "stream closed: {m}"),
+            Error::Timeout(d, m) => write!(f, "timeout after {d:?}: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e.as_ref()),
+            _ => None,
+        }
+    }
 }
 
 impl From<std::io::Error> for Error {
     fn from(e: std::io::Error) -> Self {
         Error::Io(Arc::new(e))
+    }
+}
+
+impl From<Arc<std::io::Error>> for Error {
+    fn from(e: Arc<std::io::Error>) -> Self {
+        Error::Io(e)
     }
 }
 

@@ -84,6 +84,11 @@ impl KvClient {
         self.expect_value(Request::Get { key: key.into() })
     }
 
+    /// Batched set: one round trip for the whole batch.
+    pub fn mput(&self, items: Vec<(String, Bytes)>) -> Result<()> {
+        self.expect_ok(Request::MPut { items })
+    }
+
     pub fn mget(&self, keys: &[String]) -> Result<Vec<Option<Bytes>>> {
         match self.call(Request::MGet { keys: keys.to_vec() })? {
             Response::Values(v) => Ok(v),

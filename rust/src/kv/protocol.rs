@@ -2,9 +2,11 @@
 //!
 //! Frames are `u32` little-endian length + codec-encoded body. Commands
 //! mirror the subset of Redis that ProxyStore's connectors use (GET/SET/
-//! DEL/EXISTS/MGET, pub/sub, lists with blocking pop) plus `WaitGet` — a
-//! blocking GET with timeout that the ProxyFutures pattern uses so proxy
-//! resolution can park server-side instead of client-side polling.
+//! DEL/EXISTS/MGET/MPUT, pub/sub, lists with blocking pop) plus `WaitGet`
+//! — a blocking GET with timeout that the ProxyFutures pattern uses so
+//! proxy resolution can park server-side instead of client-side polling.
+//! The batched pair (`MGet`/`MPut`) carries whole key sets in one frame —
+//! the wire half of the shard fabric's `get_many`/`put_many` fast path.
 
 use std::io::{Read, Write};
 
@@ -26,6 +28,9 @@ pub enum Request {
     Exists { key: String },
     /// Batched get.
     MGet { keys: Vec<String> },
+    /// Batched set: all pairs land under one lock acquisition and one wire
+    /// round trip (the shard fabric's `put_many` fast path).
+    MPut { items: Vec<(String, Bytes)> },
     /// Blocking get: wait up to `timeout_ms` for the key to appear
     /// (0 = wait forever).
     WaitGet { key: String, timeout_ms: u64 },
@@ -98,6 +103,7 @@ impl Encode for Request {
             Request::FlushAll => tagged!(buf, 13),
             Request::Stats => tagged!(buf, 14),
             Request::Ping => tagged!(buf, 15),
+            Request::MPut { items } => tagged!(buf, 16, items),
         }
     }
 }
@@ -142,6 +148,7 @@ impl Decode for Request {
             13 => Request::FlushAll,
             14 => Request::Stats,
             15 => Request::Ping,
+            16 => Request::MPut { items: Decode::decode(r)? },
             t => return Err(Error::Protocol(format!("bad request tag {t}"))),
         })
     }
@@ -246,6 +253,13 @@ mod tests {
             value: Bytes(vec![1, 2, 3]),
         });
         roundtrip_req(Request::MGet { keys: vec!["a".into(), "b".into()] });
+        roundtrip_req(Request::MPut {
+            items: vec![
+                ("a".into(), Bytes(vec![1, 2])),
+                ("b".into(), Bytes(Vec::new())),
+            ],
+        });
+        roundtrip_req(Request::MPut { items: Vec::new() });
         roundtrip_req(Request::WaitGet { key: "k".into(), timeout_ms: 500 });
         roundtrip_req(Request::Publish {
             channel: "c".into(),

@@ -115,6 +115,15 @@ fn handle_request(state: &KvState, req: Request) -> Response {
         Request::Del { key } => Response::Int(i64::from(state.del(&key))),
         Request::Exists { key } => Response::Int(i64::from(state.exists(&key))),
         Request::MGet { keys } => Response::Values(state.mget(&keys)),
+        Request::MPut { items } => {
+            for (_, value) in &items {
+                if let Err(e) = KvState::check_value_size(value) {
+                    return Response::Error(e.to_string());
+                }
+            }
+            state.mset(items);
+            Response::Ok
+        }
         Request::WaitGet { key, timeout_ms } => {
             let timeout = if timeout_ms == 0 {
                 None
@@ -222,6 +231,55 @@ mod tests {
         );
         assert!(client.del("k").unwrap());
         assert_eq!(client.get("k").unwrap(), None);
+    }
+
+    #[test]
+    fn mput_mget_roundtrip_over_tcp() {
+        let server = KvServer::spawn().unwrap();
+        let client = KvClient::connect(server.addr).unwrap();
+        client
+            .mput(vec![
+                ("a".into(), Bytes(vec![1])),
+                ("b".into(), Bytes(vec![2, 2])),
+                ("c".into(), Bytes(Vec::new())),
+            ])
+            .unwrap();
+        // Partial miss: positions align with the request, absent keys None.
+        assert_eq!(
+            client
+                .mget(&["a".into(), "missing".into(), "c".into(), "b".into()])
+                .unwrap(),
+            vec![
+                Some(Bytes(vec![1])),
+                None,
+                Some(Bytes(Vec::new())),
+                Some(Bytes(vec![2, 2]))
+            ]
+        );
+        // Empty batches are legal on both ops.
+        client.mput(Vec::new()).unwrap();
+        assert_eq!(client.mget(&[]).unwrap(), Vec::new());
+        // MPut overwrites like Set.
+        client.mput(vec![("a".into(), Bytes(vec![9]))]).unwrap();
+        assert_eq!(client.get("a").unwrap(), Some(Bytes(vec![9])));
+        let (keys, _, _) = client.stats().unwrap();
+        assert_eq!(keys, 3);
+    }
+
+    #[test]
+    fn mput_wakes_cross_client_waiter() {
+        let server = KvServer::spawn().unwrap();
+        let addr = server.addr;
+        let waiter = std::thread::spawn(move || {
+            let c = KvClient::connect(addr).unwrap();
+            c.wait_get("batch-k", Some(Duration::from_secs(5))).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        let setter = KvClient::connect(server.addr).unwrap();
+        setter
+            .mput(vec![("batch-k".into(), Bytes(vec![4]))])
+            .unwrap();
+        assert_eq!(waiter.join().unwrap(), Some(Bytes(vec![4])));
     }
 
     #[test]

@@ -105,12 +105,35 @@ impl KvState {
     }
 
     pub fn mget(&self, keys: &[String]) -> Vec<Option<Bytes>> {
+        self.mget_shared(keys)
+            .into_iter()
+            .map(|o| o.map(|b| Bytes(b.to_vec())))
+            .collect()
+    }
+
+    /// Batched zero-copy read: all keys resolved under one lock
+    /// acquisition, sharing the stored allocations (embedded fast path of
+    /// the shard fabric's `get_many`).
+    pub fn mget_shared(&self, keys: &[String]) -> Vec<Option<Arc<Vec<u8>>>> {
         self.bump();
         let (m, _) = &*self.inner;
         let inner = m.lock().unwrap();
-        keys.iter()
-            .map(|k| inner.data.get(k).map(|b| Bytes(b.to_vec())))
-            .collect()
+        keys.iter().map(|k| inner.data.get(k).cloned()).collect()
+    }
+
+    /// Batched set: all pairs inserted under one lock acquisition, one
+    /// wake-up for blocked readers.
+    pub fn mset(&self, items: Vec<(String, Bytes)>) {
+        self.bump();
+        let (m, cv) = &*self.inner;
+        let mut inner = m.lock().unwrap();
+        for (key, value) in items {
+            self.gauge.add(value.0.len());
+            if let Some(old) = inner.data.insert(key, Arc::new(value.0)) {
+                self.gauge.sub(old.len());
+            }
+        }
+        cv.notify_all();
     }
 
     /// Blocking get: wait for the key up to `timeout` (`None` = forever).
@@ -442,5 +465,32 @@ mod tests {
         kv.set("x", Bytes(vec![1]));
         let got = kv.mget(&["x".into(), "y".into(), "x".into()]);
         assert_eq!(got, vec![Some(Bytes(vec![1])), None, Some(Bytes(vec![1]))]);
+    }
+
+    #[test]
+    fn mset_batch_and_gauge() {
+        let kv = KvState::new();
+        kv.set("a", Bytes(vec![0; 10]));
+        kv.mset(vec![
+            ("a".into(), Bytes(vec![1; 4])), // overwrite shrinks gauge
+            ("b".into(), Bytes(vec![2; 6])),
+        ]);
+        assert_eq!(kv.gauge.get(), 10);
+        assert_eq!(kv.get("a"), Some(Bytes(vec![1; 4])));
+        assert_eq!(kv.get("b"), Some(Bytes(vec![2; 6])));
+        kv.mset(Vec::new()); // empty batch is a no-op
+        assert_eq!(kv.gauge.get(), 10);
+    }
+
+    #[test]
+    fn mset_wakes_blocked_waiters() {
+        let kv = KvState::new();
+        let kv2 = kv.clone();
+        let h = std::thread::spawn(move || {
+            kv2.wait_get("batched", Some(Duration::from_secs(5)))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        kv.mset(vec![("batched".into(), Bytes(vec![3]))]);
+        assert_eq!(h.join().unwrap(), Some(Bytes(vec![3])));
     }
 }

@@ -18,6 +18,15 @@
 //! execution engine ([`engine`]), a network simulator ([`netsim`]), and a
 //! PJRT runtime ([`runtime`]) that executes the JAX/Pallas-compiled
 //! artifacts from `artifacts/` on the request path with no Python.
+//!
+//! Scaling beyond a single mediated channel is the job of the **sharded
+//! store fabric** ([`shard`]): a consistent-hash ring with virtual nodes
+//! routes keys across N backend connectors with per-key replication and
+//! read-fallback, the KV wire protocol pipelines batched `MGET`/`MPUT`
+//! traffic, and the [`store`] surfaces batched `put_many`/`get_many` plus
+//! proxy batch-prefetch ([`proxy::prefetch`]) so streaming consumers
+//! amortize round trips. A proxy minted against the fabric stays fully
+//! self-contained: its factory carries the serialized shard layout.
 
 pub mod apps;
 pub mod benchlib;
@@ -34,6 +43,7 @@ pub mod ownership;
 pub mod proxy;
 pub mod rng;
 pub mod runtime;
+pub mod shard;
 pub mod store;
 pub mod stream;
 pub mod testing;
@@ -57,7 +67,8 @@ pub mod prelude {
         LeaseLifetime, Lifetime, OwnedProxy, RefMutProxy, RefProxy,
         StaticLifetime, StoreOwnedExt,
     };
-    pub use crate::proxy::Proxy;
+    pub use crate::proxy::{prefetch, Proxy};
+    pub use crate::shard::{HashRing, ShardedConnector, ShardedDesc};
     pub use crate::store::{
         Blob, Connector, ConnectorDesc, FileConnector, MemoryConnector,
         MultiConnector, Store, TcpKvConnector, ThrottledConnector,

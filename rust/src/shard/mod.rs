@@ -1,0 +1,40 @@
+//! Sharded store fabric: consistent-hash routing, replication, and
+//! batched multi-key traffic over N backend connectors.
+//!
+//! The paper's proxy patterns (Sec III) mediate every object through one
+//! channel, which caps aggregate throughput at that single endpoint. This
+//! module removes the bottleneck while keeping proxies fully transparent:
+//!
+//! * [`ring`] — a consistent-hash ring with virtual nodes mapping object
+//!   keys to shards, with the classic remapping-locality property (adding
+//!   a shard moves ~1/N of the keys, all of them *to* the new shard);
+//! * [`router`] — [`ShardedConnector`], an ordinary
+//!   [`Connector`](crate::store::Connector) that routes each key to its
+//!   replica set (R distinct shards), falls back to surviving replicas on
+//!   read miss/failure, and fans batched `put_many`/`get_many` traffic out
+//!   to all shards in parallel;
+//! * [`ShardedDesc`] — the serializable fabric description (wire form:
+//!   [`ConnectorDesc::Sharded`](crate::store::ConnectorDesc)). A proxy
+//!   minted against the fabric embeds it in its factory, so resolution in
+//!   any process rebuilds the identical ring and routes to the same shard.
+//!
+//! ```no_run
+//! use proxystore::prelude::*;
+//! use proxystore::shard::ShardedDesc;
+//!
+//! let desc = ShardedDesc::new(vec![
+//!     ConnectorDesc::TcpKv { addr: "10.0.0.1:6379".into() },
+//!     ConnectorDesc::TcpKv { addr: "10.0.0.2:6379".into() },
+//! ])
+//! .with_replicas(2);
+//! let store = Store::new("fabric", desc.connect()?);
+//! let keys = store.put_many(&[Bytes(vec![1]), Bytes(vec![2])])?;
+//! let objs: Vec<Option<Bytes>> = store.get_many(&keys)?;
+//! # Ok::<(), proxystore::Error>(())
+//! ```
+
+pub mod ring;
+pub mod router;
+
+pub use ring::{hash_key, HashRing};
+pub use router::{ShardedConnector, ShardedDesc, DEFAULT_VNODES};

@@ -1,0 +1,632 @@
+//! The sharded connector: consistent-hash routing + replication over N
+//! backend channels, behind the ordinary [`Connector`] interface.
+//!
+//! Writes land on the key's replica set (R distinct shards from the
+//! ring's successor walk); reads try the primary first and fall back to
+//! the remaining replicas on miss *or* failure, so a dead backend degrades
+//! throughput instead of availability. Batched ops group keys by shard and
+//! fan out in parallel, so aggregate throughput scales with the shard
+//! count instead of being bound by one channel.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::shard::ring::HashRing;
+use crate::store::{Blob, Connector, ConnectorDesc};
+
+/// Default virtual nodes per shard (128 keeps per-shard load within a few
+/// percent of uniform; see the ring's distribution tests).
+pub const DEFAULT_VNODES: usize = 128;
+
+/// Serializable description of a shard fabric. This is what a proxy
+/// [`Factory`](crate::proxy::Factory) carries (as
+/// [`ConnectorDesc::Sharded`]) so resolution can rebuild the exact same
+/// ring — same shard order, same vnodes, same replica placement — in any
+/// process.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardedDesc {
+    pub shards: Vec<ConnectorDesc>,
+    pub replicas: usize,
+    pub vnodes: usize,
+}
+
+impl ShardedDesc {
+    /// Fabric over the given backends, replication factor 1.
+    pub fn new(shards: Vec<ConnectorDesc>) -> ShardedDesc {
+        ShardedDesc { shards, replicas: 1, vnodes: DEFAULT_VNODES }
+    }
+
+    /// Set the per-key replication factor (clamped to the shard count at
+    /// connect time).
+    pub fn with_replicas(mut self, replicas: usize) -> ShardedDesc {
+        self.replicas = replicas;
+        self
+    }
+
+    /// Set the virtual-node count per shard.
+    pub fn with_vnodes(mut self, vnodes: usize) -> ShardedDesc {
+        self.vnodes = vnodes;
+        self
+    }
+
+    /// The wire form carried by factories.
+    pub fn desc(&self) -> ConnectorDesc {
+        ConnectorDesc::Sharded {
+            shards: self.shards.clone(),
+            replicas: self.replicas as u64,
+            vnodes: self.vnodes as u64,
+        }
+    }
+
+    /// Build the fabric (connects every backend).
+    pub fn connect(&self) -> Result<Arc<dyn Connector>> {
+        self.desc().connect()
+    }
+}
+
+impl From<ShardedDesc> for ConnectorDesc {
+    fn from(d: ShardedDesc) -> ConnectorDesc {
+        d.desc()
+    }
+}
+
+/// Per-shard results of a batched fan-out.
+type ShardResults = Vec<(usize, Result<Vec<Option<Blob>>>)>;
+
+/// Consistent-hash routing connector over N backends.
+pub struct ShardedConnector {
+    shards: Vec<Arc<dyn Connector>>,
+    ring: HashRing,
+    replicas: usize,
+    vnodes: usize,
+    /// Reads served by a non-primary replica (miss/failure fallbacks).
+    fallbacks: AtomicU64,
+    /// Writes that landed on fewer than R replicas (some backend down).
+    degraded_writes: AtomicU64,
+}
+
+impl ShardedConnector {
+    /// Fabric over explicit backends. `replicas` is clamped to
+    /// `[1, shards.len()]`; `vnodes == 0` selects [`DEFAULT_VNODES`].
+    pub fn new(
+        shards: Vec<Arc<dyn Connector>>,
+        replicas: usize,
+        vnodes: usize,
+    ) -> Result<ShardedConnector> {
+        if shards.is_empty() {
+            return Err(Error::Config("sharded connector needs >= 1 shard".into()));
+        }
+        let vnodes = if vnodes == 0 { DEFAULT_VNODES } else { vnodes };
+        let replicas = replicas.clamp(1, shards.len());
+        Ok(ShardedConnector {
+            ring: HashRing::new(shards.len(), vnodes),
+            shards,
+            replicas,
+            vnodes,
+            fallbacks: AtomicU64::new(0),
+            degraded_writes: AtomicU64::new(0),
+        })
+    }
+
+    /// Primary shard index for a key (tests / diagnostics).
+    pub fn shard_for(&self, key: &str) -> usize {
+        self.ring.shard_for(key)
+    }
+
+    /// The key's replica set, primary first.
+    pub fn replicas_for(&self, key: &str) -> Vec<usize> {
+        self.ring.replicas_for(key, self.replicas)
+    }
+
+    /// Number of backends.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Reads that were served by a fallback replica so far.
+    pub fn fallback_reads(&self) -> u64 {
+        self.fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// Writes that landed on fewer than their full replica set (a backend
+    /// was down at write time). Such objects survive, but lose the
+    /// redundancy budget until the missing copies are repaired.
+    pub fn degraded_writes(&self) -> u64 {
+        self.degraded_writes.load(Ordering::Relaxed)
+    }
+
+    /// Fan a batched get out to every shard with a non-empty index group,
+    /// in parallel; `groups[shard]` holds indices into `keys`.
+    fn fan_out_get(&self, groups: &[Vec<usize>], keys: &[String]) -> ShardResults {
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (shard, group) in groups.iter().enumerate() {
+                if group.is_empty() {
+                    continue;
+                }
+                let conn = self.shards[shard].clone();
+                let batch: Vec<String> =
+                    group.iter().map(|&i| keys[i].clone()).collect();
+                handles.push((shard, s.spawn(move || conn.get_many(&batch))));
+            }
+            handles
+                .into_iter()
+                .map(|(shard, h)| {
+                    (
+                        shard,
+                        h.join().unwrap_or_else(|_| {
+                            Err(Error::Connector(
+                                "shard get_many panicked".into(),
+                            ))
+                        }),
+                    )
+                })
+                .collect()
+        })
+    }
+}
+
+impl Connector for ShardedConnector {
+    fn desc(&self) -> ConnectorDesc {
+        ConnectorDesc::Sharded {
+            shards: self.shards.iter().map(|s| s.desc()).collect(),
+            replicas: self.replicas as u64,
+            vnodes: self.vnodes as u64,
+        }
+    }
+
+    fn put(&self, key: &str, mut data: Vec<u8>) -> Result<()> {
+        let reps = self.ring.replicas_for(key, self.replicas);
+        let mut stored = 0usize;
+        let mut last_err = None;
+        for (ri, &shard) in reps.iter().enumerate() {
+            let payload = if ri + 1 == reps.len() {
+                std::mem::take(&mut data)
+            } else {
+                data.clone()
+            };
+            match self.shards[shard].put(key, payload) {
+                Ok(()) => stored += 1,
+                Err(e) => last_err = Some(e),
+            }
+        }
+        // A write is durable once any replica holds it; total write
+        // failure surfaces the backend error. Partial placement is counted
+        // so operators can see redundancy erode before it bites.
+        if stored > 0 {
+            if stored < reps.len() {
+                self.degraded_writes.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(())
+        } else {
+            Err(last_err.unwrap_or_else(|| {
+                Error::Connector(format!("no replica accepted {key}"))
+            }))
+        }
+    }
+
+    fn get(&self, key: &str) -> Result<Option<Blob>> {
+        let reps = self.ring.replicas_for(key, self.replicas);
+        let mut healthy_misses = 0usize;
+        let mut last_err = None;
+        for (attempt, &shard) in reps.iter().enumerate() {
+            match self.shards[shard].get(key) {
+                Ok(Some(blob)) => {
+                    if attempt > 0 {
+                        self.fallbacks.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Ok(Some(blob));
+                }
+                Ok(None) => healthy_misses += 1,
+                Err(e) => last_err = Some(e),
+            }
+        }
+        // A healthy replica answering "absent" makes this a miss; only a
+        // fully unreachable replica set is an error. Caveat (standard for
+        // replication without read-repair): an object whose write was
+        // degraded can be reported absent while its only copy sits on a
+        // temporarily unreachable backend — `degraded_writes` makes that
+        // window observable.
+        match last_err {
+            Some(e) if healthy_misses == 0 => Err(e),
+            _ => Ok(None),
+        }
+    }
+
+    fn put_many(&self, items: Vec<(String, Vec<u8>)>) -> Result<()> {
+        if items.is_empty() {
+            return Ok(());
+        }
+        let n = self.shards.len();
+        let mut batches: Vec<Vec<(String, Vec<u8>)>> = vec![Vec::new(); n];
+        let mut owners: Vec<(String, Vec<usize>)> = Vec::with_capacity(items.len());
+        for (key, data) in items {
+            let reps = self.ring.replicas_for(&key, self.replicas);
+            for &shard in &reps {
+                batches[shard].push((key.clone(), data.clone()));
+            }
+            owners.push((key, reps));
+        }
+        let mut shard_res: Vec<Option<Result<()>>> = vec![None; n];
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (shard, batch) in batches.into_iter().enumerate() {
+                if batch.is_empty() {
+                    continue;
+                }
+                let conn = self.shards[shard].clone();
+                handles.push((shard, s.spawn(move || conn.put_many(batch))));
+            }
+            for (shard, h) in handles {
+                shard_res[shard] = Some(h.join().unwrap_or_else(|_| {
+                    Err(Error::Connector("shard put_many panicked".into()))
+                }));
+            }
+        });
+        for (key, reps) in owners {
+            let stored = reps
+                .iter()
+                .filter(|&&sh| matches!(shard_res[sh], Some(Ok(()))))
+                .count();
+            if stored == 0 {
+                let err = reps.iter().find_map(|&sh| match &shard_res[sh] {
+                    Some(Err(e)) => Some(e.clone()),
+                    _ => None,
+                });
+                return Err(err.unwrap_or_else(|| {
+                    Error::Connector(format!("all replicas failed for {key}"))
+                }));
+            }
+            if stored < reps.len() {
+                self.degraded_writes.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Ok(())
+    }
+
+    fn get_many(&self, keys: &[String]) -> Result<Vec<Option<Blob>>> {
+        if keys.is_empty() {
+            return Ok(Vec::new());
+        }
+        let n = self.shards.len();
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, key) in keys.iter().enumerate() {
+            groups[self.ring.shard_for(key)].push(i);
+        }
+        let mut out: Vec<Option<Blob>> = vec![None; keys.len()];
+        let mut healthy_miss = vec![false; keys.len()];
+        let mut pending: Vec<usize> = Vec::new();
+        let mut last_err: Option<Error> = None;
+        // Parallel primary fetch: each shard serves its sub-batch
+        // concurrently, so wall time is the slowest shard, not the sum.
+        for (shard, res) in self.fan_out_get(&groups, keys) {
+            match res {
+                Ok(blobs) => {
+                    for (&i, blob) in groups[shard].iter().zip(blobs) {
+                        match blob {
+                            Some(b) => out[i] = Some(b),
+                            None => {
+                                healthy_miss[i] = true;
+                                if self.replicas > 1 {
+                                    pending.push(i);
+                                }
+                            }
+                        }
+                    }
+                }
+                Err(e) => {
+                    if self.replicas == 1 {
+                        return Err(e);
+                    }
+                    pending.extend(groups[shard].iter().copied());
+                    last_err = Some(e);
+                }
+            }
+        }
+        // Batched replica fallback: one parallel round per replica rank,
+        // so a dead shard costs one extra fan-out round — not one failed
+        // round trip per affected key.
+        let mut depth = 1;
+        while !pending.is_empty() && depth < self.replicas {
+            let mut round_groups: Vec<Vec<usize>> = vec![Vec::new(); n];
+            for &i in &pending {
+                let shard = self.ring.replicas_for(&keys[i], self.replicas)[depth];
+                round_groups[shard].push(i);
+            }
+            let mut next_pending = Vec::new();
+            for (shard, res) in self.fan_out_get(&round_groups, keys) {
+                match res {
+                    Ok(blobs) => {
+                        for (&i, blob) in round_groups[shard].iter().zip(blobs) {
+                            match blob {
+                                Some(b) => {
+                                    out[i] = Some(b);
+                                    self.fallbacks.fetch_add(1, Ordering::Relaxed);
+                                }
+                                None => {
+                                    healthy_miss[i] = true;
+                                    next_pending.push(i);
+                                }
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        next_pending.extend(round_groups[shard].iter().copied());
+                        last_err = Some(e);
+                    }
+                }
+            }
+            pending = next_pending;
+            depth += 1;
+        }
+        // Same semantics as `get`: a key every replica errored on (no
+        // healthy "absent" answer anywhere) surfaces the backend error.
+        if pending.iter().any(|&i| !healthy_miss[i]) {
+            if let Some(e) = last_err {
+                return Err(e);
+            }
+        }
+        Ok(out)
+    }
+
+    fn evict(&self, key: &str) -> Result<()> {
+        let reps = self.ring.replicas_for(key, self.replicas);
+        let mut any_ok = false;
+        let mut last_err = None;
+        for &shard in &reps {
+            match self.shards[shard].evict(key) {
+                Ok(()) => any_ok = true,
+                Err(e) => last_err = Some(e),
+            }
+        }
+        match last_err {
+            Some(e) if !any_ok => Err(e),
+            _ => Ok(()),
+        }
+    }
+
+    fn exists(&self, key: &str) -> Result<bool> {
+        let reps = self.ring.replicas_for(key, self.replicas);
+        let mut healthy = 0usize;
+        let mut last_err = None;
+        for &shard in &reps {
+            match self.shards[shard].exists(key) {
+                Ok(true) => return Ok(true),
+                Ok(false) => healthy += 1,
+                Err(e) => last_err = Some(e),
+            }
+        }
+        match last_err {
+            Some(e) if healthy == 0 => Err(e),
+            _ => Ok(false),
+        }
+    }
+
+    fn len(&self) -> Result<usize> {
+        // Sum over backends; replicated objects count once per copy.
+        let mut total = 0;
+        for shard in &self.shards {
+            total += shard.len()?;
+        }
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{Decode, Encode};
+    use crate::store::MemoryConnector;
+    use crate::testing::fail::FlakyConnector;
+
+    fn fabric(
+        n: usize,
+        replicas: usize,
+    ) -> (ShardedConnector, Vec<Arc<dyn Connector>>) {
+        let backends: Vec<Arc<dyn Connector>> =
+            (0..n).map(|_| MemoryConnector::new()).collect();
+        let router =
+            ShardedConnector::new(backends.clone(), replicas, 64).unwrap();
+        (router, backends)
+    }
+
+    #[test]
+    fn routes_to_primary_shard_only() {
+        let (router, backends) = fabric(4, 1);
+        for i in 0..32 {
+            let key = format!("obj-{i}");
+            router.put(&key, vec![i as u8]).unwrap();
+            let primary = router.shard_for(&key);
+            for (s, b) in backends.iter().enumerate() {
+                assert_eq!(
+                    b.exists(&key).unwrap(),
+                    s == primary,
+                    "key {key} on wrong shard {s}"
+                );
+            }
+            assert_eq!(
+                router.get(&key).unwrap().map(|b| b.to_vec()),
+                Some(vec![i as u8])
+            );
+        }
+    }
+
+    #[test]
+    fn replication_writes_r_copies() {
+        let (router, backends) = fabric(5, 3);
+        router.put("replicated", vec![7; 100]).unwrap();
+        let copies = backends
+            .iter()
+            .filter(|b| b.exists("replicated").unwrap())
+            .count();
+        assert_eq!(copies, 3);
+        assert_eq!(router.len().unwrap(), 3); // counted once per copy
+        router.evict("replicated").unwrap();
+        assert!(!router.exists("replicated").unwrap());
+        assert_eq!(router.len().unwrap(), 0);
+    }
+
+    #[test]
+    fn read_falls_back_when_primary_is_down() {
+        let backends: Vec<Arc<FlakyConnector>> = (0..3)
+            .map(|_| FlakyConnector::wrap(MemoryConnector::new()))
+            .collect();
+        let as_conns: Vec<Arc<dyn Connector>> = backends
+            .iter()
+            .map(|b| b.clone() as Arc<dyn Connector>)
+            .collect();
+        let router = ShardedConnector::new(as_conns, 2, 64).unwrap();
+        router.put("k", vec![42; 64]).unwrap();
+        let reps = router.replicas_for("k");
+        assert_eq!(reps.len(), 2);
+
+        // Kill the primary: reads must transparently fall back.
+        backends[reps[0]].set_down(true);
+        assert_eq!(router.fallback_reads(), 0);
+        assert_eq!(router.get("k").unwrap().map(|b| b.to_vec()), Some(vec![42; 64]));
+        assert_eq!(router.fallback_reads(), 1);
+        assert!(router.exists("k").unwrap());
+
+        // Kill every replica: now the error surfaces.
+        backends[reps[1]].set_down(true);
+        assert!(router.get("k").is_err());
+
+        // Recovery restores primary reads.
+        backends[reps[0]].set_down(false);
+        backends[reps[1]].set_down(false);
+        assert_eq!(router.get("k").unwrap().map(|b| b.to_vec()), Some(vec![42; 64]));
+    }
+
+    #[test]
+    fn write_survives_one_dead_replica() {
+        let backends: Vec<Arc<FlakyConnector>> = (0..3)
+            .map(|_| FlakyConnector::wrap(MemoryConnector::new()))
+            .collect();
+        let as_conns: Vec<Arc<dyn Connector>> = backends
+            .iter()
+            .map(|b| b.clone() as Arc<dyn Connector>)
+            .collect();
+        let router = ShardedConnector::new(as_conns, 2, 64).unwrap();
+        let reps = router.replicas_for("k");
+        backends[reps[0]].set_down(true);
+        assert_eq!(router.degraded_writes(), 0);
+        router.put("k", vec![5]).unwrap(); // secondary accepted it
+        assert_eq!(router.degraded_writes(), 1);
+        assert_eq!(router.get("k").unwrap().map(|b| b.to_vec()), Some(vec![5]));
+
+        // With every backend down the write failure surfaces.
+        for b in &backends {
+            b.set_down(true);
+        }
+        assert!(router.put("k2", vec![6]).is_err());
+    }
+
+    #[test]
+    fn batched_ops_roundtrip_across_shards() {
+        let (router, backends) = fabric(4, 1);
+        let items: Vec<(String, Vec<u8>)> = (0..64)
+            .map(|i| (format!("batch-{i}"), vec![i as u8; 16]))
+            .collect();
+        router.put_many(items.clone()).unwrap();
+        // Every shard received some portion of the batch.
+        for b in &backends {
+            assert!(b.len().unwrap() > 0, "a shard got no keys from the batch");
+        }
+        let keys: Vec<String> =
+            items.iter().map(|(k, _)| k.clone()).collect();
+        let got = router.get_many(&keys).unwrap();
+        for (i, blob) in got.iter().enumerate() {
+            assert_eq!(blob.as_ref().unwrap().to_vec(), vec![i as u8; 16]);
+        }
+        // Partial miss keeps positional alignment.
+        let mixed = vec![
+            "batch-0".to_string(),
+            "missing".to_string(),
+            "batch-63".to_string(),
+        ];
+        let got = router.get_many(&mixed).unwrap();
+        assert!(got[0].is_some());
+        assert!(got[1].is_none());
+        assert!(got[2].is_some());
+        // Empty batch.
+        assert_eq!(router.get_many(&[]).unwrap(), Vec::new());
+        router.put_many(Vec::new()).unwrap();
+    }
+
+    #[test]
+    fn batched_get_falls_back_per_key() {
+        let backends: Vec<Arc<FlakyConnector>> = (0..4)
+            .map(|_| FlakyConnector::wrap(MemoryConnector::new()))
+            .collect();
+        let as_conns: Vec<Arc<dyn Connector>> = backends
+            .iter()
+            .map(|b| b.clone() as Arc<dyn Connector>)
+            .collect();
+        let router = ShardedConnector::new(as_conns, 2, 64).unwrap();
+        let items: Vec<(String, Vec<u8>)> =
+            (0..32).map(|i| (format!("fb-{i}"), vec![i as u8])).collect();
+        router.put_many(items.clone()).unwrap();
+        let keys: Vec<String> = items.iter().map(|(k, _)| k.clone()).collect();
+
+        backends[0].set_down(true);
+        let got = router.get_many(&keys).unwrap();
+        for (i, blob) in got.iter().enumerate() {
+            assert_eq!(
+                blob.as_ref().map(|b| b.to_vec()),
+                Some(vec![i as u8]),
+                "key {} lost with one shard down",
+                keys[i]
+            );
+        }
+        assert!(router.fallback_reads() > 0);
+    }
+
+    #[test]
+    fn desc_roundtrips_through_codec_and_reconnects() {
+        let (router, _backends) = fabric(3, 2);
+        router.put("shared", vec![9; 32]).unwrap();
+        let desc = router.desc();
+        let decoded = ConnectorDesc::from_bytes(&desc.to_bytes()).unwrap();
+        assert_eq!(desc, decoded);
+        let rebuilt = decoded.connect().unwrap();
+        assert_eq!(
+            rebuilt.get("shared").unwrap().map(|b| b.to_vec()),
+            Some(vec![9; 32])
+        );
+        // Same ring on both sides: writes through the rebuilt fabric are
+        // visible through the original.
+        rebuilt.put("back", vec![1]).unwrap();
+        assert_eq!(router.get("back").unwrap().map(|b| b.to_vec()), Some(vec![1]));
+    }
+
+    #[test]
+    fn sharded_desc_builder() {
+        let d = ShardedDesc::new(vec![
+            ConnectorDesc::Memory { id: "a".into() },
+            ConnectorDesc::Memory { id: "b".into() },
+        ])
+        .with_replicas(2)
+        .with_vnodes(32);
+        match d.desc() {
+            ConnectorDesc::Sharded { shards, replicas, vnodes } => {
+                assert_eq!(shards.len(), 2);
+                assert_eq!(replicas, 2);
+                assert_eq!(vnodes, 32);
+            }
+            other => panic!("unexpected desc {other:?}"),
+        }
+        let conn = d.connect().unwrap();
+        conn.put("x", vec![1]).unwrap();
+        assert!(conn.exists("x").unwrap());
+    }
+
+    #[test]
+    fn empty_fabric_rejected_and_replicas_clamped() {
+        assert!(ShardedConnector::new(Vec::new(), 1, 64).is_err());
+        let (router, _b) = fabric(2, 99);
+        assert_eq!(router.replicas_for("k").len(), 2);
+        let (router, _b) = fabric(2, 0);
+        assert_eq!(router.replicas_for("k").len(), 1);
+    }
+}

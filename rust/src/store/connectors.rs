@@ -59,6 +59,22 @@ pub trait Connector: Send + Sync {
 
     fn exists(&self, key: &str) -> Result<bool>;
 
+    /// Batched put. The default loops over [`Connector::put`]; channels
+    /// with a wire protocol (TCP KV) or a lock to amortize (memory)
+    /// override it so the whole batch pays one round trip.
+    fn put_many(&self, items: Vec<(String, Vec<u8>)>) -> Result<()> {
+        for (key, data) in items {
+            self.put(&key, data)?;
+        }
+        Ok(())
+    }
+
+    /// Batched get, positionally aligned with `keys` (`None` = miss). The
+    /// default loops over [`Connector::get`]; see [`Connector::put_many`].
+    fn get_many(&self, keys: &[String]) -> Result<Vec<Option<Blob>>> {
+        keys.iter().map(|k| self.get(k)).collect()
+    }
+
     /// Number of objects currently resident (the Fig 10 "active proxies"
     /// measurement).
     fn len(&self) -> Result<usize>;
@@ -92,6 +108,14 @@ pub enum ConnectorDesc {
         large: Box<ConnectorDesc>,
         threshold: u64,
     },
+    /// Consistent-hash shard fabric: keys route to `shards` via a virtual-
+    /// node hash ring, each key replicated on `replicas` distinct shards
+    /// (see [`crate::shard`]).
+    Sharded {
+        shards: Vec<ConnectorDesc>,
+        replicas: u64,
+        vnodes: u64,
+    },
 }
 
 impl Encode for ConnectorDesc {
@@ -121,6 +145,12 @@ impl Encode for ConnectorDesc {
                 large.encode(buf);
                 threshold.encode(buf);
             }
+            ConnectorDesc::Sharded { shards, replicas, vnodes } => {
+                put_varint(buf, 5);
+                shards.encode(buf);
+                replicas.encode(buf);
+                vnodes.encode(buf);
+            }
         }
     }
 }
@@ -140,6 +170,11 @@ impl Decode for ConnectorDesc {
                 small: Box::new(Decode::decode(r)?),
                 large: Box::new(Decode::decode(r)?),
                 threshold: Decode::decode(r)?,
+            },
+            5 => ConnectorDesc::Sharded {
+                shards: Decode::decode(r)?,
+                replicas: Decode::decode(r)?,
+                vnodes: Decode::decode(r)?,
             },
             t => return Err(Error::Codec(format!("bad connector tag {t}"))),
         })
@@ -176,6 +211,17 @@ impl ConnectorDesc {
                     large.connect()?,
                     *threshold as usize,
                 )))
+            }
+            ConnectorDesc::Sharded { shards, replicas, vnodes } => {
+                let backends = shards
+                    .iter()
+                    .map(|d| d.connect())
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Arc::new(crate::shard::ShardedConnector::new(
+                    backends,
+                    *replicas as usize,
+                    *vnodes as usize,
+                )?))
             }
         }
     }
@@ -249,6 +295,16 @@ impl Connector for MemoryConnector {
         timeout: Option<Duration>,
     ) -> Result<Option<Blob>> {
         Ok(self.state.wait_get_shared(key, timeout))
+    }
+
+    fn put_many(&self, items: Vec<(String, Vec<u8>)>) -> Result<()> {
+        self.state
+            .mset(items.into_iter().map(|(k, v)| (k, Bytes(v))).collect());
+        Ok(())
+    }
+
+    fn get_many(&self, keys: &[String]) -> Result<Vec<Option<Blob>>> {
+        Ok(self.state.mget_shared(keys))
     }
 
     fn evict(&self, key: &str) -> Result<()> {
@@ -395,6 +451,22 @@ impl Connector for TcpKvConnector {
         Ok(c.wait_get(key, timeout)?.map(|b| Arc::new(b.0)))
     }
 
+    fn put_many(&self, items: Vec<(String, Vec<u8>)>) -> Result<()> {
+        // Native MPUT: the whole batch crosses the wire in one frame.
+        self.client
+            .mput(items.into_iter().map(|(k, v)| (k, Bytes(v))).collect())
+    }
+
+    fn get_many(&self, keys: &[String]) -> Result<Vec<Option<Blob>>> {
+        // Native MGET: one round trip regardless of batch size.
+        Ok(self
+            .client
+            .mget(keys)?
+            .into_iter()
+            .map(|o| o.map(|b| Arc::new(b.0)))
+            .collect())
+    }
+
     fn evict(&self, key: &str) -> Result<()> {
         self.client.del(key)?;
         Ok(())
@@ -474,6 +546,22 @@ impl Connector for ThrottledConnector {
         let v = self.inner.wait_get(key, timeout)?;
         self.link.transfer(v.as_ref().map(|v| v.len()).unwrap_or(0));
         Ok(v)
+    }
+
+    fn put_many(&self, items: Vec<(String, Vec<u8>)>) -> Result<()> {
+        // Pipelined semantics: one latency for the whole batch, wire time
+        // for the aggregate bytes (vs per-key latency in the default loop).
+        let total: usize = items.iter().map(|(_, v)| v.len()).sum();
+        self.link.transfer(total);
+        self.inner.put_many(items)
+    }
+
+    fn get_many(&self, keys: &[String]) -> Result<Vec<Option<Blob>>> {
+        let out = self.inner.get_many(keys)?;
+        let total: usize =
+            out.iter().map(|b| b.as_ref().map(|v| v.len()).unwrap_or(0)).sum();
+        self.link.transfer(total);
+        Ok(out)
     }
 
     fn evict(&self, key: &str) -> Result<()> {
@@ -570,6 +658,39 @@ impl Connector for MultiConnector {
         }
     }
 
+    fn put_many(&self, items: Vec<(String, Vec<u8>)>) -> Result<()> {
+        let (small, large): (Vec<_>, Vec<_>) = items
+            .into_iter()
+            .partition(|(_, data)| data.len() <= self.threshold);
+        if !small.is_empty() {
+            self.small.put_many(small)?;
+        }
+        if !large.is_empty() {
+            self.large.put_many(large)?;
+        }
+        Ok(())
+    }
+
+    fn get_many(&self, keys: &[String]) -> Result<Vec<Option<Blob>>> {
+        // Batch the large channel, then batch only the misses to small —
+        // same read order as `get`, still two round trips worst case.
+        let mut out = self.large.get_many(keys)?;
+        let miss_idx: Vec<usize> = out
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| b.is_none().then_some(i))
+            .collect();
+        if !miss_idx.is_empty() {
+            let miss_keys: Vec<String> =
+                miss_idx.iter().map(|&i| keys[i].clone()).collect();
+            let filled = self.small.get_many(&miss_keys)?;
+            for (&i, blob) in miss_idx.iter().zip(filled) {
+                out[i] = blob;
+            }
+        }
+        Ok(out)
+    }
+
     fn evict(&self, key: &str) -> Result<()> {
         self.large.evict(key)?;
         self.small.evict(key)
@@ -600,6 +721,24 @@ mod tests {
         c.evict("k").unwrap();
         assert!(!c.exists("k").unwrap());
         c.evict("k").unwrap(); // idempotent
+
+        // Batched ops: empty batches, round trip, positional alignment.
+        c.put_many(Vec::new()).unwrap();
+        assert_eq!(c.get_many(&[]).unwrap(), Vec::new());
+        c.put_many(vec![
+            ("b1".into(), vec![1]),
+            ("b2".into(), vec![2, 2]),
+        ])
+        .unwrap();
+        let got = c
+            .get_many(&["b1".into(), "nope".into(), "b2".into()])
+            .unwrap();
+        assert_eq!(
+            got.iter().map(|b| b.as_ref().map(|v| v.to_vec())).collect::<Vec<_>>(),
+            vec![Some(vec![1]), None, Some(vec![2, 2])]
+        );
+        c.evict("b1").unwrap();
+        c.evict("b2").unwrap();
     }
 
     #[test]

@@ -4,6 +4,19 @@
 //! `put`/`get`/`evict`, proxy creation ([`Store::proxy`]), distributed
 //! futures ([`Store::future`]), owned proxies ([`crate::ownership`]), and
 //! lifetime attachment. Keys are generated, unique, and never reused.
+//!
+//! Batched operations ([`Store::put_many`], [`Store::get_many`],
+//! [`Store::proxy_many`]) move whole key sets per call; connectors with a
+//! wire protocol serve them in one round trip (`MGET`/`MPUT`), and the
+//! sharded fabric ([`crate::shard`]) fans them out across backends in
+//! parallel. [`StoreMetrics`] counts batched traffic per key and per byte,
+//! exactly like the single-key operations.
+//!
+//! The connector zoo spans the paper's deployments and the scaling work on
+//! top: in-process memory, shared filesystem, TCP KV ([`TcpKvConnector`]),
+//! throttled/netsim views, size-policy multi-routing, and the
+//! consistent-hash shard fabric ([`crate::shard::ShardedConnector`]) with
+//! replication and read-fallback.
 
 mod connectors;
 
@@ -151,6 +164,58 @@ impl Store {
         }
     }
 
+    /// Batched serialize-and-store; returns the generated keys, aligned
+    /// with `objs`. One connector `put_many` (a single wire round trip on
+    /// batching channels; a parallel fan-out on the shard fabric).
+    pub fn put_many<T: Encode>(&self, objs: &[T]) -> Result<Vec<String>> {
+        let mut items = Vec::with_capacity(objs.len());
+        let mut keys = Vec::with_capacity(objs.len());
+        let mut total = 0u64;
+        for obj in objs {
+            let key = self.new_key();
+            let data = obj.to_bytes();
+            total += data.len() as u64;
+            items.push((key.clone(), data));
+            keys.push(key);
+        }
+        // Counters account per key / per byte, same as the single-key ops.
+        self.inner.puts.fetch_add(objs.len() as u64, Ordering::Relaxed);
+        self.inner.put_bytes.fetch_add(total, Ordering::Relaxed);
+        self.inner.connector.put_many(items)?;
+        Ok(keys)
+    }
+
+    /// Batched fetch-and-decode, positionally aligned with `keys`
+    /// (`None` = missing). Amortizes round trips the same way
+    /// [`Store::put_many`] does.
+    pub fn get_many<T: Decode>(&self, keys: &[String]) -> Result<Vec<Option<T>>> {
+        self.inner.gets.fetch_add(keys.len() as u64, Ordering::Relaxed);
+        let blobs = self.inner.connector.get_many(keys)?;
+        let mut out = Vec::with_capacity(blobs.len());
+        for blob in blobs {
+            match blob {
+                Some(bytes) => {
+                    self.inner
+                        .get_bytes
+                        .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                    out.push(Some(T::from_bytes(&bytes)?));
+                }
+                None => out.push(None),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Mint lazy proxies for a whole batch with one batched put (the
+    /// producer-side analogue of [`crate::proxy::prefetch`]).
+    pub fn proxy_many<T: Encode>(&self, objs: &[T]) -> Result<Vec<Proxy<T>>> {
+        let keys = self.put_many(objs)?;
+        Ok(keys
+            .iter()
+            .map(|k| Proxy::from_factory(self.factory_for(k, false, 0)))
+            .collect())
+    }
+
     pub fn exists(&self, key: &str) -> Result<bool> {
         self.inner.connector.exists(key)
     }
@@ -231,6 +296,47 @@ mod tests {
         assert_eq!(m.gets, 2);
         assert_eq!(m.evicts, 1);
         assert!(m.put_bytes > 0);
+    }
+
+    #[test]
+    fn batched_ops_roundtrip_and_count_metrics() {
+        let s = Store::memory("t-batch");
+        let objs: Vec<String> =
+            (0..10).map(|i| format!("value-{i}")).collect();
+        let keys = s.put_many(&objs).unwrap();
+        assert_eq!(keys.len(), 10);
+        let got: Vec<Option<String>> = s.get_many(&keys).unwrap();
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(v.as_deref(), Some(format!("value-{i}").as_str()));
+        }
+        // Partial miss alignment.
+        let mixed = vec![keys[0].clone(), "absent".to_string(), keys[9].clone()];
+        let got: Vec<Option<String>> = s.get_many(&mixed).unwrap();
+        assert!(got[0].is_some() && got[1].is_none() && got[2].is_some());
+        // Empty batches.
+        assert!(s.put_many::<String>(&[]).unwrap().is_empty());
+        assert!(s.get_many::<String>(&[]).unwrap().is_empty());
+
+        // Metrics must not undercount fabric traffic: batched ops add per
+        // key and per byte, exactly like the single-key path.
+        let m = s.metrics();
+        assert_eq!(m.puts, 10);
+        assert_eq!(m.gets, 13);
+        let per_obj = objs[0].to_bytes().len() as u64;
+        assert_eq!(m.put_bytes, 10 * per_obj);
+        assert_eq!(m.get_bytes, 12 * per_obj);
+    }
+
+    #[test]
+    fn proxy_many_mints_resolvable_proxies() {
+        let s = Store::memory("t-proxy-many");
+        let objs: Vec<u64> = (0..5).map(|i| i * 11).collect();
+        let proxies = s.proxy_many(&objs).unwrap();
+        assert_eq!(proxies.len(), 5);
+        for (i, p) in proxies.iter().enumerate() {
+            assert!(!p.is_resolved());
+            assert_eq!(*p.resolve().unwrap(), i as u64 * 11);
+        }
     }
 
     #[test]

@@ -1,0 +1,138 @@
+//! Failure injection for connectors.
+//!
+//! [`FlakyConnector`] wraps any channel and, while tripped via
+//! [`FlakyConnector::set_down`], fails every operation with a connector
+//! error — the shard fabric's replica-fallback tests and the failover
+//! bench both drive dead-backend scenarios through it without real
+//! processes to kill.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::metrics::StoreBytes;
+use crate::store::{Blob, Connector, ConnectorDesc};
+
+/// A connector whose backend can be "killed" and "revived" at will.
+pub struct FlakyConnector {
+    inner: Arc<dyn Connector>,
+    down: AtomicBool,
+    /// Operations rejected while down (diagnostics).
+    rejected: AtomicU64,
+}
+
+impl FlakyConnector {
+    /// Wrap a channel, initially healthy.
+    pub fn wrap(inner: Arc<dyn Connector>) -> Arc<FlakyConnector> {
+        Arc::new(FlakyConnector {
+            inner,
+            down: AtomicBool::new(false),
+            rejected: AtomicU64::new(0),
+        })
+    }
+
+    /// Trip (true) or restore (false) the backend.
+    pub fn set_down(&self, down: bool) {
+        self.down.store(down, Ordering::SeqCst);
+    }
+
+    pub fn is_down(&self) -> bool {
+        self.down.load(Ordering::SeqCst)
+    }
+
+    /// Operations rejected while the backend was down.
+    pub fn rejected_ops(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    fn check(&self) -> Result<()> {
+        if self.is_down() {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            Err(Error::Connector("injected failure: backend down".into()))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+impl Connector for FlakyConnector {
+    /// Descriptor of the wrapped channel: a reconnecting peer reaches the
+    /// real backend (the injected failure is process-local by design).
+    fn desc(&self) -> ConnectorDesc {
+        self.inner.desc()
+    }
+
+    fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
+        self.check()?;
+        self.inner.put(key, data)
+    }
+
+    fn get(&self, key: &str) -> Result<Option<Blob>> {
+        self.check()?;
+        self.inner.get(key)
+    }
+
+    fn wait_get(
+        &self,
+        key: &str,
+        timeout: Option<Duration>,
+    ) -> Result<Option<Blob>> {
+        self.check()?;
+        self.inner.wait_get(key, timeout)
+    }
+
+    fn put_many(&self, items: Vec<(String, Vec<u8>)>) -> Result<()> {
+        self.check()?;
+        self.inner.put_many(items)
+    }
+
+    fn get_many(&self, keys: &[String]) -> Result<Vec<Option<Blob>>> {
+        self.check()?;
+        self.inner.get_many(keys)
+    }
+
+    fn evict(&self, key: &str) -> Result<()> {
+        self.check()?;
+        self.inner.evict(key)
+    }
+
+    fn exists(&self, key: &str) -> Result<bool> {
+        self.check()?;
+        self.inner.exists(key)
+    }
+
+    fn len(&self) -> Result<usize> {
+        self.check()?;
+        self.inner.len()
+    }
+
+    fn gauge(&self) -> Option<Arc<StoreBytes>> {
+        self.inner.gauge()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::MemoryConnector;
+
+    #[test]
+    fn healthy_passthrough_then_injected_failure() {
+        let flaky = FlakyConnector::wrap(MemoryConnector::new());
+        flaky.put("k", vec![1]).unwrap();
+        assert_eq!(flaky.get("k").unwrap().map(|b| b.to_vec()), Some(vec![1]));
+        assert_eq!(flaky.rejected_ops(), 0);
+
+        flaky.set_down(true);
+        assert!(flaky.get("k").is_err());
+        assert!(flaky.put("k2", vec![2]).is_err());
+        assert!(flaky.exists("k").is_err());
+        assert!(flaky.get_many(&["k".into()]).is_err());
+        assert_eq!(flaky.rejected_ops(), 4);
+
+        // Data survives the outage: the backend was never really gone.
+        flaky.set_down(false);
+        assert_eq!(flaky.get("k").unwrap().map(|b| b.to_vec()), Some(vec![1]));
+    }
+}

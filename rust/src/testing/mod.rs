@@ -19,6 +19,8 @@
 
 use crate::rng::Rng;
 
+pub mod fail;
+
 /// A generator of values plus their shrink candidates.
 pub trait Gen {
     type Value: Clone + std::fmt::Debug;

@@ -76,6 +76,18 @@ fn mof_small_run_uses_artifacts() {
 }
 
 #[test]
+fn shard_small_run() {
+    let (ok, text) = run(&[
+        "shard", "--shards", "2", "--replicas", "2", "--keys", "8",
+        "--size", "4096",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("batched throughput"));
+    assert!(text.contains("8/8 objects still readable"));
+    assert!(text.contains("resolves to 4096B"));
+}
+
+#[test]
 fn bad_option_value_fails_cleanly() {
     let (ok, text) = run(&["fig5", "--tasks", "many"]);
     assert!(!ok);
