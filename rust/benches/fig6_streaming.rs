@@ -43,6 +43,7 @@ fn main() {
                     task_time: Duration::from_millis(task_ms),
                     items: (workers - 1) * items_per_worker,
                     dispatcher_bw: 1.0e8,
+                    broker_instances: 1,
                     seed: 6,
                 };
                 let r = run(&cfg, mode).expect("fig6 run");
@@ -108,5 +109,30 @@ fn main() {
         &format!("max/min = {spread:.2}"),
         spread < 2.0,
     );
+
+    // ------------------------------------------------------------------
+    // Partitioned event channel: the same ProxyStream workload over a
+    // 1/2/4/8-instance broker fabric. In proxy mode the events are tiny,
+    // so throughput should hold steady across topologies — the broker
+    // fabric's own scaling story is measured by `broker_fabric` where the
+    // event channel IS the bottleneck.
+    // ------------------------------------------------------------------
+    let workers = worker_counts[0];
+    for instances in [1usize, 2, 4, 8] {
+        let cfg = StreamBenchConfig {
+            workers,
+            data_size: sizes[0],
+            task_time: Duration::from_millis(task_ms),
+            items: (workers - 1) * items_per_worker,
+            dispatcher_bw: 1.0e8,
+            broker_instances: instances,
+            seed: 6,
+        };
+        let r = run(&cfg, StreamMode::ProxyStream).expect("fig6 fabric run");
+        bench.row(format!(
+            "proxystream-{instances}brokers,{workers},{},{:.2}",
+            sizes[0], r.tasks_per_sec
+        ));
+    }
     bench.finish();
 }

@@ -23,7 +23,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::broker::BrokerState;
+use crate::broker::{BrokerFabric, BrokerState};
 use crate::codec::Bytes;
 use crate::engine::{ClusterConfig, LocalCluster};
 use crate::error::{Error, Result};
@@ -31,8 +31,9 @@ use crate::netsim::{spin_sleep, Link};
 use crate::rng::Rng;
 use crate::store::Store;
 use crate::stream::{
-    EmbeddedLogPublisher, EmbeddedLogSubscriber, Metadata, StreamConsumer,
-    StreamProducer,
+    EmbeddedLogPublisher, EmbeddedLogSubscriber, Metadata,
+    PartitionedLogPublisher, PartitionedLogSubscriber, Publisher,
+    StreamConsumer, StreamProducer, Subscriber,
 };
 
 /// Streaming configuration under test.
@@ -75,6 +76,11 @@ pub struct StreamBenchConfig {
     /// Dispatcher NIC bandwidth (bytes/s); the paper's dispatcher
     /// processed ~100 MB/s including (de)serialization.
     pub dispatcher_bw: f64,
+    /// Broker instances behind the event channel. 1 = the classic single
+    /// embedded log; >1 = the partitioned broker fabric
+    /// ([`crate::broker::fabric`]) with `4 * instances` topic partitions
+    /// spread across the instances.
+    pub broker_instances: usize,
     pub seed: u64,
 }
 
@@ -86,6 +92,7 @@ impl Default for StreamBenchConfig {
             task_time: Duration::from_millis(200),
             items: 50,
             dispatcher_bw: 1.0e9,
+            broker_instances: 1,
             seed: 6,
         }
     }
@@ -118,7 +125,15 @@ pub fn run(cfg: &StreamBenchConfig, mode: StreamMode) -> Result<StreamBenchRepor
         return Err(Error::Config("need ≥2 workers".into()));
     }
     let n_compute = cfg.workers - 1;
+    // Event channel: one embedded log, or a partitioned fabric spreading
+    // 4*N partitions over N instances (same stream semantics either way).
+    let instances = cfg.broker_instances.max(1);
     let broker = BrokerState::new();
+    let fabric = if instances > 1 {
+        Some(BrokerFabric::embedded(instances, instances as u32 * 4)?.0)
+    } else {
+        None
+    };
     let store = Store::memory("streambench");
     // Dispatcher NIC: contended — concurrent transfers queue.
     let dispatcher_nic =
@@ -141,13 +156,16 @@ pub fn run(cfg: &StreamBenchConfig, mode: StreamMode) -> Result<StreamBenchRepor
     let items = cfg.items;
     let data_size = cfg.data_size;
     let seed = cfg.seed;
+    let producer_fabric = fabric.clone();
     let producer = std::thread::Builder::new()
         .name("producer".into())
         .spawn(move || -> Result<u64> {
-            let mut producer = StreamProducer::new(
-                EmbeddedLogPublisher::new(producer_broker),
-                Some(producer_store.clone()),
-            );
+            let publisher: Box<dyn Publisher> = match producer_fabric {
+                Some(f) => Box::new(PartitionedLogPublisher::new(f)),
+                None => Box::new(EmbeddedLogPublisher::new(producer_broker)),
+            };
+            let mut producer =
+                StreamProducer::new(publisher, Some(producer_store.clone()));
             let mut rng = Rng::new(seed);
             let mut sum = 0u64;
             let t0 = Instant::now();
@@ -184,8 +202,11 @@ pub fn run(cfg: &StreamBenchConfig, mode: StreamMode) -> Result<StreamBenchRepor
         .expect("spawn producer");
 
     // Dispatcher (this thread): consume events, launch compute tasks.
-    let mut consumer =
-        StreamConsumer::new(EmbeddedLogSubscriber::new(broker.clone(), "t"));
+    let subscriber: Box<dyn Subscriber> = match &fabric {
+        Some(f) => Box::new(PartitionedLogSubscriber::new(f.clone(), "t", 0, 1)?),
+        None => Box::new(EmbeddedLogSubscriber::new(broker.clone(), "t")),
+    };
+    let mut consumer = StreamConsumer::new(subscriber);
     let completed_sum = Arc::new(AtomicU64::new(0));
     let t0 = Instant::now();
     let mut futs = Vec::with_capacity(cfg.items);
@@ -308,6 +329,7 @@ mod tests {
                 task_time: Duration::from_millis(50),
                 items: 12,
                 dispatcher_bw: 1.0e9,
+                broker_instances: 1,
                 seed: 5,
             },
             mode,
@@ -335,6 +357,7 @@ mod tests {
             task_time: Duration::from_millis(100),
             items: 20,
             dispatcher_bw: 5.0e7, // slow dispatcher NIC to expose the bottleneck
+            broker_instances: 1,
             seed: 5,
         };
         let inline = run(&cfg, StreamMode::PubSubInline).unwrap();
@@ -351,5 +374,35 @@ mod tests {
     fn rejects_single_worker() {
         let cfg = StreamBenchConfig { workers: 1, ..Default::default() };
         assert!(run(&cfg, StreamMode::ProxyStream).is_err());
+    }
+
+    #[test]
+    fn partitioned_event_channel_matches_single_broker() {
+        // Same workload over 1 embedded log vs a 4-instance fabric: every
+        // item completes on both topologies with identical checksums.
+        let base = StreamBenchConfig {
+            workers: 4,
+            data_size: 100_000,
+            task_time: Duration::from_millis(30),
+            items: 12,
+            dispatcher_bw: 1.0e9,
+            broker_instances: 1,
+            seed: 9,
+        };
+        let single = run(&base, StreamMode::ProxyStream).unwrap();
+        let sharded = run(
+            &StreamBenchConfig { broker_instances: 4, ..base.clone() },
+            StreamMode::ProxyStream,
+        )
+        .unwrap();
+        assert_eq!(single.items, sharded.items);
+        assert_eq!(single.checksum, sharded.checksum);
+        // Inline mode pushes bulk through the partitioned brokers too.
+        let inline = run(
+            &StreamBenchConfig { broker_instances: 4, ..base },
+            StreamMode::PubSubInline,
+        )
+        .unwrap();
+        assert_eq!(inline.checksum, single.checksum);
     }
 }

@@ -1,0 +1,1091 @@
+//! Partitioned broker fabric: one logical event channel spread across N
+//! broker instances.
+//!
+//! The single-instance broker serializes every topic through one lock and
+//! one endpoint — the same bottleneck the sharded store fabric
+//! ([`crate::shard`]) removed from the bulk channel. This module applies
+//! the identical recipe to the event channel:
+//!
+//! * a topic is split into P **partitions** (the unit of ordering);
+//! * the consistent-hash ring ([`crate::shard::ring`]) places partition
+//!   `p` of topic `t` on one of N broker **instances**, deterministically
+//!   in every process that knows `(instances, partitions)`;
+//! * a [`PartitionedProducer`] picks the partition by key hash (same key →
+//!   same partition → per-key total order) or round-robin, and batches
+//!   multi-event appends into one `ProduceMany` frame per partition;
+//! * a [`PartitionedConsumer`] owns a deterministic slice of the
+//!   partition space within its consumer group ([`assign_partitions`]:
+//!   every partition owned by exactly one member) and fans in fetches,
+//!   batching all partitions co-located on an instance into a single
+//!   `FetchMany` round trip.
+//!
+//! Instances are anything implementing [`PartitionBroker`]: embedded
+//! [`BrokerState`]s, TCP [`BrokerClient`]s, or wrappers such as
+//! [`ThrottledBroker`] (benches) and
+//! [`FlakyBroker`](crate::testing::fail::FlakyBroker) (failure
+//! injection).
+
+use std::collections::{HashMap, VecDeque};
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::codec::Bytes;
+use crate::error::{Error, Result};
+use crate::netsim::Link;
+use crate::shard::ring::{hash_key, HashRing};
+
+use super::server::BrokerClient;
+use super::state::{BrokerState, FetchReq, LogEntry};
+
+/// Per-instance results of a fan-in fetch round: the requests an instance
+/// served and what came back.
+type SweepResults = Vec<(Vec<FetchReq>, Result<Vec<Vec<LogEntry>>>)>;
+
+/// Per-partition results of a batched produce fan-out: input indices, the
+/// partition, and the offsets the instance assigned.
+type ProduceResults = Vec<(Vec<usize>, u32, Result<Vec<u64>>)>;
+
+/// Partition-aware broker endpoint: the interface the fabric routes over.
+pub trait PartitionBroker: Send + Sync {
+    fn produce_to(&self, topic: &str, partition: u32, payload: Bytes) -> Result<u64>;
+
+    /// Batched append to one partition; offsets align with `payloads`.
+    fn produce_many(
+        &self,
+        topic: &str,
+        partition: u32,
+        payloads: Vec<Bytes>,
+    ) -> Result<Vec<u64>>;
+
+    fn fetch_from(
+        &self,
+        topic: &str,
+        partition: u32,
+        offset: u64,
+        max: u32,
+        timeout: Duration,
+    ) -> Result<Vec<LogEntry>>;
+
+    /// Multi-partition fetch; results align with `reqs`.
+    fn fetch_many(
+        &self,
+        reqs: &[FetchReq],
+        timeout: Duration,
+    ) -> Result<Vec<Vec<LogEntry>>>;
+
+    fn commit_part(
+        &self,
+        group: &str,
+        topic: &str,
+        partition: u32,
+        offset: u64,
+    ) -> Result<()>;
+
+    fn committed_part(&self, group: &str, topic: &str, partition: u32)
+        -> Result<u64>;
+
+    fn end_offset_of(&self, topic: &str, partition: u32) -> Result<u64>;
+}
+
+impl PartitionBroker for BrokerState {
+    fn produce_to(&self, topic: &str, partition: u32, payload: Bytes) -> Result<u64> {
+        Ok(BrokerState::produce_to(self, topic, partition, payload))
+    }
+
+    fn produce_many(
+        &self,
+        topic: &str,
+        partition: u32,
+        payloads: Vec<Bytes>,
+    ) -> Result<Vec<u64>> {
+        Ok(BrokerState::produce_many(self, topic, partition, payloads))
+    }
+
+    fn fetch_from(
+        &self,
+        topic: &str,
+        partition: u32,
+        offset: u64,
+        max: u32,
+        timeout: Duration,
+    ) -> Result<Vec<LogEntry>> {
+        Ok(BrokerState::fetch_from(self, topic, partition, offset, max, timeout))
+    }
+
+    fn fetch_many(
+        &self,
+        reqs: &[FetchReq],
+        timeout: Duration,
+    ) -> Result<Vec<Vec<LogEntry>>> {
+        Ok(BrokerState::fetch_many(self, reqs, timeout))
+    }
+
+    fn commit_part(
+        &self,
+        group: &str,
+        topic: &str,
+        partition: u32,
+        offset: u64,
+    ) -> Result<()> {
+        BrokerState::commit_part(self, group, topic, partition, offset);
+        Ok(())
+    }
+
+    fn committed_part(
+        &self,
+        group: &str,
+        topic: &str,
+        partition: u32,
+    ) -> Result<u64> {
+        Ok(BrokerState::committed_part(self, group, topic, partition))
+    }
+
+    fn end_offset_of(&self, topic: &str, partition: u32) -> Result<u64> {
+        Ok(BrokerState::end_offset_of(self, topic, partition))
+    }
+}
+
+impl PartitionBroker for BrokerClient {
+    fn produce_to(&self, topic: &str, partition: u32, payload: Bytes) -> Result<u64> {
+        BrokerClient::produce_to(self, topic, partition, payload)
+    }
+
+    fn produce_many(
+        &self,
+        topic: &str,
+        partition: u32,
+        payloads: Vec<Bytes>,
+    ) -> Result<Vec<u64>> {
+        BrokerClient::produce_many(self, topic, partition, payloads)
+    }
+
+    fn fetch_from(
+        &self,
+        topic: &str,
+        partition: u32,
+        offset: u64,
+        max: u32,
+        timeout: Duration,
+    ) -> Result<Vec<LogEntry>> {
+        BrokerClient::fetch_from(self, topic, partition, offset, max, timeout)
+    }
+
+    fn fetch_many(
+        &self,
+        reqs: &[FetchReq],
+        timeout: Duration,
+    ) -> Result<Vec<Vec<LogEntry>>> {
+        BrokerClient::fetch_many(self, reqs, timeout)
+    }
+
+    fn commit_part(
+        &self,
+        group: &str,
+        topic: &str,
+        partition: u32,
+        offset: u64,
+    ) -> Result<()> {
+        BrokerClient::commit_part(self, group, topic, partition, offset)
+    }
+
+    fn committed_part(
+        &self,
+        group: &str,
+        topic: &str,
+        partition: u32,
+    ) -> Result<u64> {
+        BrokerClient::committed_part(self, group, topic, partition)
+    }
+
+    fn end_offset_of(&self, topic: &str, partition: u32) -> Result<u64> {
+        BrokerClient::end_offset_of(self, topic, partition)
+    }
+}
+
+/// A broker instance behind a simulated link: every frame pays the link
+/// latency, payload bytes pay wire time. Benches and the CLI demo use it
+/// so the per-instance bottleneck the fabric removes is physically
+/// present (mirrors `ThrottledConnector` on the store side).
+pub struct ThrottledBroker {
+    inner: Arc<dyn PartitionBroker>,
+    link: Link,
+}
+
+impl ThrottledBroker {
+    pub fn wrap(
+        inner: Arc<dyn PartitionBroker>,
+        latency: Duration,
+        bandwidth: f64,
+    ) -> Arc<ThrottledBroker> {
+        Arc::new(ThrottledBroker {
+            inner,
+            link: Link::new(latency, bandwidth),
+        })
+    }
+}
+
+impl PartitionBroker for ThrottledBroker {
+    fn produce_to(&self, topic: &str, partition: u32, payload: Bytes) -> Result<u64> {
+        self.link.transfer(payload.0.len());
+        self.inner.produce_to(topic, partition, payload)
+    }
+
+    fn produce_many(
+        &self,
+        topic: &str,
+        partition: u32,
+        payloads: Vec<Bytes>,
+    ) -> Result<Vec<u64>> {
+        // Pipelined: one latency for the batch, wire time for the bytes.
+        let total: usize = payloads.iter().map(|p| p.0.len()).sum();
+        self.link.transfer(total);
+        self.inner.produce_many(topic, partition, payloads)
+    }
+
+    fn fetch_from(
+        &self,
+        topic: &str,
+        partition: u32,
+        offset: u64,
+        max: u32,
+        timeout: Duration,
+    ) -> Result<Vec<LogEntry>> {
+        let out = self.inner.fetch_from(topic, partition, offset, max, timeout)?;
+        let total: usize = out.iter().map(|e| e.payload.0.len()).sum();
+        self.link.transfer(total);
+        Ok(out)
+    }
+
+    fn fetch_many(
+        &self,
+        reqs: &[FetchReq],
+        timeout: Duration,
+    ) -> Result<Vec<Vec<LogEntry>>> {
+        let out = self.inner.fetch_many(reqs, timeout)?;
+        let total: usize = out
+            .iter()
+            .flat_map(|b| b.iter().map(|e| e.payload.0.len()))
+            .sum();
+        self.link.transfer(total);
+        Ok(out)
+    }
+
+    fn commit_part(
+        &self,
+        group: &str,
+        topic: &str,
+        partition: u32,
+        offset: u64,
+    ) -> Result<()> {
+        self.link.transfer(0);
+        self.inner.commit_part(group, topic, partition, offset)
+    }
+
+    fn committed_part(
+        &self,
+        group: &str,
+        topic: &str,
+        partition: u32,
+    ) -> Result<u64> {
+        self.link.transfer(0);
+        self.inner.committed_part(group, topic, partition)
+    }
+
+    fn end_offset_of(&self, topic: &str, partition: u32) -> Result<u64> {
+        self.link.transfer(0);
+        self.inner.end_offset_of(topic, partition)
+    }
+}
+
+// --------------------------------------------------------------------------
+// BrokerFabric: instance placement
+// --------------------------------------------------------------------------
+
+/// Placement layer: N broker instances + a consistent-hash ring mapping
+/// each `(topic, partition)` to one instance. Deterministic: any process
+/// that builds a fabric from the same instance list routes identically,
+/// which is what lets independent producers and consumers agree on where
+/// a partition lives without coordination.
+#[derive(Clone)]
+pub struct BrokerFabric {
+    instances: Vec<Arc<dyn PartitionBroker>>,
+    ring: HashRing,
+    partitions: u32,
+    /// Per-topic partition→instance table, memoized on first use so the
+    /// per-event hot paths (produce, publish, commit) index instead of
+    /// re-hashing the ring; shared across clones.
+    placements: Arc<Mutex<HashMap<String, Arc<Vec<usize>>>>>,
+}
+
+impl BrokerFabric {
+    /// Fabric over explicit instances with `partitions` partitions per
+    /// topic.
+    pub fn new(
+        instances: Vec<Arc<dyn PartitionBroker>>,
+        partitions: u32,
+    ) -> Result<BrokerFabric> {
+        if instances.is_empty() {
+            return Err(Error::Config("broker fabric needs >= 1 instance".into()));
+        }
+        if partitions == 0 {
+            return Err(Error::Config("broker fabric needs >= 1 partition".into()));
+        }
+        Ok(BrokerFabric {
+            ring: HashRing::new(instances.len(), crate::shard::DEFAULT_VNODES),
+            instances,
+            partitions,
+            placements: Arc::new(Mutex::new(HashMap::new())),
+        })
+    }
+
+    /// Convenience: fabric over `n` fresh embedded broker engines (the
+    /// states are returned for gauge access / server frontends).
+    pub fn embedded(n: usize, partitions: u32) -> Result<(BrokerFabric, Vec<BrokerState>)> {
+        let states: Vec<BrokerState> =
+            (0..n).map(|_| BrokerState::new()).collect();
+        let fabric = BrokerFabric::new(
+            states
+                .iter()
+                .map(|s| Arc::new(s.clone()) as Arc<dyn PartitionBroker>)
+                .collect(),
+            partitions,
+        )?;
+        Ok((fabric, states))
+    }
+
+    /// Fabric over TCP broker servers.
+    pub fn connect(addrs: &[SocketAddr], partitions: u32) -> Result<BrokerFabric> {
+        let instances = addrs
+            .iter()
+            .map(|&a| {
+                Ok(Arc::new(BrokerClient::connect(a)?) as Arc<dyn PartitionBroker>)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        BrokerFabric::new(instances, partitions)
+    }
+
+    pub fn partitions(&self) -> u32 {
+        self.partitions
+    }
+
+    pub fn instance_count(&self) -> usize {
+        self.instances.len()
+    }
+
+    /// The full partition→instance table for a topic (computed once per
+    /// topic, then served from the memo).
+    fn placement(&self, topic: &str) -> Arc<Vec<usize>> {
+        let mut memo = self.placements.lock().unwrap();
+        if let Some(p) = memo.get(topic) {
+            return p.clone();
+        }
+        let table: Arc<Vec<usize>> = Arc::new(
+            (0..self.partitions)
+                .map(|p| self.ring.shard_for(&format!("{topic}/p{p}")))
+                .collect(),
+        );
+        memo.insert(topic.to_string(), table.clone());
+        table
+    }
+
+    /// The instance hosting `(topic, partition)`.
+    pub fn instance_for(&self, topic: &str, partition: u32) -> usize {
+        self.placement(topic)[partition as usize]
+    }
+
+    pub fn instance(&self, idx: usize) -> &Arc<dyn PartitionBroker> {
+        &self.instances[idx]
+    }
+
+    /// Partition for a routing key: same key, same partition, same order.
+    pub fn partition_for_key(&self, key: &str) -> u32 {
+        (hash_key(key.as_bytes()) % u64::from(self.partitions)) as u32
+    }
+
+    /// End-of-log offsets for every partition of a topic.
+    pub fn end_offsets(&self, topic: &str) -> Result<Vec<u64>> {
+        let placement = self.placement(topic);
+        (0..self.partitions)
+            .map(|p| {
+                self.instances[placement[p as usize]].end_offset_of(topic, p)
+            })
+            .collect()
+    }
+
+    /// Append the same payload to *every* partition of a topic (control
+    /// events such as end-of-stream markers that each partition's
+    /// consumers must observe). Shared by [`PartitionedProducer`] and the
+    /// stream publisher shim so broadcast semantics cannot diverge.
+    pub fn broadcast(&self, topic: &str, payload: Bytes) -> Result<Vec<(u32, u64)>> {
+        let placement = self.placement(topic);
+        (0..self.partitions)
+            .map(|p| {
+                let off = self.instances[placement[p as usize]].produce_to(
+                    topic,
+                    p,
+                    payload.clone(),
+                )?;
+                Ok((p, off))
+            })
+            .collect()
+    }
+}
+
+// --------------------------------------------------------------------------
+// Producer
+// --------------------------------------------------------------------------
+
+/// Partition selection policy for events without an explicit key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partitioner {
+    /// Spread unkeyed events across partitions (maximum parallelism, no
+    /// cross-event ordering).
+    RoundRobin,
+    /// Route by key hash (per-key total order); unkeyed events fall back
+    /// to round-robin.
+    ByKey,
+}
+
+/// Producer half of the fabric: routes each event to a partition and the
+/// partition to its instance. Per-partition ordering is preserved because
+/// one partition lives on exactly one instance and appends there are
+/// serialized.
+pub struct PartitionedProducer {
+    fabric: BrokerFabric,
+    partitioner: Partitioner,
+    /// Per-topic round-robin cursor.
+    cursors: HashMap<String, u32>,
+}
+
+impl PartitionedProducer {
+    pub fn new(fabric: BrokerFabric, partitioner: Partitioner) -> PartitionedProducer {
+        PartitionedProducer {
+            fabric,
+            partitioner,
+            cursors: HashMap::new(),
+        }
+    }
+
+    pub fn fabric(&self) -> &BrokerFabric {
+        &self.fabric
+    }
+
+    /// Partition the next event for `topic` lands on.
+    fn partition_for(&mut self, topic: &str, key: Option<&str>) -> u32 {
+        match (self.partitioner, key) {
+            (Partitioner::ByKey, Some(k)) => self.fabric.partition_for_key(k),
+            _ => {
+                let n = self.fabric.partitions();
+                let cursor = self.cursors.entry(topic.to_string()).or_insert(0);
+                let p = *cursor % n;
+                *cursor = cursor.wrapping_add(1);
+                p
+            }
+        }
+    }
+
+    /// Append one event; returns its `(partition, offset)` position.
+    pub fn produce(
+        &mut self,
+        topic: &str,
+        key: Option<&str>,
+        payload: Bytes,
+    ) -> Result<(u32, u64)> {
+        let partition = self.partition_for(topic, key);
+        let inst = self.fabric.instance_for(topic, partition);
+        let offset =
+            self.fabric.instances[inst].produce_to(topic, partition, payload)?;
+        Ok((partition, offset))
+    }
+
+    /// Append a batch: events are partitioned, grouped, and appended with
+    /// one `ProduceMany` per partition, all instances in parallel. Returns
+    /// `(partition, offset)` per event, aligned with the input; events
+    /// that share a partition keep their input order.
+    ///
+    /// On error, sub-batches that reached healthy instances may already
+    /// be durably appended (their placements are discarded with the
+    /// error) — retrying the whole batch can duplicate those events, the
+    /// standard at-least-once contract of a non-idempotent producer.
+    pub fn produce_many(
+        &mut self,
+        topic: &str,
+        events: Vec<(Option<String>, Bytes)>,
+    ) -> Result<Vec<(u32, u64)>> {
+        if events.is_empty() {
+            return Ok(Vec::new());
+        }
+        // Partition assignment in input order (keeps round-robin stable).
+        let mut groups: HashMap<u32, (Vec<usize>, Vec<Bytes>)> = HashMap::new();
+        for (i, (key, payload)) in events.into_iter().enumerate() {
+            let p = self.partition_for(topic, key.as_deref());
+            let entry = groups.entry(p).or_default();
+            entry.0.push(i);
+            entry.1.push(payload);
+        }
+        let results: ProduceResults = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (partition, (idxs, payloads)) in groups {
+                let inst = self.fabric.instance_for(topic, partition);
+                let broker = self.fabric.instances[inst].clone();
+                let topic = topic.to_string();
+                handles.push((idxs, partition, s.spawn(move || {
+                    broker.produce_many(&topic, partition, payloads)
+                })));
+            }
+            handles
+                .into_iter()
+                .map(|(idxs, partition, h)| {
+                    let res = h.join().unwrap_or_else(|_| {
+                        Err(Error::Connector(
+                            "broker produce_many panicked".into(),
+                        ))
+                    });
+                    (idxs, partition, res)
+                })
+                .collect()
+        });
+        let total: usize = results.iter().map(|(idxs, _, _)| idxs.len()).sum();
+        let mut out = vec![(0u32, 0u64); total];
+        for (idxs, partition, res) in results {
+            let offsets = res?;
+            for (&i, off) in idxs.iter().zip(offsets) {
+                out[i] = (partition, off);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Append the same payload to *every* partition (see
+    /// [`BrokerFabric::broadcast`]).
+    pub fn broadcast(&self, topic: &str, payload: Bytes) -> Result<Vec<(u32, u64)>> {
+        self.fabric.broadcast(topic, payload)
+    }
+}
+
+// --------------------------------------------------------------------------
+// Consumer
+// --------------------------------------------------------------------------
+
+/// Deterministic partition assignment for a consumer group: member `m` of
+/// `members` owns every partition `p` with `p % members == m`. Every
+/// partition is owned by exactly one member, and a join/leave (different
+/// `members`) rebalances deterministically on all members at once.
+pub fn assign_partitions(partitions: u32, members: usize, member: usize) -> Vec<u32> {
+    let members = members.max(1) as u32;
+    let member = member as u32 % members;
+    (0..partitions).filter(|p| p % members == member).collect()
+}
+
+/// Consumer half of the fabric: fan-in fetch over the member's assigned
+/// partitions with per-partition offsets (and optional consumer-group
+/// commits). Entries from one partition arrive in partition order;
+/// cross-partition interleaving is unspecified, as in Kafka.
+pub struct PartitionedConsumer {
+    fabric: BrokerFabric,
+    topic: String,
+    group: Option<String>,
+    assigned: Vec<u32>,
+    offsets: HashMap<u32, u64>,
+    /// Assigned partitions grouped by hosting instance — placement is
+    /// fixed at construction, so each sweep only patches offsets instead
+    /// of re-hashing the ring per partition per round.
+    grouping: Vec<(usize, Vec<u32>)>,
+    /// Max entries per partition per fetch round.
+    fetch_max: u32,
+    /// Entries fetched but not yet handed out by [`PartitionedConsumer::next`].
+    buffer: VecDeque<(u32, LogEntry)>,
+    /// Fetch rounds that hit at least one instance error (diagnostics).
+    instance_errors: AtomicU64,
+}
+
+/// Group a member's partitions by the instance hosting them.
+fn group_by_instance(
+    fabric: &BrokerFabric,
+    topic: &str,
+    assigned: &[u32],
+) -> Vec<(usize, Vec<u32>)> {
+    let mut groups: HashMap<usize, Vec<u32>> = HashMap::new();
+    for &p in assigned {
+        groups.entry(fabric.instance_for(topic, p)).or_default().push(p);
+    }
+    let mut v: Vec<(usize, Vec<u32>)> = groups.into_iter().collect();
+    v.sort_unstable_by_key(|(inst, _)| *inst);
+    v
+}
+
+impl PartitionedConsumer {
+    /// Member `member` of a `members`-strong anonymous group, starting at
+    /// offset 0 on its assigned partitions.
+    pub fn new(
+        fabric: BrokerFabric,
+        topic: &str,
+        member: usize,
+        members: usize,
+    ) -> Result<PartitionedConsumer> {
+        let assigned = assign_partitions(fabric.partitions(), members, member);
+        let offsets = assigned.iter().map(|&p| (p, 0)).collect();
+        let grouping = group_by_instance(&fabric, topic, &assigned);
+        Ok(PartitionedConsumer {
+            fabric,
+            topic: topic.to_string(),
+            group: None,
+            assigned,
+            offsets,
+            grouping,
+            fetch_max: 64,
+            buffer: VecDeque::new(),
+            instance_errors: AtomicU64::new(0),
+        })
+    }
+
+    /// Group member resuming from the group's committed offsets; `commit`
+    /// persists progress per partition.
+    pub fn with_group(
+        fabric: BrokerFabric,
+        topic: &str,
+        group: &str,
+        member: usize,
+        members: usize,
+    ) -> Result<PartitionedConsumer> {
+        let assigned = assign_partitions(fabric.partitions(), members, member);
+        let mut offsets = HashMap::with_capacity(assigned.len());
+        for &p in &assigned {
+            let inst = fabric.instance_for(topic, p);
+            offsets.insert(p, fabric.instances[inst].committed_part(group, topic, p)?);
+        }
+        let grouping = group_by_instance(&fabric, topic, &assigned);
+        Ok(PartitionedConsumer {
+            fabric,
+            topic: topic.to_string(),
+            group: Some(group.to_string()),
+            assigned,
+            offsets,
+            grouping,
+            fetch_max: 64,
+            buffer: VecDeque::new(),
+            instance_errors: AtomicU64::new(0),
+        })
+    }
+
+    /// Cap entries per partition per fetch round.
+    pub fn set_fetch_max(&mut self, max: u32) {
+        self.fetch_max = max.max(1);
+    }
+
+    /// This member's partitions.
+    pub fn assigned(&self) -> &[u32] {
+        &self.assigned
+    }
+
+    /// Next offset to consume per partition.
+    pub fn positions(&self) -> &HashMap<u32, u64> {
+        &self.offsets
+    }
+
+    /// Fetch rounds that saw at least one unreachable instance.
+    pub fn instance_errors(&self) -> u64 {
+        self.instance_errors.load(Ordering::Relaxed)
+    }
+
+    /// One fan-out round over every instance hosting our partitions, each
+    /// instance's partitions batched into a single `FetchMany`, all
+    /// instances in parallel. Returns whatever was available within
+    /// `timeout`. If some instances fail but any data arrived, the data is
+    /// returned (and the error round counted); an all-error round
+    /// surfaces the failure.
+    fn sweep(&self, timeout: Duration) -> Result<Vec<(u32, LogEntry)>> {
+        // Placement was grouped once at construction; only the offsets
+        // change between rounds.
+        let per_inst: Vec<(usize, Vec<FetchReq>)> = self
+            .grouping
+            .iter()
+            .map(|(inst, parts)| {
+                let reqs = parts
+                    .iter()
+                    .map(|&p| {
+                        (self.topic.clone(), p, self.offsets[&p], self.fetch_max)
+                    })
+                    .collect();
+                (*inst, reqs)
+            })
+            .collect();
+        let results: SweepResults =
+            std::thread::scope(|s| {
+                let handles: Vec<_> = per_inst
+                    .into_iter()
+                    .map(|(inst, reqs)| {
+                        let broker = self.fabric.instances[inst].clone();
+                        s.spawn(move || {
+                            let res = broker.fetch_many(&reqs, timeout);
+                            (reqs, res)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| {
+                        h.join().unwrap_or_else(|_| {
+                            (
+                                Vec::new(),
+                                Err(Error::Connector(
+                                    "broker fetch_many panicked".into(),
+                                )),
+                            )
+                        })
+                    })
+                    .collect()
+            });
+        let mut out: Vec<(u32, LogEntry)> = Vec::new();
+        let mut last_err = None;
+        for (reqs, res) in results {
+            match res {
+                Ok(batches) => {
+                    for ((_, partition, _, _), batch) in
+                        reqs.into_iter().zip(batches)
+                    {
+                        for entry in batch {
+                            out.push((partition, entry));
+                        }
+                    }
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        if let Some(e) = last_err {
+            self.instance_errors.fetch_add(1, Ordering::Relaxed);
+            if out.is_empty() {
+                return Err(e);
+            }
+        }
+        // Deterministic merge order within a round.
+        out.sort_by_key(|(p, e)| (*p, e.offset));
+        Ok(out)
+    }
+
+    fn advance(&mut self, entries: &[(u32, LogEntry)]) {
+        for (p, e) in entries {
+            let pos = self.offsets.entry(*p).or_insert(0);
+            *pos = (*pos).max(e.offset + 1);
+        }
+    }
+
+    /// Fetch the next batch across all assigned partitions, waiting up to
+    /// `timeout` for at least one entry. A fast zero-wait sweep serves
+    /// already-available data immediately; only a fully drained
+    /// assignment enters the blocking path, which long-polls in bounded
+    /// slices so data arriving on one instance is never gated on another
+    /// instance's idle timeout.
+    pub fn poll(&mut self, timeout: Duration) -> Result<Vec<(u32, LogEntry)>> {
+        let mut got = self.sweep(Duration::ZERO)?;
+        if got.is_empty() && !timeout.is_zero() {
+            let deadline = Instant::now() + timeout;
+            // Slicing exists so one instance's idle long poll cannot gate
+            // data arriving on another — data always returns immediately
+            // via the broker's wake-up; only idle waits pay the slice.
+            // Empty rounds widen the slice exponentially, so a freshly
+            // active consumer reacts within 20 ms while a long-idle one
+            // costs ~4 sweep rounds/second instead of 50. The cap also
+            // bounds how long one sweep holds a shared TCP client pipe.
+            const SLICE: Duration = Duration::from_millis(20);
+            const MAX_SLICE: Duration = Duration::from_millis(250);
+            let mut slice = SLICE;
+            loop {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                got = self.sweep(slice.min(deadline - now))?;
+                if !got.is_empty() {
+                    break;
+                }
+                slice = (slice * 2).min(MAX_SLICE);
+            }
+        }
+        self.advance(&got);
+        Ok(got)
+    }
+
+    /// Next single entry (buffered poll); `Ok(None)` on timeout.
+    pub fn next(
+        &mut self,
+        timeout: Duration,
+    ) -> Result<Option<(u32, LogEntry)>> {
+        if self.buffer.is_empty() {
+            let got = self.poll(timeout)?;
+            self.buffer.extend(got);
+        }
+        Ok(self.buffer.pop_front())
+    }
+
+    /// Commit one partition's offset for an explicit group (fine-grained
+    /// per-delivery commits; the stream shim uses this so a crash replays
+    /// at most the in-flight event, not a whole fetch batch).
+    pub fn commit_position(
+        &self,
+        group: &str,
+        partition: u32,
+        offset: u64,
+    ) -> Result<()> {
+        let inst = self.fabric.instance_for(&self.topic, partition);
+        self.fabric.instances[inst].commit_part(group, &self.topic, partition, offset)
+    }
+
+    /// Commit this member's positions for its consumer group, one commit
+    /// per partition on the partition's own instance.
+    pub fn commit(&self) -> Result<()> {
+        let Some(group) = &self.group else {
+            return Err(Error::Config(
+                "commit on a consumer without a group".into(),
+            ));
+        };
+        for &p in &self.assigned {
+            let inst = self.fabric.instance_for(&self.topic, p);
+            self.fabric.instances[inst].commit_part(
+                group,
+                &self.topic,
+                p,
+                self.offsets[&p],
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn embedded(n: usize, partitions: u32) -> (BrokerFabric, Vec<BrokerState>) {
+        BrokerFabric::embedded(n, partitions).unwrap()
+    }
+
+    #[test]
+    fn assignment_partitions_exactly_once() {
+        for partitions in [1u32, 3, 8, 17] {
+            for members in [1usize, 2, 3, 5, 8] {
+                let mut owners = vec![0usize; partitions as usize];
+                for m in 0..members {
+                    for p in assign_partitions(partitions, members, m) {
+                        owners[p as usize] += 1;
+                    }
+                }
+                assert!(
+                    owners.iter().all(|&c| c == 1),
+                    "p={partitions} m={members}: owners {owners:?}"
+                );
+            }
+        }
+        // More members than partitions: the surplus members idle.
+        assert!(assign_partitions(2, 5, 4).is_empty());
+        assert_eq!(assign_partitions(2, 5, 0), vec![0]);
+    }
+
+    #[test]
+    fn assignment_rebalances_on_membership_change() {
+        // A join (members 2 -> 3) recomputes a complete, disjoint
+        // assignment; ditto a leave (3 -> 2). Deterministic on every
+        // member, no coordinator required.
+        for members in [2usize, 3] {
+            let all: Vec<Vec<u32>> = (0..members)
+                .map(|m| assign_partitions(12, members, m))
+                .collect();
+            let mut seen: Vec<u32> = all.concat();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..12).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn placement_is_deterministic_across_fabrics() {
+        let (a, _) = embedded(4, 16);
+        let (b, _) = embedded(4, 16);
+        for p in 0..16 {
+            assert_eq!(a.instance_for("t", p), b.instance_for("t", p));
+        }
+        // Partitions actually spread over instances.
+        let mut hit = vec![false; 4];
+        for p in 0..16 {
+            hit[a.instance_for("t", p)] = true;
+        }
+        assert!(hit.iter().filter(|&&h| h).count() >= 2, "no spread: {hit:?}");
+    }
+
+    #[test]
+    fn fabric_validation() {
+        assert!(BrokerFabric::new(Vec::new(), 4).is_err());
+        let state = BrokerState::new();
+        assert!(BrokerFabric::new(
+            vec![Arc::new(state) as Arc<dyn PartitionBroker>],
+            0
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn by_key_partitioner_pins_keys() {
+        let (fabric, _) = embedded(3, 8);
+        let mut prod = PartitionedProducer::new(fabric, Partitioner::ByKey);
+        let (p1, o1) = prod.produce("t", Some("alice"), Bytes(vec![1])).unwrap();
+        let (p2, o2) = prod.produce("t", Some("alice"), Bytes(vec![2])).unwrap();
+        assert_eq!(p1, p2, "same key must stay on one partition");
+        assert_eq!((o1, o2), (0, 1), "per-key ordering is the offset order");
+        // Unkeyed events fall back to round-robin over all partitions.
+        let mut parts: Vec<u32> = (0..8)
+            .map(|i| prod.produce("t", None, Bytes(vec![i])).unwrap().0)
+            .collect();
+        parts.sort_unstable();
+        parts.dedup();
+        assert_eq!(parts.len(), 8);
+    }
+
+    #[test]
+    fn round_robin_spreads_and_produce_many_aligns() {
+        let (fabric, states) = embedded(4, 4);
+        let mut prod =
+            PartitionedProducer::new(fabric.clone(), Partitioner::RoundRobin);
+        let events: Vec<(Option<String>, Bytes)> =
+            (0..16u8).map(|i| (None, Bytes(vec![i]))).collect();
+        let placed = prod.produce_many("t", events).unwrap();
+        assert_eq!(placed.len(), 16);
+        // Round-robin: event i lands on partition i % 4 at offset i / 4.
+        for (i, &(p, o)) in placed.iter().enumerate() {
+            assert_eq!(p, (i % 4) as u32);
+            assert_eq!(o, (i / 4) as u64);
+        }
+        // Entries are really on the placed instance, in input order.
+        for p in 0..4u32 {
+            let inst = fabric.instance_for("t", p);
+            let log = states[inst].fetch_from("t", p, 0, 64, Duration::ZERO);
+            let vals: Vec<u8> = log.iter().map(|e| e.payload.0[0]).collect();
+            let expect: Vec<u8> =
+                (0..16u8).filter(|i| u32::from(*i) % 4 == p).collect();
+            assert_eq!(vals, expect, "partition {p} out of order");
+        }
+        assert_eq!(fabric.end_offsets("t").unwrap(), vec![4, 4, 4, 4]);
+        assert!(prod.produce_many("t", Vec::new()).unwrap().is_empty());
+    }
+
+    #[test]
+    fn consumer_fans_in_all_partitions_in_order() {
+        let (fabric, _) = embedded(3, 6);
+        let mut prod =
+            PartitionedProducer::new(fabric.clone(), Partitioner::RoundRobin);
+        for i in 0..30u8 {
+            prod.produce("t", None, Bytes(vec![i])).unwrap();
+        }
+        let mut consumer =
+            PartitionedConsumer::new(fabric, "t", 0, 1).unwrap();
+        assert_eq!(consumer.assigned().len(), 6);
+        let mut per_part: HashMap<u32, Vec<u8>> = HashMap::new();
+        let mut total = 0;
+        while total < 30 {
+            let got = consumer.poll(Duration::from_secs(2)).unwrap();
+            assert!(!got.is_empty(), "poll starved at {total}/30");
+            for (p, e) in got {
+                per_part.entry(p).or_default().push(e.payload.0[0]);
+                total += 1;
+            }
+        }
+        // Per-partition order == production order on that partition.
+        for (p, vals) in per_part {
+            let expect: Vec<u8> =
+                (0..30u8).filter(|i| u32::from(*i) % 6 == p).collect();
+            assert_eq!(vals, expect, "partition {p} misordered");
+        }
+        // Drained: a zero-wait poll returns nothing.
+        assert!(consumer.poll(Duration::ZERO).unwrap().is_empty());
+    }
+
+    #[test]
+    fn poll_wakes_on_late_produce() {
+        let (fabric, _) = embedded(2, 4);
+        let mut consumer =
+            PartitionedConsumer::new(fabric.clone(), "t", 0, 1).unwrap();
+        let h = std::thread::spawn(move || {
+            consumer.poll(Duration::from_secs(5)).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        let mut prod = PartitionedProducer::new(fabric, Partitioner::RoundRobin);
+        prod.produce("t", None, Bytes(vec![9])).unwrap();
+        let got = h.join().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].1.payload, Bytes(vec![9]));
+    }
+
+    #[test]
+    fn group_members_split_the_stream_and_resume_from_commits() {
+        let (fabric, _) = embedded(2, 4);
+        let mut prod =
+            PartitionedProducer::new(fabric.clone(), Partitioner::RoundRobin);
+        for i in 0..20u8 {
+            prod.produce("t", None, Bytes(vec![i])).unwrap();
+        }
+        // Two members: disjoint partitions, union = everything.
+        let mut seen = Vec::new();
+        for m in 0..2 {
+            let mut c = PartitionedConsumer::with_group(
+                fabric.clone(),
+                "t",
+                "g",
+                m,
+                2,
+            )
+            .unwrap();
+            loop {
+                let got = c.poll(Duration::ZERO).unwrap();
+                if got.is_empty() {
+                    break;
+                }
+                seen.extend(got.iter().map(|(_, e)| e.payload.0[0]));
+            }
+            c.commit().unwrap();
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..20u8).collect::<Vec<_>>());
+
+        // A fresh member with the same group resumes past everything.
+        let mut resumed = PartitionedConsumer::with_group(
+            fabric.clone(),
+            "t",
+            "g",
+            0,
+            2,
+        )
+        .unwrap();
+        assert!(resumed.poll(Duration::ZERO).unwrap().is_empty());
+        // A different group starts from scratch.
+        let mut fresh =
+            PartitionedConsumer::with_group(fabric, "t", "g2", 0, 1).unwrap();
+        assert_eq!(fresh.poll(Duration::ZERO).unwrap().len(), 20);
+    }
+
+    #[test]
+    fn next_buffers_and_commit_requires_group() {
+        let (fabric, _) = embedded(2, 2);
+        let mut prod =
+            PartitionedProducer::new(fabric.clone(), Partitioner::RoundRobin);
+        for i in 0..4u8 {
+            prod.produce("t", None, Bytes(vec![i])).unwrap();
+        }
+        let mut c = PartitionedConsumer::new(fabric, "t", 0, 1).unwrap();
+        let mut n = 0;
+        while let Some((_, _e)) = c.next(Duration::ZERO).unwrap() {
+            n += 1;
+        }
+        assert_eq!(n, 4);
+        assert!(matches!(c.commit(), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn broadcast_reaches_every_partition() {
+        let (fabric, _) = embedded(3, 5);
+        let prod =
+            PartitionedProducer::new(fabric.clone(), Partitioner::RoundRobin);
+        let placed = prod.broadcast("t", Bytes(vec![42])).unwrap();
+        assert_eq!(placed.len(), 5);
+        assert_eq!(fabric.end_offsets("t").unwrap(), vec![1; 5]);
+    }
+}

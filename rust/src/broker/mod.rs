@@ -1,4 +1,4 @@
-//! Message-broker substrate (Kafka stand-in).
+//! Message-broker substrate (Kafka stand-in), partition-aware.
 //!
 //! ProxyStream needs a low-latency event channel that is decoupled from
 //! bulk data. The paper evaluates Kafka, Redis pub/sub and ZeroMQ shims;
@@ -8,14 +8,34 @@
 //! embedded ([`BrokerState`]) or over TCP ([`BrokerServer`]/
 //! [`BrokerClient`]).
 //!
-//! Semantics: per-topic total order, at-least-once delivery with consumer
-//! committed offsets, blocking fetch with timeout (long poll).
+//! **Partitioned topology.** A topic is a set of numbered partitions,
+//! each an independent append-only log with its own offset space; the
+//! classic single-log ops address partition 0. The partition is the unit
+//! of both ordering and placement: entries within one partition are
+//! totally ordered, and [`fabric`] spreads a topic's partitions across N
+//! broker instances with the same consistent-hash ring the sharded store
+//! uses ([`crate::shard::ring`]), so event throughput scales with broker
+//! count instead of being serialized through one instance. A
+//! [`PartitionedProducer`] routes by key hash (per-key ordering) or
+//! round-robin; a [`PartitionedConsumer`] owns a deterministic slice of
+//! the partition space for its consumer group and fans in fetches across
+//! instances, batching all partitions co-located on one instance into a
+//! single `FetchMany` frame.
+//!
+//! Semantics: per-partition total order, at-least-once delivery with
+//! consumer committed offsets per `(group, topic, partition)`, blocking
+//! fetch with timeout (long poll).
 
+pub mod fabric;
 mod server;
 mod state;
 
+pub use fabric::{
+    assign_partitions, BrokerFabric, PartitionBroker, PartitionedConsumer,
+    PartitionedProducer, Partitioner, ThrottledBroker,
+};
 pub use server::{BrokerClient, BrokerServer};
-pub use state::{BrokerState, LogEntry};
+pub use state::{BrokerState, FetchReq, LogEntry};
 
 use crate::codec::{Bytes, Decode, Encode, Reader, get_varint, put_varint};
 use crate::error::{Error, Result};
@@ -23,20 +43,43 @@ use crate::error::{Error, Result};
 /// Broker wire requests.
 #[derive(Debug, Clone, PartialEq)]
 pub enum BrokerRequest {
-    /// Append to a topic; replies `Offset`.
+    /// Append to a topic (partition 0); replies `Offset`.
     Produce { topic: String, payload: Bytes },
-    /// Fetch up to `max` entries starting at `offset`, waiting up to
-    /// `timeout_ms` for at least one (0 = no wait).
+    /// Fetch up to `max` entries of partition 0 starting at `offset`,
+    /// waiting up to `timeout_ms` for at least one (0 = no wait).
     Fetch { topic: String, offset: u64, max: u32, timeout_ms: u64 },
-    /// Commit a consumer-group offset.
+    /// Commit a consumer-group offset (partition 0).
     Commit { group: String, topic: String, offset: u64 },
-    /// Read a committed offset; replies `Offset` (0 if none).
+    /// Read a committed offset (partition 0); replies `Offset` (0 if none).
     Committed { group: String, topic: String },
-    /// Current end-of-log offset; replies `Offset`.
+    /// Current end-of-log offset of partition 0; replies `Offset`.
     EndOffset { topic: String },
     /// List topic names.
     Topics,
     Ping,
+    /// Append to a specific partition; replies `Offset`.
+    ProducePart { topic: String, partition: u32, payload: Bytes },
+    /// Batched append to one partition; replies `Offsets`.
+    ProduceMany { topic: String, partition: u32, payloads: Vec<Bytes> },
+    /// Fetch from a specific partition; replies `Entries`.
+    FetchPart {
+        topic: String,
+        partition: u32,
+        offset: u64,
+        max: u32,
+        timeout_ms: u64,
+    },
+    /// Multi-partition fetch (one frame for a consumer's whole local
+    /// assignment); replies `Batches` aligned with `reqs`.
+    FetchMany { reqs: Vec<FetchReq>, timeout_ms: u64 },
+    /// Commit a consumer-group offset on a partition.
+    CommitPart { group: String, topic: String, partition: u32, offset: u64 },
+    /// Read a committed partition offset; replies `Offset` (0 if none).
+    CommittedPart { group: String, topic: String, partition: u32 },
+    /// Current end-of-log offset of a partition; replies `Offset`.
+    EndOffsetPart { topic: String, partition: u32 },
+    /// Non-empty partitions of a topic; replies `PartitionList`.
+    Partitions { topic: String },
 }
 
 /// Broker wire replies.
@@ -47,6 +90,11 @@ pub enum BrokerResponse {
     Entries(Vec<LogEntry>),
     TopicList(Vec<String>),
     Error(String),
+    /// Batched produce result, aligned with the request payloads.
+    Offsets(Vec<u64>),
+    /// Multi-partition fetch result, aligned with the request.
+    Batches(Vec<Vec<LogEntry>>),
+    PartitionList(Vec<u32>),
 }
 
 impl Encode for LogEntry {
@@ -96,6 +144,59 @@ impl Encode for BrokerRequest {
             }
             BrokerRequest::Topics => put_varint(buf, 5),
             BrokerRequest::Ping => put_varint(buf, 6),
+            BrokerRequest::ProducePart { topic, partition, payload } => {
+                put_varint(buf, 7);
+                topic.encode(buf);
+                partition.encode(buf);
+                payload.encode(buf);
+            }
+            BrokerRequest::ProduceMany { topic, partition, payloads } => {
+                put_varint(buf, 8);
+                topic.encode(buf);
+                partition.encode(buf);
+                payloads.encode(buf);
+            }
+            BrokerRequest::FetchPart {
+                topic,
+                partition,
+                offset,
+                max,
+                timeout_ms,
+            } => {
+                put_varint(buf, 9);
+                topic.encode(buf);
+                partition.encode(buf);
+                offset.encode(buf);
+                max.encode(buf);
+                timeout_ms.encode(buf);
+            }
+            BrokerRequest::FetchMany { reqs, timeout_ms } => {
+                put_varint(buf, 10);
+                reqs.encode(buf);
+                timeout_ms.encode(buf);
+            }
+            BrokerRequest::CommitPart { group, topic, partition, offset } => {
+                put_varint(buf, 11);
+                group.encode(buf);
+                topic.encode(buf);
+                partition.encode(buf);
+                offset.encode(buf);
+            }
+            BrokerRequest::CommittedPart { group, topic, partition } => {
+                put_varint(buf, 12);
+                group.encode(buf);
+                topic.encode(buf);
+                partition.encode(buf);
+            }
+            BrokerRequest::EndOffsetPart { topic, partition } => {
+                put_varint(buf, 13);
+                topic.encode(buf);
+                partition.encode(buf);
+            }
+            BrokerRequest::Partitions { topic } => {
+                put_varint(buf, 14);
+                topic.encode(buf);
+            }
         }
     }
 }
@@ -125,6 +226,43 @@ impl Decode for BrokerRequest {
             4 => BrokerRequest::EndOffset { topic: Decode::decode(r)? },
             5 => BrokerRequest::Topics,
             6 => BrokerRequest::Ping,
+            7 => BrokerRequest::ProducePart {
+                topic: Decode::decode(r)?,
+                partition: Decode::decode(r)?,
+                payload: Decode::decode(r)?,
+            },
+            8 => BrokerRequest::ProduceMany {
+                topic: Decode::decode(r)?,
+                partition: Decode::decode(r)?,
+                payloads: Decode::decode(r)?,
+            },
+            9 => BrokerRequest::FetchPart {
+                topic: Decode::decode(r)?,
+                partition: Decode::decode(r)?,
+                offset: Decode::decode(r)?,
+                max: Decode::decode(r)?,
+                timeout_ms: Decode::decode(r)?,
+            },
+            10 => BrokerRequest::FetchMany {
+                reqs: Decode::decode(r)?,
+                timeout_ms: Decode::decode(r)?,
+            },
+            11 => BrokerRequest::CommitPart {
+                group: Decode::decode(r)?,
+                topic: Decode::decode(r)?,
+                partition: Decode::decode(r)?,
+                offset: Decode::decode(r)?,
+            },
+            12 => BrokerRequest::CommittedPart {
+                group: Decode::decode(r)?,
+                topic: Decode::decode(r)?,
+                partition: Decode::decode(r)?,
+            },
+            13 => BrokerRequest::EndOffsetPart {
+                topic: Decode::decode(r)?,
+                partition: Decode::decode(r)?,
+            },
+            14 => BrokerRequest::Partitions { topic: Decode::decode(r)? },
             t => {
                 return Err(Error::Protocol(format!("bad broker req tag {t}")))
             }
@@ -152,6 +290,18 @@ impl Encode for BrokerResponse {
                 put_varint(buf, 4);
                 msg.encode(buf);
             }
+            BrokerResponse::Offsets(v) => {
+                put_varint(buf, 5);
+                v.encode(buf);
+            }
+            BrokerResponse::Batches(v) => {
+                put_varint(buf, 6);
+                v.encode(buf);
+            }
+            BrokerResponse::PartitionList(v) => {
+                put_varint(buf, 7);
+                v.encode(buf);
+            }
         }
     }
 }
@@ -164,6 +314,9 @@ impl Decode for BrokerResponse {
             2 => BrokerResponse::Entries(Decode::decode(r)?),
             3 => BrokerResponse::TopicList(Decode::decode(r)?),
             4 => BrokerResponse::Error(Decode::decode(r)?),
+            5 => BrokerResponse::Offsets(Decode::decode(r)?),
+            6 => BrokerResponse::Batches(Decode::decode(r)?),
+            7 => BrokerResponse::PartitionList(Decode::decode(r)?),
             t => {
                 return Err(Error::Protocol(format!("bad broker resp tag {t}")))
             }
@@ -197,6 +350,40 @@ mod tests {
             BrokerRequest::EndOffset { topic: "t".into() },
             BrokerRequest::Topics,
             BrokerRequest::Ping,
+            BrokerRequest::ProducePart {
+                topic: "t".into(),
+                partition: 3,
+                payload: Bytes(vec![5]),
+            },
+            BrokerRequest::ProduceMany {
+                topic: "t".into(),
+                partition: 1,
+                payloads: vec![Bytes(vec![1]), Bytes(Vec::new())],
+            },
+            BrokerRequest::FetchPart {
+                topic: "t".into(),
+                partition: 2,
+                offset: 9,
+                max: 4,
+                timeout_ms: 50,
+            },
+            BrokerRequest::FetchMany {
+                reqs: vec![("t".into(), 0, 1, 8), ("u".into(), 5, 0, 1)],
+                timeout_ms: 250,
+            },
+            BrokerRequest::CommitPart {
+                group: "g".into(),
+                topic: "t".into(),
+                partition: 6,
+                offset: 11,
+            },
+            BrokerRequest::CommittedPart {
+                group: "g".into(),
+                topic: "t".into(),
+                partition: 6,
+            },
+            BrokerRequest::EndOffsetPart { topic: "t".into(), partition: 1 },
+            BrokerRequest::Partitions { topic: "t".into() },
         ] {
             let back = BrokerRequest::from_bytes(&req.to_bytes()).unwrap();
             assert_eq!(req, back);
@@ -210,6 +397,12 @@ mod tests {
             }]),
             BrokerResponse::TopicList(vec!["a".into()]),
             BrokerResponse::Error("x".into()),
+            BrokerResponse::Offsets(vec![0, 1, 2]),
+            BrokerResponse::Batches(vec![
+                Vec::new(),
+                vec![LogEntry { offset: 0, payload: Bytes(vec![4]) }],
+            ]),
+            BrokerResponse::PartitionList(vec![0, 3, 7]),
         ] {
             let back = BrokerResponse::from_bytes(&resp.to_bytes()).unwrap();
             assert_eq!(resp, back);

@@ -9,7 +9,7 @@ use crate::codec::Bytes;
 use crate::error::{Error, Result};
 use crate::kv::{read_frame, write_frame};
 
-use super::state::{BrokerState, LogEntry};
+use super::state::{BrokerState, FetchReq, LogEntry};
 use super::{BrokerRequest, BrokerResponse};
 
 /// A running broker server. Dropping the handle shuts it down.
@@ -113,6 +113,39 @@ fn serve_connection(stream: TcpStream, state: BrokerState) -> Result<()> {
             }
             BrokerRequest::Topics => BrokerResponse::TopicList(state.topics()),
             BrokerRequest::Ping => BrokerResponse::Ok,
+            BrokerRequest::ProducePart { topic, partition, payload } => {
+                BrokerResponse::Offset(state.produce_to(&topic, partition, payload))
+            }
+            BrokerRequest::ProduceMany { topic, partition, payloads } => {
+                BrokerResponse::Offsets(state.produce_many(&topic, partition, payloads))
+            }
+            BrokerRequest::FetchPart { topic, partition, offset, max, timeout_ms } => {
+                BrokerResponse::Entries(state.fetch_from(
+                    &topic,
+                    partition,
+                    offset,
+                    max,
+                    Duration::from_millis(timeout_ms),
+                ))
+            }
+            BrokerRequest::FetchMany { reqs, timeout_ms } => {
+                BrokerResponse::Batches(
+                    state.fetch_many(&reqs, Duration::from_millis(timeout_ms)),
+                )
+            }
+            BrokerRequest::CommitPart { group, topic, partition, offset } => {
+                state.commit_part(&group, &topic, partition, offset);
+                BrokerResponse::Ok
+            }
+            BrokerRequest::CommittedPart { group, topic, partition } => {
+                BrokerResponse::Offset(state.committed_part(&group, &topic, partition))
+            }
+            BrokerRequest::EndOffsetPart { topic, partition } => {
+                BrokerResponse::Offset(state.end_offset_of(&topic, partition))
+            }
+            BrokerRequest::Partitions { topic } => {
+                BrokerResponse::PartitionList(state.partitions(&topic))
+            }
         };
         write_frame(&mut writer, &resp)?;
     }
@@ -220,6 +253,136 @@ impl BrokerClient {
             other => Err(Error::Protocol(format!("bad topics reply {other:?}"))),
         }
     }
+
+    pub fn produce_to(
+        &self,
+        topic: &str,
+        partition: u32,
+        payload: Bytes,
+    ) -> Result<u64> {
+        match self.call(BrokerRequest::ProducePart {
+            topic: topic.into(),
+            partition,
+            payload,
+        })? {
+            BrokerResponse::Offset(o) => Ok(o),
+            other => Err(Error::Protocol(format!("bad produce reply {other:?}"))),
+        }
+    }
+
+    /// Batched append to one partition: one frame, one lock acquisition
+    /// server-side; returns the assigned offsets.
+    pub fn produce_many(
+        &self,
+        topic: &str,
+        partition: u32,
+        payloads: Vec<Bytes>,
+    ) -> Result<Vec<u64>> {
+        match self.call(BrokerRequest::ProduceMany {
+            topic: topic.into(),
+            partition,
+            payloads,
+        })? {
+            BrokerResponse::Offsets(v) => Ok(v),
+            other => {
+                Err(Error::Protocol(format!("bad produce_many reply {other:?}")))
+            }
+        }
+    }
+
+    pub fn fetch_from(
+        &self,
+        topic: &str,
+        partition: u32,
+        offset: u64,
+        max: u32,
+        timeout: Duration,
+    ) -> Result<Vec<LogEntry>> {
+        match self.call(BrokerRequest::FetchPart {
+            topic: topic.into(),
+            partition,
+            offset,
+            max,
+            timeout_ms: timeout.as_millis() as u64,
+        })? {
+            BrokerResponse::Entries(v) => Ok(v),
+            other => Err(Error::Protocol(format!("bad fetch reply {other:?}"))),
+        }
+    }
+
+    /// Multi-partition fetch in one round trip, aligned with `reqs`.
+    pub fn fetch_many(
+        &self,
+        reqs: &[FetchReq],
+        timeout: Duration,
+    ) -> Result<Vec<Vec<LogEntry>>> {
+        match self.call(BrokerRequest::FetchMany {
+            reqs: reqs.to_vec(),
+            timeout_ms: timeout.as_millis() as u64,
+        })? {
+            BrokerResponse::Batches(v) => Ok(v),
+            other => {
+                Err(Error::Protocol(format!("bad fetch_many reply {other:?}")))
+            }
+        }
+    }
+
+    pub fn commit_part(
+        &self,
+        group: &str,
+        topic: &str,
+        partition: u32,
+        offset: u64,
+    ) -> Result<()> {
+        match self.call(BrokerRequest::CommitPart {
+            group: group.into(),
+            topic: topic.into(),
+            partition,
+            offset,
+        })? {
+            BrokerResponse::Ok => Ok(()),
+            other => Err(Error::Protocol(format!("bad commit reply {other:?}"))),
+        }
+    }
+
+    pub fn committed_part(
+        &self,
+        group: &str,
+        topic: &str,
+        partition: u32,
+    ) -> Result<u64> {
+        match self.call(BrokerRequest::CommittedPart {
+            group: group.into(),
+            topic: topic.into(),
+            partition,
+        })? {
+            BrokerResponse::Offset(o) => Ok(o),
+            other => {
+                Err(Error::Protocol(format!("bad committed reply {other:?}")))
+            }
+        }
+    }
+
+    pub fn end_offset_of(&self, topic: &str, partition: u32) -> Result<u64> {
+        match self.call(BrokerRequest::EndOffsetPart {
+            topic: topic.into(),
+            partition,
+        })? {
+            BrokerResponse::Offset(o) => Ok(o),
+            other => {
+                Err(Error::Protocol(format!("bad end_offset reply {other:?}")))
+            }
+        }
+    }
+
+    pub fn partitions(&self, topic: &str) -> Result<Vec<u32>> {
+        match self.call(BrokerRequest::Partitions { topic: topic.into() })? {
+            BrokerResponse::PartitionList(v) => Ok(v),
+            other => {
+                Err(Error::Protocol(format!("bad partitions reply {other:?}")))
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -254,6 +417,41 @@ mod tests {
         let got = h.join().unwrap();
         assert_eq!(got.len(), 1);
         assert_eq!(got[0].payload, Bytes(vec![7]));
+    }
+
+    #[test]
+    fn partitioned_ops_over_tcp() {
+        let server = BrokerServer::spawn().unwrap();
+        let c = BrokerClient::connect(server.addr).unwrap();
+        assert_eq!(c.produce_to("t", 2, Bytes(vec![1])).unwrap(), 0);
+        assert_eq!(
+            c.produce_many("t", 2, vec![Bytes(vec![2]), Bytes(vec![3])])
+                .unwrap(),
+            vec![1, 2]
+        );
+        assert_eq!(c.end_offset_of("t", 2).unwrap(), 3);
+        assert_eq!(c.end_offset_of("t", 0).unwrap(), 0);
+        assert_eq!(c.partitions("t").unwrap(), vec![2]);
+        let entries = c
+            .fetch_from("t", 2, 1, 10, Duration::ZERO)
+            .unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].payload, Bytes(vec![2]));
+        // Multi-partition fetch aligns with the request order.
+        c.produce_to("t", 5, Bytes(vec![9])).unwrap();
+        let batches = c
+            .fetch_many(
+                &[("t".into(), 5, 0, 10), ("t".into(), 2, 0, 1)],
+                Duration::ZERO,
+            )
+            .unwrap();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0][0].payload, Bytes(vec![9]));
+        assert_eq!(batches[1][0].payload, Bytes(vec![1]));
+        // Partitioned commits round-trip and stay partition-scoped.
+        c.commit_part("g", "t", 2, 3).unwrap();
+        assert_eq!(c.committed_part("g", "t", 2).unwrap(), 3);
+        assert_eq!(c.committed_part("g", "t", 5).unwrap(), 0);
     }
 
     #[test]

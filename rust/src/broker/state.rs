@@ -1,4 +1,11 @@
-//! Broker storage engine: append-only topic logs + consumer-group offsets.
+//! Broker storage engine: append-only partitioned topic logs plus
+//! consumer-group offsets.
+//!
+//! A topic is a set of numbered partitions, each an independent
+//! append-only log with its own dense offset space. The classic
+//! single-log API (`produce`/`fetch`/...) operates on partition 0, so
+//! unpartitioned callers are just the one-partition special case.
+//! Commits are tracked per `(group, topic, partition)`.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
@@ -7,17 +14,43 @@ use std::time::{Duration, Instant};
 use crate::codec::Bytes;
 use crate::metrics::StoreBytes;
 
-/// One log entry (offset is topic-local and dense from 0).
+/// One log entry (offset is partition-local and dense from 0).
 #[derive(Debug, Clone, PartialEq)]
 pub struct LogEntry {
     pub offset: u64,
     pub payload: Bytes,
 }
 
+/// A fetch request against one partition: `(topic, partition, offset,
+/// max)`. [`BrokerState::fetch_many`] serves a whole slice of these in one
+/// lock acquisition (and one wire frame over TCP).
+pub type FetchReq = (String, u32, u64, u32);
+
 #[derive(Default)]
 struct Inner {
-    topics: HashMap<String, Vec<LogEntry>>,
-    commits: HashMap<(String, String), u64>, // (group, topic) -> offset
+    /// topic -> partition -> log. Nested (rather than a `(String, u32)`
+    /// key) so the fetch hot path — re-probed on every long-poll wake —
+    /// looks up by `&str` without allocating a key.
+    topics: HashMap<String, HashMap<u32, Vec<LogEntry>>>,
+    /// (group, topic, partition) -> committed offset.
+    commits: HashMap<(String, String, u32), u64>,
+}
+
+impl Inner {
+    fn log(&self, topic: &str, partition: u32) -> Option<&Vec<LogEntry>> {
+        self.topics.get(topic).and_then(|parts| parts.get(&partition))
+    }
+
+    fn slice(&self, topic: &str, partition: u32, offset: u64, max: u32) -> Vec<LogEntry> {
+        match self.log(topic, partition) {
+            Some(log) if (log.len() as u64) > offset => {
+                let start = offset as usize;
+                let end = (start + max as usize).min(log.len());
+                log[start..end].to_vec()
+            }
+            _ => Vec::new(),
+        }
+    }
 }
 
 /// Embedded broker engine; cheap to clone.
@@ -43,20 +76,62 @@ impl BrokerState {
         }
     }
 
-    /// Append; returns the assigned offset.
+    /// Append to partition 0; returns the assigned offset.
     pub fn produce(&self, topic: &str, payload: Bytes) -> u64 {
+        self.produce_to(topic, 0, payload)
+    }
+
+    /// Append to a specific partition; returns the assigned offset.
+    pub fn produce_to(&self, topic: &str, partition: u32, payload: Bytes) -> u64 {
         let (m, cv) = &*self.inner;
         let mut inner = m.lock().unwrap();
         self.gauge.add(payload.0.len());
-        let log = inner.topics.entry(topic.to_string()).or_default();
+        let log = inner
+            .topics
+            .entry(topic.to_string())
+            .or_default()
+            .entry(partition)
+            .or_default();
         let offset = log.len() as u64;
         log.push(LogEntry { offset, payload });
         cv.notify_all();
         offset
     }
 
-    /// Fetch up to `max` entries from `offset`, long-polling up to
-    /// `timeout` for at least one entry (`Duration::ZERO` = no wait).
+    /// Append a batch to one partition under a single lock acquisition and
+    /// a single waiter wake-up; returns the assigned offsets (dense).
+    pub fn produce_many(
+        &self,
+        topic: &str,
+        partition: u32,
+        payloads: Vec<Bytes>,
+    ) -> Vec<u64> {
+        if payloads.is_empty() {
+            return Vec::new();
+        }
+        let (m, cv) = &*self.inner;
+        let mut inner = m.lock().unwrap();
+        let log = inner
+            .topics
+            .entry(topic.to_string())
+            .or_default()
+            .entry(partition)
+            .or_default();
+        let mut offsets = Vec::with_capacity(payloads.len());
+        let mut bytes = 0usize;
+        for payload in payloads {
+            bytes += payload.0.len();
+            let offset = log.len() as u64;
+            log.push(LogEntry { offset, payload });
+            offsets.push(offset);
+        }
+        self.gauge.add(bytes);
+        cv.notify_all();
+        offsets
+    }
+
+    /// Fetch up to `max` entries from partition 0 (see
+    /// [`BrokerState::fetch_from`]).
     pub fn fetch(
         &self,
         topic: &str,
@@ -64,20 +139,31 @@ impl BrokerState {
         max: u32,
         timeout: Duration,
     ) -> Vec<LogEntry> {
+        self.fetch_from(topic, 0, offset, max, timeout)
+    }
+
+    /// Fetch up to `max` entries of a partition from `offset`, long-polling
+    /// up to `timeout` for at least one entry (`Duration::ZERO` = no wait).
+    pub fn fetch_from(
+        &self,
+        topic: &str,
+        partition: u32,
+        offset: u64,
+        max: u32,
+        timeout: Duration,
+    ) -> Vec<LogEntry> {
+        if max == 0 {
+            // A zero-entry request can never be satisfied; don't park the
+            // caller on the long poll.
+            return Vec::new();
+        }
         let (m, cv) = &*self.inner;
         let deadline = Instant::now() + timeout;
         let mut inner = m.lock().unwrap();
         loop {
-            let available = inner
-                .topics
-                .get(topic)
-                .map(|log| log.len() as u64)
-                .unwrap_or(0);
-            if available > offset {
-                let log = &inner.topics[topic];
-                let start = offset as usize;
-                let end = (offset as usize + max as usize).min(log.len());
-                return log[start..end].to_vec();
+            let entries = inner.slice(topic, partition, offset, max);
+            if !entries.is_empty() {
+                return entries;
             }
             let now = Instant::now();
             if now >= deadline {
@@ -88,30 +174,78 @@ impl BrokerState {
         }
     }
 
+    /// Multi-partition fetch: serve every request in `reqs`, long-polling
+    /// up to `timeout` until at least one request has data. Results align
+    /// positionally with `reqs`. This is the fan-in primitive a
+    /// partitioned consumer polls its whole assignment with — one lock
+    /// acquisition (one frame over TCP) instead of one per partition.
+    pub fn fetch_many(&self, reqs: &[FetchReq], timeout: Duration) -> Vec<Vec<LogEntry>> {
+        if reqs.is_empty() {
+            return Vec::new();
+        }
+        // All-zero `max` can never produce an entry; answer immediately
+        // instead of long-polling (zero-max members of a mixed batch are
+        // simply never the wake-up reason).
+        if reqs.iter().all(|(_, _, _, max)| *max == 0) {
+            return vec![Vec::new(); reqs.len()];
+        }
+        let (m, cv) = &*self.inner;
+        let deadline = Instant::now() + timeout;
+        let mut inner = m.lock().unwrap();
+        loop {
+            let out: Vec<Vec<LogEntry>> = reqs
+                .iter()
+                .map(|(topic, part, offset, max)| {
+                    inner.slice(topic, *part, *offset, *max)
+                })
+                .collect();
+            if out.iter().any(|e| !e.is_empty()) {
+                return out;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return out;
+            }
+            let (guard, _) = cv.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+        }
+    }
+
     pub fn end_offset(&self, topic: &str) -> u64 {
+        self.end_offset_of(topic, 0)
+    }
+
+    pub fn end_offset_of(&self, topic: &str, partition: u32) -> u64 {
         let (m, _) = &*self.inner;
         let inner = m.lock().unwrap();
         inner
-            .topics
-            .get(topic)
+            .log(topic, partition)
             .map(|log| log.len() as u64)
             .unwrap_or(0)
     }
 
     pub fn commit(&self, group: &str, topic: &str, offset: u64) {
+        self.commit_part(group, topic, 0, offset);
+    }
+
+    pub fn commit_part(&self, group: &str, topic: &str, partition: u32, offset: u64) {
         let (m, _) = &*self.inner;
         let mut inner = m.lock().unwrap();
         inner
             .commits
-            .insert((group.to_string(), topic.to_string()), offset);
+            .insert((group.to_string(), topic.to_string(), partition), offset);
     }
 
     pub fn committed(&self, group: &str, topic: &str) -> u64 {
+        self.committed_part(group, topic, 0)
+    }
+
+    pub fn committed_part(&self, group: &str, topic: &str, partition: u32) -> u64 {
         let (m, _) = &*self.inner;
         let inner = m.lock().unwrap();
         inner
             .commits
-            .get(&(group.to_string(), topic.to_string()))
+            .get(&(group.to_string(), topic.to_string(), partition))
             .copied()
             .unwrap_or(0)
     }
@@ -124,12 +258,38 @@ impl BrokerState {
         v
     }
 
-    /// Truncate entries below `offset` on a topic (retention), returning
-    /// freed bytes. Offsets remain stable: the log keeps logical offsets.
+    /// Partitions of a topic that hold at least one entry, ascending.
+    pub fn partitions(&self, topic: &str) -> Vec<u32> {
+        let (m, _) = &*self.inner;
+        let inner = m.lock().unwrap();
+        let mut v: Vec<u32> = inner
+            .topics
+            .get(topic)
+            .map(|parts| parts.keys().copied().collect())
+            .unwrap_or_default();
+        v.sort_unstable();
+        v
+    }
+
+    /// Truncate entries below `offset` on partition 0 (see
+    /// [`BrokerState::truncate_part`]).
     pub fn truncate(&self, topic: &str, below: u64) -> usize {
+        self.truncate_part(topic, 0, below)
+    }
+
+    /// Truncate entries below `offset` on a partition (retention),
+    /// returning freed bytes. Offsets remain stable: the log keeps logical
+    /// offsets.
+    pub fn truncate_part(&self, topic: &str, partition: u32, below: u64) -> usize {
         let (m, _) = &*self.inner;
         let mut inner = m.lock().unwrap();
-        let Some(log) = inner.topics.get_mut(topic) else { return 0 };
+        let Some(log) = inner
+            .topics
+            .get_mut(topic)
+            .and_then(|parts| parts.get_mut(&partition))
+        else {
+            return 0;
+        };
         let mut freed = 0;
         // Replace truncated payloads with empty bytes, keeping offsets dense.
         for e in log.iter_mut().filter(|e| e.offset < below) {
@@ -153,6 +313,37 @@ mod tests {
         assert_eq!(b.produce("u", Bytes(vec![3])), 0);
         assert_eq!(b.end_offset("t"), 2);
         assert_eq!(b.topics(), vec!["t".to_string(), "u".to_string()]);
+    }
+
+    #[test]
+    fn partitions_are_independent_logs() {
+        let b = BrokerState::new();
+        assert_eq!(b.produce_to("t", 0, Bytes(vec![0])), 0);
+        assert_eq!(b.produce_to("t", 1, Bytes(vec![1])), 0);
+        assert_eq!(b.produce_to("t", 1, Bytes(vec![2])), 1);
+        assert_eq!(b.end_offset_of("t", 0), 1);
+        assert_eq!(b.end_offset_of("t", 1), 2);
+        assert_eq!(b.end_offset_of("t", 7), 0);
+        assert_eq!(b.partitions("t"), vec![0, 1]);
+        // Topic list dedups across partitions.
+        assert_eq!(b.topics(), vec!["t".to_string()]);
+        let got = b.fetch_from("t", 1, 0, 10, Duration::ZERO);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[1].payload, Bytes(vec![2]));
+    }
+
+    #[test]
+    fn produce_many_is_dense_and_gauged() {
+        let b = BrokerState::new();
+        b.produce_to("t", 3, Bytes(vec![9; 10]));
+        let offs = b.produce_many(
+            "t",
+            3,
+            vec![Bytes(vec![0; 5]), Bytes(vec![1; 5]), Bytes(vec![2; 5])],
+        );
+        assert_eq!(offs, vec![1, 2, 3]);
+        assert_eq!(b.gauge.get(), 25);
+        assert!(b.produce_many("t", 3, Vec::new()).is_empty());
     }
 
     #[test]
@@ -183,6 +374,54 @@ mod tests {
     }
 
     #[test]
+    fn fetch_many_aligns_and_wakes_on_any_partition() {
+        let b = BrokerState::new();
+        b.produce_to("t", 0, Bytes(vec![1]));
+        let reqs: Vec<FetchReq> = vec![
+            ("t".into(), 0, 0, 10),
+            ("t".into(), 1, 0, 10),
+            ("u".into(), 0, 0, 10),
+        ];
+        let got = b.fetch_many(&reqs, Duration::ZERO);
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].len(), 1);
+        assert!(got[1].is_empty() && got[2].is_empty());
+
+        // Long poll returns as soon as any requested partition has data.
+        let b2 = b.clone();
+        let reqs2: Vec<FetchReq> =
+            vec![("t".into(), 1, 0, 10), ("t".into(), 2, 0, 10)];
+        let h = std::thread::spawn(move || {
+            b2.fetch_many(&reqs2, Duration::from_secs(5))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        b.produce_to("t", 2, Bytes(vec![7]));
+        let got = h.join().unwrap();
+        assert!(got[0].is_empty());
+        assert_eq!(got[1].len(), 1);
+        assert_eq!(got[1][0].payload, Bytes(vec![7]));
+
+        // Empty request set returns immediately.
+        assert!(b.fetch_many(&[], Duration::from_secs(5)).is_empty());
+    }
+
+    #[test]
+    fn zero_max_fetch_returns_immediately() {
+        let b = BrokerState::new();
+        b.produce("t", Bytes(vec![1]));
+        let t0 = Instant::now();
+        assert!(b.fetch("t", 0, 0, Duration::from_secs(5)).is_empty());
+        let reqs: Vec<FetchReq> =
+            vec![("t".into(), 0, 0, 0), ("u".into(), 0, 0, 0)];
+        let got = b.fetch_many(&reqs, Duration::from_secs(5));
+        assert_eq!(got, vec![Vec::new(), Vec::new()]);
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "zero-max fetch must not long-poll"
+        );
+    }
+
+    #[test]
     fn fetch_timeout_returns_empty() {
         let b = BrokerState::new();
         let t0 = Instant::now();
@@ -192,13 +431,17 @@ mod tests {
     }
 
     #[test]
-    fn commits_per_group() {
+    fn commits_per_group_and_partition() {
         let b = BrokerState::new();
         assert_eq!(b.committed("g1", "t"), 0);
         b.commit("g1", "t", 5);
         b.commit("g2", "t", 2);
         assert_eq!(b.committed("g1", "t"), 5);
         assert_eq!(b.committed("g2", "t"), 2);
+        // Partitioned commits are independent of partition 0's.
+        b.commit_part("g1", "t", 4, 9);
+        assert_eq!(b.committed_part("g1", "t", 4), 9);
+        assert_eq!(b.committed("g1", "t"), 5);
     }
 
     #[test]

@@ -114,6 +114,11 @@ impl KvClient {
         Ok(self.expect_int(Request::Del { key: key.into() })? == 1)
     }
 
+    /// Batched delete: one round trip; returns how many keys existed.
+    pub fn mdel(&self, keys: &[String]) -> Result<i64> {
+        self.expect_int(Request::MDel { keys: keys.to_vec() })
+    }
+
     pub fn exists(&self, key: &str) -> Result<bool> {
         Ok(self.expect_int(Request::Exists { key: key.into() })? == 1)
     }

@@ -4,11 +4,13 @@
 //! communication channel between proxy producers and consumers. The offline
 //! environment has no Redis, so this module implements the required subset
 //! from scratch: a TCP KV server ([`KvServer`]) with Redis-flavoured
-//! semantics (GET/SET/DEL/EXISTS/MGET/MPUT, pub/sub channels, lists with
-//! blocking pop) plus one extension — `WaitGet`, a server-side blocking GET
-//! that ProxyFutures resolution parks on instead of polling. The batched
-//! `MGET`/`MPUT` pair moves whole key sets per frame, which is what the
-//! shard fabric ([`crate::shard`]) rides for its `get_many`/`put_many`.
+//! semantics (GET/SET/DEL/EXISTS/MGET/MPUT/MDEL, pub/sub channels, lists
+//! with blocking pop) plus one extension — `WaitGet`, a server-side
+//! blocking GET that ProxyFutures resolution parks on instead of polling.
+//! The batched trio `MGET`/`MPUT`/`MDEL` moves whole key sets per frame:
+//! the shard fabric ([`crate::shard`]) rides the first two for
+//! `get_many`/`put_many`, and ownership's bulk-eviction paths (lifetime
+//! close, `Store::evict_many`) ride `MDEL` via `Connector::delete_many`.
 //!
 //! The storage engine ([`KvState`]) is usable embedded (zero-copy,
 //! in-process) or over TCP ([`KvClient`]/[`KvSubscriber`]); connectors can

@@ -31,6 +31,9 @@ pub enum Request {
     /// Batched set: all pairs land under one lock acquisition and one wire
     /// round trip (the shard fabric's `put_many` fast path).
     MPut { items: Vec<(String, Bytes)> },
+    /// Batched delete; replies `Int(n_removed)`. One frame for a whole
+    /// eviction sweep (ownership lifetimes, bulk retention).
+    MDel { keys: Vec<String> },
     /// Blocking get: wait up to `timeout_ms` for the key to appear
     /// (0 = wait forever).
     WaitGet { key: String, timeout_ms: u64 },
@@ -104,6 +107,7 @@ impl Encode for Request {
             Request::Stats => tagged!(buf, 14),
             Request::Ping => tagged!(buf, 15),
             Request::MPut { items } => tagged!(buf, 16, items),
+            Request::MDel { keys } => tagged!(buf, 17, keys),
         }
     }
 }
@@ -149,6 +153,7 @@ impl Decode for Request {
             14 => Request::Stats,
             15 => Request::Ping,
             16 => Request::MPut { items: Decode::decode(r)? },
+            17 => Request::MDel { keys: Decode::decode(r)? },
             t => return Err(Error::Protocol(format!("bad request tag {t}"))),
         })
     }
@@ -260,6 +265,8 @@ mod tests {
             ],
         });
         roundtrip_req(Request::MPut { items: Vec::new() });
+        roundtrip_req(Request::MDel { keys: vec!["a".into(), "b".into()] });
+        roundtrip_req(Request::MDel { keys: Vec::new() });
         roundtrip_req(Request::WaitGet { key: "k".into(), timeout_ms: 500 });
         roundtrip_req(Request::Publish {
             channel: "c".into(),

@@ -113,6 +113,7 @@ fn handle_request(state: &KvState, req: Request) -> Response {
             Response::Int(i64::from(state.set_nx(&key, value)))
         }
         Request::Del { key } => Response::Int(i64::from(state.del(&key))),
+        Request::MDel { keys } => Response::Int(state.mdel(&keys)),
         Request::Exists { key } => Response::Int(i64::from(state.exists(&key))),
         Request::MGet { keys } => Response::Values(state.mget(&keys)),
         Request::MPut { items } => {
@@ -264,6 +265,24 @@ mod tests {
         assert_eq!(client.get("a").unwrap(), Some(Bytes(vec![9])));
         let (keys, _, _) = client.stats().unwrap();
         assert_eq!(keys, 3);
+    }
+
+    #[test]
+    fn mdel_over_tcp() {
+        let server = KvServer::spawn().unwrap();
+        let client = KvClient::connect(server.addr).unwrap();
+        client
+            .mput(vec![
+                ("a".into(), Bytes(vec![1])),
+                ("b".into(), Bytes(vec![2])),
+            ])
+            .unwrap();
+        assert_eq!(
+            client.mdel(&["a".into(), "b".into(), "nope".into()]).unwrap(),
+            2
+        );
+        assert_eq!(client.get("a").unwrap(), None);
+        assert_eq!(client.mdel(&[]).unwrap(), 0);
     }
 
     #[test]

@@ -172,6 +172,24 @@ impl KvState {
         }
     }
 
+    /// Batched delete under one lock acquisition; returns how many of the
+    /// keys existed (the wire half of `Connector::delete_many`).
+    pub fn mdel(&self, keys: &[String]) -> i64 {
+        self.bump();
+        let (m, _) = &*self.inner;
+        let mut inner = m.lock().unwrap();
+        let mut removed = 0;
+        let mut freed = 0;
+        for key in keys {
+            if let Some(old) = inner.data.remove(key) {
+                freed += old.len();
+                removed += 1;
+            }
+        }
+        self.gauge.sub(freed);
+        removed
+    }
+
     /// Returns true if the key existed.
     pub fn del(&self, key: &str) -> bool {
         self.bump();
@@ -480,6 +498,20 @@ mod tests {
         assert_eq!(kv.get("b"), Some(Bytes(vec![2; 6])));
         kv.mset(Vec::new()); // empty batch is a no-op
         assert_eq!(kv.gauge.get(), 10);
+    }
+
+    #[test]
+    fn mdel_removes_batch_and_adjusts_gauge() {
+        let kv = KvState::new();
+        kv.set("a", Bytes(vec![0; 10]));
+        kv.set("b", Bytes(vec![0; 20]));
+        kv.set("c", Bytes(vec![0; 30]));
+        let n = kv.mdel(&["a".into(), "missing".into(), "c".into()]);
+        assert_eq!(n, 2);
+        assert_eq!(kv.gauge.get(), 20);
+        assert!(kv.get("a").is_none());
+        assert!(kv.get("b").is_some());
+        assert_eq!(kv.mdel(&[]), 0);
     }
 
     #[test]

@@ -27,6 +27,11 @@
 //! proxy batch-prefetch ([`proxy::prefetch`]) so streaming consumers
 //! amortize round trips. A proxy minted against the fabric stays fully
 //! self-contained: its factory carries the serialized shard layout.
+//!
+//! The event channel scales the same way: the **partitioned broker
+//! fabric** ([`broker::fabric`]) spreads a topic's partitions across N
+//! broker instances with the same ring, preserving per-partition order
+//! while produce/fetch throughput grows with the instance count.
 
 pub mod apps;
 pub mod benchlib;

@@ -7,6 +7,7 @@
 //! [`Lifetime`] trait so `Store::proxy` integration and user extensions
 //! are uniform.
 
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -61,10 +62,23 @@ impl Attached {
             return;
         }
         self.closed = true;
+        // Group keys by channel so each mediated channel sees ONE batched
+        // eviction (native MDEL over the wire, parallel per-shard sweep on
+        // the fabric) instead of a round trip per attached object.
+        let mut groups: HashMap<Vec<u8>, (Factory, Vec<String>)> =
+            HashMap::new();
         for f in self.factories.drain(..) {
             f.invalidate_cache();
+            let desc = f.desc.to_bytes();
+            let keys = &mut groups
+                .entry(desc)
+                .or_insert_with(|| (f.clone(), Vec::new()))
+                .1;
+            keys.push(f.key);
+        }
+        for (f, keys) in groups.into_values() {
             if let Ok(conn) = f.connector() {
-                let _ = conn.evict(&f.key);
+                let _ = conn.delete_many(&keys);
             }
         }
     }

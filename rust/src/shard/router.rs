@@ -386,6 +386,56 @@ impl Connector for ShardedConnector {
         }
     }
 
+    fn delete_many(&self, keys: &[String]) -> Result<()> {
+        if keys.is_empty() {
+            return Ok(());
+        }
+        // Group every key's full replica set per shard, sweep all shards
+        // in parallel (each pays one native MDEL / batched evict).
+        let n = self.shards.len();
+        let mut batches: Vec<Vec<String>> = vec![Vec::new(); n];
+        let mut owners: Vec<Vec<usize>> = Vec::with_capacity(keys.len());
+        for key in keys {
+            let reps = self.ring.replicas_for(key, self.replicas);
+            for &shard in &reps {
+                batches[shard].push(key.clone());
+            }
+            owners.push(reps);
+        }
+        let mut shard_res: Vec<Option<Result<()>>> = vec![None; n];
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (shard, batch) in batches.into_iter().enumerate() {
+                if batch.is_empty() {
+                    continue;
+                }
+                let conn = self.shards[shard].clone();
+                handles.push((shard, s.spawn(move || conn.delete_many(&batch))));
+            }
+            for (shard, h) in handles {
+                shard_res[shard] = Some(h.join().unwrap_or_else(|_| {
+                    Err(Error::Connector("shard delete_many panicked".into()))
+                }));
+            }
+        });
+        // Same semantics as `evict`: a key is gone once any replica
+        // confirmed; only a fully failed replica set surfaces the error.
+        for (key, reps) in keys.iter().zip(owners) {
+            let any_ok =
+                reps.iter().any(|&sh| matches!(shard_res[sh], Some(Ok(()))));
+            if !any_ok {
+                let err = reps.iter().find_map(|&sh| match &shard_res[sh] {
+                    Some(Err(e)) => Some(e.clone()),
+                    _ => None,
+                });
+                return Err(err.unwrap_or_else(|| {
+                    Error::Connector(format!("all replicas failed deleting {key}"))
+                }));
+            }
+        }
+        Ok(())
+    }
+
     fn exists(&self, key: &str) -> Result<bool> {
         let reps = self.ring.replicas_for(key, self.replicas);
         let mut healthy = 0usize;
@@ -580,6 +630,49 @@ mod tests {
             );
         }
         assert!(router.fallback_reads() > 0);
+    }
+
+    #[test]
+    fn delete_many_sweeps_all_replicas() {
+        let (router, backends) = fabric(4, 2);
+        let items: Vec<(String, Vec<u8>)> =
+            (0..24).map(|i| (format!("dm-{i}"), vec![i as u8])).collect();
+        router.put_many(items.clone()).unwrap();
+        assert_eq!(router.len().unwrap(), 48); // R=2 copies
+        let keys: Vec<String> = items.iter().map(|(k, _)| k.clone()).collect();
+        router.delete_many(&keys).unwrap();
+        assert_eq!(router.len().unwrap(), 0);
+        for b in &backends {
+            assert_eq!(b.len().unwrap(), 0);
+        }
+        // Idempotent + empty batch.
+        router.delete_many(&keys).unwrap();
+        router.delete_many(&[]).unwrap();
+    }
+
+    #[test]
+    fn delete_many_survives_one_dead_replica() {
+        let backends: Vec<Arc<FlakyConnector>> = (0..3)
+            .map(|_| FlakyConnector::wrap(MemoryConnector::new()))
+            .collect();
+        let as_conns: Vec<Arc<dyn Connector>> = backends
+            .iter()
+            .map(|b| b.clone() as Arc<dyn Connector>)
+            .collect();
+        let router = ShardedConnector::new(as_conns, 2, 64).unwrap();
+        let keys: Vec<String> = (0..16).map(|i| format!("dmf-{i}")).collect();
+        router
+            .put_many(keys.iter().map(|k| (k.clone(), vec![1])).collect())
+            .unwrap();
+        backends[0].set_down(true);
+        // Every key still has a live replica: the sweep succeeds.
+        router.delete_many(&keys).unwrap();
+        backends[0].set_down(false);
+        // With everything down the failure surfaces.
+        for b in &backends {
+            b.set_down(true);
+        }
+        assert!(router.delete_many(&keys).is_err());
     }
 
     #[test]

@@ -75,6 +75,26 @@ pub trait Connector: Send + Sync {
         keys.iter().map(|k| self.get(k)).collect()
     }
 
+    /// Batched eviction (idempotent, like [`Connector::evict`]). The
+    /// default loops; channels with a native `MDEL` (memory, TCP KV)
+    /// override it so a whole eviction sweep — ownership lifetimes
+    /// releasing every attached object at once — pays one round trip.
+    /// Best-effort: every key gets its own evict attempt even when an
+    /// earlier one fails (the last error is reported), matching the
+    /// per-key eviction loops this replaces.
+    fn delete_many(&self, keys: &[String]) -> Result<()> {
+        let mut last_err = None;
+        for key in keys {
+            if let Err(e) = self.evict(key) {
+                last_err = Some(e);
+            }
+        }
+        match last_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
     /// Number of objects currently resident (the Fig 10 "active proxies"
     /// measurement).
     fn len(&self) -> Result<usize>;
@@ -307,6 +327,11 @@ impl Connector for MemoryConnector {
         Ok(self.state.mget_shared(keys))
     }
 
+    fn delete_many(&self, keys: &[String]) -> Result<()> {
+        self.state.mdel(keys);
+        Ok(())
+    }
+
     fn evict(&self, key: &str) -> Result<()> {
         self.state.del(key);
         Ok(())
@@ -467,6 +492,12 @@ impl Connector for TcpKvConnector {
             .collect())
     }
 
+    fn delete_many(&self, keys: &[String]) -> Result<()> {
+        // Native MDEL: the whole eviction sweep crosses the wire once.
+        self.client.mdel(keys)?;
+        Ok(())
+    }
+
     fn evict(&self, key: &str) -> Result<()> {
         self.client.del(key)?;
         Ok(())
@@ -562,6 +593,12 @@ impl Connector for ThrottledConnector {
             out.iter().map(|b| b.as_ref().map(|v| v.len()).unwrap_or(0)).sum();
         self.link.transfer(total);
         Ok(out)
+    }
+
+    fn delete_many(&self, keys: &[String]) -> Result<()> {
+        // One latency for the whole sweep (deletes carry no payload).
+        self.link.transfer(0);
+        self.inner.delete_many(keys)
     }
 
     fn evict(&self, key: &str) -> Result<()> {
@@ -691,6 +728,15 @@ impl Connector for MultiConnector {
         Ok(out)
     }
 
+    fn delete_many(&self, keys: &[String]) -> Result<()> {
+        // Size is unknown at delete time: sweep both channels, best-effort
+        // — a dead large channel must not leave small objects resident.
+        let large = self.large.delete_many(keys);
+        let small = self.small.delete_many(keys);
+        large?;
+        small
+    }
+
     fn evict(&self, key: &str) -> Result<()> {
         self.large.evict(key)?;
         self.small.evict(key)
@@ -737,8 +783,19 @@ mod tests {
             got.iter().map(|b| b.as_ref().map(|v| v.to_vec())).collect::<Vec<_>>(),
             vec![Some(vec![1]), None, Some(vec![2, 2])]
         );
-        c.evict("b1").unwrap();
-        c.evict("b2").unwrap();
+        // Batched eviction: existing and missing keys, idempotent, empty.
+        c.put_many(vec![
+            ("d1".into(), vec![1]),
+            ("d2".into(), vec![2, 2]),
+        ])
+        .unwrap();
+        c.delete_many(&["b1".into(), "d1".into(), "ghost".into()]).unwrap();
+        assert!(!c.exists("d1").unwrap());
+        assert!(!c.exists("b1").unwrap());
+        assert!(c.exists("d2").unwrap());
+        c.delete_many(&["d2".into(), "b2".into()]).unwrap();
+        assert!(!c.exists("d2").unwrap());
+        c.delete_many(&[]).unwrap();
     }
 
     #[test]

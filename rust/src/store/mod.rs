@@ -228,6 +228,20 @@ impl Store {
         self.inner.connector.evict(key)
     }
 
+    /// Batched eviction: one connector `delete_many` (native MDEL on wire
+    /// channels, parallel per-shard sweep on the fabric) instead of a
+    /// round trip per key. Proxy caches are invalidated like `evict`.
+    pub fn evict_many(&self, keys: &[String]) -> Result<()> {
+        self.inner
+            .evicts
+            .fetch_add(keys.len() as u64, Ordering::Relaxed);
+        let desc = self.inner.connector.desc().to_bytes();
+        for key in keys {
+            crate::proxy::cache::global().invalidate(&desc, key);
+        }
+        self.inner.connector.delete_many(keys)
+    }
+
     /// Factory metadata for a key in this store.
     pub fn factory_for(&self, key: &str, wait: bool, timeout_ms: u64) -> Factory {
         Factory {

@@ -12,6 +12,19 @@
 //! For the Fig 6 baseline, [`StreamProducer::send_inline`] pushes the bulk
 //! bytes *through* the event channel instead, reproducing the
 //! data-through-dispatcher configuration the paper compares against.
+//!
+//! **Partitioned event channel.** Because producer and consumer are
+//! generic over [`Publisher`]/[`Subscriber`], the event channel scales
+//! out without touching either side: [`PartitionedLogPublisher`] routes
+//! each event to one partition of a
+//! [`BrokerFabric`](crate::broker::BrokerFabric) (key-hash or
+//! round-robin) and broadcasts end-of-stream to every partition, while
+//! [`PartitionedLogSubscriber`] consumes one group member's partition
+//! slice, fanning in fetches across broker instances and surfacing a
+//! single end-of-stream only after every assigned partition has
+//! terminated. Ordering is per partition — events sharing a routing key
+//! arrive in production order; cross-partition interleaving is
+//! unspecified, exactly as in Kafka.
 
 mod plugins;
 mod shims;
@@ -20,7 +33,7 @@ pub use plugins::{BatchAggregator, FilterPlugin, Plugin, SamplePlugin};
 pub use shims::{
     probe, EmbeddedLogPublisher, EmbeddedLogSubscriber, KvPubSubPublisher,
     KvPubSubSubscriber, KvQueuePublisher, KvQueueSubscriber, LogPublisher,
-    LogSubscriber,
+    LogSubscriber, PartitionedLogPublisher, PartitionedLogSubscriber,
 };
 
 use std::collections::BTreeMap;
@@ -115,6 +128,21 @@ pub trait Publisher: Send + Sync {
 pub trait Subscriber: Send {
     /// Next event; `Ok(None)` on timeout.
     fn next_event(&mut self, timeout: Option<Duration>) -> Result<Option<Event>>;
+}
+
+// Boxed shims so callers can pick the event-channel topology at runtime
+// (e.g. streambench switching between a single embedded log and the
+// partitioned broker fabric).
+impl Publisher for Box<dyn Publisher> {
+    fn publish(&self, topic: &str, event: &Event) -> Result<()> {
+        (**self).publish(topic, event)
+    }
+}
+
+impl Subscriber for Box<dyn Subscriber> {
+    fn next_event(&mut self, timeout: Option<Duration>) -> Result<Option<Event>> {
+        (**self).next_event(timeout)
+    }
 }
 
 // --------------------------------------------------------------------------

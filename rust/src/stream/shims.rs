@@ -9,10 +9,14 @@
 //! | Redis pub/sub   | [`KvPubSubPublisher`]/[`KvPubSubSubscriber`] |
 //! | Redis queues    | [`KvQueuePublisher`]/[`KvQueueSubscriber`]   |
 
+use std::collections::HashSet;
 use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::time::Duration;
 
-use crate::broker::{BrokerClient, BrokerState};
+use crate::broker::{
+    BrokerClient, BrokerFabric, BrokerState, PartitionedConsumer,
+};
 use crate::codec::{Bytes, Decode, Encode};
 use crate::error::{Error, Result};
 use crate::kv::{KvClient, KvSubscriber};
@@ -139,6 +143,183 @@ impl Subscriber for LogSubscriber {
                 Ok(Some(Event::from_bytes(&e.payload.0)?))
             }
             None => Ok(None),
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// Partitioned broker-fabric shims (topic partitions spread over N brokers)
+// --------------------------------------------------------------------------
+
+/// Publish events onto a partitioned broker fabric.
+///
+/// Data events are routed to one partition — by the hash of the metadata
+/// key named at construction (per-key ordering), falling back to
+/// round-robin — while end-of-stream markers are **broadcast to every
+/// partition**, so each partition's consumers observe termination
+/// regardless of which slice of the stream they own.
+pub struct PartitionedLogPublisher {
+    fabric: BrokerFabric,
+    /// Metadata key whose value routes the event (None = round-robin).
+    key_meta: Option<String>,
+    cursor: AtomicU32,
+}
+
+impl PartitionedLogPublisher {
+    /// Round-robin over the fabric's partitions.
+    pub fn new(fabric: BrokerFabric) -> Self {
+        PartitionedLogPublisher { fabric, key_meta: None, cursor: AtomicU32::new(0) }
+    }
+
+    /// Route by the value of `meta_key` in each event's metadata (events
+    /// sharing that value keep their relative order); events without the
+    /// key fall back to round-robin.
+    pub fn by_metadata_key(fabric: BrokerFabric, meta_key: &str) -> Self {
+        PartitionedLogPublisher {
+            fabric,
+            key_meta: Some(meta_key.to_string()),
+            cursor: AtomicU32::new(0),
+        }
+    }
+
+    fn partition_for(&self, event: &Event) -> u32 {
+        if let Some(meta_key) = &self.key_meta {
+            if let Some(v) = event.metadata.get(meta_key) {
+                return self.fabric.partition_for_key(v);
+            }
+        }
+        // Lock-free topic-global cursor — `publish` is `&self`, so this is
+        // the atomic variant of PartitionedProducer's per-topic cursor.
+        self.cursor.fetch_add(1, Ordering::Relaxed) % self.fabric.partitions()
+    }
+}
+
+impl Publisher for PartitionedLogPublisher {
+    fn publish(&self, topic: &str, event: &Event) -> Result<()> {
+        let payload = Bytes(event.to_bytes());
+        if event.end_of_stream {
+            // Every partition's consumers must observe termination.
+            self.fabric.broadcast(topic, payload)?;
+            return Ok(());
+        }
+        let p = self.partition_for(event);
+        let inst = self.fabric.instance_for(topic, p);
+        self.fabric.instance(inst).produce_to(topic, p, payload)?;
+        Ok(())
+    }
+}
+
+/// Consume events from a partitioned broker fabric as one group member.
+///
+/// Owns `assign_partitions(partitions, members, member)` of the topic and
+/// fans in fetches across instances ([`PartitionedConsumer`]). Per-
+/// partition end-of-stream markers are swallowed until every assigned
+/// partition has terminated, then a single end-of-stream event is
+/// surfaced — so a [`StreamConsumer`](crate::stream::StreamConsumer)
+/// wrapping this shim closes exactly once, after draining its whole
+/// assignment.
+pub struct PartitionedLogSubscriber {
+    consumer: PartitionedConsumer,
+    topic: String,
+    group: Option<String>,
+    /// Assigned partitions that have delivered their end-of-stream marker.
+    finished: HashSet<u32>,
+    /// The single merged end-of-stream event has been surfaced; later
+    /// calls time out (`Ok(None)`) instead of re-announcing termination.
+    eos_delivered: bool,
+}
+
+impl PartitionedLogSubscriber {
+    /// Member `member` of `members` anonymous consumers (offsets start at
+    /// 0). A single consumer spanning the whole topic is `(0, 1)`.
+    pub fn new(
+        fabric: BrokerFabric,
+        topic: &str,
+        member: usize,
+        members: usize,
+    ) -> Result<Self> {
+        Ok(PartitionedLogSubscriber {
+            consumer: PartitionedConsumer::new(fabric, topic, member, members)?,
+            topic: topic.to_string(),
+            group: None,
+            finished: HashSet::new(),
+            eos_delivered: false,
+        })
+    }
+
+    /// Group member: resumes each partition from the group's committed
+    /// offset. Commits lag delivery by one event per partition — an
+    /// event's offset is only committed when the *next* event of its
+    /// partition is handed out (i.e. after the application came back for
+    /// more) — so a crash replays the in-flight event instead of losing
+    /// it: at-least-once delivery.
+    pub fn with_group(
+        fabric: BrokerFabric,
+        topic: &str,
+        group: &str,
+        member: usize,
+        members: usize,
+    ) -> Result<Self> {
+        Ok(PartitionedLogSubscriber {
+            consumer: PartitionedConsumer::with_group(
+                fabric, topic, group, member, members,
+            )?,
+            topic: topic.to_string(),
+            group: Some(group.to_string()),
+            finished: HashSet::new(),
+            eos_delivered: false,
+        })
+    }
+
+    /// The partitions this member consumes.
+    pub fn assigned(&self) -> &[u32] {
+        self.consumer.assigned()
+    }
+}
+
+impl Subscriber for PartitionedLogSubscriber {
+    fn next_event(&mut self, timeout: Option<Duration>) -> Result<Option<Event>> {
+        if self.eos_delivered {
+            return Ok(None);
+        }
+        // An empty assignment (more members than partitions) has nothing
+        // to consume: report end-of-stream once, immediately.
+        if self.consumer.assigned().is_empty() {
+            self.eos_delivered = true;
+            return Ok(Some(Event::eos(&self.topic, 0)));
+        }
+        let deadline = timeout.map(|t| std::time::Instant::now() + t);
+        loop {
+            let slice = match deadline {
+                None => Duration::from_secs(3600),
+                Some(d) => {
+                    let now = std::time::Instant::now();
+                    if now >= d {
+                        return Ok(None);
+                    }
+                    d - now
+                }
+            };
+            let Some((partition, entry)) = self.consumer.next(slice)? else {
+                return Ok(None);
+            };
+            if let Some(g) = &self.group {
+                // Lazy commit: mark everything *before* this entry as
+                // consumed. The entry itself is committed when its
+                // successor is delivered, so a crash mid-processing
+                // replays it (at-least-once) rather than dropping it.
+                self.consumer.commit_position(g, partition, entry.offset)?;
+            }
+            let event = Event::from_bytes(&entry.payload.0)?;
+            if event.end_of_stream {
+                self.finished.insert(partition);
+                if self.finished.len() == self.consumer.assigned().len() {
+                    self.eos_delivered = true;
+                    return Ok(Some(event));
+                }
+                continue; // other partitions still live
+            }
+            return Ok(Some(event));
         }
     }
 }
@@ -297,6 +478,112 @@ mod tests {
             .unwrap()
             .unwrap();
         assert_eq!(*p.resolve().unwrap(), 2);
+    }
+
+    #[test]
+    fn partitioned_shim_end_to_end_with_single_eos() {
+        let (fabric, states) = BrokerFabric::embedded(2, 4).unwrap();
+        let store = Store::memory("pstream");
+        let mut producer = StreamProducer::new(
+            PartitionedLogPublisher::new(fabric.clone()),
+            Some(store.clone()),
+        );
+        for i in 0..12u32 {
+            producer.send("t", &i, Metadata::new()).unwrap();
+        }
+        producer.close_topic("t").unwrap();
+
+        let mut consumer = StreamConsumer::new(
+            PartitionedLogSubscriber::new(fabric, "t", 0, 1).unwrap(),
+        );
+        let mut got = Vec::new();
+        while let Some((p, _)) = consumer
+            .next_proxy::<u32>(Some(Duration::from_secs(5)))
+            .unwrap()
+        {
+            got.push(*p.resolve().unwrap());
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..12).collect::<Vec<_>>());
+        // Closed exactly once; stays closed.
+        assert!(consumer
+            .next_proxy::<u32>(Some(Duration::from_millis(10)))
+            .unwrap()
+            .is_none());
+        // Proxy mode: only small events crossed the brokers.
+        let broker_bytes: i64 =
+            states.iter().map(|s| s.gauge.get()).sum();
+        assert!(broker_bytes < 16 * 1024, "bulk leaked into the brokers");
+    }
+
+    #[test]
+    fn partitioned_group_members_split_stream() {
+        let (fabric, _) = BrokerFabric::embedded(2, 4).unwrap();
+        let store = Store::memory("pstream-group");
+        let mut producer = StreamProducer::new(
+            PartitionedLogPublisher::new(fabric.clone()),
+            Some(store),
+        );
+        for i in 0..16u32 {
+            producer.send("t", &i, Metadata::new()).unwrap();
+        }
+        producer.close_topic("t").unwrap();
+
+        let mut seen = Vec::new();
+        for m in 0..2 {
+            let mut c = StreamConsumer::new(
+                PartitionedLogSubscriber::with_group(
+                    fabric.clone(),
+                    "t",
+                    "g",
+                    m,
+                    2,
+                )
+                .unwrap(),
+            );
+            while let Some((p, _)) = c
+                .next_proxy::<u32>(Some(Duration::from_secs(5)))
+                .unwrap()
+            {
+                seen.push(*p.resolve().unwrap());
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn partitioned_keyed_events_keep_order() {
+        let (fabric, _) = BrokerFabric::embedded(3, 8).unwrap();
+        let store = Store::memory("pstream-keyed");
+        let mut producer = StreamProducer::new(
+            PartitionedLogPublisher::by_metadata_key(fabric.clone(), "actor"),
+            Some(store),
+        );
+        // Two interleaved actors; each actor's events must stay ordered.
+        for i in 0..10u32 {
+            let mut md = Metadata::new();
+            md.insert("actor".into(), format!("a{}", i % 2));
+            producer.send("t", &i, md).unwrap();
+        }
+        producer.close_topic("t").unwrap();
+
+        let mut consumer = StreamConsumer::new(
+            PartitionedLogSubscriber::new(fabric, "t", 0, 1).unwrap(),
+        );
+        let mut per_actor: std::collections::HashMap<String, Vec<u32>> =
+            std::collections::HashMap::new();
+        while let Some((p, md)) = consumer
+            .next_proxy::<u32>(Some(Duration::from_secs(5)))
+            .unwrap()
+        {
+            per_actor
+                .entry(md["actor"].clone())
+                .or_default()
+                .push(*p.resolve().unwrap());
+        }
+        assert_eq!(per_actor["a0"], vec![0, 2, 4, 6, 8]);
+        assert_eq!(per_actor["a1"], vec![1, 3, 5, 7, 9]);
     }
 
     #[test]

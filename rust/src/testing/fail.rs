@@ -1,15 +1,19 @@
-//! Failure injection for connectors.
+//! Failure injection for connectors and broker instances.
 //!
 //! [`FlakyConnector`] wraps any channel and, while tripped via
 //! [`FlakyConnector::set_down`], fails every operation with a connector
 //! error — the shard fabric's replica-fallback tests and the failover
 //! bench both drive dead-backend scenarios through it without real
-//! processes to kill.
+//! processes to kill. [`FlakyBroker`] is the same switch for a broker
+//! fabric instance, so partition-unavailability scenarios are drivable
+//! from tests too.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::broker::{FetchReq, LogEntry, PartitionBroker};
+use crate::codec::Bytes;
 use crate::error::{Error, Result};
 use crate::metrics::StoreBytes;
 use crate::store::{Blob, Connector, ConnectorDesc};
@@ -92,6 +96,11 @@ impl Connector for FlakyConnector {
         self.inner.get_many(keys)
     }
 
+    fn delete_many(&self, keys: &[String]) -> Result<()> {
+        self.check()?;
+        self.inner.delete_many(keys)
+    }
+
     fn evict(&self, key: &str) -> Result<()> {
         self.check()?;
         self.inner.evict(key)
@@ -112,10 +121,133 @@ impl Connector for FlakyConnector {
     }
 }
 
+/// A broker instance whose backend can be "killed" and "revived" at will
+/// (the [`FlakyConnector`] of the partitioned broker fabric).
+pub struct FlakyBroker {
+    inner: Arc<dyn PartitionBroker>,
+    down: AtomicBool,
+    rejected: AtomicU64,
+}
+
+impl FlakyBroker {
+    /// Wrap a broker instance, initially healthy.
+    pub fn wrap(inner: Arc<dyn PartitionBroker>) -> Arc<FlakyBroker> {
+        Arc::new(FlakyBroker {
+            inner,
+            down: AtomicBool::new(false),
+            rejected: AtomicU64::new(0),
+        })
+    }
+
+    /// Trip (true) or restore (false) the instance.
+    pub fn set_down(&self, down: bool) {
+        self.down.store(down, Ordering::SeqCst);
+    }
+
+    pub fn is_down(&self) -> bool {
+        self.down.load(Ordering::SeqCst)
+    }
+
+    /// Operations rejected while the instance was down.
+    pub fn rejected_ops(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    fn check(&self) -> Result<()> {
+        if self.is_down() {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            Err(Error::Connector("injected failure: broker down".into()))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+impl PartitionBroker for FlakyBroker {
+    fn produce_to(&self, topic: &str, partition: u32, payload: Bytes) -> Result<u64> {
+        self.check()?;
+        self.inner.produce_to(topic, partition, payload)
+    }
+
+    fn produce_many(
+        &self,
+        topic: &str,
+        partition: u32,
+        payloads: Vec<Bytes>,
+    ) -> Result<Vec<u64>> {
+        self.check()?;
+        self.inner.produce_many(topic, partition, payloads)
+    }
+
+    fn fetch_from(
+        &self,
+        topic: &str,
+        partition: u32,
+        offset: u64,
+        max: u32,
+        timeout: Duration,
+    ) -> Result<Vec<LogEntry>> {
+        self.check()?;
+        self.inner.fetch_from(topic, partition, offset, max, timeout)
+    }
+
+    fn fetch_many(
+        &self,
+        reqs: &[FetchReq],
+        timeout: Duration,
+    ) -> Result<Vec<Vec<LogEntry>>> {
+        self.check()?;
+        self.inner.fetch_many(reqs, timeout)
+    }
+
+    fn commit_part(
+        &self,
+        group: &str,
+        topic: &str,
+        partition: u32,
+        offset: u64,
+    ) -> Result<()> {
+        self.check()?;
+        self.inner.commit_part(group, topic, partition, offset)
+    }
+
+    fn committed_part(
+        &self,
+        group: &str,
+        topic: &str,
+        partition: u32,
+    ) -> Result<u64> {
+        self.check()?;
+        self.inner.committed_part(group, topic, partition)
+    }
+
+    fn end_offset_of(&self, topic: &str, partition: u32) -> Result<u64> {
+        self.check()?;
+        self.inner.end_offset_of(topic, partition)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::store::MemoryConnector;
+
+    #[test]
+    fn flaky_broker_trips_and_recovers() {
+        let state = crate::broker::BrokerState::new();
+        let flaky =
+            FlakyBroker::wrap(Arc::new(state) as Arc<dyn PartitionBroker>);
+        flaky.produce_to("t", 0, Bytes(vec![1])).unwrap();
+        flaky.set_down(true);
+        assert!(flaky.produce_to("t", 0, Bytes(vec![2])).is_err());
+        assert!(flaky
+            .fetch_from("t", 0, 0, 1, Duration::ZERO)
+            .is_err());
+        assert_eq!(flaky.rejected_ops(), 2);
+        flaky.set_down(false);
+        let got = flaky.fetch_from("t", 0, 0, 10, Duration::ZERO).unwrap();
+        assert_eq!(got.len(), 1, "log survived the outage");
+    }
 
     #[test]
     fn healthy_passthrough_then_injected_failure() {

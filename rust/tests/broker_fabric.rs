@@ -1,0 +1,259 @@
+//! End-to-end partitioned broker fabric: real TCP broker servers, keyed
+//! and round-robin production, consumer-group fan-in with rebalance, and
+//! instance failure injection.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use proxystore::broker::{
+    assign_partitions, BrokerFabric, BrokerServer, BrokerState,
+    PartitionBroker, PartitionedConsumer, PartitionedProducer, Partitioner,
+};
+use proxystore::codec::Bytes;
+use proxystore::stream::{
+    Metadata, PartitionedLogPublisher, PartitionedLogSubscriber,
+    StreamConsumer, StreamProducer,
+};
+use proxystore::store::Store;
+use proxystore::testing::fail::FlakyBroker;
+
+fn tcp_fabric(n: usize, partitions: u32) -> (BrokerFabric, Vec<BrokerServer>) {
+    let servers: Vec<BrokerServer> =
+        (0..n).map(|_| BrokerServer::spawn().unwrap()).collect();
+    let addrs: Vec<_> = servers.iter().map(|s| s.addr).collect();
+    (BrokerFabric::connect(&addrs, partitions).unwrap(), servers)
+}
+
+#[test]
+fn tcp_fabric_preserves_per_partition_order() {
+    let (fabric, servers) = tcp_fabric(3, 8);
+    let mut producer =
+        PartitionedProducer::new(fabric.clone(), Partitioner::ByKey);
+    // Four keys, 10 events each, interleaved.
+    for i in 0..40u8 {
+        let key = format!("key-{}", i % 4);
+        producer.produce("t", Some(&key), Bytes(vec![i])).unwrap();
+    }
+
+    // A second, independently built fabric (fresh TCP connections) agrees
+    // on placement and sees every event in per-partition order.
+    let addrs: Vec<_> = servers.iter().map(|s| s.addr).collect();
+    let fabric2 = BrokerFabric::connect(&addrs, 8).unwrap();
+    let mut consumer = PartitionedConsumer::new(fabric2, "t", 0, 1).unwrap();
+    let mut per_key: HashMap<u8, Vec<u8>> = HashMap::new();
+    let mut seen = 0;
+    while seen < 40 {
+        let got = consumer.poll(Duration::from_secs(5)).unwrap();
+        assert!(!got.is_empty(), "starved at {seen}/40");
+        for (_, e) in got {
+            let v = e.payload.0[0];
+            per_key.entry(v % 4).or_default().push(v);
+            seen += 1;
+        }
+    }
+    // Same key -> same partition -> production order preserved.
+    for (k, vals) in per_key {
+        let expect: Vec<u8> = (0..40u8).filter(|i| i % 4 == k).collect();
+        assert_eq!(vals, expect, "key class {k} misordered");
+    }
+}
+
+#[test]
+fn tcp_batched_produce_many_lands_in_order() {
+    let (fabric, _servers) = tcp_fabric(2, 4);
+    let mut producer =
+        PartitionedProducer::new(fabric.clone(), Partitioner::RoundRobin);
+    let events: Vec<(Option<String>, Bytes)> =
+        (0..32u8).map(|i| (None, Bytes(vec![i]))).collect();
+    let placed = producer.produce_many("t", events).unwrap();
+    assert_eq!(placed.len(), 32);
+    // Round-robin: event i on partition i % 4, offsets dense per partition.
+    for (i, &(p, o)) in placed.iter().enumerate() {
+        assert_eq!(p, (i % 4) as u32);
+        assert_eq!(o, (i / 4) as u64);
+    }
+    assert_eq!(fabric.end_offsets("t").unwrap(), vec![8, 8, 8, 8]);
+}
+
+#[test]
+fn group_rebalance_covers_all_partitions_exactly_once() {
+    // The assignment invariant at every group size...
+    for members in 1..=5usize {
+        let mut owned = vec![0u32; 12];
+        for m in 0..members {
+            for p in assign_partitions(12, members, m) {
+                owned[p as usize] += 1;
+            }
+        }
+        assert!(owned.iter().all(|&c| c == 1), "members={members}: {owned:?}");
+    }
+
+    // ...and live: two members split the stream; after one "leaves", the
+    // survivor re-joins as the only member and picks up the leaver's
+    // partitions from the group's committed offsets.
+    let (fabric, _servers) = tcp_fabric(2, 4);
+    let mut producer =
+        PartitionedProducer::new(fabric.clone(), Partitioner::RoundRobin);
+    for i in 0..20u8 {
+        producer.produce("t", None, Bytes(vec![i])).unwrap();
+    }
+    let mut survivor_saw = Vec::new();
+    {
+        let mut m0 = PartitionedConsumer::with_group(
+            fabric.clone(), "t", "g", 0, 2,
+        )
+        .unwrap();
+        let mut m1 = PartitionedConsumer::with_group(
+            fabric.clone(), "t", "g", 1, 2,
+        )
+        .unwrap();
+        assert_eq!(m0.assigned(), &[0, 2]);
+        assert_eq!(m1.assigned(), &[1, 3]);
+        // m0 drains its half and commits; m1 "crashes" before consuming.
+        loop {
+            let got = m0.poll(Duration::ZERO).unwrap();
+            if got.is_empty() {
+                break;
+            }
+            survivor_saw.extend(got.iter().map(|(_, e)| e.payload.0[0]));
+        }
+        m0.commit().unwrap();
+    }
+    // Rebalance: the survivor now owns everything; committed offsets on
+    // its old partitions skip what it already consumed, the leaver's
+    // partitions replay from 0.
+    let mut solo =
+        PartitionedConsumer::with_group(fabric, "t", "g", 0, 1).unwrap();
+    assert_eq!(solo.assigned(), &[0, 1, 2, 3]);
+    loop {
+        let got = solo.poll(Duration::ZERO).unwrap();
+        if got.is_empty() {
+            break;
+        }
+        survivor_saw.extend(got.iter().map(|(_, e)| e.payload.0[0]));
+    }
+    survivor_saw.sort_unstable();
+    assert_eq!(survivor_saw, (0..20u8).collect::<Vec<_>>());
+}
+
+#[test]
+fn dead_instance_degrades_only_its_partitions() {
+    let flaky: Vec<Arc<FlakyBroker>> = (0..3)
+        .map(|_| FlakyBroker::wrap(Arc::new(BrokerState::new()) as _))
+        .collect();
+    let fabric = BrokerFabric::new(
+        flaky.iter().map(|f| f.clone() as Arc<dyn PartitionBroker>).collect(),
+        9,
+    )
+    .unwrap();
+    let mut producer =
+        PartitionedProducer::new(fabric.clone(), Partitioner::RoundRobin);
+    for i in 0..18u8 {
+        producer.produce("t", None, Bytes(vec![i])).unwrap();
+    }
+
+    // Kill the instance hosting partition 0: its partitions become
+    // unavailable, the rest of the stream keeps flowing (losses explicit,
+    // not silent).
+    let victim = fabric.instance_for("t", 0);
+    flaky[victim].set_down(true);
+    let dead_parts: Vec<u32> =
+        (0..9).filter(|&p| fabric.instance_for("t", p) == victim).collect();
+    assert!(!dead_parts.is_empty(), "victim hosts partition 0 by choice");
+    assert!(dead_parts.len() < 9, "one instance must not host everything");
+
+    let mut consumer =
+        PartitionedConsumer::new(fabric.clone(), "t", 0, 1).unwrap();
+    let mut live_events = 0;
+    loop {
+        match consumer.poll(Duration::ZERO) {
+            Ok(got) if got.is_empty() => break,
+            Ok(got) => {
+                for (p, _) in &got {
+                    assert!(
+                        !dead_parts.contains(p),
+                        "event from a dead partition {p}"
+                    );
+                }
+                live_events += got.len();
+            }
+            // Fully drained live instances surface the dead one.
+            Err(_) => break,
+        }
+    }
+    assert!(consumer.instance_errors() > 0, "outage went unnoticed");
+    let expected_live = (0..18u8)
+        .filter(|&i| !dead_parts.contains(&(u32::from(i) % 9)))
+        .count();
+    assert_eq!(live_events, expected_live);
+
+    // Producing to a dead partition errors; a live one succeeds.
+    let inst_of = |p: u32| fabric.instance_for("t", p);
+    let dead_p = dead_parts[0];
+    let live_p = (0..9).find(|&p| inst_of(p) != victim).unwrap();
+    assert!(fabric
+        .instance(inst_of(dead_p))
+        .produce_to("t", dead_p, Bytes(vec![99]))
+        .is_err());
+    fabric
+        .instance(inst_of(live_p))
+        .produce_to("t", live_p, Bytes(vec![99]))
+        .unwrap();
+
+    // Recovery: the dead partitions' backlog is intact and ordered.
+    flaky[victim].set_down(false);
+    let mut recovered = PartitionedConsumer::new(fabric, "t", 0, 1).unwrap();
+    let mut total = 0;
+    while total < 19 {
+        let got = recovered.poll(Duration::from_secs(5)).unwrap();
+        assert!(!got.is_empty(), "recovery starved at {total}/19");
+        total += got.len();
+    }
+}
+
+#[test]
+fn streaming_over_tcp_fabric_with_group_members() {
+    let (fabric, _servers) = tcp_fabric(2, 4);
+    let store = Store::memory("fabric-stream");
+    let mut producer = StreamProducer::new(
+        PartitionedLogPublisher::new(fabric.clone()),
+        Some(store.clone()),
+    );
+    for i in 0..12u64 {
+        let mut md = Metadata::new();
+        md.insert("i".into(), i.to_string());
+        producer.send("t", &i, md).unwrap();
+    }
+    producer.close_topic("t").unwrap();
+
+    // Two group members consume disjoint partition slices in parallel
+    // threads; together they see everything, each closes on its own EOS.
+    let handles: Vec<_> = (0..2)
+        .map(|m| {
+            let fabric = fabric.clone();
+            std::thread::spawn(move || {
+                let mut consumer = StreamConsumer::new(
+                    PartitionedLogSubscriber::with_group(
+                        fabric, "t", "workers", m, 2,
+                    )
+                    .unwrap(),
+                );
+                let mut got = Vec::new();
+                while let Some((p, _)) = consumer
+                    .next_proxy::<u64>(Some(Duration::from_secs(5)))
+                    .unwrap()
+                {
+                    got.push(*p.resolve().unwrap());
+                }
+                got
+            })
+        })
+        .collect();
+    let mut all: Vec<u64> = handles
+        .into_iter()
+        .flat_map(|h| h.join().unwrap())
+        .collect();
+    all.sort_unstable();
+    assert_eq!(all, (0..12).collect::<Vec<_>>());
+}

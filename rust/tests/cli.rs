@@ -88,6 +88,19 @@ fn shard_small_run() {
 }
 
 #[test]
+fn broker_shard_small_run() {
+    let (ok, text) = run(&[
+        "broker-shard", "--instances", "2", "--partitions", "4",
+        "--events", "32", "--size", "4096",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("batched produce/fetch throughput"));
+    assert!(text.contains("fetch speedup"));
+    assert!(text.contains("per-partition order preserved: true"));
+    assert!(text.contains("instance 0 restored: produce succeeds again"));
+}
+
+#[test]
 fn bad_option_value_fails_cleanly() {
     let (ok, text) = run(&["fig5", "--tasks", "many"]);
     assert!(!ok);

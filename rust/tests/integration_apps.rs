@@ -80,6 +80,7 @@ fn streambench_smoke_all_modes() {
         task_time: Duration::from_millis(30),
         items: 6,
         dispatcher_bw: 1.0e9,
+        broker_instances: 1,
         seed: 3,
     };
     for mode in streambench::StreamMode::all() {
