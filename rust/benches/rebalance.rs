@@ -1,0 +1,131 @@
+//! Elastic rebalancing benchmark: scale-out and scale-in migration cost
+//! at 2/4/8-shard fabrics, with a concurrent reader proving read
+//! availability through every membership change.
+//!
+//! Each backend sits behind a throttled link (fixed latency + bandwidth),
+//! so the migration daemon pays real wire time for its batched moves. The
+//! acceptance bar: growing N -> N+1 moves ~1/(N+1) of the keys — the
+//! consistent-hash locality the control plane exists to exploit — and the
+//! reader observes zero misses across all migrations.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use proxystore::benchlib::{fmt_bytes, Bench, Scale};
+use proxystore::codec::Bytes;
+use proxystore::prelude::Store;
+use proxystore::shard::{ElasticShards, ShardMembers};
+use proxystore::store::{Connector, MemoryConnector, ThrottledConnector};
+use proxystore::testing::load::ReadProbe;
+
+const LINK_LATENCY: Duration = Duration::from_micros(200);
+const LINK_BW: f64 = 2.0e8; // 200 MB/s per backend
+
+fn backend() -> Arc<dyn Connector> {
+    ThrottledConnector::wrap(MemoryConnector::new(), LINK_LATENCY, LINK_BW)
+}
+
+fn main() {
+    let scale = Scale::from_env();
+    let n_keys = scale.pick(48, 192, 768);
+    let size = scale.pick(16 * 1024, 64 * 1024, 256 * 1024);
+
+    let mut bench = Bench::new(
+        "rebalance",
+        "event,shards_before,shards_after,keys,migrated,frac_moved,\
+         migrate_s,mb_moved",
+    );
+    bench.note(&format!(
+        "{n_keys} keys x {}, per-backend link {}us + {} MB/s, \
+         concurrent reader during every migration",
+        fmt_bytes(size),
+        LINK_LATENCY.as_micros(),
+        LINK_BW / 1e6
+    ));
+
+    let mut grow_frac_at_4 = 0.0;
+    let mut total_reads = 0u64;
+    let mut total_misses = 0u64;
+
+    for shards in [2usize, 4, 8] {
+        let members: ShardMembers =
+            (0..shards).map(|id| (id, backend())).collect();
+        let elastic = ElasticShards::new(
+            &format!("bench-rebalance-{shards}"),
+            members,
+            1,
+            0,
+        )
+        .expect("elastic fabric");
+        let store = Store::new("bench", Arc::new(elastic.clone()));
+        let objs: Vec<Bytes> =
+            (0..n_keys).map(|i| Bytes(vec![i as u8; size])).collect();
+        let keys = store.put_many(&objs).expect("put_many");
+
+        // Scale-out: N -> N+1 under a live reader.
+        let probe = ReadProbe::spawn(&store, &keys, 1);
+        let before = elastic.metrics();
+        let t0 = Instant::now();
+        elastic.add_shard(shards, backend()).expect("add_shard");
+        assert!(
+            elastic.wait_quiescent(Some(Duration::from_secs(300))),
+            "grow migration never drained"
+        );
+        let dt = t0.elapsed().as_secs_f64();
+        let m = elastic.metrics();
+        let moved = m.keys_migrated - before.keys_migrated;
+        let frac = moved as f64 / n_keys as f64;
+        let mb = (m.bytes_moved - before.bytes_moved) as f64 / 1e6;
+        if shards == 4 {
+            grow_frac_at_4 = frac;
+        }
+        bench.row(format!(
+            "grow,{shards},{},{n_keys},{moved},{frac:.3},{dt:.3},{mb:.1}",
+            shards + 1
+        ));
+
+        // Scale-in: retire the original shard 0, back to N shards.
+        let before = elastic.metrics();
+        let t0 = Instant::now();
+        elastic.remove_shard(0).expect("remove_shard");
+        assert!(
+            elastic.wait_quiescent(Some(Duration::from_secs(300))),
+            "shrink migration never drained"
+        );
+        let dt = t0.elapsed().as_secs_f64();
+        let m = elastic.metrics();
+        let moved = m.keys_migrated - before.keys_migrated;
+        let frac = moved as f64 / n_keys as f64;
+        let mb = (m.bytes_moved - before.bytes_moved) as f64 / 1e6;
+        bench.row(format!(
+            "shrink,{},{shards},{n_keys},{moved},{frac:.3},{dt:.3},{mb:.1}",
+            shards + 1
+        ));
+
+        let (reads, misses) = probe.finish();
+        total_reads += reads;
+        total_misses += misses;
+
+        // Nothing lost: the whole key set resolves on the final fabric.
+        let got: Vec<Option<Bytes>> =
+            store.get_many(&keys).expect("get_many after rebalances");
+        assert!(
+            got.iter().all(|b| b.is_some()),
+            "keys lost across grow+shrink at {shards} shards"
+        );
+    }
+
+    bench.compare(
+        "scale-out 4->5 moved fraction",
+        "~1/5 of keys",
+        &format!("{grow_frac_at_4:.2}"),
+        grow_frac_at_4 > 0.02 && grow_frac_at_4 < 0.45,
+    );
+    bench.compare(
+        "reader misses during migrations",
+        "0",
+        &format!("{total_misses} (of {total_reads} reads)"),
+        total_misses == 0,
+    );
+    bench.finish();
+}

@@ -123,6 +123,16 @@ impl KvClient {
         Ok(self.expect_int(Request::Exists { key: key.into() })? == 1)
     }
 
+    /// Batched existence check: one round trip, positionally aligned.
+    pub fn mexists(&self, keys: &[String]) -> Result<Vec<bool>> {
+        match self.call(Request::MExists { keys: keys.to_vec() })? {
+            Response::Bools(v) => Ok(v),
+            other => {
+                Err(Error::Protocol(format!("expected Bools, got {other:?}")))
+            }
+        }
+    }
+
     pub fn incr(&self, key: &str, by: i64) -> Result<i64> {
         self.expect_int(Request::Incr { key: key.into(), by })
     }

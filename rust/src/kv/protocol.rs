@@ -34,6 +34,10 @@ pub enum Request {
     /// Batched delete; replies `Int(n_removed)`. One frame for a whole
     /// eviction sweep (ownership lifetimes, bulk retention).
     MDel { keys: Vec<String> },
+    /// Batched existence check; replies `Bools`, positionally aligned.
+    /// Completes the batched KV protocol: membership probes over whole
+    /// key sets (shard-fabric `exists_many`) pay one round trip.
+    MExists { keys: Vec<String> },
     /// Blocking get: wait up to `timeout_ms` for the key to appear
     /// (0 = wait forever).
     WaitGet { key: String, timeout_ms: u64 },
@@ -65,6 +69,8 @@ pub enum Response {
     Value(Option<Bytes>),
     /// MGET result, positionally aligned with the request keys.
     Values(Vec<Option<Bytes>>),
+    /// MEXISTS result, positionally aligned with the request keys.
+    Bools(Vec<bool>),
     Int(i64),
     KeysList(Vec<String>),
     /// Async pub/sub push.
@@ -108,6 +114,7 @@ impl Encode for Request {
             Request::Ping => tagged!(buf, 15),
             Request::MPut { items } => tagged!(buf, 16, items),
             Request::MDel { keys } => tagged!(buf, 17, keys),
+            Request::MExists { keys } => tagged!(buf, 18, keys),
         }
     }
 }
@@ -154,6 +161,7 @@ impl Decode for Request {
             15 => Request::Ping,
             16 => Request::MPut { items: Decode::decode(r)? },
             17 => Request::MDel { keys: Decode::decode(r)? },
+            18 => Request::MExists { keys: Decode::decode(r)? },
             t => return Err(Error::Protocol(format!("bad request tag {t}"))),
         })
     }
@@ -174,6 +182,7 @@ impl Encode for Response {
                 tagged!(buf, 6, keys, bytes, ops)
             }
             Response::Error(msg) => tagged!(buf, 7, msg),
+            Response::Bools(v) => tagged!(buf, 8, v),
         }
     }
 }
@@ -196,6 +205,7 @@ impl Decode for Response {
                 ops: Decode::decode(r)?,
             },
             7 => Response::Error(Decode::decode(r)?),
+            8 => Response::Bools(Decode::decode(r)?),
             t => return Err(Error::Protocol(format!("bad response tag {t}"))),
         })
     }
@@ -267,6 +277,8 @@ mod tests {
         roundtrip_req(Request::MPut { items: Vec::new() });
         roundtrip_req(Request::MDel { keys: vec!["a".into(), "b".into()] });
         roundtrip_req(Request::MDel { keys: Vec::new() });
+        roundtrip_req(Request::MExists { keys: vec!["a".into(), "b".into()] });
+        roundtrip_req(Request::MExists { keys: Vec::new() });
         roundtrip_req(Request::WaitGet { key: "k".into(), timeout_ms: 500 });
         roundtrip_req(Request::Publish {
             channel: "c".into(),
@@ -286,6 +298,8 @@ mod tests {
             Response::Value(None),
             Response::Value(Some(Bytes(vec![0; 10]))),
             Response::Values(vec![None, Some(Bytes(vec![1]))]),
+            Response::Bools(vec![true, false, true]),
+            Response::Bools(Vec::new()),
             Response::Int(-7),
             Response::KeysList(vec!["x".into()]),
             Response::Message {

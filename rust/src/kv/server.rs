@@ -114,6 +114,7 @@ fn handle_request(state: &KvState, req: Request) -> Response {
         }
         Request::Del { key } => Response::Int(i64::from(state.del(&key))),
         Request::MDel { keys } => Response::Int(state.mdel(&keys)),
+        Request::MExists { keys } => Response::Bools(state.mexists(&keys)),
         Request::Exists { key } => Response::Int(i64::from(state.exists(&key))),
         Request::MGet { keys } => Response::Values(state.mget(&keys)),
         Request::MPut { items } => {
@@ -283,6 +284,25 @@ mod tests {
         );
         assert_eq!(client.get("a").unwrap(), None);
         assert_eq!(client.mdel(&[]).unwrap(), 0);
+    }
+
+    #[test]
+    fn mexists_over_tcp() {
+        let server = KvServer::spawn().unwrap();
+        let client = KvClient::connect(server.addr).unwrap();
+        client
+            .mput(vec![
+                ("a".into(), Bytes(vec![1])),
+                ("b".into(), Bytes(vec![2])),
+            ])
+            .unwrap();
+        assert_eq!(
+            client
+                .mexists(&["a".into(), "nope".into(), "b".into()])
+                .unwrap(),
+            vec![true, false, true]
+        );
+        assert_eq!(client.mexists(&[]).unwrap(), Vec::<bool>::new());
     }
 
     #[test]

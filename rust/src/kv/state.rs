@@ -172,6 +172,15 @@ impl KvState {
         }
     }
 
+    /// Batched existence check under one lock acquisition, positionally
+    /// aligned with `keys` (the wire half of `Connector::exists_many`).
+    pub fn mexists(&self, keys: &[String]) -> Vec<bool> {
+        self.bump();
+        let (m, _) = &*self.inner;
+        let inner = m.lock().unwrap();
+        keys.iter().map(|k| inner.data.contains_key(k)).collect()
+    }
+
     /// Batched delete under one lock acquisition; returns how many of the
     /// keys existed (the wire half of `Connector::delete_many`).
     pub fn mdel(&self, keys: &[String]) -> i64 {
@@ -512,6 +521,18 @@ mod tests {
         assert!(kv.get("a").is_none());
         assert!(kv.get("b").is_some());
         assert_eq!(kv.mdel(&[]), 0);
+    }
+
+    #[test]
+    fn mexists_alignment() {
+        let kv = KvState::new();
+        kv.set("a", Bytes(vec![1]));
+        kv.set("c", Bytes(vec![3]));
+        assert_eq!(
+            kv.mexists(&["a".into(), "b".into(), "c".into(), "a".into()]),
+            vec![true, false, true, true]
+        );
+        assert_eq!(kv.mexists(&[]), Vec::<bool>::new());
     }
 
     #[test]

@@ -22,11 +22,16 @@
 //! Scaling beyond a single mediated channel is the job of the **sharded
 //! store fabric** ([`shard`]): a consistent-hash ring with virtual nodes
 //! routes keys across N backend connectors with per-key replication and
-//! read-fallback, the KV wire protocol pipelines batched `MGET`/`MPUT`
-//! traffic, and the [`store`] surfaces batched `put_many`/`get_many` plus
-//! proxy batch-prefetch ([`proxy::prefetch`]) so streaming consumers
-//! amortize round trips. A proxy minted against the fabric stays fully
-//! self-contained: its factory carries the serialized shard layout.
+//! read-fallback, the KV wire protocol pipelines batched
+//! `MGET`/`MPUT`/`MDEL`/`MEXISTS` traffic, and the [`store`] surfaces
+//! batched `put_many`/`get_many` plus proxy batch-prefetch
+//! ([`proxy::prefetch`]) so streaming consumers amortize round trips. A
+//! proxy minted against the fabric stays fully self-contained: its
+//! factory carries the serialized shard layout. The fabric is also
+//! **elastic** ([`shard::rebalance`]): shards can be added and removed at
+//! runtime, with a background migration daemon moving only the ~1/N
+//! remapped keys while reads serve through both the old and new placement
+//! — no client ever observes a missing key during a rebalance.
 //!
 //! The event channel scales the same way: the **partitioned broker
 //! fabric** ([`broker::fabric`]) spreads a topic's partitions across N
@@ -73,7 +78,9 @@ pub mod prelude {
         StaticLifetime, StoreOwnedExt,
     };
     pub use crate::proxy::{prefetch, Proxy};
-    pub use crate::shard::{HashRing, ShardedConnector, ShardedDesc};
+    pub use crate::shard::{
+        ElasticDesc, ElasticShards, HashRing, ShardedConnector, ShardedDesc,
+    };
     pub use crate::store::{
         Blob, Connector, ConnectorDesc, FileConnector, MemoryConnector,
         MultiConnector, Store, TcpKvConnector, ThrottledConnector,

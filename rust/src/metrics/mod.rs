@@ -7,10 +7,12 @@
 //! CSV output used by the bench harness.
 
 mod memory;
+mod rebalance;
 mod stats;
 mod timeline;
 
 pub use memory::{GaugeRegistry, MemorySampler, MemorySeries, StoreBytes, rss_bytes};
+pub use rebalance::{RebalanceMetrics, RebalanceSnapshot};
 pub use stats::{Stats, percentile};
 pub use timeline::{StageRecord, Timeline};
 

@@ -1,0 +1,129 @@
+//! Counters for the elastic shard fabric's live rebalancing
+//! ([`crate::shard::rebalance`]).
+//!
+//! Everything is a relaxed atomic: the migration daemon and the foreground
+//! read/write paths bump these from many threads, and operators only ever
+//! read eventually-consistent totals. [`RebalanceMetrics::snapshot`] gives
+//! a plain-value copy for logging / CSV rows.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Live counters shared between the control plane, the migration workers,
+/// and the read-through router.
+#[derive(Debug, Default)]
+pub struct RebalanceMetrics {
+    /// Keys whose placement changed and were enqueued for migration.
+    pub keys_planned: AtomicU64,
+    /// Keys actually copied to their new placement.
+    pub keys_migrated: AtomicU64,
+    /// Planned keys that vanished before the worker copied them (evicted
+    /// concurrently, or already resident at the new placement).
+    pub keys_skipped: AtomicU64,
+    /// Keys dropped after exhausting batch retries. Their bytes survive on
+    /// the old backends but stop being routed to once the epoch retires —
+    /// a non-zero value after a rebalance means data needs operator
+    /// attention (re-add the backend, or re-run the membership change).
+    pub keys_failed: AtomicU64,
+    /// Payload bytes copied old placement -> new placement.
+    pub bytes_moved: AtomicU64,
+    /// Reads that consulted the previous epoch after a current-epoch miss
+    /// (the dual-read cost of read-through migration).
+    pub dual_reads: AtomicU64,
+    /// Dual reads that were served by the previous epoch (the key had not
+    /// been migrated yet).
+    pub dual_read_hits: AtomicU64,
+    /// Migration batches re-enqueued after a transient failure.
+    pub batch_retries: AtomicU64,
+    /// Membership changes fully drained (epoch retired).
+    pub rebalances: AtomicU64,
+}
+
+/// Plain-value copy of [`RebalanceMetrics`] at one instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RebalanceSnapshot {
+    pub keys_planned: u64,
+    pub keys_migrated: u64,
+    pub keys_skipped: u64,
+    pub keys_failed: u64,
+    pub bytes_moved: u64,
+    pub dual_reads: u64,
+    pub dual_read_hits: u64,
+    pub batch_retries: u64,
+    pub rebalances: u64,
+}
+
+impl RebalanceMetrics {
+    pub fn new() -> Arc<RebalanceMetrics> {
+        Arc::new(RebalanceMetrics::default())
+    }
+
+    pub fn add(&self, counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> RebalanceSnapshot {
+        RebalanceSnapshot {
+            keys_planned: self.keys_planned.load(Ordering::Relaxed),
+            keys_migrated: self.keys_migrated.load(Ordering::Relaxed),
+            keys_skipped: self.keys_skipped.load(Ordering::Relaxed),
+            keys_failed: self.keys_failed.load(Ordering::Relaxed),
+            bytes_moved: self.bytes_moved.load(Ordering::Relaxed),
+            dual_reads: self.dual_reads.load(Ordering::Relaxed),
+            dual_read_hits: self.dual_read_hits.load(Ordering::Relaxed),
+            batch_retries: self.batch_retries.load(Ordering::Relaxed),
+            rebalances: self.rebalances.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl std::fmt::Display for RebalanceSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "planned={} migrated={} skipped={} failed={} bytes={} \
+             dual_reads={} dual_hits={} retries={} rebalances={}",
+            self.keys_planned,
+            self.keys_migrated,
+            self.keys_skipped,
+            self.keys_failed,
+            self.bytes_moved,
+            self.dual_reads,
+            self.dual_read_hits,
+            self.batch_retries,
+            self.rebalances
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_copies_counters() {
+        let m = RebalanceMetrics::new();
+        m.add(&m.keys_planned, 10);
+        m.add(&m.keys_migrated, 8);
+        m.add(&m.keys_skipped, 2);
+        m.add(&m.bytes_moved, 4096);
+        m.add(&m.dual_reads, 3);
+        m.add(&m.dual_read_hits, 1);
+        m.add(&m.rebalances, 1);
+        let s = m.snapshot();
+        assert_eq!(s.keys_planned, 10);
+        assert_eq!(s.keys_migrated, 8);
+        assert_eq!(s.keys_skipped, 2);
+        assert_eq!(s.bytes_moved, 4096);
+        assert_eq!(s.dual_reads, 3);
+        assert_eq!(s.dual_read_hits, 1);
+        assert_eq!(s.rebalances, 1);
+        // Counters keep moving after a snapshot; the snapshot does not.
+        m.add(&m.keys_migrated, 1);
+        assert_eq!(s.keys_migrated, 8);
+        assert_eq!(m.snapshot().keys_migrated, 9);
+        let line = s.to_string();
+        assert!(line.contains("migrated=8"));
+        assert!(line.contains("dual_reads=3"));
+    }
+}

@@ -1,22 +1,36 @@
-//! Sharded store fabric: consistent-hash routing, replication, and
-//! batched multi-key traffic over N backend connectors.
+//! Sharded store fabric: consistent-hash routing, replication, batched
+//! multi-key traffic, and live rebalancing over N backend connectors.
 //!
 //! The paper's proxy patterns (Sec III) mediate every object through one
 //! channel, which caps aggregate throughput at that single endpoint. This
-//! module removes the bottleneck while keeping proxies fully transparent:
+//! module removes the bottleneck while keeping proxies fully transparent.
+//! It is built as three layers, each on top of the previous:
 //!
-//! * [`ring`] — a consistent-hash ring with virtual nodes mapping object
-//!   keys to shards, with the classic remapping-locality property (adding
-//!   a shard moves ~1/N of the keys, all of them *to* the new shard);
-//! * [`router`] — [`ShardedConnector`], an ordinary
+//! * [`ring`] — the placement function: a consistent-hash ring with
+//!   virtual nodes mapping object keys to stable shard ids, with the
+//!   classic remapping-locality property (adding a shard moves ~1/N of
+//!   the keys, all of them *to* the new shard). Pure data, no I/O.
+//! * [`router`] — the data plane: [`ShardedConnector`], an ordinary
 //!   [`Connector`](crate::store::Connector) that routes each key to its
 //!   replica set (R distinct shards), falls back to surviving replicas on
-//!   read miss/failure, and fans batched `put_many`/`get_many` traffic out
-//!   to all shards in parallel;
-//! * [`ShardedDesc`] — the serializable fabric description (wire form:
-//!   [`ConnectorDesc::Sharded`](crate::store::ConnectorDesc)). A proxy
-//!   minted against the fabric embeds it in its factory, so resolution in
-//!   any process rebuilds the identical ring and routes to the same shard.
+//!   read miss/failure, and fans batched `put_many`/`get_many`/
+//!   `exists_many` traffic out to all shards in parallel. Its membership
+//!   is fixed at construction — one router is one *epoch* of the fabric.
+//! * [`rebalance`] — the control plane: [`ElasticShards`] owns a sequence
+//!   of router epochs and supports live
+//!   [`add_shard`](ElasticShards::add_shard) /
+//!   [`remove_shard`](ElasticShards::remove_shard). A background
+//!   migration daemon copies exactly the remapped ~1/N keys between
+//!   epochs with batched moves while reads serve *through* both epochs
+//!   (new placement first, old as fallback), so a rebalance never loses a
+//!   read. [`ConnectorDesc::Elastic`](crate::store::ConnectorDesc) is its
+//!   generation-aware wire form: proxies minted before a rebalance
+//!   re-attach to the live control plane and keep resolving.
+//!
+//! [`ShardedDesc`] / [`ElasticDesc`] are the serializable fabric
+//! descriptions. A proxy minted against either embeds it in its factory,
+//! so resolution in any process rebuilds the identical ring and routes to
+//! the same shard.
 //!
 //! ```no_run
 //! use proxystore::prelude::*;
@@ -32,9 +46,32 @@
 //! let objs: Vec<Option<Bytes>> = store.get_many(&keys)?;
 //! # Ok::<(), proxystore::Error>(())
 //! ```
+//!
+//! Growing the fabric under load:
+//!
+//! ```no_run
+//! use proxystore::prelude::*;
+//! use proxystore::shard::ElasticShards;
+//! use std::sync::Arc;
+//!
+//! let members: proxystore::shard::ShardMembers =
+//!     (0..4).map(|id| (id, MemoryConnector::new())).collect();
+//! let elastic = ElasticShards::new("fleet", members, 1, 0)?;
+//! let store = Store::new("fleet", Arc::new(elastic.clone()));
+//! let objs: Vec<Bytes> = (0..128u8).map(|i| Bytes(vec![i])).collect();
+//! let keys = store.put_many(&objs)?;
+//! elastic.add_shard(4, MemoryConnector::new())?; // reads keep working
+//! elastic.wait_quiescent(None);                  // ~1/5 of keys migrated
+//! # Ok::<(), proxystore::Error>(())
+//! ```
 
+pub mod rebalance;
 pub mod ring;
 pub mod router;
 
+pub use rebalance::{
+    connect_elastic, ElasticDesc, ElasticShards, ShardMembers,
+    MIGRATION_BATCH, MIGRATION_WORKERS,
+};
 pub use ring::{hash_key, HashRing};
 pub use router::{ShardedConnector, ShardedDesc, DEFAULT_VNODES};

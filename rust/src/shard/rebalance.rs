@@ -1,0 +1,1172 @@
+//! Elastic shard fabric: live membership changes with read-through
+//! migration.
+//!
+//! The static fabric ([`ShardedConnector`]) fixes its shard set at
+//! construction: growing it means building a new ring and orphaning the
+//! ~1/N remapped keys. This module adds the control plane that makes the
+//! shard set *elastic*:
+//!
+//! * [`ElasticShards::add_shard`] / [`ElasticShards::remove_shard`] change
+//!   membership at runtime. Each change starts a new **epoch**: a fresh
+//!   [`ShardedConnector`] built with [stable ring
+//!   ids](ShardedConnector::with_shard_ids), so consistent hashing moves
+//!   only the ~1/N remapped keys;
+//! * a **migration daemon** (worker threads draining a batch queue) copies
+//!   exactly the remapped keys from the old placement to the new one with
+//!   batched `get_many`/`put_many` moves, then retires the stale copies
+//!   with `delete_many`;
+//! * while the daemon drains, the router serves **read-through**: reads
+//!   try the new placement first and fall back to the old epoch (then
+//!   re-check the new placement, closing the copy/delete race), writes go
+//!   to the new placement only — so no client ever observes a missing key
+//!   during a rebalance;
+//! * [`ConnectorDesc::Elastic`] is the generation-aware descriptor. In the
+//!   minting process it names a registered control plane, so a proxy
+//!   created before a rebalance resolves through the *live* membership
+//!   afterwards; in a fresh process it rebuilds the fabric from its
+//!   membership snapshot and registers that as the live control plane.
+//!
+//! Consistency model (documented, not negotiable): store keys are
+//! generated unique and never reused ([`crate::store::Store::new_key`]),
+//! so an object is written once and read many times. The migration copy is
+//! therefore idempotent. Overwriting a key *during* a migration that moves
+//! it is outside the model — the daemon could re-land the older value.
+//! Likewise an eviction that races the copy of the same key can resurrect
+//! it until the next rebalance; `Store`-level usage (evict after the
+//! owning workflow is done with the key) does not hit this window.
+//! Failure handling is deliberately boring: a migration batch that errors
+//! is re-enqueued with bounded retries ([`RebalanceSnapshot::batch_retries`]),
+//! then dropped and counted ([`RebalanceSnapshot::keys_failed`]). Dropped
+//! keys stay readable through read-through only while the epoch drains;
+//! once it retires their bytes survive on the old backends but are no
+//! longer routed to — a non-zero `keys_failed` after a rebalance is an
+//! operator signal, not a silent loss.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::metrics::{RebalanceMetrics, RebalanceSnapshot};
+use crate::shard::router::{ShardedConnector, DEFAULT_VNODES};
+use crate::store::{Blob, Connector, ConnectorDesc};
+
+/// Keys per migration batch: one `get_many` + one `put_many` (plus the
+/// stale-copy `delete_many` sweep) per batch.
+pub const MIGRATION_BATCH: usize = 64;
+
+/// Worker threads draining the migration queue (capped at the number of
+/// batches, so small migrations don't spawn idle threads).
+pub const MIGRATION_WORKERS: usize = 4;
+
+/// A batch is retried this many times before its keys are abandoned at
+/// the old placement and counted in `keys_failed`.
+const MAX_BATCH_ATTEMPTS: u32 = 5;
+
+/// Stable-id shard membership: `(ring id, backend)` pairs.
+pub type ShardMembers = Vec<(usize, Arc<dyn Connector>)>;
+
+// ---------------------------------------------------------------------
+// Process-wide registry: what makes stale elastic descriptors resolve
+// against the live membership (the memory-connector registry idiom).
+// ---------------------------------------------------------------------
+
+fn registry() -> &'static Mutex<HashMap<String, ElasticShards>> {
+    static REG: std::sync::OnceLock<Mutex<HashMap<String, ElasticShards>>> =
+        std::sync::OnceLock::new();
+    REG.get_or_init(Default::default)
+}
+
+/// Resolve a [`ConnectorDesc::Elastic`]: attach to the live control plane
+/// registered under its name, or (in a fresh process) rebuild the fabric
+/// from the descriptor's membership snapshot and register it.
+pub fn connect_elastic(desc: &ConnectorDesc) -> Result<Arc<dyn Connector>> {
+    let ConnectorDesc::Elastic {
+        name,
+        generation,
+        shard_ids,
+        shards,
+        replicas,
+        vnodes,
+    } = desc
+    else {
+        return Err(Error::Config("not an elastic descriptor".into()));
+    };
+    if let Some(live) = registry().lock().unwrap().get(name) {
+        return Ok(Arc::new(live.clone()));
+    }
+    if shard_ids.len() != shards.len() {
+        return Err(Error::Config(format!(
+            "elastic desc: {} ids for {} shards",
+            shard_ids.len(),
+            shards.len()
+        )));
+    }
+    let members: ShardMembers = shard_ids
+        .iter()
+        .zip(shards)
+        .map(|(&id, d)| Ok((id as usize, d.connect()?)))
+        .collect::<Result<_>>()?;
+    let built = ElasticShards::build(
+        name,
+        members,
+        *replicas as usize,
+        *vnodes as usize,
+        *generation,
+    )?;
+    // Two threads may race to rebuild the same fabric; the registry is the
+    // single source of truth, so a lost race just attaches to the winner.
+    let mut reg = registry().lock().unwrap();
+    let live = reg.entry(name.clone()).or_insert(built).clone();
+    Ok(Arc::new(live))
+}
+
+/// Serializable description of an elastic fabric (builder mirror of
+/// [`crate::shard::ShardedDesc`]; wire form [`ConnectorDesc::Elastic`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ElasticDesc {
+    pub name: String,
+    pub shard_ids: Vec<usize>,
+    pub shards: Vec<ConnectorDesc>,
+    pub replicas: usize,
+    pub vnodes: usize,
+    pub generation: u64,
+}
+
+impl ElasticDesc {
+    /// Fabric over the given backends with identity ids, replication
+    /// factor 1, generation 0.
+    pub fn new(name: &str, shards: Vec<ConnectorDesc>) -> ElasticDesc {
+        ElasticDesc {
+            name: name.to_string(),
+            shard_ids: (0..shards.len()).collect(),
+            shards,
+            replicas: 1,
+            vnodes: DEFAULT_VNODES,
+            generation: 0,
+        }
+    }
+
+    /// Set the per-key replication factor (clamped to the live shard
+    /// count at every epoch).
+    pub fn with_replicas(mut self, replicas: usize) -> ElasticDesc {
+        self.replicas = replicas;
+        self
+    }
+
+    /// Set the virtual-node count per shard.
+    pub fn with_vnodes(mut self, vnodes: usize) -> ElasticDesc {
+        self.vnodes = vnodes;
+        self
+    }
+
+    /// The wire form carried by proxy factories.
+    pub fn desc(&self) -> ConnectorDesc {
+        ConnectorDesc::Elastic {
+            name: self.name.clone(),
+            generation: self.generation,
+            shard_ids: self.shard_ids.iter().map(|&id| id as u64).collect(),
+            shards: self.shards.clone(),
+            replicas: self.replicas as u64,
+            vnodes: self.vnodes as u64,
+        }
+    }
+
+    /// Build / attach the fabric (see [`connect_elastic`]).
+    pub fn connect(&self) -> Result<Arc<dyn Connector>> {
+        self.desc().connect()
+    }
+}
+
+impl From<ElasticDesc> for ConnectorDesc {
+    fn from(d: ElasticDesc) -> ConnectorDesc {
+        d.desc()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Control plane
+// ---------------------------------------------------------------------
+
+/// One retired epoch kept alive while its keys drain.
+struct PrevEpoch {
+    router: Arc<ShardedConnector>,
+    members: ShardMembers,
+}
+
+struct EpochState {
+    members: ShardMembers,
+    current: Arc<ShardedConnector>,
+    prev: Option<PrevEpoch>,
+    /// Token of the in-flight migration; a straggler worker from an older
+    /// migration must not retire a newer epoch.
+    migration_token: u64,
+}
+
+struct MigrationBatch {
+    keys: Vec<String>,
+    attempts: u32,
+}
+
+struct MigrationQueue {
+    batches: VecDeque<MigrationBatch>,
+    in_flight: usize,
+}
+
+/// Everything a migration worker needs, owned per migration so stragglers
+/// can never touch a newer migration's work.
+struct MigrationCtx {
+    token: u64,
+    queue: Mutex<MigrationQueue>,
+    cv: Condvar,
+    old_router: Arc<ShardedConnector>,
+    new_router: Arc<ShardedConnector>,
+    old_members: HashMap<usize, Arc<dyn Connector>>,
+}
+
+struct ElasticInner {
+    name: String,
+    replicas: usize,
+    vnodes: usize,
+    generation: AtomicU64,
+    state: RwLock<EpochState>,
+    /// Serializes membership changes (`add_shard`/`remove_shard`).
+    admin: Mutex<()>,
+    /// Signaled when a migration fully drains.
+    idle: Mutex<()>,
+    idle_cv: Condvar,
+    metrics: Arc<RebalanceMetrics>,
+}
+
+/// Elastic control plane over a shard fabric. Cheap to clone (Arc
+/// inside); implements [`Connector`], so a [`crate::store::Store`] can sit
+/// directly on top of it.
+#[derive(Clone)]
+pub struct ElasticShards {
+    inner: Arc<ElasticInner>,
+}
+
+impl ElasticShards {
+    /// Create and register an elastic fabric. `name` is the process-wide
+    /// identity stale descriptors re-attach through; it must be unused.
+    /// `replicas` is clamped to the live shard count at every epoch;
+    /// `vnodes == 0` selects [`DEFAULT_VNODES`].
+    pub fn new(
+        name: &str,
+        members: ShardMembers,
+        replicas: usize,
+        vnodes: usize,
+    ) -> Result<ElasticShards> {
+        let e = Self::build(name, members, replicas, vnodes, 0)?;
+        let mut reg = registry().lock().unwrap();
+        if reg.contains_key(name) {
+            return Err(Error::Config(format!(
+                "elastic fabric {name:?} already registered"
+            )));
+        }
+        reg.insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Drop a fabric from the process-wide registry, releasing its name
+    /// (and, once every outstanding handle is gone, its backends). Stale
+    /// descriptors for it will rebuild from their membership snapshot
+    /// instead of attaching. Returns whether the name was registered.
+    pub fn unregister(name: &str) -> bool {
+        registry().lock().unwrap().remove(name).is_some()
+    }
+
+    /// Construct without registering (the [`connect_elastic`] rebuild
+    /// path, which registers under the registry lock itself).
+    fn build(
+        name: &str,
+        members: ShardMembers,
+        replicas: usize,
+        vnodes: usize,
+        generation: u64,
+    ) -> Result<ElasticShards> {
+        let vnodes = if vnodes == 0 { DEFAULT_VNODES } else { vnodes };
+        let router = Self::router_for(&members, replicas, vnodes)?;
+        Ok(ElasticShards {
+            inner: Arc::new(ElasticInner {
+                name: name.to_string(),
+                replicas,
+                vnodes,
+                generation: AtomicU64::new(generation),
+                state: RwLock::new(EpochState {
+                    members,
+                    current: router,
+                    prev: None,
+                    migration_token: 0,
+                }),
+                admin: Mutex::new(()),
+                idle: Mutex::new(()),
+                idle_cv: Condvar::new(),
+                metrics: RebalanceMetrics::new(),
+            }),
+        })
+    }
+
+    fn router_for(
+        members: &ShardMembers,
+        replicas: usize,
+        vnodes: usize,
+    ) -> Result<Arc<ShardedConnector>> {
+        let ids: Vec<usize> = members.iter().map(|(id, _)| *id).collect();
+        let backends: Vec<Arc<dyn Connector>> =
+            members.iter().map(|(_, c)| c.clone()).collect();
+        Ok(Arc::new(ShardedConnector::with_shard_ids(
+            ids, backends, replicas, vnodes,
+        )?))
+    }
+
+    pub fn name(&self) -> &str {
+        &self.inner.name
+    }
+
+    /// Membership-change counter: bumps once per add/remove.
+    pub fn generation(&self) -> u64 {
+        self.inner.generation.load(Ordering::SeqCst)
+    }
+
+    /// Live shard ids, in membership order.
+    pub fn shard_ids(&self) -> Vec<usize> {
+        let st = self.inner.state.read().unwrap();
+        st.members.iter().map(|(id, _)| *id).collect()
+    }
+
+    /// The current epoch's router (diagnostics / tests: placement checks).
+    pub fn router(&self) -> Arc<ShardedConnector> {
+        self.inner.state.read().unwrap().current.clone()
+    }
+
+    /// Whether a migration is draining (an old epoch is still live).
+    pub fn migrating(&self) -> bool {
+        self.inner.state.read().unwrap().prev.is_some()
+    }
+
+    /// Counter snapshot.
+    pub fn metrics(&self) -> RebalanceSnapshot {
+        self.inner.metrics.snapshot()
+    }
+
+    /// Block until no migration is in flight. Returns false on timeout
+    /// (`None` waits forever).
+    pub fn wait_quiescent(&self, timeout: Option<Duration>) -> bool {
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let mut guard = self.inner.idle.lock().unwrap();
+        while self.migrating() {
+            let slice = match deadline {
+                None => Duration::from_millis(50),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return false;
+                    }
+                    (d - now).min(Duration::from_millis(50))
+                }
+            };
+            let (g, _) = self.inner.idle_cv.wait_timeout(guard, slice).unwrap();
+            guard = g;
+        }
+        true
+    }
+
+    /// Grow the fabric: add a backend under a fresh stable id and migrate
+    /// the ~1/N keys the ring remaps onto it. Returns once the migration
+    /// daemon is running (or immediately if nothing remapped); use
+    /// [`ElasticShards::wait_quiescent`] to block until it drains.
+    pub fn add_shard(
+        &self,
+        id: usize,
+        backend: Arc<dyn Connector>,
+    ) -> Result<()> {
+        self.rebalance(move |members| {
+            if members.iter().any(|(m, _)| *m == id) {
+                return Err(Error::Config(format!("shard id {id} already live")));
+            }
+            members.push((id, backend));
+            Ok(())
+        })
+    }
+
+    /// Shrink the fabric: retire a shard id, draining its keys onto the
+    /// survivors. The removed backend keeps serving reads until the
+    /// migration finishes, then drops out of the fabric.
+    pub fn remove_shard(&self, id: usize) -> Result<()> {
+        self.rebalance(move |members| {
+            let before = members.len();
+            members.retain(|(m, _)| *m != id);
+            if members.len() == before {
+                return Err(Error::Config(format!("shard id {id} not live")));
+            }
+            Ok(())
+        })
+    }
+
+    /// The shared membership-change path: flip epochs, compute the
+    /// remapped key delta, hand it to the migration daemon.
+    fn rebalance(
+        &self,
+        change: impl FnOnce(&mut ShardMembers) -> Result<()>,
+    ) -> Result<()> {
+        let inner = &self.inner;
+        // One membership change at a time, and never while a previous
+        // migration is still draining (epochs would have to chain).
+        let _admin = inner.admin.lock().unwrap();
+        self.wait_quiescent(None);
+
+        let (old_router, old_members) = {
+            let st = inner.state.read().unwrap();
+            (st.current.clone(), st.members.clone())
+        };
+        let mut members = old_members.clone();
+        change(&mut members)?;
+        if members.is_empty() {
+            return Err(Error::Config("elastic fabric needs >= 1 shard".into()));
+        }
+        let new_router =
+            Self::router_for(&members, inner.replicas, inner.vnodes)?;
+
+        // Flip epochs: from here writes land at the new placement and
+        // reads fall back through the old one.
+        let token;
+        {
+            let mut st = inner.state.write().unwrap();
+            st.prev = Some(PrevEpoch {
+                router: st.current.clone(),
+                members: st.members.clone(),
+            });
+            st.current = new_router.clone();
+            st.members = members;
+            token = inner.generation.fetch_add(1, Ordering::SeqCst) + 1;
+            st.migration_token = token;
+        }
+
+        // Migration plan: every key whose replica set changed, each
+        // enumerated exactly once (by its old primary). A shard that fails
+        // enumeration contributes nothing — its keys stay where they are,
+        // readable as long as it remains a member (module docs).
+        let mut planned: Vec<String> = Vec::new();
+        for (id, conn) in &old_members {
+            let Ok(keys) = list_keys_with_retry(conn.as_ref()) else {
+                continue;
+            };
+            for key in keys {
+                let old_set = old_router.replicas_for(&key);
+                if old_set.first() != Some(id) {
+                    continue;
+                }
+                if old_set != new_router.replicas_for(&key) {
+                    planned.push(key);
+                }
+            }
+        }
+        let m = &inner.metrics;
+        m.add(&m.keys_planned, planned.len() as u64);
+        if planned.is_empty() {
+            self.finalize_epoch(token);
+            return Ok(());
+        }
+
+        let batches: VecDeque<MigrationBatch> = planned
+            .chunks(MIGRATION_BATCH)
+            .map(|c| MigrationBatch { keys: c.to_vec(), attempts: 0 })
+            .collect();
+        let n_workers = MIGRATION_WORKERS.min(batches.len()).max(1);
+        let ctx = Arc::new(MigrationCtx {
+            token,
+            queue: Mutex::new(MigrationQueue { batches, in_flight: 0 }),
+            cv: Condvar::new(),
+            old_router,
+            new_router,
+            old_members: old_members.into_iter().collect(),
+        });
+        for w in 0..n_workers {
+            let this = self.clone();
+            let ctx = ctx.clone();
+            std::thread::Builder::new()
+                .name(format!("rebalance-{}-{w}", inner.name))
+                .spawn(move || this.worker_loop(ctx))
+                .expect("spawn rebalance worker");
+        }
+        Ok(())
+    }
+
+    /// Migration daemon body: drain the batch queue; whichever worker
+    /// observes it fully drained retires the old epoch.
+    fn worker_loop(&self, ctx: Arc<MigrationCtx>) {
+        loop {
+            let batch = {
+                let mut q = ctx.queue.lock().unwrap();
+                loop {
+                    if let Some(b) = q.batches.pop_front() {
+                        q.in_flight += 1;
+                        break Some(b);
+                    }
+                    if q.in_flight == 0 {
+                        break None;
+                    }
+                    // Another worker may still fail and re-enqueue.
+                    q = ctx.cv.wait(q).unwrap();
+                }
+            };
+            let Some(batch) = batch else {
+                self.finalize_epoch(ctx.token);
+                return;
+            };
+            // A panicking batch must not wedge the queue (in_flight would
+            // never drop and peers would wait forever): convert it into an
+            // ordinary batch failure and let the retry path handle it.
+            let result = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| {
+                    self.migrate_batch(&ctx, &batch.keys)
+                }),
+            )
+            .unwrap_or_else(|_| {
+                Err(Error::Connector("migration batch panicked".into()))
+            });
+            let m = &self.inner.metrics;
+            let mut q = ctx.queue.lock().unwrap();
+            q.in_flight -= 1;
+            if result.is_err() {
+                if batch.attempts + 1 < MAX_BATCH_ATTEMPTS {
+                    m.add(&m.batch_retries, 1);
+                    q.batches.push_back(MigrationBatch {
+                        keys: batch.keys,
+                        attempts: batch.attempts + 1,
+                    });
+                } else {
+                    // Abandoned: the keys stay at their old placement
+                    // (module docs spell out the consequences).
+                    m.add(&m.keys_failed, batch.keys.len() as u64);
+                }
+            }
+            ctx.cv.notify_all();
+        }
+    }
+
+    /// Move one batch: read from the old placement, write to the new one,
+    /// then retire the copies on shards that left the replica set.
+    fn migrate_batch(&self, ctx: &MigrationCtx, keys: &[String]) -> Result<()> {
+        let blobs = ctx.old_router.get_many(keys)?;
+        let mut items: Vec<(String, Vec<u8>)> = Vec::new();
+        let mut bytes = 0u64;
+        let mut skipped = 0u64;
+        for (key, blob) in keys.iter().zip(blobs) {
+            match blob {
+                Some(b) => {
+                    bytes += b.len() as u64;
+                    items.push((key.clone(), b.to_vec()));
+                }
+                // Evicted concurrently, or a fresh key that was planned
+                // but only ever lived at the new placement.
+                None => skipped += 1,
+            }
+        }
+        let migrated = items.len() as u64;
+        if !items.is_empty() {
+            ctx.new_router.put_many(items)?;
+        }
+        // Stale-copy sweep, batched per retired shard. Best-effort: a
+        // failure leaves a redundant copy behind (wasted bytes, never a
+        // wrong read — lookups go to the new placement first).
+        let mut stale: HashMap<usize, Vec<String>> = HashMap::new();
+        for key in keys {
+            let new_set = ctx.new_router.replicas_for(key);
+            for id in ctx.old_router.replicas_for(key) {
+                if !new_set.contains(&id) {
+                    stale.entry(id).or_default().push(key.clone());
+                }
+            }
+        }
+        for (id, batch) in stale {
+            if let Some(conn) = ctx.old_members.get(&id) {
+                let _ = conn.delete_many(&batch);
+            }
+        }
+        let m = &self.inner.metrics;
+        m.add(&m.keys_migrated, migrated);
+        m.add(&m.bytes_moved, bytes);
+        m.add(&m.keys_skipped, skipped);
+        Ok(())
+    }
+
+    /// Retire the old epoch once its migration drained. Token-guarded so a
+    /// straggler from an older migration cannot retire a newer epoch.
+    fn finalize_epoch(&self, token: u64) {
+        let retired = {
+            let mut st = self.inner.state.write().unwrap();
+            if st.migration_token == token { st.prev.take() } else { None }
+        };
+        if retired.is_some() {
+            let m = &self.inner.metrics;
+            m.add(&m.rebalances, 1);
+        }
+        let _g = self.inner.idle.lock().unwrap();
+        self.inner.idle_cv.notify_all();
+    }
+
+    /// Epoch snapshot for the read/write paths: the lock is held only for
+    /// the two Arc clones, never across backend I/O.
+    fn snapshot(
+        &self,
+    ) -> (Arc<ShardedConnector>, Option<Arc<ShardedConnector>>) {
+        let st = self.inner.state.read().unwrap();
+        (st.current.clone(), st.prev.as_ref().map(|p| p.router.clone()))
+    }
+
+    /// Whether the current epoch moved on since `cur` was snapshotted. A
+    /// read that misses after racing a flip (snapshot taken just before,
+    /// probes landing after the drain) retries on the fresh epoch; a miss
+    /// on a stable epoch is a genuine miss.
+    fn epoch_changed(&self, cur: &Arc<ShardedConnector>) -> bool {
+        !Arc::ptr_eq(&self.inner.state.read().unwrap().current, cur)
+    }
+
+    /// One read-through pass for `get` against a fixed epoch pair.
+    fn get_via(
+        &self,
+        cur: &Arc<ShardedConnector>,
+        prev: Option<&Arc<ShardedConnector>>,
+        key: &str,
+    ) -> Result<Option<Blob>> {
+        let first = cur.get(key);
+        let Some(prev) = prev else { return first };
+        if let Ok(Some(ref b)) = first {
+            return Ok(Some(b.clone()));
+        }
+        // Read-through: the key may not have been copied yet.
+        let m = &self.inner.metrics;
+        m.add(&m.dual_reads, 1);
+        match prev.get(key) {
+            Ok(Some(b)) => {
+                m.add(&m.dual_read_hits, 1);
+                Ok(Some(b))
+            }
+            prev_res => {
+                // Copy/delete race: the daemon may have landed the key at
+                // its new placement between our two probes.
+                if let Some(b) = cur.get(key)? {
+                    return Ok(Some(b));
+                }
+                first?;
+                prev_res
+            }
+        }
+    }
+
+    /// One read-through pass for `get_many` (same order as [`get_via`]:
+    /// new placement, old epoch, new placement again).
+    fn get_many_via(
+        &self,
+        cur: &Arc<ShardedConnector>,
+        prev: Option<&Arc<ShardedConnector>>,
+        keys: &[String],
+    ) -> Result<Vec<Option<Blob>>> {
+        let mut out = cur.get_many(keys)?;
+        let Some(prev) = prev else { return Ok(out) };
+        let miss_idx: Vec<usize> = out
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| b.is_none().then_some(i))
+            .collect();
+        if miss_idx.is_empty() {
+            return Ok(out);
+        }
+        let m = &self.inner.metrics;
+        m.add(&m.dual_reads, miss_idx.len() as u64);
+        let miss_keys: Vec<String> =
+            miss_idx.iter().map(|&i| keys[i].clone()).collect();
+        let mut still: Vec<usize> = Vec::new();
+        for (&i, blob) in miss_idx.iter().zip(prev.get_many(&miss_keys)?) {
+            match blob {
+                Some(b) => {
+                    m.add(&m.dual_read_hits, 1);
+                    out[i] = Some(b);
+                }
+                None => still.push(i),
+            }
+        }
+        if !still.is_empty() {
+            let still_keys: Vec<String> =
+                still.iter().map(|&i| keys[i].clone()).collect();
+            for (&i, blob) in still.iter().zip(cur.get_many(&still_keys)?) {
+                out[i] = blob;
+            }
+        }
+        Ok(out)
+    }
+
+    /// One read-through pass for `exists` (same probe order as `get_via`).
+    fn exists_via(
+        &self,
+        cur: &Arc<ShardedConnector>,
+        prev: Option<&Arc<ShardedConnector>>,
+        key: &str,
+    ) -> Result<bool> {
+        if cur.exists(key)? {
+            return Ok(true);
+        }
+        let Some(prev) = prev else { return Ok(false) };
+        let m = &self.inner.metrics;
+        m.add(&m.dual_reads, 1);
+        if prev.exists(key)? {
+            m.add(&m.dual_read_hits, 1);
+            return Ok(true);
+        }
+        cur.exists(key)
+    }
+
+    /// One read-through pass for `exists_many`.
+    fn exists_many_via(
+        &self,
+        cur: &Arc<ShardedConnector>,
+        prev: Option<&Arc<ShardedConnector>>,
+        keys: &[String],
+    ) -> Result<Vec<bool>> {
+        let mut out = cur.exists_many(keys)?;
+        let Some(prev) = prev else { return Ok(out) };
+        let miss_idx: Vec<usize> = out
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &hit)| (!hit).then_some(i))
+            .collect();
+        if miss_idx.is_empty() {
+            return Ok(out);
+        }
+        let m = &self.inner.metrics;
+        m.add(&m.dual_reads, miss_idx.len() as u64);
+        let miss_keys: Vec<String> =
+            miss_idx.iter().map(|&i| keys[i].clone()).collect();
+        let mut still: Vec<usize> = Vec::new();
+        for (&i, hit) in miss_idx.iter().zip(prev.exists_many(&miss_keys)?) {
+            if hit {
+                m.add(&m.dual_read_hits, 1);
+                out[i] = true;
+            } else {
+                still.push(i);
+            }
+        }
+        if !still.is_empty() {
+            let still_keys: Vec<String> =
+                still.iter().map(|&i| keys[i].clone()).collect();
+            for (&i, hit) in still.iter().zip(cur.exists_many(&still_keys)?) {
+                out[i] = hit;
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn list_keys_with_retry(conn: &dyn Connector) -> Result<Vec<String>> {
+    let mut last = None;
+    for _ in 0..3 {
+        match conn.list_keys() {
+            Ok(keys) => return Ok(keys),
+            Err(e) => {
+                last = Some(e);
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+    Err(last.expect("retry loop ran"))
+}
+
+impl Connector for ElasticShards {
+    fn desc(&self) -> ConnectorDesc {
+        let st = self.inner.state.read().unwrap();
+        ConnectorDesc::Elastic {
+            name: self.inner.name.clone(),
+            generation: self.inner.generation.load(Ordering::SeqCst),
+            shard_ids: st.members.iter().map(|(id, _)| *id as u64).collect(),
+            shards: st.members.iter().map(|(_, c)| c.desc()).collect(),
+            replicas: self.inner.replicas as u64,
+            vnodes: self.inner.vnodes as u64,
+        }
+    }
+
+    fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
+        // Writes always land at the newest placement; the daemon never has
+        // to chase them.
+        let mut used = {
+            let (cur, _) = self.snapshot();
+            cur.put(key, data)?;
+            cur
+        };
+        // Epoch-stability retry (write half of the `get` retry): a write
+        // that raced a flip may have landed at a placement that is already
+        // draining — or drained, if the migration plan missed it. Re-home
+        // it through the fresh epoch, reading back from the epoch we wrote
+        // (still alive via our Arc). A `None` read-back means the daemon
+        // itself already moved the key.
+        for _ in 0..4 {
+            if !self.epoch_changed(&used) {
+                return Ok(());
+            }
+            let blob = used.get(key)?;
+            let (cur, _) = self.snapshot();
+            if let Some(b) = blob {
+                cur.put(key, b.to_vec())?;
+            }
+            used = cur;
+        }
+        Ok(())
+    }
+
+    fn put_many(&self, items: Vec<(String, Vec<u8>)>) -> Result<()> {
+        let keys: Vec<String> = items.iter().map(|(k, _)| k.clone()).collect();
+        let mut used = {
+            let (cur, _) = self.snapshot();
+            cur.put_many(items)?;
+            cur
+        };
+        // Same re-homing retry as `put`, batched.
+        for _ in 0..4 {
+            if !self.epoch_changed(&used) {
+                return Ok(());
+            }
+            let blobs = used.get_many(&keys)?;
+            let rehome: Vec<(String, Vec<u8>)> = keys
+                .iter()
+                .zip(blobs)
+                .filter_map(|(k, b)| b.map(|b| (k.clone(), b.to_vec())))
+                .collect();
+            let (cur, _) = self.snapshot();
+            if !rehome.is_empty() {
+                cur.put_many(rehome)?;
+            }
+            used = cur;
+        }
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Option<Blob>> {
+        // Bounded epoch-stability retry: a miss that raced a concurrent
+        // flip (snapshot before, probes after the drain) re-reads on the
+        // fresh epoch; a miss on a stable epoch is genuine.
+        for _ in 0..4 {
+            let (cur, prev) = self.snapshot();
+            let res = self.get_via(&cur, prev.as_ref(), key);
+            match &res {
+                Ok(None) if self.epoch_changed(&cur) => continue,
+                _ => return res,
+            }
+        }
+        let (cur, prev) = self.snapshot();
+        self.get_via(&cur, prev.as_ref(), key)
+    }
+
+    fn get_many(&self, keys: &[String]) -> Result<Vec<Option<Blob>>> {
+        let (cur, prev) = self.snapshot();
+        let mut out = self.get_many_via(&cur, prev.as_ref(), keys)?;
+        let mut used = cur;
+        // Same epoch-stability retry as `get`, re-probing only the misses.
+        for _ in 0..4 {
+            let miss_idx: Vec<usize> = out
+                .iter()
+                .enumerate()
+                .filter_map(|(i, b)| b.is_none().then_some(i))
+                .collect();
+            if miss_idx.is_empty() || !self.epoch_changed(&used) {
+                break;
+            }
+            let miss_keys: Vec<String> =
+                miss_idx.iter().map(|&i| keys[i].clone()).collect();
+            let (cur, prev) = self.snapshot();
+            let filled = self.get_many_via(&cur, prev.as_ref(), &miss_keys)?;
+            for (&i, blob) in miss_idx.iter().zip(filled) {
+                out[i] = blob;
+            }
+            used = cur;
+        }
+        Ok(out)
+    }
+
+    fn evict(&self, key: &str) -> Result<()> {
+        // Delete at both placements during a migration, so an un-copied
+        // old replica cannot outlive the eviction.
+        let (cur, prev) = self.snapshot();
+        let first = cur.evict(key);
+        match prev {
+            Some(prev) => {
+                let second = prev.evict(key);
+                first?;
+                second
+            }
+            None => first,
+        }
+    }
+
+    fn delete_many(&self, keys: &[String]) -> Result<()> {
+        let (cur, prev) = self.snapshot();
+        let first = cur.delete_many(keys);
+        match prev {
+            Some(prev) => {
+                let second = prev.delete_many(keys);
+                first?;
+                second
+            }
+            None => first,
+        }
+    }
+
+    fn exists(&self, key: &str) -> Result<bool> {
+        // Same epoch-stability retry as `get`.
+        for _ in 0..4 {
+            let (cur, prev) = self.snapshot();
+            let res = self.exists_via(&cur, prev.as_ref(), key);
+            match &res {
+                Ok(false) if self.epoch_changed(&cur) => continue,
+                _ => return res,
+            }
+        }
+        let (cur, prev) = self.snapshot();
+        self.exists_via(&cur, prev.as_ref(), key)
+    }
+
+    fn exists_many(&self, keys: &[String]) -> Result<Vec<bool>> {
+        let (cur, prev) = self.snapshot();
+        let mut out = self.exists_many_via(&cur, prev.as_ref(), keys)?;
+        let mut used = cur;
+        for _ in 0..4 {
+            let miss_idx: Vec<usize> = out
+                .iter()
+                .enumerate()
+                .filter_map(|(i, &hit)| (!hit).then_some(i))
+                .collect();
+            if miss_idx.is_empty() || !self.epoch_changed(&used) {
+                break;
+            }
+            let miss_keys: Vec<String> =
+                miss_idx.iter().map(|&i| keys[i].clone()).collect();
+            let (cur, prev) = self.snapshot();
+            let filled =
+                self.exists_many_via(&cur, prev.as_ref(), &miss_keys)?;
+            for (&i, hit) in miss_idx.iter().zip(filled) {
+                out[i] = hit;
+            }
+            used = cur;
+        }
+        Ok(out)
+    }
+
+    fn list_keys(&self) -> Result<Vec<String>> {
+        // Union over current members plus any epoch still draining.
+        let (members, prev_members) = {
+            let st = self.inner.state.read().unwrap();
+            (
+                st.members.clone(),
+                st.prev.as_ref().map(|p| p.members.clone()).unwrap_or_default(),
+            )
+        };
+        let live: HashSet<usize> = members.iter().map(|(id, _)| *id).collect();
+        let mut all = Vec::new();
+        for (_, conn) in &members {
+            all.extend(conn.list_keys()?);
+        }
+        for (id, conn) in &prev_members {
+            if !live.contains(id) {
+                all.extend(conn.list_keys()?);
+            }
+        }
+        all.sort_unstable();
+        all.dedup();
+        Ok(all)
+    }
+
+    fn len(&self) -> Result<usize> {
+        // Copies count once each (fabric convention); a draining epoch
+        // contributes only the members that already left the fabric.
+        let (members, prev_members) = {
+            let st = self.inner.state.read().unwrap();
+            (
+                st.members.clone(),
+                st.prev.as_ref().map(|p| p.members.clone()).unwrap_or_default(),
+            )
+        };
+        let live: HashSet<usize> = members.iter().map(|(id, _)| *id).collect();
+        let mut total = 0;
+        for (_, conn) in &members {
+            total += conn.len()?;
+        }
+        for (id, conn) in &prev_members {
+            if !live.contains(id) {
+                total += conn.len()?;
+            }
+        }
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::MemoryConnector;
+
+    fn unique_name(tag: &str) -> String {
+        use std::sync::atomic::AtomicU64;
+        static NEXT: AtomicU64 = AtomicU64::new(0);
+        format!("el-{tag}-{}", NEXT.fetch_add(1, Ordering::Relaxed))
+    }
+
+    fn members(n: usize) -> ShardMembers {
+        (0..n).map(|id| (id, MemoryConnector::new())).collect()
+    }
+
+    fn put_keys(e: &ElasticShards, n: usize) -> Vec<String> {
+        (0..n)
+            .map(|i| {
+                let key = format!("obj-{i:04}");
+                e.put(&key, vec![i as u8; 32]).unwrap();
+                key
+            })
+            .collect()
+    }
+
+    #[test]
+    fn add_shard_migrates_only_remapped_keys() {
+        let e =
+            ElasticShards::new(&unique_name("grow"), members(4), 1, 64).unwrap();
+        let keys = put_keys(&e, 400);
+        let extra = MemoryConnector::new();
+        e.add_shard(4, extra.clone()).unwrap();
+        assert!(e.wait_quiescent(Some(Duration::from_secs(30))));
+        assert!(!e.migrating());
+        assert_eq!(e.generation(), 1);
+        assert_eq!(e.shard_ids(), vec![0, 1, 2, 3, 4]);
+
+        let m = e.metrics();
+        assert_eq!(m.rebalances, 1);
+        assert!(m.keys_migrated > 0, "nothing migrated");
+        assert!(
+            m.keys_migrated < 200,
+            "{} of 400 keys moved — not ~1/5",
+            m.keys_migrated
+        );
+        assert!(m.bytes_moved >= m.keys_migrated * 32);
+        // The new shard holds exactly the migrated keys.
+        assert_eq!(extra.len().unwrap() as u64, m.keys_migrated);
+
+        // Every key readable, every key at its new primary.
+        let router = e.router();
+        for key in &keys {
+            assert_eq!(
+                e.get(key).unwrap().map(|b| b.len()),
+                Some(32),
+                "key {key} lost by the rebalance"
+            );
+            assert!(router.get(key).unwrap().is_some(), "{key} not at new placement");
+        }
+        // No stale copies left behind: one copy per key fabric-wide.
+        assert_eq!(e.len().unwrap(), 400);
+    }
+
+    #[test]
+    fn remove_shard_drains_it_completely() {
+        let e = ElasticShards::new(&unique_name("shrink"), members(3), 1, 64)
+            .unwrap();
+        let victim: Arc<dyn Connector> = {
+            let st = e.inner.state.read().unwrap();
+            st.members[1].1.clone()
+        };
+        let keys = put_keys(&e, 200);
+        let resident_before = victim.len().unwrap();
+        assert!(resident_before > 0, "victim shard got no keys");
+
+        e.remove_shard(1).unwrap();
+        assert!(e.wait_quiescent(Some(Duration::from_secs(30))));
+        assert_eq!(e.shard_ids(), vec![0, 2]);
+        assert_eq!(victim.len().unwrap(), 0, "removed shard not drained");
+        for key in &keys {
+            assert!(e.get(key).unwrap().is_some(), "key {key} lost on shrink");
+        }
+        assert_eq!(e.len().unwrap(), 200);
+        let m = e.metrics();
+        assert_eq!(m.keys_migrated, resident_before as u64);
+    }
+
+    #[test]
+    fn empty_fabric_rebalance_finalizes_inline() {
+        let e =
+            ElasticShards::new(&unique_name("empty"), members(2), 1, 32).unwrap();
+        e.add_shard(2, MemoryConnector::new()).unwrap();
+        // No keys -> no plan -> already quiescent.
+        assert!(!e.migrating());
+        assert_eq!(e.generation(), 1);
+        assert_eq!(e.metrics().rebalances, 1);
+        assert_eq!(e.metrics().keys_planned, 0);
+    }
+
+    #[test]
+    fn membership_validation() {
+        let e =
+            ElasticShards::new(&unique_name("valid"), members(2), 1, 32).unwrap();
+        assert!(e.add_shard(0, MemoryConnector::new()).is_err()); // dup id
+        assert!(e.remove_shard(9).is_err()); // unknown id
+        e.remove_shard(0).unwrap();
+        e.wait_quiescent(None);
+        assert!(e.remove_shard(1).is_err()); // would empty the fabric
+        // Name collisions are rejected until the name is unregistered.
+        let name = unique_name("collide");
+        let _a = ElasticShards::new(&name, members(1), 1, 32).unwrap();
+        assert!(ElasticShards::new(&name, members(1), 1, 32).is_err());
+        assert!(ElasticShards::unregister(&name));
+        assert!(!ElasticShards::unregister(&name));
+        let _b = ElasticShards::new(&name, members(1), 1, 32).unwrap();
+    }
+
+    #[test]
+    fn desc_attaches_to_live_control_plane() {
+        let name = unique_name("attach");
+        let e = ElasticShards::new(&name, members(3), 1, 64).unwrap();
+        let keys = put_keys(&e, 60);
+        // Serialize the generation-0 descriptor (a proxy minted now would
+        // carry exactly these bytes) ...
+        use crate::codec::{Decode, Encode};
+        let stale = e.desc().to_bytes();
+        // ... rebalance ...
+        e.add_shard(3, MemoryConnector::new()).unwrap();
+        assert!(e.wait_quiescent(Some(Duration::from_secs(30))));
+        // ... and the stale descriptor still resolves every key, because
+        // connect() re-attaches to the live control plane.
+        let decoded = ConnectorDesc::from_bytes(&stale).unwrap();
+        assert!(matches!(
+            &decoded,
+            ConnectorDesc::Elastic { generation: 0, .. }
+        ));
+        let conn = decoded.connect().unwrap();
+        for key in &keys {
+            assert!(
+                conn.get(key).unwrap().is_some(),
+                "stale desc lost key {key} after rebalance"
+            );
+        }
+        // The attached handle reports the live generation, not the stale one.
+        match conn.desc() {
+            ConnectorDesc::Elastic { generation, shards, .. } => {
+                assert_eq!(generation, 1);
+                assert_eq!(shards.len(), 4);
+            }
+            other => panic!("unexpected desc {other:?}"),
+        }
+    }
+
+    #[test]
+    fn replicated_fabric_survives_rebalance() {
+        let e = ElasticShards::new(&unique_name("repl"), members(3), 2, 64)
+            .unwrap();
+        let keys = put_keys(&e, 120);
+        assert_eq!(e.len().unwrap(), 240); // R=2 copies
+        e.add_shard(3, MemoryConnector::new()).unwrap();
+        assert!(e.wait_quiescent(Some(Duration::from_secs(30))));
+        for key in &keys {
+            assert!(e.get(key).unwrap().is_some());
+        }
+        // Replica sets converged: exactly two copies per key, no strays.
+        assert_eq!(e.len().unwrap(), 240);
+        let flags = e.exists_many(&keys).unwrap();
+        assert!(flags.iter().all(|&b| b));
+    }
+}

@@ -108,6 +108,15 @@ impl HashRing {
         self.replica_walk(key).take(r.max(1)).collect()
     }
 
+    /// Whether `key`'s replica set differs between this ring (the old
+    /// placement) and `new`. The elastic rebalancer filters every resident
+    /// key through this to compute the migration delta — consistent
+    /// hashing guarantees only ~1/N of keys answer true after a
+    /// single-shard membership change.
+    pub fn remapped(&self, new: &HashRing, key: &str, replicas: usize) -> bool {
+        self.replicas_for(key, replicas) != new.replicas_for(key, replicas)
+    }
+
     /// Clockwise walk from the key's hash yielding each distinct shard
     /// once (the classic successor-list replica placement).
     fn replica_walk(&self, key: &str) -> impl Iterator<Item = usize> + '_ {
@@ -264,6 +273,36 @@ mod tests {
             smaller.remove_shard(victim);
             smaller.shard_for(k) == primary
         });
+    }
+
+    #[test]
+    fn remapped_matches_placement_delta() {
+        let before = HashRing::new(4, 128);
+        let mut after = before.clone();
+        after.add_shard(4);
+        let ks = keys(2_000);
+        let mut remapped = 0;
+        for k in &ks {
+            let moved = before.remapped(&after, k, 1);
+            assert_eq!(
+                moved,
+                before.shard_for(k) != after.shard_for(k),
+                "remapped() disagrees with shard_for delta on {k}"
+            );
+            if moved {
+                remapped += 1;
+            }
+        }
+        // ~1/5 of keys move when growing 4 -> 5.
+        let frac = remapped as f64 / ks.len() as f64;
+        assert!(
+            frac > 0.05 && frac < 0.40,
+            "remapped fraction {frac:.3} outside consistent-hash locality"
+        );
+        // Identical rings never remap.
+        for k in ks.iter().take(100) {
+            assert!(!before.remapped(&before.clone(), k, 2));
+        }
     }
 
     #[test]

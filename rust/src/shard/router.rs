@@ -77,6 +77,11 @@ type ShardResults = Vec<(usize, Result<Vec<Option<Blob>>>)>;
 /// Consistent-hash routing connector over N backends.
 pub struct ShardedConnector {
     shards: Vec<Arc<dyn Connector>>,
+    /// Stable ring id of each backend (`ids[i]` owns ring id for
+    /// `shards[i]`). Identity for [`ShardedConnector::new`]; arbitrary for
+    /// [`ShardedConnector::with_shard_ids`], which is what lets the
+    /// elastic fabric keep ids stable across membership changes.
+    ids: Vec<usize>,
     ring: HashRing,
     replicas: usize,
     vnodes: usize,
@@ -94,13 +99,46 @@ impl ShardedConnector {
         replicas: usize,
         vnodes: usize,
     ) -> Result<ShardedConnector> {
+        let ids = (0..shards.len()).collect();
+        Self::with_shard_ids(ids, shards, replicas, vnodes)
+    }
+
+    /// Fabric over backends with explicit stable ring ids (`ids[i]` is the
+    /// ring id of `shards[i]`). Ids survive membership changes, which is
+    /// what gives the elastic fabric its remapping locality: rebuilding
+    /// the router after add/remove moves only the ~1/N remapped keys.
+    ///
+    /// Caveat: [`ConnectorDesc::Sharded`] does not carry ids, so a
+    /// non-identity router's own descriptor round-trips to an
+    /// identity-ring fabric. The elastic layer serializes membership
+    /// through its generation-aware `ConnectorDesc::Elastic` instead.
+    pub fn with_shard_ids(
+        ids: Vec<usize>,
+        shards: Vec<Arc<dyn Connector>>,
+        replicas: usize,
+        vnodes: usize,
+    ) -> Result<ShardedConnector> {
         if shards.is_empty() {
             return Err(Error::Config("sharded connector needs >= 1 shard".into()));
+        }
+        if ids.len() != shards.len() {
+            return Err(Error::Config(format!(
+                "{} shard ids for {} backends",
+                ids.len(),
+                shards.len()
+            )));
+        }
+        let mut uniq = ids.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        if uniq.len() != ids.len() {
+            return Err(Error::Config("duplicate shard ids".into()));
         }
         let vnodes = if vnodes == 0 { DEFAULT_VNODES } else { vnodes };
         let replicas = replicas.clamp(1, shards.len());
         Ok(ShardedConnector {
-            ring: HashRing::new(shards.len(), vnodes),
+            ring: HashRing::with_shards(ids.clone(), vnodes),
+            ids,
             shards,
             replicas,
             vnodes,
@@ -109,12 +147,13 @@ impl ShardedConnector {
         })
     }
 
-    /// Primary shard index for a key (tests / diagnostics).
+    /// Primary shard ring id for a key (tests / diagnostics). Equals the
+    /// backend position for identity-id fabrics ([`ShardedConnector::new`]).
     pub fn shard_for(&self, key: &str) -> usize {
         self.ring.shard_for(key)
     }
 
-    /// The key's replica set, primary first.
+    /// The key's replica set as ring ids, primary first.
     pub fn replicas_for(&self, key: &str) -> Vec<usize> {
         self.ring.replicas_for(key, self.replicas)
     }
@@ -122,6 +161,29 @@ impl ShardedConnector {
     /// Number of backends.
     pub fn shard_count(&self) -> usize {
         self.shards.len()
+    }
+
+    /// The stable ring ids, aligned with the backends.
+    pub fn shard_ids(&self) -> &[usize] {
+        &self.ids
+    }
+
+    /// Backend position of a ring id.
+    fn idx(&self, id: usize) -> usize {
+        // Fabrics hold a handful of shards; a linear scan beats a map.
+        self.ids
+            .iter()
+            .position(|&s| s == id)
+            .expect("ring id not in fabric")
+    }
+
+    /// The key's replica set as backend positions, primary first.
+    fn replica_idxs(&self, key: &str) -> Vec<usize> {
+        self.ring
+            .replicas_for(key, self.replicas)
+            .into_iter()
+            .map(|id| self.idx(id))
+            .collect()
     }
 
     /// Reads that were served by a fallback replica so far.
@@ -165,6 +227,41 @@ impl ShardedConnector {
                 .collect()
         })
     }
+
+    /// Fan a batched existence probe out to every shard with a non-empty
+    /// index group, in parallel (the `exists_many` twin of
+    /// [`ShardedConnector::fan_out_get`]).
+    fn fan_out_exists(
+        &self,
+        groups: &[Vec<usize>],
+        keys: &[String],
+    ) -> Vec<(usize, Result<Vec<bool>>)> {
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (shard, group) in groups.iter().enumerate() {
+                if group.is_empty() {
+                    continue;
+                }
+                let conn = self.shards[shard].clone();
+                let batch: Vec<String> =
+                    group.iter().map(|&i| keys[i].clone()).collect();
+                handles.push((shard, s.spawn(move || conn.exists_many(&batch))));
+            }
+            handles
+                .into_iter()
+                .map(|(shard, h)| {
+                    (
+                        shard,
+                        h.join().unwrap_or_else(|_| {
+                            Err(Error::Connector(
+                                "shard exists_many panicked".into(),
+                            ))
+                        }),
+                    )
+                })
+                .collect()
+        })
+    }
 }
 
 impl Connector for ShardedConnector {
@@ -177,7 +274,7 @@ impl Connector for ShardedConnector {
     }
 
     fn put(&self, key: &str, mut data: Vec<u8>) -> Result<()> {
-        let reps = self.ring.replicas_for(key, self.replicas);
+        let reps = self.replica_idxs(key);
         let mut stored = 0usize;
         let mut last_err = None;
         for (ri, &shard) in reps.iter().enumerate() {
@@ -207,7 +304,7 @@ impl Connector for ShardedConnector {
     }
 
     fn get(&self, key: &str) -> Result<Option<Blob>> {
-        let reps = self.ring.replicas_for(key, self.replicas);
+        let reps = self.replica_idxs(key);
         let mut healthy_misses = 0usize;
         let mut last_err = None;
         for (attempt, &shard) in reps.iter().enumerate() {
@@ -242,7 +339,7 @@ impl Connector for ShardedConnector {
         let mut batches: Vec<Vec<(String, Vec<u8>)>> = vec![Vec::new(); n];
         let mut owners: Vec<(String, Vec<usize>)> = Vec::with_capacity(items.len());
         for (key, data) in items {
-            let reps = self.ring.replicas_for(&key, self.replicas);
+            let reps = self.replica_idxs(&key);
             for &shard in &reps {
                 batches[shard].push((key.clone(), data.clone()));
             }
@@ -292,7 +389,7 @@ impl Connector for ShardedConnector {
         let n = self.shards.len();
         let mut groups: Vec<Vec<usize>> = vec![Vec::new(); n];
         for (i, key) in keys.iter().enumerate() {
-            groups[self.ring.shard_for(key)].push(i);
+            groups[self.idx(self.ring.shard_for(key))].push(i);
         }
         let mut out: Vec<Option<Blob>> = vec![None; keys.len()];
         let mut healthy_miss = vec![false; keys.len()];
@@ -331,8 +428,7 @@ impl Connector for ShardedConnector {
         while !pending.is_empty() && depth < self.replicas {
             let mut round_groups: Vec<Vec<usize>> = vec![Vec::new(); n];
             for &i in &pending {
-                let shard = self.ring.replicas_for(&keys[i], self.replicas)[depth];
-                round_groups[shard].push(i);
+                round_groups[self.replica_idxs(&keys[i])[depth]].push(i);
             }
             let mut next_pending = Vec::new();
             for (shard, res) in self.fan_out_get(&round_groups, keys) {
@@ -371,7 +467,7 @@ impl Connector for ShardedConnector {
     }
 
     fn evict(&self, key: &str) -> Result<()> {
-        let reps = self.ring.replicas_for(key, self.replicas);
+        let reps = self.replica_idxs(key);
         let mut any_ok = false;
         let mut last_err = None;
         for &shard in &reps {
@@ -396,7 +492,7 @@ impl Connector for ShardedConnector {
         let mut batches: Vec<Vec<String>> = vec![Vec::new(); n];
         let mut owners: Vec<Vec<usize>> = Vec::with_capacity(keys.len());
         for key in keys {
-            let reps = self.ring.replicas_for(key, self.replicas);
+            let reps = self.replica_idxs(key);
             for &shard in &reps {
                 batches[shard].push(key.clone());
             }
@@ -437,7 +533,7 @@ impl Connector for ShardedConnector {
     }
 
     fn exists(&self, key: &str) -> Result<bool> {
-        let reps = self.ring.replicas_for(key, self.replicas);
+        let reps = self.replica_idxs(key);
         let mut healthy = 0usize;
         let mut last_err = None;
         for &shard in &reps {
@@ -451,6 +547,66 @@ impl Connector for ShardedConnector {
             Some(e) if healthy == 0 => Err(e),
             _ => Ok(false),
         }
+    }
+
+    fn exists_many(&self, keys: &[String]) -> Result<Vec<bool>> {
+        if keys.is_empty() {
+            return Ok(Vec::new());
+        }
+        // Same shape as `get_many`: one parallel fan-out per replica rank,
+        // with `exists` semantics per key — true once any replica answers
+        // true, false on an all-healthy miss, error only when every
+        // replica of some key is unreachable.
+        let n = self.shards.len();
+        let mut out = vec![false; keys.len()];
+        let mut healthy = vec![false; keys.len()];
+        let mut pending: Vec<usize> = (0..keys.len()).collect();
+        let mut last_err: Option<Error> = None;
+        let mut depth = 0;
+        while !pending.is_empty() && depth < self.replicas {
+            let mut groups: Vec<Vec<usize>> = vec![Vec::new(); n];
+            for &i in &pending {
+                groups[self.replica_idxs(&keys[i])[depth]].push(i);
+            }
+            let mut next_pending = Vec::new();
+            for (shard, res) in self.fan_out_exists(&groups, keys) {
+                match res {
+                    Ok(flags) => {
+                        for (&i, hit) in groups[shard].iter().zip(flags) {
+                            if hit {
+                                out[i] = true;
+                            } else {
+                                healthy[i] = true;
+                                next_pending.push(i);
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        next_pending.extend(groups[shard].iter().copied());
+                        last_err = Some(e);
+                    }
+                }
+            }
+            pending = next_pending;
+            depth += 1;
+        }
+        if pending.iter().any(|&i| !healthy[i]) {
+            if let Some(e) = last_err {
+                return Err(e);
+            }
+        }
+        Ok(out)
+    }
+
+    fn list_keys(&self) -> Result<Vec<String>> {
+        // Union over all backends; replicated keys dedupe to one entry.
+        let mut all = Vec::new();
+        for shard in &self.shards {
+            all.extend(shard.list_keys()?);
+        }
+        all.sort_unstable();
+        all.dedup();
+        Ok(all)
     }
 
     fn len(&self) -> Result<usize> {
@@ -673,6 +829,107 @@ mod tests {
             b.set_down(true);
         }
         assert!(router.delete_many(&keys).is_err());
+    }
+
+    #[test]
+    fn exists_many_spans_shards_with_replica_fallback() {
+        let (router, _b) = fabric(4, 1);
+        let items: Vec<(String, Vec<u8>)> =
+            (0..24).map(|i| (format!("em-{i}"), vec![i as u8])).collect();
+        router.put_many(items).unwrap();
+        let mut keys: Vec<String> = (0..24).map(|i| format!("em-{i}")).collect();
+        keys.push("ghost".into());
+        let got = router.exists_many(&keys).unwrap();
+        assert!(got[..24].iter().all(|&b| b), "resident key reported absent");
+        assert!(!got[24], "ghost key reported present");
+        assert_eq!(router.exists_many(&[]).unwrap(), Vec::<bool>::new());
+
+        // Probe survives a dead primary when replicated; an all-dead
+        // replica set surfaces the error.
+        let backends: Vec<Arc<FlakyConnector>> = (0..3)
+            .map(|_| FlakyConnector::wrap(MemoryConnector::new()))
+            .collect();
+        let as_conns: Vec<Arc<dyn Connector>> = backends
+            .iter()
+            .map(|b| b.clone() as Arc<dyn Connector>)
+            .collect();
+        let router = ShardedConnector::new(as_conns, 2, 64).unwrap();
+        router.put("k", vec![1]).unwrap();
+        let reps = router.replicas_for("k");
+        backends[reps[0]].set_down(true);
+        assert_eq!(router.exists_many(&["k".into()]).unwrap(), vec![true]);
+        backends[reps[1]].set_down(true);
+        assert!(router.exists_many(&["k".into()]).is_err());
+    }
+
+    #[test]
+    fn list_keys_unions_replicated_shards() {
+        let (router, _b) = fabric(3, 2);
+        let items: Vec<(String, Vec<u8>)> =
+            (0..12).map(|i| (format!("lk-{i}"), vec![i as u8])).collect();
+        router.put_many(items).unwrap();
+        let keys = router.list_keys().unwrap();
+        // R=2 copies dedupe back to 12 logical keys, sorted.
+        assert_eq!(keys.len(), 12);
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted);
+    }
+
+    #[test]
+    fn stable_ids_keep_surviving_placement() {
+        // A 3-shard fabric with ids [0,1,2] and the 2-shard fabric left
+        // after removing id 1 must agree on every key whose primary
+        // survives — the property the elastic rebalancer builds on.
+        let backends: Vec<Arc<dyn Connector>> =
+            (0..3).map(|_| MemoryConnector::new()).collect();
+        let full = ShardedConnector::with_shard_ids(
+            vec![0, 1, 2],
+            backends.clone(),
+            1,
+            64,
+        )
+        .unwrap();
+        let shrunk = ShardedConnector::with_shard_ids(
+            vec![0, 2],
+            vec![backends[0].clone(), backends[2].clone()],
+            1,
+            64,
+        )
+        .unwrap();
+        for i in 0..200 {
+            let key = format!("stable-{i}");
+            let old = full.shard_for(&key);
+            if old != 1 {
+                assert_eq!(
+                    shrunk.shard_for(&key),
+                    old,
+                    "key {key} moved although its shard survived"
+                );
+                // Routing agrees end to end, not just in the ring: a put
+                // through one fabric is visible through the other.
+                full.put(&key, vec![i as u8]).unwrap();
+                assert_eq!(
+                    shrunk.get(&key).unwrap().map(|b| b.to_vec()),
+                    Some(vec![i as u8])
+                );
+            }
+        }
+        // Id/backends arity and duplicate ids are rejected.
+        assert!(ShardedConnector::with_shard_ids(
+            vec![0],
+            backends.clone(),
+            1,
+            64
+        )
+        .is_err());
+        assert!(ShardedConnector::with_shard_ids(
+            vec![7, 7, 8],
+            backends.clone(),
+            1,
+            64
+        )
+        .is_err());
     }
 
     #[test]

@@ -95,6 +95,24 @@ pub trait Connector: Send + Sync {
         }
     }
 
+    /// Batched existence check, positionally aligned with `keys`. The
+    /// default loops over [`Connector::exists`]; channels with a native
+    /// `MEXISTS` (memory, TCP KV) answer the whole probe in one round
+    /// trip, and the shard fabric fans it out per shard in parallel.
+    fn exists_many(&self, keys: &[String]) -> Result<Vec<bool>> {
+        keys.iter().map(|k| self.exists(k)).collect()
+    }
+
+    /// Enumerate every resident key (admin / rebalancing). The elastic
+    /// shard fabric uses this to compute the remapped key delta when the
+    /// shard set changes. Channels that cannot enumerate keep the default
+    /// error.
+    fn list_keys(&self) -> Result<Vec<String>> {
+        Err(Error::Config(
+            "connector cannot enumerate keys".into(),
+        ))
+    }
+
     /// Number of objects currently resident (the Fig 10 "active proxies"
     /// measurement).
     fn len(&self) -> Result<usize>;
@@ -136,6 +154,21 @@ pub enum ConnectorDesc {
         replicas: u64,
         vnodes: u64,
     },
+    /// Elastic shard fabric (see [`crate::shard::rebalance`]): a shard
+    /// fabric whose membership can change at runtime. The descriptor is a
+    /// generation-stamped snapshot — `shard_ids[i]` is the stable ring id
+    /// of `shards[i]` at generation `generation`. Connecting prefers the
+    /// live control plane registered under `name` in this process, so a
+    /// proxy minted before a rebalance resolves against the *current*
+    /// membership rather than its stale snapshot.
+    Elastic {
+        name: String,
+        generation: u64,
+        shard_ids: Vec<u64>,
+        shards: Vec<ConnectorDesc>,
+        replicas: u64,
+        vnodes: u64,
+    },
 }
 
 impl Encode for ConnectorDesc {
@@ -171,6 +204,22 @@ impl Encode for ConnectorDesc {
                 replicas.encode(buf);
                 vnodes.encode(buf);
             }
+            ConnectorDesc::Elastic {
+                name,
+                generation,
+                shard_ids,
+                shards,
+                replicas,
+                vnodes,
+            } => {
+                put_varint(buf, 6);
+                name.encode(buf);
+                generation.encode(buf);
+                shard_ids.encode(buf);
+                shards.encode(buf);
+                replicas.encode(buf);
+                vnodes.encode(buf);
+            }
         }
     }
 }
@@ -192,6 +241,14 @@ impl Decode for ConnectorDesc {
                 threshold: Decode::decode(r)?,
             },
             5 => ConnectorDesc::Sharded {
+                shards: Decode::decode(r)?,
+                replicas: Decode::decode(r)?,
+                vnodes: Decode::decode(r)?,
+            },
+            6 => ConnectorDesc::Elastic {
+                name: Decode::decode(r)?,
+                generation: Decode::decode(r)?,
+                shard_ids: Decode::decode(r)?,
                 shards: Decode::decode(r)?,
                 replicas: Decode::decode(r)?,
                 vnodes: Decode::decode(r)?,
@@ -242,6 +299,9 @@ impl ConnectorDesc {
                     *replicas as usize,
                     *vnodes as usize,
                 )?))
+            }
+            ConnectorDesc::Elastic { .. } => {
+                crate::shard::rebalance::connect_elastic(self)
             }
         }
     }
@@ -341,6 +401,14 @@ impl Connector for MemoryConnector {
         Ok(self.state.exists(key))
     }
 
+    fn exists_many(&self, keys: &[String]) -> Result<Vec<bool>> {
+        Ok(self.state.mexists(keys))
+    }
+
+    fn list_keys(&self) -> Result<Vec<String>> {
+        Ok(self.state.keys(""))
+    }
+
     fn len(&self) -> Result<usize> {
         Ok(self.state.stats().0 as usize)
     }
@@ -417,6 +485,18 @@ impl Connector for FileConnector {
 
     fn exists(&self, key: &str) -> Result<bool> {
         Ok(self.path(key).exists())
+    }
+
+    fn list_keys(&self) -> Result<Vec<String>> {
+        // Filenames ARE the (sanitized) keys; store-generated keys contain
+        // only filename-safe characters, so they round-trip unchanged.
+        Ok(std::fs::read_dir(&self.dir)?
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                e.path().extension().map(|x| x != "tmp").unwrap_or(true)
+            })
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect())
     }
 
     fn len(&self) -> Result<usize> {
@@ -505,6 +585,15 @@ impl Connector for TcpKvConnector {
 
     fn exists(&self, key: &str) -> Result<bool> {
         self.client.exists(key)
+    }
+
+    fn exists_many(&self, keys: &[String]) -> Result<Vec<bool>> {
+        // Native MEXISTS: the whole membership probe crosses the wire once.
+        self.client.mexists(keys)
+    }
+
+    fn list_keys(&self) -> Result<Vec<String>> {
+        self.client.keys("")
     }
 
     fn len(&self) -> Result<usize> {
@@ -607,6 +696,17 @@ impl Connector for ThrottledConnector {
 
     fn exists(&self, key: &str) -> Result<bool> {
         self.inner.exists(key)
+    }
+
+    fn exists_many(&self, keys: &[String]) -> Result<Vec<bool>> {
+        // One latency for the whole probe (existence carries no payload).
+        self.link.transfer(0);
+        self.inner.exists_many(keys)
+    }
+
+    fn list_keys(&self) -> Result<Vec<String>> {
+        self.link.transfer(0);
+        self.inner.list_keys()
     }
 
     fn len(&self) -> Result<usize> {
@@ -746,6 +846,33 @@ impl Connector for MultiConnector {
         Ok(self.large.exists(key)? || self.small.exists(key)?)
     }
 
+    fn exists_many(&self, keys: &[String]) -> Result<Vec<bool>> {
+        // Same read order as `exists`: batch the large channel, then probe
+        // only the still-absent keys against small.
+        let mut out = self.large.exists_many(keys)?;
+        let miss_idx: Vec<usize> = out
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &hit)| (!hit).then_some(i))
+            .collect();
+        if !miss_idx.is_empty() {
+            let miss_keys: Vec<String> =
+                miss_idx.iter().map(|&i| keys[i].clone()).collect();
+            let filled = self.small.exists_many(&miss_keys)?;
+            for (&i, hit) in miss_idx.iter().zip(filled) {
+                out[i] = hit;
+            }
+        }
+        Ok(out)
+    }
+
+    fn list_keys(&self) -> Result<Vec<String>> {
+        // The size partition is disjoint, so concatenation has no dupes.
+        let mut keys = self.large.list_keys()?;
+        keys.extend(self.small.list_keys()?);
+        Ok(keys)
+    }
+
     fn len(&self) -> Result<usize> {
         Ok(self.large.len()? + self.small.len()?)
     }
@@ -783,6 +910,17 @@ mod tests {
             got.iter().map(|b| b.as_ref().map(|v| v.to_vec())).collect::<Vec<_>>(),
             vec![Some(vec![1]), None, Some(vec![2, 2])]
         );
+        // Batched existence probe: positional alignment, empty batch.
+        assert_eq!(
+            c.exists_many(&["b1".into(), "nope".into(), "b2".into()])
+                .unwrap(),
+            vec![true, false, true]
+        );
+        assert_eq!(c.exists_many(&[]).unwrap(), Vec::<bool>::new());
+        // Key enumeration sees exactly the resident keys.
+        let mut listed = c.list_keys().unwrap();
+        listed.sort();
+        assert_eq!(listed, vec!["b1".to_string(), "b2".to_string()]);
         // Batched eviction: existing and missing keys, idempotent, empty.
         c.put_many(vec![
             ("d1".into(), vec![1]),

@@ -4,9 +4,13 @@
 //! [`FlakyConnector::set_down`], fails every operation with a connector
 //! error — the shard fabric's replica-fallback tests and the failover
 //! bench both drive dead-backend scenarios through it without real
-//! processes to kill. [`FlakyBroker`] is the same switch for a broker
-//! fabric instance, so partition-unavailability scenarios are drivable
-//! from tests too.
+//! processes to kill. It also injects configurable per-operation latency
+//! ([`FlakyConnector::set_latency`]) so slow-shard scenarios — a backend
+//! that answers, just late — are drivable too (the elastic rebalancer's
+//! tests migrate through deliberately slow shards this way).
+//! [`FlakyBroker`] is the same failure switch for a broker fabric
+//! instance, so partition-unavailability scenarios are drivable from
+//! tests as well.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -18,21 +22,28 @@ use crate::error::{Error, Result};
 use crate::metrics::StoreBytes;
 use crate::store::{Blob, Connector, ConnectorDesc};
 
-/// A connector whose backend can be "killed" and "revived" at will.
+/// A connector whose backend can be "killed" and "revived" at will, and
+/// slowed down with injected per-operation latency.
 pub struct FlakyConnector {
     inner: Arc<dyn Connector>,
     down: AtomicBool,
+    /// Injected latency per operation, in microseconds (0 = none).
+    latency_us: AtomicU64,
     /// Operations rejected while down (diagnostics).
     rejected: AtomicU64,
+    /// Operations that paid injected latency (diagnostics).
+    delayed: AtomicU64,
 }
 
 impl FlakyConnector {
-    /// Wrap a channel, initially healthy.
+    /// Wrap a channel, initially healthy and fast.
     pub fn wrap(inner: Arc<dyn Connector>) -> Arc<FlakyConnector> {
         Arc::new(FlakyConnector {
             inner,
             down: AtomicBool::new(false),
+            latency_us: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            delayed: AtomicU64::new(0),
         })
     }
 
@@ -45,12 +56,35 @@ impl FlakyConnector {
         self.down.load(Ordering::SeqCst)
     }
 
+    /// Inject a fixed delay before every operation (batched calls pay it
+    /// once, like a slow link rather than a slow disk). `Duration::ZERO`
+    /// removes the injection.
+    pub fn set_latency(&self, latency: Duration) {
+        self.latency_us
+            .store(latency.as_micros() as u64, Ordering::SeqCst);
+    }
+
+    /// The currently injected per-operation latency.
+    pub fn latency(&self) -> Duration {
+        Duration::from_micros(self.latency_us.load(Ordering::SeqCst))
+    }
+
     /// Operations rejected while the backend was down.
     pub fn rejected_ops(&self) -> u64 {
         self.rejected.load(Ordering::Relaxed)
     }
 
+    /// Operations that paid injected latency.
+    pub fn delayed_ops(&self) -> u64 {
+        self.delayed.load(Ordering::Relaxed)
+    }
+
     fn check(&self) -> Result<()> {
+        let us = self.latency_us.load(Ordering::SeqCst);
+        if us > 0 {
+            self.delayed.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_micros(us));
+        }
         if self.is_down() {
             self.rejected.fetch_add(1, Ordering::Relaxed);
             Err(Error::Connector("injected failure: backend down".into()))
@@ -109,6 +143,16 @@ impl Connector for FlakyConnector {
     fn exists(&self, key: &str) -> Result<bool> {
         self.check()?;
         self.inner.exists(key)
+    }
+
+    fn exists_many(&self, keys: &[String]) -> Result<Vec<bool>> {
+        self.check()?;
+        self.inner.exists_many(keys)
+    }
+
+    fn list_keys(&self) -> Result<Vec<String>> {
+        self.check()?;
+        self.inner.list_keys()
     }
 
     fn len(&self) -> Result<usize> {
@@ -266,5 +310,33 @@ mod tests {
         // Data survives the outage: the backend was never really gone.
         flaky.set_down(false);
         assert_eq!(flaky.get("k").unwrap().map(|b| b.to_vec()), Some(vec![1]));
+    }
+
+    #[test]
+    fn injected_latency_slows_but_does_not_fail() {
+        let flaky = FlakyConnector::wrap(MemoryConnector::new());
+        flaky.put("k", vec![1]).unwrap();
+        assert_eq!(flaky.delayed_ops(), 0);
+
+        flaky.set_latency(Duration::from_millis(5));
+        assert_eq!(flaky.latency(), Duration::from_millis(5));
+        let t0 = std::time::Instant::now();
+        assert_eq!(flaky.get("k").unwrap().map(|b| b.to_vec()), Some(vec![1]));
+        assert!(
+            t0.elapsed() >= Duration::from_millis(5),
+            "injected latency not paid"
+        );
+        // Batched ops pay the delay once per call, and still succeed.
+        assert_eq!(flaky.exists_many(&["k".into()]).unwrap(), vec![true]);
+        assert_eq!(flaky.delayed_ops(), 2);
+
+        // Latency composes with failure injection: slow AND down fails.
+        flaky.set_down(true);
+        assert!(flaky.get("k").is_err());
+        flaky.set_down(false);
+        flaky.set_latency(Duration::ZERO);
+        let t0 = std::time::Instant::now();
+        flaky.get("k").unwrap();
+        assert!(t0.elapsed() < Duration::from_millis(5));
     }
 }

@@ -1,0 +1,105 @@
+//! Concurrent read-load probe: the shared harness behind the elastic
+//! fabric's zero-read-miss checks (integration tests, `benches/rebalance`,
+//! and the `rebalance` CLI scenario all drive the same probe).
+//!
+//! Reader threads hammer a fixed key set — every key fully written before
+//! the probe starts — and count each get that does not return the object
+//! (a miss *or* an error). Read-through migration promises that count
+//! stays zero while shards come and go.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::codec::Bytes;
+use crate::store::Store;
+
+/// Handle over running reader threads; [`ReadProbe::finish`] stops them
+/// and reports `(reads, misses)`.
+pub struct ReadProbe {
+    stop: Arc<AtomicBool>,
+    reads: Arc<AtomicU64>,
+    misses: Arc<AtomicU64>,
+    readers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ReadProbe {
+    /// Spawn `threads` readers looping over `keys` (values must decode as
+    /// [`Bytes`], which is what every fabric scenario stores).
+    pub fn spawn(store: &Store, keys: &[String], threads: usize) -> ReadProbe {
+        let stop = Arc::new(AtomicBool::new(false));
+        let reads = Arc::new(AtomicU64::new(0));
+        let misses = Arc::new(AtomicU64::new(0));
+        let readers = (0..threads)
+            .map(|r| {
+                let store = store.clone();
+                let keys = keys.to_vec();
+                let (stop, reads, misses) =
+                    (stop.clone(), reads.clone(), misses.clone());
+                std::thread::Builder::new()
+                    .name(format!("read-probe-{r}"))
+                    .spawn(move || {
+                        // Stride co-prime with typical key counts so the
+                        // threads don't read in lockstep.
+                        let mut i = r;
+                        while !stop.load(Ordering::Relaxed) {
+                            let key = &keys[i % keys.len()];
+                            match store.get::<Bytes>(key) {
+                                Ok(Some(_)) => {}
+                                _ => {
+                                    misses.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            reads.fetch_add(1, Ordering::Relaxed);
+                            i += 7;
+                        }
+                    })
+                    .expect("spawn read-probe thread")
+            })
+            .collect();
+        ReadProbe { stop, reads, misses, readers }
+    }
+
+    /// The shared stop flag (lets co-driven writer threads share the
+    /// probe's lifetime).
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Stop the readers and return `(reads, misses)`.
+    pub fn finish(self) -> (u64, u64) {
+        self.stop.store(true, Ordering::Relaxed);
+        for r in self.readers {
+            r.join().expect("read-probe thread");
+        }
+        (
+            self.reads.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn probe_counts_hits_and_misses() {
+        let store = Store::memory("probe");
+        let keys = store
+            .put_many(&(0..8).map(|i| Bytes(vec![i as u8])).collect::<Vec<_>>())
+            .unwrap();
+        let probe = ReadProbe::spawn(&store, &keys, 2);
+        std::thread::sleep(Duration::from_millis(30));
+        let (reads, misses) = probe.finish();
+        assert!(reads > 0, "probe never read");
+        assert_eq!(misses, 0, "misses on fully resident keys");
+
+        // Evicted keys count as misses.
+        store.evict(&keys[0]).unwrap();
+        let probe = ReadProbe::spawn(&store, &keys[..1], 1);
+        std::thread::sleep(Duration::from_millis(20));
+        let (reads, misses) = probe.finish();
+        assert_eq!(reads, misses, "every read of an evicted key must miss");
+    }
+}

@@ -20,6 +20,7 @@
 use crate::rng::Rng;
 
 pub mod fail;
+pub mod load;
 
 /// A generator of values plus their shrink candidates.
 pub trait Gen {

@@ -1,0 +1,231 @@
+//! End-to-end elastic shard fabric: membership changes under concurrent
+//! put/get load with zero read misses, full key-set convergence, slow
+//! (latency-injected) shards, real TCP backends, and pre-rebalance
+//! proxies resolving after the shard set changed.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use proxystore::codec::{Bytes, Decode, Encode};
+use proxystore::kv::{KvClient, KvServer};
+use proxystore::prelude::{Proxy, Store};
+use proxystore::shard::{ElasticShards, ShardMembers};
+use proxystore::store::{Connector, ConnectorDesc, MemoryConnector};
+use proxystore::testing::fail::FlakyConnector;
+use proxystore::testing::load::ReadProbe;
+
+fn memory_members(n: usize) -> ShardMembers {
+    (0..n).map(|id| (id, MemoryConnector::new())).collect()
+}
+
+#[test]
+fn rebalance_under_concurrent_load_loses_nothing() {
+    let elastic =
+        ElasticShards::new("itest-load", memory_members(4), 1, 64).unwrap();
+    let store = Store::new("itest", Arc::new(elastic.clone()));
+    let objs: Vec<Bytes> =
+        (0..400).map(|i| Bytes(vec![(i % 251) as u8; 64])).collect();
+    let keys = store.put_many(&objs).unwrap();
+
+    // Proxies minted before any rebalance: their factories carry the
+    // generation-0 membership snapshot.
+    let early_wire: Vec<Vec<u8>> = keys
+        .iter()
+        .take(8)
+        .map(|k| store.proxy_from_key::<Bytes>(k).to_bytes())
+        .collect();
+
+    let probe = ReadProbe::spawn(&store, &keys, 3);
+    // A writer keeps minting fresh objects throughout both migrations.
+    let writer = {
+        let store = store.clone();
+        let stop = probe.stop_flag();
+        std::thread::spawn(move || {
+            let mut written = Vec::new();
+            let mut i = 0u8;
+            while !stop.load(Ordering::Relaxed) {
+                written.push(store.put(&Bytes(vec![i; 48])).unwrap());
+                i = i.wrapping_add(1);
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            written
+        })
+    };
+
+    // Grow, then shrink, with load running the whole time.
+    elastic.add_shard(4, MemoryConnector::new()).unwrap();
+    assert!(elastic.wait_quiescent(Some(Duration::from_secs(60))));
+    let after_grow = elastic.metrics();
+    assert!(
+        after_grow.keys_migrated > 0,
+        "growing a loaded fabric must migrate something"
+    );
+    assert!(
+        (after_grow.keys_migrated as usize) < keys.len() * 2 / 5,
+        "{} of {} keys moved on grow — not the remapped ~1/5",
+        after_grow.keys_migrated,
+        keys.len()
+    );
+
+    elastic.remove_shard(1).unwrap();
+    assert!(elastic.wait_quiescent(Some(Duration::from_secs(60))));
+
+    let (reads, misses) = probe.finish();
+    let written = writer.join().expect("writer thread");
+    assert!(reads > 0, "readers never ran");
+    assert_eq!(
+        misses, 0,
+        "read-through migration must never lose a read ({reads} reads)"
+    );
+
+    // Full convergence: the original key set AND everything written during
+    // the migrations resolves through the final membership.
+    assert_eq!(elastic.shard_ids(), vec![0, 2, 3, 4]);
+    assert_eq!(elastic.generation(), 2);
+    assert!(!elastic.migrating());
+    for key in keys.iter().chain(written.iter()) {
+        assert!(
+            store.get::<Bytes>(key).unwrap().is_some(),
+            "key {key} lost across the rebalances"
+        );
+    }
+
+    // Migration stayed proportional: two single-shard changes on a 4-5-4
+    // fabric remap ~1/5 + ~1/4, nowhere near the whole key set.
+    let total = (keys.len() + written.len()) as u64;
+    let m = elastic.metrics();
+    assert!(
+        m.keys_migrated < total * 6 / 10,
+        "{} of {total} keys migrated — rebalancing is not incremental",
+        m.keys_migrated
+    );
+    assert_eq!(m.rebalances, 2);
+    assert_eq!(m.keys_failed, 0);
+
+    // Pre-rebalance proxies re-attach to the live control plane and
+    // resolve cold (cache invalidated to force a real fabric read).
+    for wire in &early_wire {
+        let p: Proxy<Bytes> = Proxy::from_bytes(wire).unwrap();
+        p.factory().invalidate_cache();
+        assert_eq!(p.resolve().unwrap().0.len(), 64);
+    }
+}
+
+#[test]
+fn rebalance_with_slow_shard_still_converges() {
+    let flaky: Vec<Arc<FlakyConnector>> = (0..3)
+        .map(|_| FlakyConnector::wrap(MemoryConnector::new()))
+        .collect();
+    let members: ShardMembers = flaky
+        .iter()
+        .enumerate()
+        .map(|(id, f)| (id, f.clone() as Arc<dyn Connector>))
+        .collect();
+    let elastic = ElasticShards::new("itest-slow", members, 1, 64).unwrap();
+    let store = Store::new("slow", Arc::new(elastic.clone()));
+    let objs: Vec<Bytes> =
+        (0..150).map(|i| Bytes(vec![i as u8; 32])).collect();
+    let keys = store.put_many(&objs).unwrap();
+
+    // Shard 0 turns into a straggler: every operation pays 2ms. The
+    // migration daemon has to read through it; readers keep hitting it.
+    flaky[0].set_latency(Duration::from_millis(2));
+
+    let probe = ReadProbe::spawn(&store, &keys, 2);
+    let extra = MemoryConnector::new();
+    elastic.add_shard(3, extra.clone()).unwrap();
+    assert!(elastic.wait_quiescent(Some(Duration::from_secs(60))));
+    let (reads, misses) = probe.finish();
+
+    assert!(reads > 0);
+    assert_eq!(misses, 0, "slow shard caused read misses during rebalance");
+    let m = elastic.metrics();
+    assert!(m.keys_migrated > 0);
+    assert_eq!(m.keys_failed, 0, "latency is not failure: no key abandoned");
+    assert!(
+        flaky[0].delayed_ops() > 0,
+        "the slow shard never served an operation"
+    );
+    assert_eq!(extra.len().unwrap() as u64, m.keys_migrated);
+    for key in &keys {
+        assert!(store.get::<Bytes>(key).unwrap().is_some());
+    }
+}
+
+#[test]
+fn elastic_over_real_tcp_backends() {
+    let servers: Vec<KvServer> =
+        (0..3).map(|_| KvServer::spawn().unwrap()).collect();
+    let members: ShardMembers = servers
+        .iter()
+        .enumerate()
+        .map(|(id, s)| {
+            (
+                id,
+                ConnectorDesc::TcpKv { addr: s.addr.to_string() }
+                    .connect()
+                    .unwrap(),
+            )
+        })
+        .collect();
+    let elastic = ElasticShards::new("itest-tcp", members, 1, 64).unwrap();
+    let store = Store::new("tcp", Arc::new(elastic.clone()));
+    let objs: Vec<Bytes> =
+        (0..80).map(|i| Bytes(vec![i as u8; 256])).collect();
+    let keys = store.put_many(&objs).unwrap();
+
+    // Scale out onto a fresh server: the migration runs over real sockets
+    // (MGET/MPUT/MDEL frames), not in-process shortcuts.
+    let extra = KvServer::spawn().unwrap();
+    elastic
+        .add_shard(
+            3,
+            ConnectorDesc::TcpKv { addr: extra.addr.to_string() }
+                .connect()
+                .unwrap(),
+        )
+        .unwrap();
+    assert!(elastic.wait_quiescent(Some(Duration::from_secs(60))));
+
+    let m = elastic.metrics();
+    assert!(m.keys_migrated > 0);
+    // The migrated keys physically reside on the new server.
+    let probe = KvClient::connect(extra.addr).unwrap();
+    let (resident, _, _) = probe.stats().unwrap();
+    assert_eq!(resident, m.keys_migrated);
+    // And the copies left the old servers: one copy per key fabric-wide.
+    assert_eq!(elastic.len().unwrap(), keys.len());
+    for (i, key) in keys.iter().enumerate() {
+        let got: Option<Bytes> = store.get(key).unwrap();
+        assert_eq!(
+            got.map(|b| b.0),
+            Some(vec![i as u8; 256]),
+            "key {key} corrupted or lost by the wire migration"
+        );
+    }
+}
+
+#[test]
+fn sequential_membership_changes_serialize() {
+    // Back-to-back changes with no explicit wait between them: the second
+    // must block on the first's drain, never interleave epochs.
+    let elastic =
+        ElasticShards::new("itest-seq", memory_members(2), 1, 64).unwrap();
+    let store = Store::new("seq", Arc::new(elastic.clone()));
+    let objs: Vec<Bytes> = (0..120).map(|i| Bytes(vec![i as u8; 16])).collect();
+    let keys = store.put_many(&objs).unwrap();
+
+    elastic.add_shard(2, MemoryConnector::new()).unwrap();
+    elastic.add_shard(3, MemoryConnector::new()).unwrap();
+    elastic.remove_shard(0).unwrap();
+    assert!(elastic.wait_quiescent(Some(Duration::from_secs(60))));
+
+    assert_eq!(elastic.generation(), 3);
+    assert_eq!(elastic.shard_ids(), vec![1, 2, 3]);
+    assert_eq!(elastic.metrics().rebalances, 3);
+    for key in &keys {
+        assert!(store.get::<Bytes>(key).unwrap().is_some());
+    }
+    assert_eq!(elastic.len().unwrap(), keys.len());
+}
