@@ -1,0 +1,64 @@
+//! Nonblocking op submission in ~60 lines: pipelined wire ops, async
+//! store calls, and proxies minted while their writes are in flight.
+//!
+//! Run with: `cargo run --release --example pipelined_ops`
+
+use std::time::Instant;
+
+use proxystore::kv::{KvClient, KvServer};
+use proxystore::ops::Op;
+use proxystore::prelude::Store;
+use proxystore::store::TcpKvConnector;
+
+fn main() -> proxystore::Result<()> {
+    let server = KvServer::spawn()?;
+
+    // ----------------------------------------------------------------
+    // 1. Raw pipelining: submit a window, then wait. Every op is on the
+    //    wire before the first response is consumed, so the whole window
+    //    shares one round-trip stream.
+    // ----------------------------------------------------------------
+    let client = KvClient::connect(server.addr)?;
+    let t0 = Instant::now();
+    let window: Vec<_> = (0..64)
+        .map(|i| {
+            client.submit_op(Op::Put {
+                key: format!("obj-{i}"),
+                data: vec![i as u8; 256],
+            })
+        })
+        .collect();
+    println!(
+        "64 ops submitted in {:?} ({} still in flight)",
+        t0.elapsed(),
+        client.in_flight()
+    );
+    for handle in window {
+        handle.wait()?.into_unit()?;
+    }
+    println!("64 ops completed in {:?}", t0.elapsed());
+
+    // ----------------------------------------------------------------
+    // 2. The async store surface: issue work early, settle where the
+    //    value is needed — resolution overlaps with compute.
+    // ----------------------------------------------------------------
+    let conn = std::sync::Arc::new(TcpKvConnector::connect(server.addr)?);
+    let store = Store::new("pipe", conn);
+    let write = store.put_async(&"computed elsewhere".to_string());
+    let read = store.get_async::<String>("obj-that-does-not-exist");
+    // ... compute here while both ops cross the wire ...
+    write.wait()?;
+    assert_eq!(read.wait()?, None);
+    println!("async put landed under key {}", write.key());
+
+    // ----------------------------------------------------------------
+    // 3. proxy_async: mint the reference while the target's write is
+    //    still in flight. The proxy has wait semantics (like a future),
+    //    so resolving it simply parks until the write lands; wait on the
+    //    handle where the write could fail (it surfaces the error).
+    // ----------------------------------------------------------------
+    let (proxy, write) = store.proxy_async(&vec![1.0f64, 2.0, 3.0]);
+    println!("proxy target resolved: {:?}", *proxy.resolve()?);
+    write.wait()?;
+    Ok(())
+}

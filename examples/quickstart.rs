@@ -1,6 +1,13 @@
 //! Quickstart: the three proxy patterns in ~80 lines.
 //!
 //! Run with: `cargo run --release --example quickstart`
+//!
+//! Everything here uses the blocking `Store` surface for clarity. Each of
+//! these calls also has a nonblocking twin — `put_async`, `get_async`,
+//! `proxy_async` — that *submits* the op and hands back a completion
+//! handle, so resolution overlaps with compute; on TCP channels submitted
+//! ops pipeline on one shared connection. See
+//! `examples/pipelined_ops.rs` for that side of the API.
 
 use std::time::Duration;
 

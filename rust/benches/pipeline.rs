@@ -1,0 +1,140 @@
+//! Pipelined vs per-call-blocking small-op throughput over the TCP KV
+//! wire: the acceptance bench for the nonblocking submission redesign.
+//!
+//! Both modes drive the same server over one connection. "blocking" pays
+//! one full round trip per op (submit + wait, the old client's contract);
+//! "pipelined" keeps a window of ops in flight and waits for the window,
+//! so the whole window shares one round-trip stream. Acceptance bar:
+//! pipelined throughput >= 2x blocking at 64 in-flight ops for <= 1 KiB
+//! payloads.
+
+use proxystore::benchlib::{once, Bench, Scale};
+use proxystore::codec::Bytes;
+use proxystore::kv::{KvClient, KvServer};
+use proxystore::ops::Op;
+
+const WINDOW: usize = 64;
+
+/// ops/sec for a run of `n_ops` blocking round trips.
+fn blocking_puts(client: &KvClient, n_ops: usize, payload: &[u8]) -> f64 {
+    let (_, secs) = once(|| {
+        for i in 0..n_ops {
+            client
+                .set(&format!("b-{i}"), Bytes(payload.to_vec()))
+                .expect("blocking set");
+        }
+    });
+    n_ops as f64 / secs
+}
+
+/// ops/sec with `WINDOW` ops in flight on the shared stream.
+fn pipelined_puts(client: &KvClient, n_ops: usize, payload: &[u8]) -> f64 {
+    let (_, secs) = once(|| {
+        let mut handles = Vec::with_capacity(WINDOW);
+        for i in 0..n_ops {
+            handles.push(client.submit_op(Op::Put {
+                key: format!("p-{i}"),
+                data: payload.to_vec(),
+            }));
+            if handles.len() == WINDOW {
+                for h in handles.drain(..) {
+                    h.wait()
+                        .expect("pipelined put")
+                        .into_unit()
+                        .expect("unit completion");
+                }
+            }
+        }
+        for h in handles {
+            h.wait()
+                .expect("pipelined put")
+                .into_unit()
+                .expect("unit completion");
+        }
+    });
+    n_ops as f64 / secs
+}
+
+/// ops/sec reading the keys back with a pipelined window.
+fn pipelined_gets(client: &KvClient, n_ops: usize) -> f64 {
+    let (_, secs) = once(|| {
+        let mut handles = Vec::with_capacity(WINDOW);
+        for i in 0..n_ops {
+            handles.push(client.submit_op(Op::Get { key: format!("p-{i}") }));
+            if handles.len() == WINDOW {
+                for h in handles.drain(..) {
+                    assert!(h
+                        .wait()
+                        .expect("pipelined get")
+                        .into_value()
+                        .expect("value completion")
+                        .is_some());
+                }
+            }
+        }
+        for h in handles {
+            h.wait().expect("pipelined get").into_value().expect("value");
+        }
+    });
+    n_ops as f64 / secs
+}
+
+fn blocking_gets(client: &KvClient, n_ops: usize) -> f64 {
+    let (_, secs) = once(|| {
+        for i in 0..n_ops {
+            assert!(client.get(&format!("b-{i}")).expect("get").is_some());
+        }
+    });
+    n_ops as f64 / secs
+}
+
+fn main() {
+    let scale = Scale::from_env();
+    let n_ops = scale.pick(1024, 8192, 32768);
+    let sizes: &[usize] = &[64, 1024];
+
+    let server = KvServer::spawn().expect("kv server");
+    let client = KvClient::connect(server.addr).expect("client");
+
+    let mut bench = Bench::new(
+        "pipeline",
+        "op,payload_bytes,blocking_ops_s,pipelined_ops_s,speedup",
+    );
+    bench.note(&format!(
+        "{n_ops} ops per mode, window {WINDOW}, one TCP connection"
+    ));
+
+    let mut worst_speedup = f64::INFINITY;
+    for &size in sizes {
+        let payload = vec![7u8; size];
+        client.flush_all().expect("flush");
+
+        // Warm both paths once so neither pays first-touch costs.
+        blocking_puts(&client, WINDOW, &payload);
+        pipelined_puts(&client, WINDOW, &payload);
+
+        let b_put = blocking_puts(&client, n_ops, &payload);
+        let p_put = pipelined_puts(&client, n_ops, &payload);
+        let put_speedup = p_put / b_put;
+        bench.row(format!(
+            "put,{size},{b_put:.0},{p_put:.0},{put_speedup:.2}"
+        ));
+
+        let b_get = blocking_gets(&client, n_ops);
+        let p_get = pipelined_gets(&client, n_ops);
+        let get_speedup = p_get / b_get;
+        bench.row(format!(
+            "get,{size},{b_get:.0},{p_get:.0},{get_speedup:.2}"
+        ));
+
+        worst_speedup = worst_speedup.min(put_speedup).min(get_speedup);
+    }
+
+    bench.compare(
+        "pipelined small-op throughput vs per-call blocking (64 in flight)",
+        ">=2x",
+        &format!("{worst_speedup:.2}x"),
+        worst_speedup >= 2.0,
+    );
+    bench.finish();
+}

@@ -34,6 +34,7 @@ use std::time::{Duration, Instant};
 use crate::codec::Bytes;
 use crate::error::{Error, Result};
 use crate::netsim::Link;
+use crate::ops::reactor::{fan_out, Job};
 use crate::shard::ring::{hash_key, HashRing};
 
 use super::server::BrokerClient;
@@ -43,9 +44,9 @@ use super::state::{BrokerState, FetchReq, LogEntry};
 /// served and what came back.
 type SweepResults = Vec<(Vec<FetchReq>, Result<Vec<Vec<LogEntry>>>)>;
 
-/// Per-partition results of a batched produce fan-out: input indices, the
-/// partition, and the offsets the instance assigned.
-type ProduceResults = Vec<(Vec<usize>, u32, Result<Vec<u64>>)>;
+/// Per-partition results of a batched produce fan-out: (input indices,
+/// partition) and the offsets the instance assigned.
+type ProduceResults = Vec<((Vec<usize>, u32), Result<Vec<u64>>)>;
 
 /// Partition-aware broker endpoint: the interface the fabric routes over.
 pub trait PartitionBroker: Send + Sync {
@@ -525,31 +526,27 @@ impl PartitionedProducer {
             entry.0.push(i);
             entry.1.push(payload);
         }
-        let results: ProduceResults = std::thread::scope(|s| {
-            let mut handles = Vec::new();
-            for (partition, (idxs, payloads)) in groups {
+        let jobs: Vec<((Vec<usize>, u32), Job<Vec<u64>>)> = groups
+            .into_iter()
+            .map(|(partition, (idxs, payloads))| {
                 let inst = self.fabric.instance_for(topic, partition);
                 let broker = self.fabric.instances[inst].clone();
                 let topic = topic.to_string();
-                handles.push((idxs, partition, s.spawn(move || {
-                    broker.produce_many(&topic, partition, payloads)
-                })));
-            }
-            handles
-                .into_iter()
-                .map(|(idxs, partition, h)| {
-                    let res = h.join().unwrap_or_else(|_| {
-                        Err(Error::Connector(
-                            "broker produce_many panicked".into(),
-                        ))
-                    });
-                    (idxs, partition, res)
-                })
-                .collect()
-        });
-        let total: usize = results.iter().map(|(idxs, _, _)| idxs.len()).sum();
+                (
+                    (idxs, partition),
+                    Box::new(move || {
+                        broker.produce_many(&topic, partition, payloads)
+                    }) as Job<Vec<u64>>,
+                )
+            })
+            .collect();
+        // Shared reactor pool: every sub-batch in flight at once, no
+        // per-call thread spawns.
+        let results: ProduceResults = fan_out(jobs);
+        let total: usize =
+            results.iter().map(|((idxs, _), _)| idxs.len()).sum();
         let mut out = vec![(0u32, 0u64); total];
-        for (idxs, partition, res) in results {
+        for ((idxs, partition), res) in results {
             let offsets = res?;
             for (&i, off) in idxs.iter().zip(offsets) {
                 out[i] = (partition, off);
@@ -712,32 +709,37 @@ impl PartitionedConsumer {
                 (*inst, reqs)
             })
             .collect();
-        let results: SweepResults =
-            std::thread::scope(|s| {
-                let handles: Vec<_> = per_inst
-                    .into_iter()
-                    .map(|(inst, reqs)| {
-                        let broker = self.fabric.instances[inst].clone();
-                        s.spawn(move || {
-                            let res = broker.fetch_many(&reqs, timeout);
-                            (reqs, res)
-                        })
+        // Deliberately NOT on the shared reactor pool: a fetch sweep is a
+        // long-poll that parks inside `fetch_many` for up to the full
+        // sweep slice, and the pool's contract is short-lived jobs only —
+        // parked fetches would starve shard fan-outs and migration
+        // batches process-wide. Scoped threads keep idle consumers
+        // decoupled from the data plane.
+        let results: SweepResults = std::thread::scope(|s| {
+            let handles: Vec<_> = per_inst
+                .into_iter()
+                .map(|(inst, reqs)| {
+                    let broker = self.fabric.instances[inst].clone();
+                    s.spawn(move || {
+                        let res = broker.fetch_many(&reqs, timeout);
+                        (reqs, res)
                     })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| {
-                        h.join().unwrap_or_else(|_| {
-                            (
-                                Vec::new(),
-                                Err(Error::Connector(
-                                    "broker fetch_many panicked".into(),
-                                )),
-                            )
-                        })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        (
+                            Vec::new(),
+                            Err(Error::Connector(
+                                "broker fetch_many panicked".into(),
+                            )),
+                        )
                     })
-                    .collect()
-            });
+                })
+                .collect()
+        });
         let mut out: Vec<(u32, LogEntry)> = Vec::new();
         let mut last_err = None;
         for (reqs, res) in results {

@@ -1,24 +1,167 @@
-//! Blocking KV client. One request in flight per connection (guarded by a
-//! mutex), mirroring redis-py's default connection behaviour that the
-//! paper's deployments used.
+//! Pipelined KV client: N in-flight requests share one socket.
+//!
+//! The original client held a mutex across every write+read pair, so a
+//! connection served exactly one round trip at a time — redis-py's default
+//! behaviour, and the bottleneck the paper's overlapped-resolution
+//! patterns exist to avoid. This client splits submission from
+//! completion: a writer serializes requests onto the socket *in order*
+//! (the queue push and the frame write happen under one lock, so queue
+//! order always equals wire order), and a dedicated reader thread matches
+//! FIFO responses back to per-request completion handles
+//! ([`Pending`](crate::ops::Pending)). N submitters now share one
+//! round-trip stream instead of paying N serialized round trips.
+//!
+//! The blocking API (`get`/`set`/...) survives unchanged as submit+wait,
+//! so existing callers see identical semantics — they just stop queueing
+//! behind each other's wire time. Server-side blocking ops (`WaitGet`,
+//! `BRPop`) still park the response stream for their duration, exactly as
+//! the old mutex did; callers that care use a dedicated connection (see
+//! [`TcpKvConnector::wait_get`](crate::store::TcpKvConnector)).
+//!
+//! Failure is eager and total: when the connection dies (server gone,
+//! torn frame, local shutdown) every in-flight handle completes with the
+//! error and later submissions fail fast. Dropping the client shuts the
+//! socket down and joins the reader thread — no thread leak, no handle
+//! left parked.
 
+use std::collections::VecDeque;
 use std::net::{SocketAddr, TcpStream};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::codec::Bytes;
 use crate::error::{Error, Result};
 use crate::kv::protocol::{read_frame, write_frame, Request, Response};
 use crate::kv::state::PubSubMsg;
+use crate::ops::{pending, Completer, Op, OpResult, Pending};
 
-struct Conn {
-    reader: std::io::BufReader<TcpStream>,
-    writer: std::io::BufWriter<TcpStream>,
+/// How a raw wire [`Response`] completes a submitted request.
+enum Sink {
+    /// Complete with the raw response (the request/response API).
+    Resp(Completer<Response>),
+    /// Convert by op shape and complete a typed [`OpResult`] handle.
+    Op { kind: OpKind, completer: Completer<OpResult> },
 }
 
-/// Thread-safe request/response client.
+/// Expected response shape of a submitted [`Op`].
+#[derive(Clone, Copy)]
+enum OpKind {
+    Unit,
+    Value,
+    Values,
+    Bool,
+    Bools,
+}
+
+fn convert(kind: OpKind, resp: Response) -> Result<OpResult> {
+    match (kind, resp) {
+        (_, Response::Error(msg)) => Err(Error::Protocol(msg)),
+        (OpKind::Unit, Response::Ok) | (OpKind::Unit, Response::Int(_)) => {
+            Ok(OpResult::Unit)
+        }
+        (OpKind::Value, Response::Value(v)) => {
+            Ok(OpResult::Value(v.map(|b| Arc::new(b.0))))
+        }
+        (OpKind::Values, Response::Values(v)) => Ok(OpResult::Values(
+            v.into_iter().map(|o| o.map(|b| Arc::new(b.0))).collect(),
+        )),
+        (OpKind::Bool, Response::Int(v)) => Ok(OpResult::Bool(v == 1)),
+        (OpKind::Bools, Response::Bools(v)) => Ok(OpResult::Bools(v)),
+        (_, other) => {
+            Err(Error::Protocol(format!("unexpected response {other:?}")))
+        }
+    }
+}
+
+fn op_request(op: Op) -> (Request, OpKind) {
+    match op {
+        Op::Put { key, data } => {
+            (Request::Set { key, value: Bytes(data) }, OpKind::Unit)
+        }
+        Op::Get { key } => (Request::Get { key }, OpKind::Value),
+        Op::Evict { key } => (Request::Del { key }, OpKind::Unit),
+        Op::Exists { key } => (Request::Exists { key }, OpKind::Bool),
+        Op::PutMany { items } => (
+            Request::MPut {
+                items: items.into_iter().map(|(k, v)| (k, Bytes(v))).collect(),
+            },
+            OpKind::Unit,
+        ),
+        Op::GetMany { keys } => (Request::MGet { keys }, OpKind::Values),
+        Op::DeleteMany { keys } => (Request::MDel { keys }, OpKind::Unit),
+        Op::ExistsMany { keys } => (Request::MExists { keys }, OpKind::Bools),
+    }
+}
+
+fn complete_sink(sink: Sink, result: Result<Response>) {
+    match sink {
+        Sink::Resp(c) => c.complete(result),
+        Sink::Op { kind, completer } => {
+            completer.complete(result.and_then(|resp| convert(kind, resp)))
+        }
+    }
+}
+
+/// In-flight completions, FIFO-matched to responses by the reader.
+struct PendingQueue {
+    sinks: VecDeque<Sink>,
+    /// Set once the connection died; later submissions fail fast with it.
+    dead: Option<Error>,
+}
+
+fn fail_all(queue: &Mutex<PendingQueue>, err: Error) {
+    let mut q = queue.lock().unwrap();
+    if q.dead.is_none() {
+        q.dead = Some(err.clone());
+    }
+    for sink in q.sinks.drain(..) {
+        complete_sink(sink, Err(err.clone()));
+    }
+}
+
+fn reader_loop(stream: TcpStream, queue: Arc<Mutex<PendingQueue>>) {
+    let mut reader = std::io::BufReader::with_capacity(1 << 18, stream);
+    loop {
+        match read_frame::<_, Response>(&mut reader) {
+            Ok(Some(resp)) => {
+                let sink = queue.lock().unwrap().sinks.pop_front();
+                match sink {
+                    Some(sink) => complete_sink(sink, Ok(resp)),
+                    None => {
+                        // A response with no matching request breaks the
+                        // FIFO invariant; nothing after it can be trusted.
+                        fail_all(
+                            &queue,
+                            Error::Protocol(
+                                "unsolicited response frame".into(),
+                            ),
+                        );
+                        return;
+                    }
+                }
+            }
+            Ok(None) => {
+                fail_all(
+                    &queue,
+                    Error::Connector("kv server closed connection".into()),
+                );
+                return;
+            }
+            Err(e) => {
+                fail_all(&queue, e);
+                return;
+            }
+        }
+    }
+}
+
+/// Thread-safe pipelined request/response client.
 pub struct KvClient {
-    conn: Mutex<Conn>,
+    writer: Mutex<std::io::BufWriter<TcpStream>>,
+    queue: Arc<Mutex<PendingQueue>>,
+    /// Kept for shutdown: unblocks the parked reader on drop.
+    stream: TcpStream,
+    reader: Option<std::thread::JoinHandle<()>>,
     pub addr: SocketAddr,
 }
 
@@ -26,22 +169,94 @@ impl KvClient {
     pub fn connect(addr: SocketAddr) -> Result<KvClient> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
+        let queue = Arc::new(Mutex::new(PendingQueue {
+            sinks: VecDeque::new(),
+            dead: None,
+        }));
+        // Clone both halves before spawning the reader, so an error here
+        // can never leave a reader thread parked on a live socket.
+        let writer_stream = stream.try_clone()?;
+        let reader_stream = stream.try_clone()?;
+        let reader_queue = queue.clone();
+        let reader = std::thread::Builder::new()
+            .name(format!("kv-pipe-{}", addr.port()))
+            .spawn(move || reader_loop(reader_stream, reader_queue))
+            .map_err(|e| {
+                Error::Connector(format!("spawn kv pipeline reader: {e}"))
+            })?;
         Ok(KvClient {
-            conn: Mutex::new(Conn {
-                reader: std::io::BufReader::with_capacity(1 << 18, stream.try_clone()?),
-                writer: std::io::BufWriter::with_capacity(1 << 18, stream),
-            }),
+            writer: Mutex::new(std::io::BufWriter::with_capacity(
+                1 << 18,
+                writer_stream,
+            )),
+            queue,
+            stream,
+            reader: Some(reader),
             addr,
         })
     }
 
+    /// Requests submitted but not yet completed (diagnostics).
+    pub fn in_flight(&self) -> usize {
+        self.queue.lock().unwrap().sinks.len()
+    }
+
+    /// Serialize one request onto the shared socket and register its
+    /// completion sink. The writer lock spans the queue push and the
+    /// frame write so queue order always equals wire order — the FIFO
+    /// invariant the reader's response matching relies on.
+    fn submit_sink(&self, req: &Request, sink: Sink) {
+        let mut writer = self.writer.lock().unwrap();
+        {
+            let mut q = self.queue.lock().unwrap();
+            if let Some(e) = &q.dead {
+                let err = e.clone();
+                drop(q);
+                complete_sink(sink, Err(err));
+                return;
+            }
+            q.sinks.push_back(sink);
+        }
+        if let Err(e) = write_frame(&mut *writer, req) {
+            drop(writer);
+            fail_all(&self.queue, e);
+        }
+    }
+
+    /// Submit a raw request; the handle completes when its response
+    /// arrives. Responses are matched FIFO, so a submission is also an
+    /// ordering point: later requests on this client execute after it.
+    ///
+    /// `Subscribe` is rejected: it flips the server connection into push
+    /// mode, which breaks the FIFO request/response contract the whole
+    /// pipeline is matched by (and would poison every other user of this
+    /// client). Subscriptions get their own connection — [`KvSubscriber`].
+    pub fn submit(&self, req: Request) -> Pending<Response> {
+        if matches!(req, Request::Subscribe { .. }) {
+            return Pending::ready(Err(Error::Config(
+                "Subscribe is push-mode; use KvSubscriber".into(),
+            )));
+        }
+        let (completer, handle) = pending();
+        self.submit_sink(&req, Sink::Resp(completer));
+        handle
+    }
+
+    /// Submit a typed connector op (the native path behind
+    /// [`Connector::submit`](crate::store::Connector::submit) for TCP
+    /// channels).
+    pub fn submit_op(&self, op: Op) -> Pending<OpResult> {
+        let (completer, handle) = pending();
+        let (req, kind) = op_request(op);
+        self.submit_sink(&req, Sink::Op { kind, completer });
+        handle
+    }
+
+    /// Blocking round trip: submit and wait.
     fn call(&self, req: Request) -> Result<Response> {
-        let mut conn = self.conn.lock().unwrap();
-        write_frame(&mut conn.writer, &req)?;
-        match read_frame::<_, Response>(&mut conn.reader)? {
-            Some(Response::Error(msg)) => Err(Error::Protocol(msg)),
-            Some(resp) => Ok(resp),
-            None => Err(Error::Connector("kv server closed connection".into())),
+        match self.submit(req).wait()? {
+            Response::Error(msg) => Err(Error::Protocol(msg)),
+            resp => Ok(resp),
         }
     }
 
@@ -98,7 +313,9 @@ impl KvClient {
         }
     }
 
-    /// Blocking get; `None` timeout waits forever.
+    /// Blocking get; `None` timeout waits forever. Server-side blocking:
+    /// this parks the shared response stream until it resolves (use a
+    /// dedicated connection for long waits).
     pub fn wait_get(
         &self,
         key: &str,
@@ -179,6 +396,18 @@ impl KvClient {
     }
 }
 
+impl Drop for KvClient {
+    /// Shut the socket down (unparking the reader mid-`read_frame`) and
+    /// reap the reader thread; any still-pending handles complete with a
+    /// connection error on the way out.
+    fn drop(&mut self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+        if let Some(handle) = self.reader.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
 /// Dedicated subscription connection (push mode), like a Redis subscriber.
 pub struct KvSubscriber {
     reader: Mutex<std::io::BufReader<TcpStream>>,
@@ -227,5 +456,117 @@ impl KvSubscriber {
             }
             Err(e) => Err(e),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::KvServer;
+
+    #[test]
+    fn pipelined_submissions_complete_in_order() {
+        let server = KvServer::spawn().unwrap();
+        let client = KvClient::connect(server.addr).unwrap();
+        // Submit a window of writes then a read of each key *before*
+        // waiting on anything: FIFO execution means every read sees its
+        // write.
+        let puts: Vec<_> = (0..32)
+            .map(|i| {
+                client.submit_op(Op::Put {
+                    key: format!("p-{i}"),
+                    data: vec![i as u8],
+                })
+            })
+            .collect();
+        let gets: Vec<_> = (0..32)
+            .map(|i| client.submit_op(Op::Get { key: format!("p-{i}") }))
+            .collect();
+        for p in puts {
+            p.wait().unwrap().into_unit().unwrap();
+        }
+        for (i, g) in gets.into_iter().enumerate() {
+            assert_eq!(
+                g.wait().unwrap().into_value().unwrap().map(|b| b.to_vec()),
+                Some(vec![i as u8])
+            );
+        }
+        assert_eq!(client.in_flight(), 0);
+    }
+
+    #[test]
+    fn concurrent_threads_share_one_connection() {
+        let server = KvServer::spawn().unwrap();
+        let client = Arc::new(KvClient::connect(server.addr).unwrap());
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let c = client.clone();
+                std::thread::spawn(move || {
+                    for i in 0..32 {
+                        let key = format!("t{t}-{i}");
+                        c.set(&key, Bytes(vec![t as u8, i as u8])).unwrap();
+                        assert_eq!(
+                            c.get(&key).unwrap(),
+                            Some(Bytes(vec![t as u8, i as u8]))
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let (keys, _, _) = client.stats().unwrap();
+        assert_eq!(keys, 128);
+    }
+
+    #[test]
+    fn server_death_fails_in_flight_and_later_ops() {
+        let mut server = KvServer::spawn().unwrap();
+        let client = KvClient::connect(server.addr).unwrap();
+        client.ping().unwrap();
+        // Park an op server-side, then kill the server under it.
+        let parked = client.submit(Request::WaitGet {
+            key: "never-set".into(),
+            timeout_ms: 30_000,
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        server.shutdown();
+        assert!(parked.wait().is_err(), "in-flight op must fail");
+        // The pipe is dead: later submissions fail fast, without parking.
+        let t0 = std::time::Instant::now();
+        assert!(client.submit_op(Op::Get { key: "k".into() }).wait().is_err());
+        assert!(t0.elapsed() < Duration::from_secs(2));
+        assert!(client.ping().is_err());
+    }
+
+    #[test]
+    fn subscribe_is_rejected_not_pipelined() {
+        let server = KvServer::spawn().unwrap();
+        let client = KvClient::connect(server.addr).unwrap();
+        let res = client
+            .submit(Request::Subscribe { channels: vec!["c".into()] })
+            .wait();
+        assert!(res.is_err(), "push-mode request must not enter the pipe");
+        // The pipe is unharmed: ordinary traffic keeps flowing.
+        client.ping().unwrap();
+    }
+
+    #[test]
+    fn drop_with_in_flight_op_reaps_reader() {
+        let server = KvServer::spawn().unwrap();
+        let client = KvClient::connect(server.addr).unwrap();
+        let parked = client.submit(Request::WaitGet {
+            key: "never-set".into(),
+            timeout_ms: 30_000,
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        let t0 = std::time::Instant::now();
+        drop(client); // shuts the socket down and joins the reader
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "drop must not wait out the parked op"
+        );
+        assert!(parked.wait().is_err(), "orphaned handle completes with error");
     }
 }

@@ -15,7 +15,10 @@
 //! The storage engine ([`KvState`]) is usable embedded (zero-copy,
 //! in-process) or over TCP ([`KvClient`]/[`KvSubscriber`]); connectors can
 //! pick either, which lets benches separate protocol overhead from engine
-//! overhead.
+//! overhead. The TCP client is *pipelined* ([`KvClient`]): N in-flight
+//! requests share one socket, with a reader thread matching FIFO
+//! responses to [`Pending`](crate::ops::Pending) completion handles —
+//! the wire half of the nonblocking submission API in [`crate::ops`].
 
 mod client;
 mod protocol;

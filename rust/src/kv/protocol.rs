@@ -7,6 +7,13 @@
 //! proxy resolution can park server-side instead of client-side polling.
 //! The batched pair (`MGet`/`MPut`) carries whole key sets in one frame —
 //! the wire half of the shard fabric's `get_many`/`put_many` fast path.
+//!
+//! The protocol is strictly request/response FIFO per connection (the
+//! server answers frames in arrival order; `Subscribe` flips a connection
+//! into push mode and out of this contract). That ordering invariant is
+//! what lets the pipelined [`KvClient`](crate::kv::KvClient) keep N
+//! requests in flight on one socket and match responses to completion
+//! handles by queue position alone — no request ids on the wire.
 
 use std::io::{Read, Write};
 

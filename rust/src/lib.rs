@@ -37,6 +37,17 @@
 //! fabric** ([`broker::fabric`]) spreads a topic's partitions across N
 //! broker instances with the same ring, preserving per-partition order
 //! while produce/fetch throughput grows with the instance count.
+//!
+//! The client-side data plane is **submission-based** ([`ops`]): a typed
+//! [`Op`](ops::Op) names one connector operation, a
+//! [`Pending`](ops::Pending) is the condvar-backed completion handle, and
+//! [`Connector::submit`](store::Connector::submit) turns any channel into
+//! a nonblocking endpoint. The TCP KV client pipelines submitted ops on
+//! one socket (a reader thread matches FIFO responses to handles), a
+//! shared fixed-size reactor pool ([`ops::reactor`]) drives blocking
+//! bridges and every fan-out without per-call thread spawns, and the
+//! [`store`] surfaces it as `put_async`/`get_async`/`proxy_async` so
+//! resolution overlaps with compute.
 
 pub mod apps;
 pub mod benchlib;
@@ -49,6 +60,7 @@ pub mod futures;
 pub mod kv;
 pub mod metrics;
 pub mod netsim;
+pub mod ops;
 pub mod ownership;
 pub mod proxy;
 pub mod rng;
@@ -71,6 +83,7 @@ pub mod prelude {
     pub use crate::codec::{Bytes, Decode, Encode, F32s};
     pub use crate::error::{Error, Result};
     pub use crate::futures::ProxyFuture;
+    pub use crate::ops::{Op, OpResult, Pending};
     pub use crate::ownership::lifetime::StoreLifetimeExt;
     pub use crate::ownership::{
         borrow, clone_owned, into_owned, mut_borrow, update, ContextLifetime,
@@ -83,7 +96,8 @@ pub mod prelude {
     };
     pub use crate::store::{
         Blob, Connector, ConnectorDesc, FileConnector, MemoryConnector,
-        MultiConnector, Store, TcpKvConnector, ThrottledConnector,
+        MultiConnector, PendingGet, PendingWrite, Store, TcpKvConnector,
+        ThrottledConnector,
     };
     pub use crate::stream::{
         Event, Metadata, Publisher, StreamConsumer, StreamProducer, Subscriber,

@@ -1,0 +1,483 @@
+//! Nonblocking op submission: the typed operation layer of the connector
+//! data plane.
+//!
+//! The paper's patterns win by *overlapping* wide-area reference
+//! resolution with compute, but a call-and-block connector API forces one
+//! round trip per blocked thread. This module is the submission/completion
+//! redesign: an [`Op`] names one connector operation as data, a
+//! [`Pending<T>`] is the condvar-backed completion handle the submitter
+//! holds, and [`Connector::submit`](crate::store::Connector::submit)
+//! turns any channel into a submission endpoint. Channels with a native
+//! pipeline (the TCP KV client) complete handles from a reader thread so
+//! N in-flight ops share one round-trip stream; everything else falls
+//! back to a blocking bridge, and the shared [`reactor`] pool turns those
+//! bridges into overlapped work without per-call thread spawns.
+//!
+//! Handle semantics (deliberately boring, fully specified):
+//!
+//! * [`Pending::wait`] blocks until completion and *takes* the result;
+//!   a second take reports an error rather than hanging or panicking;
+//! * [`Pending::wait_timeout`] / [`Pending::try_take`] are the bounded
+//!   and nonblocking variants (`Ok(None)` = not ready yet);
+//! * dropping a [`Pending`] while the op is in flight is safe: the
+//!   completer's write lands in a slot nobody reads, and nothing leaks;
+//! * dropping a [`Completer`] without completing (a dead worker, a torn
+//!   connection) completes the handle with an error, so waiters never
+//!   park forever.
+
+pub mod reactor;
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::store::{Blob, Connector};
+
+/// One connector operation, as data. The typed twin of the blocking
+/// [`Connector`](crate::store::Connector) method set: everything a
+/// channel needs to execute the op is owned by the variant, so an `Op`
+/// can cross thread and queue boundaries freely.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Store a value ([`Connector::put`]).
+    Put { key: String, data: Vec<u8> },
+    /// Fetch a value ([`Connector::get`]).
+    Get { key: String },
+    /// Remove a key, idempotent ([`Connector::evict`]).
+    Evict { key: String },
+    /// Existence probe ([`Connector::exists`]).
+    Exists { key: String },
+    /// Batched put ([`Connector::put_many`]).
+    PutMany { items: Vec<(String, Vec<u8>)> },
+    /// Batched get, positionally aligned ([`Connector::get_many`]).
+    GetMany { keys: Vec<String> },
+    /// Batched eviction sweep ([`Connector::delete_many`]).
+    DeleteMany { keys: Vec<String> },
+    /// Batched existence probe ([`Connector::exists_many`]).
+    ExistsMany { keys: Vec<String> },
+}
+
+/// Completion value of a submitted [`Op`], mirroring the blocking return
+/// types variant-for-variant.
+#[derive(Debug, Clone)]
+pub enum OpResult {
+    /// `Put` / `Evict` / `PutMany` / `DeleteMany` completed.
+    Unit,
+    /// `Get` result (`None` = missing).
+    Value(Option<Blob>),
+    /// `GetMany` result, positionally aligned with the request keys.
+    Values(Vec<Option<Blob>>),
+    /// `Exists` result.
+    Bool(bool),
+    /// `ExistsMany` result, positionally aligned with the request keys.
+    Bools(Vec<bool>),
+}
+
+fn shape_err(wanted: &str, got: &OpResult) -> Error {
+    Error::Protocol(format!("expected {wanted} completion, got {got:?}"))
+}
+
+impl OpResult {
+    /// Unwrap a `Put`/`Evict`/`PutMany`/`DeleteMany` completion.
+    pub fn into_unit(self) -> Result<()> {
+        match self {
+            OpResult::Unit => Ok(()),
+            other => Err(shape_err("unit", &other)),
+        }
+    }
+
+    /// Unwrap a `Get` completion.
+    pub fn into_value(self) -> Result<Option<Blob>> {
+        match self {
+            OpResult::Value(v) => Ok(v),
+            other => Err(shape_err("value", &other)),
+        }
+    }
+
+    /// Unwrap a `GetMany` completion.
+    pub fn into_values(self) -> Result<Vec<Option<Blob>>> {
+        match self {
+            OpResult::Values(v) => Ok(v),
+            other => Err(shape_err("values", &other)),
+        }
+    }
+
+    /// Unwrap an `Exists` completion.
+    pub fn into_bool(self) -> Result<bool> {
+        match self {
+            OpResult::Bool(v) => Ok(v),
+            other => Err(shape_err("bool", &other)),
+        }
+    }
+
+    /// Unwrap an `ExistsMany` completion.
+    pub fn into_bools(self) -> Result<Vec<bool>> {
+        match self {
+            OpResult::Bools(v) => Ok(v),
+            other => Err(shape_err("bools", &other)),
+        }
+    }
+}
+
+/// Execute an [`Op`] through a channel's blocking methods (the bridge the
+/// default [`Connector::submit`](crate::store::Connector::submit) and the
+/// reactor pool both ride).
+pub fn execute<C: Connector + ?Sized>(conn: &C, op: Op) -> Result<OpResult> {
+    Ok(match op {
+        Op::Put { key, data } => {
+            conn.put(&key, data)?;
+            OpResult::Unit
+        }
+        Op::Get { key } => OpResult::Value(conn.get(&key)?),
+        Op::Evict { key } => {
+            conn.evict(&key)?;
+            OpResult::Unit
+        }
+        Op::Exists { key } => OpResult::Bool(conn.exists(&key)?),
+        Op::PutMany { items } => {
+            conn.put_many(items)?;
+            OpResult::Unit
+        }
+        Op::GetMany { keys } => OpResult::Values(conn.get_many(&keys)?),
+        Op::DeleteMany { keys } => {
+            conn.delete_many(&keys)?;
+            OpResult::Unit
+        }
+        Op::ExistsMany { keys } => OpResult::Bools(conn.exists_many(&keys)?),
+    })
+}
+
+/// Submit an op so the *caller* never blocks, whatever the channel
+/// offers: channels whose
+/// [`submit`](crate::store::Connector::submit) is natively nonblocking
+/// (the pipelined TCP client) get the op on the wire directly; blocking
+/// bridges are driven by a shared [`reactor`] worker instead of the
+/// caller. This is the submission entry point the async [`Store`]
+/// (`put_async`/`get_async`) and the fan-out paths build on.
+///
+/// [`Store`]: crate::store::Store
+pub fn submit(conn: &Arc<dyn Connector>, op: Op) -> Pending<OpResult> {
+    if conn.submits_nonblocking() {
+        conn.submit(op)
+    } else {
+        let conn = conn.clone();
+        reactor::global().spawn(move || conn.submit(op).wait())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Completion handles
+// ---------------------------------------------------------------------
+
+enum Slot<T> {
+    /// Submitted, not yet completed.
+    InFlight,
+    /// Completed; the value waits to be taken.
+    Ready(Result<T>),
+    /// The value was taken by a waiter.
+    Taken,
+}
+
+struct Shared<T> {
+    slot: Mutex<Slot<T>>,
+    cv: Condvar,
+}
+
+/// Consumer half of a completion: the handle a submitter holds. Condvar
+/// backed, zero dependencies. Cheap to create; safe to drop at any point
+/// (an in-flight completion lands in a slot nobody reads).
+pub struct Pending<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Producer half of a completion. Completing consumes it; dropping it
+/// un-completed fails the handle so waiters never park forever.
+pub struct Completer<T> {
+    shared: Arc<Shared<T>>,
+    completed: bool,
+}
+
+/// Create a connected completer/handle pair.
+pub fn pending<T>() -> (Completer<T>, Pending<T>) {
+    let shared = Arc::new(Shared {
+        slot: Mutex::new(Slot::InFlight),
+        cv: Condvar::new(),
+    });
+    (
+        Completer { shared: shared.clone(), completed: false },
+        Pending { shared },
+    )
+}
+
+fn already_taken() -> Error {
+    Error::Config("completion already taken".into())
+}
+
+impl<T> Pending<T> {
+    /// An already-completed handle (what a blocking bridge returns).
+    pub fn ready(result: Result<T>) -> Pending<T> {
+        Pending {
+            shared: Arc::new(Shared {
+                slot: Mutex::new(Slot::Ready(result)),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Whether the op has completed (taken counts as completed).
+    pub fn is_complete(&self) -> bool {
+        !matches!(*self.shared.slot.lock().unwrap(), Slot::InFlight)
+    }
+
+    /// Block until completion and take the result. Taking twice reports
+    /// an error (the value moved out on the first take).
+    pub fn wait(&self) -> Result<T> {
+        let mut slot = self.shared.slot.lock().unwrap();
+        loop {
+            match &*slot {
+                Slot::InFlight => slot = self.shared.cv.wait(slot).unwrap(),
+                Slot::Taken => return Err(already_taken()),
+                Slot::Ready(_) => {
+                    match std::mem::replace(&mut *slot, Slot::Taken) {
+                        Slot::Ready(res) => return res,
+                        _ => unreachable!("matched Ready above"),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Bounded wait: `Ok(None)` if the op is still in flight when the
+    /// timeout elapses (the handle stays usable; wait again later).
+    pub fn wait_timeout(&self, timeout: Duration) -> Result<Option<T>> {
+        let deadline = Instant::now() + timeout;
+        let mut slot = self.shared.slot.lock().unwrap();
+        loop {
+            match &*slot {
+                Slot::InFlight => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return Ok(None);
+                    }
+                    let (guard, _) = self
+                        .shared
+                        .cv
+                        .wait_timeout(slot, deadline - now)
+                        .unwrap();
+                    slot = guard;
+                }
+                Slot::Taken => return Err(already_taken()),
+                Slot::Ready(_) => {
+                    match std::mem::replace(&mut *slot, Slot::Taken) {
+                        Slot::Ready(res) => return res.map(Some),
+                        _ => unreachable!("matched Ready above"),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Nonblocking take: `Ok(None)` while the op is still in flight.
+    pub fn try_take(&self) -> Result<Option<T>> {
+        let mut slot = self.shared.slot.lock().unwrap();
+        match &*slot {
+            Slot::InFlight => Ok(None),
+            Slot::Taken => Err(already_taken()),
+            Slot::Ready(_) => match std::mem::replace(&mut *slot, Slot::Taken) {
+                Slot::Ready(res) => res.map(Some),
+                _ => unreachable!("matched Ready above"),
+            },
+        }
+    }
+}
+
+impl<T> std::fmt::Debug for Pending<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let state = match *self.shared.slot.lock().unwrap() {
+            Slot::InFlight => "in-flight",
+            Slot::Ready(_) => "ready",
+            Slot::Taken => "taken",
+        };
+        f.debug_struct("Pending").field("state", &state).finish()
+    }
+}
+
+impl<T> Completer<T> {
+    /// Complete the handle and wake every waiter.
+    pub fn complete(mut self, result: Result<T>) {
+        self.fill(result);
+    }
+
+    fn fill(&mut self, result: Result<T>) {
+        if self.completed {
+            return;
+        }
+        self.completed = true;
+        let mut slot = self.shared.slot.lock().unwrap();
+        if matches!(*slot, Slot::InFlight) {
+            *slot = Slot::Ready(result);
+        }
+        drop(slot);
+        self.shared.cv.notify_all();
+    }
+}
+
+impl<T> Drop for Completer<T> {
+    /// A completer that dies without completing (worker panic, torn
+    /// connection) fails the handle instead of stranding its waiters.
+    fn drop(&mut self) {
+        self.fill(Err(Error::Connector(
+            "operation abandoned: completer dropped before completion".into(),
+        )));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ready_handle_completes_immediately() {
+        let p = Pending::ready(Ok(7u32));
+        assert!(p.is_complete());
+        assert_eq!(p.wait().unwrap(), 7);
+        // Take-after-take errors rather than hanging.
+        assert!(p.wait().is_err());
+        assert!(p.try_take().is_err());
+    }
+
+    #[test]
+    fn complete_wakes_waiter() {
+        let (completer, handle) = pending::<u64>();
+        assert!(!handle.is_complete());
+        assert_eq!(handle.try_take().unwrap(), None);
+        let waiter = std::thread::spawn(move || handle.wait());
+        std::thread::sleep(Duration::from_millis(20));
+        completer.complete(Ok(42));
+        assert_eq!(waiter.join().unwrap().unwrap(), 42);
+    }
+
+    #[test]
+    fn wait_timeout_expires_then_succeeds() {
+        let (completer, handle) = pending::<u8>();
+        assert_eq!(
+            handle.wait_timeout(Duration::from_millis(30)).unwrap(),
+            None
+        );
+        completer.complete(Ok(5));
+        assert_eq!(
+            handle.wait_timeout(Duration::from_millis(30)).unwrap(),
+            Some(5)
+        );
+        assert!(handle.try_take().is_err());
+    }
+
+    #[test]
+    fn dropped_completer_fails_handle() {
+        let (completer, handle) = pending::<u8>();
+        drop(completer);
+        assert!(handle.wait().is_err());
+    }
+
+    #[test]
+    fn dropped_handle_is_safe() {
+        let (completer, handle) = pending::<Vec<u8>>();
+        drop(handle);
+        completer.complete(Ok(vec![1; 1024])); // lands nowhere, leaks nothing
+    }
+
+    #[test]
+    fn error_completion_propagates() {
+        let (completer, handle) = pending::<u8>();
+        completer.complete(Err(Error::Connector("boom".into())));
+        match handle.wait() {
+            Err(Error::Connector(m)) => assert!(m.contains("boom")),
+            other => panic!("expected connector error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn op_result_shapes() {
+        assert!(OpResult::Unit.into_unit().is_ok());
+        assert!(OpResult::Bool(true).into_bool().unwrap());
+        assert!(OpResult::Unit.into_value().is_err());
+        assert!(OpResult::Value(None).into_values().is_err());
+        assert_eq!(
+            OpResult::Bools(vec![true, false]).into_bools().unwrap(),
+            vec![true, false]
+        );
+        assert_eq!(OpResult::Values(Vec::new()).into_values().unwrap(), Vec::new());
+    }
+
+    #[test]
+    fn execute_bridges_every_op() {
+        let conn = crate::store::MemoryConnector::new();
+        execute(&*conn, Op::Put { key: "k".into(), data: vec![1, 2] })
+            .unwrap()
+            .into_unit()
+            .unwrap();
+        assert_eq!(
+            execute(&*conn, Op::Get { key: "k".into() })
+                .unwrap()
+                .into_value()
+                .unwrap()
+                .map(|b| b.to_vec()),
+            Some(vec![1, 2])
+        );
+        assert!(execute(&*conn, Op::Exists { key: "k".into() })
+            .unwrap()
+            .into_bool()
+            .unwrap());
+        execute(
+            &*conn,
+            Op::PutMany {
+                items: vec![("a".into(), vec![1]), ("b".into(), vec![2])],
+            },
+        )
+        .unwrap()
+        .into_unit()
+        .unwrap();
+        let got = execute(
+            &*conn,
+            Op::GetMany { keys: vec!["a".into(), "nope".into(), "b".into()] },
+        )
+        .unwrap()
+        .into_values()
+        .unwrap();
+        assert_eq!(
+            got.iter().map(|b| b.as_ref().map(|v| v.to_vec())).collect::<Vec<_>>(),
+            vec![Some(vec![1]), None, Some(vec![2])]
+        );
+        assert_eq!(
+            execute(
+                &*conn,
+                Op::ExistsMany { keys: vec!["a".into(), "ghost".into()] }
+            )
+            .unwrap()
+            .into_bools()
+            .unwrap(),
+            vec![true, false]
+        );
+        execute(&*conn, Op::DeleteMany { keys: vec!["a".into(), "b".into()] })
+            .unwrap()
+            .into_unit()
+            .unwrap();
+        execute(&*conn, Op::Evict { key: "k".into() })
+            .unwrap()
+            .into_unit()
+            .unwrap();
+        assert_eq!(conn.len().unwrap(), 0);
+    }
+
+    #[test]
+    fn submit_helper_drives_blocking_channels() {
+        let conn = crate::store::MemoryConnector::new();
+        let h = submit(&conn, Op::Put { key: "s".into(), data: vec![9] });
+        h.wait().unwrap().into_unit().unwrap();
+        let h = submit(&conn, Op::Get { key: "s".into() });
+        assert_eq!(
+            h.wait().unwrap().into_value().unwrap().map(|b| b.to_vec()),
+            Some(vec![9])
+        );
+    }
+}

@@ -1,0 +1,425 @@
+//! Shared fixed-size reactor pool: the threads that drive submitted ops.
+//!
+//! Every fan-out in the repo used to pay a `thread::scope` spawn per shard
+//! per call — fine for bulk transfers, ruinous for small batched ops where
+//! the spawn costs more than the op. This pool replaces all of those
+//! copies: a process-wide fixed set of workers drains a queue of
+//! short-lived jobs, and [`fan_out`] / [`fan_out_ops`] are the shared
+//! fan-out utilities the shard router, the elastic migration daemon, and
+//! the broker producer route through. (The broker *consumer* sweep stays
+//! on scoped threads on purpose: it long-polls, and parked jobs are
+//! exactly what this pool must not host.)
+//!
+//! Scheduling rules (what makes the pool deadlock-free):
+//!
+//! * jobs must be *short-lived and bounded* — one batched op, one
+//!   migration batch. Nothing that parks indefinitely belongs here;
+//! * a fan-out runs its first job on the caller and collects the rest
+//!   with a *helping* join: while its sub-jobs are pending it drains
+//!   other queued tasks, so a worker waiting on its own fan-out still
+//!   drives the pool — nested fabrics (elastic over sharded over flaky)
+//!   keep their parallelism and can never deadlock on their own workers;
+//! * the queue has a high-water mark: past it, submissions run inline on
+//!   the submitter (backpressure — fast producers degrade to blocking
+//!   behaviour instead of queueing unbounded payloads);
+//! * channels whose [`submit`](crate::store::Connector::submit) is
+//!   natively nonblocking (the pipelined TCP client) bypass the pool
+//!   entirely in [`fan_out_ops`] — their in-flight ops live on the wire,
+//!   not on a parked worker.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex, OnceLock};
+
+use crate::error::{Error, Result};
+use crate::store::Connector;
+
+use super::{pending, Op, OpResult, Pending};
+
+/// A unit of pool work.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Queue high-water mark: above this, submissions run inline on the
+/// caller instead of enqueueing. That is the pool's backpressure — a
+/// producer outrunning the workers degrades to the old blocking behaviour
+/// (self-throttling) instead of growing an unbounded queue of payloads.
+const MAX_QUEUED: usize = 1024;
+
+/// A typed fan-out job: runs on a worker (or inline), produces a result.
+pub type Job<T> = Box<dyn FnOnce() -> Result<T> + Send + 'static>;
+
+/// The shared worker pool. One per process ([`global`]).
+pub struct Reactor {
+    queue: Mutex<VecDeque<Task>>,
+    cv: Condvar,
+    workers: usize,
+}
+
+thread_local! {
+    static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+    /// How many helped tasks are live on this thread's stack (the helping
+    /// join runs queued tasks while it waits, which can nest).
+    static HELP_DEPTH: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Beyond this helping depth a fan-out runs its jobs inline instead of
+/// queueing them: a stack-growth safety valve for pathological nesting
+/// (deep help-recursion under a packed queue), not a hot path.
+const MAX_HELP_DEPTH: usize = 32;
+
+fn pool_size() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(4, 16)
+}
+
+/// The process-wide reactor; workers start lazily on first use.
+pub fn global() -> &'static Reactor {
+    static POOL: OnceLock<Reactor> = OnceLock::new();
+    static STARTED: std::sync::Once = std::sync::Once::new();
+    let reactor = POOL.get_or_init(|| Reactor {
+        queue: Mutex::new(VecDeque::new()),
+        cv: Condvar::new(),
+        workers: pool_size(),
+    });
+    STARTED.call_once(|| {
+        for i in 0..reactor.workers {
+            std::thread::Builder::new()
+                .name(format!("ops-reactor-{i}"))
+                .spawn(move || worker_loop(reactor))
+                .expect("spawn reactor worker");
+        }
+    });
+    reactor
+}
+
+fn worker_loop(reactor: &'static Reactor) {
+    IN_WORKER.with(|f| f.set(true));
+    loop {
+        let task = {
+            let mut q = reactor.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                q = reactor.cv.wait(q).unwrap();
+            }
+        };
+        task();
+    }
+}
+
+fn run_caught<T>(f: impl FnOnce() -> Result<T>) -> Result<T> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(f))
+        .unwrap_or_else(|_| Err(Error::Connector("reactor job panicked".into())))
+}
+
+impl Reactor {
+    /// Number of worker threads.
+    pub fn worker_count(&self) -> usize {
+        self.workers
+    }
+
+    /// Whether the calling thread is a reactor worker (used to run nested
+    /// fan-outs inline instead of deadlocking on the pool).
+    pub fn in_worker() -> bool {
+        IN_WORKER.with(|f| f.get())
+    }
+
+    /// Run a job on the pool and hand back its completion. Called from a
+    /// worker — or with the queue past its high-water mark — the job runs
+    /// inline and the handle is already complete (backpressure: the
+    /// caller pays instead of the queue growing without bound).
+    pub fn spawn<T, F>(&self, f: F) -> Pending<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> Result<T> + Send + 'static,
+    {
+        if Self::in_worker() || self.saturated() {
+            return Pending::ready(run_caught(f));
+        }
+        let (completer, handle) = pending();
+        self.enqueue(Box::new(move || completer.complete(run_caught(f))));
+        handle
+    }
+
+    /// Run a job on the pool with no completion handle (the migration
+    /// daemon's batch jobs). Never runs inline from a worker — a job can
+    /// re-enqueue itself (bounded retries) without recursing — but a
+    /// saturated queue makes the *submitting* caller run it inline, the
+    /// same backpressure as [`Reactor::spawn`].
+    pub fn spawn_detached<F: FnOnce() + Send + 'static>(&self, f: F) {
+        if !Self::in_worker() && self.saturated() {
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+            return;
+        }
+        self.enqueue(Box::new(move || {
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+        }));
+    }
+
+    fn saturated(&self) -> bool {
+        self.queue.lock().unwrap().len() >= MAX_QUEUED
+    }
+
+    fn enqueue(&self, task: Task) {
+        self.queue.lock().unwrap().push_back(task);
+        self.cv.notify_one();
+    }
+
+    /// Queue a fan-out sub-job. Unlike [`Reactor::spawn`] this enqueues
+    /// even from a worker — [`join_helping`](Reactor::join_helping) is
+    /// what keeps that deadlock-free — so nested fan-outs keep their
+    /// parallelism. Saturation still runs inline (backpressure).
+    fn spawn_for_join<T, F>(&self, f: F) -> Pending<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> Result<T> + Send + 'static,
+    {
+        if self.saturated() {
+            return Pending::ready(run_caught(f));
+        }
+        let (completer, handle) = pending();
+        self.enqueue(Box::new(move || completer.complete(run_caught(f))));
+        handle
+    }
+
+    /// Wait for a fan-out sub-job while *helping*: drain queued tasks
+    /// until the handle completes. A worker blocked on its own sub-jobs
+    /// keeps executing pool work (possibly those very sub-jobs), so the
+    /// pool cannot deadlock on nested fan-outs. Once the queue is
+    /// observed empty the sub-job is running (or done) on some thread and
+    /// a plain blocking wait is safe.
+    fn join_helping<T>(&self, handle: &Pending<T>) -> Result<T> {
+        loop {
+            if let Some(v) = handle.try_take()? {
+                return Ok(v);
+            }
+            let task = self.queue.lock().unwrap().pop_front();
+            match task {
+                Some(task) => {
+                    // Tasks never unwind (every job body catches), so the
+                    // depth always unwinds with the call.
+                    HELP_DEPTH.with(|d| d.set(d.get() + 1));
+                    task();
+                    HELP_DEPTH.with(|d| d.set(d.get() - 1));
+                }
+                None => return handle.wait(),
+            }
+        }
+    }
+}
+
+/// Run a labelled set of jobs concurrently on the shared pool and collect
+/// every result. The caller always executes the first job itself (a
+/// saturated pool slows the rest, never blocks them) and collects the
+/// rest with a helping join, so fan-outs nest — from user threads or from
+/// pool workers — without losing parallelism or risking deadlock. Labels
+/// never cross threads, so they carry whatever the call site needs to
+/// reassemble results; result order is not input order — match by label.
+pub fn fan_out<L, T: Send + 'static>(
+    jobs: Vec<(L, Job<T>)>,
+) -> Vec<(L, Result<T>)> {
+    if jobs.is_empty() {
+        return Vec::new();
+    }
+    if HELP_DEPTH.with(|d| d.get()) >= MAX_HELP_DEPTH {
+        return jobs
+            .into_iter()
+            .map(|(label, job)| (label, run_caught(job)))
+            .collect();
+    }
+    let reactor = global();
+    let mut jobs = jobs;
+    let (first_label, first_job) = jobs.remove(0);
+    let handles: Vec<(L, Pending<T>)> = jobs
+        .into_iter()
+        .map(|(label, job)| (label, reactor.spawn_for_join(job)))
+        .collect();
+    let mut out = Vec::with_capacity(handles.len() + 1);
+    out.push((first_label, run_caught(first_job)));
+    for (label, handle) in handles {
+        out.push((label, reactor.join_helping(&handle)));
+    }
+    out
+}
+
+/// Fan a set of connector ops out concurrently: the shared-pool twin of a
+/// batched multi-channel round. Channels with a nonblocking native
+/// [`submit`](crate::store::Connector::submit) go straight onto their
+/// pipelined wire (no pool thread consumed); blocking bridges become pool
+/// jobs. Results are labelled like [`fan_out`].
+pub fn fan_out_ops(
+    ops: Vec<(usize, std::sync::Arc<dyn Connector>, Op)>,
+) -> Vec<(usize, Result<OpResult>)> {
+    let mut direct: Vec<(usize, Pending<OpResult>)> = Vec::new();
+    let mut pooled: Vec<(usize, Job<OpResult>)> = Vec::new();
+    for (label, conn, op) in ops {
+        if conn.submits_nonblocking() {
+            direct.push((label, conn.submit(op)));
+        } else {
+            pooled.push((label, Box::new(move || conn.submit(op).wait())));
+        }
+    }
+    let mut out = fan_out(pooled);
+    for (label, handle) in direct {
+        out.push((label, handle.wait()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn spawn_runs_job_off_thread() {
+        let h = global().spawn(|| {
+            let on_worker = std::thread::current()
+                .name()
+                .map(|n| n.starts_with("ops-reactor-"));
+            Ok(on_worker)
+        });
+        assert_eq!(h.wait().unwrap(), Some(true));
+    }
+
+    #[test]
+    fn spawn_detached_runs() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h2 = hits.clone();
+        global().spawn_detached(move || {
+            h2.fetch_add(1, Ordering::SeqCst);
+        });
+        let t0 = Instant::now();
+        while hits.load(Ordering::SeqCst) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "detached job lost");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    #[test]
+    fn fan_out_collects_all_labels() {
+        let jobs: Vec<(usize, Job<usize>)> = (0..8)
+            .map(|i| (i, Box::new(move || Ok(i * i)) as Job<usize>))
+            .collect();
+        let mut results = fan_out(jobs);
+        results.sort_by_key(|(label, _)| *label);
+        for (label, res) in results {
+            assert_eq!(res.unwrap(), label * label);
+        }
+    }
+
+    #[test]
+    fn fan_out_overlaps_slow_jobs() {
+        // 4 jobs x 80ms sequential = 320ms. The bound leaves room for a
+        // full extra wave of pool contention from concurrently running
+        // tests (the pool is process-global) while still proving overlap.
+        let jobs: Vec<(usize, Job<()>)> = (0..4)
+            .map(|i| {
+                (
+                    i,
+                    Box::new(move || {
+                        std::thread::sleep(Duration::from_millis(80));
+                        Ok(())
+                    }) as Job<()>,
+                )
+            })
+            .collect();
+        let t0 = Instant::now();
+        let results = fan_out(jobs);
+        let elapsed = t0.elapsed();
+        assert_eq!(results.len(), 4);
+        assert!(results.iter().all(|(_, r)| r.is_ok()));
+        assert!(
+            elapsed < Duration::from_millis(240),
+            "fan-out did not overlap: {elapsed:?}"
+        );
+    }
+
+    #[test]
+    fn fan_out_reports_panics_as_errors() {
+        let jobs: Vec<(usize, Job<u8>)> = vec![
+            (0, Box::new(|| Ok(1))),
+            (1, Box::new(|| panic!("injected"))),
+        ];
+        let mut results = fan_out(jobs);
+        results.sort_by_key(|(label, _)| *label);
+        assert_eq!(results[0].1.as_ref().unwrap(), &1);
+        assert!(results[1].1.is_err());
+    }
+
+    #[test]
+    fn nested_fan_out_completes_from_worker() {
+        // A fan-out from inside a pool worker must finish even though its
+        // sub-jobs land on the same pool: the helping join drives them.
+        let h = global().spawn(|| {
+            assert!(Reactor::in_worker());
+            let jobs: Vec<(usize, Job<usize>)> = (0..4)
+                .map(|i| (i, Box::new(move || Ok(i + 1)) as Job<usize>))
+                .collect();
+            let total: usize = fan_out(jobs)
+                .into_iter()
+                .map(|(_, r)| r.unwrap())
+                .sum();
+            Ok(total)
+        });
+        assert_eq!(h.wait().unwrap(), 10);
+    }
+
+    #[test]
+    fn saturating_nested_fan_outs_make_progress() {
+        // More simultaneous fan-outs than workers, each nested one level:
+        // the helping join must drive everything to completion without
+        // deadlocking the fixed-size pool.
+        let outer: Vec<(usize, Job<usize>)> = (0..16)
+            .map(|i| {
+                (
+                    i,
+                    Box::new(move || {
+                        let inner: Vec<(usize, Job<usize>)> = (0..4)
+                            .map(|j| {
+                                (j, Box::new(move || Ok(i + j)) as Job<usize>)
+                            })
+                            .collect();
+                        let mut acc = 0;
+                        for (_, r) in fan_out(inner) {
+                            acc += r?;
+                        }
+                        Ok(acc)
+                    }) as Job<usize>,
+                )
+            })
+            .collect();
+        let results = fan_out(outer);
+        assert_eq!(results.len(), 16);
+        for (i, res) in results {
+            assert_eq!(res.unwrap(), 4 * i + 6);
+        }
+    }
+
+    #[test]
+    fn fan_out_ops_mixes_channels() {
+        let conns: Vec<Arc<dyn Connector>> =
+            (0..3).map(|_| crate::store::MemoryConnector::new()).collect();
+        for (i, c) in conns.iter().enumerate() {
+            c.put("k", vec![i as u8]).unwrap();
+        }
+        let ops = conns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (i, c.clone(), Op::Get { key: "k".into() }))
+            .collect();
+        let mut results = fan_out_ops(ops);
+        results.sort_by_key(|(label, _)| *label);
+        for (i, (_, res)) in results.into_iter().enumerate() {
+            assert_eq!(
+                res.unwrap().into_value().unwrap().map(|b| b.to_vec()),
+                Some(vec![i as u8])
+            );
+        }
+    }
+}

@@ -131,7 +131,10 @@ impl Factory {
 /// Batch-prefetch the targets of unresolved proxies into the process-local
 /// blob cache, grouping keys by connector so each channel sees one batched
 /// `get_many` (one wire round trip on the KV connector; a parallel fan-out
-/// on the shard fabric). Streaming consumers call this on a window of
+/// on the shard fabric). Every group's batch is *submitted* before any
+/// result is collected ([`crate::ops::submit`]), so proxies spanning
+/// several channels resolve with overlapped round trips instead of one
+/// channel at a time. Streaming consumers call this on a window of
 /// pending proxies to amortize round trips; subsequent
 /// [`Proxy::resolve`] calls are then served from memory.
 ///
@@ -152,12 +155,19 @@ pub fn prefetch<T>(proxies: &[Proxy<T>]) -> Result<usize> {
         }
         groups.entry(desc_bytes).or_default().push(&p.factory);
     }
-    let mut fetched = 0;
+    // Submit every group's batched get, then collect: channels overlap.
+    let mut in_flight = Vec::with_capacity(groups.len());
     for (desc_bytes, factories) in groups {
         let conn = factories[0].connector()?;
         let keys: Vec<String> =
             factories.iter().map(|f| f.key.clone()).collect();
-        for (factory, blob) in factories.iter().zip(conn.get_many(&keys)?) {
+        let handle = crate::ops::submit(&conn, crate::ops::Op::GetMany { keys });
+        in_flight.push((desc_bytes, factories, handle));
+    }
+    let mut fetched = 0;
+    for (desc_bytes, factories, handle) in in_flight {
+        let blobs = handle.wait()?.into_values()?;
+        for (factory, blob) in factories.iter().zip(blobs) {
             if let Some(blob) = blob {
                 cache::global().put(&desc_bytes, &factory.key, blob);
                 fetched += 1;

@@ -14,7 +14,8 @@
 //!   [`Connector`](crate::store::Connector) that routes each key to its
 //!   replica set (R distinct shards), falls back to surviving replicas on
 //!   read miss/failure, and fans batched `put_many`/`get_many`/
-//!   `exists_many` traffic out to all shards in parallel. Its membership
+//!   `exists_many` traffic out to all shards in parallel as submitted ops
+//!   on the shared reactor pool ([`crate::ops::reactor`]). Its membership
 //!   is fixed at construction — one router is one *epoch* of the fabric.
 //! * [`rebalance`] — the control plane: [`ElasticShards`] owns a sequence
 //!   of router epochs and supports live
@@ -71,7 +72,7 @@ pub mod router;
 
 pub use rebalance::{
     connect_elastic, ElasticDesc, ElasticShards, ShardMembers,
-    MIGRATION_BATCH, MIGRATION_WORKERS,
+    MIGRATION_BATCH,
 };
 pub use ring::{hash_key, HashRing};
 pub use router::{ShardedConnector, ShardedDesc, DEFAULT_VNODES};

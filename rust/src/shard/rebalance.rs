@@ -11,10 +11,11 @@
 //!   [`ShardedConnector`] built with [stable ring
 //!   ids](ShardedConnector::with_shard_ids), so consistent hashing moves
 //!   only the ~1/N remapped keys;
-//! * a **migration daemon** (worker threads draining a batch queue) copies
-//!   exactly the remapped keys from the old placement to the new one with
-//!   batched `get_many`/`put_many` moves, then retires the stale copies
-//!   with `delete_many`;
+//! * a **migration daemon** (short-lived batch jobs on the shared reactor
+//!   pool, [`crate::ops::reactor`] — no per-rebalance thread spawns)
+//!   copies exactly the remapped keys from the old placement to the new
+//!   one with batched `get_many`/`put_many` moves, then retires the stale
+//!   copies with `delete_many`;
 //! * while the daemon drains, the router serves **read-through**: reads
 //!   try the new placement first and fall back to the old epoch (then
 //!   re-check the new placement, closing the copy/delete race), writes go
@@ -43,7 +44,7 @@
 //! operator signal, not a silent loss.
 
 use std::collections::{HashMap, HashSet, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
@@ -53,12 +54,15 @@ use crate::shard::router::{ShardedConnector, DEFAULT_VNODES};
 use crate::store::{Blob, Connector, ConnectorDesc};
 
 /// Keys per migration batch: one `get_many` + one `put_many` (plus the
-/// stale-copy `delete_many` sweep) per batch.
+/// stale-copy `delete_many` sweep) per batch. Each batch is one
+/// short-lived job on the shared reactor pool.
 pub const MIGRATION_BATCH: usize = 64;
 
-/// Worker threads draining the migration queue (capped at the number of
-/// batches, so small migrations don't spawn idle threads).
-pub const MIGRATION_WORKERS: usize = 4;
+/// Migration batch jobs in flight at once. Each lane is one single-batch
+/// job that chains the next batch when it settles, so a migration — no
+/// matter how large — occupies at most this many pool slots and never
+/// floods the shared queue ahead of data-plane work.
+const MIGRATION_LANES: usize = 4;
 
 /// A batch is retried this many times before its keys are abandoned at
 /// the old placement and counted in `keys_failed`.
@@ -209,17 +213,16 @@ struct MigrationBatch {
     attempts: u32,
 }
 
-struct MigrationQueue {
-    batches: VecDeque<MigrationBatch>,
-    in_flight: usize,
-}
-
-/// Everything a migration worker needs, owned per migration so stragglers
-/// can never touch a newer migration's work.
+/// Everything a migration batch job needs, owned per migration so
+/// stragglers can never touch a newer migration's work.
 struct MigrationCtx {
     token: u64,
-    queue: Mutex<MigrationQueue>,
-    cv: Condvar,
+    /// Batches waiting for a lane (retries re-enter here).
+    queue: Mutex<VecDeque<MigrationBatch>>,
+    /// Batches not yet terminally settled (moved or abandoned). The job
+    /// that drops this to zero retires the old epoch. A retried batch
+    /// stays outstanding — it re-queues itself instead of settling.
+    outstanding: AtomicUsize,
     old_router: Arc<ShardedConnector>,
     new_router: Arc<ShardedConnector>,
     old_members: HashMap<usize, Arc<dyn Connector>>,
@@ -474,77 +477,92 @@ impl ElasticShards {
             .chunks(MIGRATION_BATCH)
             .map(|c| MigrationBatch { keys: c.to_vec(), attempts: 0 })
             .collect();
-        let n_workers = MIGRATION_WORKERS.min(batches.len()).max(1);
+        let n_batches = batches.len();
         let ctx = Arc::new(MigrationCtx {
             token,
-            queue: Mutex::new(MigrationQueue { batches, in_flight: 0 }),
-            cv: Condvar::new(),
+            queue: Mutex::new(batches),
+            outstanding: AtomicUsize::new(n_batches),
             old_router,
             new_router,
             old_members: old_members.into_iter().collect(),
         });
-        for w in 0..n_workers {
-            let this = self.clone();
-            let ctx = ctx.clone();
-            std::thread::Builder::new()
-                .name(format!("rebalance-{}-{w}", inner.name))
-                .spawn(move || this.worker_loop(ctx))
-                .expect("spawn rebalance worker");
+        // The "daemon" is a bounded set of lanes on the shared reactor
+        // pool: each lane is one single-batch job that chains the next
+        // batch when it settles. No per-rebalance thread spawns, and a
+        // large migration can neither flood the shared queue ahead of
+        // data-plane work nor occupy more than MIGRATION_LANES slots.
+        for _ in 0..MIGRATION_LANES.min(n_batches) {
+            self.spawn_next_batch(ctx.clone());
         }
         Ok(())
     }
 
-    /// Migration daemon body: drain the batch queue; whichever worker
-    /// observes it fully drained retires the old epoch.
-    fn worker_loop(&self, ctx: Arc<MigrationCtx>) {
-        loop {
-            let batch = {
-                let mut q = ctx.queue.lock().unwrap();
-                loop {
-                    if let Some(b) = q.batches.pop_front() {
-                        q.in_flight += 1;
-                        break Some(b);
-                    }
-                    if q.in_flight == 0 {
-                        break None;
-                    }
-                    // Another worker may still fail and re-enqueue.
-                    q = ctx.cv.wait(q).unwrap();
-                }
-            };
-            let Some(batch) = batch else {
-                self.finalize_epoch(ctx.token);
-                return;
-            };
-            // A panicking batch must not wedge the queue (in_flight would
-            // never drop and peers would wait forever): convert it into an
-            // ordinary batch failure and let the retry path handle it.
-            let result = std::panic::catch_unwind(
-                std::panic::AssertUnwindSafe(|| {
-                    self.migrate_batch(&ctx, &batch.keys)
-                }),
-            )
-            .unwrap_or_else(|_| {
-                Err(Error::Connector("migration batch panicked".into()))
-            });
-            let m = &self.inner.metrics;
-            let mut q = ctx.queue.lock().unwrap();
-            q.in_flight -= 1;
-            if result.is_err() {
-                if batch.attempts + 1 < MAX_BATCH_ATTEMPTS {
-                    m.add(&m.batch_retries, 1);
-                    q.batches.push_back(MigrationBatch {
-                        keys: batch.keys,
-                        attempts: batch.attempts + 1,
-                    });
-                } else {
-                    // Abandoned: the keys stay at their old placement
-                    // (module docs spell out the consequences).
-                    m.add(&m.keys_failed, batch.keys.len() as u64);
-                }
+    /// Pull the next waiting batch (if any) onto a pool lane.
+    fn spawn_next_batch(&self, ctx: Arc<MigrationCtx>) {
+        let Some(batch) = ctx.queue.lock().unwrap().pop_front() else {
+            return; // lane retires; outstanding work is already in flight
+        };
+        let this = self.clone();
+        crate::ops::reactor::global()
+            .spawn_detached(move || this.run_batch(ctx, batch));
+    }
+
+    /// Migration lane body: process one batch, then chain the lane's next
+    /// batch. On a pool worker the chain goes back through the queue (one
+    /// job per batch, so data-plane jobs interleave FIFO with a long
+    /// migration); run inline — `spawn_detached` under a saturated pool
+    /// executes on the submitter — the lane stays iterative instead,
+    /// never recursing and never creating jobs the pool can't take.
+    fn run_batch(&self, ctx: Arc<MigrationCtx>, batch: MigrationBatch) {
+        let mut next = Some(batch);
+        while let Some(batch) = next.take() {
+            if self.process_batch(&ctx, batch) {
+                return; // migration fully settled; this lane retires
             }
-            ctx.cv.notify_all();
+            if crate::ops::reactor::Reactor::in_worker() {
+                self.spawn_next_batch(ctx);
+                return;
+            }
+            next = ctx.queue.lock().unwrap().pop_front();
         }
+    }
+
+    /// One lane step: move the keys, retry on failure with bounded
+    /// attempts, retire the old epoch when the last batch settles.
+    /// Returns true once the whole migration has settled.
+    fn process_batch(&self, ctx: &Arc<MigrationCtx>, batch: MigrationBatch) -> bool {
+        // A panicking batch must not strand the migration (outstanding
+        // would never reach zero): convert it into an ordinary batch
+        // failure and let the retry path handle it.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || self.migrate_batch(ctx, &batch.keys),
+        ))
+        .unwrap_or_else(|_| {
+            Err(Error::Connector("migration batch panicked".into()))
+        });
+        let m = &self.inner.metrics;
+        if result.is_err() {
+            if batch.attempts + 1 < MAX_BATCH_ATTEMPTS {
+                m.add(&m.batch_retries, 1);
+                // Still outstanding: back of the batch queue (a natural
+                // backoff — other batches go first). The push happens
+                // before the lane chains, so a lane can never observe an
+                // empty queue and retire while a retry still needs it.
+                ctx.queue.lock().unwrap().push_back(MigrationBatch {
+                    keys: batch.keys,
+                    attempts: batch.attempts + 1,
+                });
+                return false;
+            }
+            // Abandoned: the keys stay at their old placement (module
+            // docs spell out the consequences).
+            m.add(&m.keys_failed, batch.keys.len() as u64);
+        }
+        if ctx.outstanding.fetch_sub(1, Ordering::SeqCst) == 1 {
+            self.finalize_epoch(ctx.token);
+            return true;
+        }
+        false
     }
 
     /// Move one batch: read from the old placement, write to the new one,

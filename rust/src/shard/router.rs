@@ -5,13 +5,17 @@
 //! ring's successor walk); reads try the primary first and fall back to
 //! the remaining replicas on miss *or* failure, so a dead backend degrades
 //! throughput instead of availability. Batched ops group keys by shard and
-//! fan out in parallel, so aggregate throughput scales with the shard
-//! count instead of being bound by one channel.
+//! fan out in parallel over the shared reactor pool
+//! ([`crate::ops::reactor`]) as submitted [`Op`]s — no per-call thread
+//! spawns, and backends with a pipelined native submit (TCP) keep their
+//! in-flight sub-batches on the wire rather than on a parked worker.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
+use crate::ops::reactor::fan_out_ops;
+use crate::ops::{Op, OpResult};
 use crate::shard::ring::HashRing;
 use crate::store::{Blob, Connector, ConnectorDesc};
 
@@ -198,69 +202,52 @@ impl ShardedConnector {
         self.degraded_writes.load(Ordering::Relaxed)
     }
 
-    /// Fan a batched get out to every shard with a non-empty index group,
-    /// in parallel; `groups[shard]` holds indices into `keys`.
+    /// Fan a batched get out to every shard with a non-empty index group
+    /// as submitted ops on the shared reactor pool; `groups[shard]` holds
+    /// indices into `keys`.
     fn fan_out_get(&self, groups: &[Vec<usize>], keys: &[String]) -> ShardResults {
-        std::thread::scope(|s| {
-            let mut handles = Vec::new();
-            for (shard, group) in groups.iter().enumerate() {
-                if group.is_empty() {
-                    continue;
-                }
-                let conn = self.shards[shard].clone();
+        let ops = groups
+            .iter()
+            .enumerate()
+            .filter(|(_, group)| !group.is_empty())
+            .map(|(shard, group)| {
                 let batch: Vec<String> =
                     group.iter().map(|&i| keys[i].clone()).collect();
-                handles.push((shard, s.spawn(move || conn.get_many(&batch))));
-            }
-            handles
-                .into_iter()
-                .map(|(shard, h)| {
-                    (
-                        shard,
-                        h.join().unwrap_or_else(|_| {
-                            Err(Error::Connector(
-                                "shard get_many panicked".into(),
-                            ))
-                        }),
-                    )
-                })
-                .collect()
-        })
+                (shard, self.shards[shard].clone(), Op::GetMany { keys: batch })
+            })
+            .collect();
+        fan_out_ops(ops)
+            .into_iter()
+            .map(|(shard, res)| (shard, res.and_then(OpResult::into_values)))
+            .collect()
     }
 
     /// Fan a batched existence probe out to every shard with a non-empty
-    /// index group, in parallel (the `exists_many` twin of
+    /// index group (the `exists_many` twin of
     /// [`ShardedConnector::fan_out_get`]).
     fn fan_out_exists(
         &self,
         groups: &[Vec<usize>],
         keys: &[String],
     ) -> Vec<(usize, Result<Vec<bool>>)> {
-        std::thread::scope(|s| {
-            let mut handles = Vec::new();
-            for (shard, group) in groups.iter().enumerate() {
-                if group.is_empty() {
-                    continue;
-                }
-                let conn = self.shards[shard].clone();
+        let ops = groups
+            .iter()
+            .enumerate()
+            .filter(|(_, group)| !group.is_empty())
+            .map(|(shard, group)| {
                 let batch: Vec<String> =
                     group.iter().map(|&i| keys[i].clone()).collect();
-                handles.push((shard, s.spawn(move || conn.exists_many(&batch))));
-            }
-            handles
-                .into_iter()
-                .map(|(shard, h)| {
-                    (
-                        shard,
-                        h.join().unwrap_or_else(|_| {
-                            Err(Error::Connector(
-                                "shard exists_many panicked".into(),
-                            ))
-                        }),
-                    )
-                })
-                .collect()
-        })
+                (
+                    shard,
+                    self.shards[shard].clone(),
+                    Op::ExistsMany { keys: batch },
+                )
+            })
+            .collect();
+        fan_out_ops(ops)
+            .into_iter()
+            .map(|(shard, res)| (shard, res.and_then(OpResult::into_bools)))
+            .collect()
     }
 }
 
@@ -346,21 +333,17 @@ impl Connector for ShardedConnector {
             owners.push((key, reps));
         }
         let mut shard_res: Vec<Option<Result<()>>> = vec![None; n];
-        std::thread::scope(|s| {
-            let mut handles = Vec::new();
-            for (shard, batch) in batches.into_iter().enumerate() {
-                if batch.is_empty() {
-                    continue;
-                }
-                let conn = self.shards[shard].clone();
-                handles.push((shard, s.spawn(move || conn.put_many(batch))));
-            }
-            for (shard, h) in handles {
-                shard_res[shard] = Some(h.join().unwrap_or_else(|_| {
-                    Err(Error::Connector("shard put_many panicked".into()))
-                }));
-            }
-        });
+        let ops = batches
+            .into_iter()
+            .enumerate()
+            .filter(|(_, batch)| !batch.is_empty())
+            .map(|(shard, batch)| {
+                (shard, self.shards[shard].clone(), Op::PutMany { items: batch })
+            })
+            .collect();
+        for (shard, res) in fan_out_ops(ops) {
+            shard_res[shard] = Some(res.and_then(OpResult::into_unit));
+        }
         for (key, reps) in owners {
             let stored = reps
                 .iter()
@@ -499,21 +482,21 @@ impl Connector for ShardedConnector {
             owners.push(reps);
         }
         let mut shard_res: Vec<Option<Result<()>>> = vec![None; n];
-        std::thread::scope(|s| {
-            let mut handles = Vec::new();
-            for (shard, batch) in batches.into_iter().enumerate() {
-                if batch.is_empty() {
-                    continue;
-                }
-                let conn = self.shards[shard].clone();
-                handles.push((shard, s.spawn(move || conn.delete_many(&batch))));
-            }
-            for (shard, h) in handles {
-                shard_res[shard] = Some(h.join().unwrap_or_else(|_| {
-                    Err(Error::Connector("shard delete_many panicked".into()))
-                }));
-            }
-        });
+        let ops = batches
+            .into_iter()
+            .enumerate()
+            .filter(|(_, batch)| !batch.is_empty())
+            .map(|(shard, batch)| {
+                (
+                    shard,
+                    self.shards[shard].clone(),
+                    Op::DeleteMany { keys: batch },
+                )
+            })
+            .collect();
+        for (shard, res) in fan_out_ops(ops) {
+            shard_res[shard] = Some(res.and_then(OpResult::into_unit));
+        }
         // Same semantics as `evict`: a key is gone once any replica
         // confirmed; only a fully failed replica set surfaces the error.
         for (key, reps) in keys.iter().zip(owners) {

@@ -12,6 +12,13 @@
 //! parallel. [`StoreMetrics`] counts batched traffic per key and per byte,
 //! exactly like the single-key operations.
 //!
+//! Asynchronous operations ([`Store::put_async`], [`Store::get_async`],
+//! [`Store::proxy_async`]) submit instead of blocking: the op is in
+//! flight when the call returns — on the wire for pipelined channels
+//! ([`crate::ops`]), on a shared reactor worker otherwise — and the
+//! caller settles via the returned [`PendingWrite`]/[`PendingGet`]
+//! handle, overlapping resolution with compute.
+//!
 //! The connector zoo spans the paper's deployments and the scaling work on
 //! top: in-process memory, shared filesystem, TCP KV ([`TcpKvConnector`]),
 //! throttled/netsim views, size-policy multi-routing, and the
@@ -25,14 +32,16 @@ pub use connectors::{
     MultiConnector, TcpKvConnector, ThrottledConnector,
 };
 
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::codec::{Decode, Encode};
 use crate::error::Result;
 use crate::futures::ProxyFuture;
 use crate::metrics::StoreBytes;
+use crate::ops::{self, Op, OpResult, Pending};
 use crate::proxy::{Factory, Proxy};
 
 /// Typed object store over a mediated channel. Cheap to clone.
@@ -242,6 +251,49 @@ impl Store {
         self.inner.connector.delete_many(keys)
     }
 
+    /// Submit a serialize-and-store without blocking on the channel: the
+    /// key is generated and the write is in flight when this returns.
+    /// Channels with a native pipeline (TCP KV) put the op on the wire;
+    /// blocking channels are driven by a shared reactor worker — either
+    /// way the caller overlaps the write with its own compute and settles
+    /// via [`PendingWrite::wait`].
+    pub fn put_async<T: Encode>(&self, obj: &T) -> PendingWrite {
+        let key = self.new_key();
+        let data = obj.to_bytes();
+        self.inner.puts.fetch_add(1, Ordering::Relaxed);
+        self.inner
+            .put_bytes
+            .fetch_add(data.len() as u64, Ordering::Relaxed);
+        let handle =
+            ops::submit(&self.inner.connector, Op::Put { key: key.clone(), data });
+        PendingWrite { key, handle, settled: Mutex::new(None) }
+    }
+
+    /// Submit a fetch without blocking on the channel; decode happens at
+    /// [`PendingGet::wait`]. The async twin of [`Store::get`], for
+    /// overlapping resolution with compute (issue the get early, take the
+    /// value where it's needed).
+    pub fn get_async<T: Decode>(&self, key: &str) -> PendingGet<T> {
+        self.inner.gets.fetch_add(1, Ordering::Relaxed);
+        let handle =
+            ops::submit(&self.inner.connector, Op::Get { key: key.to_string() });
+        PendingGet { store: self.clone(), handle, _marker: PhantomData }
+    }
+
+    /// Mint a proxy while its target's write is still in flight. The
+    /// proxy carries ProxyFutures wait semantics (like [`Store::future`]):
+    /// resolution parks until the target exists, so resolving before the
+    /// write lands is safe on *every* channel — pipelined or pooled — it
+    /// just waits out the in-flight put. The trade-off is the same one
+    /// futures make: if the write *fails*, the target never appears and a
+    /// resolver waits forever — wait on the returned [`PendingWrite`]
+    /// first wherever the write can fail (it surfaces the error).
+    pub fn proxy_async<T: Encode>(&self, obj: &T) -> (Proxy<T>, PendingWrite) {
+        let write = self.put_async(obj);
+        let proxy = Proxy::from_factory(self.factory_for(&write.key, true, 0));
+        (proxy, write)
+    }
+
     /// Factory metadata for a key in this store.
     pub fn factory_for(&self, key: &str, wait: bool, timeout_ms: u64) -> Factory {
         Factory {
@@ -290,6 +342,112 @@ impl std::fmt::Debug for Store {
             .field("name", &self.inner.name)
             .field("connector", &self.inner.connector.desc())
             .finish()
+    }
+}
+
+/// Completion handle for an asynchronously submitted store write
+/// ([`Store::put_async`], [`Store::proxy_async`]). Drop-safe: abandoning
+/// the handle abandons only the acknowledgement, never the write.
+/// [`PendingWrite::wait`] is idempotent — the settled outcome is cached,
+/// so a defensive second wait sees the same result, not a take error.
+pub struct PendingWrite {
+    key: String,
+    handle: Pending<OpResult>,
+    /// Cached outcome, so repeated waits all report the real result.
+    settled: Mutex<Option<Result<()>>>,
+}
+
+impl PendingWrite {
+    /// The key the object was (or is being) stored under.
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    /// Whether the write has settled.
+    pub fn is_complete(&self) -> bool {
+        self.handle.is_complete()
+    }
+
+    /// Block until the write lands (or surfaces its error). Idempotent:
+    /// every call reports the same settled outcome.
+    pub fn wait(&self) -> Result<()> {
+        let mut settled = self.settled.lock().unwrap();
+        if let Some(res) = &*settled {
+            return res.clone();
+        }
+        let res = self.handle.wait().and_then(OpResult::into_unit);
+        *settled = Some(res.clone());
+        res
+    }
+
+    /// Bounded wait: `Ok(false)` if still in flight when the timeout
+    /// elapses (the handle stays usable; wait again later). A settled
+    /// outcome — success or error — is cached like [`PendingWrite::wait`].
+    /// Stays bounded even while another thread is parked in an indefinite
+    /// [`PendingWrite::wait`]: the settle lock is only ever *tried*, never
+    /// blocked on past the deadline.
+    pub fn wait_timeout(&self, timeout: Duration) -> Result<bool> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Ok(mut settled) = self.settled.try_lock() {
+                if let Some(res) = &*settled {
+                    return res.clone().map(|()| true);
+                }
+                let now = Instant::now();
+                let left = deadline.saturating_duration_since(now);
+                return match self.handle.wait_timeout(left) {
+                    Ok(Some(op)) => {
+                        let res = op.into_unit();
+                        *settled = Some(res.clone());
+                        res.map(|()| true)
+                    }
+                    Ok(None) => Ok(false),
+                    Err(e) => {
+                        *settled = Some(Err(e.clone()));
+                        Err(e)
+                    }
+                };
+            }
+            // Another thread holds the settle lock (likely parked in an
+            // unbounded wait). Poll until it records or we time out.
+            if Instant::now() >= deadline {
+                return Ok(false);
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
+/// Typed completion handle for [`Store::get_async`]: decode happens at
+/// take time, so the fetch crosses the wire while the caller computes.
+/// [`PendingGet::wait`] consumes the handle — the decoded value moves out
+/// exactly once, and a second wait is a compile error rather than a
+/// runtime surprise.
+pub struct PendingGet<T> {
+    store: Store,
+    handle: Pending<OpResult>,
+    _marker: PhantomData<fn() -> T>,
+}
+
+impl<T: Decode> PendingGet<T> {
+    /// Whether the fetch has settled.
+    pub fn is_complete(&self) -> bool {
+        self.handle.is_complete()
+    }
+
+    /// Block until the fetch completes; decode and return the value
+    /// (`None` = missing, like [`Store::get`]). Consumes the handle.
+    pub fn wait(self) -> Result<Option<T>> {
+        match self.handle.wait()?.into_value()? {
+            Some(bytes) => {
+                self.store
+                    .inner
+                    .get_bytes
+                    .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                Ok(Some(T::from_bytes(&bytes)?))
+            }
+            None => Ok(None),
+        }
     }
 }
 
@@ -351,6 +509,46 @@ mod tests {
             assert!(!p.is_resolved());
             assert_eq!(*p.resolve().unwrap(), i as u64 * 11);
         }
+    }
+
+    #[test]
+    fn async_put_get_roundtrip_and_metrics() {
+        let s = Store::memory("t-async");
+        let write = s.put_async(&"async-value".to_string());
+        write.wait().unwrap();
+        assert!(write.is_complete());
+        // Idempotent: a defensive second wait sees the cached outcome.
+        write.wait().unwrap();
+        assert!(write.wait_timeout(Duration::from_millis(5)).unwrap());
+        let get = s.get_async::<String>(write.key());
+        assert_eq!(get.wait().unwrap(), Some("async-value".into()));
+        // Missing keys stay None, like the blocking path.
+        assert_eq!(s.get_async::<String>("absent").wait().unwrap(), None);
+        // Async traffic counts in the same per-key/per-byte metrics.
+        let m = s.metrics();
+        assert_eq!(m.puts, 1);
+        assert_eq!(m.gets, 2);
+        assert!(m.put_bytes > 0);
+        assert_eq!(m.get_bytes, m.put_bytes);
+    }
+
+    #[test]
+    fn wait_timeout_on_settled_write() {
+        let s = Store::memory("t-async-timeout");
+        let write = s.put_async(&7u64);
+        // Memory completes at submit; a bounded wait must see that.
+        assert!(write.wait_timeout(Duration::from_millis(50)).unwrap());
+    }
+
+    #[test]
+    fn proxy_async_resolves_even_before_write_settles() {
+        let s = Store::memory("t-proxy-async");
+        let (proxy, write) = s.proxy_async(&vec![1u8, 2, 3]);
+        assert_eq!(proxy.key(), write.key());
+        // Wait-mode proxy: resolution parks until the in-flight write
+        // lands, so resolving immediately is safe on any channel.
+        assert_eq!(*proxy.resolve().unwrap(), vec![1u8, 2, 3]);
+        write.wait().unwrap();
     }
 
     #[test]

@@ -7,7 +7,11 @@
 //! processes to kill. It also injects configurable per-operation latency
 //! ([`FlakyConnector::set_latency`]) so slow-shard scenarios — a backend
 //! that answers, just late — are drivable too (the elastic rebalancer's
-//! tests migrate through deliberately slow shards this way).
+//! tests migrate through deliberately slow shards this way). The latency
+//! injection rides the submission path: submitted ops pay the delay in
+//! flight on dedicated completer threads, so slow-op tests exercise real
+//! in-flight overlap rather than serialized sleeps — and the sleeps never
+//! park the shared reactor pool's workers.
 //! [`FlakyBroker`] is the same failure switch for a broker fabric
 //! instance, so partition-unavailability scenarios are drivable from
 //! tests as well.
@@ -20,11 +24,22 @@ use crate::broker::{FetchReq, LogEntry, PartitionBroker};
 use crate::codec::Bytes;
 use crate::error::{Error, Result};
 use crate::metrics::StoreBytes;
+use crate::ops::{Op, OpResult, Pending};
 use crate::store::{Blob, Connector, ConnectorDesc};
 
 /// A connector whose backend can be "killed" and "revived" at will, and
 /// slowed down with injected per-operation latency.
+///
+/// State lives behind an inner `Arc` so the submission path can hand it
+/// to a completer thread: with latency injected, [`Connector::submit`]
+/// pays the delay *in flight* rather than at submission, which is what
+/// lets slow-op tests exercise real in-flight overlap (N submitted slow
+/// ops cost ~one delay, not N).
 pub struct FlakyConnector {
+    shared: Arc<FlakyShared>,
+}
+
+struct FlakyShared {
     inner: Arc<dyn Connector>,
     down: AtomicBool,
     /// Injected latency per operation, in microseconds (0 = none).
@@ -35,48 +50,9 @@ pub struct FlakyConnector {
     delayed: AtomicU64,
 }
 
-impl FlakyConnector {
-    /// Wrap a channel, initially healthy and fast.
-    pub fn wrap(inner: Arc<dyn Connector>) -> Arc<FlakyConnector> {
-        Arc::new(FlakyConnector {
-            inner,
-            down: AtomicBool::new(false),
-            latency_us: AtomicU64::new(0),
-            rejected: AtomicU64::new(0),
-            delayed: AtomicU64::new(0),
-        })
-    }
-
-    /// Trip (true) or restore (false) the backend.
-    pub fn set_down(&self, down: bool) {
-        self.down.store(down, Ordering::SeqCst);
-    }
-
-    pub fn is_down(&self) -> bool {
+impl FlakyShared {
+    fn is_down(&self) -> bool {
         self.down.load(Ordering::SeqCst)
-    }
-
-    /// Inject a fixed delay before every operation (batched calls pay it
-    /// once, like a slow link rather than a slow disk). `Duration::ZERO`
-    /// removes the injection.
-    pub fn set_latency(&self, latency: Duration) {
-        self.latency_us
-            .store(latency.as_micros() as u64, Ordering::SeqCst);
-    }
-
-    /// The currently injected per-operation latency.
-    pub fn latency(&self) -> Duration {
-        Duration::from_micros(self.latency_us.load(Ordering::SeqCst))
-    }
-
-    /// Operations rejected while the backend was down.
-    pub fn rejected_ops(&self) -> u64 {
-        self.rejected.load(Ordering::Relaxed)
-    }
-
-    /// Operations that paid injected latency.
-    pub fn delayed_ops(&self) -> u64 {
-        self.delayed.load(Ordering::Relaxed)
     }
 
     fn check(&self) -> Result<()> {
@@ -94,21 +70,73 @@ impl FlakyConnector {
     }
 }
 
+impl FlakyConnector {
+    /// Wrap a channel, initially healthy and fast.
+    pub fn wrap(inner: Arc<dyn Connector>) -> Arc<FlakyConnector> {
+        Arc::new(FlakyConnector {
+            shared: Arc::new(FlakyShared {
+                inner,
+                down: AtomicBool::new(false),
+                latency_us: AtomicU64::new(0),
+                rejected: AtomicU64::new(0),
+                delayed: AtomicU64::new(0),
+            }),
+        })
+    }
+
+    /// Trip (true) or restore (false) the backend.
+    pub fn set_down(&self, down: bool) {
+        self.shared.down.store(down, Ordering::SeqCst);
+    }
+
+    pub fn is_down(&self) -> bool {
+        self.shared.is_down()
+    }
+
+    /// Inject a fixed delay before every operation (batched calls pay it
+    /// once, like a slow link rather than a slow disk). `Duration::ZERO`
+    /// removes the injection.
+    pub fn set_latency(&self, latency: Duration) {
+        self.shared
+            .latency_us
+            .store(latency.as_micros() as u64, Ordering::SeqCst);
+    }
+
+    /// The currently injected per-operation latency.
+    pub fn latency(&self) -> Duration {
+        Duration::from_micros(self.shared.latency_us.load(Ordering::SeqCst))
+    }
+
+    /// Operations rejected while the backend was down.
+    pub fn rejected_ops(&self) -> u64 {
+        self.shared.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Operations that paid injected latency.
+    pub fn delayed_ops(&self) -> u64 {
+        self.shared.delayed.load(Ordering::Relaxed)
+    }
+
+    fn check(&self) -> Result<()> {
+        self.shared.check()
+    }
+}
+
 impl Connector for FlakyConnector {
     /// Descriptor of the wrapped channel: a reconnecting peer reaches the
     /// real backend (the injected failure is process-local by design).
     fn desc(&self) -> ConnectorDesc {
-        self.inner.desc()
+        self.shared.inner.desc()
     }
 
     fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
         self.check()?;
-        self.inner.put(key, data)
+        self.shared.inner.put(key, data)
     }
 
     fn get(&self, key: &str) -> Result<Option<Blob>> {
         self.check()?;
-        self.inner.get(key)
+        self.shared.inner.get(key)
     }
 
     fn wait_get(
@@ -117,51 +145,89 @@ impl Connector for FlakyConnector {
         timeout: Option<Duration>,
     ) -> Result<Option<Blob>> {
         self.check()?;
-        self.inner.wait_get(key, timeout)
+        self.shared.inner.wait_get(key, timeout)
     }
 
     fn put_many(&self, items: Vec<(String, Vec<u8>)>) -> Result<()> {
         self.check()?;
-        self.inner.put_many(items)
+        self.shared.inner.put_many(items)
     }
 
     fn get_many(&self, keys: &[String]) -> Result<Vec<Option<Blob>>> {
         self.check()?;
-        self.inner.get_many(keys)
+        self.shared.inner.get_many(keys)
     }
 
     fn delete_many(&self, keys: &[String]) -> Result<()> {
         self.check()?;
-        self.inner.delete_many(keys)
+        self.shared.inner.delete_many(keys)
     }
 
     fn evict(&self, key: &str) -> Result<()> {
         self.check()?;
-        self.inner.evict(key)
+        self.shared.inner.evict(key)
     }
 
     fn exists(&self, key: &str) -> Result<bool> {
         self.check()?;
-        self.inner.exists(key)
+        self.shared.inner.exists(key)
     }
 
     fn exists_many(&self, keys: &[String]) -> Result<Vec<bool>> {
         self.check()?;
-        self.inner.exists_many(keys)
+        self.shared.inner.exists_many(keys)
     }
 
     fn list_keys(&self) -> Result<Vec<String>> {
         self.check()?;
-        self.inner.list_keys()
+        self.shared.inner.list_keys()
     }
 
     fn len(&self) -> Result<usize> {
         self.check()?;
-        self.inner.len()
+        self.shared.inner.len()
+    }
+
+    /// Pipelined-path injection: with latency set, the delay is paid *in
+    /// flight* — submission returns immediately and a dedicated completer
+    /// thread sleeps out the delay — so N submitted ops against a slow
+    /// backend overlap (one delay wall-clock) instead of serializing at
+    /// the submission site. A thread per delayed op is deliberate for
+    /// this testing wrapper: sleeping jobs must never park the shared
+    /// reactor pool's workers (its contract is short-lived jobs only),
+    /// and dedicated threads keep overlap tests deterministic. Down-ness
+    /// still fails at the same point as the blocking path: after the
+    /// delay, before the backend.
+    fn submit(&self, op: Op) -> Pending<OpResult> {
+        let shared = self.shared.clone();
+        if shared.latency_us.load(Ordering::SeqCst) == 0 {
+            return match shared.check() {
+                Ok(()) => shared.inner.submit(op),
+                Err(e) => Pending::ready(Err(e)),
+            };
+        }
+        let (completer, handle) = crate::ops::pending();
+        std::thread::Builder::new()
+            .name("flaky-delay".into())
+            .spawn(move || {
+                let result =
+                    shared.check().and_then(|()| shared.inner.submit(op).wait());
+                completer.complete(result);
+            })
+            .expect("spawn flaky delay thread");
+        handle
+    }
+
+    fn submits_nonblocking(&self) -> bool {
+        // With latency injected the delay moves to the reactor, making
+        // submission itself nonblocking; otherwise we are whatever the
+        // wrapped channel is.
+        self.shared.latency_us.load(Ordering::SeqCst) > 0
+            || self.shared.inner.submits_nonblocking()
     }
 
     fn gauge(&self) -> Option<Arc<StoreBytes>> {
-        self.inner.gauge()
+        self.shared.inner.gauge()
     }
 }
 
@@ -338,5 +404,53 @@ mod tests {
         let t0 = std::time::Instant::now();
         flaky.get("k").unwrap();
         assert!(t0.elapsed() < Duration::from_millis(5));
+    }
+
+    #[test]
+    fn injected_latency_overlaps_submitted_ops() {
+        let flaky = FlakyConnector::wrap(MemoryConnector::new());
+        flaky.set_latency(Duration::from_millis(80));
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                flaky.submit(crate::ops::Op::Put {
+                    key: format!("ov-{i}"),
+                    data: vec![i as u8],
+                })
+            })
+            .collect();
+        // Submission is nonblocking: the delay moved in flight.
+        assert!(flaky.submits_nonblocking());
+        assert!(
+            t0.elapsed() < Duration::from_millis(60),
+            "submission paid the injected delay"
+        );
+        for h in handles {
+            h.wait().unwrap().into_unit().unwrap();
+        }
+        let total = t0.elapsed();
+        // 4 x 80ms serial = 320ms; the bound leaves one extra wave of
+        // slack for contention on the process-global pool from tests
+        // running in parallel, while still proving in-flight overlap.
+        assert!(total < Duration::from_millis(240), "no overlap: {total:?}");
+        flaky.set_latency(Duration::ZERO);
+        assert!(!flaky.submits_nonblocking());
+        assert_eq!(flaky.delayed_ops(), 4);
+        for i in 0..4 {
+            assert!(flaky.exists(&format!("ov-{i}")).unwrap());
+        }
+    }
+
+    #[test]
+    fn submit_while_down_fails_without_backend_touch() {
+        let flaky = FlakyConnector::wrap(MemoryConnector::new());
+        flaky.set_down(true);
+        assert!(flaky
+            .submit(crate::ops::Op::Put { key: "k".into(), data: vec![1] })
+            .wait()
+            .is_err());
+        flaky.set_down(false);
+        assert!(!flaky.exists("k").unwrap());
+        assert_eq!(flaky.rejected_ops(), 1);
     }
 }

@@ -1,0 +1,258 @@
+//! Integration tests for the nonblocking op-submission data plane: the
+//! pipelined TCP KV client, `Pending` completion semantics end to end,
+//! the async `Store` surface, and in-flight overlap through the shard
+//! fabric and latency injection.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use proxystore::codec::{Bytes, Decode, Encode};
+use proxystore::kv::{KvClient, KvServer, Request};
+use proxystore::ops::{Op, OpResult};
+use proxystore::prelude::{Proxy, Store};
+use proxystore::shard::ShardedConnector;
+use proxystore::store::{Connector, MemoryConnector, TcpKvConnector};
+use proxystore::testing::fail::FlakyConnector;
+
+#[test]
+fn pipelined_window_roundtrips_over_tcp() {
+    let server = KvServer::spawn().unwrap();
+    let client = KvClient::connect(server.addr).unwrap();
+    // A whole window in flight before the first wait: one shared stream.
+    let puts: Vec<_> = (0..64)
+        .map(|i| {
+            client.submit_op(Op::Put {
+                key: format!("w-{i}"),
+                data: vec![i as u8; 128],
+            })
+        })
+        .collect();
+    for p in puts {
+        p.wait().unwrap().into_unit().unwrap();
+    }
+    let gets: Vec<_> = (0..64)
+        .map(|i| client.submit_op(Op::Get { key: format!("w-{i}") }))
+        .collect();
+    for (i, g) in gets.into_iter().enumerate() {
+        assert_eq!(
+            g.wait().unwrap().into_value().unwrap().map(|b| b.to_vec()),
+            Some(vec![i as u8; 128])
+        );
+    }
+    // Typed batched ops share the same pipe.
+    let bools = client
+        .submit_op(Op::ExistsMany {
+            keys: vec!["w-0".into(), "nope".into(), "w-63".into()],
+        })
+        .wait()
+        .unwrap()
+        .into_bools()
+        .unwrap();
+    assert_eq!(bools, vec![true, false, true]);
+}
+
+#[test]
+fn submission_order_is_execution_order() {
+    // FIFO pipelining means a get submitted after a put of the same key
+    // (on the same connection) must observe it — no waits in between.
+    let server = KvServer::spawn().unwrap();
+    let client = KvClient::connect(server.addr).unwrap();
+    let mut pairs = Vec::new();
+    for round in 0..16 {
+        let put = client.submit_op(Op::Put {
+            key: "hot".into(),
+            data: vec![round as u8],
+        });
+        let get = client.submit_op(Op::Get { key: "hot".into() });
+        pairs.push((round as u8, put, get));
+    }
+    for (round, put, get) in pairs {
+        put.wait().unwrap().into_unit().unwrap();
+        assert_eq!(
+            get.wait().unwrap().into_value().unwrap().map(|b| b.to_vec()),
+            Some(vec![round]),
+            "get overtook its put in round {round}"
+        );
+    }
+}
+
+#[test]
+fn pipelined_connection_death_mid_flight() {
+    let mut server = KvServer::spawn().unwrap();
+    let client = KvClient::connect(server.addr).unwrap();
+    client.set("pre", Bytes(vec![1])).unwrap();
+    // Park one op server-side so the stream is mid-flight, then kill the
+    // server under the connection.
+    let parked = client.submit(Request::WaitGet {
+        key: "never".into(),
+        timeout_ms: 30_000,
+    });
+    let queued = client.submit_op(Op::Get { key: "pre".into() });
+    std::thread::sleep(Duration::from_millis(30));
+    server.shutdown();
+    // Every in-flight handle settles with an error — nothing hangs.
+    assert!(parked.wait().is_err());
+    assert!(queued.wait().is_err());
+    // And the pipe stays dead-fast for later submissions.
+    let t0 = Instant::now();
+    assert!(client.submit_op(Op::Exists { key: "pre".into() }).wait().is_err());
+    assert!(t0.elapsed() < Duration::from_secs(2));
+}
+
+#[test]
+fn tcp_connector_submits_nonblocking() {
+    let server = KvServer::spawn().unwrap();
+    let conn = TcpKvConnector::connect(server.addr).unwrap();
+    assert!(conn.submits_nonblocking());
+    let handles: Vec<_> = (0..32)
+        .map(|i| {
+            conn.submit(Op::Put { key: format!("c-{i}"), data: vec![i as u8] })
+        })
+        .collect();
+    for h in handles {
+        h.wait().unwrap().into_unit().unwrap();
+    }
+    assert_eq!(conn.len().unwrap(), 32);
+    // Memory stays a blocking bridge (inline completion).
+    let mem = MemoryConnector::new();
+    assert!(!mem.submits_nonblocking());
+    let h = mem.submit(Op::Put { key: "m".into(), data: vec![9] });
+    assert!(h.is_complete());
+    h.wait().unwrap().into_unit().unwrap();
+}
+
+#[test]
+fn async_store_over_tcp_shard_fabric() {
+    // The full stack: Store -> sharded fabric -> TCP backends, driven
+    // through the async surface.
+    let servers: Vec<KvServer> =
+        (0..3).map(|_| KvServer::spawn().unwrap()).collect();
+    let backends: Vec<Arc<dyn Connector>> = servers
+        .iter()
+        .map(|s| {
+            Arc::new(TcpKvConnector::connect(s.addr).unwrap())
+                as Arc<dyn Connector>
+        })
+        .collect();
+    let router = Arc::new(ShardedConnector::new(backends, 1, 64).unwrap());
+    let store = Store::new("async-fabric", router);
+
+    let writes: Vec<_> =
+        (0..48).map(|i| store.put_async(&format!("obj-{i}"))).collect();
+    for w in &writes {
+        w.wait().unwrap();
+    }
+    let reads: Vec<_> = writes
+        .iter()
+        .map(|w| store.get_async::<String>(w.key()))
+        .collect();
+    for (i, r) in reads.into_iter().enumerate() {
+        assert_eq!(r.wait().unwrap(), Some(format!("obj-{i}")));
+    }
+
+    // proxy_async: the proxy resolves once the write settles.
+    let (proxy, write) = store.proxy_async(&"late-bound".to_string());
+    write.wait().unwrap();
+    let shipped: Proxy<String> = Proxy::from_bytes(&proxy.to_bytes()).unwrap();
+    assert_eq!(shipped.resolve().unwrap(), "late-bound");
+}
+
+#[test]
+fn sharded_fan_out_overlaps_slow_backends() {
+    // 4 shards, each 80ms slow: a batched get spanning all of them must
+    // pay ~one delay (overlapped fan-out), not four (serialized).
+    let flakies: Vec<Arc<FlakyConnector>> = (0..4)
+        .map(|_| FlakyConnector::wrap(MemoryConnector::new()))
+        .collect();
+    let backends: Vec<Arc<dyn Connector>> = flakies
+        .iter()
+        .map(|f| f.clone() as Arc<dyn Connector>)
+        .collect();
+    let router = Arc::new(ShardedConnector::new(backends, 1, 64).unwrap());
+    let items: Vec<(String, Vec<u8>)> =
+        (0..64).map(|i| (format!("ov-{i}"), vec![i as u8])).collect();
+    router.put_many(items.clone()).unwrap();
+    for f in &flakies {
+        f.set_latency(Duration::from_millis(80));
+    }
+    let keys: Vec<String> = items.iter().map(|(k, _)| k.clone()).collect();
+    let t0 = Instant::now();
+    let got = router.get_many(&keys).unwrap();
+    let elapsed = t0.elapsed();
+    assert!(got.iter().all(|b| b.is_some()));
+    // 4 x 80ms serialized = 320ms; the bound leaves one extra wave of
+    // slack for contention on the process-global pool from tests running
+    // in parallel, while still proving the fan-out overlapped.
+    assert!(
+        elapsed < Duration::from_millis(240),
+        "fan-out serialized the slow shards: {elapsed:?}"
+    );
+}
+
+#[test]
+fn pending_error_propagates_through_store() {
+    let flaky = FlakyConnector::wrap(MemoryConnector::new());
+    let store = Store::new("flaky-async", flaky.clone());
+    flaky.set_down(true);
+    let write = store.put_async(&1u64);
+    assert!(write.wait().is_err());
+    let read = store.get_async::<u64>("whatever");
+    assert!(read.wait().is_err());
+    flaky.set_down(false);
+    let write = store.put_async(&2u64);
+    write.wait().unwrap();
+    assert_eq!(
+        store.get_async::<u64>(write.key()).wait().unwrap(),
+        Some(2)
+    );
+}
+
+#[test]
+fn mixed_submit_and_blocking_traffic_coexist() {
+    // Blocking calls and submitted ops interleave on one pipelined
+    // connection without corrupting FIFO matching.
+    let server = KvServer::spawn().unwrap();
+    let client = Arc::new(KvClient::connect(server.addr).unwrap());
+    let hammers: Vec<_> = (0..3)
+        .map(|t| {
+            let c = client.clone();
+            std::thread::spawn(move || {
+                for i in 0..32 {
+                    let key = format!("mix-{t}-{i}");
+                    c.set(&key, Bytes(vec![t as u8, i as u8])).unwrap();
+                    let h = c.submit_op(Op::Get { key: key.clone() });
+                    assert_eq!(
+                        h.wait()
+                            .unwrap()
+                            .into_value()
+                            .unwrap()
+                            .map(|b| b.to_vec()),
+                        Some(vec![t as u8, i as u8])
+                    );
+                }
+            })
+        })
+        .collect();
+    for h in hammers {
+        h.join().unwrap();
+    }
+    let (keys, _, _) = client.stats().unwrap();
+    assert_eq!(keys, 96);
+}
+
+#[test]
+fn op_result_shape_mismatch_is_an_error() {
+    let mem = MemoryConnector::new();
+    let res = mem
+        .submit(Op::Get { key: "missing".into() })
+        .wait()
+        .unwrap();
+    assert!(matches!(res, OpResult::Value(None)));
+    // Taking the wrong shape reports, never panics.
+    assert!(mem
+        .submit(Op::Get { key: "missing".into() })
+        .wait()
+        .unwrap()
+        .into_bools()
+        .is_err());
+}
