@@ -1,0 +1,106 @@
+//! Distributed futures over a sharded store (paper Sec IV-A), on the
+//! event-driven watch plane.
+//!
+//! Run with: `cargo run --release --example distributed_futures`
+//!
+//! A future is a key that does not exist yet. Consumers used to wait on
+//! it by polling (`wait_get` with backoff) or by parking a dedicated
+//! server connection; both scale badly — N parked consumers cost N poll
+//! loops or N connections. The watch plane replaces that: arming a watch
+//! registers a waiter with the owning backend, and the producer's write
+//! wakes it in one push. `result_async` hands you the armed handle so
+//! the wait overlaps with compute; `when_all` fans a whole task graph's
+//! joins in, parking once per key.
+//!
+//! Watch vs `wait_get`, in one rule: `wait_get` is watch-and-park (use
+//! it when you need the value right now); `result_async`/`watch_async`
+//! is watch-and-keep-working (use it whenever there is compute to
+//! overlap). Both ride the same plane — nothing polls either way, on any
+//! channel: the sharded router arms the key's replica set, and the
+//! elastic fabric re-arms live watches when the membership changes.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use proxystore::error::Result;
+use proxystore::futures::{when_all, when_any, ProxyFuture};
+use proxystore::prelude::{MemoryConnector, Store};
+use proxystore::shard::ShardedConnector;
+use proxystore::store::Connector;
+
+fn main() -> Result<()> {
+    // A store over a 4-shard fabric: future keys scatter across shards,
+    // and each watch arms on the shard that owns its key.
+    let backends: Vec<Arc<dyn Connector>> =
+        (0..4).map(|_| MemoryConnector::new()).collect();
+    let store = Store::new(
+        "futures",
+        Arc::new(ShardedConnector::new(backends, 1, 64)?),
+    );
+
+    // ----------------------------------------------------------------
+    // Produce/consume: mint futures before any value exists, ship the
+    // producer half to worker threads, arm the consumer side up front.
+    // ----------------------------------------------------------------
+    let futs: Vec<ProxyFuture<u64>> = (0..8).map(|_| store.future()).collect();
+
+    // result_async: the watch is armed NOW, so the consumer overlaps the
+    // producers' work instead of blocking at each take.
+    let pending: Vec<_> = futs
+        .iter()
+        .map(|f| f.result_async())
+        .collect::<Result<Vec<_>>>()?;
+
+    let producers: Vec<_> = futs
+        .iter()
+        .enumerate()
+        .map(|(i, f)| {
+            let f = f.clone();
+            std::thread::spawn(move || {
+                // Simulated work: later tasks finish later.
+                std::thread::sleep(Duration::from_millis(10 * i as u64));
+                f.set_result(&(i as u64 * 100)).expect("single assignment");
+            })
+        })
+        .collect();
+
+    // when_any: react to the first finisher (speculative execution,
+    // hedged requests) without polling anybody.
+    let (first, value) = when_any(&futs, Some(Duration::from_secs(10)))?;
+    println!("first resolved: task {first} -> {value}");
+
+    // when_all: the fan-in join parks once per key; the slowest producer
+    // bounds wall time.
+    let all = when_all(&futs, Some(Duration::from_secs(10)))?;
+    println!("when_all joined {} results: {:?}", all.len(), all);
+
+    // The armed handles resolve from the same pushes.
+    for (i, p) in pending.iter().enumerate() {
+        assert_eq!(p.wait()?, i as u64 * 100);
+    }
+    for p in producers {
+        p.join().expect("producer");
+    }
+
+    // ----------------------------------------------------------------
+    // Single assignment is atomic: racing producers get one winner.
+    // ----------------------------------------------------------------
+    let contested: ProxyFuture<String> = store.future();
+    let wins: usize = std::thread::scope(|s| {
+        let hs: Vec<_> = (0..4)
+            .map(|i| {
+                let f = contested.clone();
+                s.spawn(move || f.set_result(&format!("producer-{i}")).is_ok())
+            })
+            .collect();
+        hs.into_iter()
+            .map(|h| h.join().expect("producer"))
+            .filter(|&won| won)
+            .count()
+    });
+    assert_eq!(wins, 1, "put_nx admits exactly one producer");
+    println!("racing producers: one winner, {} losers errored", 4 - wins);
+    let winner = contested.result(Some(Duration::from_secs(5)))?;
+    println!("contested future settled once, by {winner}");
+    Ok(())
+}

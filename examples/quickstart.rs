@@ -8,6 +8,14 @@
 //! handle, so resolution overlaps with compute; on TCP channels submitted
 //! ops pipeline on one shared connection. See
 //! `examples/pipelined_ops.rs` for that side of the API.
+//!
+//! Waiting on not-yet-existing values (the future resolution below, and
+//! `Store::wait_get`) rides the event-driven watch plane: the consumer
+//! arms a watch and the producer's write wakes it in one push — no
+//! polling, no dedicated connection, on every channel. When there is
+//! compute to overlap, prefer the armed-handle forms (`result_async`,
+//! `Store::watch_async`, and the `when_all`/`when_any` joins) over the
+//! park-in-place `wait_get`; see `examples/distributed_futures.rs`.
 
 use std::time::Duration;
 

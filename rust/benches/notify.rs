@@ -1,0 +1,137 @@
+//! Watch vs poll wake latency: the acceptance bench for the event-driven
+//! watch/notify plane.
+//!
+//! Single-waiter: a consumer parks on a key that a producer stores after
+//! the waiter has settled; measured is put→wake. The poll path is the old
+//! `wait_get` default (poll with exponential backoff to a 10 ms floor),
+//! isolated by a wrapper that hides the native watch; the watch path is
+//! the registry callback (memory) and the out-of-band `Notify` push over
+//! a pipelined TCP connection. Acceptance bar: watch wake latency beats
+//! the poll path's backoff floor on both channels.
+//!
+//! Fan-out: 64 waiters parked on one key over ONE pipelined connection;
+//! a single put must wake all of them (measured: put→last-wake span).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use proxystore::benchlib::{fmt_secs, Bench, Scale};
+use proxystore::codec::Bytes;
+use proxystore::kv::{KvClient, KvServer};
+use proxystore::store::{
+    Blob, Connector, ConnectorDesc, MemoryConnector, TcpKvConnector,
+};
+use proxystore::Result;
+
+/// Hides the wrapped channel's native watch so the default poll-bridge
+/// (the pre-watch-plane behaviour of every sharded/elastic path) is
+/// measurable against identical storage.
+struct PollOnly(Arc<dyn Connector>);
+
+impl Connector for PollOnly {
+    fn desc(&self) -> ConnectorDesc {
+        self.0.desc()
+    }
+    fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
+        self.0.put(key, data)
+    }
+    fn get(&self, key: &str) -> Result<Option<Blob>> {
+        self.0.get(key)
+    }
+    fn evict(&self, key: &str) -> Result<()> {
+        self.0.evict(key)
+    }
+    fn exists(&self, key: &str) -> Result<bool> {
+        self.0.exists(key)
+    }
+    fn len(&self) -> Result<usize> {
+        self.0.len()
+    }
+    // No watch/wait_get overrides: waits ride the default poll bridge.
+}
+
+/// put→wake latency for one parked waiter. `settle` lets the waiter arm
+/// (and, on the poll path, lets the backoff ramp to its floor) before the
+/// producer stores.
+fn wake_latency(conn: &Arc<dyn Connector>, key: &str, settle: Duration) -> f64 {
+    let c2 = conn.clone();
+    let k2 = key.to_string();
+    let waiter = std::thread::spawn(move || {
+        let v = c2
+            .wait_get(&k2, Some(Duration::from_secs(30)))
+            .expect("wait_get")
+            .expect("value must arrive");
+        (Instant::now(), v.len())
+    });
+    std::thread::sleep(settle);
+    let t_put = Instant::now();
+    conn.put(key, vec![7u8; 64]).expect("put");
+    let (woke, len) = waiter.join().expect("waiter");
+    assert_eq!(len, 64);
+    woke.saturating_duration_since(t_put).as_secs_f64()
+}
+
+fn avg_wake(conn: &Arc<dyn Connector>, tag: &str, rounds: usize) -> f64 {
+    let settle = Duration::from_millis(60);
+    let total: f64 = (0..rounds)
+        .map(|i| wake_latency(conn, &format!("wake-{tag}-{i}"), settle))
+        .sum();
+    total / rounds as f64
+}
+
+fn main() {
+    let scale = Scale::from_env();
+    let rounds = scale.pick(8, 20, 40);
+
+    let mut bench = Bench::new("notify", "path,avg_wake_s,rounds");
+    bench.note(&format!(
+        "{rounds} rounds per path; waiter settled 60ms before the put"
+    ));
+
+    // Poll path: default backoff loop (floor 10ms) over a memory engine.
+    let poll: Arc<dyn Connector> = Arc::new(PollOnly(MemoryConnector::new()));
+    let poll_avg = avg_wake(&poll, "poll", rounds);
+    bench.row(format!("poll-bridge,{poll_avg:.6},{rounds}"));
+
+    // Watch paths: registry callback (memory) and Notify push (TCP).
+    let mem: Arc<dyn Connector> = MemoryConnector::new();
+    let mem_avg = avg_wake(&mem, "mem", rounds);
+    bench.row(format!("watch-memory,{mem_avg:.6},{rounds}"));
+
+    let server = KvServer::spawn().expect("kv server");
+    let tcp: Arc<dyn Connector> =
+        Arc::new(TcpKvConnector::connect(server.addr).expect("connect"));
+    let tcp_avg = avg_wake(&tcp, "tcp", rounds);
+    bench.row(format!("watch-tcp,{tcp_avg:.6},{rounds}"));
+
+    // Fan-out: 64 waiters on one key over one pipelined connection.
+    let client = Arc::new(KvClient::connect(server.addr).expect("client"));
+    let handles: Vec<_> = (0..64).map(|_| client.watch("fan-out")).collect();
+    assert_eq!(client.watches_armed(), 64);
+    std::thread::sleep(Duration::from_millis(20));
+    let setter = KvClient::connect(server.addr).expect("setter");
+    let t_put = Instant::now();
+    setter.set("fan-out", Bytes(vec![1; 64])).expect("set");
+    for h in &handles {
+        assert_eq!(h.wait().expect("fan-out wake").len(), 64);
+    }
+    let span = t_put.elapsed().as_secs_f64();
+    bench.row(format!("fanout-64-waiters,{span:.6},1"));
+    bench.note(&format!(
+        "single put woke all 64 parked waiters in {}",
+        fmt_secs(span)
+    ));
+
+    let worst_watch = mem_avg.max(tcp_avg);
+    bench.compare(
+        "watch wake latency vs poll backoff floor",
+        "< poll avg",
+        &format!(
+            "watch {} vs poll {}",
+            fmt_secs(worst_watch),
+            fmt_secs(poll_avg)
+        ),
+        worst_watch < poll_avg,
+    );
+    bench.finish();
+}

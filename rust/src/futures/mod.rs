@@ -8,17 +8,31 @@
 //! distinguishes them from Dask/Ray futures, which only resolve inside
 //! their RPC framework.
 //!
-//! The blocking rendezvous rides the connector's `wait_get` (server-side
-//! parking on redis-sim, poll-with-backoff elsewhere), so the *future
+//! The blocking rendezvous rides the connector's out-of-band **watch
+//! plane** ([`Connector::watch`](crate::store::Connector::watch)): a
+//! consumer arms a watch and parks on the completion handle, waking in
+//! one push when the producer's write fires the registered waiter —
+//! server-push on TCP channels, a registry callback in-process, a poll
+//! bridge only where the channel offers nothing better. The *future
 //! creator* chooses the communication method on behalf of producer and
-//! consumer, exactly as the paper prescribes.
+//! consumer, exactly as the paper prescribes. [`ProxyFuture::result_async`]
+//! exposes the armed handle directly, and the [`when_all`]/[`when_any`]
+//! combinators fan joins in over watch handles — N pending keys park
+//! once each instead of polling.
+//!
+//! Single assignment is atomic: [`ProxyFuture::set_result`] rides
+//! [`Connector::put_nx`](crate::store::Connector::put_nx), so two
+//! producers racing to resolve one future get exactly one winner (no
+//! exists-then-put window).
 
 use std::marker::PhantomData;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::codec::{Decode, Encode, Reader};
 use crate::error::{Error, Result};
+use crate::ops::Pending;
 use crate::proxy::{Factory, Proxy};
+use crate::store::Blob;
 
 /// A distributed future for an eventual value of type `T`.
 pub struct ProxyFuture<T> {
@@ -58,31 +72,159 @@ impl<T> ProxyFuture<T> {
 }
 
 impl<T: Encode> ProxyFuture<T> {
-    /// Publish the result. Errors if already set (single-assignment).
+    /// Publish the result. Errors if already set: single-assignment is
+    /// decided *atomically* by the channel's conditional write
+    /// ([`Connector::put_nx`](crate::store::Connector::put_nx)), so two
+    /// producers racing on one future get exactly one winner — there is
+    /// no exists-then-put window for both to slip through.
     pub fn set_result(&self, value: &T) -> Result<()> {
         let conn = self.factory.connector()?;
-        if conn.exists(&self.factory.key)? {
-            return Err(Error::Config(format!(
+        if conn.put_nx(&self.factory.key, value.to_bytes())? {
+            Ok(())
+        } else {
+            Err(Error::Config(format!(
                 "future {} already set",
                 self.factory.key
-            )));
+            )))
         }
-        conn.put(&self.factory.key, value.to_bytes())
     }
 }
 
 impl<T: Decode> ProxyFuture<T> {
-    /// Block for the result (explicit-future interface).
+    /// Block for the result (explicit-future interface): arm a watch and
+    /// park on the handle — one push wakes the wait, no polling and no
+    /// parked server connection.
     pub fn result(&self, timeout: Option<Duration>) -> Result<T> {
-        let conn = self.factory.connector()?;
-        match conn.wait_get(&self.factory.key, timeout)? {
-            Some(bytes) => T::from_bytes(&bytes),
-            None => Err(Error::Timeout(
-                timeout.unwrap_or_default(),
-                format!("future {}", self.factory.key),
-            )),
+        let handle = self.factory.connector()?.watch(&self.factory.key);
+        let blob = match timeout {
+            None => handle.wait()?,
+            Some(t) => handle.wait_timeout(t)?.ok_or_else(|| {
+                Error::Timeout(t, format!("future {}", self.factory.key))
+            })?,
+        };
+        T::from_bytes(&blob)
+    }
+
+    /// Arm the watch *now* and hand back a typed completion handle, so
+    /// the wait overlaps with compute: the consumer keeps working and
+    /// takes the value where it's needed ([`PendingResult::wait`]). The
+    /// nonblocking twin of [`ProxyFuture::result`].
+    pub fn result_async(&self) -> Result<PendingResult<T>> {
+        Ok(PendingResult {
+            handle: self.factory.connector()?.watch(&self.factory.key),
+            key: self.factory.key.clone(),
+            _marker: PhantomData,
+        })
+    }
+}
+
+/// Typed completion handle for an armed future watch
+/// ([`ProxyFuture::result_async`]): decode happens at take time. Mirrors
+/// [`Pending`] semantics — the value moves out exactly once; a second
+/// take reports an error rather than hanging.
+pub struct PendingResult<T> {
+    handle: Pending<Blob>,
+    key: String,
+    _marker: PhantomData<fn() -> T>,
+}
+
+impl<T: Decode> PendingResult<T> {
+    /// The key the result will appear under.
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    /// Whether the result has been published.
+    pub fn is_complete(&self) -> bool {
+        self.handle.is_complete()
+    }
+
+    /// Block until the result is published; decode and take it.
+    pub fn wait(&self) -> Result<T> {
+        T::from_bytes(&self.handle.wait()?)
+    }
+
+    /// Bounded wait: `Ok(None)` if still unpublished when the timeout
+    /// elapses (the handle stays usable; wait again later).
+    pub fn wait_timeout(&self, timeout: Duration) -> Result<Option<T>> {
+        match self.handle.wait_timeout(timeout)? {
+            Some(blob) => Ok(Some(T::from_bytes(&blob)?)),
+            None => Ok(None),
         }
     }
+}
+
+impl<T> std::fmt::Debug for PendingResult<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PendingResult")
+            .field("key", &self.key)
+            .field("complete", &self.handle.is_complete())
+            .finish()
+    }
+}
+
+/// Wait for *every* future, parking once per key instead of polling N
+/// keys (the fan-in join of the paper's dynamic task graphs, Sec IV-A).
+/// All watches are armed before any wait begins, so the slowest producer
+/// bounds wall time; the shared `timeout` spans the whole join. Results
+/// align positionally with `futs`.
+pub fn when_all<T: Decode>(
+    futs: &[ProxyFuture<T>],
+    timeout: Option<Duration>,
+) -> Result<Vec<T>> {
+    let handles: Vec<Pending<Blob>> = futs
+        .iter()
+        .map(|f| Ok(f.factory.connector()?.watch(&f.factory.key)))
+        .collect::<Result<_>>()?;
+    let deadline = timeout.map(|t| Instant::now() + t);
+    let mut out = Vec::with_capacity(handles.len());
+    for (handle, fut) in handles.iter().zip(futs) {
+        let blob = match deadline {
+            None => handle.wait()?,
+            Some(d) => {
+                let left = d.saturating_duration_since(Instant::now());
+                handle.wait_timeout(left)?.ok_or_else(|| {
+                    Error::Timeout(
+                        timeout.unwrap_or_default(),
+                        format!("when_all: future {}", fut.factory.key),
+                    )
+                })?
+            }
+        };
+        out.push(T::from_bytes(&blob)?);
+    }
+    Ok(out)
+}
+
+/// Wait for the *first* future to resolve; returns its index and value.
+/// Thread-free fan-in on the watch plane's racing primitive
+/// ([`crate::ops::Race`]): every watch handle delivers through an
+/// index-tagged arm into one shared completion, so N armed keys cost one
+/// parked waiter — and once a winner lands, the losing arms read as
+/// abandoned, releasing any poll-bridge producers behind them. Fails
+/// only if every armed watch fails (e.g. every backend died).
+pub fn when_any<T: Decode>(
+    futs: &[ProxyFuture<T>],
+    timeout: Option<Duration>,
+) -> Result<(usize, T)> {
+    if futs.is_empty() {
+        return Err(Error::Config("when_any on an empty future set".into()));
+    }
+    let (group, out) = crate::ops::race::<(usize, Blob)>();
+    for (i, fut) in futs.iter().enumerate() {
+        let handle = match fut.factory.connector() {
+            Ok(conn) => conn.watch(&fut.factory.key),
+            Err(e) => Pending::ready(Err(e)),
+        };
+        group.add_map(handle, move |blob| (i, blob));
+    }
+    let (i, blob) = match timeout {
+        None => out.wait()?,
+        Some(t) => out
+            .wait_timeout(t)?
+            .ok_or_else(|| Error::Timeout(t, "when_any".into()))?,
+    };
+    Ok((i, T::from_bytes(&blob)?))
 }
 
 impl<T> Clone for ProxyFuture<T> {
@@ -213,5 +355,96 @@ mod tests {
         for p in proxies {
             assert_eq!(*p.resolve().unwrap(), 7);
         }
+    }
+
+    #[test]
+    fn concurrent_producers_get_exactly_one_winner() {
+        // The TOCTOU regression test: N producers race set_result on one
+        // future; the conditional write must admit exactly one.
+        let store = Store::memory("fut-race");
+        let fut: ProxyFuture<u64> = store.future();
+        let wins: Vec<bool> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|i| {
+                    let f = fut.clone();
+                    s.spawn(move || f.set_result(&(i as u64)).is_ok())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(wins.iter().filter(|&&w| w).count(), 1);
+        let winner = wins.iter().position(|&w| w).unwrap() as u64;
+        assert_eq!(fut.result(None).unwrap(), winner);
+    }
+
+    #[test]
+    fn result_async_overlaps_with_compute() {
+        let store = Store::memory("fut-async");
+        let fut: ProxyFuture<String> = store.future();
+        let pending = fut.result_async().unwrap();
+        assert!(!pending.is_complete());
+        assert_eq!(pending.wait_timeout(Duration::from_millis(10)).unwrap(), None);
+        fut.set_result(&"pushed".to_string()).unwrap();
+        assert_eq!(pending.wait().unwrap(), "pushed");
+        // The value moved out: a second take errors instead of hanging.
+        assert!(pending.wait().is_err());
+    }
+
+    #[test]
+    fn when_all_parks_until_every_producer_fires() {
+        let store = Store::memory("fut-all");
+        let futs: Vec<ProxyFuture<u64>> =
+            (0..6).map(|_| store.future()).collect();
+        let producers: Vec<_> = futs
+            .iter()
+            .enumerate()
+            .map(|(i, f)| {
+                let f = f.clone();
+                std::thread::spawn(move || {
+                    std::thread::sleep(Duration::from_millis(10 + 5 * i as u64));
+                    f.set_result(&(i as u64 * 3)).unwrap();
+                })
+            })
+            .collect();
+        let got = when_all(&futs, Some(Duration::from_secs(10))).unwrap();
+        assert_eq!(got, vec![0, 3, 6, 9, 12, 15]);
+        for p in producers {
+            p.join().unwrap();
+        }
+        // Timeout path: an unresolved member times the join out.
+        let futs: Vec<ProxyFuture<u64>> =
+            (0..2).map(|_| store.future()).collect();
+        futs[0].set_result(&1).unwrap();
+        assert!(matches!(
+            when_all(&futs, Some(Duration::from_millis(40))),
+            Err(Error::Timeout(..))
+        ));
+        // Empty set resolves trivially.
+        assert!(when_all::<u64>(&[], None).unwrap().is_empty());
+    }
+
+    #[test]
+    fn when_any_returns_first_resolved_index() {
+        let store = Store::memory("fut-any");
+        let futs: Vec<ProxyFuture<String>> =
+            (0..5).map(|_| store.future()).collect();
+        let f3 = futs[3].clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            f3.set_result(&"third".to_string()).unwrap();
+        });
+        let (i, v) = when_any(&futs, Some(Duration::from_secs(10))).unwrap();
+        assert_eq!((i, v.as_str()), (3, "third"));
+        // Already-resolved member wins instantly.
+        let (i, _) = when_any(&futs, None).unwrap();
+        assert_eq!(i, 3);
+        // Timeout and empty-set errors.
+        let cold: Vec<ProxyFuture<String>> =
+            (0..2).map(|_| store.future()).collect();
+        assert!(matches!(
+            when_any(&cold, Some(Duration::from_millis(30))),
+            Err(Error::Timeout(..))
+        ));
+        assert!(when_any::<String>(&[], None).is_err());
     }
 }

@@ -13,19 +13,29 @@
 //!
 //! The blocking API (`get`/`set`/...) survives unchanged as submit+wait,
 //! so existing callers see identical semantics — they just stop queueing
-//! behind each other's wire time. Server-side blocking ops (`WaitGet`,
-//! `BRPop`) still park the response stream for their duration, exactly as
-//! the old mutex did; callers that care use a dedicated connection (see
-//! [`TcpKvConnector::wait_get`](crate::store::TcpKvConnector)).
+//! behind each other's wire time.
+//!
+//! Long waits ride the out-of-band **watch plane**: [`KvClient::watch`]
+//! arms a server-side watch under a client-chosen id and hands back a
+//! completion handle; the reader thread routes the eventual
+//! `Notify { id, .. }` push by that id instead of FIFO position, so a
+//! parked watch shares the pipelined connection with ordinary traffic
+//! without stalling it. [`KvClient::wait_get`] is built on it — no
+//! dedicated connection, no server-side parking of the response stream.
+//! (The wire-level `WaitGet`/`BRPop` requests still park FIFO when issued
+//! raw; nothing in the client's own API submits them anymore except
+//! `brpop`.)
 //!
 //! Failure is eager and total: when the connection dies (server gone,
-//! torn frame, local shutdown) every in-flight handle completes with the
-//! error and later submissions fail fast. Dropping the client shuts the
-//! socket down and joins the reader thread — no thread leak, no handle
-//! left parked.
+//! torn frame, local shutdown) every in-flight handle *and every armed
+//! watch* completes with the error and later submissions fail fast — a
+//! watch whose server dies fails promptly instead of hanging. Dropping
+//! the client shuts the socket down and joins the reader thread — no
+//! thread leak, no handle left parked.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -41,6 +51,10 @@ enum Sink {
     Resp(Completer<Response>),
     /// Convert by op shape and complete a typed [`OpResult`] handle.
     Op { kind: OpKind, completer: Completer<OpResult> },
+    /// FIFO ack of a `Watch` registration. `Ok` means armed (the real
+    /// completion arrives out-of-band as a `Notify`); an error ack fails
+    /// and removes the registered watch handle.
+    WatchAck { id: u64 },
 }
 
 /// Expected response shape of a submitted [`Op`].
@@ -90,32 +104,66 @@ fn op_request(op: Op) -> (Request, OpKind) {
         Op::GetMany { keys } => (Request::MGet { keys }, OpKind::Values),
         Op::DeleteMany { keys } => (Request::MDel { keys }, OpKind::Unit),
         Op::ExistsMany { keys } => (Request::MExists { keys }, OpKind::Bools),
+        // Watches never enter the FIFO request/response pipe; submit_op
+        // routes them through the watch plane before reaching here.
+        Op::Watch { .. } => unreachable!("Watch routes through KvClient::watch"),
     }
 }
 
-fn complete_sink(sink: Sink, result: Result<Response>) {
+fn complete_sink(
+    queue: &Mutex<PendingQueue>,
+    sink: Sink,
+    result: Result<Response>,
+) {
     match sink {
         Sink::Resp(c) => c.complete(result),
         Sink::Op { kind, completer } => {
             completer.complete(result.and_then(|resp| convert(kind, resp)))
         }
+        Sink::WatchAck { id } => {
+            let failed = match result {
+                Ok(Response::Error(msg)) => Some(Error::Protocol(msg)),
+                Ok(_) => None, // armed; Notify will route by id
+                Err(e) => Some(e),
+            };
+            if let Some(e) = failed {
+                let watch = queue.lock().unwrap().watches.remove(&id);
+                if let Some(c) = watch {
+                    c.complete(Err(e));
+                }
+            }
+        }
     }
 }
 
-/// In-flight completions, FIFO-matched to responses by the reader.
+/// In-flight completions: FIFO sinks matched by queue position, watch
+/// completers routed out-of-band by id.
 struct PendingQueue {
     sinks: VecDeque<Sink>,
+    /// Armed watches awaiting their `Notify` push.
+    watches: HashMap<u64, Completer<Arc<Vec<u8>>>>,
     /// Set once the connection died; later submissions fail fast with it.
     dead: Option<Error>,
 }
 
 fn fail_all(queue: &Mutex<PendingQueue>, err: Error) {
-    let mut q = queue.lock().unwrap();
-    if q.dead.is_none() {
-        q.dead = Some(err.clone());
+    // Drain under the lock, complete outside it: completions may run
+    // subscribed callbacks that take arbitrary locks of their own.
+    let (sinks, watches) = {
+        let mut q = queue.lock().unwrap();
+        if q.dead.is_none() {
+            q.dead = Some(err.clone());
+        }
+        (
+            q.sinks.drain(..).collect::<Vec<_>>(),
+            q.watches.drain().collect::<Vec<_>>(),
+        )
+    };
+    for sink in sinks {
+        complete_sink(queue, sink, Err(err.clone()));
     }
-    for sink in q.sinks.drain(..) {
-        complete_sink(sink, Err(err.clone()));
+    for (_, completer) in watches {
+        completer.complete(Err(err.clone()));
     }
 }
 
@@ -123,10 +171,20 @@ fn reader_loop(stream: TcpStream, queue: Arc<Mutex<PendingQueue>>) {
     let mut reader = std::io::BufReader::with_capacity(1 << 18, stream);
     loop {
         match read_frame::<_, Response>(&mut reader) {
+            Ok(Some(Response::Notify { id, value })) => {
+                // Out-of-band: routed by watch id, never FIFO-matched —
+                // this is what keeps a parked watch from stalling the
+                // shared response stream. An unknown id is a watch that
+                // was disarmed after firing raced the wire; drop it.
+                let watch = queue.lock().unwrap().watches.remove(&id);
+                if let Some(completer) = watch {
+                    completer.complete(Ok(Arc::new(value.0)));
+                }
+            }
             Ok(Some(resp)) => {
                 let sink = queue.lock().unwrap().sinks.pop_front();
                 match sink {
-                    Some(sink) => complete_sink(sink, Ok(resp)),
+                    Some(sink) => complete_sink(&queue, sink, Ok(resp)),
                     None => {
                         // A response with no matching request breaks the
                         // FIFO invariant; nothing after it can be trusted.
@@ -159,6 +217,7 @@ fn reader_loop(stream: TcpStream, queue: Arc<Mutex<PendingQueue>>) {
 pub struct KvClient {
     writer: Mutex<std::io::BufWriter<TcpStream>>,
     queue: Arc<Mutex<PendingQueue>>,
+    next_watch: AtomicU64,
     /// Kept for shutdown: unblocks the parked reader on drop.
     stream: TcpStream,
     reader: Option<std::thread::JoinHandle<()>>,
@@ -171,6 +230,7 @@ impl KvClient {
         stream.set_nodelay(true)?;
         let queue = Arc::new(Mutex::new(PendingQueue {
             sinks: VecDeque::new(),
+            watches: HashMap::new(),
             dead: None,
         }));
         // Clone both halves before spawning the reader, so an error here
@@ -190,15 +250,22 @@ impl KvClient {
                 writer_stream,
             )),
             queue,
+            next_watch: AtomicU64::new(0),
             stream,
             reader: Some(reader),
             addr,
         })
     }
 
-    /// Requests submitted but not yet completed (diagnostics).
+    /// Requests submitted but not yet completed (diagnostics). Armed
+    /// watches do not count: they are out-of-band, not queue entries.
     pub fn in_flight(&self) -> usize {
         self.queue.lock().unwrap().sinks.len()
+    }
+
+    /// Watches armed and not yet fired (diagnostics).
+    pub fn watches_armed(&self) -> usize {
+        self.queue.lock().unwrap().watches.len()
     }
 
     /// Serialize one request onto the shared socket and register its
@@ -212,7 +279,7 @@ impl KvClient {
             if let Some(e) = &q.dead {
                 let err = e.clone();
                 drop(q);
-                complete_sink(sink, Err(err));
+                complete_sink(&self.queue, sink, Err(err));
                 return;
             }
             q.sinks.push_back(sink);
@@ -244,12 +311,66 @@ impl KvClient {
 
     /// Submit a typed connector op (the native path behind
     /// [`Connector::submit`](crate::store::Connector::submit) for TCP
-    /// channels).
+    /// channels). `Watch` ops route through the out-of-band watch plane —
+    /// they complete from a `Notify` push, never from the FIFO stream.
     pub fn submit_op(&self, op: Op) -> Pending<OpResult> {
+        if let Op::Watch { key } = op {
+            return crate::ops::watch_result(self.watch(&key));
+        }
         let (completer, handle) = pending();
         let (req, kind) = op_request(op);
         self.submit_sink(&req, Sink::Op { kind, completer });
         handle
+    }
+
+    /// Arm an out-of-band watch: the handle completes with the value when
+    /// (or as soon as) the key exists. The `Notify` push is routed by
+    /// watch id, so a parked watch shares this pipelined connection with
+    /// ordinary traffic without stalling the FIFO response stream.
+    pub fn watch(&self, key: &str) -> Pending<Arc<Vec<u8>>> {
+        self.watch_with_id(key).1
+    }
+
+    /// [`KvClient::watch`] exposing the id, for callers that may need to
+    /// [`KvClient::unwatch`] (timeout paths).
+    pub fn watch_with_id(&self, key: &str) -> (u64, Pending<Arc<Vec<u8>>>) {
+        let id = self.next_watch.fetch_add(1, Ordering::Relaxed);
+        let (completer, handle) = pending();
+        let req = Request::Watch { key: key.into(), id };
+        // Same lock discipline as `submit_sink`, plus the watch-map
+        // insert: registered before the frame is on the wire, so even a
+        // Notify that races back instantly finds its completer.
+        let mut writer = self.writer.lock().unwrap();
+        {
+            let mut q = self.queue.lock().unwrap();
+            if let Some(e) = &q.dead {
+                let err = e.clone();
+                drop(q);
+                drop(writer);
+                completer.complete(Err(err));
+                return (id, handle);
+            }
+            q.watches.insert(id, completer);
+            q.sinks.push_back(Sink::WatchAck { id });
+        }
+        if let Err(e) = write_frame(&mut *writer, &req) {
+            drop(writer);
+            fail_all(&self.queue, e);
+        }
+        (id, handle)
+    }
+
+    /// Disarm a watch. `Ok(true)` means it was still armed server-side
+    /// and will never fire (the local handle is reaped and fails);
+    /// `Ok(false)` means it already fired — its `Notify` is delivered or
+    /// in flight, so the handle still completes.
+    pub fn unwatch(&self, key: &str, id: u64) -> Result<bool> {
+        let removed =
+            self.expect_int(Request::Unwatch { key: key.into(), id })? == 1;
+        if removed {
+            self.queue.lock().unwrap().watches.remove(&id);
+        }
+        Ok(removed)
     }
 
     /// Blocking round trip: submit and wait.
@@ -313,18 +434,29 @@ impl KvClient {
         }
     }
 
-    /// Blocking get; `None` timeout waits forever. Server-side blocking:
-    /// this parks the shared response stream until it resolves (use a
-    /// dedicated connection for long waits).
+    /// Blocking get; `None` timeout waits forever. Rides the out-of-band
+    /// watch plane: the wait parks client-side on a watch handle while
+    /// the shared pipelined connection keeps serving other traffic — no
+    /// dedicated connection, no server-side parking of the response
+    /// stream (the old `WaitGet` caveat is gone).
     pub fn wait_get(
         &self,
         key: &str,
         timeout: Option<Duration>,
     ) -> Result<Option<Bytes>> {
-        self.expect_value(Request::WaitGet {
-            key: key.into(),
-            timeout_ms: timeout.map(|d| d.as_millis() as u64).unwrap_or(0),
-        })
+        let (id, handle) = self.watch_with_id(key);
+        let Some(timeout) = timeout else {
+            return Ok(Some(Bytes(handle.wait()?.to_vec())));
+        };
+        if let Some(v) = handle.wait_timeout(timeout)? {
+            return Ok(Some(Bytes(v.to_vec())));
+        }
+        if self.unwatch(key, id)? {
+            return Ok(None); // disarmed before firing: a genuine timeout
+        }
+        // The watch fired concurrently with the timeout: its Notify is
+        // delivered or in flight (a dead connection fails the handle).
+        Ok(Some(Bytes(handle.wait()?.to_vec())))
     }
 
     pub fn del(&self, key: &str) -> Result<bool> {
@@ -538,6 +670,84 @@ mod tests {
         assert!(client.submit_op(Op::Get { key: "k".into() }).wait().is_err());
         assert!(t0.elapsed() < Duration::from_secs(2));
         assert!(client.ping().is_err());
+    }
+
+    #[test]
+    fn watch_completes_out_of_band() {
+        let server = KvServer::spawn().unwrap();
+        let client = KvClient::connect(server.addr).unwrap();
+        let handle = client.watch("later");
+        assert!(!handle.is_complete());
+        assert_eq!(client.watches_armed(), 1);
+        // The armed watch does not occupy the FIFO pipe.
+        client.ping().unwrap();
+        assert_eq!(client.in_flight(), 0);
+        let setter = KvClient::connect(server.addr).unwrap();
+        setter.set("later", Bytes(vec![4, 2])).unwrap();
+        assert_eq!(handle.wait().unwrap().to_vec(), vec![4, 2]);
+        assert_eq!(client.watches_armed(), 0);
+    }
+
+    #[test]
+    fn watch_existing_key_fires_immediately() {
+        let server = KvServer::spawn().unwrap();
+        let client = KvClient::connect(server.addr).unwrap();
+        client.set("here", Bytes(vec![7])).unwrap();
+        let handle = client.watch("here");
+        assert_eq!(handle.wait().unwrap().to_vec(), vec![7]);
+    }
+
+    #[test]
+    fn wait_get_timeout_leaves_pipe_usable() {
+        let server = KvServer::spawn().unwrap();
+        let client = KvClient::connect(server.addr).unwrap();
+        let t0 = std::time::Instant::now();
+        let got = client
+            .wait_get("never", Some(Duration::from_millis(40)))
+            .unwrap();
+        assert!(got.is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(40));
+        // Timeout disarmed the watch on both sides; the pipe still works.
+        assert_eq!(client.watches_armed(), 0);
+        client.set("k", Bytes(vec![1])).unwrap();
+        assert_eq!(client.get("k").unwrap(), Some(Bytes(vec![1])));
+        assert_eq!(
+            server.state().watch_count(),
+            0,
+            "server-side registry must not leak timed-out watches"
+        );
+    }
+
+    #[test]
+    fn wait_get_wakes_without_parking_the_pipe() {
+        let server = KvServer::spawn().unwrap();
+        let addr = server.addr;
+        let client = Arc::new(KvClient::connect(addr).unwrap());
+        let waiter = {
+            let c = client.clone();
+            std::thread::spawn(move || {
+                c.wait_get("slow", Some(Duration::from_secs(5))).unwrap()
+            })
+        };
+        std::thread::sleep(Duration::from_millis(30));
+        // The same connection keeps serving while the wait is parked.
+        client.set("other", Bytes(vec![1])).unwrap();
+        assert!(client.get("other").unwrap().is_some());
+        client.set("slow", Bytes(vec![9])).unwrap();
+        assert_eq!(waiter.join().unwrap(), Some(Bytes(vec![9])));
+    }
+
+    #[test]
+    fn server_death_fails_armed_watches_promptly() {
+        let mut server = KvServer::spawn().unwrap();
+        let client = KvClient::connect(server.addr).unwrap();
+        let handle = client.watch("never-set");
+        std::thread::sleep(Duration::from_millis(30));
+        server.shutdown();
+        let t0 = std::time::Instant::now();
+        assert!(handle.wait().is_err(), "armed watch must fail, not hang");
+        assert!(t0.elapsed() < Duration::from_secs(2));
+        assert_eq!(client.watches_armed(), 0);
     }
 
     #[test]

@@ -5,8 +5,13 @@
 //! environment has no Redis, so this module implements the required subset
 //! from scratch: a TCP KV server ([`KvServer`]) with Redis-flavoured
 //! semantics (GET/SET/DEL/EXISTS/MGET/MPUT/MDEL, pub/sub channels, lists
-//! with blocking pop) plus one extension — `WaitGet`, a server-side
-//! blocking GET that ProxyFutures resolution parks on instead of polling.
+//! with blocking pop) plus two extensions. `WaitGet` is a server-side
+//! blocking GET (it parks the connection; kept as a protocol primitive).
+//! The **watch plane** supersedes it for real waiting: `Watch` arms a
+//! one-shot waiter in the engine's registry and the eventual value
+//! arrives as an out-of-band `Notify` push routed by watch id, so parked
+//! waiters share the pipelined connection with live traffic — this is
+//! what ProxyFutures resolution and every `wait_get` ride now.
 //! The batched trio `MGET`/`MPUT`/`MDEL` moves whole key sets per frame:
 //! the shard fabric ([`crate::shard`]) rides the first two for
 //! `get_many`/`put_many`, and ownership's bulk-eviction paths (lifetime

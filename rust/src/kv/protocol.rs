@@ -14,6 +14,14 @@
 //! what lets the pipelined [`KvClient`](crate::kv::KvClient) keep N
 //! requests in flight on one socket and match responses to completion
 //! handles by queue position alone — no request ids on the wire.
+//!
+//! The watch/notify plane is the one deliberate exception: `Watch`
+//! registers a client-chosen id and is acknowledged FIFO like any other
+//! request, but the eventual `Notify { id, .. }` push arrives
+//! *out-of-band* — whenever some writer stores the key — and is routed by
+//! its id, not by queue position. A parked watch therefore never stalls
+//! the shared response stream the way the older server-side-blocking
+//! `WaitGet` did (which still exists, still parks, and is still FIFO).
 
 use std::io::{Read, Write};
 
@@ -46,8 +54,19 @@ pub enum Request {
     /// key sets (shard-fabric `exists_many`) pay one round trip.
     MExists { keys: Vec<String> },
     /// Blocking get: wait up to `timeout_ms` for the key to appear
-    /// (0 = wait forever).
+    /// (0 = wait forever). Parks the connection's FIFO response stream for
+    /// its whole duration — the watch plane (`Watch`/`Notify`) is the
+    /// nonblocking replacement; this survives as a protocol-level
+    /// primitive and for single-purpose connections.
     WaitGet { key: String, timeout_ms: u64 },
+    /// Arm an out-of-band watch on `key` under a client-chosen `id`.
+    /// Acknowledged `Ok` in FIFO order; fires a push-mode
+    /// [`Response::Notify`] carrying `id` when the key is stored
+    /// (immediately if it already exists). One-shot.
+    Watch { key: String, id: u64 },
+    /// Disarm a watch; replies `Int(1)` if it was still armed (it will
+    /// never fire), `Int(0)` if it already fired or was unknown.
+    Unwatch { key: String, id: u64 },
     /// Atomic increment; creates the key at 0 first.
     Incr { key: String, by: i64 },
     /// Keys with a prefix (admin/debug).
@@ -82,6 +101,9 @@ pub enum Response {
     KeysList(Vec<String>),
     /// Async pub/sub push.
     Message { channel: String, payload: Bytes },
+    /// Out-of-band watch firing: pushed whenever a watched key is stored,
+    /// routed client-side by the watch `id` (never FIFO-matched).
+    Notify { id: u64, value: Bytes },
     /// Stats: (n_keys, resident_bytes, ops_served).
     StatsReply { keys: u64, bytes: u64, ops: u64 },
     Error(String),
@@ -122,6 +144,8 @@ impl Encode for Request {
             Request::MPut { items } => tagged!(buf, 16, items),
             Request::MDel { keys } => tagged!(buf, 17, keys),
             Request::MExists { keys } => tagged!(buf, 18, keys),
+            Request::Watch { key, id } => tagged!(buf, 19, key, id),
+            Request::Unwatch { key, id } => tagged!(buf, 20, key, id),
         }
     }
 }
@@ -169,6 +193,14 @@ impl Decode for Request {
             16 => Request::MPut { items: Decode::decode(r)? },
             17 => Request::MDel { keys: Decode::decode(r)? },
             18 => Request::MExists { keys: Decode::decode(r)? },
+            19 => Request::Watch {
+                key: Decode::decode(r)?,
+                id: Decode::decode(r)?,
+            },
+            20 => Request::Unwatch {
+                key: Decode::decode(r)?,
+                id: Decode::decode(r)?,
+            },
             t => return Err(Error::Protocol(format!("bad request tag {t}"))),
         })
     }
@@ -190,6 +222,7 @@ impl Encode for Response {
             }
             Response::Error(msg) => tagged!(buf, 7, msg),
             Response::Bools(v) => tagged!(buf, 8, v),
+            Response::Notify { id, value } => tagged!(buf, 9, id, value),
         }
     }
 }
@@ -213,6 +246,10 @@ impl Decode for Response {
             },
             7 => Response::Error(Decode::decode(r)?),
             8 => Response::Bools(Decode::decode(r)?),
+            9 => Response::Notify {
+                id: Decode::decode(r)?,
+                value: Decode::decode(r)?,
+            },
             t => return Err(Error::Protocol(format!("bad response tag {t}"))),
         })
     }
@@ -287,6 +324,8 @@ mod tests {
         roundtrip_req(Request::MExists { keys: vec!["a".into(), "b".into()] });
         roundtrip_req(Request::MExists { keys: Vec::new() });
         roundtrip_req(Request::WaitGet { key: "k".into(), timeout_ms: 500 });
+        roundtrip_req(Request::Watch { key: "k".into(), id: u64::MAX });
+        roundtrip_req(Request::Unwatch { key: "k".into(), id: 0 });
         roundtrip_req(Request::Publish {
             channel: "c".into(),
             payload: Bytes(vec![9; 100]),
@@ -313,6 +352,8 @@ mod tests {
                 channel: "c".into(),
                 payload: Bytes(vec![2]),
             },
+            Response::Notify { id: 42, value: Bytes(vec![1, 2, 3]) },
+            Response::Notify { id: 0, value: Bytes(Vec::new()) },
             Response::StatsReply { keys: 1, bytes: 2, ops: 3 },
             Response::Error("boom".into()),
         ] {

@@ -1,11 +1,21 @@
 //! TCP front-end for the KV engine: thread-per-connection, length-prefixed
-//! frames, Redis-style subscribe mode.
+//! frames, Redis-style subscribe mode, and out-of-band watch pushes.
+//!
+//! A connection's writer is shared between its request loop and the watch
+//! callbacks it arms: `Watch` registers in the engine's registry
+//! ([`KvState::watch`]) with a callback that pushes the `Notify` frame
+//! from whichever writer thread stores the key — the connection thread
+//! never parks, so an armed watch costs the server nothing until it
+//! fires. Watches a connection leaves armed are disarmed when it closes.
 
+use std::collections::HashMap;
+use std::io::BufWriter;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use crate::codec::Bytes;
 use crate::error::Result;
 use crate::kv::protocol::{read_frame, write_frame, Request, Response};
 use crate::kv::state::KvState;
@@ -160,11 +170,30 @@ fn handle_request(state: &KvState, req: Request) -> Response {
             Response::StatsReply { keys, bytes, ops }
         }
         Request::Ping => Response::Ok,
-        Request::Subscribe { .. } => {
-            unreachable!("subscribe handled in serve_connection")
+        Request::Subscribe { .. }
+        | Request::Watch { .. }
+        | Request::Unwatch { .. } => {
+            unreachable!("push-mode requests handled in serve_connection")
         }
     }
 }
+
+/// The sharable write half of a connection: FIFO responses from the
+/// request loop and out-of-band `Notify` pushes from watch callbacks
+/// interleave at frame granularity under one lock.
+type SharedWriter = Arc<Mutex<BufWriter<TcpStream>>>;
+
+/// Cap on how long any single frame write may block on a peer's socket
+/// buffer. Notify pushes run on the *storing* connection's thread, so
+/// without a bound one watcher that stopped reading could wedge unrelated
+/// writers; with it, the wedged peer's pushes start erroring (and its
+/// connection dies) while writers stall at most this long.
+const WRITE_STALL_CAP: Duration = Duration::from_secs(5);
+
+/// Watches one connection armed, shared with its fire callbacks so a
+/// fired watch prunes its own entry: client watch id -> (key, registry
+/// token).
+type ArmedWatches = Arc<Mutex<HashMap<u64, (String, u64)>>>;
 
 fn serve_connection(
     stream: TcpStream,
@@ -172,19 +201,40 @@ fn serve_connection(
     stop: Arc<AtomicBool>,
 ) -> Result<()> {
     stream.set_nodelay(true)?;
+    stream.set_write_timeout(Some(WRITE_STALL_CAP))?;
     let mut reader = std::io::BufReader::with_capacity(1 << 18, stream.try_clone()?);
-    let mut writer = std::io::BufWriter::with_capacity(1 << 18, stream);
+    let writer: SharedWriter = Arc::new(Mutex::new(
+        BufWriter::with_capacity(1 << 18, stream),
+    ));
+    let armed: ArmedWatches = Arc::new(Mutex::new(HashMap::new()));
+    let result = serve_requests(&mut reader, &writer, &state, &stop, &armed);
+    // A closing connection disarms whatever it left armed, so dead peers
+    // never leak registry entries (their Notify would go nowhere anyway).
+    for (key, token) in std::mem::take(&mut *armed.lock().unwrap()).into_values()
+    {
+        state.unwatch(&key, token);
+    }
+    result
+}
+
+fn serve_requests(
+    reader: &mut std::io::BufReader<TcpStream>,
+    writer: &SharedWriter,
+    state: &KvState,
+    stop: &Arc<AtomicBool>,
+    armed: &ArmedWatches,
+) -> Result<()> {
     loop {
         // `KvServer::shutdown` closes tracked sockets, which surfaces here
         // as EOF/error and ends the connection thread.
-        let req: Option<Request> = read_frame(&mut reader)?;
+        let req: Option<Request> = read_frame(reader)?;
         let Some(req) = req else { return Ok(()) };
         match req {
             Request::Subscribe { channels } => {
                 // Connection flips into push mode: acknowledge then forward
                 // published messages until the peer hangs up.
                 let rx = state.subscribe(&channels);
-                write_frame(&mut writer, &Response::Ok)?;
+                write_frame(&mut *writer.lock().unwrap(), &Response::Ok)?;
                 loop {
                     match rx.recv_timeout(Duration::from_millis(100)) {
                         Ok(msg) => {
@@ -192,7 +242,9 @@ fn serve_connection(
                                 channel: msg.channel,
                                 payload: msg.payload,
                             };
-                            if write_frame(&mut writer, &push).is_err() {
+                            let sent =
+                                write_frame(&mut *writer.lock().unwrap(), &push);
+                            if sent.is_err() {
                                 return Ok(()); // subscriber gone
                             }
                         }
@@ -205,9 +257,55 @@ fn serve_connection(
                     }
                 }
             }
+            Request::Watch { key, id } => {
+                // Ack FIFO first; the Notify push is out-of-band (it may
+                // land immediately after when the key already exists).
+                write_frame(&mut *writer.lock().unwrap(), &Response::Ok)?;
+                let push = writer.clone();
+                let prune = armed.clone();
+                let token = state.watch(
+                    &key,
+                    Box::new(move |v| {
+                        // A fired watch prunes its own tracking entry
+                        // (armed-lock strictly before writer-lock, the
+                        // same order Unwatch uses). Fired from the
+                        // storing writer's thread; a dead or wedged peer
+                        // just loses its push, bounded by the socket
+                        // write timeout.
+                        prune.lock().unwrap().remove(&id);
+                        let _ = write_frame(
+                            &mut *push.lock().unwrap(),
+                            &Response::Notify { id, value: Bytes(v.to_vec()) },
+                        );
+                    }),
+                );
+                if let Some(token) = token {
+                    // Raced an immediate fire? The callback may have run
+                    // (and found nothing to prune) before this insert —
+                    // but then the registry already discharged the token,
+                    // so the stale entry only costs a no-op unwatch later.
+                    armed.lock().unwrap().insert(id, (key, token));
+                }
+            }
+            Request::Unwatch { key, id } => {
+                let entry = armed.lock().unwrap().remove(&id);
+                let removed = match entry {
+                    Some((key, token)) => state.unwatch(&key, token),
+                    // Unknown id: already fired (pruned at fire time) or
+                    // never armed here.
+                    None => {
+                        let _ = key;
+                        false
+                    }
+                };
+                write_frame(
+                    &mut *writer.lock().unwrap(),
+                    &Response::Int(i64::from(removed)),
+                )?;
+            }
             other => {
-                let resp = handle_request(&state, other);
-                write_frame(&mut writer, &resp)?;
+                let resp = handle_request(state, other);
+                write_frame(&mut *writer.lock().unwrap(), &resp)?;
             }
         }
     }

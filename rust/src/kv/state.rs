@@ -1,12 +1,17 @@
 //! Shared KV state: the storage engine behind both the TCP server and the
 //! embedded (in-process) handle.
 //!
-//! A single `Mutex<Inner>` + `Condvar` implements the blocking commands
-//! (`WaitGet`, `BRPop`): writers notify, blocked readers re-check their
-//! predicate. Pub/sub fan-out happens under the same lock for a consistent
-//! receiver count but the actual channel sends never block (unbounded
-//! `mpsc`), so a slow subscriber cannot stall writers — matching Redis'
-//! fire-and-forget pub/sub semantics.
+//! Waiting is event-driven: a **watch registry** maps keys to one-shot
+//! callbacks, and every write path (`set`/`set_nx`/`mset`) fires exactly
+//! the watchers of the keys it touched — a put wakes its waiters and
+//! nobody else, so a million parked watches cost zero CPU. `wait_get` is
+//! itself built on the registry (register, park, fire), and the TCP
+//! server's push-mode `Notify` frames ride the same callbacks. The
+//! `Mutex<Inner>` + `Condvar` pair survives only for `BRPop` (list pops
+//! re-check their predicate on `lpush`). Pub/sub fan-out happens under
+//! the same lock for a consistent receiver count but the actual channel
+//! sends never block (unbounded `mpsc`), so a slow subscriber cannot
+//! stall writers — matching Redis' fire-and-forget pub/sub semantics.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -25,12 +30,29 @@ pub struct PubSubMsg {
     pub payload: Bytes,
 }
 
+/// One-shot watcher callback: invoked with the stored value (sharing the
+/// engine's allocation) the moment the watched key is written — or
+/// immediately at registration if it already exists. Callbacks run on the
+/// writer's thread with no engine lock held, so they may complete handles
+/// and chain, but must stay cheap and non-blocking.
+pub type WatchCallback = Box<dyn FnOnce(Arc<Vec<u8>>) + Send>;
+
 #[derive(Default)]
 struct Inner {
     data: HashMap<String, Arc<Vec<u8>>>,
     lists: HashMap<String, VecDeque<Bytes>>,
     counters: HashMap<String, i64>,
     subscribers: HashMap<String, Vec<mpsc::Sender<PubSubMsg>>>,
+    /// Armed watches per key; tokens let a waiter disarm on timeout.
+    watches: HashMap<String, Vec<(u64, WatchCallback)>>,
+}
+
+impl Inner {
+    /// Detach the watchers a write to `key` must fire (called under the
+    /// engine lock; the callbacks run after it is released).
+    fn take_watches(&mut self, key: &str) -> Vec<(u64, WatchCallback)> {
+        self.watches.remove(key).unwrap_or_default()
+    }
 }
 
 /// The storage engine. Cheap to clone (Arc inside).
@@ -40,6 +62,7 @@ pub struct KvState {
     /// Bytes resident across values + list entries (Fig 7/10 gauge).
     pub gauge: Arc<StoreBytes>,
     ops: Arc<AtomicU64>,
+    next_watch: Arc<AtomicU64>,
 }
 
 impl Default for KvState {
@@ -54,6 +77,7 @@ impl KvState {
             inner: Arc::new((Mutex::new(Inner::default()), Condvar::new())),
             gauge: StoreBytes::new(),
             ops: Arc::new(AtomicU64::new(0)),
+            next_watch: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -67,28 +91,42 @@ impl KvState {
 
     pub fn set(&self, key: &str, value: Bytes) {
         self.bump();
-        let (m, cv) = &*self.inner;
-        let mut inner = m.lock().unwrap();
-        self.gauge.add(value.0.len());
-        if let Some(old) =
-            inner.data.insert(key.to_string(), Arc::new(value.0))
-        {
-            self.gauge.sub(old.len());
+        let (m, _) = &*self.inner;
+        let (watchers, stored) = {
+            let mut inner = m.lock().unwrap();
+            self.gauge.add(value.0.len());
+            let stored = Arc::new(value.0);
+            if let Some(old) =
+                inner.data.insert(key.to_string(), stored.clone())
+            {
+                self.gauge.sub(old.len());
+            }
+            (inner.take_watches(key), stored)
+        };
+        // Fire outside the engine lock: exactly this key's waiters wake,
+        // and their callbacks may chain freely.
+        for (_, cb) in watchers {
+            cb(stored.clone());
         }
-        cv.notify_all();
     }
 
     /// Returns true if stored (key was absent).
     pub fn set_nx(&self, key: &str, value: Bytes) -> bool {
         self.bump();
-        let (m, cv) = &*self.inner;
-        let mut inner = m.lock().unwrap();
-        if inner.data.contains_key(key) {
-            return false;
+        let (m, _) = &*self.inner;
+        let (watchers, stored) = {
+            let mut inner = m.lock().unwrap();
+            if inner.data.contains_key(key) {
+                return false;
+            }
+            self.gauge.add(value.0.len());
+            let stored = Arc::new(value.0);
+            inner.data.insert(key.to_string(), stored.clone());
+            (inner.take_watches(key), stored)
+        };
+        for (_, cb) in watchers {
+            cb(stored.clone());
         }
-        self.gauge.add(value.0.len());
-        inner.data.insert(key.to_string(), Arc::new(value.0));
-        cv.notify_all();
         true
     }
 
@@ -121,19 +159,78 @@ impl KvState {
         keys.iter().map(|k| inner.data.get(k).cloned()).collect()
     }
 
-    /// Batched set: all pairs inserted under one lock acquisition, one
-    /// wake-up for blocked readers.
+    /// Batched set: all pairs inserted under one lock acquisition; each
+    /// key's armed watchers fire once the batch lands.
     pub fn mset(&self, items: Vec<(String, Bytes)>) {
         self.bump();
-        let (m, cv) = &*self.inner;
-        let mut inner = m.lock().unwrap();
-        for (key, value) in items {
-            self.gauge.add(value.0.len());
-            if let Some(old) = inner.data.insert(key, Arc::new(value.0)) {
-                self.gauge.sub(old.len());
+        let (m, _) = &*self.inner;
+        let mut fired: Vec<(WatchCallback, Arc<Vec<u8>>)> = Vec::new();
+        {
+            let mut inner = m.lock().unwrap();
+            for (key, value) in items {
+                self.gauge.add(value.0.len());
+                let stored = Arc::new(value.0);
+                for (_, cb) in inner.take_watches(&key) {
+                    fired.push((cb, stored.clone()));
+                }
+                if let Some(old) = inner.data.insert(key, stored) {
+                    self.gauge.sub(old.len());
+                }
             }
         }
-        cv.notify_all();
+        for (cb, stored) in fired {
+            cb(stored);
+        }
+    }
+
+    /// Arm a one-shot watch on `key`: `cb` fires with the value on the
+    /// next write — or immediately (and without registering, returning
+    /// `None`) if the key already exists. The returned token disarms via
+    /// [`KvState::unwatch`]. This registry is the engine half of the
+    /// watch/notify plane: `wait_get` parks on it, the TCP server's
+    /// `Watch` command registers through it, and the memory connector's
+    /// native [`watch`](crate::store::Connector::watch) completes straight
+    /// from it.
+    pub fn watch(&self, key: &str, cb: WatchCallback) -> Option<u64> {
+        self.bump();
+        let (m, _) = &*self.inner;
+        let mut inner = m.lock().unwrap();
+        if let Some(v) = inner.data.get(key) {
+            let v = v.clone();
+            drop(inner);
+            cb(v);
+            return None;
+        }
+        let token = self.next_watch.fetch_add(1, Ordering::Relaxed);
+        inner
+            .watches
+            .entry(key.to_string())
+            .or_default()
+            .push((token, cb));
+        Some(token)
+    }
+
+    /// Disarm a watch. `false` means it already fired (or was never
+    /// registered) — the callback ran or is about to.
+    pub fn unwatch(&self, key: &str, token: u64) -> bool {
+        let (m, _) = &*self.inner;
+        let mut inner = m.lock().unwrap();
+        let Some(list) = inner.watches.get_mut(key) else {
+            return false;
+        };
+        let before = list.len();
+        list.retain(|(t, _)| *t != token);
+        let removed = list.len() < before;
+        if list.is_empty() {
+            inner.watches.remove(key);
+        }
+        removed
+    }
+
+    /// Armed watches across all keys (diagnostics / leak tests).
+    pub fn watch_count(&self) -> usize {
+        let (m, _) = &*self.inner;
+        m.lock().unwrap().watches.values().map(Vec::len).sum()
     }
 
     /// Blocking get: wait for the key up to `timeout` (`None` = forever).
@@ -141,32 +238,55 @@ impl KvState {
         self.wait_get_shared(key, timeout).map(|b| Bytes(b.to_vec()))
     }
 
-    /// Blocking zero-copy read (see [`KvState::get_shared`]).
+    /// Blocking zero-copy read (see [`KvState::get_shared`]), parked on
+    /// the watch registry: the waiter wakes from the single targeted
+    /// callback its key's writer fires — no shared condvar, no herd.
     pub fn wait_get_shared(
         &self,
         key: &str,
         timeout: Option<Duration>,
     ) -> Option<Arc<Vec<u8>>> {
-        self.bump();
-        let (m, cv) = &*self.inner;
+        type Slot = Arc<(Mutex<Option<Arc<Vec<u8>>>>, Condvar)>;
+        let slot: Slot = Arc::new((Mutex::new(None), Condvar::new()));
+        let fill = slot.clone();
+        let token = match self.watch(
+            key,
+            Box::new(move |v| {
+                *fill.0.lock().unwrap() = Some(v);
+                fill.1.notify_all();
+            }),
+        ) {
+            // Fired inline: the key already existed.
+            None => return slot.0.lock().unwrap().take(),
+            Some(token) => token,
+        };
         let deadline = timeout.map(|t| Instant::now() + t);
-        let mut inner = m.lock().unwrap();
+        let mut guard = slot.0.lock().unwrap();
         loop {
-            if let Some(v) = inner.data.get(key) {
-                return Some(v.clone());
+            if let Some(v) = guard.take() {
+                return Some(v);
             }
             match deadline {
-                None => inner = cv.wait(inner).unwrap(),
+                None => guard = slot.1.wait(guard).unwrap(),
                 Some(d) => {
                     let now = Instant::now();
                     if now >= d {
-                        return None;
+                        drop(guard);
+                        if self.unwatch(key, token) {
+                            return None; // disarmed before firing
+                        }
+                        // Fired concurrently with the timeout: the
+                        // callback is landing; take its value.
+                        guard = slot.0.lock().unwrap();
+                        loop {
+                            if let Some(v) = guard.take() {
+                                return Some(v);
+                            }
+                            guard = slot.1.wait(guard).unwrap();
+                        }
                     }
-                    let (guard, res) = cv.wait_timeout(inner, d - now).unwrap();
-                    inner = guard;
-                    if res.timed_out() && !inner.data.contains_key(key) {
-                        return None;
-                    }
+                    let (g, _) = slot.1.wait_timeout(guard, d - now).unwrap();
+                    guard = g;
                 }
             }
         }
@@ -533,6 +653,91 @@ mod tests {
             vec![true, false, true, true]
         );
         assert_eq!(kv.mexists(&[]), Vec::<bool>::new());
+    }
+
+    #[test]
+    fn watch_fires_on_set_and_disarms() {
+        let kv = KvState::new();
+        let fired = Arc::new(Mutex::new(Vec::new()));
+        let f2 = fired.clone();
+        let token = kv
+            .watch("w", Box::new(move |v| f2.lock().unwrap().push(v.to_vec())))
+            .expect("key absent: must register");
+        assert_eq!(kv.watch_count(), 1);
+        kv.set("other", Bytes(vec![9])); // unrelated write: no wake
+        assert!(fired.lock().unwrap().is_empty());
+        kv.set("w", Bytes(vec![1, 2]));
+        assert_eq!(*fired.lock().unwrap(), vec![vec![1, 2]]);
+        assert_eq!(kv.watch_count(), 0, "fired watch must disarm");
+        // One-shot: a second write does not re-fire.
+        kv.set("w", Bytes(vec![3]));
+        assert_eq!(fired.lock().unwrap().len(), 1);
+        assert!(!kv.unwatch("w", token), "already fired");
+    }
+
+    #[test]
+    fn watch_existing_key_fires_inline() {
+        let kv = KvState::new();
+        kv.set("here", Bytes(vec![7]));
+        let fired = Arc::new(Mutex::new(None));
+        let f2 = fired.clone();
+        let token =
+            kv.watch("here", Box::new(move |v| *f2.lock().unwrap() = Some(v)));
+        assert!(token.is_none(), "existing key fires without registering");
+        assert_eq!(
+            fired.lock().unwrap().as_ref().map(|v| v.to_vec()),
+            Some(vec![7])
+        );
+        assert_eq!(kv.watch_count(), 0);
+    }
+
+    #[test]
+    fn unwatch_disarms_and_mset_fires_batch_watchers() {
+        let kv = KvState::new();
+        let count = Arc::new(Mutex::new(0));
+        let c2 = count.clone();
+        let token = kv
+            .watch("a", Box::new(move |_| *c2.lock().unwrap() += 1))
+            .unwrap();
+        assert!(kv.unwatch("a", token));
+        assert!(!kv.unwatch("a", token), "second disarm is a no-op");
+        kv.set("a", Bytes(vec![1]));
+        assert_eq!(*count.lock().unwrap(), 0, "disarmed watch must not fire");
+
+        // mset fires every touched key's watchers, none of the others.
+        let hits = Arc::new(Mutex::new(Vec::new()));
+        for key in ["b", "c", "d"] {
+            let h = hits.clone();
+            kv.watch(key, Box::new(move |v| h.lock().unwrap().push(v.to_vec())))
+                .unwrap();
+        }
+        kv.mset(vec![
+            ("b".into(), Bytes(vec![1])),
+            ("c".into(), Bytes(vec![2])),
+        ]);
+        let mut got = hits.lock().unwrap().clone();
+        got.sort();
+        assert_eq!(got, vec![vec![1], vec![2]]);
+        assert_eq!(kv.watch_count(), 1, "d stays armed");
+    }
+
+    #[test]
+    fn set_nx_fires_watchers_only_when_stored() {
+        let kv = KvState::new();
+        let count = Arc::new(Mutex::new(0));
+        let c2 = count.clone();
+        kv.watch("nx", Box::new(move |_| *c2.lock().unwrap() += 1))
+            .unwrap();
+        assert!(kv.set_nx("nx", Bytes(vec![1])));
+        assert_eq!(*count.lock().unwrap(), 1);
+        let c3 = count.clone();
+        // Key exists now: a losing set_nx fires nothing (watch fires
+        // inline at registration instead).
+        assert!(kv
+            .watch("nx", Box::new(move |_| *c3.lock().unwrap() += 10))
+            .is_none());
+        assert!(!kv.set_nx("nx", Bytes(vec![2])));
+        assert_eq!(*count.lock().unwrap(), 11);
     }
 
     #[test]

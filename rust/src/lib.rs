@@ -48,6 +48,17 @@
 //! bridges and every fan-out without per-call thread spawns, and the
 //! [`store`] surfaces it as `put_async`/`get_async`/`proxy_async` so
 //! resolution overlaps with compute.
+//!
+//! Waiting is **event-driven**: every blocking rendezvous — ProxyFuture
+//! resolution, `wait_get`, fan-in joins — rides the out-of-band
+//! watch/notify plane ([`store::Connector::watch`]). A waiter arms a
+//! watch (a registry callback in-process, a `Watch`/`Notify` push pair on
+//! the pipelined TCP wire, replica arms racing on the shard fabrics that
+//! re-arm across elastic epoch flips) and parks on the handle: a parked
+//! waiter costs no poll tick, no dedicated connection, and no pool
+//! worker, and a single put wakes exactly its key's waiters in one push.
+//! [`futures::when_all`]/[`futures::when_any`] compose watch handles into
+//! joins that park once over N keys.
 
 pub mod apps;
 pub mod benchlib;
@@ -82,7 +93,7 @@ pub fn version() -> &'static str {
 pub mod prelude {
     pub use crate::codec::{Bytes, Decode, Encode, F32s};
     pub use crate::error::{Error, Result};
-    pub use crate::futures::ProxyFuture;
+    pub use crate::futures::{when_all, when_any, PendingResult, ProxyFuture};
     pub use crate::ops::{Op, OpResult, Pending};
     pub use crate::ownership::lifetime::StoreLifetimeExt;
     pub use crate::ownership::{

@@ -55,6 +55,12 @@ pub enum Op {
     DeleteMany { keys: Vec<String> },
     /// Batched existence probe ([`Connector::exists_many`]).
     ExistsMany { keys: Vec<String> },
+    /// Out-of-band watch ([`Connector::watch`]): completes with
+    /// `Value(Some(_))` when the key exists (immediately if it already
+    /// does). Unlike every other op, a watch may stay in flight
+    /// indefinitely — submission paths route it through the connector's
+    /// watch plane instead of parking a thread or a reactor worker on it.
+    Watch { key: String },
 }
 
 /// Completion value of a submitted [`Op`], mirroring the blocking return
@@ -144,7 +150,22 @@ pub fn execute<C: Connector + ?Sized>(conn: &C, op: Op) -> Result<OpResult> {
             OpResult::Unit
         }
         Op::ExistsMany { keys } => OpResult::Bools(conn.exists_many(&keys)?),
+        // Blocking bridge for a watch is an unbounded wait — only reached
+        // when a caller drives the bridge directly; submission paths route
+        // watches through the connector's watch plane instead.
+        Op::Watch { key } => OpResult::Value(conn.wait_get(&key, None)?),
     })
+}
+
+/// Adapt a raw watch handle ([`Connector::watch`](crate::store::Connector::watch))
+/// into an [`OpResult`] completion, so watches compose with every
+/// submission consumer (`Store::watch_async`, reactor fan-outs).
+pub fn watch_result(handle: Pending<Blob>) -> Pending<OpResult> {
+    let (completer, out) = pending();
+    handle.on_complete(move |res| {
+        completer.complete(res.map(|b| OpResult::Value(Some(b))));
+    });
+    out
 }
 
 /// Submit an op so the *caller* never blocks, whatever the channel
@@ -157,7 +178,10 @@ pub fn execute<C: Connector + ?Sized>(conn: &C, op: Op) -> Result<OpResult> {
 ///
 /// [`Store`]: crate::store::Store
 pub fn submit(conn: &Arc<dyn Connector>, op: Op) -> Pending<OpResult> {
-    if conn.submits_nonblocking() {
+    // Watches may park indefinitely: every connector's `submit` arms them
+    // through its watch plane (never a blocking bridge), so they must not
+    // be handed to a reactor worker even on blocking channels.
+    if conn.submits_nonblocking() || matches!(op, Op::Watch { .. }) {
         conn.submit(op)
     } else {
         let conn = conn.clone();
@@ -169,6 +193,15 @@ pub fn submit(conn: &Arc<dyn Connector>, op: Op) -> Pending<OpResult> {
 // Completion handles
 // ---------------------------------------------------------------------
 
+/// A registered completion callback plus an optional liveness probe the
+/// producer can consult ([`Completer::abandoned`]): when the probe says
+/// the subscriber no longer cares (a settled race), long-lived producers
+/// like the poll-bridge watch stop working for nobody.
+struct Subscription<T> {
+    cb: Box<dyn FnOnce(Result<T>) + Send>,
+    interested: Option<Box<dyn Fn() -> bool + Send>>,
+}
+
 enum Slot<T> {
     /// Submitted, not yet completed.
     InFlight,
@@ -176,6 +209,9 @@ enum Slot<T> {
     Ready(Result<T>),
     /// The value was taken by a waiter.
     Taken,
+    /// A callback claimed the completion ([`Pending::on_complete`]); it
+    /// runs on the completer's thread and consumes the value.
+    Subscribed(Subscription<T>),
 }
 
 struct Shared<T> {
@@ -224,9 +260,65 @@ impl<T> Pending<T> {
         }
     }
 
-    /// Whether the op has completed (taken counts as completed).
+    /// Whether the op has completed (taken counts as completed; a
+    /// subscribed callback still waiting does not).
     pub fn is_complete(&self) -> bool {
-        !matches!(*self.shared.slot.lock().unwrap(), Slot::InFlight)
+        !matches!(
+            *self.shared.slot.lock().unwrap(),
+            Slot::InFlight | Slot::Subscribed(_)
+        )
+    }
+
+    /// Hand the completion to a callback instead of a waiter: `f` runs
+    /// exactly once with the result — immediately on the calling thread if
+    /// the op already completed, otherwise on the completer's thread at
+    /// completion time (including the failure a dropped completer
+    /// injects). Consumes the handle; this is what lets watch handles
+    /// compose without parking a thread per handle (racing replica arms,
+    /// `when_any` fan-ins, typed adapters).
+    ///
+    /// Callbacks must be cheap and non-blocking: they run inline on
+    /// whatever thread completes the op (a KV reader thread, a storage
+    /// engine writer firing its watchers).
+    pub fn on_complete(self, f: impl FnOnce(Result<T>) + Send + 'static) {
+        self.subscribe(Box::new(f), None);
+    }
+
+    /// [`Pending::on_complete`] with a liveness probe: `interested`
+    /// answers whether the subscriber still wants the completion. A
+    /// long-lived producer ([`Completer::abandoned`]) polls it to stop
+    /// producing for a subscriber that can no longer use the value — a
+    /// settled [`Race`] arm, for instance. Must be cheap and must not
+    /// block (it runs under the handle's slot lock).
+    pub fn on_complete_while(
+        self,
+        f: impl FnOnce(Result<T>) + Send + 'static,
+        interested: impl Fn() -> bool + Send + 'static,
+    ) {
+        self.subscribe(Box::new(f), Some(Box::new(interested)));
+    }
+
+    fn subscribe(
+        self,
+        cb: Box<dyn FnOnce(Result<T>) + Send>,
+        interested: Option<Box<dyn Fn() -> bool + Send>>,
+    ) {
+        let mut slot = self.shared.slot.lock().unwrap();
+        match &*slot {
+            Slot::InFlight => {
+                *slot = Slot::Subscribed(Subscription { cb, interested });
+            }
+            Slot::Taken | Slot::Subscribed(_) => {} // value already claimed
+            Slot::Ready(_) => {
+                match std::mem::replace(&mut *slot, Slot::Taken) {
+                    Slot::Ready(res) => {
+                        drop(slot);
+                        cb(res);
+                    }
+                    _ => unreachable!("matched Ready above"),
+                }
+            }
+        }
     }
 
     /// Block until completion and take the result. Taking twice reports
@@ -236,7 +328,9 @@ impl<T> Pending<T> {
         loop {
             match &*slot {
                 Slot::InFlight => slot = self.shared.cv.wait(slot).unwrap(),
-                Slot::Taken => return Err(already_taken()),
+                Slot::Taken | Slot::Subscribed(_) => {
+                    return Err(already_taken())
+                }
                 Slot::Ready(_) => {
                     match std::mem::replace(&mut *slot, Slot::Taken) {
                         Slot::Ready(res) => return res,
@@ -266,7 +360,9 @@ impl<T> Pending<T> {
                         .unwrap();
                     slot = guard;
                 }
-                Slot::Taken => return Err(already_taken()),
+                Slot::Taken | Slot::Subscribed(_) => {
+                    return Err(already_taken())
+                }
                 Slot::Ready(_) => {
                     match std::mem::replace(&mut *slot, Slot::Taken) {
                         Slot::Ready(res) => return res.map(Some),
@@ -282,7 +378,7 @@ impl<T> Pending<T> {
         let mut slot = self.shared.slot.lock().unwrap();
         match &*slot {
             Slot::InFlight => Ok(None),
-            Slot::Taken => Err(already_taken()),
+            Slot::Taken | Slot::Subscribed(_) => Err(already_taken()),
             Slot::Ready(_) => match std::mem::replace(&mut *slot, Slot::Taken) {
                 Slot::Ready(res) => res.map(Some),
                 _ => unreachable!("matched Ready above"),
@@ -297,6 +393,7 @@ impl<T> std::fmt::Debug for Pending<T> {
             Slot::InFlight => "in-flight",
             Slot::Ready(_) => "ready",
             Slot::Taken => "taken",
+            Slot::Subscribed(_) => "subscribed",
         };
         f.debug_struct("Pending").field("state", &state).finish()
     }
@@ -308,17 +405,42 @@ impl<T> Completer<T> {
         self.fill(result);
     }
 
+    /// Whether nothing can consume the completion anymore: the handle was
+    /// dropped without a waiter, and any subscribed callback's liveness
+    /// probe ([`Pending::on_complete_while`]) reports disinterest.
+    /// Long-lived producers (the default watch poller, the throttled
+    /// bridge) use this to stop working for nobody.
+    pub fn abandoned(&self) -> bool {
+        let handle_gone = std::sync::Arc::strong_count(&self.shared) == 1;
+        match &*self.shared.slot.lock().unwrap() {
+            Slot::Subscribed(sub) => match &sub.interested {
+                Some(probe) => !probe(),
+                // A probe-less subscription counts as live interest.
+                None => false,
+            },
+            _ => handle_gone,
+        }
+    }
+
     fn fill(&mut self, result: Result<T>) {
         if self.completed {
             return;
         }
         self.completed = true;
         let mut slot = self.shared.slot.lock().unwrap();
-        if matches!(*slot, Slot::InFlight) {
-            *slot = Slot::Ready(result);
+        match std::mem::replace(&mut *slot, Slot::Taken) {
+            Slot::InFlight => {
+                *slot = Slot::Ready(result);
+                drop(slot);
+                self.shared.cv.notify_all();
+            }
+            Slot::Subscribed(sub) => {
+                drop(slot);
+                (sub.cb)(result);
+            }
+            // Already settled (defensive; fill guards on `completed`).
+            other => *slot = other,
         }
-        drop(slot);
-        self.shared.cv.notify_all();
     }
 }
 
@@ -329,6 +451,146 @@ impl<T> Drop for Completer<T> {
         self.fill(Err(Error::Connector(
             "operation abandoned: completer dropped before completion".into(),
         )));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Racing fan-in
+// ---------------------------------------------------------------------
+
+struct RaceState<T> {
+    /// Taken by the first success (or the last failure).
+    completer: Option<Completer<T>>,
+    /// Arms whose outcome is still pending.
+    armed: usize,
+    last_err: Option<Error>,
+}
+
+/// First-success-wins fan-in over a growable set of completion handles:
+/// the watch plane's aggregation primitive. The sharded router arms every
+/// replica of a key and completes from whichever fires first; the elastic
+/// control plane keeps the race alive across epoch flips by
+/// [`add`](Race::add)ing fresh arms mid-flight. The output handle fails
+/// only when *every* arm has failed (a dead backend among live ones is
+/// not an error), completing with the last failure seen. Thread-free:
+/// arms deliver through [`Pending::on_complete`], so a thousand parked
+/// races cost no threads and no polling.
+pub struct Race<T> {
+    state: Arc<Mutex<RaceState<T>>>,
+}
+
+impl<T> Clone for Race<T> {
+    fn clone(&self) -> Self {
+        Race { state: self.state.clone() }
+    }
+}
+
+/// Create a connected race/handle pair (the fan-in twin of [`pending`]).
+/// The handle stays in flight until an arm wins — callers must add at
+/// least one arm or the race never settles.
+pub fn race<T: Send + 'static>() -> (Race<T>, Pending<T>) {
+    let (completer, handle) = pending();
+    (
+        Race {
+            state: Arc::new(Mutex::new(RaceState {
+                completer: Some(completer),
+                armed: 0,
+                last_err: None,
+            })),
+        },
+        handle,
+    )
+}
+
+impl<T: Send + 'static> Race<T> {
+    /// Whether the race has settled (an arm won, or all arms failed).
+    pub fn settled(&self) -> bool {
+        self.state.lock().unwrap().completer.is_none()
+    }
+
+    /// Add one arm (see [`Race::add_all`]).
+    pub fn add(&self, handle: Pending<T>) {
+        self.add_all(vec![handle]);
+    }
+
+    /// Add a batch of arms. The whole batch is registered before any
+    /// outcome can settle the race, so an arm that fails synchronously
+    /// (a ready-error handle from a dead backend) cannot fail the race
+    /// while its siblings are still being armed. Arms added after the
+    /// race settled are dropped — their completions land nowhere.
+    pub fn add_all(&self, handles: Vec<Pending<T>>) {
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.completer.is_none() {
+                return;
+            }
+            st.armed += handles.len();
+        }
+        for handle in handles {
+            self.subscribe_arm(handle, |v| v);
+        }
+    }
+
+    /// Add one arm of a different payload type, mapped into the race's
+    /// (`when_any`'s index tagging, typed adapters). Same registration
+    /// semantics as [`Race::add_all`].
+    pub fn add_map<S, F>(&self, handle: Pending<S>, map: F)
+    where
+        S: Send + 'static,
+        F: FnOnce(S) -> T + Send + 'static,
+    {
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.completer.is_none() {
+                return;
+            }
+            st.armed += 1;
+        }
+        self.subscribe_arm(handle, map);
+    }
+
+    /// Subscribe one pre-counted arm. The subscription carries a liveness
+    /// probe (settled race = no interest), so an arm backed by a
+    /// long-lived producer — a poll-bridge watch thread — shuts down once
+    /// a sibling has won instead of producing forever for nobody.
+    fn subscribe_arm<S, F>(&self, handle: Pending<S>, map: F)
+    where
+        S: Send + 'static,
+        F: FnOnce(S) -> T + Send + 'static,
+    {
+        let state = self.state.clone();
+        let probe = self.state.clone();
+        handle.on_complete_while(
+            move |res| {
+                let winner = {
+                    let mut st = state.lock().unwrap();
+                    st.armed -= 1;
+                    match res {
+                        Ok(v) => {
+                            st.completer.take().map(|c| (c, Ok(map(v))))
+                        }
+                        Err(e) => {
+                            st.last_err = Some(e);
+                            if st.armed == 0 {
+                                let err = st
+                                    .last_err
+                                    .clone()
+                                    .expect("error recorded above");
+                                st.completer.take().map(|c| (c, Err(err)))
+                            } else {
+                                None
+                            }
+                        }
+                    }
+                };
+                // Complete outside the state lock: the output handle may
+                // itself be subscribed, chaining into arbitrary callbacks.
+                if let Some((completer, res)) = winner {
+                    completer.complete(res);
+                }
+            },
+            move || probe.lock().unwrap().completer.is_some(),
+        );
     }
 }
 
@@ -467,6 +729,148 @@ mod tests {
             .into_unit()
             .unwrap();
         assert_eq!(conn.len().unwrap(), 0);
+    }
+
+    #[test]
+    fn on_complete_fires_now_or_later() {
+        // Already-ready handle: callback runs inline.
+        let hits = Arc::new(Mutex::new(Vec::new()));
+        let h2 = hits.clone();
+        Pending::ready(Ok(1u32)).on_complete(move |r| {
+            h2.lock().unwrap().push(r.unwrap());
+        });
+        assert_eq!(*hits.lock().unwrap(), vec![1]);
+
+        // In-flight handle: callback runs on the completer's thread.
+        let (completer, handle) = pending::<u32>();
+        let h3 = hits.clone();
+        handle.on_complete(move |r| h3.lock().unwrap().push(r.unwrap()));
+        completer.complete(Ok(2));
+        assert_eq!(*hits.lock().unwrap(), vec![1, 2]);
+
+        // A dropped completer still delivers (as an error).
+        let (completer, handle) = pending::<u32>();
+        let errs = Arc::new(Mutex::new(0));
+        let e2 = errs.clone();
+        handle.on_complete(move |r| {
+            assert!(r.is_err());
+            *e2.lock().unwrap() += 1;
+        });
+        drop(completer);
+        assert_eq!(*errs.lock().unwrap(), 1);
+    }
+
+    #[test]
+    fn abandoned_tracks_handle_and_subscription() {
+        let (completer, handle) = pending::<u8>();
+        assert!(!completer.abandoned(), "live handle");
+        handle.on_complete(|_| {});
+        assert!(!completer.abandoned(), "subscribed callback keeps it live");
+        completer.complete(Ok(1));
+
+        let (completer, handle) = pending::<u8>();
+        drop(handle);
+        assert!(completer.abandoned(), "dropped unsubscribed handle");
+
+        // A probe-carrying subscription reports the probe's answer.
+        let live = Arc::new(Mutex::new(true));
+        let l2 = live.clone();
+        let (completer, handle) = pending::<u8>();
+        handle.on_complete_while(|_| {}, move || *l2.lock().unwrap());
+        assert!(!completer.abandoned(), "probe says interested");
+        *live.lock().unwrap() = false;
+        assert!(completer.abandoned(), "probe says disinterested");
+    }
+
+    #[test]
+    fn settled_race_releases_losing_arms() {
+        // A race's losing arm must report abandonment to its producer so
+        // long-lived pollers shut down instead of producing forever.
+        let (group, out) = race::<u8>();
+        let (winner_c, winner_h) = pending();
+        let (loser_c, loser_h) = pending();
+        group.add_all(vec![winner_h, loser_h]);
+        assert!(!loser_c.abandoned(), "race still open: arm is wanted");
+        winner_c.complete(Ok(1));
+        assert!(loser_c.abandoned(), "settled race must release its arms");
+        assert_eq!(out.wait().unwrap(), 1);
+    }
+
+    #[test]
+    fn race_add_map_tags_arms() {
+        let (group, out) = race::<(usize, u8)>();
+        let (c0, h0) = pending::<u8>();
+        let (c1, h1) = pending::<u8>();
+        group.add_map(h0, |v| (0, v));
+        group.add_map(h1, |v| (1, v));
+        c1.complete(Ok(9));
+        c0.complete(Ok(7)); // loser lands nowhere
+        assert_eq!(out.wait().unwrap(), (1, 9));
+    }
+
+    #[test]
+    fn race_first_success_wins() {
+        let (group, out) = race::<u8>();
+        let (c1, h1) = pending();
+        let (c2, h2) = pending();
+        group.add_all(vec![h1, h2]);
+        assert!(!group.settled());
+        c1.complete(Ok(7));
+        assert!(group.settled());
+        c2.complete(Ok(9)); // loser lands nowhere
+        assert_eq!(out.wait().unwrap(), 7);
+    }
+
+    #[test]
+    fn race_fails_only_when_all_arms_fail() {
+        let (group, out) = race::<u8>();
+        let (c1, h1) = pending();
+        let (c2, h2) = pending();
+        group.add_all(vec![h1, h2]);
+        c1.complete(Err(Error::Connector("one down".into())));
+        assert!(!group.settled(), "a surviving arm keeps the race open");
+        c2.complete(Err(Error::Connector("all down".into())));
+        match out.wait() {
+            Err(Error::Connector(m)) => assert!(m.contains("all down")),
+            other => panic!("expected connector error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn race_batch_arming_survives_synchronous_failures() {
+        // A ready-error arm in the same batch as a live one must not
+        // settle the race before the live arm is registered.
+        let (group, out) = race::<u8>();
+        let (c, live) = pending();
+        group.add_all(vec![
+            Pending::ready(Err(Error::Connector("dead backend".into()))),
+            live,
+        ]);
+        assert!(!group.settled());
+        c.complete(Ok(3));
+        assert_eq!(out.wait().unwrap(), 3);
+
+        // Arms added after settling are dropped, not errors.
+        let (group, out) = race::<u8>();
+        group.add(Pending::ready(Ok(1)));
+        group.add(Pending::ready(Ok(2)));
+        assert_eq!(out.wait().unwrap(), 1);
+    }
+
+    #[test]
+    fn watch_result_adapts_blob_handles() {
+        let (completer, handle) = pending();
+        let adapted = watch_result(handle);
+        completer.complete(Ok(Arc::new(vec![1u8, 2])));
+        assert_eq!(
+            adapted
+                .wait()
+                .unwrap()
+                .into_value()
+                .unwrap()
+                .map(|b| b.to_vec()),
+            Some(vec![1, 2])
+        );
     }
 
     #[test]

@@ -249,14 +249,17 @@ pub fn fan_out<L, T: Send + 'static>(
 /// batched multi-channel round. Channels with a nonblocking native
 /// [`submit`](crate::store::Connector::submit) go straight onto their
 /// pipelined wire (no pool thread consumed); blocking bridges become pool
-/// jobs. Results are labelled like [`fan_out`].
+/// jobs. `Watch` ops always go direct — every channel arms them through
+/// its watch plane, and an indefinitely-parked watch must never occupy a
+/// pool worker (the pool's contract is short-lived jobs only). Results
+/// are labelled like [`fan_out`].
 pub fn fan_out_ops(
     ops: Vec<(usize, std::sync::Arc<dyn Connector>, Op)>,
 ) -> Vec<(usize, Result<OpResult>)> {
     let mut direct: Vec<(usize, Pending<OpResult>)> = Vec::new();
     let mut pooled: Vec<(usize, Job<OpResult>)> = Vec::new();
     for (label, conn, op) in ops {
-        if conn.submits_nonblocking() {
+        if conn.submits_nonblocking() || matches!(op, Op::Watch { .. }) {
             direct.push((label, conn.submit(op)));
         } else {
             pooled.push((label, Box::new(move || conn.submit(op).wait())));

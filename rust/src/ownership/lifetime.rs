@@ -6,13 +6,23 @@
 //! Cheriton), and [`StaticLifetime`] (process-long). All share the
 //! [`Lifetime`] trait so `Store::proxy` integration and user extensions
 //! are uniform.
+//!
+//! The release path is event-driven end to end: closing a lifetime
+//! batches its keys per channel and fans the eviction sweeps out as
+//! submitted ops ([`fan_out_ops`]) — channels settle concurrently through
+//! completion handles instead of serial round trips — and the lease
+//! monitor parks on a condvar until the exact expiry instant
+//! ([`LeaseLifetime::extend`] wakes it to recompute) rather than ticking
+//! a poll loop.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::codec::Encode;
 use crate::error::Result;
+use crate::ops::reactor::fan_out_ops;
+use crate::ops::Op;
 use crate::proxy::{Factory, Proxy};
 use crate::store::Store;
 
@@ -76,10 +86,20 @@ impl Attached {
                 .1;
             keys.push(f.key);
         }
-        for (f, keys) in groups.into_values() {
-            if let Ok(conn) = f.connector() {
-                let _ = conn.delete_many(&keys);
-            }
+        // Fan the per-channel sweeps out as submitted ops: pipelined
+        // channels put their MDEL on the wire, the rest ride the shared
+        // reactor — a multi-channel release settles in the slowest
+        // channel's time, not the sum. Best-effort, like the serial
+        // sweeps this replaces.
+        let ops: Vec<_> = groups
+            .into_values()
+            .enumerate()
+            .filter_map(|(i, (f, keys))| {
+                f.connector().ok().map(|conn| (i, conn, Op::DeleteMany { keys }))
+            })
+            .collect();
+        for (_, result) in fan_out_ops(ops) {
+            let _ = result;
         }
     }
 }
@@ -123,7 +143,9 @@ impl Drop for ContextLifetime {
 // --------------------------------------------------------------------------
 
 /// Time-leased lifetime: objects are evicted when the lease expires and is
-/// not extended. A monitor thread enforces expiry without client polling.
+/// not extended. A monitor thread enforces expiry without client polling:
+/// it parks on a condvar until the exact expiry instant, and
+/// [`LeaseLifetime::extend`] wakes it to recompute — no periodic tick.
 pub struct LeaseLifetime {
     inner: Arc<LeaseInner>,
 }
@@ -131,6 +153,13 @@ pub struct LeaseLifetime {
 struct LeaseInner {
     attached: Mutex<Attached>,
     expiry: Mutex<Instant>,
+    /// Wakes the monitor when the expiry moves — or the handle dropped.
+    extended: Condvar,
+    /// Set when the `LeaseLifetime` handle is dropped: the monitor exits
+    /// promptly instead of holding the lease state for the rest of the
+    /// TTL (pre-watch-plane behaviour, event-driven instead of a 50ms
+    /// liveness poll).
+    handle_dropped: std::sync::atomic::AtomicBool,
 }
 
 impl LeaseLifetime {
@@ -139,31 +168,49 @@ impl LeaseLifetime {
         let inner = Arc::new(LeaseInner {
             attached: Mutex::new(Attached::default()),
             expiry: Mutex::new(Instant::now() + ttl),
+            extended: Condvar::new(),
+            handle_dropped: std::sync::atomic::AtomicBool::new(false),
         });
         let monitor = Arc::downgrade(&inner);
         std::thread::Builder::new()
             .name("lease-monitor".into())
             .spawn(move || loop {
                 let Some(inner) = monitor.upgrade() else { return };
-                let expiry = *inner.expiry.lock().unwrap();
+                let expiry = inner.expiry.lock().unwrap();
+                // Checked under the condvar's mutex (drop sets it under
+                // the same lock), so the wakeup cannot be lost between
+                // this check and the park below.
+                if inner
+                    .handle_dropped
+                    .load(std::sync::atomic::Ordering::SeqCst)
+                {
+                    return; // abandoned lease: release state promptly
+                }
                 let now = Instant::now();
-                if now >= expiry {
+                if now >= *expiry {
+                    drop(expiry);
                     inner.attached.lock().unwrap().close_now();
                     return;
                 }
-                let wait = (expiry - now).min(Duration::from_millis(50));
-                drop(inner);
-                std::thread::sleep(wait);
+                // Park until expiry; extend() (or the handle's drop)
+                // notifies and the loop recomputes.
+                let wait = *expiry - now;
+                let (guard, _) =
+                    inner.extended.wait_timeout(expiry, wait).unwrap();
+                drop(guard);
             })
             .expect("spawn lease-monitor");
         LeaseLifetime { inner }
     }
 
     /// Extend the lease by `extra` (from the current expiry; Listing 4's
-    /// `lease.extend(5)`).
+    /// `lease.extend(5)`). Wakes the parked monitor so it re-arms on the
+    /// new deadline.
     pub fn extend(&self, extra: Duration) {
         let mut expiry = self.inner.expiry.lock().unwrap();
         *expiry += extra;
+        drop(expiry);
+        self.inner.extended.notify_all();
     }
 
     /// Remaining time on the lease.
@@ -173,6 +220,23 @@ impl LeaseLifetime {
             .lock()
             .unwrap()
             .saturating_duration_since(Instant::now())
+    }
+}
+
+impl Drop for LeaseLifetime {
+    /// Wake the monitor so a dropped lease releases its thread and state
+    /// promptly instead of parking out the remaining TTL. Matches the
+    /// pre-existing semantics: an abandoned (never-expired) lease does
+    /// not evict — cleanup belongs to expiry.
+    fn drop(&mut self) {
+        // Flag + notify under the condvar's mutex: the monitor checks the
+        // flag under the same lock before parking, so this wakeup cannot
+        // slip between its check and its park.
+        let _guard = self.inner.expiry.lock().unwrap();
+        self.inner
+            .handle_dropped
+            .store(true, std::sync::atomic::Ordering::SeqCst);
+        self.inner.extended.notify_all();
     }
 }
 

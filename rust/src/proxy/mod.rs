@@ -93,6 +93,9 @@ impl Factory {
     /// Fetch the raw target bytes, honouring wait semantics. The blob
     /// shares the connector's allocation where possible (memory channel)
     /// and is served from / published to the process-local LRU cache.
+    /// Wait-mode resolution (ProxyFutures) arms an out-of-band watch and
+    /// parks on the handle: the producer's write pushes the value to the
+    /// waiter in one wire push — no polling, no parked server connection.
     pub fn fetch_bytes(&self) -> Result<crate::store::Blob> {
         let desc_bytes = self.desc.to_bytes();
         if let Some(blob) = cache::global().get(&desc_bytes, &self.key) {
@@ -105,7 +108,11 @@ impl Factory {
             Some(Duration::from_millis(self.timeout_ms))
         };
         let got = if self.wait {
-            conn.wait_get(&self.key, timeout)?
+            let handle = conn.watch(&self.key);
+            match timeout {
+                None => Some(handle.wait()?),
+                Some(t) => handle.wait_timeout(t)?,
+            }
         } else {
             conn.get(&self.key)?
         };
@@ -138,10 +145,13 @@ impl Factory {
 /// pending proxies to amortize round trips; subsequent
 /// [`Proxy::resolve`] calls are then served from memory.
 ///
-/// Proxies that are already resolved, already cached, or in wait mode
-/// (futures whose target may not exist yet) are skipped. Missing targets
-/// are left for `resolve` to report. Returns the number of targets
-/// actually fetched.
+/// Proxies that are already resolved, already cached, or in wait mode are
+/// skipped: a wait-mode target may not exist yet, and prefetch must stay
+/// bounded — arming watches here would park the collection on the slowest
+/// producer (arm [`ProxyFuture::result_async`](crate::futures::ProxyFuture::result_async)
+/// or [`crate::futures::when_all`] for that). Missing targets are left
+/// for `resolve` to report. Returns the number of targets actually
+/// fetched.
 pub fn prefetch<T>(proxies: &[Proxy<T>]) -> Result<usize> {
     let mut groups: std::collections::HashMap<Vec<u8>, Vec<&Factory>> =
         std::collections::HashMap::new();

@@ -50,6 +50,7 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::metrics::{RebalanceMetrics, RebalanceSnapshot};
+use crate::ops::{race, Pending, Race};
 use crate::shard::router::{ShardedConnector, DEFAULT_VNODES};
 use crate::store::{Blob, Connector, ConnectorDesc};
 
@@ -239,6 +240,11 @@ struct ElasticInner {
     /// Signaled when a migration fully drains.
     idle: Mutex<()>,
     idle_cv: Condvar,
+    /// Live watches, re-armed on every epoch flip so a rebalance mid-wait
+    /// never strands a waiter (its key may land at the *new* placement,
+    /// which the pre-flip arms don't cover). Settled entries are pruned
+    /// opportunistically on arm and flip.
+    watchers: Mutex<Vec<(String, Race<Blob>)>>,
     metrics: Arc<RebalanceMetrics>,
 }
 
@@ -306,6 +312,7 @@ impl ElasticShards {
                 admin: Mutex::new(()),
                 idle: Mutex::new(()),
                 idle_cv: Condvar::new(),
+                watchers: Mutex::new(Vec::new()),
                 metrics: RebalanceMetrics::new(),
             }),
         })
@@ -445,6 +452,29 @@ impl ElasticShards {
             st.members = members;
             token = inner.generation.fetch_add(1, Ordering::SeqCst) + 1;
             st.migration_token = token;
+        }
+
+        // Re-arm every live watch on the post-flip placement. The old
+        // arms stay valid (they cover values already resident or still
+        // landing at the old epoch, which the daemon will copy through
+        // the new router — itself firing the new arms); the fresh arm
+        // covers writes that go straight to the new placement. Arming
+        // checks existence, so a put that slips in between the flip and
+        // this loop still fires. The sweep snapshots under the lock and
+        // arms outside it — arming touches backends (Watch frames on TCP
+        // shards), and concurrent `watch()` callers must not queue behind
+        // that I/O; a watch registered mid-sweep covers itself via its
+        // own post-registration epoch re-check.
+        let live_watches: Vec<(String, Race<Blob>)> = {
+            let mut watchers = inner.watchers.lock().unwrap();
+            watchers.retain(|(_, group)| !group.settled());
+            watchers
+                .iter()
+                .map(|(key, group)| (key.clone(), group.clone()))
+                .collect()
+        };
+        for (key, group) in live_watches {
+            group.add(new_router.watch(&key));
         }
 
         // Migration plan: every key whose replica set changed, each
@@ -643,6 +673,27 @@ impl ElasticShards {
         !Arc::ptr_eq(&self.inner.state.read().unwrap().current, cur)
     }
 
+    /// Epoch-stability retry (write half of the `get` retry): a write
+    /// that raced a flip may have landed at a placement that is already
+    /// draining — or drained, if the migration plan missed it. Re-home
+    /// it through the fresh epoch, reading back from the epoch we wrote
+    /// (still alive via our Arc). A `None` read-back means the daemon
+    /// itself already moved the key.
+    fn rehome(&self, key: &str, mut used: Arc<ShardedConnector>) -> Result<()> {
+        for _ in 0..4 {
+            if !self.epoch_changed(&used) {
+                return Ok(());
+            }
+            let blob = used.get(key)?;
+            let (cur, _) = self.snapshot();
+            if let Some(b) = blob {
+                cur.put(key, b.to_vec())?;
+            }
+            used = cur;
+        }
+        Ok(())
+    }
+
     /// One read-through pass for `get` against a fixed epoch pair.
     fn get_via(
         &self,
@@ -808,29 +859,76 @@ impl Connector for ElasticShards {
     fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
         // Writes always land at the newest placement; the daemon never has
         // to chase them.
-        let mut used = {
+        let used = {
             let (cur, _) = self.snapshot();
             cur.put(key, data)?;
             cur
         };
-        // Epoch-stability retry (write half of the `get` retry): a write
-        // that raced a flip may have landed at a placement that is already
-        // draining — or drained, if the migration plan missed it. Re-home
-        // it through the fresh epoch, reading back from the epoch we wrote
-        // (still alive via our Arc). A `None` read-back means the daemon
-        // itself already moved the key.
-        for _ in 0..4 {
-            if !self.epoch_changed(&used) {
-                return Ok(());
+        self.rehome(key, used)
+    }
+
+    /// Store only if absent. Read-through existence first (during a
+    /// migration the value may live only at the old placement), then take
+    /// the conditional write at the current epoch's primary — the
+    /// linearization point for producers racing on one key.
+    ///
+    /// The whole decision holds the epoch **read lock**, unlike every
+    /// other path (which snapshots and releases): an epoch flip takes the
+    /// write lock, so no membership change can interleave between the
+    /// probe and the conditional write. Without this, a producer that
+    /// snapshotted the pre-flip epoch could miss a rival's win at the
+    /// post-flip primary (a brand-new shard its probe never visits) and
+    /// claim a second win at the old primary. The rare writer — a
+    /// rebalance — waits out an in-flight conditional write; re-homing
+    /// (which does its own locking) runs after the guard drops.
+    fn put_nx(&self, key: &str, data: Vec<u8>) -> Result<bool> {
+        let stored = {
+            let st = self.inner.state.read().unwrap();
+            let cur = st.current.clone();
+            let prev = st.prev.as_ref().map(|p| p.router.clone());
+            if self.exists_via(&cur, prev.as_ref(), key)? {
+                return Ok(false);
             }
-            let blob = used.get(key)?;
-            let (cur, _) = self.snapshot();
-            if let Some(b) = blob {
-                cur.put(key, b.to_vec())?;
+            let stored = cur.put_nx(key, data)?;
+            drop(st);
+            if stored {
+                self.rehome(key, cur)?;
             }
-            used = cur;
+            stored
+        };
+        Ok(stored)
+    }
+
+    /// Arm a watch that survives membership changes: arms on the current
+    /// epoch (and the draining one, whose backends may already hold — or
+    /// still receive — the value), and registers with the control plane,
+    /// which re-arms it on every future epoch flip. First arm to fire
+    /// wins; duplicates land nowhere.
+    fn watch(&self, key: &str) -> Pending<Blob> {
+        let (group, handle) = race();
+        let (cur, prev) = self.snapshot();
+        let mut arms = vec![cur.watch(key)];
+        if let Some(prev) = prev {
+            arms.push(prev.watch(key));
         }
-        Ok(())
+        group.add_all(arms);
+        {
+            let mut watchers = self.inner.watchers.lock().unwrap();
+            watchers.retain(|(_, g)| !g.settled());
+            if !group.settled() {
+                watchers.push((key.to_string(), group.clone()));
+            }
+        }
+        // Close the arm/flip race: a rebalance that flipped epochs after
+        // our snapshot but ran its re-arm loop before our registration
+        // above would never cover this watch. Registration happens-before
+        // any *later* flip's re-arm loop, so one re-check of the current
+        // epoch here makes the coverage gap impossible.
+        if !group.settled() && self.epoch_changed(&cur) {
+            let (fresh, _) = self.snapshot();
+            group.add(fresh.watch(key));
+        }
+        handle
     }
 
     fn put_many(&self, items: Vec<(String, Vec<u8>)>) -> Result<()> {
@@ -1169,6 +1267,53 @@ mod tests {
             }
             other => panic!("unexpected desc {other:?}"),
         }
+    }
+
+    #[test]
+    fn watch_rearms_across_epoch_flip() {
+        let e =
+            ElasticShards::new(&unique_name("watch"), members(3), 1, 64).unwrap();
+        // Arm watches on keys that do not exist yet, then change the
+        // membership: some keys' placement moves to the new shard, and a
+        // post-flip put must still wake the pre-flip watch.
+        let keys: Vec<String> =
+            (0..40).map(|i| format!("pending-{i:03}")).collect();
+        let handles: Vec<_> = keys.iter().map(|k| e.watch(k)).collect();
+        e.add_shard(3, MemoryConnector::new()).unwrap();
+        assert!(e.wait_quiescent(Some(Duration::from_secs(30))));
+        // At least one armed key now has its primary on the new shard.
+        let router = e.router();
+        assert!(
+            keys.iter().any(|k| router.shard_for(k) == 3),
+            "test needs a key remapped to the new shard"
+        );
+        for (key, handle) in keys.iter().zip(&handles) {
+            assert!(!handle.is_complete(), "{key} fired without a put");
+        }
+        for (i, key) in keys.iter().enumerate() {
+            e.put(key, vec![i as u8; 8]).unwrap();
+        }
+        for (i, handle) in handles.into_iter().enumerate() {
+            assert_eq!(
+                handle.wait().unwrap().to_vec(),
+                vec![i as u8; 8],
+                "watch {i} stranded by the epoch flip"
+            );
+        }
+    }
+
+    #[test]
+    fn put_nx_single_assignment_through_migration() {
+        let e = ElasticShards::new(&unique_name("nx"), members(3), 1, 64)
+            .unwrap();
+        assert!(e.put_nx("winner", vec![1]).unwrap());
+        assert!(!e.put_nx("winner", vec![2]).unwrap());
+        e.add_shard(3, MemoryConnector::new()).unwrap();
+        assert!(e.wait_quiescent(Some(Duration::from_secs(30))));
+        // Post-migration: the value survives and the key stays taken —
+        // including via read-through semantics mid-state.
+        assert!(!e.put_nx("winner", vec![3]).unwrap());
+        assert_eq!(e.get("winner").unwrap().map(|b| b.to_vec()), Some(vec![1]));
     }
 
     #[test]

@@ -15,7 +15,7 @@ use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::ops::reactor::fan_out_ops;
-use crate::ops::{Op, OpResult};
+use crate::ops::{race, Op, OpResult, Pending};
 use crate::shard::ring::HashRing;
 use crate::store::{Blob, Connector, ConnectorDesc};
 
@@ -288,6 +288,46 @@ impl Connector for ShardedConnector {
                 Error::Connector(format!("no replica accepted {key}"))
             }))
         }
+    }
+
+    /// Store only if absent, atomically: the key's *primary* replica is
+    /// the linearization point (its native `put_nx` decides the race), so
+    /// two producers fanning in on one key cannot both win — unlike an
+    /// exists+put over the fabric, where they could probe different
+    /// replicas. Secondaries then receive plain copies; a secondary that
+    /// fails only degrades redundancy, counted like any degraded write.
+    /// A dead primary fails the conditional write — falling back to
+    /// another replica would reintroduce the two-winners race.
+    fn put_nx(&self, key: &str, data: Vec<u8>) -> Result<bool> {
+        let reps = self.replica_idxs(key);
+        if reps.len() == 1 {
+            return self.shards[reps[0]].put_nx(key, data);
+        }
+        let stored = self.shards[reps[0]].put_nx(key, data.clone())?;
+        if stored {
+            let copies = reps[1..]
+                .iter()
+                .filter(|&&s| self.shards[s].put(key, data.clone()).is_ok())
+                .count();
+            if copies + 1 < reps.len() {
+                self.degraded_writes.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Ok(stored)
+    }
+
+    /// Arm the watch on the key's whole replica set: a write lands on
+    /// every live replica (and a degraded write on any subset of them),
+    /// so the first arm to fire wins. The race fails only when *every*
+    /// replica arm fails — a dead backend among live ones degrades
+    /// nothing, matching read-fallback semantics.
+    fn watch(&self, key: &str) -> Pending<Blob> {
+        let reps = self.replica_idxs(key);
+        let (group, handle) = race();
+        group.add_all(
+            reps.iter().map(|&s| self.shards[s].watch(key)).collect(),
+        );
+        handle
     }
 
     fn get(&self, key: &str) -> Result<Option<Blob>> {
@@ -709,6 +749,76 @@ mod tests {
             b.set_down(true);
         }
         assert!(router.put("k2", vec![6]).is_err());
+    }
+
+    #[test]
+    fn watch_wakes_from_any_replica_and_survives_dead_backends() {
+        let (router, _b) = fabric(4, 1);
+        let handle = router.watch("later");
+        assert!(!handle.is_complete());
+        router.put("later", vec![6]).unwrap();
+        assert_eq!(handle.wait().unwrap().to_vec(), vec![6]);
+
+        // Replicated: a degraded write (dead primary) still fires the
+        // watch through a secondary's arm.
+        let backends: Vec<Arc<FlakyConnector>> = (0..3)
+            .map(|_| FlakyConnector::wrap(MemoryConnector::new()))
+            .collect();
+        let as_conns: Vec<Arc<dyn Connector>> = backends
+            .iter()
+            .map(|b| b.clone() as Arc<dyn Connector>)
+            .collect();
+        let router = ShardedConnector::new(as_conns, 2, 64).unwrap();
+        let reps = router.replicas_for("k");
+        let handle = router.watch("k");
+        backends[reps[0]].set_down(true);
+        router.put("k", vec![9]).unwrap(); // lands on the secondary only
+        assert_eq!(handle.wait().unwrap().to_vec(), vec![9]);
+    }
+
+    #[test]
+    fn put_nx_single_winner_across_concurrent_producers() {
+        let (router, _b) = fabric(4, 2);
+        let router = Arc::new(router);
+        let wins: Vec<bool> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|i| {
+                    let r = router.clone();
+                    s.spawn(move || r.put_nx("contended", vec![i as u8]).unwrap())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(
+            wins.iter().filter(|&&w| w).count(),
+            1,
+            "exactly one producer must win the conditional write"
+        );
+        // The winner's value replicated to the full replica set.
+        assert_eq!(router.len().unwrap(), 2);
+    }
+
+    #[test]
+    fn put_nx_requires_live_primary() {
+        let backends: Vec<Arc<FlakyConnector>> = (0..3)
+            .map(|_| FlakyConnector::wrap(MemoryConnector::new()))
+            .collect();
+        let as_conns: Vec<Arc<dyn Connector>> = backends
+            .iter()
+            .map(|b| b.clone() as Arc<dyn Connector>)
+            .collect();
+        let router = ShardedConnector::new(as_conns, 2, 64).unwrap();
+        let reps = router.replicas_for("k");
+        backends[reps[0]].set_down(true);
+        assert!(
+            router.put_nx("k", vec![1]).is_err(),
+            "no linearization point without the primary"
+        );
+        // A dead secondary degrades but does not fail.
+        backends[reps[0]].set_down(false);
+        backends[reps[1]].set_down(true);
+        assert!(router.put_nx("k", vec![1]).unwrap());
+        assert_eq!(router.degraded_writes(), 1);
     }
 
     #[test]

@@ -34,25 +34,83 @@ pub trait Connector: Send + Sync {
 
     fn get(&self, key: &str) -> Result<Option<Blob>>;
 
-    /// Blocking get with timeout (`None` = forever). Default: poll.
+    /// Store only if absent; returns whether *this* call stored it — the
+    /// single-assignment primitive ProxyFutures' `set_result` rides. The
+    /// default is an exists+put bridge, which is inherently racy (two
+    /// concurrent callers can both observe absence and both "win"): it
+    /// exists so dumb channels keep working. Channels with a native
+    /// conditional write override it — the memory engine and TCP KV use
+    /// the atomic `SetNx`, the shard fabrics route to the key's primary
+    /// so one backend is the linearization point.
+    fn put_nx(&self, key: &str, data: Vec<u8>) -> Result<bool> {
+        if self.exists(key)? {
+            return Ok(false);
+        }
+        self.put(key, data)?;
+        Ok(true)
+    }
+
+    /// Arm an out-of-band watch: the returned handle completes with the
+    /// value as soon as the key exists (immediately if it already does).
+    /// This is the event plane every blocking rendezvous rides —
+    /// [`Connector::wait_get`], ProxyFutures resolution, `when_all`/
+    /// `when_any` fan-ins — so a parked waiter costs no connection and no
+    /// poll tick on channels with a native implementation (memory
+    /// registry callbacks, TCP `Notify` pushes, sharded/elastic replica
+    /// arms).
+    ///
+    /// The default is a *poll bridge* on a dedicated thread (never a
+    /// reactor worker: the pool's contract is short-lived jobs), so every
+    /// connector is a valid watch endpoint. The poller reconnects through
+    /// [`Connector::desc`] and stops as soon as its handle is dropped
+    /// unobserved, so abandoned watches don't poll forever.
+    fn watch(&self, key: &str) -> Pending<Blob> {
+        let desc = self.desc();
+        let key = key.to_string();
+        let (completer, handle) = crate::ops::pending();
+        // A failed spawn drops the completer, which fails the handle —
+        // no waiter is ever stranded.
+        let _ = std::thread::Builder::new().name("watch-poll".into()).spawn(
+            move || {
+                let conn = match desc.connect() {
+                    Ok(c) => c,
+                    Err(e) => return completer.complete(Err(e)),
+                };
+                let mut backoff = Duration::from_micros(50);
+                loop {
+                    match conn.get(&key) {
+                        Ok(Some(v)) => return completer.complete(Ok(v)),
+                        Ok(None) => {}
+                        Err(e) => return completer.complete(Err(e)),
+                    }
+                    if completer.abandoned() {
+                        return; // nobody can observe a completion anymore
+                    }
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_millis(10));
+                }
+            },
+        );
+        handle
+    }
+
+    /// Blocking get with timeout (`None` = forever): arm a watch, park on
+    /// the handle. Every connector's blocking rendezvous therefore rides
+    /// its best available watch plane — server push where there is one,
+    /// the poll bridge where there isn't. A synchronous probe first keeps
+    /// already-present keys immediate even against a tiny timeout.
     fn wait_get(
         &self,
         key: &str,
         timeout: Option<Duration>,
     ) -> Result<Option<Blob>> {
-        let deadline = timeout.map(|t| std::time::Instant::now() + t);
-        let mut backoff = Duration::from_micros(50);
-        loop {
-            if let Some(v) = self.get(key)? {
-                return Ok(Some(v));
-            }
-            if let Some(d) = deadline {
-                if std::time::Instant::now() >= d {
-                    return Ok(None);
-                }
-            }
-            std::thread::sleep(backoff);
-            backoff = (backoff * 2).min(Duration::from_millis(10));
+        if let Some(v) = self.get(key)? {
+            return Ok(Some(v));
+        }
+        let handle = self.watch(key);
+        match timeout {
+            None => handle.wait().map(Some),
+            Some(t) => handle.wait_timeout(t),
         }
     }
 
@@ -123,8 +181,13 @@ pub trait Connector: Send + Sync {
     /// request on its shared socket and a reader thread completes the
     /// handle, so N in-flight ops share one round-trip stream.
     /// Schedulers consult [`Connector::submits_nonblocking`] to tell the
-    /// two contracts apart.
+    /// two contracts apart. `Watch` ops are the exception to the bridge:
+    /// they may park indefinitely, so every channel routes them through
+    /// its watch plane instead of executing them inline.
     fn submit(&self, op: Op) -> Pending<OpResult> {
+        if let Op::Watch { key } = op {
+            return crate::ops::watch_result(self.watch(&key));
+        }
         Pending::ready(crate::ops::execute(self, op))
     }
 
@@ -394,12 +457,27 @@ impl Connector for MemoryConnector {
         Ok(self.state.get_shared(key))
     }
 
+    fn put_nx(&self, key: &str, data: Vec<u8>) -> Result<bool> {
+        // Native conditional write: atomic under the engine lock.
+        Ok(self.state.set_nx(key, Bytes(data)))
+    }
+
     fn wait_get(
         &self,
         key: &str,
         timeout: Option<Duration>,
     ) -> Result<Option<Blob>> {
         Ok(self.state.wait_get_shared(key, timeout))
+    }
+
+    /// Native watch: a registry callback completes the handle straight
+    /// from the writer's thread — zero threads, zero polling, and the
+    /// blob shares the engine's allocation.
+    fn watch(&self, key: &str) -> Pending<Blob> {
+        let (completer, handle) = crate::ops::pending();
+        self.state
+            .watch(key, Box::new(move |v| completer.complete(Ok(v))));
+        handle
     }
 
     fn put_many(&self, items: Vec<(String, Vec<u8>)>) -> Result<()> {
@@ -578,15 +656,28 @@ impl Connector for TcpKvConnector {
         Ok(self.client.get(key)?.map(|b| Arc::new(b.0)))
     }
 
+    fn put_nx(&self, key: &str, data: Vec<u8>) -> Result<bool> {
+        // Native conditional write: the server's SetNx is the atomic
+        // linearization point.
+        self.client.set_nx(key, Bytes(data))
+    }
+
     fn wait_get(
         &self,
         key: &str,
         timeout: Option<Duration>,
     ) -> Result<Option<Blob>> {
-        // Dedicated connection: a server-side blocking wait must not hold
-        // the shared request pipe hostage.
-        let c = KvClient::connect(self.addr)?;
-        Ok(c.wait_get(key, timeout)?.map(|b| Arc::new(b.0)))
+        // Rides the watch plane on the *shared* pipelined connection: the
+        // wait parks client-side on an out-of-band Notify, so it neither
+        // needs a dedicated connection nor stalls in-flight traffic.
+        Ok(self.client.wait_get(key, timeout)?.map(|b| Arc::new(b.0)))
+    }
+
+    /// Native watch: one `Watch` frame on the shared pipelined
+    /// connection; the client's reader thread completes the handle from
+    /// the out-of-band `Notify` push.
+    fn watch(&self, key: &str) -> Pending<Blob> {
+        self.client.watch(key)
     }
 
     fn put_many(&self, items: Vec<(String, Vec<u8>)>) -> Result<()> {
@@ -720,6 +811,11 @@ impl Connector for ThrottledConnector {
         Ok(v)
     }
 
+    fn put_nx(&self, key: &str, data: Vec<u8>) -> Result<bool> {
+        self.shared.link.transfer(data.len());
+        self.shared.inner.put_nx(key, data)
+    }
+
     fn wait_get(
         &self,
         key: &str,
@@ -728,6 +824,35 @@ impl Connector for ThrottledConnector {
         let v = self.shared.inner.wait_get(key, timeout)?;
         self.shared.link.transfer(v.as_ref().map(|v| v.len()).unwrap_or(0));
         Ok(v)
+    }
+
+    /// Watch through the inner channel, paying the simulated wire time
+    /// when the value arrives. The link sleep happens on a dedicated
+    /// bridge thread — watch callbacks run on writers' threads and must
+    /// never be slept on — which also parks on the inner handle in
+    /// slices, so an abandoned watch reaps the bridge instead of leaking
+    /// it forever.
+    fn watch(&self, key: &str) -> Pending<Blob> {
+        let inner = self.shared.inner.watch(key);
+        let shared = self.shared.clone();
+        let (completer, handle) = crate::ops::pending();
+        let _ = std::thread::Builder::new()
+            .name("throttled-watch".into())
+            .spawn(move || loop {
+                match inner.wait_timeout(Duration::from_millis(100)) {
+                    Ok(Some(v)) => {
+                        shared.link.transfer(v.len());
+                        return completer.complete(Ok(v));
+                    }
+                    Ok(None) => {
+                        if completer.abandoned() {
+                            return;
+                        }
+                    }
+                    Err(e) => return completer.complete(Err(e)),
+                }
+            });
+        handle
     }
 
     fn put_many(&self, items: Vec<(String, Vec<u8>)>) -> Result<()> {
@@ -780,8 +905,12 @@ impl Connector for ThrottledConnector {
     /// a shared reactor worker — the pool's contract is short-lived jobs
     /// only, and a netsim-shaped WAN sleep is anything but. This also
     /// preserves the unbounded per-op parallelism the scoped-thread
-    /// fan-outs used to give throttled backends in the benches.
+    /// fan-outs used to give throttled backends in the benches. Watches
+    /// route through the watch plane (they may park indefinitely).
     fn submit(&self, op: Op) -> Pending<OpResult> {
+        if let Op::Watch { key } = op {
+            return crate::ops::watch_result(self.watch(&key));
+        }
         let (completer, handle) = crate::ops::pending();
         let clone = ThrottledConnector { shared: self.shared.clone() };
         std::thread::Builder::new()
@@ -815,6 +944,10 @@ pub struct MultiConnector {
     small: Arc<dyn Connector>,
     large: Arc<dyn Connector>,
     threshold: usize,
+    /// Serializes conditional writes: two racing `put_nx` callers may
+    /// route to *different* size classes, where neither backend alone can
+    /// arbitrate — without this, both could observe absence and both win.
+    nx_lock: std::sync::Mutex<()>,
 }
 
 impl MultiConnector {
@@ -823,7 +956,12 @@ impl MultiConnector {
         large: Arc<dyn Connector>,
         threshold: usize,
     ) -> MultiConnector {
-        MultiConnector { small, large, threshold }
+        MultiConnector {
+            small,
+            large,
+            threshold,
+            nx_lock: std::sync::Mutex::new(()),
+        }
     }
 }
 
@@ -851,32 +989,32 @@ impl Connector for MultiConnector {
         self.small.get(key)
     }
 
-    fn wait_get(
-        &self,
-        key: &str,
-        timeout: Option<Duration>,
-    ) -> Result<Option<Blob>> {
-        // Poll both channels; bounded slices so neither starves the other.
-        let deadline = timeout.map(|t| std::time::Instant::now() + t);
-        loop {
-            if let Some(v) = self.get(key)? {
-                return Ok(Some(v));
-            }
-            let slice = Duration::from_millis(10);
-            let slice = match deadline {
-                Some(d) => {
-                    let now = std::time::Instant::now();
-                    if now >= d {
-                        return Ok(None);
-                    }
-                    slice.min(d - now)
-                }
-                None => slice,
-            };
-            if let Some(v) = self.large.wait_get(key, Some(slice))? {
-                return Ok(Some(v));
-            }
+    fn put_nx(&self, key: &str, data: Vec<u8>) -> Result<bool> {
+        // Racing producers can route to *different* size classes, where
+        // no single backend is the linearization point — serialize the
+        // probe+write through this instance instead. (Connector-level
+        // caveat: independent MultiConnector instances over the same
+        // backends arbitrate only within themselves; the shard fabrics,
+        // whose primary IS a shared backend, don't have this limit.)
+        let _guard = self.nx_lock.lock().unwrap();
+        let (target, other) = if data.len() <= self.threshold {
+            (&self.small, &self.large)
+        } else {
+            (&self.large, &self.small)
+        };
+        if other.exists(key)? {
+            return Ok(false);
         }
+        target.put_nx(key, data)
+    }
+
+    /// Watch both size classes: the object lands on whichever side its
+    /// (unknown-in-advance) size routes to, and the first arm to fire
+    /// wins.
+    fn watch(&self, key: &str) -> Pending<Blob> {
+        let (group, handle) = crate::ops::race();
+        group.add_all(vec![self.large.watch(key), self.small.watch(key)]);
+        handle
     }
 
     fn put_many(&self, items: Vec<(String, Vec<u8>)>) -> Result<()> {
@@ -978,6 +1116,20 @@ mod tests {
         c.evict("k").unwrap();
         assert!(!c.exists("k").unwrap());
         c.evict("k").unwrap(); // idempotent
+
+        // Conditional write: only the first writer wins, loser changes
+        // nothing.
+        assert!(c.put_nx("nx", vec![1]).unwrap());
+        assert!(!c.put_nx("nx", vec![2]).unwrap());
+        assert_eq!(c.get("nx").unwrap().map(|b| b.to_vec()), Some(vec![1]));
+        c.evict("nx").unwrap();
+        assert!(c.put_nx("nx", vec![3]).unwrap()); // evicted key is absent
+        c.evict("nx").unwrap();
+
+        // Watch on an existing key completes immediately with the value.
+        c.put("w1", vec![5]).unwrap();
+        assert_eq!(c.watch("w1").wait().unwrap().to_vec(), vec![5]);
+        c.evict("w1").unwrap();
 
         // Batched ops: empty batches, round trip, positional alignment.
         c.put_many(Vec::new()).unwrap();
@@ -1196,7 +1348,69 @@ mod tests {
             .wait_get("never", Some(Duration::from_millis(30)))
             .unwrap()
             .is_none());
+        // The poll-bridge watch behaves like the native ones: wakes on
+        // put, and an abandoned handle quietly reaps its poller.
+        let armed = c.watch("later");
+        assert!(!armed.is_complete());
+        c.put("later", vec![9]).unwrap();
+        assert_eq!(armed.wait().unwrap().to_vec(), vec![9]);
+        drop(c.watch("never-set"));
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn memory_watch_wakes_without_polling() {
+        let c = MemoryConnector::new();
+        let handle = c.watch("later");
+        assert!(!handle.is_complete());
+        c.put("later", vec![1, 2]).unwrap();
+        assert_eq!(handle.wait().unwrap().to_vec(), vec![1, 2]);
+    }
+
+    #[test]
+    fn tcp_watch_wakes_across_connectors() {
+        let server = KvServer::spawn().unwrap();
+        let c = TcpKvConnector::connect(server.addr).unwrap();
+        let handle = c.watch("cross");
+        // The armed watch shares the pipelined connection: traffic flows.
+        c.put("other", vec![1]).unwrap();
+        assert!(c.get("other").unwrap().is_some());
+        let c2 = c.desc().connect().unwrap();
+        c2.put("cross", vec![3, 4]).unwrap();
+        assert_eq!(handle.wait().unwrap().to_vec(), vec![3, 4]);
+    }
+
+    #[test]
+    fn throttled_watch_pays_wire_time_on_delivery() {
+        let c = ThrottledConnector::wrap(
+            MemoryConnector::new(),
+            Duration::from_millis(10),
+            1e9,
+        );
+        let handle = c.watch("w");
+        let t0 = std::time::Instant::now();
+        c.put("w", vec![0; 100]).unwrap(); // pays one link latency itself
+        assert_eq!(handle.wait().unwrap().len(), 100);
+        // Put (10ms) + watch delivery (10ms) both crossed the link.
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn multi_watch_fires_from_either_size_class() {
+        let multi = Arc::new(MultiConnector::new(
+            MemoryConnector::new(),
+            MemoryConnector::new(),
+            100,
+        ));
+        let small_side = multi.watch("tiny");
+        let large_side = multi.watch("bulk");
+        multi.put("tiny", vec![1; 10]).unwrap(); // routes small
+        multi.put("bulk", vec![2; 1000]).unwrap(); // routes large
+        assert_eq!(small_side.wait().unwrap().len(), 10);
+        assert_eq!(large_side.wait().unwrap().len(), 1000);
+        // put_nx refuses keys resident on the *other* size class.
+        assert!(!multi.put_nx("tiny", vec![3; 5000]).unwrap());
+        assert!(!multi.put_nx("bulk", vec![3; 5]).unwrap());
     }
 
     #[test]

@@ -155,14 +155,21 @@ impl Store {
         }
     }
 
-    /// Blocking fetch (used by futures and tests).
+    /// Blocking fetch for a key that may not exist yet: arms a watch on
+    /// the connector's event plane and parks on the handle — one push
+    /// wakes the wait (`Ok(None)` = timed out).
     pub fn wait_get<T: Decode>(
         &self,
         key: &str,
         timeout: Option<Duration>,
     ) -> Result<Option<T>> {
         self.inner.gets.fetch_add(1, Ordering::Relaxed);
-        match self.inner.connector.wait_get(key, timeout)? {
+        let handle = self.inner.connector.watch(key);
+        let got = match timeout {
+            None => Some(handle.wait()?),
+            Some(t) => handle.wait_timeout(t)?,
+        };
+        match got {
             Some(bytes) => {
                 self.inner
                     .get_bytes
@@ -171,6 +178,21 @@ impl Store {
             }
             None => Ok(None),
         }
+    }
+
+    /// Arm a watch without blocking: the returned handle completes when
+    /// the key exists (immediately if it already does). The async twin of
+    /// [`Store::wait_get`], riding the out-of-band watch plane through
+    /// the submission API ([`Op::Watch`]) — a parked handle costs no
+    /// dedicated connection, no thread, and no poll tick on channels with
+    /// a native watch.
+    pub fn watch_async<T: Decode>(&self, key: &str) -> PendingGet<T> {
+        self.inner.gets.fetch_add(1, Ordering::Relaxed);
+        let handle = ops::submit(
+            &self.inner.connector,
+            Op::Watch { key: key.to_string() },
+        );
+        PendingGet { store: self.clone(), handle, _marker: PhantomData }
     }
 
     /// Batched serialize-and-store; returns the generated keys, aligned
@@ -549,6 +571,19 @@ mod tests {
         // lands, so resolving immediately is safe on any channel.
         assert_eq!(*proxy.resolve().unwrap(), vec![1u8, 2, 3]);
         write.wait().unwrap();
+    }
+
+    #[test]
+    fn watch_async_completes_on_later_put() {
+        let s = Store::memory("t-watch");
+        let key = s.new_key();
+        let pending = s.watch_async::<String>(&key);
+        assert!(!pending.is_complete());
+        s.put_at(&key, &"arrived".to_string()).unwrap();
+        assert_eq!(pending.wait().unwrap(), Some("arrived".into()));
+        // Already-stored keys complete immediately.
+        let key2 = s.put(&7u64).unwrap();
+        assert_eq!(s.watch_async::<u64>(&key2).wait().unwrap(), Some(7));
     }
 
     #[test]

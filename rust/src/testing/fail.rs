@@ -139,6 +139,11 @@ impl Connector for FlakyConnector {
         self.shared.inner.get(key)
     }
 
+    fn put_nx(&self, key: &str, data: Vec<u8>) -> Result<bool> {
+        self.check()?;
+        self.shared.inner.put_nx(key, data)
+    }
+
     fn wait_get(
         &self,
         key: &str,
@@ -146,6 +151,45 @@ impl Connector for FlakyConnector {
     ) -> Result<Option<Blob>> {
         self.check()?;
         self.shared.inner.wait_get(key, timeout)
+    }
+
+    /// Arm through the wrapped channel. Down-ness fails the arm up front
+    /// (a dead backend cannot promise a future push); injected latency is
+    /// paid in flight on a dedicated completer thread, like
+    /// [`Connector::submit`]. The thread parks on the inner arm in
+    /// slices, checking for abandonment (dropped handle, settled race),
+    /// so a never-firing watch cannot leak a parked thread.
+    fn watch(&self, key: &str) -> Pending<Blob> {
+        let shared = self.shared.clone();
+        if shared.latency_us.load(Ordering::SeqCst) == 0 {
+            return match shared.check() {
+                Ok(()) => shared.inner.watch(key),
+                Err(e) => Pending::ready(Err(e)),
+            };
+        }
+        let key = key.to_string();
+        let (completer, handle) = crate::ops::pending();
+        std::thread::Builder::new()
+            .name("flaky-delay".into())
+            .spawn(move || {
+                if let Err(e) = shared.check() {
+                    return completer.complete(Err(e));
+                }
+                let inner = shared.inner.watch(&key);
+                loop {
+                    match inner.wait_timeout(Duration::from_millis(100)) {
+                        Ok(Some(v)) => return completer.complete(Ok(v)),
+                        Ok(None) => {
+                            if completer.abandoned() {
+                                return;
+                            }
+                        }
+                        Err(e) => return completer.complete(Err(e)),
+                    }
+                }
+            })
+            .expect("spawn flaky delay thread");
+        handle
     }
 
     fn put_many(&self, items: Vec<(String, Vec<u8>)>) -> Result<()> {
@@ -199,6 +243,12 @@ impl Connector for FlakyConnector {
     /// still fails at the same point as the blocking path: after the
     /// delay, before the backend.
     fn submit(&self, op: Op) -> Pending<OpResult> {
+        if let Op::Watch { key } = op {
+            // Watches may park indefinitely: route through the watch
+            // plane (which itself injects down-ness and latency) rather
+            // than parking a completer thread on an unbounded wait.
+            return crate::ops::watch_result(self.watch(&key));
+        }
         let shared = self.shared.clone();
         if shared.latency_us.load(Ordering::SeqCst) == 0 {
             return match shared.check() {

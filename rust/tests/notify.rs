@@ -1,0 +1,197 @@
+//! End-to-end watch/notify plane: no head-of-line blocking on the
+//! pipelined connection, push-mode wakes across clients and fabrics,
+//! prompt failure on server death, and the futures layer (result_async,
+//! when_all/when_any, atomic set_result) riding it.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use proxystore::codec::{Bytes, Decode, Encode};
+use proxystore::futures::{when_all, when_any, ProxyFuture};
+use proxystore::kv::{KvClient, KvServer};
+use proxystore::prelude::Store;
+use proxystore::shard::ShardedConnector;
+use proxystore::store::{Connector, ConnectorDesc, TcpKvConnector};
+
+#[test]
+fn parked_watch_never_stalls_the_pipelined_connection() {
+    // The acceptance test for no head-of-line blocking: hold a watch that
+    // never fires on a pipelined connection while ordinary traffic on the
+    // SAME connection keeps completing. The old WaitGet design parked the
+    // FIFO response stream here; the watch plane must not.
+    let server = KvServer::spawn().unwrap();
+    let client = KvClient::connect(server.addr).unwrap();
+    let parked = client.watch("never-fires");
+    assert_eq!(client.watches_armed(), 1);
+
+    let t0 = Instant::now();
+    for i in 0..200 {
+        let key = format!("traffic-{i}");
+        client.set(&key, Bytes(vec![i as u8])).unwrap();
+        assert_eq!(client.get(&key).unwrap(), Some(Bytes(vec![i as u8])));
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "traffic behind a parked watch must flow at full speed"
+    );
+    assert!(!parked.is_complete(), "nothing ever stored the watched key");
+    assert_eq!(client.in_flight(), 0);
+
+    // The parked watch is still live: a late producer wakes it.
+    client.set("never-fires", Bytes(vec![9, 9])).unwrap();
+    assert_eq!(parked.wait().unwrap().to_vec(), vec![9, 9]);
+}
+
+#[test]
+fn watch_wakes_across_sharded_tcp_fabric() {
+    // Producer and consumer on separate fabric handles over real
+    // sockets: the wake crosses the wire as one Notify push from the
+    // owning shard.
+    let servers: Vec<KvServer> =
+        (0..3).map(|_| KvServer::spawn().unwrap()).collect();
+    let backends: Vec<Arc<dyn Connector>> = servers
+        .iter()
+        .map(|s| {
+            Arc::new(TcpKvConnector::connect(s.addr).unwrap())
+                as Arc<dyn Connector>
+        })
+        .collect();
+    let router = Arc::new(ShardedConnector::new(backends, 2, 64).unwrap());
+    let store = Store::new("watch-tcp", router.clone());
+
+    let key = store.new_key();
+    let pending = store.watch_async::<Bytes>(&key);
+    assert!(!pending.is_complete());
+
+    // An independent fabric handle (same servers, fresh connections)
+    // produces the value.
+    let desc = router.desc();
+    let producer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(30));
+        let conn = ConnectorDesc::from_bytes(&desc.to_bytes())
+            .unwrap()
+            .connect()
+            .unwrap();
+        conn.put(&key, vec![7; 128]).unwrap();
+    });
+    assert_eq!(pending.wait().unwrap(), Some(Bytes(vec![7; 128])));
+    producer.join().unwrap();
+}
+
+#[test]
+fn watch_fails_promptly_when_server_dies_mid_wait() {
+    let mut server = KvServer::spawn().unwrap();
+    let conn = TcpKvConnector::connect(server.addr).unwrap();
+    let handle = conn.watch("never-set");
+    std::thread::sleep(Duration::from_millis(30));
+    server.shutdown();
+    let t0 = Instant::now();
+    assert!(
+        handle.wait().is_err(),
+        "a watch whose server died must fail, not hang"
+    );
+    assert!(t0.elapsed() < Duration::from_secs(2));
+}
+
+#[test]
+fn wait_get_shares_the_connection_with_its_own_producer() {
+    // Consumer parks in wait_get on the SAME TcpKvConnector whose shared
+    // client the producer then writes through: only possible because the
+    // wait rides an out-of-band watch instead of parking the pipe.
+    let server = KvServer::spawn().unwrap();
+    let conn = Arc::new(TcpKvConnector::connect(server.addr).unwrap());
+    let c2 = conn.clone();
+    let waiter = std::thread::spawn(move || {
+        c2.wait_get("meet", Some(Duration::from_secs(5))).unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(30));
+    conn.put("meet", vec![5; 32]).unwrap();
+    assert_eq!(waiter.join().unwrap().map(|b| b.to_vec()), Some(vec![5; 32]));
+}
+
+#[test]
+fn futures_when_all_and_result_async_across_sharded_store() {
+    // Sec IV-A's dynamic task graph shape: N producers resolve futures
+    // bound to a sharded store; the consumer arms everything up front and
+    // parks once per key.
+    let backends: Vec<Arc<dyn Connector>> = (0..4)
+        .map(|_| proxystore::store::MemoryConnector::new())
+        .collect();
+    let store =
+        Store::new("futs", Arc::new(ShardedConnector::new(backends, 1, 64).unwrap()));
+    let futs: Vec<ProxyFuture<u64>> = (0..12).map(|_| store.future()).collect();
+
+    // Overlap: arm one async handle before any producer runs.
+    let early = futs[7].result_async().unwrap();
+    assert!(!early.is_complete());
+
+    let producers: Vec<_> = futs
+        .iter()
+        .enumerate()
+        .map(|(i, f)| {
+            let f = f.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(5 * (i as u64 % 4)));
+                f.set_result(&(i as u64 * i as u64)).unwrap();
+            })
+        })
+        .collect();
+
+    let all = when_all(&futs, Some(Duration::from_secs(10))).unwrap();
+    assert_eq!(all, (0..12).map(|i| i * i).collect::<Vec<u64>>());
+    assert_eq!(early.wait().unwrap(), 49);
+    for p in producers {
+        p.join().unwrap();
+    }
+
+    // when_any on a fresh set: the single resolved member wins.
+    let cold: Vec<ProxyFuture<u64>> = (0..4).map(|_| store.future()).collect();
+    cold[2].set_result(&1234).unwrap();
+    let (idx, v) = when_any(&cold, Some(Duration::from_secs(5))).unwrap();
+    assert_eq!((idx, v), (2, 1234));
+}
+
+#[test]
+fn set_result_is_atomic_over_tcp() {
+    // The TOCTOU regression, over a real wire: N producers race one
+    // future whose channel is a TCP KV server; SetNx decides the winner.
+    let server = KvServer::spawn().unwrap();
+    let store = Store::new(
+        "race",
+        Arc::new(TcpKvConnector::connect(server.addr).unwrap()),
+    );
+    let fut: ProxyFuture<u64> = store.future();
+    let wins: Vec<bool> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                let f = fut.clone();
+                s.spawn(move || f.set_result(&(i as u64)).is_ok())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(
+        wins.iter().filter(|&&w| w).count(),
+        1,
+        "exactly one producer may win over the wire"
+    );
+    let winner = wins.iter().position(|&w| w).unwrap() as u64;
+    assert_eq!(fut.result(Some(Duration::from_secs(5))).unwrap(), winner);
+}
+
+#[test]
+fn many_waiters_one_put_fan_out() {
+    // 64 watches parked on one key over ONE pipelined connection; a
+    // single put wakes every one of them.
+    let server = KvServer::spawn().unwrap();
+    let client = Arc::new(KvClient::connect(server.addr).unwrap());
+    let handles: Vec<_> = (0..64).map(|_| client.watch("fan")).collect();
+    assert_eq!(client.watches_armed(), 64);
+    let setter = KvClient::connect(server.addr).unwrap();
+    setter.set("fan", Bytes(vec![3; 16])).unwrap();
+    for h in handles {
+        assert_eq!(h.wait().unwrap().to_vec(), vec![3; 16]);
+    }
+    assert_eq!(client.watches_armed(), 0);
+    assert_eq!(server.state().watch_count(), 0);
+}

@@ -207,6 +207,62 @@ fn elastic_over_real_tcp_backends() {
 }
 
 #[test]
+fn watch_armed_before_membership_change_survives_both_directions() {
+    // Satellite acceptance: a watch armed before add_shard/remove_shard
+    // still wakes after the epoch flips — the control plane re-arms it on
+    // the post-flip placement, so a rebalance mid-wait never strands a
+    // waiter.
+    let elastic =
+        ElasticShards::new("itest-watch", memory_members(3), 1, 64).unwrap();
+    let store = Store::new("watch", Arc::new(elastic.clone()));
+    let keys: Vec<String> = (0..32).map(|i| format!("armed-{i:02}")).collect();
+    let handles: Vec<_> = keys.iter().map(|k| elastic.watch(k)).collect();
+
+    // Grow, then shrink, with every watch still armed.
+    elastic.add_shard(3, MemoryConnector::new()).unwrap();
+    assert!(elastic.wait_quiescent(Some(Duration::from_secs(30))));
+    elastic.remove_shard(0).unwrap();
+    assert!(elastic.wait_quiescent(Some(Duration::from_secs(30))));
+    assert!(
+        handles.iter().all(|h| !h.is_complete()),
+        "no watch may fire before its key exists"
+    );
+
+    for (i, key) in keys.iter().enumerate() {
+        store.put_at(key, &Bytes(vec![i as u8; 16])).unwrap();
+    }
+    for (i, handle) in handles.into_iter().enumerate() {
+        let got = handle.wait().unwrap();
+        let value: Bytes = Bytes::from_bytes(&got).unwrap();
+        assert_eq!(
+            value.0,
+            vec![i as u8; 16],
+            "watch {i} stranded or corrupted by the rebalances"
+        );
+    }
+}
+
+#[test]
+fn elastic_watch_over_tcp_fails_promptly_when_backend_dies() {
+    // A watch whose only backing server dies mid-wait must surface the
+    // failure instead of hanging the waiter forever.
+    let mut server = KvServer::spawn().unwrap();
+    let members: ShardMembers = vec![(
+        0,
+        ConnectorDesc::TcpKv { addr: server.addr.to_string() }
+            .connect()
+            .unwrap(),
+    )];
+    let elastic = ElasticShards::new("itest-dead", members, 1, 64).unwrap();
+    let handle = elastic.watch("never-set");
+    std::thread::sleep(Duration::from_millis(30));
+    server.shutdown();
+    let t0 = std::time::Instant::now();
+    assert!(handle.wait().is_err(), "dead backend must fail the watch");
+    assert!(t0.elapsed() < Duration::from_secs(5));
+}
+
+#[test]
 fn sequential_membership_changes_serialize() {
     // Back-to-back changes with no explicit wait between them: the second
     // must block on the first's drain, never interleave epochs.
