@@ -82,5 +82,18 @@ fn main() -> Result<()> {
         "owner dropped → target evicted from store: {}",
         !store.exists(&key)?
     );
+
+    // ----------------------------------------------------------------
+    // 4. Observability: everything above already reported into the
+    //    process-wide telemetry registry — one snapshot shows it.
+    // ----------------------------------------------------------------
+    let snap = proxystore::metrics::telemetry::snapshot();
+    println!(
+        "\ntelemetry: {} puts, {} gets, {} evicts recorded across {:?}",
+        snap.counter("store.puts"),
+        snap.counter("store.gets"),
+        snap.counter("store.evicts"),
+        snap.active_subsystems(),
+    );
     Ok(())
 }

@@ -8,7 +8,7 @@
 
 use std::time::{Duration, Instant};
 
-use crate::metrics::{write_csv, Stats};
+use crate::metrics::{telemetry, write_csv, write_text_atomic, Stats};
 
 /// Time `f` over `samples` runs after `warmup` runs; returns per-run
 /// seconds.
@@ -82,7 +82,8 @@ impl Bench {
         s
     }
 
-    /// Write the CSV and finish.
+    /// Write the CSV (plus a rendered telemetry snapshot alongside it)
+    /// and finish.
     pub fn finish(self) {
         let path = format!("results/{}.csv", self.name);
         if let Err(e) = write_csv(&path, &self.header, &self.rows) {
@@ -93,6 +94,16 @@ impl Bench {
                 self.rows.len(),
                 self.t0.elapsed().as_secs_f64()
             );
+        }
+        // The process-wide registry has been accumulating while the bench
+        // ran; dump it next to the CSV so regressions come with their
+        // telemetry attached.
+        let snap = telemetry::snapshot();
+        let tpath = format!("results/{}.telemetry.txt", self.name);
+        if let Err(e) = write_text_atomic(&tpath, &snap.render()) {
+            eprintln!("  (telemetry write failed: {e})");
+        } else {
+            println!("  wrote {tpath}");
         }
     }
 }

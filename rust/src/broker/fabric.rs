@@ -33,6 +33,7 @@ use std::time::{Duration, Instant};
 
 use crate::codec::Bytes;
 use crate::error::{Error, Result};
+use crate::metrics::telemetry;
 use crate::netsim::Link;
 use crate::ops::reactor::{fan_out, Job};
 use crate::shard::ring::{hash_key, HashRing};
@@ -47,6 +48,20 @@ type SweepResults = Vec<(Vec<FetchReq>, Result<Vec<Vec<LogEntry>>>)>;
 /// Per-partition results of a batched produce fan-out: (input indices,
 /// partition) and the offsets the instance assigned.
 type ProduceResults = Vec<((Vec<usize>, u32), Result<Vec<u64>>)>;
+
+/// Fabric-wide telemetry handles, resolved once per process.
+struct BrokerMetrics {
+    produce_events: Arc<telemetry::Counter>,
+    fetch_events: Arc<telemetry::Counter>,
+}
+
+fn broker_metrics() -> &'static BrokerMetrics {
+    static METRICS: std::sync::OnceLock<BrokerMetrics> = std::sync::OnceLock::new();
+    METRICS.get_or_init(|| BrokerMetrics {
+        produce_events: telemetry::counter("broker.produce_events"),
+        fetch_events: telemetry::counter("broker.fetch_events"),
+    })
+}
 
 /// Partition-aware broker endpoint: the interface the fabric routes over.
 pub trait PartitionBroker: Send + Sync {
@@ -458,6 +473,9 @@ pub struct PartitionedProducer {
     partitioner: Partitioner,
     /// Per-topic round-robin cursor.
     cursors: HashMap<String, u32>,
+    /// Cached per-partition telemetry handles (`broker.partition.{p}.produce`)
+    /// — one registry lookup per partition per producer, not per event.
+    part_counters: HashMap<u32, Arc<telemetry::Counter>>,
 }
 
 impl PartitionedProducer {
@@ -466,7 +484,19 @@ impl PartitionedProducer {
             fabric,
             partitioner,
             cursors: HashMap::new(),
+            part_counters: HashMap::new(),
         }
+    }
+
+    /// Account `n` appended events against `partition`.
+    fn bump_produce(&mut self, partition: u32, n: u64) {
+        broker_metrics().produce_events.add(n);
+        self.part_counters
+            .entry(partition)
+            .or_insert_with(|| {
+                telemetry::counter(&format!("broker.partition.{partition}.produce"))
+            })
+            .add(n);
     }
 
     pub fn fabric(&self) -> &BrokerFabric {
@@ -498,6 +528,7 @@ impl PartitionedProducer {
         let inst = self.fabric.instance_for(topic, partition);
         let offset =
             self.fabric.instances[inst].produce_to(topic, partition, payload)?;
+        self.bump_produce(partition, 1);
         Ok((partition, offset))
     }
 
@@ -548,6 +579,7 @@ impl PartitionedProducer {
         let mut out = vec![(0u32, 0u64); total];
         for ((idxs, partition), res) in results {
             let offsets = res?;
+            self.bump_produce(partition, idxs.len() as u64);
             for (&i, off) in idxs.iter().zip(offsets) {
                 out[i] = (partition, off);
             }
@@ -764,6 +796,7 @@ impl PartitionedConsumer {
         }
         // Deterministic merge order within a round.
         out.sort_by_key(|(p, e)| (*p, e.offset));
+        broker_metrics().fetch_events.add(out.len() as u64);
         Ok(out)
     }
 

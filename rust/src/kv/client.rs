@@ -36,14 +36,33 @@
 use std::collections::{HashMap, VecDeque};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
-use crate::codec::Bytes;
+use crate::codec::{Bytes, Decode};
 use crate::error::{Error, Result};
 use crate::kv::protocol::{read_frame, write_frame, Request, Response};
 use crate::kv::state::PubSubMsg;
+use crate::metrics::telemetry::{self, TelemetrySnapshot};
 use crate::ops::{pending, Completer, Op, OpResult, Pending};
+
+/// Cached registry handles for the client's hot path (looked up once per
+/// process). `in_flight` aggregates across every client in the process via
+/// deltas; its high-water mark is the observed pipeline depth.
+struct ClientMetrics {
+    ops: Arc<telemetry::Counter>,
+    op_us: Arc<telemetry::Histogram>,
+    in_flight: Arc<telemetry::Gauge>,
+}
+
+fn client_metrics() -> &'static ClientMetrics {
+    static M: OnceLock<ClientMetrics> = OnceLock::new();
+    M.get_or_init(|| ClientMetrics {
+        ops: telemetry::counter("kv.client.ops"),
+        op_us: telemetry::histogram("kv.client.op_us"),
+        in_flight: telemetry::gauge("kv.client.in_flight"),
+    })
+}
 
 /// How a raw wire [`Response`] completes a submitted request.
 enum Sink {
@@ -139,7 +158,8 @@ fn complete_sink(
 /// In-flight completions: FIFO sinks matched by queue position, watch
 /// completers routed out-of-band by id.
 struct PendingQueue {
-    sinks: VecDeque<Sink>,
+    /// FIFO sinks, each with its submission instant (per-op latency).
+    sinks: VecDeque<(Instant, Sink)>,
     /// Armed watches awaiting their `Notify` push.
     watches: HashMap<u64, Completer<Arc<Vec<u8>>>>,
     /// Set once the connection died; later submissions fail fast with it.
@@ -159,7 +179,8 @@ fn fail_all(queue: &Mutex<PendingQueue>, err: Error) {
             q.watches.drain().collect::<Vec<_>>(),
         )
     };
-    for sink in sinks {
+    client_metrics().in_flight.add(-(sinks.len() as i64));
+    for (_, sink) in sinks {
         complete_sink(queue, sink, Err(err.clone()));
     }
     for (_, completer) in watches {
@@ -184,7 +205,12 @@ fn reader_loop(stream: TcpStream, queue: Arc<Mutex<PendingQueue>>) {
             Ok(Some(resp)) => {
                 let sink = queue.lock().unwrap().sinks.pop_front();
                 match sink {
-                    Some(sink) => complete_sink(&queue, sink, Ok(resp)),
+                    Some((started, sink)) => {
+                        let m = client_metrics();
+                        m.in_flight.add(-1);
+                        m.op_us.record_duration(started.elapsed());
+                        complete_sink(&queue, sink, Ok(resp));
+                    }
                     None => {
                         // A response with no matching request breaks the
                         // FIFO invariant; nothing after it can be trusted.
@@ -272,7 +298,44 @@ impl KvClient {
     /// completion sink. The writer lock spans the queue push and the
     /// frame write so queue order always equals wire order — the FIFO
     /// invariant the reader's response matching relies on.
+    ///
+    /// When a trace is current on the calling thread (see
+    /// [`telemetry::start_trace`]), the request is wrapped in a
+    /// [`Request::Traced`] envelope carrying the trace id and a fresh
+    /// client span, so the server's span lands on the same trace. Watch
+    /// and unwatch stay bare — their completions are out-of-band and the
+    /// server rejects them inside envelopes. The untraced path pays one
+    /// thread-local read and no clone.
     fn submit_sink(&self, req: &Request, sink: Sink) {
+        let m = client_metrics();
+        m.ops.incr();
+        let traced = match telemetry::current_trace() {
+            Some(ctx)
+                if !matches!(
+                    req,
+                    Request::Watch { .. }
+                        | Request::Unwatch { .. }
+                        | Request::Subscribe { .. }
+                        | Request::Traced { .. }
+                ) =>
+            {
+                let span = telemetry::next_span_id();
+                telemetry::trace_event(
+                    ctx.trace_id,
+                    span,
+                    ctx.span_id,
+                    "kv.client",
+                    req.name(),
+                );
+                Some(Request::Traced {
+                    trace_id: ctx.trace_id,
+                    span_id: span,
+                    inner: Box::new(req.clone()),
+                })
+            }
+            _ => None,
+        };
+        let wire = traced.as_ref().unwrap_or(req);
         let mut writer = self.writer.lock().unwrap();
         {
             let mut q = self.queue.lock().unwrap();
@@ -282,9 +345,10 @@ impl KvClient {
                 complete_sink(&self.queue, sink, Err(err));
                 return;
             }
-            q.sinks.push_back(sink);
+            q.sinks.push_back((Instant::now(), sink));
+            m.in_flight.add(1);
         }
-        if let Err(e) = write_frame(&mut *writer, req) {
+        if let Err(e) = write_frame(&mut *writer, wire) {
             drop(writer);
             fail_all(&self.queue, e);
         }
@@ -351,7 +415,8 @@ impl KvClient {
                 return (id, handle);
             }
             q.watches.insert(id, completer);
-            q.sinks.push_back(Sink::WatchAck { id });
+            q.sinks.push_back((Instant::now(), Sink::WatchAck { id }));
+            client_metrics().in_flight.add(1);
         }
         if let Err(e) = write_frame(&mut *writer, &req) {
             drop(writer);
@@ -524,6 +589,18 @@ impl KvClient {
             other => {
                 Err(Error::Protocol(format!("expected Stats, got {other:?}")))
             }
+        }
+    }
+
+    /// Fetch the server *process's* full telemetry snapshot over the wire
+    /// (counters, gauges, histograms, recent trace events). One round
+    /// trip; rides the shared pipeline like any other request.
+    pub fn telemetry(&self) -> Result<TelemetrySnapshot> {
+        match self.call(Request::Telemetry)? {
+            Response::Telemetry { data } => TelemetrySnapshot::from_bytes(&data.0),
+            other => Err(Error::Protocol(format!(
+                "expected Telemetry, got {other:?}"
+            ))),
         }
     }
 }
@@ -760,6 +837,66 @@ mod tests {
         assert!(res.is_err(), "push-mode request must not enter the pipe");
         // The pipe is unharmed: ordinary traffic keeps flowing.
         client.ping().unwrap();
+    }
+
+    #[test]
+    fn traced_ops_share_a_trace_id_with_server_spans() {
+        let _g = crate::metrics::telemetry::test_enabled_guard();
+        let server = KvServer::spawn().unwrap();
+        let client = KvClient::connect(server.addr).unwrap();
+        let trace = telemetry::start_trace("client-unit");
+        let trace_id = trace.ctx().trace_id;
+        client.set("traced-k", Bytes(vec![1])).unwrap();
+        assert_eq!(client.get("traced-k").unwrap(), Some(Bytes(vec![1])));
+        drop(trace);
+        // Server and client share this process's registry in tests, but
+        // the snapshot arrives over the wire like any remote one would.
+        let snap = client.telemetry().unwrap();
+        let spans: Vec<_> = snap
+            .events
+            .iter()
+            .filter(|e| e.trace_id == trace_id)
+            .collect();
+        let client_spans: Vec<_> = spans
+            .iter()
+            .filter(|e| e.subsystem == "kv.client")
+            .collect();
+        let server_spans: Vec<_> = spans
+            .iter()
+            .filter(|e| e.subsystem == "kv.server")
+            .collect();
+        assert!(client_spans.len() >= 2, "set + get client spans: {spans:?}");
+        assert!(server_spans.len() >= 2, "set + get server spans: {spans:?}");
+        // Every server span descends from a client span of the same trace.
+        for s in &server_spans {
+            assert!(
+                client_spans.iter().any(|c| c.span_id == s.parent_span),
+                "server span {s:?} not parented on a client span"
+            );
+        }
+        // Untraced ops stay bare: no new spans after the guard dropped.
+        client.ping().unwrap();
+        let snap2 = client.telemetry().unwrap();
+        let n_after = snap2
+            .events
+            .iter()
+            .filter(|e| e.trace_id == trace_id)
+            .count();
+        assert_eq!(n_after, spans.len());
+    }
+
+    #[test]
+    fn telemetry_snapshot_counts_frames() {
+        let _g = crate::metrics::telemetry::test_enabled_guard();
+        let server = KvServer::spawn().unwrap();
+        let client = KvClient::connect(server.addr).unwrap();
+        client.set("m", Bytes(vec![1])).unwrap();
+        let snap = client.telemetry().unwrap();
+        assert!(snap.counter("kv.server.frames_in") >= 2);
+        assert!(snap.counter("kv.server.frames_out") >= 1);
+        assert!(snap.counter("kv.client.ops") >= 2);
+        let h = snap.histogram("kv.server.op_us").expect("server op histogram");
+        assert!(h.count >= 1);
     }
 
     #[test]

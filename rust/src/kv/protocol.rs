@@ -85,6 +85,16 @@ pub enum Request {
     Stats,
     /// Liveness probe.
     Ping,
+    /// Trace-context envelope: carries the client's trace/span ids across
+    /// the wire so the server can stamp its own span onto the same trace.
+    /// The server unwraps, records a server-side span parented on
+    /// `span_id`, and executes `inner` exactly as if it had arrived bare.
+    /// Push-mode commands (`Subscribe`/`Watch`/`Unwatch`) and nested
+    /// envelopes are rejected — tracing must not change FIFO semantics.
+    Traced { trace_id: u64, span_id: u64, inner: Box<Request> },
+    /// Fetch the server process's full telemetry registry snapshot
+    /// (encoded [`TelemetrySnapshot`](crate::metrics::TelemetrySnapshot)).
+    Telemetry,
 }
 
 /// Server → client replies (plus async `Message` pushes in subscribe mode).
@@ -107,6 +117,44 @@ pub enum Response {
     /// Stats: (n_keys, resident_bytes, ops_served).
     StatsReply { keys: u64, bytes: u64, ops: u64 },
     Error(String),
+    /// Encoded [`TelemetrySnapshot`](crate::metrics::TelemetrySnapshot)
+    /// of the server process's registry (reply to `Request::Telemetry`).
+    /// Kept opaque at this layer so the protocol does not depend on the
+    /// snapshot's evolving field set.
+    Telemetry { data: Bytes },
+}
+
+impl Request {
+    /// Stable lower-case op label, used to name telemetry spans and
+    /// histograms. `Traced` reports its inner op's label — the envelope
+    /// itself is not an operation.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Request::Get { .. } => "get",
+            Request::Set { .. } => "set",
+            Request::SetNx { .. } => "set_nx",
+            Request::Del { .. } => "del",
+            Request::Exists { .. } => "exists",
+            Request::MGet { .. } => "mget",
+            Request::MPut { .. } => "mput",
+            Request::MDel { .. } => "mdel",
+            Request::MExists { .. } => "mexists",
+            Request::WaitGet { .. } => "wait_get",
+            Request::Watch { .. } => "watch",
+            Request::Unwatch { .. } => "unwatch",
+            Request::Incr { .. } => "incr",
+            Request::Keys { .. } => "keys",
+            Request::Publish { .. } => "publish",
+            Request::Subscribe { .. } => "subscribe",
+            Request::LPush { .. } => "lpush",
+            Request::BRPop { .. } => "brpop",
+            Request::FlushAll => "flush_all",
+            Request::Stats => "stats",
+            Request::Ping => "ping",
+            Request::Traced { inner, .. } => inner.name(),
+            Request::Telemetry => "telemetry",
+        }
+    }
 }
 
 macro_rules! tagged {
@@ -146,6 +194,13 @@ impl Encode for Request {
             Request::MExists { keys } => tagged!(buf, 18, keys),
             Request::Watch { key, id } => tagged!(buf, 19, key, id),
             Request::Unwatch { key, id } => tagged!(buf, 20, key, id),
+            Request::Traced { trace_id, span_id, inner } => {
+                put_varint(buf, 21);
+                trace_id.encode(buf);
+                span_id.encode(buf);
+                inner.as_ref().encode(buf);
+            }
+            Request::Telemetry => tagged!(buf, 22),
         }
     }
 }
@@ -201,6 +256,12 @@ impl Decode for Request {
                 key: Decode::decode(r)?,
                 id: Decode::decode(r)?,
             },
+            21 => Request::Traced {
+                trace_id: Decode::decode(r)?,
+                span_id: Decode::decode(r)?,
+                inner: Box::new(Decode::decode(r)?),
+            },
+            22 => Request::Telemetry,
             t => return Err(Error::Protocol(format!("bad request tag {t}"))),
         })
     }
@@ -223,6 +284,7 @@ impl Encode for Response {
             Response::Error(msg) => tagged!(buf, 7, msg),
             Response::Bools(v) => tagged!(buf, 8, v),
             Response::Notify { id, value } => tagged!(buf, 9, id, value),
+            Response::Telemetry { data } => tagged!(buf, 10, data),
         }
     }
 }
@@ -250,6 +312,7 @@ impl Decode for Response {
                 id: Decode::decode(r)?,
                 value: Decode::decode(r)?,
             },
+            10 => Response::Telemetry { data: Decode::decode(r)? },
             t => return Err(Error::Protocol(format!("bad response tag {t}"))),
         })
     }
@@ -335,6 +398,34 @@ mod tests {
         roundtrip_req(Request::FlushAll);
         roundtrip_req(Request::Ping);
         roundtrip_req(Request::Incr { key: "n".into(), by: -3 });
+        roundtrip_req(Request::Telemetry);
+        roundtrip_req(Request::Traced {
+            trace_id: u64::MAX,
+            span_id: 7,
+            inner: Box::new(Request::Get { key: "k".into() }),
+        });
+        roundtrip_req(Request::Traced {
+            trace_id: 1,
+            span_id: 2,
+            inner: Box::new(Request::MPut {
+                items: vec![("a".into(), Bytes(vec![1, 2]))],
+            }),
+        });
+    }
+
+    #[test]
+    fn request_names_follow_inner_op() {
+        assert_eq!(Request::Get { key: "k".into() }.name(), "get");
+        assert_eq!(Request::Telemetry.name(), "telemetry");
+        let traced = Request::Traced {
+            trace_id: 1,
+            span_id: 2,
+            inner: Box::new(Request::Set {
+                key: "k".into(),
+                value: Bytes(vec![1]),
+            }),
+        };
+        assert_eq!(traced.name(), "set");
     }
 
     #[test]
@@ -356,6 +447,8 @@ mod tests {
             Response::Notify { id: 0, value: Bytes(Vec::new()) },
             Response::StatsReply { keys: 1, bytes: 2, ops: 3 },
             Response::Error("boom".into()),
+            Response::Telemetry { data: Bytes(vec![1, 2, 3]) },
+            Response::Telemetry { data: Bytes(Vec::new()) },
         ] {
             let mut buf = Vec::new();
             write_frame(&mut buf, &resp).unwrap();

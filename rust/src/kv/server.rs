@@ -12,13 +12,37 @@ use std::collections::HashMap;
 use std::io::BufWriter;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
-use crate::codec::Bytes;
+use crate::codec::{Bytes, Encode};
 use crate::error::Result;
 use crate::kv::protocol::{read_frame, write_frame, Request, Response};
 use crate::kv::state::KvState;
+use crate::metrics::telemetry;
+
+/// Cached registry handles for the server's hot-path metrics (one lookup
+/// per process, not per frame).
+struct ServerMetrics {
+    connections: Arc<telemetry::Gauge>,
+    frames_in: Arc<telemetry::Counter>,
+    frames_out: Arc<telemetry::Counter>,
+    notify_pushes: Arc<telemetry::Counter>,
+    op_us: Arc<telemetry::Histogram>,
+    wake_us: Arc<telemetry::Histogram>,
+}
+
+fn server_metrics() -> &'static ServerMetrics {
+    static M: OnceLock<ServerMetrics> = OnceLock::new();
+    M.get_or_init(|| ServerMetrics {
+        connections: telemetry::gauge("kv.server.connections"),
+        frames_in: telemetry::counter("kv.server.frames_in"),
+        frames_out: telemetry::counter("kv.server.frames_out"),
+        notify_pushes: telemetry::counter("kv.server.notify_pushes"),
+        op_us: telemetry::histogram("kv.server.op_us"),
+        wake_us: telemetry::histogram("watch.wake_to_notify_us"),
+    })
+}
 
 /// A running KV server. Dropping the handle shuts it down.
 pub struct KvServer {
@@ -170,10 +194,14 @@ fn handle_request(state: &KvState, req: Request) -> Response {
             Response::StatsReply { keys, bytes, ops }
         }
         Request::Ping => Response::Ok,
+        Request::Telemetry => Response::Telemetry {
+            data: Bytes(telemetry::snapshot().to_bytes()),
+        },
         Request::Subscribe { .. }
         | Request::Watch { .. }
-        | Request::Unwatch { .. } => {
-            unreachable!("push-mode requests handled in serve_connection")
+        | Request::Unwatch { .. }
+        | Request::Traced { .. } => {
+            unreachable!("push-mode/envelope requests handled in serve_requests")
         }
     }
 }
@@ -195,6 +223,13 @@ const WRITE_STALL_CAP: Duration = Duration::from_secs(5);
 /// token).
 type ArmedWatches = Arc<Mutex<HashMap<u64, (String, u64)>>>;
 
+/// Write one FIFO/push frame and count it.
+fn send<T: Encode>(writer: &SharedWriter, msg: &T) -> Result<()> {
+    write_frame(&mut *writer.lock().unwrap(), msg)?;
+    server_metrics().frames_out.incr();
+    Ok(())
+}
+
 fn serve_connection(
     stream: TcpStream,
     state: KvState,
@@ -207,7 +242,9 @@ fn serve_connection(
         BufWriter::with_capacity(1 << 18, stream),
     ));
     let armed: ArmedWatches = Arc::new(Mutex::new(HashMap::new()));
+    server_metrics().connections.add(1);
     let result = serve_requests(&mut reader, &writer, &state, &stop, &armed);
+    server_metrics().connections.add(-1);
     // A closing connection disarms whatever it left armed, so dead peers
     // never leak registry entries (their Notify would go nowhere anyway).
     for (key, token) in std::mem::take(&mut *armed.lock().unwrap()).into_values()
@@ -229,12 +266,13 @@ fn serve_requests(
         // as EOF/error and ends the connection thread.
         let req: Option<Request> = read_frame(reader)?;
         let Some(req) = req else { return Ok(()) };
+        server_metrics().frames_in.incr();
         match req {
             Request::Subscribe { channels } => {
                 // Connection flips into push mode: acknowledge then forward
                 // published messages until the peer hangs up.
                 let rx = state.subscribe(&channels);
-                write_frame(&mut *writer.lock().unwrap(), &Response::Ok)?;
+                send(writer, &Response::Ok)?;
                 loop {
                     match rx.recv_timeout(Duration::from_millis(100)) {
                         Ok(msg) => {
@@ -242,8 +280,7 @@ fn serve_requests(
                                 channel: msg.channel,
                                 payload: msg.payload,
                             };
-                            let sent =
-                                write_frame(&mut *writer.lock().unwrap(), &push);
+                            let sent = send(writer, &push);
                             if sent.is_err() {
                                 return Ok(()); // subscriber gone
                             }
@@ -260,7 +297,7 @@ fn serve_requests(
             Request::Watch { key, id } => {
                 // Ack FIFO first; the Notify push is out-of-band (it may
                 // land immediately after when the key already exists).
-                write_frame(&mut *writer.lock().unwrap(), &Response::Ok)?;
+                send(writer, &Response::Ok)?;
                 let push = writer.clone();
                 let prune = armed.clone();
                 let token = state.watch(
@@ -272,11 +309,18 @@ fn serve_requests(
                         // storing writer's thread; a dead or wedged peer
                         // just loses its push, bounded by the socket
                         // write timeout.
+                        let fired = Instant::now();
                         prune.lock().unwrap().remove(&id);
-                        let _ = write_frame(
+                        let sent = write_frame(
                             &mut *push.lock().unwrap(),
                             &Response::Notify { id, value: Bytes(v.to_vec()) },
                         );
+                        if sent.is_ok() {
+                            let m = server_metrics();
+                            m.frames_out.incr();
+                            m.notify_pushes.incr();
+                            m.wake_us.record_duration(fired.elapsed());
+                        }
                     }),
                 );
                 if let Some(token) = token {
@@ -298,14 +342,42 @@ fn serve_requests(
                         false
                     }
                 };
-                write_frame(
-                    &mut *writer.lock().unwrap(),
-                    &Response::Int(i64::from(removed)),
-                )?;
+                send(writer, &Response::Int(i64::from(removed)))?;
+            }
+            Request::Traced { trace_id, span_id, inner } => {
+                // Unwrap the envelope: adopt the caller's trace, stamp a
+                // server-side span parented on the client's, and execute
+                // the inner op as if it arrived bare. Push-mode inners
+                // would change FIFO semantics mid-trace, so they are
+                // rejected rather than silently untraced.
+                let resp = match *inner {
+                    Request::Subscribe { .. }
+                    | Request::Watch { .. }
+                    | Request::Unwatch { .. }
+                    | Request::Traced { .. } => Response::Error(
+                        "traced envelope cannot carry push-mode or nested \
+                         requests"
+                            .into(),
+                    ),
+                    inner => {
+                        let name = inner.name();
+                        let span = telemetry::next_span_id();
+                        let start = Instant::now();
+                        let resp = handle_request(state, inner);
+                        server_metrics().op_us.record_duration(start.elapsed());
+                        telemetry::trace_event(
+                            trace_id, span, span_id, "kv.server", name,
+                        );
+                        resp
+                    }
+                };
+                send(writer, &resp)?;
             }
             other => {
+                let start = Instant::now();
                 let resp = handle_request(state, other);
-                write_frame(&mut *writer.lock().unwrap(), &resp)?;
+                server_metrics().op_us.record_duration(start.elapsed());
+                send(writer, &resp)?;
             }
         }
     }

@@ -21,7 +21,21 @@ use std::time::{Duration, Instant};
 
 use crate::codec::Bytes;
 use crate::error::{Error, Result};
-use crate::metrics::StoreBytes;
+use crate::metrics::{telemetry, StoreBytes};
+
+/// Cached watch-plane registry handles (process-wide across engines).
+struct WatchMetrics {
+    armed: Arc<telemetry::Gauge>,
+    fires: Arc<telemetry::Counter>,
+}
+
+fn watch_metrics() -> &'static WatchMetrics {
+    static M: std::sync::OnceLock<WatchMetrics> = std::sync::OnceLock::new();
+    M.get_or_init(|| WatchMetrics {
+        armed: telemetry::gauge("watch.armed"),
+        fires: telemetry::counter("watch.fires"),
+    })
+}
 
 /// A pub/sub push delivered to a subscriber connection.
 #[derive(Debug, Clone)]
@@ -51,7 +65,13 @@ impl Inner {
     /// Detach the watchers a write to `key` must fire (called under the
     /// engine lock; the callbacks run after it is released).
     fn take_watches(&mut self, key: &str) -> Vec<(u64, WatchCallback)> {
-        self.watches.remove(key).unwrap_or_default()
+        let fired = self.watches.remove(key).unwrap_or_default();
+        if !fired.is_empty() {
+            let m = watch_metrics();
+            m.armed.add(-(fired.len() as i64));
+            m.fires.add(fired.len() as u64);
+        }
+        fired
     }
 }
 
@@ -207,6 +227,7 @@ impl KvState {
             .entry(key.to_string())
             .or_default()
             .push((token, cb));
+        watch_metrics().armed.add(1);
         Some(token)
     }
 
@@ -223,6 +244,9 @@ impl KvState {
         let removed = list.len() < before;
         if list.is_empty() {
             inner.watches.remove(key);
+        }
+        if removed {
+            watch_metrics().armed.add(-1);
         }
         removed
     }

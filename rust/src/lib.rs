@@ -59,6 +59,31 @@
 //! worker, and a single put wakes exactly its key's waiters in one push.
 //! [`futures::when_all`]/[`futures::when_any`] compose watch handles into
 //! joins that park once over N keys.
+//!
+//! # Observability
+//!
+//! Every fabric reports into one **telemetry plane**
+//! ([`metrics::telemetry`]): a process-global registry of named counters,
+//! gauges, and lock-free log-bucketed latency histograms, plus a bounded
+//! ring of structured trace events. Instrumentation is always-on and
+//! costs one atomic op per record ([`metrics::telemetry::set_enabled`]
+//! turns it into a no-op); the per-store/per-fabric accessors
+//! (`Store::metrics`, `ElasticShards::metrics`, shard router counters)
+//! are exact local views mirrored into the same registry, so
+//! [`metrics::telemetry::snapshot`] covers the whole process in one call:
+//! KV client op latency and pipeline depth, KV server frame and notify
+//! counts, per-shard router latency, migration progress, reactor queue
+//! high-water, and watch-plane arm/fire/re-arm counts.
+//!
+//! Traces propagate **over the wire**: [`metrics::telemetry::start_trace`]
+//! binds a trace to the current thread, the pipelined KV client wraps
+//! each op in a `Request::Traced` envelope carrying `(trace_id, span_id)`,
+//! and the server stamps a child span per op — one snapshot then shows
+//! the client span and the server span of the same logical op joined by
+//! trace id. Snapshots are themselves wire-encodable (`Request::Telemetry`
+//! fetches a remote server's registry), renderable as text
+//! ([`metrics::TelemetrySnapshot::render`] — the CLI `stats` scenario),
+//! and dumped next to every bench CSV by [`benchlib`].
 
 pub mod apps;
 pub mod benchlib;
@@ -94,6 +119,7 @@ pub mod prelude {
     pub use crate::codec::{Bytes, Decode, Encode, F32s};
     pub use crate::error::{Error, Result};
     pub use crate::futures::{when_all, when_any, PendingResult, ProxyFuture};
+    pub use crate::metrics::{telemetry, TelemetrySnapshot, TraceCtx};
     pub use crate::ops::{Op, OpResult, Pending};
     pub use crate::ownership::lifetime::StoreLifetimeExt;
     pub use crate::ownership::{

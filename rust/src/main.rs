@@ -44,6 +44,10 @@ COMMANDS:
                                 partitioned broker fabric demo: topic
                                 partitions spread over N instances, batched
                                 produce/fetch, group fan-in, failure injection
+  stats    [--shards 2] [--keys 64] [--size 4096]
+                                telemetry plane demo: traced ops over a live
+                                TCP sharded fabric, registry snapshot fetched
+                                over the wire and rendered
   serve-kv                      run a redis-sim KV server (ephemeral port)
   serve-broker                  run a log-broker server (ephemeral port)
   version                       print the crate version
@@ -90,6 +94,7 @@ fn run(args: &Args) -> Result<()> {
         Some("shard") => shard_cmd(args),
         Some("rebalance") => rebalance_cmd(args),
         Some("broker-shard") => broker_shard_cmd(args),
+        Some("stats") => stats_cmd(args),
         Some("serve-kv") => serve_kv(),
         Some("serve-broker") => serve_broker(),
         Some(other) => Err(Error::Config(format!(
@@ -374,8 +379,10 @@ fn shard_cmd(args: &Args) -> Result<()> {
 
 fn rebalance_cmd(args: &Args) -> Result<()> {
     use proxystore::codec::{Bytes, Decode};
+    use proxystore::kv::KvServer;
+    use proxystore::metrics::telemetry;
     use proxystore::shard::{ElasticShards, ShardMembers};
-    use proxystore::store::{MemoryConnector, ThrottledConnector};
+    use proxystore::store::{Connector, TcpKvConnector};
     use proxystore::testing::load::ReadProbe;
     use std::sync::Arc;
 
@@ -388,17 +395,26 @@ fn rebalance_cmd(args: &Args) -> Result<()> {
          size={size}B"
     );
 
-    // Throttled memory backends: migration actually pays wire time.
-    let backend = || {
-        ThrottledConnector::wrap(
-            MemoryConnector::new(),
-            Duration::from_micros(200),
-            2.0e8,
-        )
+    // Real TCP KV servers as backends: migration pays actual wire time,
+    // and the telemetry plane below sees both halves of every op (client
+    // spans, server frames, migration fan-outs on the reactor pool).
+    let mut servers = Vec::new();
+    let mut backend = || -> Result<Arc<dyn Connector>> {
+        let server = KvServer::spawn()?;
+        let conn =
+            Arc::new(TcpKvConnector::connect(server.addr)?) as Arc<dyn Connector>;
+        servers.push(server);
+        Ok(conn)
     };
-    let members: ShardMembers = (0..shards).map(|id| (id, backend())).collect();
+    let mut members: ShardMembers = Vec::with_capacity(shards);
+    for id in 0..shards {
+        members.push((id, backend()?));
+    }
     let elastic = ElasticShards::new("rebalance-demo", members, replicas, 0)?;
     let store = Store::new("elastic", Arc::new(elastic.clone()));
+
+    // Trace the driver thread's ops so the snapshot ends with a span tree.
+    let _trace = telemetry::start_trace("rebalance-demo");
 
     let objs: Vec<Bytes> =
         (0..n_keys).map(|i| Bytes(vec![i as u8; size])).collect();
@@ -409,13 +425,19 @@ fn rebalance_cmd(args: &Args) -> Result<()> {
     let early_proxy: Proxy<Bytes> = store.proxy(&objs[0])?;
     let early_wire = early_proxy.to_bytes();
 
+    // Arm a watch on a key that does not exist yet; both membership
+    // changes below must re-arm it, and the late put must still wake it.
+    let sentinel = "rebalance-sentinel";
+    let armed = store.watch_async::<Bytes>(sentinel);
+
     // Concurrent readers hammer the full key set while shards come and go;
     // every get must hit.
     let probe = ReadProbe::spawn(&store, &keys, 2);
 
     println!("\n# scale-out: adding shard {shards} under load");
     let t0 = std::time::Instant::now();
-    elastic.add_shard(shards, backend())?;
+    let new_backend = backend()?;
+    elastic.add_shard(shards, new_backend)?;
     elastic.wait_quiescent(None);
     let grow = elastic.metrics();
     println!(
@@ -446,6 +468,12 @@ fn rebalance_cmd(args: &Args) -> Result<()> {
     let (reads, misses) = probe.finish();
     println!("\n# read availability: {reads} concurrent reads, {misses} misses");
 
+    // Fulfil the sentinel: the watch armed before both rebalances (and
+    // re-armed across each epoch flip) completes from this put's push.
+    store.put_at(sentinel, &Bytes(vec![7u8; 8]))?;
+    let woken = armed.wait()?.map(|b: Bytes| b.0.len());
+    println!("# pre-rebalance watch fired after 2 membership changes: {woken:?}");
+
     // The pre-rebalance proxy still resolves: its stale generation-0
     // descriptor re-attaches to the live control plane.
     let shipped: Proxy<Bytes> = Proxy::from_bytes(&early_wire)?;
@@ -460,6 +488,18 @@ fn rebalance_cmd(args: &Args) -> Result<()> {
         }
     }
     println!("# full key set converged: all {n_keys} objects resolvable");
+
+    // The whole demo ran inside one process, so one registry snapshot
+    // covers every layer it touched: kv client + server, shard router,
+    // reactor pool, watch plane, store counters.
+    let snap = telemetry::snapshot();
+    println!(
+        "\n# telemetry: {} active subsystems {:?}",
+        snap.active_subsystems().len(),
+        snap.active_subsystems()
+    );
+    println!("{}", snap.render());
+    drop(servers);
     Ok(())
 }
 
@@ -586,6 +626,70 @@ fn broker_shard_cmd(args: &Args) -> Result<()> {
     flaky[0].set_down(false);
     producer.produce("flaky", None, Bytes(vec![0]))?;
     println!("  instance 0 restored: produce succeeds again");
+    Ok(())
+}
+
+fn stats_cmd(args: &Args) -> Result<()> {
+    use proxystore::codec::Bytes;
+    use proxystore::kv::{KvClient, KvServer};
+    use proxystore::metrics::telemetry;
+    use proxystore::shard::ShardedConnector;
+    use proxystore::store::{Connector, TcpKvConnector};
+    use std::sync::Arc;
+
+    let shards: usize = args.get_parse("shards", 2)?;
+    let n_keys: usize = args.get_parse("keys", 64)?;
+    let size: usize = args.get_parse("size", 4096)?;
+    println!("stats: shards={shards} keys={n_keys} size={size}B");
+
+    // A live fabric: real TCP KV servers behind the sharded router.
+    let mut servers = Vec::with_capacity(shards);
+    let mut backends: Vec<Arc<dyn Connector>> = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        let server = KvServer::spawn()?;
+        backends
+            .push(Arc::new(TcpKvConnector::connect(server.addr)?)
+                as Arc<dyn Connector>);
+        servers.push(server);
+    }
+    let fabric = Arc::new(ShardedConnector::new(backends, 1, 0)?);
+    let store = Store::new("stats", fabric);
+
+    // Traced traffic: every driver-thread op below crosses the wire in a
+    // trace envelope, so the snapshot carries client AND server spans.
+    let trace = telemetry::start_trace("stats-demo");
+    let objs: Vec<Bytes> =
+        (0..n_keys).map(|i| Bytes(vec![i as u8; size])).collect();
+    let keys = store.put_many(&objs)?;
+    let got: Vec<Option<Bytes>> = store.get_many(&keys)?;
+    let hits = got.iter().filter(|b| b.is_some()).count();
+    println!("put+get {n_keys} objects, {hits} hits");
+
+    // Exercise the watch plane: arm, fulfil, wake.
+    let armed = store.watch_async::<Bytes>("stats-sentinel");
+    store.put_at("stats-sentinel", &Bytes(vec![1u8; 16]))?;
+    armed.wait()?;
+    drop(trace);
+
+    // The wire path: ask a server for its registry snapshot over TCP.
+    let client = KvClient::connect(servers[0].addr)?;
+    let remote = client.telemetry()?;
+    println!(
+        "\n# snapshot fetched over the wire from {}: {} counters, \
+         {} histograms, {} trace events",
+        servers[0].addr,
+        remote.counters.len(),
+        remote.histograms.len(),
+        remote.events.len(),
+    );
+
+    // The local view (same process, same registry): full exposition.
+    let snap = telemetry::snapshot();
+    println!(
+        "# active subsystems: {:?}",
+        snap.active_subsystems()
+    );
+    println!("{}", snap.render());
     Ok(())
 }
 

@@ -9,11 +9,16 @@
 mod memory;
 mod rebalance;
 mod stats;
+pub mod telemetry;
 mod timeline;
 
 pub use memory::{GaugeRegistry, MemorySampler, MemorySeries, StoreBytes, rss_bytes};
 pub use rebalance::{RebalanceMetrics, RebalanceSnapshot};
 pub use stats::{Stats, percentile};
+pub use telemetry::{
+    Counter, Gauge, Histogram, HistogramSnapshot, MirroredCounter, TraceCtx,
+    TraceEvent, TraceGuard, TelemetrySnapshot,
+};
 pub use timeline::{StageRecord, Timeline};
 
 use std::io::Write;
@@ -21,21 +26,55 @@ use std::path::Path;
 
 use crate::error::Result;
 
-/// Write rows to a CSV file under `results/`, creating directories.
+/// Write `contents` to `path` atomically: the bytes land in a same-dir
+/// temp file that is renamed into place, so readers (and an interrupted
+/// run) see either the old file or the complete new one — never a
+/// truncated half-write.
+pub fn write_text_atomic<P: AsRef<Path>>(path: P, contents: &str) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    // Same directory as the target: rename must not cross filesystems.
+    // Pid + address in the name keeps concurrent writers off each other's
+    // temp files; the final rename is last-writer-wins either way.
+    let tmp = path.with_extension(format!(
+        "tmp.{}.{:x}",
+        std::process::id(),
+        contents.as_ptr() as usize
+    ));
+    let write = (|| {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(contents.as_bytes())?;
+        f.sync_all()?;
+        std::fs::rename(&tmp, path)
+    })();
+    if write.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    write.map_err(Into::into)
+}
+
+/// Write rows to a CSV file under `results/`, creating directories. The
+/// write is atomic (temp file + rename), so an interrupted bench run can
+/// never leave a truncated `results/*.csv` behind.
 pub fn write_csv<P: AsRef<Path>>(
     path: P,
     header: &str,
     rows: &[String],
 ) -> Result<()> {
-    if let Some(parent) = path.as_ref().parent() {
-        std::fs::create_dir_all(parent)?;
-    }
-    let mut f = std::fs::File::create(path)?;
-    writeln!(f, "{header}")?;
+    let mut text = String::with_capacity(
+        header.len() + 1 + rows.iter().map(|r| r.len() + 1).sum::<usize>(),
+    );
+    text.push_str(header);
+    text.push('\n');
     for row in rows {
-        writeln!(f, "{row}")?;
+        text.push_str(row);
+        text.push('\n');
     }
-    Ok(())
+    write_text_atomic(path, &text)
 }
 
 /// Monotonic throughput counter: events per second over a window.
@@ -95,6 +134,29 @@ mod tests {
         write_csv(&path, "a,b", &["1,2".into(), "3,4".into()]).unwrap();
         let content = std::fs::read_to_string(&path).unwrap();
         assert_eq!(content, "a,b\n1,2\n3,4\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_csv_replaces_atomically_and_leaves_no_temp() {
+        let dir = std::env::temp_dir().join(format!(
+            "pxs-csv-atomic-{}",
+            std::process::id()
+        ));
+        let path = dir.join("out.csv");
+        write_csv(&path, "h", &["old".into()]).unwrap();
+        write_csv(&path, "h", &["new1".into(), "new2".into()]).unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&path).unwrap(),
+            "h\nnew1\nnew2\n"
+        );
+        // The temp file must be renamed away, not left beside the target.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name())
+            .filter(|n| n != "out.csv")
+            .collect();
+        assert!(leftovers.is_empty(), "stray files: {leftovers:?}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

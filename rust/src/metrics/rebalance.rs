@@ -5,13 +5,21 @@
 //! read/write paths bump these from many threads, and operators only ever
 //! read eventually-consistent totals. [`RebalanceMetrics::snapshot`] gives
 //! a plain-value copy for logging / CSV rows.
+//!
+//! Every bump also mirrors into the process-global telemetry registry
+//! ([`crate::metrics::telemetry`]) under `rebalance.*` names, so one
+//! fleet-wide snapshot covers every elastic fabric in the process while
+//! each instance's [`RebalanceMetrics::snapshot`] stays an exact
+//! per-instance view.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use super::telemetry::{self, Counter};
+
 /// Live counters shared between the control plane, the migration workers,
 /// and the read-through router.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct RebalanceMetrics {
     /// Keys whose placement changed and were enqueued for migration.
     pub keys_planned: AtomicU64,
@@ -37,7 +45,23 @@ pub struct RebalanceMetrics {
     pub batch_retries: AtomicU64,
     /// Membership changes fully drained (epoch retired).
     pub rebalances: AtomicU64,
+    /// Registry mirrors, positionally aligned with [`FIELD_NAMES`]: the
+    /// global `rebalance.*` counters each local field aggregates into.
+    globals: Vec<Arc<Counter>>,
 }
+
+/// Registry names of the mirrored counters, in field order.
+const FIELD_NAMES: [&str; 9] = [
+    "rebalance.keys_planned",
+    "rebalance.keys_migrated",
+    "rebalance.keys_skipped",
+    "rebalance.keys_failed",
+    "rebalance.bytes_moved",
+    "rebalance.dual_reads",
+    "rebalance.dual_read_hits",
+    "rebalance.batch_retries",
+    "rebalance.rebalances",
+];
 
 /// Plain-value copy of [`RebalanceMetrics`] at one instant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -53,13 +77,55 @@ pub struct RebalanceSnapshot {
     pub rebalances: u64,
 }
 
+impl Default for RebalanceMetrics {
+    fn default() -> RebalanceMetrics {
+        RebalanceMetrics {
+            keys_planned: AtomicU64::new(0),
+            keys_migrated: AtomicU64::new(0),
+            keys_skipped: AtomicU64::new(0),
+            keys_failed: AtomicU64::new(0),
+            bytes_moved: AtomicU64::new(0),
+            dual_reads: AtomicU64::new(0),
+            dual_read_hits: AtomicU64::new(0),
+            batch_retries: AtomicU64::new(0),
+            rebalances: AtomicU64::new(0),
+            globals: FIELD_NAMES
+                .iter()
+                .map(|name| telemetry::counter(name))
+                .collect(),
+        }
+    }
+}
+
 impl RebalanceMetrics {
     pub fn new() -> Arc<RebalanceMetrics> {
         Arc::new(RebalanceMetrics::default())
     }
 
+    /// Local fields in [`FIELD_NAMES`] order (what `add` matches against).
+    fn fields(&self) -> [&AtomicU64; 9] {
+        [
+            &self.keys_planned,
+            &self.keys_migrated,
+            &self.keys_skipped,
+            &self.keys_failed,
+            &self.bytes_moved,
+            &self.dual_reads,
+            &self.dual_read_hits,
+            &self.batch_retries,
+            &self.rebalances,
+        ]
+    }
+
+    /// Bump a field (pass a reference to one of the public counters) and
+    /// mirror the increment into its global `rebalance.*` registry twin.
     pub fn add(&self, counter: &AtomicU64, n: u64) {
         counter.fetch_add(n, Ordering::Relaxed);
+        if let Some(i) =
+            self.fields().iter().position(|f| std::ptr::eq(*f, counter))
+        {
+            self.globals[i].add(n);
+        }
     }
 
     pub fn snapshot(&self) -> RebalanceSnapshot {

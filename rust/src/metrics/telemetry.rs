@@ -1,0 +1,1002 @@
+//! Unified telemetry plane: a process-global registry of named counters,
+//! gauges and log-bucketed latency histograms, a bounded trace-event ring,
+//! and wire-level trace-context propagation.
+//!
+//! Every fabric in the stack reports here — the pipelined KV client
+//! (`kv.client.*`), the KV server (`kv.server.*`), the shard router
+//! (`shard.*`), the elastic rebalancer (`rebalance.*`), the reactor pool
+//! (`reactor.*`), the watch/notify plane (`watch.*`), the broker fabric
+//! (`broker.*`) and the typed [`Store`](crate::store::Store)
+//! (`store.*`) — so one [`snapshot`] covers the whole process. The
+//! primitives are lock-free on the hot path: a counter bump is one relaxed
+//! `fetch_add`, a histogram record is three relaxed atomics plus one
+//! bucket increment, and nothing ever takes a lock while recording.
+//!
+//! Latency histograms are **log-bucketed**: four sub-buckets per power of
+//! two (≤ ~19% relative bucket width) over the full `u64` range, recorded
+//! in microseconds. Quantiles are estimated by expanding the buckets into
+//! a bounded sorted sample set and delegating to the same
+//! [`percentile`](crate::metrics::percentile) machinery the bench harness
+//! uses, so p50/p95/p99 here and in `benchlib` mean the same thing.
+//!
+//! **Trace propagation**: [`start_trace`] opens a trace on the calling
+//! thread (RAII [`TraceGuard`] clears it). While a trace is current, the
+//! pipelined KV client wraps each submitted request in a
+//! [`Request::Traced`](crate::kv::Request::Traced) envelope; the server
+//! unwraps it and stamps a server-side span carrying the same trace id, so
+//! one logical op can be followed client → shard router → replica → KV
+//! engine → notify push across process and wire boundaries. Span events
+//! land in a bounded ring buffer ([`TelemetrySnapshot::events`]) — only
+//! traced ops pay the ring's mutex; untraced hot paths never touch it.
+//!
+//! Recording can be disabled process-wide ([`set_enabled`]) — the
+//! overhead gate in `benches/telemetry.rs` measures the instrumented hot
+//! path against that baseline.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+use std::time::Duration;
+
+use crate::codec::{Decode, Encode, Reader};
+use crate::error::Result;
+
+use super::stats::percentile;
+
+// --------------------------------------------------------------------------
+// Primitives
+// --------------------------------------------------------------------------
+
+/// Whether telemetry recording is active (default: yes). One relaxed load
+/// on every record; flipping it off turns every primitive into a no-op —
+/// the uninstrumented baseline the overhead bench compares against.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Enable or disable all recording process-wide.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether recording is active.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Monotonic named counter: one relaxed `fetch_add` per bump.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.v.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Signed gauge with a high-water mark (e.g. queue depth, in-flight ops).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicI64,
+    hwm: AtomicI64,
+}
+
+impl Gauge {
+    /// Move the gauge by `delta`, raising the high-water mark.
+    pub fn add(&self, delta: i64) {
+        if !enabled() {
+            return;
+        }
+        let now = self.v.fetch_add(delta, Ordering::Relaxed) + delta;
+        self.hwm.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Set the gauge to an observed level, raising the high-water mark.
+    pub fn set(&self, v: i64) {
+        if !enabled() {
+            return;
+        }
+        self.v.store(v, Ordering::Relaxed);
+        self.hwm.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    pub fn high_water(&self) -> i64 {
+        self.hwm.load(Ordering::Relaxed)
+    }
+}
+
+/// Sub-buckets per power of two: 4 → bucket width ≤ ~19% of its value.
+const SUB_BITS: u32 = 2;
+const SUB: usize = 1 << SUB_BITS;
+/// 64 octaves × 4 sub-buckets covers the full `u64` range.
+const BUCKETS: usize = 64 * SUB;
+
+/// Index of the log bucket holding `v`.
+fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let lz = 63 - v.leading_zeros();
+    let sub = ((v >> (lz - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+    (lz as usize) * SUB + sub
+}
+
+/// Lower bound of bucket `i` (its representative range is `[lo, hi)`).
+fn bucket_lo(i: usize) -> u64 {
+    if i < SUB {
+        return i as u64;
+    }
+    let lz = (i / SUB) as u32;
+    let sub = (i % SUB) as u64;
+    (1u64 << lz) + sub * (1u64 << (lz - SUB_BITS))
+}
+
+/// Upper bound of bucket `i` (saturating: the top octave's bound would
+/// overflow `u64`, so it closes at `u64::MAX` inclusive).
+fn bucket_hi(i: usize) -> u64 {
+    if i < SUB {
+        return i as u64 + 1;
+    }
+    let lz = (i / SUB) as u32;
+    bucket_lo(i).saturating_add(1u64 << (lz - SUB_BITS))
+}
+
+/// Lock-free log-bucketed histogram of `u64` observations (latencies in
+/// microseconds by convention). Recording is four relaxed atomic ops; no
+/// lock is ever taken. Concurrent recorders conserve both the total count
+/// and the total sum exactly.
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+    buckets: Box<[AtomicU64; BUCKETS]>,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+            buckets: Box::new([0u64; BUCKETS].map(AtomicU64::new)),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, v: u64) {
+        if !enabled() {
+            return;
+        }
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a duration in microseconds.
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Plain-value copy at one instant. Taken while recorders are live the
+    /// fields may be mutually slightly torn (count vs sum), like every
+    /// relaxed-counter snapshot in the stack.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let buckets: Vec<(u64, u64)> = (0..BUCKETS)
+            .filter_map(|i| {
+                let n = self.buckets[i].load(Ordering::Relaxed);
+                (n > 0).then(|| (bucket_lo(i), n))
+            })
+            .collect();
+        let count = self.count();
+        HistogramSnapshot {
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            min: if count == 0 { 0 } else { self.min.load(Ordering::Relaxed) },
+            max: self.max.load(Ordering::Relaxed),
+            buckets,
+        }
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Histogram({} samples)", self.count())
+    }
+}
+
+/// Plain-value copy of a [`Histogram`]: totals plus the non-empty buckets
+/// as `(bucket_lower_bound, count)` pairs. Wire-encodable.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+    pub buckets: Vec<(u64, u64)>,
+}
+
+/// Cap on the expanded sample set quantiles are computed over; buckets
+/// with more observations than fit are scaled down proportionally.
+const QUANTILE_SAMPLES: usize = 4096;
+
+impl HistogramSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Estimate the `q`-th percentile (`q` in `[0, 100]`) by expanding the
+    /// log buckets into a bounded sorted sample set (bucket midpoints,
+    /// weighted by count) and delegating to the shared
+    /// [`percentile`](crate::metrics::percentile) interpolation. Accuracy
+    /// is bounded by the bucket width (≤ ~19%); the exact `min`/`max`
+    /// fields bound the tails.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let samples = self.quantile_samples();
+        percentile(&samples, q)
+    }
+
+    fn quantile_samples(&self) -> Vec<f64> {
+        if self.count == 0 {
+            return Vec::new();
+        }
+        // Scale so the expansion stays bounded no matter how many
+        // observations landed; small histograms expand exactly.
+        let scale = (self.count as f64 / QUANTILE_SAMPLES as f64).max(1.0);
+        let mut out = Vec::new();
+        for &(lo, n) in &self.buckets {
+            let hi = bucket_hi(bucket_index(lo));
+            let mid = (lo as f64 + hi as f64) / 2.0;
+            let reps = ((n as f64 / scale).round() as usize).max(1);
+            out.extend(std::iter::repeat(mid).take(reps));
+        }
+        // Buckets are emitted in index order, midpoints ascend with it.
+        out
+    }
+}
+
+impl Encode for HistogramSnapshot {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.count.encode(buf);
+        self.sum.encode(buf);
+        self.min.encode(buf);
+        self.max.encode(buf);
+        self.buckets.encode(buf);
+    }
+}
+
+impl Decode for HistogramSnapshot {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(HistogramSnapshot {
+            count: Decode::decode(r)?,
+            sum: Decode::decode(r)?,
+            min: Decode::decode(r)?,
+            max: Decode::decode(r)?,
+            buckets: Decode::decode(r)?,
+        })
+    }
+}
+
+/// A per-instance counter that mirrors every bump into a process-global
+/// registry counter: instance accessors keep their exact local values
+/// (tests and per-fabric diagnostics) while the registry aggregates
+/// across all instances for the fleet-wide snapshot.
+#[derive(Debug)]
+pub struct MirroredCounter {
+    local: AtomicU64,
+    global: Arc<Counter>,
+}
+
+impl MirroredCounter {
+    /// `global_name` is the registry counter every bump aggregates into.
+    pub fn new(global_name: &str) -> MirroredCounter {
+        MirroredCounter {
+            local: AtomicU64::new(0),
+            global: counter(global_name),
+        }
+    }
+
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.local.fetch_add(n, Ordering::Relaxed);
+        self.global.add(n);
+    }
+
+    /// The instance-local total (unaffected by other instances).
+    pub fn get(&self) -> u64 {
+        self.local.load(Ordering::Relaxed)
+    }
+}
+
+// --------------------------------------------------------------------------
+// Trace context
+// --------------------------------------------------------------------------
+
+/// Identity of the current trace on this thread: which logical operation
+/// (`trace_id`) and which hop within it (`span_id`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub trace_id: u64,
+    pub span_id: u64,
+}
+
+thread_local! {
+    static CURRENT_TRACE: std::cell::Cell<Option<TraceCtx>> =
+        const { std::cell::Cell::new(None) };
+}
+
+fn ids() -> &'static AtomicU64 {
+    static NEXT: OnceLock<AtomicU64> = OnceLock::new();
+    NEXT.get_or_init(|| {
+        // Seed from wall clock + pid so ids from different processes on a
+        // shared fabric are distinguishable; uniqueness within a process
+        // comes from the increment.
+        let seed = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(1)
+            ^ (u64::from(std::process::id()) << 32);
+        AtomicU64::new(seed | 1)
+    })
+}
+
+/// A fresh span id (unique within the process).
+pub fn next_span_id() -> u64 {
+    ids().fetch_add(1, Ordering::Relaxed)
+}
+
+/// The trace context current on this thread, if any.
+pub fn current_trace() -> Option<TraceCtx> {
+    CURRENT_TRACE.with(|c| c.get())
+}
+
+/// Open a new trace on the calling thread and return the guard that
+/// scopes it: while the guard lives, ops submitted from this thread are
+/// wrapped in `Request::Traced` envelopes on the wire. Dropping the guard
+/// restores whatever trace (or none) was current before.
+pub fn start_trace(name: &str) -> TraceGuard {
+    let ctx = TraceCtx { trace_id: next_span_id(), span_id: next_span_id() };
+    trace_event(ctx.trace_id, ctx.span_id, 0, "trace", name);
+    let prev = CURRENT_TRACE.with(|c| c.replace(Some(ctx)));
+    TraceGuard { prev, ctx }
+}
+
+/// Make `ctx` current for the guard's lifetime (server-side span adoption,
+/// or carrying a context across a pool-worker hop).
+pub fn enter_trace(ctx: TraceCtx) -> TraceGuard {
+    let prev = CURRENT_TRACE.with(|c| c.replace(Some(ctx)));
+    TraceGuard { prev, ctx }
+}
+
+/// RAII scope of a current trace; restores the previous context on drop.
+#[derive(Debug)]
+pub struct TraceGuard {
+    prev: Option<TraceCtx>,
+    ctx: TraceCtx,
+}
+
+impl TraceGuard {
+    pub fn ctx(&self) -> TraceCtx {
+        self.ctx
+    }
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        CURRENT_TRACE.with(|c| c.set(self.prev));
+    }
+}
+
+/// One structured span event in the trace ring.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Monotonic sequence within this process (ring ordering).
+    pub seq: u64,
+    pub trace_id: u64,
+    pub span_id: u64,
+    /// Span this one descends from (0 = root).
+    pub parent_span: u64,
+    /// Which fabric recorded it (`kv.client`, `kv.server`, ...).
+    pub subsystem: String,
+    /// Operation label (`get`, `set`, `notify`, ...).
+    pub name: String,
+}
+
+impl Encode for TraceEvent {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.seq.encode(buf);
+        self.trace_id.encode(buf);
+        self.span_id.encode(buf);
+        self.parent_span.encode(buf);
+        self.subsystem.encode(buf);
+        self.name.encode(buf);
+    }
+}
+
+impl Decode for TraceEvent {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(TraceEvent {
+            seq: Decode::decode(r)?,
+            trace_id: Decode::decode(r)?,
+            span_id: Decode::decode(r)?,
+            parent_span: Decode::decode(r)?,
+            subsystem: Decode::decode(r)?,
+            name: Decode::decode(r)?,
+        })
+    }
+}
+
+/// Bounded ring of recent trace events. Only traced ops push here, so the
+/// mutex is off the untraced hot path entirely.
+struct TraceRing {
+    events: Mutex<std::collections::VecDeque<TraceEvent>>,
+    seq: AtomicU64,
+    cap: usize,
+}
+
+impl TraceRing {
+    fn new(cap: usize) -> TraceRing {
+        TraceRing {
+            events: Mutex::new(std::collections::VecDeque::with_capacity(cap)),
+            seq: AtomicU64::new(0),
+            cap,
+        }
+    }
+
+    fn push(&self, mut ev: TraceEvent) {
+        ev.seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let mut ring = self.events.lock().unwrap();
+        if ring.len() == self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(ev);
+    }
+
+    fn snapshot(&self) -> Vec<TraceEvent> {
+        self.events.lock().unwrap().iter().cloned().collect()
+    }
+}
+
+/// Record a span event into the global trace ring.
+pub fn trace_event(
+    trace_id: u64,
+    span_id: u64,
+    parent_span: u64,
+    subsystem: &str,
+    name: &str,
+) {
+    if !enabled() {
+        return;
+    }
+    registry().ring.push(TraceEvent {
+        seq: 0,
+        trace_id,
+        span_id,
+        parent_span,
+        subsystem: subsystem.to_string(),
+        name: name.to_string(),
+    });
+}
+
+// --------------------------------------------------------------------------
+// Registry
+// --------------------------------------------------------------------------
+
+/// Trace events retained (older ones are dropped).
+const RING_CAP: usize = 1024;
+
+/// The process-global metric registry: named counters, gauges and
+/// histograms plus the trace ring. Lookup is a read-lock + map probe;
+/// hot paths cache the returned `Arc` handles and never look up again.
+pub struct Registry {
+    counters: RwLock<BTreeMap<String, Arc<Counter>>>,
+    gauges: RwLock<BTreeMap<String, Arc<Gauge>>>,
+    histograms: RwLock<BTreeMap<String, Arc<Histogram>>>,
+    ring: TraceRing,
+}
+
+fn get_or_create<T: Default>(
+    map: &RwLock<BTreeMap<String, Arc<T>>>,
+    name: &str,
+) -> Arc<T> {
+    if let Some(v) = map.read().unwrap().get(name) {
+        return v.clone();
+    }
+    map.write()
+        .unwrap()
+        .entry(name.to_string())
+        .or_default()
+        .clone()
+}
+
+impl Registry {
+    fn new() -> Registry {
+        Registry {
+            counters: RwLock::new(BTreeMap::new()),
+            gauges: RwLock::new(BTreeMap::new()),
+            histograms: RwLock::new(BTreeMap::new()),
+            ring: TraceRing::new(RING_CAP),
+        }
+    }
+
+    /// Get or create the counter `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        get_or_create(&self.counters, name)
+    }
+
+    /// Get or create the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        get_or_create(&self.gauges, name)
+    }
+
+    /// Get or create the histogram `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        get_or_create(&self.histograms, name)
+    }
+
+    /// Plain-value copy of every metric plus the trace ring.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            counters: self
+                .counters
+                .read()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            gauges: self
+                .gauges
+                .read()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), (v.get(), v.high_water())))
+                .collect(),
+            histograms: self
+                .histograms
+                .read()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.snapshot()))
+                .collect(),
+            events: self.ring.snapshot(),
+        }
+    }
+}
+
+/// The process-global registry.
+pub fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::new)
+}
+
+/// Get or create the global counter `name`.
+pub fn counter(name: &str) -> Arc<Counter> {
+    registry().counter(name)
+}
+
+/// Get or create the global gauge `name`.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    registry().gauge(name)
+}
+
+/// Get or create the global histogram `name`.
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    registry().histogram(name)
+}
+
+/// Snapshot the global registry.
+pub fn snapshot() -> TelemetrySnapshot {
+    registry().snapshot()
+}
+
+// --------------------------------------------------------------------------
+// Snapshot + exposition
+// --------------------------------------------------------------------------
+
+/// Plain-value copy of the whole registry at one instant. Wire-encodable:
+/// the KV protocol's `Telemetry` op ships one of these, and
+/// [`render`](TelemetrySnapshot::render) is the text exposition the CLI
+/// `stats` scenario and `benchlib` print.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TelemetrySnapshot {
+    pub counters: Vec<(String, u64)>,
+    /// `(name, (value, high_water))`.
+    pub gauges: Vec<(String, (i64, i64))>,
+    pub histograms: Vec<(String, HistogramSnapshot)>,
+    pub events: Vec<TraceEvent>,
+}
+
+impl TelemetrySnapshot {
+    /// Counter value by exact name (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map_or(0, |(_, v)| *v)
+    }
+
+    /// Histogram by exact name.
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSnapshot> {
+        self.histograms.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    /// Dotted prefixes (`kv.client`, `shard`, ...) that have at least one
+    /// non-zero counter, gauge high-water, or histogram observation — the
+    /// "which subsystems are alive" view the acceptance gate checks.
+    pub fn active_subsystems(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        let mut push = |name: &str| {
+            let prefix = match name.split('.').next() {
+                Some("kv") => {
+                    name.splitn(3, '.').take(2).collect::<Vec<_>>().join(".")
+                }
+                Some(first) => first.to_string(),
+                None => return,
+            };
+            if !out.contains(&prefix) {
+                out.push(prefix);
+            }
+        };
+        for (name, v) in &self.counters {
+            if *v > 0 {
+                push(name);
+            }
+        }
+        for (name, (_, hwm)) in &self.gauges {
+            if *hwm > 0 {
+                push(name);
+            }
+        }
+        for (name, h) in &self.histograms {
+            if h.count > 0 {
+                push(name);
+            }
+        }
+        out.sort();
+        out
+    }
+
+    /// Human-readable exposition: counters, gauges, histogram quantiles
+    /// and the tail of the trace ring.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "== telemetry snapshot ==");
+        if !self.counters.is_empty() {
+            let _ = writeln!(s, "counters:");
+            for (name, v) in &self.counters {
+                let _ = writeln!(s, "  {name:<42} {v}");
+            }
+        }
+        if !self.gauges.is_empty() {
+            let _ = writeln!(s, "gauges (value / high-water):");
+            for (name, (v, hwm)) in &self.gauges {
+                let _ = writeln!(s, "  {name:<42} {v} / {hwm}");
+            }
+        }
+        if !self.histograms.is_empty() {
+            let _ = writeln!(
+                s,
+                "histograms (us): {:<26} {:>8} {:>9} {:>9} {:>9} {:>9} {:>9}",
+                "", "count", "mean", "p50", "p95", "p99", "max"
+            );
+            for (name, h) in &self.histograms {
+                let _ = writeln!(
+                    s,
+                    "  {name:<40} {:>8} {:>9.1} {:>9.1} {:>9.1} {:>9.1} {:>9}",
+                    h.count,
+                    h.mean(),
+                    h.percentile(50.0),
+                    h.percentile(95.0),
+                    h.percentile(99.0),
+                    h.max,
+                );
+            }
+        }
+        if !self.events.is_empty() {
+            let tail = 16.min(self.events.len());
+            let _ = writeln!(
+                s,
+                "trace events (last {tail} of {}):",
+                self.events.len()
+            );
+            for ev in &self.events[self.events.len() - tail..] {
+                let _ = writeln!(
+                    s,
+                    "  [trace {:016x} span {:x} < {:x}] {} {}",
+                    ev.trace_id, ev.span_id, ev.parent_span, ev.subsystem,
+                    ev.name,
+                );
+            }
+        }
+        s
+    }
+}
+
+impl Encode for TelemetrySnapshot {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.counters.encode(buf);
+        self.gauges.encode(buf);
+        self.histograms.encode(buf);
+        self.events.encode(buf);
+    }
+}
+
+impl Decode for TelemetrySnapshot {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(TelemetrySnapshot {
+            counters: Decode::decode(r)?,
+            gauges: Decode::decode(r)?,
+            histograms: Decode::decode(r)?,
+            events: Decode::decode(r)?,
+        })
+    }
+}
+
+/// Serializes unit tests that toggle [`set_enabled`] against tests that
+/// assert recorded values (the whole lib test binary shares one process,
+/// so a concurrent disable would silently drop a sibling's records).
+#[cfg(test)]
+pub(crate) fn test_enabled_guard() -> std::sync::MutexGuard<'static, ()> {
+    static ENABLED_LOCK: Mutex<()> = Mutex::new(());
+    ENABLED_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use super::test_enabled_guard as enabled_guard;
+
+    #[test]
+    fn bucket_index_bounds_are_consistent() {
+        for v in [0u64, 1, 2, 3, 4, 5, 7, 8, 100, 1000, 1 << 20, u64::MAX] {
+            let i = bucket_index(v);
+            assert!(i < BUCKETS, "index {i} out of range for {v}");
+            // Half-open [lo, hi), except the saturated top bucket which
+            // closes at u64::MAX inclusive.
+            assert!(
+                bucket_lo(i) <= v
+                    && (v < bucket_hi(i) || bucket_hi(i) == u64::MAX),
+                "{v} outside [{}, {}) (bucket {i})",
+                bucket_lo(i),
+                bucket_hi(i)
+            );
+        }
+        // Bucket bounds ascend with the index over the used range.
+        let mut prev = 0;
+        for i in (SUB * 2)..BUCKETS {
+            assert!(bucket_lo(i) > prev, "bucket {i} not ascending");
+            prev = bucket_lo(i);
+        }
+    }
+
+    #[test]
+    fn histogram_records_and_estimates() {
+        let _g = enabled_guard();
+        let h = Histogram::default();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        assert_eq!(s.sum, 500_500);
+        assert_eq!(s.min, 1);
+        assert_eq!(s.max, 1000);
+        // Log-bucket estimates are within one bucket width (~19%).
+        let p50 = s.percentile(50.0);
+        assert!((400.0..=650.0).contains(&p50), "p50 {p50}");
+        let p99 = s.percentile(99.0);
+        assert!((800.0..=1200.0).contains(&p99), "p99 {p99}");
+        assert!(s.mean() > 400.0 && s.mean() < 600.0);
+    }
+
+    #[test]
+    fn histogram_concurrent_recording_conserves_count_and_sum() {
+        let _g = enabled_guard();
+        let h = Arc::new(Histogram::default());
+        let threads = 8;
+        let per = 10_000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        h.record(t * per + i);
+                    }
+                })
+            })
+            .collect();
+        for handle in handles {
+            handle.join().unwrap();
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, threads * per);
+        let expect: u64 = (0..threads * per).sum();
+        assert_eq!(s.sum, expect);
+        assert_eq!(s.min, 0);
+        assert_eq!(s.max, threads * per - 1);
+        let bucket_total: u64 = s.buckets.iter().map(|(_, n)| n).sum();
+        assert_eq!(bucket_total, threads * per);
+    }
+
+    #[test]
+    fn percentiles_are_monotone() {
+        let _g = enabled_guard();
+        let h = Histogram::default();
+        // A skewed distribution across many octaves.
+        for i in 0..5000u64 {
+            h.record(i * i % 100_000);
+        }
+        let s = h.snapshot();
+        let qs = [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 100.0];
+        let vals: Vec<f64> = qs.iter().map(|&q| s.percentile(q)).collect();
+        for w in vals.windows(2) {
+            assert!(w[0] <= w[1], "percentiles not monotone: {vals:?}");
+        }
+    }
+
+    #[test]
+    fn gauge_tracks_high_water() {
+        let _g = enabled_guard();
+        let g = Gauge::default();
+        g.add(5);
+        g.add(3);
+        g.add(-6);
+        assert_eq!(g.get(), 2);
+        assert_eq!(g.high_water(), 8);
+        g.set(1);
+        assert_eq!(g.high_water(), 8);
+    }
+
+    #[test]
+    fn registry_returns_same_handle() {
+        let _g = enabled_guard();
+        let c1 = counter("test.telemetry.reuse");
+        let c2 = counter("test.telemetry.reuse");
+        c1.add(2);
+        c2.add(3);
+        assert_eq!(c2.get(), c1.get());
+        assert!(c1.get() >= 5);
+    }
+
+    #[test]
+    fn mirrored_counter_keeps_local_view() {
+        let _g = enabled_guard();
+        let a = MirroredCounter::new("test.telemetry.mirror");
+        let b = MirroredCounter::new("test.telemetry.mirror");
+        a.add(2);
+        b.add(5);
+        assert_eq!(a.get(), 2);
+        assert_eq!(b.get(), 5);
+        assert!(counter("test.telemetry.mirror").get() >= 7);
+    }
+
+    #[test]
+    fn trace_guard_scopes_and_restores() {
+        assert_eq!(current_trace(), None);
+        let g = start_trace("outer");
+        let outer = current_trace().unwrap();
+        assert_eq!(outer, g.ctx());
+        {
+            let inner = TraceCtx { trace_id: 42, span_id: 7 };
+            let _g2 = enter_trace(inner);
+            assert_eq!(current_trace(), Some(inner));
+        }
+        assert_eq!(current_trace(), Some(outer));
+        drop(g);
+        assert_eq!(current_trace(), None);
+    }
+
+    #[test]
+    fn ring_bounds_and_orders_events() {
+        let ring = TraceRing::new(4);
+        for i in 0..10u64 {
+            ring.push(TraceEvent {
+                seq: 0,
+                trace_id: i,
+                span_id: i,
+                parent_span: 0,
+                subsystem: "test".into(),
+                name: "ev".into(),
+            });
+        }
+        let evs = ring.snapshot();
+        assert_eq!(evs.len(), 4);
+        assert_eq!(evs[0].trace_id, 6);
+        assert!(evs.windows(2).all(|w| w[0].seq < w[1].seq));
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_codec() {
+        let _g = enabled_guard();
+        let h = Histogram::default();
+        for v in [1u64, 10, 100, 1000, 10_000] {
+            h.record(v);
+        }
+        let snap = TelemetrySnapshot {
+            counters: vec![("a.b".into(), 7)],
+            gauges: vec![("c.d".into(), (3, 9))],
+            histograms: vec![("e.f".into(), h.snapshot())],
+            events: vec![TraceEvent {
+                seq: 1,
+                trace_id: 2,
+                span_id: 3,
+                parent_span: 4,
+                subsystem: "kv.client".into(),
+                name: "get".into(),
+            }],
+        };
+        let back = TelemetrySnapshot::from_bytes(&snap.to_bytes()).unwrap();
+        assert_eq!(snap, back);
+        let text = back.render();
+        assert!(text.contains("a.b"));
+        assert!(text.contains("kv.client"));
+    }
+
+    #[test]
+    fn active_subsystems_groups_by_prefix() {
+        let snap = TelemetrySnapshot {
+            counters: vec![
+                ("kv.client.ops".into(), 1),
+                ("kv.server.frames_in".into(), 2),
+                ("shard.router.fallbacks".into(), 0),
+                ("reactor.jobs".into(), 3),
+            ],
+            gauges: vec![("watch.armed".into(), (0, 5))],
+            histograms: Vec::new(),
+            events: Vec::new(),
+        };
+        let subs = snap.active_subsystems();
+        assert_eq!(
+            subs,
+            vec!["kv.client", "kv.server", "reactor", "watch"]
+        );
+    }
+
+    #[test]
+    fn disabled_recording_is_a_no_op() {
+        let _g = enabled_guard();
+        let h = Histogram::default();
+        let c = Counter::default();
+        set_enabled(false);
+        h.record(5);
+        c.incr();
+        set_enabled(true);
+        assert_eq!(h.count(), 0);
+        assert_eq!(c.get(), 0);
+        h.record(5);
+        c.incr();
+        assert_eq!(h.count(), 1);
+        assert_eq!(c.get(), 1);
+    }
+}

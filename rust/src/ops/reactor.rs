@@ -32,9 +32,28 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex, OnceLock};
 
 use crate::error::{Error, Result};
+use crate::metrics::telemetry;
 use crate::store::Connector;
 
 use super::{pending, Op, OpResult, Pending};
+
+/// Cached registry handles for pool observability: jobs enqueued, queue
+/// depth (its high-water mark is the congestion signal), and submissions
+/// that degraded to inline runs under backpressure.
+struct ReactorMetrics {
+    jobs: std::sync::Arc<telemetry::Counter>,
+    queue_depth: std::sync::Arc<telemetry::Gauge>,
+    inline_runs: std::sync::Arc<telemetry::Counter>,
+}
+
+fn reactor_metrics() -> &'static ReactorMetrics {
+    static M: OnceLock<ReactorMetrics> = OnceLock::new();
+    M.get_or_init(|| ReactorMetrics {
+        jobs: telemetry::counter("reactor.jobs"),
+        queue_depth: telemetry::gauge("reactor.queue_depth"),
+        inline_runs: telemetry::counter("reactor.inline_runs"),
+    })
+}
 
 /// A unit of pool work.
 type Task = Box<dyn FnOnce() + Send + 'static>;
@@ -137,6 +156,7 @@ impl Reactor {
         F: FnOnce() -> Result<T> + Send + 'static,
     {
         if Self::in_worker() || self.saturated() {
+            reactor_metrics().inline_runs.incr();
             return Pending::ready(run_caught(f));
         }
         let (completer, handle) = pending();
@@ -151,6 +171,7 @@ impl Reactor {
     /// same backpressure as [`Reactor::spawn`].
     pub fn spawn_detached<F: FnOnce() + Send + 'static>(&self, f: F) {
         if !Self::in_worker() && self.saturated() {
+            reactor_metrics().inline_runs.incr();
             let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
             return;
         }
@@ -164,7 +185,14 @@ impl Reactor {
     }
 
     fn enqueue(&self, task: Task) {
-        self.queue.lock().unwrap().push_back(task);
+        let depth = {
+            let mut q = self.queue.lock().unwrap();
+            q.push_back(task);
+            q.len()
+        };
+        let m = reactor_metrics();
+        m.jobs.incr();
+        m.queue_depth.set(depth as i64);
         self.cv.notify_one();
     }
 
@@ -178,6 +206,7 @@ impl Reactor {
         F: FnOnce() -> Result<T> + Send + 'static,
     {
         if self.saturated() {
+            reactor_metrics().inline_runs.incr();
             return Pending::ready(run_caught(f));
         }
         let (completer, handle) = pending();

@@ -473,6 +473,8 @@ impl ElasticShards {
                 .map(|(key, group)| (key.clone(), group.clone()))
                 .collect()
         };
+        crate::metrics::telemetry::counter("watch.rearms")
+            .add(live_watches.len() as u64);
         for (key, group) in live_watches {
             group.add(new_router.watch(&key));
         }

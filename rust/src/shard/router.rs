@@ -10,10 +10,11 @@
 //! spawns, and backends with a pipelined native submit (TCP) keep their
 //! in-flight sub-batches on the wire rather than on a parked worker.
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::error::{Error, Result};
+use crate::metrics::telemetry::{self, MirroredCounter};
 use crate::ops::reactor::fan_out_ops;
 use crate::ops::{race, Op, OpResult, Pending};
 use crate::shard::ring::HashRing;
@@ -90,9 +91,19 @@ pub struct ShardedConnector {
     replicas: usize,
     vnodes: usize,
     /// Reads served by a non-primary replica (miss/failure fallbacks).
-    fallbacks: AtomicU64,
+    /// Per-instance exact count, mirrored into the process registry as
+    /// `shard.router.read_fallbacks`.
+    fallbacks: MirroredCounter,
     /// Writes that landed on fewer than R replicas (some backend down).
-    degraded_writes: AtomicU64,
+    /// Mirrored as `shard.router.degraded_writes`.
+    degraded_writes: MirroredCounter,
+    /// Per-backend op latency, aligned with `shards` and named by stable
+    /// ring id (`shard.{id}.op_us`) — a slow shard stands out by name
+    /// even as membership changes around it.
+    shard_op_us: Vec<Arc<telemetry::Histogram>>,
+    /// Whole-batch latency of the fan-out paths (`get_many`/`put_many`/
+    /// `delete_many`): wall time of the slowest shard in the round.
+    batch_us: Arc<telemetry::Histogram>,
 }
 
 impl ShardedConnector {
@@ -140,14 +151,20 @@ impl ShardedConnector {
         }
         let vnodes = if vnodes == 0 { DEFAULT_VNODES } else { vnodes };
         let replicas = replicas.clamp(1, shards.len());
+        let shard_op_us = ids
+            .iter()
+            .map(|id| telemetry::histogram(&format!("shard.{id}.op_us")))
+            .collect();
         Ok(ShardedConnector {
             ring: HashRing::with_shards(ids.clone(), vnodes),
             ids,
             shards,
             replicas,
             vnodes,
-            fallbacks: AtomicU64::new(0),
-            degraded_writes: AtomicU64::new(0),
+            fallbacks: MirroredCounter::new("shard.router.read_fallbacks"),
+            degraded_writes: MirroredCounter::new("shard.router.degraded_writes"),
+            shard_op_us,
+            batch_us: telemetry::histogram("shard.router.batch_us"),
         })
     }
 
@@ -192,14 +209,14 @@ impl ShardedConnector {
 
     /// Reads that were served by a fallback replica so far.
     pub fn fallback_reads(&self) -> u64 {
-        self.fallbacks.load(Ordering::Relaxed)
+        self.fallbacks.get()
     }
 
     /// Writes that landed on fewer than their full replica set (a backend
     /// was down at write time). Such objects survive, but lose the
     /// redundancy budget until the missing copies are repaired.
     pub fn degraded_writes(&self) -> u64 {
-        self.degraded_writes.load(Ordering::Relaxed)
+        self.degraded_writes.get()
     }
 
     /// Fan a batched get out to every shard with a non-empty index group
@@ -270,7 +287,10 @@ impl Connector for ShardedConnector {
             } else {
                 data.clone()
             };
-            match self.shards[shard].put(key, payload) {
+            let t = Instant::now();
+            let res = self.shards[shard].put(key, payload);
+            self.shard_op_us[shard].record_duration(t.elapsed());
+            match res {
                 Ok(()) => stored += 1,
                 Err(e) => last_err = Some(e),
             }
@@ -280,7 +300,7 @@ impl Connector for ShardedConnector {
         // so operators can see redundancy erode before it bites.
         if stored > 0 {
             if stored < reps.len() {
-                self.degraded_writes.fetch_add(1, Ordering::Relaxed);
+                self.degraded_writes.incr();
             }
             Ok(())
         } else {
@@ -310,7 +330,7 @@ impl Connector for ShardedConnector {
                 .filter(|&&s| self.shards[s].put(key, data.clone()).is_ok())
                 .count();
             if copies + 1 < reps.len() {
-                self.degraded_writes.fetch_add(1, Ordering::Relaxed);
+                self.degraded_writes.incr();
             }
         }
         Ok(stored)
@@ -335,10 +355,13 @@ impl Connector for ShardedConnector {
         let mut healthy_misses = 0usize;
         let mut last_err = None;
         for (attempt, &shard) in reps.iter().enumerate() {
-            match self.shards[shard].get(key) {
+            let t = Instant::now();
+            let res = self.shards[shard].get(key);
+            self.shard_op_us[shard].record_duration(t.elapsed());
+            match res {
                 Ok(Some(blob)) => {
                     if attempt > 0 {
-                        self.fallbacks.fetch_add(1, Ordering::Relaxed);
+                        self.fallbacks.incr();
                     }
                     return Ok(Some(blob));
                 }
@@ -362,6 +385,7 @@ impl Connector for ShardedConnector {
         if items.is_empty() {
             return Ok(());
         }
+        let t_batch = Instant::now();
         let n = self.shards.len();
         let mut batches: Vec<Vec<(String, Vec<u8>)>> = vec![Vec::new(); n];
         let mut owners: Vec<(String, Vec<usize>)> = Vec::with_capacity(items.len());
@@ -399,9 +423,10 @@ impl Connector for ShardedConnector {
                 }));
             }
             if stored < reps.len() {
-                self.degraded_writes.fetch_add(1, Ordering::Relaxed);
+                self.degraded_writes.incr();
             }
         }
+        self.batch_us.record_duration(t_batch.elapsed());
         Ok(())
     }
 
@@ -409,6 +434,7 @@ impl Connector for ShardedConnector {
         if keys.is_empty() {
             return Ok(Vec::new());
         }
+        let t_batch = Instant::now();
         let n = self.shards.len();
         let mut groups: Vec<Vec<usize>> = vec![Vec::new(); n];
         for (i, key) in keys.iter().enumerate() {
@@ -461,7 +487,7 @@ impl Connector for ShardedConnector {
                             match blob {
                                 Some(b) => {
                                     out[i] = Some(b);
-                                    self.fallbacks.fetch_add(1, Ordering::Relaxed);
+                                    self.fallbacks.incr();
                                 }
                                 None => {
                                     healthy_miss[i] = true;
@@ -486,6 +512,7 @@ impl Connector for ShardedConnector {
                 return Err(e);
             }
         }
+        self.batch_us.record_duration(t_batch.elapsed());
         Ok(out)
     }
 
@@ -509,6 +536,7 @@ impl Connector for ShardedConnector {
         if keys.is_empty() {
             return Ok(());
         }
+        let t_batch = Instant::now();
         // Group every key's full replica set per shard, sweep all shards
         // in parallel (each pays one native MDEL / batched evict).
         let n = self.shards.len();
@@ -552,6 +580,7 @@ impl Connector for ShardedConnector {
                 }));
             }
         }
+        self.batch_us.record_duration(t_batch.elapsed());
         Ok(())
     }
 

@@ -40,7 +40,7 @@ use std::time::{Duration, Instant};
 use crate::codec::{Decode, Encode};
 use crate::error::Result;
 use crate::futures::ProxyFuture;
-use crate::metrics::StoreBytes;
+use crate::metrics::{MirroredCounter, StoreBytes};
 use crate::ops::{self, Op, OpResult, Pending};
 use crate::proxy::{Factory, Proxy};
 
@@ -54,12 +54,14 @@ struct StoreInner {
     name: String,
     connector: Arc<dyn Connector>,
     next_key: AtomicU64,
-    /// Operation counters (puts, gets, evictions) for diagnostics.
-    puts: AtomicU64,
-    gets: AtomicU64,
-    evicts: AtomicU64,
-    put_bytes: AtomicU64,
-    get_bytes: AtomicU64,
+    /// Operation counters (puts, gets, evictions) for diagnostics. Each
+    /// is exact per-store and mirrored into the process-wide telemetry
+    /// registry (`store.puts` etc.) so one snapshot covers every store.
+    puts: MirroredCounter,
+    gets: MirroredCounter,
+    evicts: MirroredCounter,
+    put_bytes: MirroredCounter,
+    get_bytes: MirroredCounter,
 }
 
 /// Snapshot of a store's operation counters.
@@ -80,11 +82,11 @@ impl Store {
                 name: name.to_string(),
                 connector,
                 next_key: AtomicU64::new(0),
-                puts: AtomicU64::new(0),
-                gets: AtomicU64::new(0),
-                evicts: AtomicU64::new(0),
-                put_bytes: AtomicU64::new(0),
-                get_bytes: AtomicU64::new(0),
+                puts: MirroredCounter::new("store.puts"),
+                gets: MirroredCounter::new("store.gets"),
+                evicts: MirroredCounter::new("store.evicts"),
+                put_bytes: MirroredCounter::new("store.put_bytes"),
+                get_bytes: MirroredCounter::new("store.get_bytes"),
             }),
         }
     }
@@ -134,21 +136,17 @@ impl Store {
     /// Serialize and store at an explicit key.
     pub fn put_at<T: Encode>(&self, key: &str, obj: &T) -> Result<()> {
         let data = obj.to_bytes();
-        self.inner.puts.fetch_add(1, Ordering::Relaxed);
-        self.inner
-            .put_bytes
-            .fetch_add(data.len() as u64, Ordering::Relaxed);
+        self.inner.puts.incr();
+        self.inner.put_bytes.add(data.len() as u64);
         self.inner.connector.put(key, data)
     }
 
     /// Fetch and decode an object.
     pub fn get<T: Decode>(&self, key: &str) -> Result<Option<T>> {
-        self.inner.gets.fetch_add(1, Ordering::Relaxed);
+        self.inner.gets.incr();
         match self.inner.connector.get(key)? {
             Some(bytes) => {
-                self.inner
-                    .get_bytes
-                    .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                self.inner.get_bytes.add(bytes.len() as u64);
                 Ok(Some(T::from_bytes(&bytes)?))
             }
             None => Ok(None),
@@ -163,7 +161,7 @@ impl Store {
         key: &str,
         timeout: Option<Duration>,
     ) -> Result<Option<T>> {
-        self.inner.gets.fetch_add(1, Ordering::Relaxed);
+        self.inner.gets.incr();
         let handle = self.inner.connector.watch(key);
         let got = match timeout {
             None => Some(handle.wait()?),
@@ -171,9 +169,7 @@ impl Store {
         };
         match got {
             Some(bytes) => {
-                self.inner
-                    .get_bytes
-                    .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                self.inner.get_bytes.add(bytes.len() as u64);
                 Ok(Some(T::from_bytes(&bytes)?))
             }
             None => Ok(None),
@@ -187,7 +183,7 @@ impl Store {
     /// dedicated connection, no thread, and no poll tick on channels with
     /// a native watch.
     pub fn watch_async<T: Decode>(&self, key: &str) -> PendingGet<T> {
-        self.inner.gets.fetch_add(1, Ordering::Relaxed);
+        self.inner.gets.incr();
         let handle = ops::submit(
             &self.inner.connector,
             Op::Watch { key: key.to_string() },
@@ -210,8 +206,8 @@ impl Store {
             keys.push(key);
         }
         // Counters account per key / per byte, same as the single-key ops.
-        self.inner.puts.fetch_add(objs.len() as u64, Ordering::Relaxed);
-        self.inner.put_bytes.fetch_add(total, Ordering::Relaxed);
+        self.inner.puts.add(objs.len() as u64);
+        self.inner.put_bytes.add(total);
         self.inner.connector.put_many(items)?;
         Ok(keys)
     }
@@ -220,15 +216,13 @@ impl Store {
     /// (`None` = missing). Amortizes round trips the same way
     /// [`Store::put_many`] does.
     pub fn get_many<T: Decode>(&self, keys: &[String]) -> Result<Vec<Option<T>>> {
-        self.inner.gets.fetch_add(keys.len() as u64, Ordering::Relaxed);
+        self.inner.gets.add(keys.len() as u64);
         let blobs = self.inner.connector.get_many(keys)?;
         let mut out = Vec::with_capacity(blobs.len());
         for blob in blobs {
             match blob {
                 Some(bytes) => {
-                    self.inner
-                        .get_bytes
-                        .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                    self.inner.get_bytes.add(bytes.len() as u64);
                     out.push(Some(T::from_bytes(&bytes)?));
                 }
                 None => out.push(None),
@@ -252,7 +246,7 @@ impl Store {
     }
 
     pub fn evict(&self, key: &str) -> Result<()> {
-        self.inner.evicts.fetch_add(1, Ordering::Relaxed);
+        self.inner.evicts.incr();
         // Keep same-process semantics intuitive: an evicted key is gone.
         crate::proxy::cache::global()
             .invalidate(&self.inner.connector.desc().to_bytes(), key);
@@ -263,9 +257,7 @@ impl Store {
     /// channels, parallel per-shard sweep on the fabric) instead of a
     /// round trip per key. Proxy caches are invalidated like `evict`.
     pub fn evict_many(&self, keys: &[String]) -> Result<()> {
-        self.inner
-            .evicts
-            .fetch_add(keys.len() as u64, Ordering::Relaxed);
+        self.inner.evicts.add(keys.len() as u64);
         let desc = self.inner.connector.desc().to_bytes();
         for key in keys {
             crate::proxy::cache::global().invalidate(&desc, key);
@@ -282,10 +274,8 @@ impl Store {
     pub fn put_async<T: Encode>(&self, obj: &T) -> PendingWrite {
         let key = self.new_key();
         let data = obj.to_bytes();
-        self.inner.puts.fetch_add(1, Ordering::Relaxed);
-        self.inner
-            .put_bytes
-            .fetch_add(data.len() as u64, Ordering::Relaxed);
+        self.inner.puts.incr();
+        self.inner.put_bytes.add(data.len() as u64);
         let handle =
             ops::submit(&self.inner.connector, Op::Put { key: key.clone(), data });
         PendingWrite { key, handle, settled: Mutex::new(None) }
@@ -296,7 +286,7 @@ impl Store {
     /// overlapping resolution with compute (issue the get early, take the
     /// value where it's needed).
     pub fn get_async<T: Decode>(&self, key: &str) -> PendingGet<T> {
-        self.inner.gets.fetch_add(1, Ordering::Relaxed);
+        self.inner.gets.incr();
         let handle =
             ops::submit(&self.inner.connector, Op::Get { key: key.to_string() });
         PendingGet { store: self.clone(), handle, _marker: PhantomData }
@@ -349,11 +339,11 @@ impl Store {
     /// Counter snapshot.
     pub fn metrics(&self) -> StoreMetrics {
         StoreMetrics {
-            puts: self.inner.puts.load(Ordering::Relaxed),
-            gets: self.inner.gets.load(Ordering::Relaxed),
-            evicts: self.inner.evicts.load(Ordering::Relaxed),
-            put_bytes: self.inner.put_bytes.load(Ordering::Relaxed),
-            get_bytes: self.inner.get_bytes.load(Ordering::Relaxed),
+            puts: self.inner.puts.get(),
+            gets: self.inner.gets.get(),
+            evicts: self.inner.evicts.get(),
+            put_bytes: self.inner.put_bytes.get(),
+            get_bytes: self.inner.get_bytes.get(),
         }
     }
 }
@@ -462,10 +452,7 @@ impl<T: Decode> PendingGet<T> {
     pub fn wait(self) -> Result<Option<T>> {
         match self.handle.wait()?.into_value()? {
             Some(bytes) => {
-                self.store
-                    .inner
-                    .get_bytes
-                    .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                self.store.inner.get_bytes.add(bytes.len() as u64);
                 Ok(Some(T::from_bytes(&bytes)?))
             }
             None => Ok(None),

@@ -101,6 +101,19 @@ fn broker_shard_small_run() {
 }
 
 #[test]
+fn stats_small_run() {
+    let (ok, text) =
+        run(&["stats", "--shards", "2", "--keys", "16", "--size", "1024"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("put+get 16 objects, 16 hits"));
+    assert!(text.contains("snapshot fetched over the wire"));
+    assert!(text.contains("== telemetry snapshot =="));
+    assert!(text.contains("kv.client.ops"));
+    assert!(text.contains("kv.server.frames_in"));
+    assert!(text.contains("trace events"));
+}
+
+#[test]
 fn bad_option_value_fails_cleanly() {
     let (ok, text) = run(&["fig5", "--tasks", "many"]);
     assert!(!ok);
