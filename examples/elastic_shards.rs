@@ -15,6 +15,7 @@ use std::sync::Arc;
 
 use proxystore::codec::{Bytes, Decode, Encode};
 use proxystore::kv::{KvClient, KvServer};
+use proxystore::net::ServerBuilder;
 use proxystore::prelude::{Proxy, Store};
 use proxystore::shard::{ElasticShards, ShardMembers};
 use proxystore::store::ConnectorDesc;
@@ -24,7 +25,7 @@ fn main() -> proxystore::Result<()> {
     // 1. An elastic fabric over three real redis-sim servers.
     // ----------------------------------------------------------------
     let servers: Vec<KvServer> =
-        (0..3).map(|_| KvServer::spawn().expect("kv server")).collect();
+        (0..3).map(|_| ServerBuilder::new().spawn_kv().expect("kv server")).collect();
     let mut members: ShardMembers = Vec::new();
     for (id, s) in servers.iter().enumerate() {
         members.push((
@@ -52,7 +53,7 @@ fn main() -> proxystore::Result<()> {
     // ----------------------------------------------------------------
     // 2. Scale out: add a fourth server; only ~1/4 of the keys move.
     // ----------------------------------------------------------------
-    let extra = KvServer::spawn().expect("kv server");
+    let extra = ServerBuilder::new().spawn_kv().expect("kv server");
     elastic.add_shard(
         3,
         ConnectorDesc::TcpKv { addr: extra.addr.to_string() }.connect()?,

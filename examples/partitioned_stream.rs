@@ -13,6 +13,7 @@
 use std::time::Duration;
 
 use proxystore::broker::{BrokerFabric, BrokerServer};
+use proxystore::net::ServerBuilder;
 use proxystore::prelude::{Store, StreamConsumer, StreamProducer};
 use proxystore::stream::{
     Metadata, PartitionedLogPublisher, PartitionedLogSubscriber,
@@ -23,7 +24,7 @@ fn main() -> proxystore::Result<()> {
     // 1. A fabric over three real broker servers, eight partitions.
     // ----------------------------------------------------------------
     let servers: Vec<BrokerServer> = (0..3)
-        .map(|_| BrokerServer::spawn().expect("broker server"))
+        .map(|_| ServerBuilder::new().spawn_broker().expect("broker server"))
         .collect();
     let addrs: Vec<_> = servers.iter().map(|s| s.addr).collect();
     let fabric = BrokerFabric::connect(&addrs, 8)?;

@@ -5,13 +5,14 @@
 
 use std::time::Instant;
 
-use proxystore::kv::{KvClient, KvServer};
+use proxystore::kv::KvClient;
+use proxystore::net::ServerBuilder;
 use proxystore::ops::Op;
 use proxystore::prelude::Store;
 use proxystore::store::TcpKvConnector;
 
 fn main() -> proxystore::Result<()> {
-    let server = KvServer::spawn()?;
+    let server = ServerBuilder::new().spawn_kv()?;
 
     // ----------------------------------------------------------------
     // 1. Raw pipelining: submit a window, then wait. Every op is on the

@@ -17,17 +17,24 @@
 //! `Store::watch_async`, and the `when_all`/`when_any` joins) over the
 //! park-in-place `wait_get`; see `examples/distributed_futures.rs`.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use proxystore::codec::Encode;
 use proxystore::error::Result;
+use proxystore::net::ServerBuilder;
 use proxystore::ownership::{borrow, StoreOwnedExt};
 use proxystore::prelude::{Proxy, ProxyFuture, Store};
+use proxystore::store::TcpKvConnector;
 
 fn main() -> Result<()> {
-    // A Store wraps a mediated channel (here: in-process shared memory;
-    // swap in TcpKvConnector for a real redis-sim server).
-    let store = Store::memory("quickstart");
+    // A Store wraps a mediated channel. Here: a real in-process redis-sim
+    // server (event-driven epoll ingress on Linux, threaded elsewhere —
+    // see `ServerBuilder::ingress`) behind a pipelined TCP connector.
+    // `Store::memory("quickstart")` is the zero-socket alternative.
+    let server = ServerBuilder::new().spawn_kv()?;
+    let store =
+        Store::new("quickstart", Arc::new(TcpKvConnector::connect(server.addr)?));
 
     // ----------------------------------------------------------------
     // 1. Transparent lazy proxies: pass-by-reference that resolves

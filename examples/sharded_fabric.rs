@@ -13,6 +13,7 @@ use std::sync::Arc;
 
 use proxystore::codec::{Bytes, Decode, Encode};
 use proxystore::kv::KvServer;
+use proxystore::net::ServerBuilder;
 use proxystore::prelude::{prefetch, Proxy, Store};
 use proxystore::shard::{ShardedConnector, ShardedDesc};
 use proxystore::store::{Connector, ConnectorDesc};
@@ -22,7 +23,7 @@ fn main() -> proxystore::Result<()> {
     // 1. A fabric over four real redis-sim servers.
     // ----------------------------------------------------------------
     let servers: Vec<KvServer> =
-        (0..4).map(|_| KvServer::spawn().expect("kv server")).collect();
+        (0..4).map(|_| ServerBuilder::new().spawn_kv().expect("kv server")).collect();
     let desc = ShardedDesc::new(
         servers
             .iter()

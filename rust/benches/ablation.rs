@@ -17,7 +17,7 @@ use proxystore::codec::{Bytes, Encode};
 use proxystore::engine::{ClusterConfig, LocalCluster, StoreExecutor};
 use proxystore::engine::TaskArg;
 use proxystore::futures::ProxyFuture;
-use proxystore::kv::KvServer;
+use proxystore::net::ServerBuilder;
 use proxystore::metrics::Stats;
 use proxystore::prelude::Store;
 use proxystore::store::{Connector, FileConnector, TcpKvConnector};
@@ -30,7 +30,7 @@ fn main() {
     // ------------------------------------------------------------------
     // 1) Future rendezvous: parked WaitGet vs polling.
     // ------------------------------------------------------------------
-    let server = KvServer::spawn().unwrap();
+    let server = ServerBuilder::new().spawn_kv().unwrap();
     let parked_store = Store::new(
         "park",
         Arc::new(TcpKvConnector::connect(server.addr).unwrap()),

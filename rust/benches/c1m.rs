@@ -1,0 +1,310 @@
+//! C1M-style ingress bench: event-loop vs threaded server ingress.
+//!
+//! Three measurements, all against real TCP servers in-process:
+//!
+//! 1. **Throughput at 64 connections** — both ingress modes serve the
+//!    same pipelined+coalesced driver fleet; the event loop must match
+//!    or beat thread-per-connection on ops/s (gate: >= 0.9x).
+//! 2. **Idle-connection sustain** (event only) — ramp thousands of raw
+//!    sockets, hold them open, and verify the process thread count
+//!    stays bounded while a driver client still gets served. This is
+//!    the scenario thread-per-connection cannot survive: 10k parked
+//!    connections would mean 10k OS threads.
+//! 3. **Wake-to-notify latency** — arm a batch of watches, satisfy
+//!    them with `mput`, and report the server-side
+//!    `watch.wake_to_notify_us` histogram (armed-watch wake to Notify
+//!    frame buffered on the event loop).
+//!
+//! Scale tiers (`PROXYSTORE_BENCH_SCALE`): smoke sustains 1k idle
+//! connections, default 10k, full 20k. The fd limit is raised
+//! best-effort via [`raise_nofile_limit`]; the idle target is clamped
+//! to what the limit actually allows so a locked-down container
+//! degrades gracefully instead of erroring out.
+
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use proxystore::benchlib::{once, Bench, Scale};
+use proxystore::codec::Bytes;
+use proxystore::kv::{
+    read_frame, write_frame, ClientOptions, KvClient, Request, Response,
+};
+use proxystore::net::{raise_nofile_limit, Ingress, ServerBuilder};
+use proxystore::ops::Op;
+
+/// Driver threads for the throughput section; 64 connections split
+/// evenly across them.
+const DRIVERS: usize = 8;
+const CONNS: usize = 64;
+/// In-flight ops per driver thread before draining completions.
+const WINDOW: usize = 64;
+/// Threads used to ramp up the idle-connection herd.
+const RAMPERS: usize = 8;
+
+fn mode_name(ingress: Ingress) -> &'static str {
+    match ingress {
+        Ingress::Threaded => "threaded",
+        Ingress::EventLoop => "event",
+    }
+}
+
+/// Total ops/s for `CONNS` pipelined clients driving one server.
+fn throughput(ingress: Ingress, ops_per_conn: usize) -> f64 {
+    let server = ServerBuilder::new()
+        .ingress(ingress)
+        .spawn_kv()
+        .expect("kv server");
+    let addr = server.addr;
+    let per_driver = CONNS / DRIVERS;
+    let (_, secs) = once(|| {
+        let drivers: Vec<_> = (0..DRIVERS)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let clients: Vec<KvClient> = (0..per_driver)
+                        .map(|_| {
+                            KvClient::connect_with(
+                                addr,
+                                ClientOptions::coalescing(),
+                            )
+                            .expect("driver client")
+                        })
+                        .collect();
+                    let payload = vec![7u8; 64];
+                    let mut handles = Vec::with_capacity(WINDOW + CONNS);
+                    for i in 0..ops_per_conn {
+                        for (c, client) in clients.iter().enumerate() {
+                            handles.push(client.submit_op(Op::Put {
+                                key: format!("k-{t}-{c}-{}", i % 8),
+                                data: payload.clone(),
+                            }));
+                            if handles.len() >= WINDOW {
+                                for h in handles.drain(..) {
+                                    h.wait()
+                                        .expect("put")
+                                        .into_unit()
+                                        .expect("unit");
+                                }
+                            }
+                        }
+                    }
+                    for h in handles {
+                        h.wait().expect("put").into_unit().expect("unit");
+                    }
+                })
+            })
+            .collect();
+        for d in drivers {
+            d.join().expect("driver thread");
+        }
+    });
+    (CONNS * ops_per_conn) as f64 / secs
+}
+
+/// Open `target` raw connections, prove each is live with one
+/// Ping/Pong round trip, and hand the sockets back so the caller can
+/// keep them parked. Stops early (gracefully) if the fd limit bites.
+fn ramp_idle(addr: SocketAddr, target: usize) -> Vec<TcpStream> {
+    let chunk = target / RAMPERS;
+    let ramps: Vec<_> = (0..RAMPERS)
+        .map(|r| {
+            let want = if r == 0 { target - chunk * (RAMPERS - 1) } else { chunk };
+            std::thread::spawn(move || {
+                let mut streams = Vec::with_capacity(want);
+                for _ in 0..want {
+                    let mut s = match TcpStream::connect(addr) {
+                        Ok(s) => s,
+                        Err(_) => break,
+                    };
+                    let _ = s.set_read_timeout(Some(Duration::from_secs(10)));
+                    if write_frame(&mut s, &Request::Ping).is_err() {
+                        break;
+                    }
+                    match read_frame::<_, Response>(&mut s) {
+                        Ok(Some(_)) => streams.push(s),
+                        _ => break,
+                    }
+                }
+                streams
+            })
+        })
+        .collect();
+    let mut idle = Vec::with_capacity(target);
+    for r in ramps {
+        idle.extend(r.join().expect("ramp thread"));
+    }
+    idle
+}
+
+/// `Threads:` line from /proc/self/status (0 where unavailable).
+fn process_threads() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("Threads:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(0)
+}
+
+fn main() {
+    let scale = Scale::from_env();
+    let ops_per_conn = scale.pick(64, 256, 1024);
+    let mut idle_target = scale.pick(1_000, 10_000, 20_000);
+    let n_watch = scale.pick(256, 1024, 4096);
+
+    let mut bench = Bench::new("c1m", "section,metric,value");
+
+    if !cfg!(target_os = "linux") {
+        bench.note("event ingress requires Linux; bench skipped");
+        bench.finish();
+        return;
+    }
+
+    match raise_nofile_limit(65_536) {
+        Ok(limit) => {
+            bench.note(&format!("fd limit: {limit}"));
+            // Idle sockets + server-side fds + driver clients all draw
+            // from the same budget; leave headroom for everything else.
+            let room = (limit as usize / 2).saturating_sub(256);
+            if room < idle_target {
+                bench.note(&format!(
+                    "fd limit clamps idle target {idle_target} -> {room}"
+                ));
+                idle_target = room.max(64);
+            }
+        }
+        Err(e) => bench.note(&format!("raise_nofile_limit failed: {e}")),
+    }
+
+    // ---- 1. Throughput at 64 connections, both ingress modes --------
+    let mut ops = [0.0f64; 2];
+    for (slot, ingress) in
+        [Ingress::Threaded, Ingress::EventLoop].into_iter().enumerate()
+    {
+        throughput(ingress, 8); // warm: first-touch, thread spawn, paging
+        let o = throughput(ingress, ops_per_conn);
+        bench.row(format!(
+            "throughput_{CONNS}conns,{}_ops_s,{o:.0}",
+            mode_name(ingress)
+        ));
+        ops[slot] = o;
+    }
+    let ratio = ops[1] / ops[0];
+    bench.row(format!("throughput_{CONNS}conns,event_over_threaded,{ratio:.2}"));
+    bench.compare(
+        &format!("event ingress ops/s at {CONNS} conns vs threaded"),
+        ">=0.9x",
+        &format!("{ratio:.2}x"),
+        ratio >= 0.9,
+    );
+
+    // ---- 2. Idle-connection sustain on the event loop ---------------
+    {
+        let server = ServerBuilder::new()
+            .ingress(Ingress::EventLoop)
+            .spawn_kv()
+            .expect("kv server");
+        let (idle, ramp_secs) = once(|| ramp_idle(server.addr, idle_target));
+        let achieved = idle.len();
+        let threads = process_threads();
+        bench.row(format!("sustain,idle_conns_target,{idle_target}"));
+        bench.row(format!("sustain,idle_conns_achieved,{achieved}"));
+        bench.row(format!(
+            "sustain,ramp_conns_per_s,{:.0}",
+            achieved as f64 / ramp_secs
+        ));
+        bench.row(format!("sustain,process_threads,{threads}"));
+
+        // The server must still serve live traffic with the herd parked.
+        let driver = KvClient::connect(server.addr).expect("driver");
+        let (_, secs) = once(|| {
+            let mut handles = Vec::with_capacity(WINDOW);
+            for i in 0..2048usize {
+                handles.push(driver.submit_op(Op::Put {
+                    key: format!("live-{}", i % 8),
+                    data: vec![9u8; 64],
+                }));
+                if handles.len() == WINDOW {
+                    for h in handles.drain(..) {
+                        h.wait().expect("put").into_unit().expect("unit");
+                    }
+                }
+            }
+            for h in handles {
+                h.wait().expect("put").into_unit().expect("unit");
+            }
+        });
+        bench.row(format!(
+            "sustain,driver_ops_s_under_idle_load,{:.0}",
+            2048.0 / secs
+        ));
+
+        bench.compare(
+            &format!("idle connections sustained (target {idle_target})"),
+            &format!(">={idle_target}"),
+            &achieved.to_string(),
+            achieved >= idle_target,
+        );
+        bench.compare(
+            &format!("process threads bounded with {achieved} idle conns"),
+            "<=64",
+            &threads.to_string(),
+            threads > 0 && threads <= 64,
+        );
+        drop(idle);
+    }
+
+    // ---- 3. Wake-to-notify latency over the event loop --------------
+    {
+        let server = ServerBuilder::new()
+            .ingress(Ingress::EventLoop)
+            .spawn_kv()
+            .expect("kv server");
+        let watcher = KvClient::connect(server.addr).expect("watcher");
+        let setter = KvClient::connect(server.addr).expect("setter");
+
+        let before = proxystore::metrics::telemetry::snapshot()
+            .histogram("watch.wake_to_notify_us")
+            .map(|h| h.count)
+            .unwrap_or(0);
+
+        let handles: Vec<_> =
+            (0..n_watch).map(|i| watcher.watch(&format!("w-{i}"))).collect();
+        // Pipelined FIFO: a ping response proves every Watch before it
+        // was armed server-side.
+        watcher.ping().expect("arm barrier");
+
+        let mut start = 0usize;
+        while start < n_watch {
+            let end = (start + 256).min(n_watch);
+            let items: Vec<(String, Bytes)> = (start..end)
+                .map(|i| (format!("w-{i}"), Bytes(vec![1u8; 32])))
+                .collect();
+            setter.mput(items).expect("mput");
+            start = end;
+        }
+        for h in handles {
+            h.wait().expect("notify");
+        }
+
+        let snap = proxystore::metrics::telemetry::snapshot();
+        let wake = snap.histogram("watch.wake_to_notify_us");
+        let fired = wake.map(|h| h.count - before).unwrap_or(0);
+        let (p50, p99) = wake
+            .map(|h| (h.percentile(50.0), h.percentile(99.0)))
+            .unwrap_or((0.0, 0.0));
+        bench.row(format!("wake,notifies,{fired}"));
+        bench.row(format!("wake,p50_us,{p50:.1}"));
+        bench.row(format!("wake,p99_us,{p99:.1}"));
+        bench.compare(
+            &format!("every armed watch notified ({n_watch} watches)"),
+            &format!(">={n_watch}"),
+            &fired.to_string(),
+            fired >= n_watch as u64,
+        );
+    }
+
+    bench.finish();
+}

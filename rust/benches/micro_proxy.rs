@@ -10,7 +10,7 @@ use std::time::Duration;
 
 use proxystore::benchlib::{fmt_bytes, fmt_secs, sample, Bench, Scale};
 use proxystore::codec::{Bytes, Decode, Encode};
-use proxystore::kv::KvServer;
+use proxystore::net::ServerBuilder;
 use proxystore::netsim::Link;
 use proxystore::prelude::{Proxy, Store};
 use proxystore::store::{TcpKvConnector, ThrottledConnector};
@@ -106,7 +106,7 @@ fn main() {
     println!("  factory encode:           mean {}", fmt_secs(s.mean));
 
     // KV server round-trip over TCP.
-    let server = KvServer::spawn().unwrap();
+    let server = ServerBuilder::new().spawn_kv().unwrap();
     let kv_store = Store::new(
         "micro-kv",
         Arc::new(TcpKvConnector::connect(server.addr).unwrap()),

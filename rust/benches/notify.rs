@@ -17,7 +17,8 @@ use std::time::{Duration, Instant};
 
 use proxystore::benchlib::{fmt_secs, Bench, Scale};
 use proxystore::codec::Bytes;
-use proxystore::kv::{KvClient, KvServer};
+use proxystore::kv::KvClient;
+use proxystore::net::ServerBuilder;
 use proxystore::store::{
     Blob, Connector, ConnectorDesc, MemoryConnector, TcpKvConnector,
 };
@@ -98,7 +99,7 @@ fn main() {
     let mem_avg = avg_wake(&mem, "mem", rounds);
     bench.row(format!("watch-memory,{mem_avg:.6},{rounds}"));
 
-    let server = KvServer::spawn().expect("kv server");
+    let server = ServerBuilder::new().spawn_kv().expect("kv server");
     let tcp: Arc<dyn Connector> =
         Arc::new(TcpKvConnector::connect(server.addr).expect("connect"));
     let tcp_avg = avg_wake(&tcp, "tcp", rounds);

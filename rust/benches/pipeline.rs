@@ -10,7 +10,8 @@
 
 use proxystore::benchlib::{once, Bench, Scale};
 use proxystore::codec::Bytes;
-use proxystore::kv::{KvClient, KvServer};
+use proxystore::kv::KvClient;
+use proxystore::net::ServerBuilder;
 use proxystore::ops::Op;
 
 const WINDOW: usize = 64;
@@ -93,7 +94,7 @@ fn main() {
     let n_ops = scale.pick(1024, 8192, 32768);
     let sizes: &[usize] = &[64, 1024];
 
-    let server = KvServer::spawn().expect("kv server");
+    let server = ServerBuilder::new().spawn_kv().expect("kv server");
     let client = KvClient::connect(server.addr).expect("client");
 
     let mut bench = Bench::new(

@@ -10,7 +10,8 @@
 //! 5% of disabled (best-of-N, modes interleaved so drift hits both).
 
 use proxystore::benchlib::{once, Bench, Scale};
-use proxystore::kv::{KvClient, KvServer};
+use proxystore::kv::KvClient;
+use proxystore::net::ServerBuilder;
 use proxystore::metrics::telemetry;
 use proxystore::ops::Op;
 
@@ -55,7 +56,7 @@ fn main() {
     let reps = scale.pick(3, 5, 7);
     let payload = vec![7u8; 256];
 
-    let server = KvServer::spawn().expect("kv server");
+    let server = ServerBuilder::new().spawn_kv().expect("kv server");
     let client = KvClient::connect(server.addr).expect("client");
 
     let mut bench = Bench::new("telemetry", "mode,best_ops_s");

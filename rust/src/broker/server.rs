@@ -1,67 +1,58 @@
 //! TCP front-end + client for the broker engine.
+//!
+//! Like the KV server, the broker spawns through the unified
+//! [`ServerBuilder`] with two ingress modes: event-driven (default on
+//! Linux — an epoll reactor pool multiplexing every consumer) and
+//! thread-per-connection. Long-poll fetches never park a loop thread:
+//! the service *probes* with a zero timeout (fetch is read-only, so the
+//! probe is free) and defers only genuinely empty polls to a helper
+//! thread that completes through the connection's [`ConnHandle`].
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::codec::Bytes;
+use crate::codec::{Bytes, Decode, Encode};
 use crate::error::{Error, Result};
 use crate::kv::{read_frame, write_frame};
+use crate::net::{
+    ConnHandle, EventLoopPool, FrameOutcome, Ingress, NoState, ServerBuilder,
+    Service,
+};
 
 use super::state::{BrokerState, FetchReq, LogEntry};
 use super::{BrokerRequest, BrokerResponse};
+
+/// The running ingress machinery behind a [`BrokerServer`].
+enum IngressHandle {
+    Threaded {
+        accept_thread: Option<std::thread::JoinHandle<()>>,
+        /// Live connection sockets, force-closed on shutdown.
+        conns: Arc<Mutex<Vec<TcpStream>>>,
+    },
+    Event(EventLoopPool),
+}
 
 /// A running broker server. Dropping the handle shuts it down.
 pub struct BrokerServer {
     pub addr: SocketAddr,
     state: BrokerState,
     stop: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
+    ingress: IngressHandle,
 }
 
 impl BrokerServer {
+    /// Bind to 127.0.0.1 on an ephemeral port and start serving.
+    #[deprecated(note = "use ServerBuilder::new().spawn_broker()")]
     pub fn spawn() -> Result<BrokerServer> {
-        Self::spawn_with_state(BrokerState::new())
+        ServerBuilder::new().spawn_broker()
     }
 
+    /// Serve an externally created state.
+    #[deprecated(note = "use ServerBuilder::new().with_state(state).spawn()")]
     pub fn spawn_with_state(state: BrokerState) -> Result<BrokerServer> {
-        let listener = TcpListener::bind("127.0.0.1:0")?;
-        let addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let state2 = state.clone();
-        let accept_thread = std::thread::Builder::new()
-            .name(format!("broker-accept-{}", addr.port()))
-            .spawn(move || {
-                while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let st = state2.clone();
-                            std::thread::Builder::new()
-                                .name("broker-conn".into())
-                                .spawn(move || {
-                                    let _ = serve_connection(stream, st);
-                                })
-                                .expect("spawn broker-conn");
-                        }
-                        Err(ref e)
-                            if e.kind() == std::io::ErrorKind::WouldBlock =>
-                        {
-                            std::thread::sleep(Duration::from_millis(2));
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })
-            .expect("spawn broker-accept");
-        Ok(BrokerServer {
-            addr,
-            state,
-            stop,
-            accept_thread: Some(accept_thread),
-        })
+        ServerBuilder::new().with_state(state).spawn()
     }
 
     pub fn state(&self) -> &BrokerState {
@@ -70,8 +61,18 @@ impl BrokerServer {
 
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.accept_thread.take() {
-            let _ = h.join();
+        match &mut self.ingress {
+            IngressHandle::Threaded { accept_thread, conns } => {
+                // Unblock the blocking accept; the loop re-checks `stop`.
+                let _ = TcpStream::connect(self.addr);
+                for conn in conns.lock().unwrap().drain(..) {
+                    let _ = conn.shutdown(std::net::Shutdown::Both);
+                }
+                if let Some(h) = accept_thread.take() {
+                    let _ = h.join();
+                }
+            }
+            IngressHandle::Event(pool) => pool.shutdown(),
         }
     }
 }
@@ -82,71 +83,279 @@ impl Drop for BrokerServer {
     }
 }
 
-fn serve_connection(stream: TcpStream, state: BrokerState) -> Result<()> {
-    stream.set_nodelay(true)?;
-    let mut reader = std::io::BufReader::with_capacity(1 << 18, stream.try_clone()?);
-    let mut writer = std::io::BufWriter::with_capacity(1 << 18, stream);
-    loop {
-        let req: Option<BrokerRequest> = read_frame(&mut reader)?;
-        let Some(req) = req else { return Ok(()) };
-        let resp = match req {
-            BrokerRequest::Produce { topic, payload } => {
-                BrokerResponse::Offset(state.produce(&topic, payload))
+impl ServerBuilder<BrokerState> {
+    /// Spawn a broker server serving this builder's state.
+    pub fn spawn(self) -> Result<BrokerServer> {
+        spawn_broker_server(self)
+    }
+}
+
+impl ServerBuilder<NoState> {
+    /// Spawn a broker server with fresh state.
+    pub fn spawn_broker(self) -> Result<BrokerServer> {
+        self.with_state(BrokerState::new()).spawn()
+    }
+}
+
+fn spawn_broker_server(b: ServerBuilder<BrokerState>) -> Result<BrokerServer> {
+    let stop = Arc::new(AtomicBool::new(false));
+    match b.ingress {
+        Ingress::EventLoop => {
+            let service =
+                Arc::new(BrokerEventService { state: b.state.clone() });
+            let pool = EventLoopPool::spawn(
+                b.bind,
+                b.event_loops,
+                b.max_connections,
+                service,
+                "broker",
+            )?;
+            Ok(BrokerServer {
+                addr: pool.addr,
+                state: b.state,
+                stop,
+                ingress: IngressHandle::Event(pool),
+            })
+        }
+        Ingress::Threaded => spawn_threaded(b, stop),
+    }
+}
+
+fn spawn_threaded(
+    b: ServerBuilder<BrokerState>,
+    stop: Arc<AtomicBool>,
+) -> Result<BrokerServer> {
+    let listener = TcpListener::bind(b.bind)?;
+    let addr = listener.local_addr()?;
+    let state = b.state;
+    let max_connections = b.max_connections;
+    let stop2 = stop.clone();
+    let state2 = state.clone();
+    let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+    let conns2 = conns.clone();
+    let active = Arc::new(AtomicUsize::new(0));
+    // Blocking accept (no busy-wait): `shutdown` sets the stop flag and
+    // pokes the listener with a throwaway connection to unblock it.
+    let accept_thread = std::thread::Builder::new()
+        .name(format!("broker-accept-{}", addr.port()))
+        .spawn(move || loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    if max_connections > 0
+                        && active.load(Ordering::Relaxed) >= max_connections
+                    {
+                        drop(stream); // over the cap
+                        continue;
+                    }
+                    active.fetch_add(1, Ordering::Relaxed);
+                    if let Ok(clone) = stream.try_clone() {
+                        conns2.lock().unwrap().push(clone);
+                    }
+                    let st = state2.clone();
+                    let active2 = active.clone();
+                    std::thread::Builder::new()
+                        .name("broker-conn".into())
+                        .spawn(move || {
+                            let _ = serve_connection(stream, st);
+                            active2.fetch_sub(1, Ordering::Relaxed);
+                        })
+                        .expect("spawn broker-conn");
+                }
+                Err(_) => {
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                }
             }
+        })
+        .expect("spawn broker-accept");
+    Ok(BrokerServer {
+        addr,
+        state,
+        stop,
+        ingress: IngressHandle::Threaded {
+            accept_thread: Some(accept_thread),
+            conns,
+        },
+    })
+}
+
+/// Execute one broker request against the engine (the shared core of
+/// both ingress modes). Fetches block up to their own timeout — callers
+/// that must not park (the event loop) probe first and defer.
+fn handle_broker_request(
+    state: &BrokerState,
+    req: BrokerRequest,
+) -> BrokerResponse {
+    match req {
+        BrokerRequest::Produce { topic, payload } => {
+            BrokerResponse::Offset(state.produce(&topic, payload))
+        }
+        BrokerRequest::Fetch { topic, offset, max, timeout_ms } => {
+            BrokerResponse::Entries(state.fetch(
+                &topic,
+                offset,
+                max,
+                Duration::from_millis(timeout_ms),
+            ))
+        }
+        BrokerRequest::Commit { group, topic, offset } => {
+            state.commit(&group, &topic, offset);
+            BrokerResponse::Ok
+        }
+        BrokerRequest::Committed { group, topic } => {
+            BrokerResponse::Offset(state.committed(&group, &topic))
+        }
+        BrokerRequest::EndOffset { topic } => {
+            BrokerResponse::Offset(state.end_offset(&topic))
+        }
+        BrokerRequest::Topics => BrokerResponse::TopicList(state.topics()),
+        BrokerRequest::Ping => BrokerResponse::Ok,
+        BrokerRequest::ProducePart { topic, partition, payload } => {
+            BrokerResponse::Offset(state.produce_to(&topic, partition, payload))
+        }
+        BrokerRequest::ProduceMany { topic, partition, payloads } => {
+            BrokerResponse::Offsets(state.produce_many(
+                &topic, partition, payloads,
+            ))
+        }
+        BrokerRequest::FetchPart { topic, partition, offset, max, timeout_ms } => {
+            BrokerResponse::Entries(state.fetch_from(
+                &topic,
+                partition,
+                offset,
+                max,
+                Duration::from_millis(timeout_ms),
+            ))
+        }
+        BrokerRequest::FetchMany { reqs, timeout_ms } => {
+            BrokerResponse::Batches(
+                state.fetch_many(&reqs, Duration::from_millis(timeout_ms)),
+            )
+        }
+        BrokerRequest::CommitPart { group, topic, partition, offset } => {
+            state.commit_part(&group, &topic, partition, offset);
+            BrokerResponse::Ok
+        }
+        BrokerRequest::CommittedPart { group, topic, partition } => {
+            BrokerResponse::Offset(state.committed_part(
+                &group, &topic, partition,
+            ))
+        }
+        BrokerRequest::EndOffsetPart { topic, partition } => {
+            BrokerResponse::Offset(state.end_offset_of(&topic, partition))
+        }
+        BrokerRequest::Partitions { topic } => {
+            BrokerResponse::PartitionList(state.partitions(&topic))
+        }
+    }
+}
+
+/// Broker protocol logic on the reactor.
+struct BrokerEventService {
+    state: BrokerState,
+}
+
+impl BrokerEventService {
+    /// Run a long-poll fetch on a helper thread; the reply re-enters the
+    /// loop via [`ConnHandle::complete`].
+    fn defer(&self, conn: &ConnHandle, req: BrokerRequest) -> FrameOutcome {
+        let state = self.state.clone();
+        let handle = conn.clone();
+        let spawned = std::thread::Builder::new()
+            .name("broker-park".into())
+            .spawn(move || {
+                let resp = handle_broker_request(&state, req);
+                handle.complete(resp.to_bytes());
+            });
+        match spawned {
+            Ok(_) => FrameOutcome::Deferred,
+            Err(_) => FrameOutcome::Close,
+        }
+    }
+}
+
+impl Service for BrokerEventService {
+    fn on_frame(&self, conn: &ConnHandle, body: Vec<u8>) -> FrameOutcome {
+        let req = match BrokerRequest::from_bytes(&body) {
+            Ok(req) => req,
+            Err(_) => return FrameOutcome::Close,
+        };
+        // Fetches are read-only, so a zero-timeout probe answers
+        // non-empty polls inline; only an empty long poll pays for a
+        // parked helper thread.
+        match req {
             BrokerRequest::Fetch { topic, offset, max, timeout_ms } => {
-                BrokerResponse::Entries(state.fetch(
-                    &topic,
-                    offset,
-                    max,
-                    Duration::from_millis(timeout_ms),
-                ))
+                let entries =
+                    self.state.fetch(&topic, offset, max, Duration::ZERO);
+                if !entries.is_empty() || timeout_ms == 0 {
+                    return FrameOutcome::Reply(
+                        BrokerResponse::Entries(entries).to_bytes(),
+                    );
+                }
+                self.defer(
+                    conn,
+                    BrokerRequest::Fetch { topic, offset, max, timeout_ms },
+                )
             }
-            BrokerRequest::Commit { group, topic, offset } => {
-                state.commit(&group, &topic, offset);
-                BrokerResponse::Ok
-            }
-            BrokerRequest::Committed { group, topic } => {
-                BrokerResponse::Offset(state.committed(&group, &topic))
-            }
-            BrokerRequest::EndOffset { topic } => {
-                BrokerResponse::Offset(state.end_offset(&topic))
-            }
-            BrokerRequest::Topics => BrokerResponse::TopicList(state.topics()),
-            BrokerRequest::Ping => BrokerResponse::Ok,
-            BrokerRequest::ProducePart { topic, partition, payload } => {
-                BrokerResponse::Offset(state.produce_to(&topic, partition, payload))
-            }
-            BrokerRequest::ProduceMany { topic, partition, payloads } => {
-                BrokerResponse::Offsets(state.produce_many(&topic, partition, payloads))
-            }
-            BrokerRequest::FetchPart { topic, partition, offset, max, timeout_ms } => {
-                BrokerResponse::Entries(state.fetch_from(
+            BrokerRequest::FetchPart {
+                topic,
+                partition,
+                offset,
+                max,
+                timeout_ms,
+            } => {
+                let entries = self.state.fetch_from(
                     &topic,
                     partition,
                     offset,
                     max,
-                    Duration::from_millis(timeout_ms),
-                ))
-            }
-            BrokerRequest::FetchMany { reqs, timeout_ms } => {
-                BrokerResponse::Batches(
-                    state.fetch_many(&reqs, Duration::from_millis(timeout_ms)),
+                    Duration::ZERO,
+                );
+                if !entries.is_empty() || timeout_ms == 0 {
+                    return FrameOutcome::Reply(
+                        BrokerResponse::Entries(entries).to_bytes(),
+                    );
+                }
+                self.defer(
+                    conn,
+                    BrokerRequest::FetchPart {
+                        topic,
+                        partition,
+                        offset,
+                        max,
+                        timeout_ms,
+                    },
                 )
             }
-            BrokerRequest::CommitPart { group, topic, partition, offset } => {
-                state.commit_part(&group, &topic, partition, offset);
-                BrokerResponse::Ok
+            BrokerRequest::FetchMany { reqs, timeout_ms } => {
+                let batches = self.state.fetch_many(&reqs, Duration::ZERO);
+                if batches.iter().any(|b| !b.is_empty()) || timeout_ms == 0 {
+                    return FrameOutcome::Reply(
+                        BrokerResponse::Batches(batches).to_bytes(),
+                    );
+                }
+                self.defer(conn, BrokerRequest::FetchMany { reqs, timeout_ms })
             }
-            BrokerRequest::CommittedPart { group, topic, partition } => {
-                BrokerResponse::Offset(state.committed_part(&group, &topic, partition))
-            }
-            BrokerRequest::EndOffsetPart { topic, partition } => {
-                BrokerResponse::Offset(state.end_offset_of(&topic, partition))
-            }
-            BrokerRequest::Partitions { topic } => {
-                BrokerResponse::PartitionList(state.partitions(&topic))
-            }
-        };
+            other => FrameOutcome::Reply(
+                handle_broker_request(&self.state, other).to_bytes(),
+            ),
+        }
+    }
+}
+
+fn serve_connection(stream: TcpStream, state: BrokerState) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let mut reader =
+        std::io::BufReader::with_capacity(1 << 18, stream.try_clone()?);
+    let mut writer = std::io::BufWriter::with_capacity(1 << 18, stream);
+    loop {
+        let req: Option<BrokerRequest> = read_frame(&mut reader)?;
+        let Some(req) = req else { return Ok(()) };
+        let resp = handle_broker_request(&state, req);
         write_frame(&mut writer, &resp)?;
     }
 }
@@ -391,7 +600,7 @@ mod tests {
 
     #[test]
     fn produce_fetch_over_tcp() {
-        let server = BrokerServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_broker().unwrap();
         let c = BrokerClient::connect(server.addr).unwrap();
         c.ping().unwrap();
         assert_eq!(c.produce("t", Bytes(vec![1])).unwrap(), 0);
@@ -405,7 +614,7 @@ mod tests {
 
     #[test]
     fn long_poll_across_clients() {
-        let server = BrokerServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_broker().unwrap();
         let addr = server.addr;
         let h = std::thread::spawn(move || {
             let c = BrokerClient::connect(addr).unwrap();
@@ -420,8 +629,38 @@ mod tests {
     }
 
     #[test]
-    fn partitioned_ops_over_tcp() {
+    fn threaded_ingress_produce_and_long_poll() {
+        let server = ServerBuilder::new()
+            .ingress(Ingress::Threaded)
+            .spawn_broker()
+            .unwrap();
+        let addr = server.addr;
+        let h = std::thread::spawn(move || {
+            let c = BrokerClient::connect(addr).unwrap();
+            c.fetch("t", 0, 1, Duration::from_secs(5)).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        let p = BrokerClient::connect(server.addr).unwrap();
+        p.produce("t", Bytes(vec![7])).unwrap();
+        assert_eq!(h.join().unwrap().len(), 1);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_spawn_shims_still_work() {
         let server = BrokerServer::spawn().unwrap();
+        let c = BrokerClient::connect(server.addr).unwrap();
+        c.ping().unwrap();
+        let state = BrokerState::new();
+        state.produce("pre", Bytes(vec![1]));
+        let server2 = BrokerServer::spawn_with_state(state).unwrap();
+        let c2 = BrokerClient::connect(server2.addr).unwrap();
+        assert_eq!(c2.end_offset("pre").unwrap(), 1);
+    }
+
+    #[test]
+    fn partitioned_ops_over_tcp() {
+        let server = ServerBuilder::new().spawn_broker().unwrap();
         let c = BrokerClient::connect(server.addr).unwrap();
         assert_eq!(c.produce_to("t", 2, Bytes(vec![1])).unwrap(), 0);
         assert_eq!(
@@ -456,7 +695,7 @@ mod tests {
 
     #[test]
     fn consumer_group_commits() {
-        let server = BrokerServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_broker().unwrap();
         let c = BrokerClient::connect(server.addr).unwrap();
         assert_eq!(c.committed("g", "t").unwrap(), 0);
         c.commit("g", "t", 3).unwrap();
@@ -465,7 +704,7 @@ mod tests {
 
     #[test]
     fn multi_consumer_sees_same_order() {
-        let server = BrokerServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_broker().unwrap();
         let p = BrokerClient::connect(server.addr).unwrap();
         for i in 0..20u8 {
             p.produce("t", Bytes(vec![i])).unwrap();

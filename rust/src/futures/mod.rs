@@ -256,7 +256,7 @@ impl<T> Decode for ProxyFuture<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kv::KvServer;
+    use crate::net::ServerBuilder;
     use crate::store::{Store, TcpKvConnector};
     use std::sync::Arc;
 
@@ -287,7 +287,7 @@ mod tests {
         // The M/P/C scenario from Sec IV-A: main mints future+proxy, ships
         // the future to a producer thread and the proxy to a consumer
         // thread, via plain bytes (simulating engine serialization).
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let store =
             Store::new("fut", Arc::new(TcpKvConnector::connect(server.addr).unwrap()));
         let fut: ProxyFuture<String> = store.future();

@@ -15,6 +15,22 @@
 //! so existing callers see identical semantics — they just stop queueing
 //! behind each other's wire time.
 //!
+//! Wire behaviour is tunable through [`ClientOptions`]
+//! ([`KvClient::connect_with`]):
+//!
+//! * **Pipeline window** — a cap on FIFO in-flight ops. Submitters block
+//!   (with any coalesced frames flushed first, so the window can drain)
+//!   until a response frees a slot; `0` means unbounded, the historical
+//!   behaviour.
+//! * **Flush policy** — [`FlushPolicy::Immediate`] flushes the socket per
+//!   frame; [`FlushPolicy::Coalesce`] buffers frames until `max_buffer`
+//!   bytes accumulate or `max_delay` elapses (a background flusher thread
+//!   enforces the deadline), batching many small requests into one
+//!   syscall/packet. Blocking callers pay at most `max_delay` extra
+//!   latency; pipelined bursts get fewer, larger writes.
+//! * **Connect / write timeouts** — bound how long dialing and a stalled
+//!   socket write may take.
+//!
 //! Long waits ride the out-of-band **watch plane**: [`KvClient::watch`]
 //! arms a server-side watch under a client-chosen id and hands back a
 //! completion handle; the reader thread routes the eventual
@@ -30,29 +46,139 @@
 //! torn frame, local shutdown) every in-flight handle *and every armed
 //! watch* completes with the error and later submissions fail fast — a
 //! watch whose server dies fails promptly instead of hanging. Dropping
-//! the client shuts the socket down and joins the reader thread — no
-//! thread leak, no handle left parked.
+//! the client shuts the socket down and joins the reader (and flusher)
+//! threads — no thread leak, no handle left parked.
 
 use std::collections::{HashMap, VecDeque};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
-use crate::codec::{Bytes, Decode};
+use crate::codec::{
+    get_varint, put_varint, Bytes, Decode, Encode, Reader,
+};
 use crate::error::{Error, Result};
-use crate::kv::protocol::{read_frame, write_frame, Request, Response};
+use crate::kv::protocol::{
+    read_frame, write_frame, write_frame_unflushed, Request, Response,
+};
 use crate::kv::state::PubSubMsg;
 use crate::metrics::telemetry::{self, TelemetrySnapshot};
 use crate::ops::{pending, Completer, Op, OpResult, Pending};
 
+/// When a socket write should actually be flushed to the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FlushPolicy {
+    /// Flush after every frame — lowest latency per op, one syscall per
+    /// request. The default.
+    #[default]
+    Immediate,
+    /// Buffer frames and flush when `max_buffer` bytes accumulate or
+    /// `max_delay` elapses since the first unflushed byte, whichever
+    /// comes first. Pipelined bursts coalesce into few large writes; a
+    /// lone blocking op pays at most `max_delay` extra latency.
+    Coalesce {
+        /// Flush once this many buffered bytes accumulate.
+        max_buffer: usize,
+        /// Flush no later than this after the first unflushed frame.
+        max_delay: Duration,
+    },
+}
+
+/// Wire-behaviour tuning for [`KvClient::connect_with`]. The default is
+/// byte-compatible with the historical client: unbounded pipeline window,
+/// immediate flushes, OS-default timeouts.
+///
+/// Options are codec-encodable so connector descriptors
+/// ([`crate::store::ConnectorDesc`]) can carry them inside proxies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ClientOptions {
+    /// Max FIFO requests in flight; submitters block when full. `0`
+    /// (default) means unbounded.
+    pub pipeline_window: usize,
+    /// Write-coalescing policy (default: flush per frame).
+    pub flush: FlushPolicy,
+    /// Bound on dialing the server (default: OS connect timeout).
+    pub connect_timeout: Option<Duration>,
+    /// Bound on a single blocked socket write (default: none).
+    pub write_timeout: Option<Duration>,
+}
+
+impl ClientOptions {
+    /// Preset for pipelined bulk traffic: coalesce up to 64 KiB or
+    /// 200 µs of frames per flush, unbounded window, no timeouts.
+    pub fn coalescing() -> ClientOptions {
+        ClientOptions {
+            flush: FlushPolicy::Coalesce {
+                max_buffer: 64 * 1024,
+                max_delay: Duration::from_micros(200),
+            },
+            ..ClientOptions::default()
+        }
+    }
+}
+
+impl Encode for FlushPolicy {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            FlushPolicy::Immediate => put_varint(buf, 0),
+            FlushPolicy::Coalesce { max_buffer, max_delay } => {
+                put_varint(buf, 1);
+                max_buffer.encode(buf);
+                (max_delay.as_micros() as u64).encode(buf);
+            }
+        }
+    }
+}
+
+impl Decode for FlushPolicy {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(match get_varint(r)? {
+            0 => FlushPolicy::Immediate,
+            1 => FlushPolicy::Coalesce {
+                max_buffer: Decode::decode(r)?,
+                max_delay: Duration::from_micros(u64::decode(r)?),
+            },
+            t => {
+                return Err(Error::Codec(format!("bad flush policy tag {t}")))
+            }
+        })
+    }
+}
+
+impl Encode for ClientOptions {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.pipeline_window.encode(buf);
+        self.flush.encode(buf);
+        self.connect_timeout
+            .map(|d| d.as_micros() as u64)
+            .encode(buf);
+        self.write_timeout.map(|d| d.as_micros() as u64).encode(buf);
+    }
+}
+
+impl Decode for ClientOptions {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(ClientOptions {
+            pipeline_window: Decode::decode(r)?,
+            flush: Decode::decode(r)?,
+            connect_timeout: Option::<u64>::decode(r)?
+                .map(Duration::from_micros),
+            write_timeout: Option::<u64>::decode(r)?
+                .map(Duration::from_micros),
+        })
+    }
+}
+
 /// Cached registry handles for the client's hot path (looked up once per
 /// process). `in_flight` aggregates across every client in the process via
-/// deltas; its high-water mark is the observed pipeline depth.
+/// deltas; its high-water mark is the observed pipeline depth. The ratio
+/// `ops / flushes` is the achieved write-coalescing factor.
 struct ClientMetrics {
     ops: Arc<telemetry::Counter>,
     op_us: Arc<telemetry::Histogram>,
     in_flight: Arc<telemetry::Gauge>,
+    flushes: Arc<telemetry::Counter>,
 }
 
 fn client_metrics() -> &'static ClientMetrics {
@@ -61,6 +187,7 @@ fn client_metrics() -> &'static ClientMetrics {
         ops: telemetry::counter("kv.client.ops"),
         op_us: telemetry::histogram("kv.client.op_us"),
         in_flight: telemetry::gauge("kv.client.in_flight"),
+        flushes: telemetry::counter("kv.client.flushes"),
     })
 }
 
@@ -129,11 +256,7 @@ fn op_request(op: Op) -> (Request, OpKind) {
     }
 }
 
-fn complete_sink(
-    queue: &Mutex<PendingQueue>,
-    sink: Sink,
-    result: Result<Response>,
-) {
+fn complete_sink(queue: &QueueSync, sink: Sink, result: Result<Response>) {
     match sink {
         Sink::Resp(c) => c.complete(result),
         Sink::Op { kind, completer } => {
@@ -146,7 +269,7 @@ fn complete_sink(
                 Err(e) => Some(e),
             };
             if let Some(e) = failed {
-                let watch = queue.lock().unwrap().watches.remove(&id);
+                let watch = queue.q.lock().unwrap().watches.remove(&id);
                 if let Some(c) = watch {
                     c.complete(Err(e));
                 }
@@ -166,11 +289,20 @@ struct PendingQueue {
     dead: Option<Error>,
 }
 
-fn fail_all(queue: &Mutex<PendingQueue>, err: Error) {
+/// The pending queue plus the condvar that window-limited submitters park
+/// on. `window == 0` (unbounded) lets the reader skip the per-response
+/// notify entirely.
+struct QueueSync {
+    q: Mutex<PendingQueue>,
+    cv: Condvar,
+    window: usize,
+}
+
+fn fail_all(queue: &QueueSync, err: Error) {
     // Drain under the lock, complete outside it: completions may run
     // subscribed callbacks that take arbitrary locks of their own.
     let (sinks, watches) = {
-        let mut q = queue.lock().unwrap();
+        let mut q = queue.q.lock().unwrap();
         if q.dead.is_none() {
             q.dead = Some(err.clone());
         }
@@ -179,6 +311,8 @@ fn fail_all(queue: &Mutex<PendingQueue>, err: Error) {
             q.watches.drain().collect::<Vec<_>>(),
         )
     };
+    // Submitters parked on a full window must observe `dead` and bail.
+    queue.cv.notify_all();
     client_metrics().in_flight.add(-(sinks.len() as i64));
     for (_, sink) in sinks {
         complete_sink(queue, sink, Err(err.clone()));
@@ -188,7 +322,7 @@ fn fail_all(queue: &Mutex<PendingQueue>, err: Error) {
     }
 }
 
-fn reader_loop(stream: TcpStream, queue: Arc<Mutex<PendingQueue>>) {
+fn reader_loop(stream: TcpStream, queue: Arc<QueueSync>) {
     let mut reader = std::io::BufReader::with_capacity(1 << 18, stream);
     loop {
         match read_frame::<_, Response>(&mut reader) {
@@ -197,15 +331,18 @@ fn reader_loop(stream: TcpStream, queue: Arc<Mutex<PendingQueue>>) {
                 // this is what keeps a parked watch from stalling the
                 // shared response stream. An unknown id is a watch that
                 // was disarmed after firing raced the wire; drop it.
-                let watch = queue.lock().unwrap().watches.remove(&id);
+                let watch = queue.q.lock().unwrap().watches.remove(&id);
                 if let Some(completer) = watch {
                     completer.complete(Ok(Arc::new(value.0)));
                 }
             }
             Ok(Some(resp)) => {
-                let sink = queue.lock().unwrap().sinks.pop_front();
+                let sink = queue.q.lock().unwrap().sinks.pop_front();
                 match sink {
                     Some((started, sink)) => {
+                        if queue.window > 0 {
+                            queue.cv.notify_all(); // a window slot freed
+                        }
                         let m = client_metrics();
                         m.in_flight.add(-1);
                         m.op_us.record_duration(started.elapsed());
@@ -239,10 +376,75 @@ fn reader_loop(stream: TcpStream, queue: Arc<Mutex<PendingQueue>>) {
     }
 }
 
+/// Deadline state shared with the background flusher thread (coalescing
+/// policy only).
+struct FlushShared {
+    state: Mutex<FlushState>,
+    cv: Condvar,
+}
+
+struct FlushState {
+    /// When the oldest unflushed frame was buffered; `None` = clean.
+    dirty_since: Option<Instant>,
+    stop: bool,
+}
+
+/// Enforces `FlushPolicy::Coalesce::max_delay`: waits for the buffer to
+/// turn dirty, sleeps out the deadline, flushes. Inline threshold flushes
+/// clear `dirty_since` so a quiet client costs zero wakeups.
+fn flusher_loop(
+    shared: Arc<FlushShared>,
+    writer: Arc<Mutex<std::io::BufWriter<TcpStream>>>,
+    queue: Arc<QueueSync>,
+    max_delay: Duration,
+) {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.stop {
+            return;
+        }
+        match st.dirty_since {
+            None => st = shared.cv.wait(st).unwrap(),
+            Some(dirtied) => {
+                let due = dirtied + max_delay;
+                let now = Instant::now();
+                if now < due {
+                    // Park until the deadline (or a stop/inline-flush
+                    // notification), then re-check everything.
+                    st = shared.cv.wait_timeout(st, due - now).unwrap().0;
+                    continue;
+                }
+                st.dirty_since = None;
+                drop(st);
+                let res = {
+                    let mut w = writer.lock().unwrap();
+                    if w.buffer().is_empty() {
+                        Ok(())
+                    } else {
+                        let r = w.flush();
+                        if r.is_ok() {
+                            client_metrics().flushes.incr();
+                        }
+                        r
+                    }
+                };
+                if let Err(e) = res {
+                    fail_all(&queue, e.into());
+                    return;
+                }
+                st = shared.state.lock().unwrap();
+            }
+        }
+    }
+}
+
 /// Thread-safe pipelined request/response client.
 pub struct KvClient {
-    writer: Mutex<std::io::BufWriter<TcpStream>>,
-    queue: Arc<Mutex<PendingQueue>>,
+    writer: Arc<Mutex<std::io::BufWriter<TcpStream>>>,
+    queue: Arc<QueueSync>,
+    options: ClientOptions,
+    flush: Option<Arc<FlushShared>>,
+    flusher: Option<std::thread::JoinHandle<()>>,
     next_watch: AtomicU64,
     /// Kept for shutdown: unblocks the parked reader on drop.
     stream: TcpStream,
@@ -251,14 +453,33 @@ pub struct KvClient {
 }
 
 impl KvClient {
+    /// Connect with default options (unbounded window, immediate flush).
     pub fn connect(addr: SocketAddr) -> Result<KvClient> {
-        let stream = TcpStream::connect(addr)?;
+        KvClient::connect_with(addr, ClientOptions::default())
+    }
+
+    /// Connect with explicit wire-behaviour options; see [`ClientOptions`].
+    pub fn connect_with(
+        addr: SocketAddr,
+        options: ClientOptions,
+    ) -> Result<KvClient> {
+        let stream = match options.connect_timeout {
+            Some(t) => TcpStream::connect_timeout(&addr, t)?,
+            None => TcpStream::connect(addr)?,
+        };
         stream.set_nodelay(true)?;
-        let queue = Arc::new(Mutex::new(PendingQueue {
-            sinks: VecDeque::new(),
-            watches: HashMap::new(),
-            dead: None,
-        }));
+        // SO_SNDTIMEO rides the shared fd: it bounds writes from every
+        // clone but leaves reads (SO_RCVTIMEO) untouched.
+        stream.set_write_timeout(options.write_timeout)?;
+        let queue = Arc::new(QueueSync {
+            q: Mutex::new(PendingQueue {
+                sinks: VecDeque::new(),
+                watches: HashMap::new(),
+                dead: None,
+            }),
+            cv: Condvar::new(),
+            window: options.pipeline_window,
+        });
         // Clone both halves before spawning the reader, so an error here
         // can never leave a reader thread parked on a live socket.
         let writer_stream = stream.try_clone()?;
@@ -270,12 +491,36 @@ impl KvClient {
             .map_err(|e| {
                 Error::Connector(format!("spawn kv pipeline reader: {e}"))
             })?;
+        let writer = Arc::new(Mutex::new(std::io::BufWriter::with_capacity(
+            1 << 18,
+            writer_stream,
+        )));
+        let (flush, flusher) = match options.flush {
+            FlushPolicy::Immediate => (None, None),
+            FlushPolicy::Coalesce { max_delay, .. } => {
+                let shared = Arc::new(FlushShared {
+                    state: Mutex::new(FlushState {
+                        dirty_since: None,
+                        stop: false,
+                    }),
+                    cv: Condvar::new(),
+                });
+                let (s, w, q) = (shared.clone(), writer.clone(), queue.clone());
+                let handle = std::thread::Builder::new()
+                    .name(format!("kv-flush-{}", addr.port()))
+                    .spawn(move || flusher_loop(s, w, q, max_delay))
+                    .map_err(|e| {
+                        Error::Connector(format!("spawn kv flusher: {e}"))
+                    })?;
+                (Some(shared), Some(handle))
+            }
+        };
         Ok(KvClient {
-            writer: Mutex::new(std::io::BufWriter::with_capacity(
-                1 << 18,
-                writer_stream,
-            )),
+            writer,
             queue,
+            options,
+            flush,
+            flusher,
             next_watch: AtomicU64::new(0),
             stream,
             reader: Some(reader),
@@ -283,21 +528,76 @@ impl KvClient {
         })
     }
 
+    /// The options this client was connected with.
+    pub fn options(&self) -> &ClientOptions {
+        &self.options
+    }
+
     /// Requests submitted but not yet completed (diagnostics). Armed
     /// watches do not count: they are out-of-band, not queue entries.
     pub fn in_flight(&self) -> usize {
-        self.queue.lock().unwrap().sinks.len()
+        self.queue.q.lock().unwrap().sinks.len()
     }
 
     /// Watches armed and not yet fired (diagnostics).
     pub fn watches_armed(&self) -> usize {
-        self.queue.lock().unwrap().watches.len()
+        self.queue.q.lock().unwrap().watches.len()
+    }
+
+    /// Flush any coalesced frames now (clearing the flusher deadline) and
+    /// count it. Caller holds the writer lock.
+    fn flush_now(
+        &self,
+        writer: &mut std::io::BufWriter<TcpStream>,
+    ) -> Result<()> {
+        if let Some(fs) = &self.flush {
+            fs.state.lock().unwrap().dirty_since = None;
+        }
+        if !writer.buffer().is_empty() {
+            writer.flush()?;
+            client_metrics().flushes.incr();
+        }
+        Ok(())
+    }
+
+    /// Write one frame under the active flush policy: immediate flush, or
+    /// buffer until the threshold trips (deadline handled by the flusher).
+    fn write_policy(
+        &self,
+        writer: &mut std::io::BufWriter<TcpStream>,
+        wire: &Request,
+    ) -> Result<()> {
+        write_frame_unflushed(writer, wire)?;
+        match self.options.flush {
+            FlushPolicy::Immediate => self.flush_now(writer),
+            FlushPolicy::Coalesce { max_buffer, .. } => {
+                if writer.buffer().len() >= max_buffer {
+                    self.flush_now(writer)
+                } else {
+                    if let Some(fs) = &self.flush {
+                        let mut st = fs.state.lock().unwrap();
+                        if st.dirty_since.is_none() {
+                            st.dirty_since = Some(Instant::now());
+                            fs.cv.notify_all();
+                        }
+                    }
+                    Ok(())
+                }
+            }
+        }
     }
 
     /// Serialize one request onto the shared socket and register its
     /// completion sink. The writer lock spans the queue push and the
     /// frame write so queue order always equals wire order — the FIFO
     /// invariant the reader's response matching relies on.
+    ///
+    /// When the pipeline window is full, the submitter first flushes any
+    /// coalesced frames (so the server can actually drain the window) and
+    /// then parks on the queue condvar until a response frees a slot.
+    /// Holding the writer lock while parked is deliberate: it pauses
+    /// every other submitter on this client too — the window is a
+    /// connection-level bound, not a per-thread one.
     ///
     /// When a trace is current on the calling thread (see
     /// [`telemetry::start_trace`]), the request is wrapped in a
@@ -337,18 +637,29 @@ impl KvClient {
         };
         let wire = traced.as_ref().unwrap_or(req);
         let mut writer = self.writer.lock().unwrap();
-        {
-            let mut q = self.queue.lock().unwrap();
-            if let Some(e) = &q.dead {
-                let err = e.clone();
-                drop(q);
-                complete_sink(&self.queue, sink, Err(err));
-                return;
+        let mut q = self.queue.q.lock().unwrap();
+        let window = self.queue.window;
+        if window > 0 && q.sinks.len() >= window && q.dead.is_none() {
+            drop(q);
+            if let Err(e) = self.flush_now(&mut writer) {
+                fail_all(&self.queue, e);
             }
-            q.sinks.push_back((Instant::now(), sink));
-            m.in_flight.add(1);
+            q = self.queue.q.lock().unwrap();
+            while q.sinks.len() >= window && q.dead.is_none() {
+                q = self.queue.cv.wait(q).unwrap();
+            }
         }
-        if let Err(e) = write_frame(&mut *writer, wire) {
+        if let Some(e) = &q.dead {
+            let err = e.clone();
+            drop(q);
+            drop(writer);
+            complete_sink(&self.queue, sink, Err(err));
+            return;
+        }
+        q.sinks.push_back((Instant::now(), sink));
+        m.in_flight.add(1);
+        drop(q);
+        if let Err(e) = self.write_policy(&mut writer, wire) {
             drop(writer);
             fail_all(&self.queue, e);
         }
@@ -405,20 +716,30 @@ impl KvClient {
         // insert: registered before the frame is on the wire, so even a
         // Notify that races back instantly finds its completer.
         let mut writer = self.writer.lock().unwrap();
-        {
-            let mut q = self.queue.lock().unwrap();
-            if let Some(e) = &q.dead {
-                let err = e.clone();
-                drop(q);
-                drop(writer);
-                completer.complete(Err(err));
-                return (id, handle);
+        let mut q = self.queue.q.lock().unwrap();
+        let window = self.queue.window;
+        if window > 0 && q.sinks.len() >= window && q.dead.is_none() {
+            drop(q);
+            if let Err(e) = self.flush_now(&mut writer) {
+                fail_all(&self.queue, e);
             }
-            q.watches.insert(id, completer);
-            q.sinks.push_back((Instant::now(), Sink::WatchAck { id }));
-            client_metrics().in_flight.add(1);
+            q = self.queue.q.lock().unwrap();
+            while q.sinks.len() >= window && q.dead.is_none() {
+                q = self.queue.cv.wait(q).unwrap();
+            }
         }
-        if let Err(e) = write_frame(&mut *writer, &req) {
+        if let Some(e) = &q.dead {
+            let err = e.clone();
+            drop(q);
+            drop(writer);
+            completer.complete(Err(err));
+            return (id, handle);
+        }
+        q.watches.insert(id, completer);
+        q.sinks.push_back((Instant::now(), Sink::WatchAck { id }));
+        client_metrics().in_flight.add(1);
+        drop(q);
+        if let Err(e) = self.write_policy(&mut writer, &req) {
             drop(writer);
             fail_all(&self.queue, e);
         }
@@ -433,7 +754,7 @@ impl KvClient {
         let removed =
             self.expect_int(Request::Unwatch { key: key.into(), id })? == 1;
         if removed {
-            self.queue.lock().unwrap().watches.remove(&id);
+            self.queue.q.lock().unwrap().watches.remove(&id);
         }
         Ok(removed)
     }
@@ -606,10 +927,21 @@ impl KvClient {
 }
 
 impl Drop for KvClient {
-    /// Shut the socket down (unparking the reader mid-`read_frame`) and
-    /// reap the reader thread; any still-pending handles complete with a
-    /// connection error on the way out.
+    /// Stop and join the flusher (flushing any buffered frames on the way
+    /// out), shut the socket down (unparking the reader mid-`read_frame`),
+    /// and reap the reader thread; any still-pending handles complete with
+    /// a connection error on the way out.
     fn drop(&mut self) {
+        if let Some(fs) = &self.flush {
+            fs.state.lock().unwrap().stop = true;
+            fs.cv.notify_all();
+        }
+        if let Some(handle) = self.flusher.take() {
+            let _ = handle.join();
+        }
+        if let Ok(mut w) = self.writer.lock() {
+            let _ = w.flush();
+        }
         let _ = self.stream.shutdown(std::net::Shutdown::Both);
         if let Some(handle) = self.reader.take() {
             let _ = handle.join();
@@ -671,11 +1003,11 @@ impl KvSubscriber {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kv::KvServer;
+    use crate::net::ServerBuilder;
 
     #[test]
     fn pipelined_submissions_complete_in_order() {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let client = KvClient::connect(server.addr).unwrap();
         // Submit a window of writes then a read of each key *before*
         // waiting on anything: FIFO execution means every read sees its
@@ -705,7 +1037,7 @@ mod tests {
 
     #[test]
     fn concurrent_threads_share_one_connection() {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let client = Arc::new(KvClient::connect(server.addr).unwrap());
         let handles: Vec<_> = (0..4)
             .map(|t| {
@@ -730,8 +1062,78 @@ mod tests {
     }
 
     #[test]
+    fn coalescing_client_batches_writes() {
+        let server = ServerBuilder::new().spawn_kv().unwrap();
+        let client =
+            KvClient::connect_with(server.addr, ClientOptions::coalescing())
+                .unwrap();
+        // A pipelined burst: many small frames coalesce into few flushes,
+        // and every op still completes with the right value.
+        let puts: Vec<_> = (0..100)
+            .map(|i| {
+                client.submit_op(Op::Put {
+                    key: format!("c-{i}"),
+                    data: vec![i as u8],
+                })
+            })
+            .collect();
+        for p in puts {
+            p.wait().unwrap().into_unit().unwrap();
+        }
+        assert_eq!(client.get("c-7").unwrap(), Some(Bytes(vec![7])));
+        // A lone blocking op must not hang: the flusher's deadline (200µs)
+        // pushes it out without another submission arriving.
+        assert_eq!(client.get("c-42").unwrap(), Some(Bytes(vec![42])));
+        assert_eq!(client.in_flight(), 0);
+    }
+
+    #[test]
+    fn pipeline_window_bounds_in_flight() {
+        let server = ServerBuilder::new().spawn_kv().unwrap();
+        let opts =
+            ClientOptions { pipeline_window: 4, ..ClientOptions::default() };
+        let client = KvClient::connect_with(server.addr, opts).unwrap();
+        // 64 nonblocking submissions through a window of 4: submitters
+        // park when full, every op completes, and the queue never exceeds
+        // the window.
+        let mut handles = Vec::new();
+        for i in 0..64 {
+            handles.push(client.submit_op(Op::Put {
+                key: format!("w-{i}"),
+                data: vec![i as u8],
+            }));
+            assert!(client.in_flight() <= 4, "window must bound the queue");
+        }
+        for h in handles {
+            h.wait().unwrap().into_unit().unwrap();
+        }
+        let (keys, _, _) = client.stats().unwrap();
+        assert_eq!(keys, 64);
+    }
+
+    #[test]
+    fn client_options_roundtrip_codec() {
+        for opts in [
+            ClientOptions::default(),
+            ClientOptions::coalescing(),
+            ClientOptions {
+                pipeline_window: 32,
+                flush: FlushPolicy::Coalesce {
+                    max_buffer: 4096,
+                    max_delay: Duration::from_millis(2),
+                },
+                connect_timeout: Some(Duration::from_secs(1)),
+                write_timeout: Some(Duration::from_millis(250)),
+            },
+        ] {
+            let back = ClientOptions::from_bytes(&opts.to_bytes()).unwrap();
+            assert_eq!(opts, back);
+        }
+    }
+
+    #[test]
     fn server_death_fails_in_flight_and_later_ops() {
-        let mut server = KvServer::spawn().unwrap();
+        let mut server = ServerBuilder::new().spawn_kv().unwrap();
         let client = KvClient::connect(server.addr).unwrap();
         client.ping().unwrap();
         // Park an op server-side, then kill the server under it.
@@ -751,7 +1153,7 @@ mod tests {
 
     #[test]
     fn watch_completes_out_of_band() {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let client = KvClient::connect(server.addr).unwrap();
         let handle = client.watch("later");
         assert!(!handle.is_complete());
@@ -767,7 +1169,7 @@ mod tests {
 
     #[test]
     fn watch_existing_key_fires_immediately() {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let client = KvClient::connect(server.addr).unwrap();
         client.set("here", Bytes(vec![7])).unwrap();
         let handle = client.watch("here");
@@ -776,7 +1178,7 @@ mod tests {
 
     #[test]
     fn wait_get_timeout_leaves_pipe_usable() {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let client = KvClient::connect(server.addr).unwrap();
         let t0 = std::time::Instant::now();
         let got = client
@@ -797,7 +1199,7 @@ mod tests {
 
     #[test]
     fn wait_get_wakes_without_parking_the_pipe() {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let addr = server.addr;
         let client = Arc::new(KvClient::connect(addr).unwrap());
         let waiter = {
@@ -816,7 +1218,7 @@ mod tests {
 
     #[test]
     fn server_death_fails_armed_watches_promptly() {
-        let mut server = KvServer::spawn().unwrap();
+        let mut server = ServerBuilder::new().spawn_kv().unwrap();
         let client = KvClient::connect(server.addr).unwrap();
         let handle = client.watch("never-set");
         std::thread::sleep(Duration::from_millis(30));
@@ -829,7 +1231,7 @@ mod tests {
 
     #[test]
     fn subscribe_is_rejected_not_pipelined() {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let client = KvClient::connect(server.addr).unwrap();
         let res = client
             .submit(Request::Subscribe { channels: vec!["c".into()] })
@@ -842,7 +1244,7 @@ mod tests {
     #[test]
     fn traced_ops_share_a_trace_id_with_server_spans() {
         let _g = crate::metrics::telemetry::test_enabled_guard();
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let client = KvClient::connect(server.addr).unwrap();
         let trace = telemetry::start_trace("client-unit");
         let trace_id = trace.ctx().trace_id;
@@ -888,7 +1290,7 @@ mod tests {
     #[test]
     fn telemetry_snapshot_counts_frames() {
         let _g = crate::metrics::telemetry::test_enabled_guard();
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let client = KvClient::connect(server.addr).unwrap();
         client.set("m", Bytes(vec![1])).unwrap();
         let snap = client.telemetry().unwrap();
@@ -901,7 +1303,7 @@ mod tests {
 
     #[test]
     fn drop_with_in_flight_op_reaps_reader() {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let client = KvClient::connect(server.addr).unwrap();
         let parked = client.submit(Request::WaitGet {
             key: "never-set".into(),

@@ -30,7 +30,9 @@ mod protocol;
 mod server;
 mod state;
 
-pub use client::{KvClient, KvSubscriber};
-pub use protocol::{read_frame, write_frame, Request, Response};
+pub use client::{ClientOptions, FlushPolicy, KvClient, KvSubscriber};
+pub use protocol::{
+    read_frame, write_frame, write_frame_unflushed, Request, Response,
+};
 pub use server::KvServer;
 pub use state::{KvState, PubSubMsg};

@@ -318,12 +318,22 @@ impl Decode for Response {
     }
 }
 
-/// Write one length-prefixed frame.
+/// Write one length-prefixed frame and flush the writer.
 pub fn write_frame<W: Write, T: Encode>(w: &mut W, msg: &T) -> Result<()> {
+    write_frame_unflushed(w, msg)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Write one length-prefixed frame without flushing — the write-coalescing
+/// client path buffers many frames and flushes once per policy tick.
+pub fn write_frame_unflushed<W: Write, T: Encode>(
+    w: &mut W,
+    msg: &T,
+) -> Result<()> {
     let body = msg.to_bytes();
     w.write_all(&(body.len() as u32).to_le_bytes())?;
     w.write_all(&body)?;
-    w.flush()?;
     Ok(())
 }
 

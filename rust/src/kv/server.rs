@@ -1,25 +1,40 @@
-//! TCP front-end for the KV engine: thread-per-connection, length-prefixed
-//! frames, Redis-style subscribe mode, and out-of-band watch pushes.
+//! TCP front-end for the KV engine, with two ingress modes behind the
+//! unified [`ServerBuilder`]:
 //!
-//! A connection's writer is shared between its request loop and the watch
-//! callbacks it arms: `Watch` registers in the engine's registry
-//! ([`KvState::watch`]) with a callback that pushes the `Notify` frame
-//! from whichever writer thread stores the key — the connection thread
-//! never parks, so an armed watch costs the server nothing until it
-//! fires. Watches a connection leaves armed are disarmed when it closes.
+//! - **Event loop** (default on Linux): a small [`EventLoopPool`]
+//!   multiplexes every connection. [`KvEventService`] handles one frame
+//!   at a time on a loop thread; fast ops reply inline, genuinely
+//!   blocking ops (`WaitGet` on a missing key, `BRPop` on an empty
+//!   list) first *probe* the engine — the zero-timeout attempt IS the
+//!   op, so a present value replies without parking — and only the
+//!   empty case defers to a short-lived helper thread that completes
+//!   through the connection's [`ConnHandle`]. Watch `Notify` frames are
+//!   pushed into the owning loop from whichever thread stores the key.
+//! - **Threaded**: one blocking OS thread per connection (portable
+//!   fallback and baseline). A connection's writer is shared between
+//!   its request loop and the watch callbacks it arms, interleaving
+//!   FIFO responses and out-of-band pushes under one lock.
+//!
+//! Both modes run the same request core ([`handle_request`] /
+//! [`respond`]), and watches a connection leaves armed are disarmed
+//! when it closes.
 
 use std::collections::HashMap;
 use std::io::BufWriter;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
-use crate::codec::{Bytes, Encode};
+use crate::codec::{Bytes, Decode, Encode};
 use crate::error::Result;
 use crate::kv::protocol::{read_frame, write_frame, Request, Response};
-use crate::kv::state::KvState;
+use crate::kv::state::{KvState, PubSubMsg};
 use crate::metrics::telemetry;
+use crate::net::{
+    ConnHandle, EventLoopPool, FrameOutcome, Ingress, NoState, ServerBuilder,
+    Service,
+};
 
 /// Cached registry handles for the server's hot-path metrics (one lookup
 /// per process, not per frame).
@@ -44,70 +59,35 @@ fn server_metrics() -> &'static ServerMetrics {
     })
 }
 
+/// The running ingress machinery behind a [`KvServer`].
+enum IngressHandle {
+    Threaded {
+        accept_thread: Option<std::thread::JoinHandle<()>>,
+        /// Live connection sockets, force-closed on shutdown.
+        conns: Arc<Mutex<Vec<TcpStream>>>,
+    },
+    Event(EventLoopPool),
+}
+
 /// A running KV server. Dropping the handle shuts it down.
 pub struct KvServer {
     pub addr: SocketAddr,
     state: KvState,
     stop: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
-    /// Live connection sockets, force-closed on shutdown.
-    conns: Arc<std::sync::Mutex<Vec<TcpStream>>>,
+    ingress: IngressHandle,
 }
 
 impl KvServer {
     /// Bind to 127.0.0.1 on an ephemeral port and start serving.
+    #[deprecated(note = "use ServerBuilder::new().spawn_kv()")]
     pub fn spawn() -> Result<KvServer> {
-        Self::spawn_with_state(KvState::new())
+        ServerBuilder::new().spawn_kv()
     }
 
-    /// Serve an externally created state (lets tests/benches share the
-    /// engine between a TCP endpoint and embedded handles).
+    /// Serve an externally created state.
+    #[deprecated(note = "use ServerBuilder::new().with_state(state).spawn()")]
     pub fn spawn_with_state(state: KvState) -> Result<KvServer> {
-        let listener = TcpListener::bind("127.0.0.1:0")?;
-        let addr = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let state2 = state.clone();
-        let conns: Arc<std::sync::Mutex<Vec<TcpStream>>> =
-            Arc::new(std::sync::Mutex::new(Vec::new()));
-        let conns2 = conns.clone();
-        // Accept loop polls with a timeout so shutdown is prompt.
-        listener.set_nonblocking(true)?;
-        let accept_thread = std::thread::Builder::new()
-            .name(format!("kv-accept-{}", addr.port()))
-            .spawn(move || {
-                while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            if let Ok(clone) = stream.try_clone() {
-                                conns2.lock().unwrap().push(clone);
-                            }
-                            let st = state2.clone();
-                            let stop3 = stop2.clone();
-                            std::thread::Builder::new()
-                                .name("kv-conn".into())
-                                .spawn(move || {
-                                    let _ = serve_connection(stream, st, stop3);
-                                })
-                                .expect("spawn kv-conn");
-                        }
-                        Err(ref e)
-                            if e.kind() == std::io::ErrorKind::WouldBlock =>
-                        {
-                            std::thread::sleep(Duration::from_millis(2));
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })
-            .expect("spawn kv-accept");
-        Ok(KvServer {
-            addr,
-            state,
-            stop,
-            accept_thread: Some(accept_thread),
-            conns,
-        })
+        ServerBuilder::new().with_state(state).spawn()
     }
 
     /// The shared engine (for embedded access / gauges).
@@ -115,14 +95,21 @@ impl KvServer {
         &self.state
     }
 
-    /// Stop accepting, force-close live connections, and wind down.
+    /// Stop accepting, close live connections, and wind down.
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        for conn in self.conns.lock().unwrap().drain(..) {
-            let _ = conn.shutdown(std::net::Shutdown::Both);
-        }
-        if let Some(h) = self.accept_thread.take() {
-            let _ = h.join();
+        match &mut self.ingress {
+            IngressHandle::Threaded { accept_thread, conns } => {
+                // Unblock the blocking accept; the loop re-checks `stop`.
+                let _ = TcpStream::connect(self.addr);
+                for conn in conns.lock().unwrap().drain(..) {
+                    let _ = conn.shutdown(std::net::Shutdown::Both);
+                }
+                if let Some(h) = accept_thread.take() {
+                    let _ = h.join();
+                }
+            }
+            IngressHandle::Event(pool) => pool.shutdown(),
         }
     }
 }
@@ -131,6 +118,110 @@ impl Drop for KvServer {
     fn drop(&mut self) {
         self.shutdown();
     }
+}
+
+impl ServerBuilder<KvState> {
+    /// Spawn a KV server serving this builder's state.
+    pub fn spawn(self) -> Result<KvServer> {
+        spawn_kv_server(self)
+    }
+}
+
+impl ServerBuilder<NoState> {
+    /// Spawn a KV server with fresh state.
+    pub fn spawn_kv(self) -> Result<KvServer> {
+        self.with_state(KvState::new()).spawn()
+    }
+}
+
+fn spawn_kv_server(b: ServerBuilder<KvState>) -> Result<KvServer> {
+    let stop = Arc::new(AtomicBool::new(false));
+    match b.ingress {
+        Ingress::EventLoop => {
+            let service = Arc::new(KvEventService {
+                state: b.state.clone(),
+                stop: stop.clone(),
+                armed: Arc::new(Mutex::new(HashMap::new())),
+            });
+            let pool = EventLoopPool::spawn(
+                b.bind,
+                b.event_loops,
+                b.max_connections,
+                service,
+                "kv",
+            )?;
+            Ok(KvServer {
+                addr: pool.addr,
+                state: b.state,
+                stop,
+                ingress: IngressHandle::Event(pool),
+            })
+        }
+        Ingress::Threaded => spawn_threaded(b, stop),
+    }
+}
+
+fn spawn_threaded(
+    b: ServerBuilder<KvState>,
+    stop: Arc<AtomicBool>,
+) -> Result<KvServer> {
+    let listener = TcpListener::bind(b.bind)?;
+    let addr = listener.local_addr()?;
+    let state = b.state;
+    let max_connections = b.max_connections;
+    let stop2 = stop.clone();
+    let state2 = state.clone();
+    let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+    let conns2 = conns.clone();
+    let active = Arc::new(AtomicUsize::new(0));
+    // Blocking accept (no busy-wait): `shutdown` sets the stop flag and
+    // pokes the listener with a throwaway connection to unblock it.
+    let accept_thread = std::thread::Builder::new()
+        .name(format!("kv-accept-{}", addr.port()))
+        .spawn(move || loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    if max_connections > 0
+                        && active.load(Ordering::Relaxed) >= max_connections
+                    {
+                        drop(stream); // over the cap
+                        continue;
+                    }
+                    active.fetch_add(1, Ordering::Relaxed);
+                    if let Ok(clone) = stream.try_clone() {
+                        conns2.lock().unwrap().push(clone);
+                    }
+                    let st = state2.clone();
+                    let stop3 = stop2.clone();
+                    let active2 = active.clone();
+                    std::thread::Builder::new()
+                        .name("kv-conn".into())
+                        .spawn(move || {
+                            let _ = serve_connection(stream, st, stop3);
+                            active2.fetch_sub(1, Ordering::Relaxed);
+                        })
+                        .expect("spawn kv-conn");
+                }
+                Err(_) => {
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                }
+            }
+        })
+        .expect("spawn kv-accept");
+    Ok(KvServer {
+        addr,
+        state,
+        stop,
+        ingress: IngressHandle::Threaded {
+            accept_thread: Some(accept_thread),
+            conns,
+        },
+    })
 }
 
 fn handle_request(state: &KvState, req: Request) -> Response {
@@ -201,13 +292,268 @@ fn handle_request(state: &KvState, req: Request) -> Response {
         | Request::Watch { .. }
         | Request::Unwatch { .. }
         | Request::Traced { .. } => {
-            unreachable!("push-mode/envelope requests handled in serve_requests")
+            unreachable!("push-mode/envelope requests handled by the caller")
         }
     }
 }
 
-/// The sharable write half of a connection: FIFO responses from the
-/// request loop and out-of-band `Notify` pushes from watch callbacks
+/// Execute one non-push request — bare or in a `Traced` envelope —
+/// recording op latency and trace spans. Push-mode requests
+/// (`Subscribe`/`Watch`/`Unwatch`) are the ingress's job; a `Traced`
+/// envelope carrying one is rejected rather than silently untraced.
+fn respond(state: &KvState, req: Request) -> Response {
+    match req {
+        Request::Traced { trace_id, span_id, inner } => match *inner {
+            Request::Subscribe { .. }
+            | Request::Watch { .. }
+            | Request::Unwatch { .. }
+            | Request::Traced { .. } => Response::Error(
+                "traced envelope cannot carry push-mode or nested requests"
+                    .into(),
+            ),
+            inner => {
+                let name = inner.name();
+                let span = telemetry::next_span_id();
+                let start = Instant::now();
+                let resp = handle_request(state, inner);
+                server_metrics().op_us.record_duration(start.elapsed());
+                telemetry::trace_event(
+                    trace_id, span, span_id, "kv.server", name,
+                );
+                resp
+            }
+        },
+        other => {
+            let start = Instant::now();
+            let resp = handle_request(state, other);
+            server_metrics().op_us.record_duration(start.elapsed());
+            resp
+        }
+    }
+}
+
+/// Is this a request the event loop must never execute inline (it can
+/// park), directly or under a `Traced` envelope?
+fn is_blocking(req: &Request) -> bool {
+    match req {
+        Request::WaitGet { .. } | Request::BRPop { .. } => true,
+        Request::Traced { inner, .. } => {
+            matches!(**inner, Request::WaitGet { .. } | Request::BRPop { .. })
+        }
+        _ => false,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event-driven ingress
+// ---------------------------------------------------------------------------
+
+/// KV protocol logic on the reactor: one [`Service::on_frame`] call per
+/// complete request frame, on a loop thread.
+struct KvEventService {
+    state: KvState,
+    stop: Arc<AtomicBool>,
+    /// conn id -> (client watch id -> (key, registry token)), shared with
+    /// the fire callbacks so a fired watch prunes its own entry.
+    #[allow(clippy::type_complexity)]
+    armed: Arc<Mutex<HashMap<u64, HashMap<u64, (String, u64)>>>>,
+}
+
+impl KvEventService {
+    /// Run a blocking request on a helper thread; the reply re-enters the
+    /// loop via [`ConnHandle::complete`], which also replays any frames
+    /// the connection pipelined behind it.
+    fn defer(&self, conn: &ConnHandle, req: Request) -> FrameOutcome {
+        let state = self.state.clone();
+        let handle = conn.clone();
+        let spawned = std::thread::Builder::new()
+            .name("kv-park".into())
+            .spawn(move || {
+                let resp = respond(&state, req);
+                server_metrics().frames_out.incr();
+                handle.complete(resp.to_bytes());
+            });
+        match spawned {
+            Ok(_) => FrameOutcome::Deferred,
+            Err(_) => FrameOutcome::Close,
+        }
+    }
+}
+
+impl Service for KvEventService {
+    fn on_open(&self, _conn: &ConnHandle) {
+        server_metrics().connections.add(1);
+    }
+
+    fn on_frame(&self, conn: &ConnHandle, body: Vec<u8>) -> FrameOutcome {
+        let m = server_metrics();
+        m.frames_in.incr();
+        let req = match Request::from_bytes(&body) {
+            Ok(req) => req,
+            Err(_) => return FrameOutcome::Close,
+        };
+        match req {
+            Request::Subscribe { channels } => {
+                // Push mode: ack, then hand the raw stream to a pump
+                // thread — subscriber frames no longer interleave with
+                // request traffic, so the loop is done with this socket.
+                let rx = self.state.subscribe(&channels);
+                let stop = self.stop.clone();
+                m.frames_out.incr();
+                FrameOutcome::Handoff {
+                    reply: Response::Ok.to_bytes(),
+                    take: Box::new(move |stream| {
+                        let _ = std::thread::Builder::new()
+                            .name("kv-sub".into())
+                            .spawn(move || pump_subscriber(stream, rx, stop));
+                    }),
+                }
+            }
+            Request::Watch { key, id } => {
+                // The Ok ack holds FIFO position; the Notify push is
+                // out-of-band. An immediate fire (key already present)
+                // queues the Notify in the loop's inbox, which drains
+                // after this reply is buffered — ack still lands first.
+                let push = conn.clone();
+                let armed = self.armed.clone();
+                let conn_id = conn.conn_id();
+                let token = self.state.watch(
+                    &key,
+                    Box::new(move |v| {
+                        let fired = Instant::now();
+                        if let Some(per) =
+                            armed.lock().unwrap().get_mut(&conn_id)
+                        {
+                            per.remove(&id);
+                        }
+                        let m = server_metrics();
+                        let frame =
+                            Response::Notify { id, value: Bytes(v.to_vec()) }
+                                .to_bytes();
+                        push.push_frame(
+                            frame,
+                            Some((fired, m.wake_us.clone())),
+                        );
+                        m.frames_out.incr();
+                        m.notify_pushes.incr();
+                    }),
+                );
+                if let Some(token) = token {
+                    self.armed
+                        .lock()
+                        .unwrap()
+                        .entry(conn_id)
+                        .or_default()
+                        .insert(id, (key, token));
+                }
+                m.frames_out.incr();
+                FrameOutcome::Reply(Response::Ok.to_bytes())
+            }
+            Request::Unwatch { key, id } => {
+                let entry = self
+                    .armed
+                    .lock()
+                    .unwrap()
+                    .get_mut(&conn.conn_id())
+                    .and_then(|per| per.remove(&id));
+                let removed = match entry {
+                    Some((key, token)) => self.state.unwatch(&key, token),
+                    None => {
+                        let _ = key;
+                        false
+                    }
+                };
+                m.frames_out.incr();
+                FrameOutcome::Reply(
+                    Response::Int(i64::from(removed)).to_bytes(),
+                )
+            }
+            Request::WaitGet { key, timeout_ms } => {
+                // Probe: an atomic get — a present value answers without
+                // parking, only a miss pays for a helper thread.
+                let start = Instant::now();
+                if let Some(v) = self.state.get(&key) {
+                    m.op_us.record_duration(start.elapsed());
+                    m.frames_out.incr();
+                    return FrameOutcome::Reply(
+                        Response::Value(Some(v)).to_bytes(),
+                    );
+                }
+                self.defer(conn, Request::WaitGet { key, timeout_ms })
+            }
+            Request::BRPop { list, timeout_ms } => {
+                // Probe: a zero-deadline brpop IS the op — it pops
+                // atomically when non-empty and never parks.
+                let start = Instant::now();
+                if let Some(v) =
+                    self.state.brpop(&list, Some(Duration::ZERO))
+                {
+                    m.op_us.record_duration(start.elapsed());
+                    m.frames_out.incr();
+                    return FrameOutcome::Reply(
+                        Response::Value(Some(v)).to_bytes(),
+                    );
+                }
+                self.defer(conn, Request::BRPop { list, timeout_ms })
+            }
+            req if is_blocking(&req) => self.defer(conn, req),
+            other => {
+                m.frames_out.incr();
+                FrameOutcome::Reply(respond(&self.state, other).to_bytes())
+            }
+        }
+    }
+
+    fn on_close(&self, conn_id: u64) {
+        server_metrics().connections.add(-1);
+        // Disarm whatever the connection left armed, so dead peers never
+        // leak registry entries.
+        let per = self.armed.lock().unwrap().remove(&conn_id);
+        if let Some(per) = per {
+            for (key, token) in per.into_values() {
+                self.state.unwatch(&key, token);
+            }
+        }
+    }
+}
+
+/// Forward published messages to a handed-off subscriber socket until
+/// the peer hangs up or the server stops.
+fn pump_subscriber(
+    stream: TcpStream,
+    rx: std::sync::mpsc::Receiver<PubSubMsg>,
+    stop: Arc<AtomicBool>,
+) {
+    let _ = stream.set_write_timeout(Some(WRITE_STALL_CAP));
+    let mut writer = BufWriter::with_capacity(1 << 18, stream);
+    loop {
+        match rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(msg) => {
+                let push = Response::Message {
+                    channel: msg.channel,
+                    payload: msg.payload,
+                };
+                if write_frame(&mut writer, &push).is_err() {
+                    return; // subscriber gone
+                }
+                server_metrics().frames_out.incr();
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threaded ingress
+// ---------------------------------------------------------------------------
+
+/// The sharable write half of a threaded connection: FIFO responses from
+/// the request loop and out-of-band `Notify` pushes from watch callbacks
 /// interleave at frame granularity under one lock.
 type SharedWriter = Arc<Mutex<BufWriter<TcpStream>>>;
 
@@ -218,9 +564,9 @@ type SharedWriter = Arc<Mutex<BufWriter<TcpStream>>>;
 /// connection dies) while writers stall at most this long.
 const WRITE_STALL_CAP: Duration = Duration::from_secs(5);
 
-/// Watches one connection armed, shared with its fire callbacks so a
-/// fired watch prunes its own entry: client watch id -> (key, registry
-/// token).
+/// Watches one threaded connection armed, shared with its fire callbacks
+/// so a fired watch prunes its own entry: client watch id -> (key,
+/// registry token).
 type ArmedWatches = Arc<Mutex<HashMap<u64, (String, u64)>>>;
 
 /// Write one FIFO/push frame and count it.
@@ -237,17 +583,18 @@ fn serve_connection(
 ) -> Result<()> {
     stream.set_nodelay(true)?;
     stream.set_write_timeout(Some(WRITE_STALL_CAP))?;
-    let mut reader = std::io::BufReader::with_capacity(1 << 18, stream.try_clone()?);
-    let writer: SharedWriter = Arc::new(Mutex::new(
-        BufWriter::with_capacity(1 << 18, stream),
-    ));
+    let mut reader =
+        std::io::BufReader::with_capacity(1 << 18, stream.try_clone()?);
+    let writer: SharedWriter =
+        Arc::new(Mutex::new(BufWriter::with_capacity(1 << 18, stream)));
     let armed: ArmedWatches = Arc::new(Mutex::new(HashMap::new()));
     server_metrics().connections.add(1);
     let result = serve_requests(&mut reader, &writer, &state, &stop, &armed);
     server_metrics().connections.add(-1);
     // A closing connection disarms whatever it left armed, so dead peers
     // never leak registry entries (their Notify would go nowhere anyway).
-    for (key, token) in std::mem::take(&mut *armed.lock().unwrap()).into_values()
+    for (key, token) in
+        std::mem::take(&mut *armed.lock().unwrap()).into_values()
     {
         state.unwatch(&key, token);
     }
@@ -344,39 +691,8 @@ fn serve_requests(
                 };
                 send(writer, &Response::Int(i64::from(removed)))?;
             }
-            Request::Traced { trace_id, span_id, inner } => {
-                // Unwrap the envelope: adopt the caller's trace, stamp a
-                // server-side span parented on the client's, and execute
-                // the inner op as if it arrived bare. Push-mode inners
-                // would change FIFO semantics mid-trace, so they are
-                // rejected rather than silently untraced.
-                let resp = match *inner {
-                    Request::Subscribe { .. }
-                    | Request::Watch { .. }
-                    | Request::Unwatch { .. }
-                    | Request::Traced { .. } => Response::Error(
-                        "traced envelope cannot carry push-mode or nested \
-                         requests"
-                            .into(),
-                    ),
-                    inner => {
-                        let name = inner.name();
-                        let span = telemetry::next_span_id();
-                        let start = Instant::now();
-                        let resp = handle_request(state, inner);
-                        server_metrics().op_us.record_duration(start.elapsed());
-                        telemetry::trace_event(
-                            trace_id, span, span_id, "kv.server", name,
-                        );
-                        resp
-                    }
-                };
-                send(writer, &resp)?;
-            }
             other => {
-                let start = Instant::now();
-                let resp = handle_request(state, other);
-                server_metrics().op_us.record_duration(start.elapsed());
+                let resp = respond(state, other);
                 send(writer, &resp)?;
             }
         }
@@ -388,10 +704,11 @@ mod tests {
     use super::*;
     use crate::codec::Bytes;
     use crate::kv::client::{KvClient, KvSubscriber};
+    use crate::net::{Ingress, ServerBuilder};
 
     #[test]
     fn server_basic_ops_over_tcp() {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let client = KvClient::connect(server.addr).unwrap();
         client.ping().unwrap();
         client.set("k", Bytes(vec![1, 2, 3])).unwrap();
@@ -406,8 +723,40 @@ mod tests {
     }
 
     #[test]
-    fn mput_mget_roundtrip_over_tcp() {
+    fn threaded_ingress_basic_ops_and_watch() {
+        let server = ServerBuilder::new()
+            .ingress(Ingress::Threaded)
+            .spawn_kv()
+            .unwrap();
+        let client = KvClient::connect(server.addr).unwrap();
+        client.set("k", Bytes(vec![7])).unwrap();
+        assert_eq!(client.get("k").unwrap(), Some(Bytes(vec![7])));
+        let addr = server.addr;
+        let waiter = std::thread::spawn(move || {
+            let c = KvClient::connect(addr).unwrap();
+            c.wait_get("tk", Some(Duration::from_secs(5))).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        client.set("tk", Bytes(vec![8])).unwrap();
+        assert_eq!(waiter.join().unwrap(), Some(Bytes(vec![8])));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_spawn_shims_still_work() {
         let server = KvServer::spawn().unwrap();
+        let client = KvClient::connect(server.addr).unwrap();
+        client.ping().unwrap();
+        let state = KvState::new();
+        state.set("pre", Bytes(vec![1]));
+        let server2 = KvServer::spawn_with_state(state).unwrap();
+        let client2 = KvClient::connect(server2.addr).unwrap();
+        assert_eq!(client2.get("pre").unwrap(), Some(Bytes(vec![1])));
+    }
+
+    #[test]
+    fn mput_mget_roundtrip_over_tcp() {
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let client = KvClient::connect(server.addr).unwrap();
         client
             .mput(vec![
@@ -440,7 +789,7 @@ mod tests {
 
     #[test]
     fn mdel_over_tcp() {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let client = KvClient::connect(server.addr).unwrap();
         client
             .mput(vec![
@@ -458,7 +807,7 @@ mod tests {
 
     #[test]
     fn mexists_over_tcp() {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let client = KvClient::connect(server.addr).unwrap();
         client
             .mput(vec![
@@ -477,7 +826,7 @@ mod tests {
 
     #[test]
     fn mput_wakes_cross_client_waiter() {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let addr = server.addr;
         let waiter = std::thread::spawn(move || {
             let c = KvClient::connect(addr).unwrap();
@@ -493,7 +842,7 @@ mod tests {
 
     #[test]
     fn wait_get_across_clients() {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let addr = server.addr;
         let waiter = std::thread::spawn(move || {
             let c = KvClient::connect(addr).unwrap();
@@ -507,7 +856,7 @@ mod tests {
 
     #[test]
     fn pubsub_over_tcp() {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let sub =
             KvSubscriber::connect(server.addr, &["topic".into()]).unwrap();
         // Give the subscriber registration a beat.
@@ -522,7 +871,7 @@ mod tests {
 
     #[test]
     fn queue_over_tcp() {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let c = KvClient::connect(server.addr).unwrap();
         c.lpush("q", Bytes(vec![1])).unwrap();
         c.lpush("q", Bytes(vec![2])).unwrap();
@@ -537,7 +886,7 @@ mod tests {
 
     #[test]
     fn stats_and_flush() {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let c = KvClient::connect(server.addr).unwrap();
         c.set("a", Bytes(vec![0; 100])).unwrap();
         let (keys, bytes, ops) = c.stats().unwrap();
@@ -551,7 +900,7 @@ mod tests {
 
     #[test]
     fn server_shutdown_rejects_new_connections() {
-        let mut server = KvServer::spawn().unwrap();
+        let mut server = ServerBuilder::new().spawn_kv().unwrap();
         let addr = server.addr;
         server.shutdown();
         std::thread::sleep(Duration::from_millis(20));
@@ -561,8 +910,21 @@ mod tests {
     }
 
     #[test]
+    fn threaded_shutdown_rejects_new_connections() {
+        let mut server = ServerBuilder::new()
+            .ingress(Ingress::Threaded)
+            .spawn_kv()
+            .unwrap();
+        let addr = server.addr;
+        server.shutdown();
+        std::thread::sleep(Duration::from_millis(20));
+        let r = KvClient::connect(addr).and_then(|c| c.ping());
+        assert!(r.is_err());
+    }
+
+    #[test]
     fn concurrent_clients_hammer() {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let addr = server.addr;
         let hs: Vec<_> = (0..4)
             .map(|i| {

@@ -60,6 +60,36 @@
 //! [`futures::when_all`]/[`futures::when_any`] compose watch handles into
 //! joins that park once over N keys.
 //!
+//! # Server ingress
+//!
+//! Both servers are spawned through one [`net::ServerBuilder`] and offer
+//! two ingress modes ([`net::Ingress`]):
+//!
+//! * **`EventLoop`** (default on Linux) — a small pool of epoll reactor
+//!   threads multiplexes every connection: nonblocking sockets,
+//!   incremental frame reassembly across partial reads, and coalesced
+//!   writes flushed once per readiness burst. Blocking ops (`WaitGet`,
+//!   `BRPop`, broker long-poll fetches) *probe* the engine first and
+//!   defer only true waits to short-lived helper threads, and watch
+//!   `Notify` frames are injected into the owning loop from whichever
+//!   thread stores the key — 10k+ connections cost a bounded thread
+//!   set.
+//! * **`Threaded`** — one blocking OS thread per connection; the
+//!   portable fallback and the bench baseline.
+//!
+//! The pipelined KV client's wire behaviour is configurable through
+//! [`kv::ClientOptions`]: pipeline window depth (backpressure on
+//! in-flight ops), a write-coalescing flush policy (batch many small
+//! frames into one flush), and connect/write timeouts — threaded
+//! through [`store::TcpKvConnector`] descriptors so proxies round-trip
+//! the tuning.
+//!
+//! *Migration note:* the former constructors
+//! (`KvServer::spawn{,_with_state}`, `BrokerServer::spawn{,_with_state}`)
+//! are deprecated shims; use `ServerBuilder::new().spawn_kv()` /
+//! `.spawn_broker()`, or `.with_state(state).spawn()` to serve shared
+//! state.
+//!
 //! # Observability
 //!
 //! Every fabric reports into one **telemetry plane**
@@ -95,6 +125,7 @@ pub mod error;
 pub mod futures;
 pub mod kv;
 pub mod metrics;
+pub mod net;
 pub mod netsim;
 pub mod ops;
 pub mod ownership;
@@ -119,7 +150,9 @@ pub mod prelude {
     pub use crate::codec::{Bytes, Decode, Encode, F32s};
     pub use crate::error::{Error, Result};
     pub use crate::futures::{when_all, when_any, PendingResult, ProxyFuture};
+    pub use crate::kv::{ClientOptions, FlushPolicy};
     pub use crate::metrics::{telemetry, TelemetrySnapshot, TraceCtx};
+    pub use crate::net::{Ingress, ServerBuilder};
     pub use crate::ops::{Op, OpResult, Pending};
     pub use crate::ownership::lifetime::StoreLifetimeExt;
     pub use crate::ownership::{

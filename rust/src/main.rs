@@ -379,7 +379,7 @@ fn shard_cmd(args: &Args) -> Result<()> {
 
 fn rebalance_cmd(args: &Args) -> Result<()> {
     use proxystore::codec::{Bytes, Decode};
-    use proxystore::kv::KvServer;
+    use proxystore::net::ServerBuilder;
     use proxystore::metrics::telemetry;
     use proxystore::shard::{ElasticShards, ShardMembers};
     use proxystore::store::{Connector, TcpKvConnector};
@@ -400,7 +400,7 @@ fn rebalance_cmd(args: &Args) -> Result<()> {
     // spans, server frames, migration fan-outs on the reactor pool).
     let mut servers = Vec::new();
     let mut backend = || -> Result<Arc<dyn Connector>> {
-        let server = KvServer::spawn()?;
+        let server = ServerBuilder::new().spawn_kv()?;
         let conn =
             Arc::new(TcpKvConnector::connect(server.addr)?) as Arc<dyn Connector>;
         servers.push(server);
@@ -631,7 +631,8 @@ fn broker_shard_cmd(args: &Args) -> Result<()> {
 
 fn stats_cmd(args: &Args) -> Result<()> {
     use proxystore::codec::Bytes;
-    use proxystore::kv::{KvClient, KvServer};
+    use proxystore::kv::KvClient;
+    use proxystore::net::ServerBuilder;
     use proxystore::metrics::telemetry;
     use proxystore::shard::ShardedConnector;
     use proxystore::store::{Connector, TcpKvConnector};
@@ -646,7 +647,7 @@ fn stats_cmd(args: &Args) -> Result<()> {
     let mut servers = Vec::with_capacity(shards);
     let mut backends: Vec<Arc<dyn Connector>> = Vec::with_capacity(shards);
     for _ in 0..shards {
-        let server = KvServer::spawn()?;
+        let server = ServerBuilder::new().spawn_kv()?;
         backends
             .push(Arc::new(TcpKvConnector::connect(server.addr)?)
                 as Arc<dyn Connector>);
@@ -694,7 +695,7 @@ fn stats_cmd(args: &Args) -> Result<()> {
 }
 
 fn serve_kv() -> Result<()> {
-    let server = proxystore::kv::KvServer::spawn()?;
+    let server = proxystore::net::ServerBuilder::new().spawn_kv()?;
     println!("redis-sim KV server listening on {}", server.addr);
     println!("(ctrl-c to stop)");
     loop {
@@ -703,7 +704,7 @@ fn serve_kv() -> Result<()> {
 }
 
 fn serve_broker() -> Result<()> {
-    let server = proxystore::broker::BrokerServer::spawn()?;
+    let server = proxystore::net::ServerBuilder::new().spawn_broker()?;
     println!("log broker listening on {}", server.addr);
     println!("(ctrl-c to stop)");
     loop {

@@ -1,0 +1,131 @@
+//! Unified server construction: one builder for every server in the
+//! crate instead of a zoo of `spawn`/`spawn_with_state` constructors.
+//!
+//! ```no_run
+//! use proxystore::kv::KvState;
+//! use proxystore::net::{Ingress, ServerBuilder};
+//!
+//! // Default ingress (event loop on Linux), ephemeral port:
+//! let server = ServerBuilder::new().spawn_kv().unwrap();
+//!
+//! // Explicit everything, sharing pre-built state:
+//! let state = KvState::new();
+//! let server = ServerBuilder::new()
+//!     .ingress(Ingress::Threaded)
+//!     .bind("127.0.0.1:0".parse().unwrap())
+//!     .max_connections(10_000)
+//!     .with_state(state)
+//!     .spawn()
+//!     .unwrap();
+//! # let _ = server;
+//! ```
+//!
+//! The generic `state` slot is what lets one builder serve both servers:
+//! `with_state(KvState)` steers `spawn()` to a KV server,
+//! `with_state(BrokerState)` to a broker, and the stateless
+//! `spawn_kv()`/`spawn_broker()` shorthands cover the common
+//! fresh-state case. The `spawn*` impls live next to each server.
+
+use std::net::SocketAddr;
+
+/// How a server accepts and serves connections.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ingress {
+    /// One OS thread per connection, blocking I/O. Simple, portable,
+    /// and fine up to a few hundred connections.
+    Threaded,
+    /// A small pool of epoll event loops multiplexing every connection
+    /// (Linux only): bounded threads regardless of connection count.
+    EventLoop,
+}
+
+impl Default for Ingress {
+    fn default() -> Ingress {
+        if cfg!(target_os = "linux") {
+            Ingress::EventLoop
+        } else {
+            Ingress::Threaded
+        }
+    }
+}
+
+/// Placeholder state for a builder that hasn't been given any: `spawn_kv`
+/// / `spawn_broker` build fresh state themselves.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoState;
+
+/// Unified configuration for spawning a server; see the module docs.
+#[derive(Debug, Clone)]
+pub struct ServerBuilder<S = NoState> {
+    pub(crate) ingress: Ingress,
+    pub(crate) bind: SocketAddr,
+    pub(crate) max_connections: usize,
+    pub(crate) event_loops: usize,
+    pub(crate) state: S,
+}
+
+fn default_event_loops() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(4)
+}
+
+impl ServerBuilder<NoState> {
+    pub fn new() -> ServerBuilder<NoState> {
+        ServerBuilder {
+            ingress: Ingress::default(),
+            bind: SocketAddr::from(([127, 0, 0, 1], 0)),
+            max_connections: 0,
+            event_loops: default_event_loops(),
+            state: NoState,
+        }
+    }
+}
+
+impl Default for ServerBuilder<NoState> {
+    fn default() -> Self {
+        ServerBuilder::new()
+    }
+}
+
+impl<S> ServerBuilder<S> {
+    /// Select the ingress mode (default: event loop on Linux, threaded
+    /// elsewhere).
+    pub fn ingress(mut self, ingress: Ingress) -> Self {
+        self.ingress = ingress;
+        self
+    }
+
+    /// Listen address (default `127.0.0.1:0` — an ephemeral port).
+    pub fn bind(mut self, addr: SocketAddr) -> Self {
+        self.bind = addr;
+        self
+    }
+
+    /// Cap concurrent connections; `0` (the default) means unlimited.
+    /// Excess connections are dropped at accept.
+    pub fn max_connections(mut self, n: usize) -> Self {
+        self.max_connections = n;
+        self
+    }
+
+    /// Number of event-loop threads (event ingress only; default
+    /// `min(cores, 4)`, floored at 1).
+    pub fn event_loops(mut self, n: usize) -> Self {
+        self.event_loops = n.max(1);
+        self
+    }
+
+    /// Attach pre-built server state, selecting which server `spawn()`
+    /// produces (e.g. `KvState` → KV server, `BrokerState` → broker).
+    pub fn with_state<T>(self, state: T) -> ServerBuilder<T> {
+        ServerBuilder {
+            ingress: self.ingress,
+            bind: self.bind,
+            max_connections: self.max_connections,
+            event_loops: self.event_loops,
+            state,
+        }
+    }
+}

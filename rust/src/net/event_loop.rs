@@ -1,0 +1,911 @@
+//! Readiness-driven connection reactor: the C1M ingress.
+//!
+//! An [`EventLoopPool`] owns N event-loop threads multiplexing every
+//! connection on a [`Poller`](crate::net::Poller) instead of a thread
+//! each. Loop 0 owns the listener (registered for readiness — no accept
+//! busy-wait) and deals accepted sockets round-robin across the loops;
+//! each connection is a small state machine: incremental frame
+//! reassembly on readable (partial length prefixes and split bodies are
+//! just buffered bytes), and buffered writes flushed once per readiness
+//! burst — many small replies coalesce into one syscall. Write interest
+//! is only armed while a connection has unflushed bytes.
+//!
+//! Protocol behaviour plugs in through [`Service`]: one callback per
+//! complete frame, returning a [`FrameOutcome`]. Fast ops reply inline
+//! from the loop thread. Genuinely blocking ops (a `WaitGet` parked on a
+//! missing key, a broker long-poll) return [`FrameOutcome::Deferred`] and
+//! complete later through the connection's [`ConnHandle`] — the loop
+//! buffers any frames that arrive meanwhile and replays them in order, so
+//! the wire's FIFO contract holds while the loop thread never parks.
+//! Out-of-band pushes (watch `Notify` frames) ride the same handle from
+//! whatever thread fires them: the message lands in the loop's inbox, an
+//! eventfd waker unblocks the poll, and the loop writes the frame — no
+//! per-connection writer mutex anywhere.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::metrics::telemetry;
+use crate::net::poller::{Poller, Waker};
+
+/// Poller token of the accept listener (loop 0 only).
+const LISTENER_TOKEN: u64 = 0;
+/// Poller token of the loop's eventfd waker.
+const WAKER_TOKEN: u64 = 1;
+/// First connection id; ids are unique across the whole pool so a
+/// service keyed by conn id never sees cross-loop collisions.
+const FIRST_CONN: u64 = 2;
+
+/// Frame-body size cap, matching the wire protocol's reader cap.
+const MAX_FRAME: usize = 1 << 30;
+/// Unflushed-write cap per connection: a peer that stops reading while
+/// pushes accumulate is closed rather than growing the buffer forever
+/// (the threaded ingress bounds the same hazard with a write timeout).
+const WBUF_CAP: usize = 1 << 28;
+
+/// Cached registry handles for the reactor's hot path.
+struct NetMetrics {
+    connections: Arc<telemetry::Gauge>,
+    iter_us: Arc<telemetry::Histogram>,
+    wakeups: Arc<telemetry::Counter>,
+    accepted: Arc<telemetry::Counter>,
+    rejected: Arc<telemetry::Counter>,
+}
+
+fn net_metrics() -> &'static NetMetrics {
+    static M: OnceLock<NetMetrics> = OnceLock::new();
+    M.get_or_init(|| NetMetrics {
+        connections: telemetry::gauge("net.loop.connections"),
+        iter_us: telemetry::histogram("net.loop.iter_us"),
+        wakeups: telemetry::counter("net.loop.wakeups"),
+        accepted: telemetry::counter("net.loop.accepted"),
+        rejected: telemetry::counter("net.loop.rejected"),
+    })
+}
+
+/// What the loop does with a completed inbound frame.
+pub enum FrameOutcome {
+    /// Write this reply body (the loop adds the length prefix) in FIFO
+    /// position.
+    Reply(Vec<u8>),
+    /// The service owns the reply: a helper thread will deliver it via
+    /// [`ConnHandle::complete`]. Until then the loop buffers this
+    /// connection's later frames and replays them in order — FIFO holds
+    /// without parking the loop.
+    Deferred,
+    /// Write `reply`, then surrender the raw stream to `take` once the
+    /// write buffer drains (subscribe push mode). `take` runs on the
+    /// loop thread and must hand the stream to its own thread promptly.
+    Handoff {
+        reply: Vec<u8>,
+        take: Box<dyn FnOnce(TcpStream) + Send>,
+    },
+    /// Protocol violation: drop the connection.
+    Close,
+}
+
+/// Per-connection protocol logic plugged into the reactor.
+pub trait Service: Send + Sync + 'static {
+    /// A connection was registered with a loop.
+    fn on_open(&self, conn: &ConnHandle) {
+        let _ = conn;
+    }
+
+    /// One complete frame body arrived.
+    fn on_frame(&self, conn: &ConnHandle, body: Vec<u8>) -> FrameOutcome;
+
+    /// The connection left the loop (close or handoff): release anything
+    /// keyed on its id. Pushes sent after this are silently dropped.
+    fn on_close(&self, conn_id: u64) {
+        let _ = conn_id;
+    }
+}
+
+/// Cross-thread messages into a loop, drained after each poll wake.
+enum LoopMsg {
+    /// Out-of-band frame (watch `Notify`): written even mid-deferral.
+    /// `lat` records fire-to-write latency into the given histogram.
+    Push {
+        conn: u64,
+        body: Vec<u8>,
+        lat: Option<(Instant, Arc<telemetry::Histogram>)>,
+    },
+    /// FIFO reply finishing a [`FrameOutcome::Deferred`] op.
+    Complete { conn: u64, body: Vec<u8> },
+    /// Force-close a connection.
+    CloseConn { conn: u64 },
+    /// A freshly accepted socket dealt over from the accepting loop.
+    AddConn(TcpStream),
+    /// Stop the loop and close everything it owns.
+    Shutdown,
+}
+
+/// The half of a loop its producers share: inbox + waker.
+struct LoopShared {
+    waker: Waker,
+    inbox: Mutex<Vec<LoopMsg>>,
+}
+
+impl LoopShared {
+    fn send(&self, msg: LoopMsg) {
+        self.inbox.lock().unwrap().push(msg);
+        self.waker.wake();
+    }
+}
+
+/// A service's handle to one connection, valid from any thread. Cheap to
+/// clone; sends become no-ops once the connection is gone.
+#[derive(Clone)]
+pub struct ConnHandle {
+    conn_id: u64,
+    shared: Arc<LoopShared>,
+}
+
+impl ConnHandle {
+    /// Pool-unique id of this connection (stable service-side key).
+    pub fn conn_id(&self) -> u64 {
+        self.conn_id
+    }
+
+    /// Queue an out-of-band frame (e.g. a watch `Notify`) and wake the
+    /// loop. `lat` stamps fire-to-write latency into a histogram.
+    pub fn push_frame(
+        &self,
+        body: Vec<u8>,
+        lat: Option<(Instant, Arc<telemetry::Histogram>)>,
+    ) {
+        self.shared.send(LoopMsg::Push { conn: self.conn_id, body, lat });
+    }
+
+    /// Deliver the FIFO reply of a deferred op; the loop then replays any
+    /// frames it buffered behind it.
+    pub fn complete(&self, body: Vec<u8>) {
+        self.shared.send(LoopMsg::Complete { conn: self.conn_id, body });
+    }
+
+    /// Ask the loop to drop this connection.
+    pub fn close(&self) {
+        self.shared.send(LoopMsg::CloseConn { conn: self.conn_id });
+    }
+}
+
+/// Per-connection state machine.
+struct Conn {
+    stream: TcpStream,
+    /// Reassembly buffer: bytes read but not yet framed. `rpos` marks
+    /// consumed frames (compacted lazily).
+    rbuf: Vec<u8>,
+    rpos: usize,
+    /// Coalesced write buffer: complete frames awaiting the socket.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Whether the poller registration currently includes write interest.
+    writable_interest: bool,
+    /// A deferred op is in flight; inbound frames queue in `backlog`.
+    deferred: bool,
+    backlog: VecDeque<Vec<u8>>,
+    /// Pending stream handoff, executed once `wbuf` drains.
+    handoff: Option<Box<dyn FnOnce(TcpStream) + Send>>,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            rpos: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+            writable_interest: false,
+            deferred: false,
+            backlog: VecDeque::new(),
+            handoff: None,
+        }
+    }
+}
+
+fn push_wire_frame(wbuf: &mut Vec<u8>, body: &[u8]) {
+    wbuf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    wbuf.extend_from_slice(body);
+}
+
+/// Pop the next complete frame body, or `Ok(None)` if more bytes are
+/// needed. `Err` is an oversized frame (protocol violation).
+fn take_frame(conn: &mut Conn) -> std::result::Result<Option<Vec<u8>>, ()> {
+    let avail = conn.rbuf.len() - conn.rpos;
+    if avail < 4 {
+        compact(conn);
+        return Ok(None);
+    }
+    let len_bytes: [u8; 4] =
+        conn.rbuf[conn.rpos..conn.rpos + 4].try_into().unwrap();
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    if len > MAX_FRAME {
+        return Err(());
+    }
+    if avail < 4 + len {
+        compact(conn);
+        return Ok(None);
+    }
+    let body = conn.rbuf[conn.rpos + 4..conn.rpos + 4 + len].to_vec();
+    conn.rpos += 4 + len;
+    Ok(Some(body))
+}
+
+/// Reclaim consumed reassembly bytes once they dominate the buffer.
+fn compact(conn: &mut Conn) {
+    if conn.rpos == conn.rbuf.len() {
+        conn.rbuf.clear();
+        conn.rpos = 0;
+    } else if conn.rpos > (1 << 16) {
+        conn.rbuf.drain(..conn.rpos);
+        conn.rpos = 0;
+    }
+}
+
+enum FlushResult {
+    Drained,
+    Partial,
+    Dead,
+}
+
+fn flush_wbuf(conn: &mut Conn) -> FlushResult {
+    while conn.wpos < conn.wbuf.len() {
+        match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+            Ok(0) => return FlushResult::Dead,
+            Ok(n) => conn.wpos += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                return FlushResult::Partial;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return FlushResult::Dead,
+        }
+    }
+    FlushResult::Drained
+}
+
+struct EventLoop<S: Service> {
+    poller: Poller,
+    shared: Arc<LoopShared>,
+    /// Loop 0 owns the listener; the others only receive dealt sockets.
+    listener: Option<TcpListener>,
+    peers: Vec<Arc<LoopShared>>,
+    next_peer: usize,
+    conns: HashMap<u64, Conn>,
+    ids: Arc<AtomicU64>,
+    service: Arc<S>,
+    conn_count: Arc<AtomicUsize>,
+    max_connections: usize,
+    scratch: Vec<u8>,
+    stop: bool,
+}
+
+impl<S: Service> EventLoop<S> {
+    fn handle(&self, id: u64) -> ConnHandle {
+        ConnHandle { conn_id: id, shared: self.shared.clone() }
+    }
+
+    fn run(mut self) {
+        let m = net_metrics();
+        if self
+            .poller
+            .add(self.shared.waker.fd(), WAKER_TOKEN, true, false)
+            .is_err()
+        {
+            return;
+        }
+        if let Some(listener) = &self.listener {
+            if self
+                .poller
+                .add(listener.as_raw_fd(), LISTENER_TOKEN, true, false)
+                .is_err()
+            {
+                return;
+            }
+        }
+        let mut events = Vec::new();
+        while !self.stop {
+            if self.poller.wait(&mut events, None).is_err() {
+                break;
+            }
+            let busy = Instant::now();
+            m.wakeups.incr();
+            for ev in &events {
+                match ev.token {
+                    WAKER_TOKEN => self.shared.waker.drain(),
+                    LISTENER_TOKEN => self.accept_ready(),
+                    id => {
+                        self.conn_ready(id, ev.readable, ev.writable, ev.error)
+                    }
+                }
+            }
+            self.drain_inbox();
+            m.iter_us.record_duration(busy.elapsed());
+        }
+        self.teardown();
+    }
+
+    fn accept_ready(&mut self) {
+        let m = net_metrics();
+        loop {
+            let accepted = match &self.listener {
+                Some(listener) => listener.accept(),
+                None => return,
+            };
+            match accepted {
+                Ok((stream, _)) => {
+                    if self.max_connections > 0
+                        && self.conn_count.load(Ordering::Relaxed)
+                            >= self.max_connections
+                    {
+                        m.rejected.incr();
+                        continue; // drop: over the configured cap
+                    }
+                    self.conn_count.fetch_add(1, Ordering::Relaxed);
+                    m.accepted.incr();
+                    let idx = self.next_peer;
+                    self.next_peer = (self.next_peer + 1) % self.peers.len();
+                    if Arc::ptr_eq(&self.peers[idx], &self.shared) {
+                        self.register_conn(stream);
+                    } else {
+                        self.peers[idx].send(LoopMsg::AddConn(stream));
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn register_conn(&mut self, stream: TcpStream) {
+        if stream.set_nonblocking(true).is_err()
+            || stream.set_nodelay(true).is_err()
+        {
+            self.conn_count.fetch_sub(1, Ordering::Relaxed);
+            return;
+        }
+        let id = self.ids.fetch_add(1, Ordering::Relaxed);
+        if self.poller.add(stream.as_raw_fd(), id, true, false).is_err() {
+            self.conn_count.fetch_sub(1, Ordering::Relaxed);
+            return;
+        }
+        net_metrics().connections.add(1);
+        self.conns.insert(id, Conn::new(stream));
+        self.service.on_open(&self.handle(id));
+    }
+
+    fn conn_ready(&mut self, id: u64, readable: bool, writable: bool, error: bool) {
+        if !self.conns.contains_key(&id) {
+            return;
+        }
+        if writable && !self.try_flush(id) {
+            return;
+        }
+        if readable {
+            if !self.read_ready(id) {
+                return;
+            }
+            self.try_flush(id);
+        } else if error {
+            // Pure error notification (no data pending): drop it.
+            self.close_conn(id);
+        }
+    }
+
+    /// Drain the socket, frame, dispatch. Returns false once closed.
+    fn read_ready(&mut self, id: u64) -> bool {
+        loop {
+            let Some(conn) = self.conns.get_mut(&id) else { return false };
+            match conn.stream.read(&mut self.scratch) {
+                Ok(0) => {
+                    self.close_conn(id);
+                    return false;
+                }
+                Ok(n) => {
+                    conn.rbuf.extend_from_slice(&self.scratch[..n]);
+                    if n < self.scratch.len() {
+                        break; // likely drained; level-trigger re-reports
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.close_conn(id);
+                    return false;
+                }
+            }
+        }
+        loop {
+            let parked = {
+                let Some(conn) = self.conns.get_mut(&id) else {
+                    return false;
+                };
+                conn.deferred || conn.handoff.is_some()
+            };
+            let frame = {
+                let conn = self.conns.get_mut(&id).unwrap();
+                take_frame(conn)
+            };
+            match frame {
+                Ok(Some(body)) if parked => {
+                    // A deferred reply is pending: preserve FIFO by
+                    // queueing; `complete_conn` replays in order.
+                    let conn = self.conns.get_mut(&id).unwrap();
+                    conn.backlog.push_back(body);
+                }
+                Ok(Some(body)) => {
+                    if !self.dispatch(id, body) {
+                        self.close_conn(id);
+                        return false;
+                    }
+                }
+                Ok(None) => break,
+                Err(()) => {
+                    self.close_conn(id);
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Run one frame through the service. Returns false to close.
+    fn dispatch(&mut self, id: u64, body: Vec<u8>) -> bool {
+        let handle = self.handle(id);
+        let service = self.service.clone();
+        match service.on_frame(&handle, body) {
+            FrameOutcome::Reply(frame) => {
+                if let Some(conn) = self.conns.get_mut(&id) {
+                    push_wire_frame(&mut conn.wbuf, &frame);
+                }
+                true
+            }
+            FrameOutcome::Deferred => {
+                if let Some(conn) = self.conns.get_mut(&id) {
+                    conn.deferred = true;
+                }
+                true
+            }
+            FrameOutcome::Handoff { reply, take } => {
+                if let Some(conn) = self.conns.get_mut(&id) {
+                    push_wire_frame(&mut conn.wbuf, &reply);
+                    conn.handoff = Some(take);
+                }
+                true
+            }
+            FrameOutcome::Close => false,
+        }
+    }
+
+    /// Write as much of the buffered output as the socket accepts,
+    /// managing write interest. Returns false once the conn left the map.
+    fn try_flush(&mut self, id: u64) -> bool {
+        let result = {
+            let Some(conn) = self.conns.get_mut(&id) else { return false };
+            flush_wbuf(conn)
+        };
+        match result {
+            FlushResult::Dead => {
+                self.close_conn(id);
+                false
+            }
+            FlushResult::Drained => {
+                let (has_handoff, clear_interest, fd) = {
+                    let conn = self.conns.get_mut(&id).unwrap();
+                    conn.wbuf.clear();
+                    conn.wpos = 0;
+                    (
+                        conn.handoff.is_some(),
+                        conn.writable_interest,
+                        conn.stream.as_raw_fd(),
+                    )
+                };
+                if has_handoff {
+                    self.finish_handoff(id);
+                    return false;
+                }
+                if clear_interest {
+                    let _ = self.poller.modify(fd, id, true, false);
+                    self.conns.get_mut(&id).unwrap().writable_interest = false;
+                }
+                true
+            }
+            FlushResult::Partial => {
+                let conn = self.conns.get_mut(&id).unwrap();
+                if conn.wbuf.len() - conn.wpos > WBUF_CAP {
+                    // Peer stopped reading with pushes still accumulating.
+                    self.close_conn(id);
+                    return false;
+                }
+                if !conn.writable_interest {
+                    conn.writable_interest = true;
+                    let fd = conn.stream.as_raw_fd();
+                    let _ = self.poller.modify(fd, id, true, true);
+                }
+                true
+            }
+        }
+    }
+
+    /// Surrender a drained connection's stream to its handoff closure.
+    fn finish_handoff(&mut self, id: u64) {
+        let Some(mut conn) = self.conns.remove(&id) else { return };
+        let _ = self.poller.delete(conn.stream.as_raw_fd());
+        net_metrics().connections.add(-1);
+        self.conn_count.fetch_sub(1, Ordering::Relaxed);
+        self.service.on_close(id);
+        let take = conn.handoff.take().expect("handoff set");
+        let _ = conn.stream.set_nonblocking(false);
+        take(conn.stream);
+    }
+
+    fn close_conn(&mut self, id: u64) {
+        let Some(conn) = self.conns.remove(&id) else { return };
+        let _ = self.poller.delete(conn.stream.as_raw_fd());
+        let _ = conn.stream.shutdown(Shutdown::Both);
+        net_metrics().connections.add(-1);
+        self.conn_count.fetch_sub(1, Ordering::Relaxed);
+        self.service.on_close(id);
+    }
+
+    fn drain_inbox(&mut self) {
+        let msgs = std::mem::take(&mut *self.shared.inbox.lock().unwrap());
+        if msgs.is_empty() {
+            return;
+        }
+        let mut touched: Vec<u64> = Vec::new();
+        for msg in msgs {
+            match msg {
+                LoopMsg::Push { conn, body, lat } => {
+                    if let Some(c) = self.conns.get_mut(&conn) {
+                        push_wire_frame(&mut c.wbuf, &body);
+                        if let Some((fired, hist)) = lat {
+                            hist.record_duration(fired.elapsed());
+                        }
+                        touched.push(conn);
+                    }
+                }
+                LoopMsg::Complete { conn, body } => {
+                    if self.conns.contains_key(&conn) {
+                        self.complete_conn(conn, body);
+                        touched.push(conn);
+                    }
+                }
+                LoopMsg::CloseConn { conn } => self.close_conn(conn),
+                LoopMsg::AddConn(stream) => self.register_conn(stream),
+                LoopMsg::Shutdown => self.stop = true,
+            }
+        }
+        // One flush per touched connection, not per message: pushes that
+        // landed together leave in one write.
+        touched.sort_unstable();
+        touched.dedup();
+        for id in touched {
+            self.try_flush(id);
+        }
+    }
+
+    /// Finish a deferred op, then replay buffered frames in FIFO order
+    /// until the backlog empties or another op defers.
+    fn complete_conn(&mut self, id: u64, body: Vec<u8>) {
+        {
+            let Some(conn) = self.conns.get_mut(&id) else { return };
+            if !conn.deferred {
+                return; // stale completion (conn was reused logic-side)
+            }
+            push_wire_frame(&mut conn.wbuf, &body);
+            conn.deferred = false;
+        }
+        loop {
+            let next = {
+                let Some(conn) = self.conns.get_mut(&id) else { return };
+                if conn.deferred || conn.handoff.is_some() {
+                    return;
+                }
+                match conn.backlog.pop_front() {
+                    Some(b) => b,
+                    None => return,
+                }
+            };
+            if !self.dispatch(id, next) {
+                self.close_conn(id);
+                return;
+            }
+        }
+    }
+
+    fn teardown(&mut self) {
+        self.listener = None;
+        let ids: Vec<u64> = self.conns.keys().copied().collect();
+        for id in ids {
+            self.close_conn(id);
+        }
+    }
+}
+
+struct LoopHandle {
+    shared: Arc<LoopShared>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+/// A running reactor: N loops, one listener, one [`Service`].
+/// Dropping the pool shuts it down.
+pub struct EventLoopPool {
+    pub addr: SocketAddr,
+    loops: Vec<LoopHandle>,
+    conn_count: Arc<AtomicUsize>,
+}
+
+impl EventLoopPool {
+    /// Bind `bind` and start `loops` event-loop threads serving
+    /// `service`. `max_connections` of 0 means unlimited. Fails up front
+    /// on non-Linux targets (no poller) — callers fall back to threaded
+    /// ingress.
+    pub fn spawn<S: Service>(
+        bind: SocketAddr,
+        loops: usize,
+        max_connections: usize,
+        service: Arc<S>,
+        name: &str,
+    ) -> Result<EventLoopPool> {
+        let loops = loops.max(1);
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        // Build every poller/waker before spawning any thread, so a
+        // constructor error (or a non-Linux target) fails cleanly.
+        let mut parts = Vec::with_capacity(loops);
+        for _ in 0..loops {
+            let poller = Poller::new()?;
+            let waker = Waker::new()?;
+            poller.add(waker.fd(), WAKER_TOKEN, true, false)?;
+            let shared =
+                Arc::new(LoopShared { waker, inbox: Mutex::new(Vec::new()) });
+            parts.push((poller, shared));
+        }
+        let peers: Vec<_> = parts.iter().map(|(_, s)| s.clone()).collect();
+        let ids = Arc::new(AtomicU64::new(FIRST_CONN));
+        let conn_count = Arc::new(AtomicUsize::new(0));
+        let mut handles: Vec<LoopHandle> = Vec::with_capacity(loops);
+        let mut listener = Some(listener);
+        for (i, (poller, shared)) in parts.into_iter().enumerate() {
+            let el = EventLoop {
+                poller,
+                shared: shared.clone(),
+                listener: if i == 0 { listener.take() } else { None },
+                peers: peers.clone(),
+                next_peer: 0,
+                conns: HashMap::new(),
+                ids: ids.clone(),
+                service: service.clone(),
+                conn_count: conn_count.clone(),
+                max_connections,
+                scratch: vec![0; 1 << 16],
+                stop: false,
+            };
+            let spawned = std::thread::Builder::new()
+                .name(format!("{name}-loop-{i}"))
+                .spawn(move || el.run());
+            match spawned {
+                Ok(thread) => {
+                    handles.push(LoopHandle { shared, thread: Some(thread) })
+                }
+                Err(e) => {
+                    for h in &handles {
+                        h.shared.send(LoopMsg::Shutdown);
+                    }
+                    for h in &mut handles {
+                        if let Some(t) = h.thread.take() {
+                            let _ = t.join();
+                        }
+                    }
+                    return Err(Error::Task(format!(
+                        "spawn event loop thread: {e}"
+                    )));
+                }
+            }
+        }
+        Ok(EventLoopPool { addr, loops: handles, conn_count })
+    }
+
+    /// Connections currently registered across all loops (diagnostics).
+    pub fn connections(&self) -> usize {
+        self.conn_count.load(Ordering::Relaxed)
+    }
+
+    /// Stop every loop and join its thread; all connections are closed.
+    pub fn shutdown(&mut self) {
+        for h in &self.loops {
+            h.shared.send(LoopMsg::Shutdown);
+        }
+        for h in &mut self.loops {
+            if let Some(t) = h.thread.take() {
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+impl Drop for EventLoopPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(all(test, target_os = "linux"))]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn write_raw_frame(s: &mut TcpStream, body: &[u8]) {
+        s.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+        s.write_all(body).unwrap();
+    }
+
+    fn read_raw_frame(s: &mut TcpStream) -> Vec<u8> {
+        let mut len = [0u8; 4];
+        s.read_exact(&mut len).unwrap();
+        let mut body = vec![0u8; u32::from_le_bytes(len) as usize];
+        s.read_exact(&mut body).unwrap();
+        body
+    }
+
+    struct Echo;
+
+    impl Service for Echo {
+        fn on_frame(&self, _conn: &ConnHandle, body: Vec<u8>) -> FrameOutcome {
+            FrameOutcome::Reply(body)
+        }
+    }
+
+    #[test]
+    fn echo_roundtrip_and_pipelined_burst() {
+        let mut pool = EventLoopPool::spawn(
+            "127.0.0.1:0".parse().unwrap(),
+            2,
+            0,
+            Arc::new(Echo),
+            "echo",
+        )
+        .unwrap();
+        let mut c = TcpStream::connect(pool.addr).unwrap();
+        write_raw_frame(&mut c, b"hello");
+        assert_eq!(read_raw_frame(&mut c), b"hello");
+        // A burst of frames in one write comes back in order.
+        let mut burst = Vec::new();
+        for i in 0..100u8 {
+            push_wire_frame(&mut burst, &[i, i, i]);
+        }
+        c.write_all(&burst).unwrap();
+        for i in 0..100u8 {
+            assert_eq!(read_raw_frame(&mut c), vec![i, i, i]);
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn partial_frames_reassemble_across_reads() {
+        let pool = EventLoopPool::spawn(
+            "127.0.0.1:0".parse().unwrap(),
+            1,
+            0,
+            Arc::new(Echo),
+            "echo",
+        )
+        .unwrap();
+        let mut c = TcpStream::connect(pool.addr).unwrap();
+        let body = vec![7u8; 1000];
+        let mut wire = Vec::new();
+        push_wire_frame(&mut wire, &body);
+        // Dribble the frame a few bytes at a time with pauses, so the
+        // loop sees many partial reads (split length prefix included).
+        for chunk in wire.chunks(3) {
+            c.write_all(chunk).unwrap();
+            c.flush().unwrap();
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        assert_eq!(read_raw_frame(&mut c), body);
+    }
+
+    struct DeferOdd;
+
+    impl Service for DeferOdd {
+        fn on_frame(&self, conn: &ConnHandle, body: Vec<u8>) -> FrameOutcome {
+            if body[0] % 2 == 1 {
+                let handle = conn.clone();
+                std::thread::spawn(move || {
+                    std::thread::sleep(Duration::from_millis(20));
+                    handle.complete(vec![100, 0]);
+                });
+                return FrameOutcome::Deferred;
+            }
+            FrameOutcome::Reply(body)
+        }
+    }
+
+    #[test]
+    fn deferred_ops_keep_fifo_order() {
+        let pool = EventLoopPool::spawn(
+            "127.0.0.1:0".parse().unwrap(),
+            1,
+            0,
+            Arc::new(DeferOdd),
+            "defer",
+        )
+        .unwrap();
+        let mut c = TcpStream::connect(pool.addr).unwrap();
+        // odd (deferred), then evens that must queue behind it.
+        write_raw_frame(&mut c, &[1, 0]);
+        write_raw_frame(&mut c, &[2, 0]);
+        write_raw_frame(&mut c, &[4, 0]);
+        assert_eq!(read_raw_frame(&mut c)[0], 100, "deferred reply first");
+        assert_eq!(read_raw_frame(&mut c)[0], 2);
+        assert_eq!(read_raw_frame(&mut c)[0], 4);
+    }
+
+    #[test]
+    fn max_connections_drops_excess() {
+        let pool = EventLoopPool::spawn(
+            "127.0.0.1:0".parse().unwrap(),
+            1,
+            2,
+            Arc::new(Echo),
+            "capped",
+        )
+        .unwrap();
+        let mut keep: Vec<TcpStream> = Vec::new();
+        for _ in 0..2 {
+            let mut c = TcpStream::connect(pool.addr).unwrap();
+            write_raw_frame(&mut c, b"ok");
+            assert_eq!(read_raw_frame(&mut c), b"ok");
+            keep.push(c);
+        }
+        // Third connection is dropped by the loop: reads see EOF.
+        let mut extra = TcpStream::connect(pool.addr).unwrap();
+        extra
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        write_raw_frame(&mut extra, b"nope");
+        let mut buf = [0u8; 4];
+        match extra.read(&mut buf) {
+            Ok(0) => {}
+            Ok(_) => panic!("capped connection must not be served"),
+            Err(_) => {} // reset also acceptable
+        }
+        assert_eq!(pool.connections(), 2);
+    }
+
+    #[test]
+    fn client_dying_mid_frame_closes_cleanly() {
+        let pool = EventLoopPool::spawn(
+            "127.0.0.1:0".parse().unwrap(),
+            1,
+            0,
+            Arc::new(Echo),
+            "echo",
+        )
+        .unwrap();
+        {
+            let mut c = TcpStream::connect(pool.addr).unwrap();
+            // Announce 100 bytes, send 3, die.
+            c.write_all(&100u32.to_le_bytes()).unwrap();
+            c.write_all(&[1, 2, 3]).unwrap();
+        }
+        // The loop reaps the connection; a new client is unaffected.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while pool.connections() > 0 {
+            assert!(Instant::now() < deadline, "dead conn not reaped");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let mut c = TcpStream::connect(pool.addr).unwrap();
+        write_raw_frame(&mut c, b"after");
+        assert_eq!(read_raw_frame(&mut c), b"after");
+    }
+}

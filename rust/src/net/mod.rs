@@ -1,0 +1,43 @@
+//! Server ingress infrastructure: readiness polling, the event-loop
+//! reactor, and the unified [`ServerBuilder`].
+//!
+//! The crate's servers offer two ingress modes, selected per server via
+//! [`ServerBuilder::ingress`]:
+//!
+//! - [`Ingress::Threaded`] — one blocking OS thread per connection.
+//!   Portable and simple; threads are the scalability ceiling.
+//! - [`Ingress::EventLoop`] — an [`EventLoopPool`] of a few epoll-driven
+//!   reactor threads (Linux only) multiplexing every connection:
+//!   nonblocking sockets, incremental frame reassembly, coalesced
+//!   writes, and watch/long-poll pushes injected into the loop through
+//!   [`ConnHandle`]s. Thread count stays bounded at 10k+ connections.
+//!
+//! Protocol logic is shared between the modes: each server implements
+//! [`Service`] once and both ingresses call into the same request
+//! handlers.
+
+pub(crate) mod builder;
+pub(crate) mod event_loop;
+pub(crate) mod poller;
+#[cfg(target_os = "linux")]
+pub(crate) mod sys;
+
+pub use builder::{Ingress, NoState, ServerBuilder};
+pub use event_loop::{ConnHandle, EventLoopPool, FrameOutcome, Service};
+pub use poller::{PollEvent, Poller, Waker};
+
+/// Best-effort raise of the process's open-file soft limit toward
+/// `target` (never above the hard limit). Returns the resulting soft
+/// limit. No-op returning `Ok(0)` on non-Linux targets. Benches that
+/// ramp thousands of sockets call this first.
+pub fn raise_nofile_limit(target: u64) -> std::io::Result<u64> {
+    #[cfg(target_os = "linux")]
+    {
+        sys::raise_nofile_limit(target)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = target;
+        Ok(0)
+    }
+}

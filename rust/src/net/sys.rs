@@ -1,0 +1,119 @@
+//! Raw Linux syscall surface for the reactor: epoll, eventfd, and the
+//! fd rlimit — declared `extern "C"` against the C runtime std already
+//! links, so the crate stays zero-dependency (no `libc` crate). Only
+//! compiled on Linux; the poller's portable stub covers everything else.
+
+use std::io;
+use std::os::fd::{FromRawFd, OwnedFd};
+use std::os::raw::c_int;
+
+/// `struct epoll_event`. The kernel ABI packs this on x86-64 (a 12-byte
+/// struct); other architectures use natural alignment.
+#[derive(Clone, Copy)]
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+pub struct EpollEvent {
+    pub events: u32,
+    pub data: u64,
+}
+
+pub const EPOLLIN: u32 = 0x001;
+pub const EPOLLOUT: u32 = 0x004;
+pub const EPOLLERR: u32 = 0x008;
+pub const EPOLLHUP: u32 = 0x010;
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+pub const EPOLL_CTL_ADD: c_int = 1;
+pub const EPOLL_CTL_DEL: c_int = 2;
+pub const EPOLL_CTL_MOD: c_int = 3;
+
+const EPOLL_CLOEXEC: c_int = 0o2000000;
+const EFD_CLOEXEC: c_int = 0o2000000;
+const EFD_NONBLOCK: c_int = 0o4000;
+
+const RLIMIT_NOFILE: c_int = 7;
+
+#[repr(C)]
+struct RLimit {
+    cur: u64,
+    max: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: c_int) -> c_int;
+    fn epoll_ctl(
+        epfd: c_int,
+        op: c_int,
+        fd: c_int,
+        event: *mut EpollEvent,
+    ) -> c_int;
+    fn epoll_wait(
+        epfd: c_int,
+        events: *mut EpollEvent,
+        maxevents: c_int,
+        timeout: c_int,
+    ) -> c_int;
+    fn eventfd(initval: u32, flags: c_int) -> c_int;
+    fn getrlimit(resource: c_int, rlim: *mut RLimit) -> c_int;
+    fn setrlimit(resource: c_int, rlim: *const RLimit) -> c_int;
+}
+
+fn cvt(ret: c_int) -> io::Result<c_int> {
+    if ret < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(ret)
+    }
+}
+
+/// `epoll_create1(EPOLL_CLOEXEC)` as an owned fd (closed on drop).
+pub fn epoll_create() -> io::Result<OwnedFd> {
+    let fd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+    Ok(unsafe { OwnedFd::from_raw_fd(fd) })
+}
+
+/// One `epoll_ctl` call; `event` is ignored by the kernel for `DEL`.
+pub fn epoll_control(
+    epfd: c_int,
+    op: c_int,
+    fd: c_int,
+    event: Option<EpollEvent>,
+) -> io::Result<()> {
+    let mut ev = event.unwrap_or(EpollEvent { events: 0, data: 0 });
+    cvt(unsafe { epoll_ctl(epfd, op, fd, &mut ev) })?;
+    Ok(())
+}
+
+/// Blocking `epoll_wait`; returns how many entries of `events` are filled.
+/// A negative `timeout_ms` blocks until an event arrives.
+pub fn epoll_wait_events(
+    epfd: c_int,
+    events: &mut [EpollEvent],
+    timeout_ms: c_int,
+) -> io::Result<usize> {
+    let n = cvt(unsafe {
+        epoll_wait(epfd, events.as_mut_ptr(), events.len() as c_int, timeout_ms)
+    })?;
+    Ok(n as usize)
+}
+
+/// Nonblocking eventfd as an owned fd — the loop's cross-thread waker.
+pub fn eventfd_create() -> io::Result<OwnedFd> {
+    let fd = cvt(unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) })?;
+    Ok(unsafe { OwnedFd::from_raw_fd(fd) })
+}
+
+/// Best-effort raise of the open-file soft limit toward `target` (capped
+/// at the hard limit). Returns the resulting soft limit. The c1m bench
+/// calls this before ramping tens of thousands of sockets.
+pub fn raise_nofile_limit(target: u64) -> io::Result<u64> {
+    let mut lim = RLimit { cur: 0, max: 0 };
+    cvt(unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) })?;
+    if lim.cur >= target {
+        return Ok(lim.cur);
+    }
+    let wanted = target.min(lim.max);
+    let new = RLimit { cur: wanted, max: lim.max };
+    cvt(unsafe { setrlimit(RLIMIT_NOFILE, &new) })?;
+    Ok(wanted)
+}

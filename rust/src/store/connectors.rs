@@ -14,7 +14,7 @@ use std::time::Duration;
 
 use crate::codec::{Bytes, Decode, Encode, Reader, get_varint, put_varint};
 use crate::error::{Error, Result};
-use crate::kv::{KvClient, KvState};
+use crate::kv::{ClientOptions, KvClient, KvState};
 use crate::metrics::StoreBytes;
 use crate::netsim::Link;
 use crate::ops::{Op, OpResult, Pending};
@@ -218,8 +218,12 @@ pub enum ConnectorDesc {
     Memory { id: String },
     /// Shared-filesystem directory.
     File { dir: String },
-    /// redis-sim server endpoint.
+    /// redis-sim server endpoint (default client options).
     TcpKv { addr: String },
+    /// redis-sim server endpoint with explicit wire tuning
+    /// ([`ClientOptions`]): pipeline window, flush policy, timeouts. A
+    /// proxy minted against a tuned connector round-trips the tuning.
+    TcpKvWith { addr: String, options: ClientOptions },
     /// A throttled view over another channel (latency us, bandwidth B/s).
     Throttled {
         inner: Box<ConnectorDesc>,
@@ -308,6 +312,11 @@ impl Encode for ConnectorDesc {
                 replicas.encode(buf);
                 vnodes.encode(buf);
             }
+            ConnectorDesc::TcpKvWith { addr, options } => {
+                put_varint(buf, 7);
+                addr.encode(buf);
+                options.encode(buf);
+            }
         }
     }
 }
@@ -341,6 +350,10 @@ impl Decode for ConnectorDesc {
                 replicas: Decode::decode(r)?,
                 vnodes: Decode::decode(r)?,
             },
+            7 => ConnectorDesc::TcpKvWith {
+                addr: Decode::decode(r)?,
+                options: Decode::decode(r)?,
+            },
             t => return Err(Error::Codec(format!("bad connector tag {t}"))),
         })
     }
@@ -360,6 +373,12 @@ impl ConnectorDesc {
                     Error::Config(format!("bad kv addr {addr}: {e}"))
                 })?;
                 Ok(Arc::new(TcpKvConnector::connect(addr)?))
+            }
+            ConnectorDesc::TcpKvWith { addr, options } => {
+                let addr: SocketAddr = addr.parse().map_err(|e| {
+                    Error::Config(format!("bad kv addr {addr}: {e}"))
+                })?;
+                Ok(Arc::new(TcpKvConnector::connect_with(addr, *options)?))
             }
             ConnectorDesc::Throttled { inner, latency_us, bandwidth } => {
                 Ok(Arc::new(ThrottledConnector::new(
@@ -631,21 +650,43 @@ impl Connector for FileConnector {
 /// Connector speaking to a redis-sim [`crate::kv::KvServer`].
 pub struct TcpKvConnector {
     addr: SocketAddr,
+    options: ClientOptions,
     client: KvClient,
 }
 
 impl TcpKvConnector {
+    /// Connect with default wire options.
     pub fn connect(addr: SocketAddr) -> Result<TcpKvConnector> {
+        TcpKvConnector::connect_with(addr, ClientOptions::default())
+    }
+
+    /// Connect with explicit wire tuning ([`ClientOptions`]); the options
+    /// travel inside this connector's descriptor, so proxies resolved
+    /// elsewhere reconnect with the same tuning.
+    pub fn connect_with(
+        addr: SocketAddr,
+        options: ClientOptions,
+    ) -> Result<TcpKvConnector> {
         Ok(TcpKvConnector {
             addr,
-            client: KvClient::connect(addr)?,
+            options,
+            client: KvClient::connect_with(addr, options)?,
         })
     }
 }
 
 impl Connector for TcpKvConnector {
     fn desc(&self) -> ConnectorDesc {
-        ConnectorDesc::TcpKv { addr: self.addr.to_string() }
+        // Default options keep the compact legacy descriptor (and its wire
+        // encoding) so tuned and untuned connectors interoperate.
+        if self.options == ClientOptions::default() {
+            ConnectorDesc::TcpKv { addr: self.addr.to_string() }
+        } else {
+            ConnectorDesc::TcpKvWith {
+                addr: self.addr.to_string(),
+                options: self.options,
+            }
+        }
     }
 
     fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
@@ -1103,7 +1144,7 @@ impl Connector for MultiConnector {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kv::KvServer;
+    use crate::net::ServerBuilder;
 
     fn exercise(c: &dyn Connector) {
         assert!(!c.exists("k").unwrap());
@@ -1270,7 +1311,7 @@ mod tests {
 
     #[test]
     fn tcp_kv_connector_semantics() {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let c = TcpKvConnector::connect(server.addr).unwrap();
         exercise(&c);
         // wait_get across a second connector.
@@ -1368,8 +1409,28 @@ mod tests {
     }
 
     #[test]
+    fn tuned_tcp_desc_roundtrips_options() {
+        let server = ServerBuilder::new().spawn_kv().unwrap();
+        let opts = ClientOptions {
+            pipeline_window: 16,
+            ..ClientOptions::coalescing()
+        };
+        let c = TcpKvConnector::connect_with(server.addr, opts).unwrap();
+        c.put("tuned", vec![9]).unwrap();
+        let desc = c.desc();
+        assert!(matches!(desc, ConnectorDesc::TcpKvWith { .. }));
+        let decoded = ConnectorDesc::from_bytes(&desc.to_bytes()).unwrap();
+        assert_eq!(desc, decoded);
+        let c2 = decoded.connect().unwrap();
+        assert_eq!(c2.get("tuned").unwrap().map(|b| b.to_vec()), Some(vec![9]));
+        // Default options keep the compact legacy descriptor.
+        let plain = TcpKvConnector::connect(server.addr).unwrap();
+        assert!(matches!(plain.desc(), ConnectorDesc::TcpKv { .. }));
+    }
+
+    #[test]
     fn tcp_watch_wakes_across_connectors() {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let c = TcpKvConnector::connect(server.addr).unwrap();
         let handle = c.watch("cross");
         // The armed watch shares the pipelined connection: traffic flows.

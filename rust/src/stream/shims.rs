@@ -422,14 +422,13 @@ pub fn probe(addr: SocketAddr) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::broker::BrokerServer;
-    use crate::kv::KvServer;
+    use crate::net::ServerBuilder;
     use crate::store::Store;
     use crate::stream::{Metadata, StreamConsumer, StreamProducer};
 
     #[test]
     fn tcp_log_shim_end_to_end() {
-        let server = BrokerServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_broker().unwrap();
         let store = Store::memory("s");
         let mut producer = StreamProducer::new(
             LogPublisher::connect(server.addr).unwrap(),
@@ -449,7 +448,7 @@ mod tests {
 
     #[test]
     fn consumer_group_resume() {
-        let server = BrokerServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_broker().unwrap();
         let store = Store::memory("s");
         let mut producer = StreamProducer::new(
             LogPublisher::connect(server.addr).unwrap(),
@@ -588,7 +587,7 @@ mod tests {
 
     #[test]
     fn kv_pubsub_shim_end_to_end() {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let store = Store::memory("s");
         let mut consumer = StreamConsumer::new(
             KvPubSubSubscriber::connect(server.addr, &["t".into()]).unwrap(),
@@ -608,7 +607,7 @@ mod tests {
 
     #[test]
     fn kv_queue_shim_single_delivery() {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         let store = Store::memory("s");
         let mut producer = StreamProducer::new(
             KvQueuePublisher::connect(server.addr).unwrap(),

@@ -11,6 +11,7 @@ use proxystore::broker::{
     PartitionBroker, PartitionedConsumer, PartitionedProducer, Partitioner,
 };
 use proxystore::codec::Bytes;
+use proxystore::net::ServerBuilder;
 use proxystore::stream::{
     Metadata, PartitionedLogPublisher, PartitionedLogSubscriber,
     StreamConsumer, StreamProducer,
@@ -20,7 +21,7 @@ use proxystore::testing::fail::FlakyBroker;
 
 fn tcp_fabric(n: usize, partitions: u32) -> (BrokerFabric, Vec<BrokerServer>) {
     let servers: Vec<BrokerServer> =
-        (0..n).map(|_| BrokerServer::spawn().unwrap()).collect();
+        (0..n).map(|_| ServerBuilder::new().spawn_broker().unwrap()).collect();
     let addrs: Vec<_> = servers.iter().map(|s| s.addr).collect();
     (BrokerFabric::connect(&addrs, partitions).unwrap(), servers)
 }

@@ -9,7 +9,8 @@ use std::time::Duration;
 use proxystore::codec::{Bytes, Decode, Encode};
 use proxystore::engine::{ClusterConfig, LocalCluster, StoreExecutor, TaskArg};
 use proxystore::error::Error;
-use proxystore::kv::{KvClient, KvServer};
+use proxystore::kv::KvClient;
+use proxystore::net::ServerBuilder;
 use proxystore::ownership::{take_violations, LeaseLifetime, Lifetime, StoreOwnedExt};
 use proxystore::ownership::lifetime::StoreLifetimeExt;
 use proxystore::prelude::{Proxy, Store};
@@ -17,7 +18,7 @@ use proxystore::store::TcpKvConnector;
 
 #[test]
 fn kv_server_death_surfaces_as_connector_error() {
-    let mut server = KvServer::spawn().unwrap();
+    let mut server = ServerBuilder::new().spawn_kv().unwrap();
     let store = Store::new(
         "dead",
         Arc::new(TcpKvConnector::connect(server.addr).unwrap()),
@@ -50,12 +51,12 @@ fn kv_server_death_surfaces_as_connector_error() {
 fn kv_restart_loses_volatile_state_but_serves_new_writes() {
     // The redis-sim store is volatile (like the paper's Redis deployments
     // without persistence): a restart is an empty server on a new port.
-    let server = KvServer::spawn().unwrap();
+    let server = ServerBuilder::new().spawn_kv().unwrap();
     let c = KvClient::connect(server.addr).unwrap();
     c.set("k", Bytes(vec![1])).unwrap();
     drop(server);
 
-    let server2 = KvServer::spawn().unwrap();
+    let server2 = ServerBuilder::new().spawn_kv().unwrap();
     let c2 = KvClient::connect(server2.addr).unwrap();
     assert_eq!(c2.get("k").unwrap(), None);
     c2.set("k", Bytes(vec![2])).unwrap();
@@ -121,7 +122,7 @@ fn lease_expiry_mid_workflow_is_a_clean_not_found() {
 
 #[test]
 fn wait_get_across_server_clients_respects_timeout_under_load() {
-    let server = KvServer::spawn().unwrap();
+    let server = ServerBuilder::new().spawn_kv().unwrap();
     // Saturate with a few blocked waiters, then check timeouts still fire.
     let addr = server.addr;
     let waiters: Vec<_> = (0..4)
@@ -185,7 +186,7 @@ fn owner_dropped_while_task_holds_borrow_defers_eviction() {
 #[test]
 fn executor_value_args_survive_store_death() {
     // Inline (Value) args must not depend on the store at all.
-    let mut server = KvServer::spawn().unwrap();
+    let mut server = ServerBuilder::new().spawn_kv().unwrap();
     let cluster = Arc::new(LocalCluster::new(ClusterConfig {
         workers: 1,
         ..Default::default()

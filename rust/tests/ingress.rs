@@ -1,0 +1,251 @@
+//! Ingress-plane integration tests: the event-loop reactor and the
+//! threaded fallback under hostile wire conditions — partial frames,
+//! mid-frame disconnects, connection churn, connection caps, and the
+//! watch/long-poll paths that park on the event loop.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use proxystore::codec::Bytes;
+use proxystore::kv::{
+    read_frame, write_frame, ClientOptions, FlushPolicy, KvClient, Request,
+    Response,
+};
+use proxystore::net::{Ingress, ServerBuilder};
+
+fn both_modes() -> Vec<Ingress> {
+    if cfg!(target_os = "linux") {
+        vec![Ingress::Threaded, Ingress::EventLoop]
+    } else {
+        vec![Ingress::Threaded]
+    }
+}
+
+/// Encode `req` as one wire frame (length prefix + body).
+fn frame_bytes(req: &Request) -> Vec<u8> {
+    let mut buf = Vec::new();
+    write_frame(&mut buf, req).expect("encode frame");
+    buf
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn event_ingress_reassembles_bytewise_dribbled_frames() {
+    let server = ServerBuilder::new()
+        .ingress(Ingress::EventLoop)
+        .spawn_kv()
+        .unwrap();
+    let mut conn = TcpStream::connect(server.addr).unwrap();
+    conn.set_nodelay(true).unwrap();
+
+    // Feed the Set frame one byte at a time: every read the reactor
+    // does sees a partial frame it must buffer and resume.
+    let set = frame_bytes(&Request::Set {
+        key: "dribble".into(),
+        value: Bytes(vec![42u8; 64]),
+    });
+    for b in &set {
+        conn.write_all(&[*b]).unwrap();
+        conn.flush().unwrap();
+    }
+    assert_eq!(
+        read_frame::<_, Response>(&mut conn).unwrap(),
+        Some(Response::Ok)
+    );
+
+    // Same treatment for the readback, split into two arbitrary halves
+    // with a pause between them.
+    let get = frame_bytes(&Request::Get { key: "dribble".into() });
+    let (a, b) = get.split_at(get.len() / 2);
+    conn.write_all(a).unwrap();
+    conn.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(20));
+    conn.write_all(b).unwrap();
+    conn.flush().unwrap();
+    match read_frame::<_, Response>(&mut conn).unwrap() {
+        Some(Response::Value(Some(v))) => assert_eq!(v.0, vec![42u8; 64]),
+        other => panic!("unexpected reply: {other:?}"),
+    }
+}
+
+#[test]
+fn client_dying_mid_frame_leaves_server_healthy() {
+    for ingress in both_modes() {
+        let server =
+            ServerBuilder::new().ingress(ingress).spawn_kv().unwrap();
+
+        // Claim a 1 KiB frame, send 10 bytes of it, vanish.
+        {
+            let mut conn = TcpStream::connect(server.addr).unwrap();
+            conn.write_all(&1024u32.to_le_bytes()).unwrap();
+            conn.write_all(&[0u8; 10]).unwrap();
+            conn.flush().unwrap();
+        }
+        // And once more dying inside the length prefix itself.
+        {
+            let mut conn = TcpStream::connect(server.addr).unwrap();
+            conn.write_all(&[7u8, 0]).unwrap();
+            conn.flush().unwrap();
+        }
+
+        let client = KvClient::connect(server.addr).unwrap();
+        client.set("alive", Bytes(vec![1, 2, 3])).unwrap();
+        assert_eq!(
+            client.get("alive").unwrap(),
+            Some(Bytes(vec![1, 2, 3])),
+            "{ingress:?} server unusable after mid-frame disconnects"
+        );
+    }
+}
+
+#[test]
+fn churn_1k_connections_both_modes() {
+    // The threaded server retains a shutdown-clone per accepted socket,
+    // so 1k churn wants fd headroom beyond stingy container defaults.
+    let _ = proxystore::net::raise_nofile_limit(16_384);
+    for ingress in both_modes() {
+        let server =
+            ServerBuilder::new().ingress(ingress).spawn_kv().unwrap();
+        for i in 0..1000 {
+            let mut conn = TcpStream::connect(server.addr).unwrap();
+            conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            write_frame(&mut conn, &Request::Ping).unwrap();
+            assert_eq!(
+                read_frame::<_, Response>(&mut conn).unwrap(),
+                Some(Response::Ok),
+                "{ingress:?} ping failed at churn iteration {i}"
+            );
+            // Drop closes the socket; the server must reap it and keep
+            // accepting.
+        }
+        let client = KvClient::connect(server.addr).unwrap();
+        client.ping().unwrap();
+    }
+}
+
+#[test]
+fn max_connections_drops_excess_both_modes() {
+    for ingress in both_modes() {
+        let server = ServerBuilder::new()
+            .ingress(ingress)
+            .max_connections(2)
+            .spawn_kv()
+            .unwrap();
+
+        let a = KvClient::connect(server.addr).unwrap();
+        let b = KvClient::connect(server.addr).unwrap();
+        a.ping().unwrap();
+        b.ping().unwrap();
+
+        // Third connection is accepted then immediately dropped; its
+        // first read sees EOF (or a reset, depending on timing).
+        let mut extra = TcpStream::connect(server.addr).unwrap();
+        extra.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let _ = write_frame(&mut extra, &Request::Ping);
+        let reply = read_frame::<_, Response>(&mut extra);
+        assert!(
+            matches!(reply, Ok(None) | Err(_)),
+            "{ingress:?} over-cap connection got served: {reply:?}"
+        );
+
+        // The admitted pair is unaffected.
+        a.ping().unwrap();
+        b.ping().unwrap();
+        // And capacity frees up once one of them leaves.
+        drop(a);
+        std::thread::sleep(Duration::from_millis(50));
+        let c = KvClient::connect(server.addr).unwrap();
+        c.ping().unwrap();
+    }
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn notify_reaches_watch_parked_on_event_loop() {
+    let server = ServerBuilder::new()
+        .ingress(Ingress::EventLoop)
+        .spawn_kv()
+        .unwrap();
+    let watcher = KvClient::connect(server.addr).unwrap();
+    let setter = KvClient::connect(server.addr).unwrap();
+
+    let handle = watcher.watch("parked");
+    // FIFO barrier: once ping answers, the Watch frame before it has
+    // been armed server-side.
+    watcher.ping().unwrap();
+    assert_eq!(watcher.watches_armed(), 1);
+
+    setter.set("parked", Bytes(b"pushed".to_vec())).unwrap();
+    let value = handle.wait().unwrap();
+    assert_eq!(value.to_vec(), b"pushed".to_vec());
+    assert_eq!(watcher.watches_armed(), 0);
+
+    // The watcher's connection stayed a live request pipe throughout.
+    watcher.ping().unwrap();
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn broker_long_poll_parks_on_event_loop() {
+    use proxystore::broker::BrokerClient;
+
+    let server = ServerBuilder::new()
+        .ingress(Ingress::EventLoop)
+        .spawn_broker()
+        .unwrap();
+    let addr = server.addr;
+
+    let fetcher = std::thread::spawn(move || {
+        let sub = BrokerClient::connect(addr).unwrap();
+        // Starts before anything is produced: must park (deferred on
+        // the event loop), not return empty.
+        sub.fetch("topic", 0, 1, Duration::from_secs(10)).unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(150));
+
+    let publisher = BrokerClient::connect(addr).unwrap();
+    publisher.produce("topic", Bytes(b"wake".to_vec())).unwrap();
+
+    let entries = fetcher.join().unwrap();
+    assert_eq!(entries.len(), 1);
+    assert_eq!(entries[0].payload.0, b"wake".to_vec());
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn tuned_client_options_work_over_event_ingress() {
+    use proxystore::ops::Op;
+
+    let server = ServerBuilder::new()
+        .ingress(Ingress::EventLoop)
+        .spawn_kv()
+        .unwrap();
+    let options = ClientOptions {
+        pipeline_window: 4,
+        flush: FlushPolicy::Coalesce {
+            max_buffer: 16 * 1024,
+            max_delay: Duration::from_millis(1),
+        },
+        ..ClientOptions::default()
+    };
+    let client = KvClient::connect_with(server.addr, options).unwrap();
+
+    let mut handles = Vec::new();
+    for i in 0..64 {
+        handles.push(client.submit_op(Op::Put {
+            key: format!("w-{i}"),
+            data: vec![i as u8; 128],
+        }));
+        assert!(client.in_flight() <= 4, "window exceeded");
+    }
+    for h in handles {
+        h.wait().unwrap().into_unit().unwrap();
+    }
+    for i in (0..64).step_by(13) {
+        assert_eq!(
+            client.get(&format!("w-{i}")).unwrap(),
+            Some(Bytes(vec![i as u8; 128]))
+        );
+    }
+}

@@ -4,11 +4,11 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use proxystore::broker::BrokerServer;
 use proxystore::codec::{Bytes, Decode, Encode};
 use proxystore::engine::{ClusterConfig, LocalCluster};
 use proxystore::futures::ProxyFuture;
 use proxystore::kv::KvServer;
+use proxystore::net::ServerBuilder;
 use proxystore::prelude::{Proxy, Store};
 use proxystore::store::{TcpKvConnector, ThrottledConnector};
 use proxystore::stream::{
@@ -26,7 +26,7 @@ fn tcp_store(server: &KvServer, name: &str) -> Store {
 fn proxies_cross_engine_boundaries_via_tcp_kv() {
     // Producer cluster and consumer cluster share NOTHING except the KV
     // server endpoint — the paper's engine-agnosticism claim.
-    let server = KvServer::spawn().unwrap();
+    let server = ServerBuilder::new().spawn_kv().unwrap();
     let store = tcp_store(&server, "xengine");
 
     let cluster_a = Arc::new(LocalCluster::new(ClusterConfig::default()));
@@ -62,8 +62,8 @@ fn proxies_cross_engine_boundaries_via_tcp_kv() {
 fn stream_over_tcp_broker_and_tcp_kv_with_worker_pool() {
     // Full Fig 4 topology with real sockets: producer → broker(event) +
     // kv(bulk); dispatcher → worker pool; workers resolve bulk from kv.
-    let kv = KvServer::spawn().unwrap();
-    let broker = BrokerServer::spawn().unwrap();
+    let kv = ServerBuilder::new().spawn_kv().unwrap();
+    let broker = ServerBuilder::new().spawn_broker().unwrap();
     let n_items = 10usize;
     let kv_addr = kv.addr;
     let broker_addr = broker.addr;
@@ -125,7 +125,7 @@ fn stream_over_tcp_broker_and_tcp_kv_with_worker_pool() {
 
 #[test]
 fn throttled_tcp_store_is_slower_but_correct() {
-    let server = KvServer::spawn().unwrap();
+    let server = ServerBuilder::new().spawn_kv().unwrap();
     let fast = tcp_store(&server, "fast");
     let slow = Store::new(
         "slow",
@@ -154,7 +154,7 @@ fn throttled_tcp_store_is_slower_but_correct() {
 
 #[test]
 fn future_timeout_and_late_set_over_tcp() {
-    let server = KvServer::spawn().unwrap();
+    let server = ServerBuilder::new().spawn_kv().unwrap();
     let store = tcp_store(&server, "late");
     let fut: ProxyFuture<u32> = store.future();
     // Timeout-bounded proxy fails fast...
@@ -167,7 +167,7 @@ fn future_timeout_and_late_set_over_tcp() {
 
 #[test]
 fn many_concurrent_futures_one_server() {
-    let server = KvServer::spawn().unwrap();
+    let server = ServerBuilder::new().spawn_kv().unwrap();
     let store = tcp_store(&server, "many");
     let futures: Vec<ProxyFuture<u64>> =
         (0..16).map(|_| store.future()).collect();

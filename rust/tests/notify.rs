@@ -9,6 +9,7 @@ use std::time::{Duration, Instant};
 use proxystore::codec::{Bytes, Decode, Encode};
 use proxystore::futures::{when_all, when_any, ProxyFuture};
 use proxystore::kv::{KvClient, KvServer};
+use proxystore::net::ServerBuilder;
 use proxystore::prelude::Store;
 use proxystore::shard::ShardedConnector;
 use proxystore::store::{Connector, ConnectorDesc, TcpKvConnector};
@@ -19,7 +20,7 @@ fn parked_watch_never_stalls_the_pipelined_connection() {
     // never fires on a pipelined connection while ordinary traffic on the
     // SAME connection keeps completing. The old WaitGet design parked the
     // FIFO response stream here; the watch plane must not.
-    let server = KvServer::spawn().unwrap();
+    let server = ServerBuilder::new().spawn_kv().unwrap();
     let client = KvClient::connect(server.addr).unwrap();
     let parked = client.watch("never-fires");
     assert_eq!(client.watches_armed(), 1);
@@ -48,7 +49,7 @@ fn watch_wakes_across_sharded_tcp_fabric() {
     // sockets: the wake crosses the wire as one Notify push from the
     // owning shard.
     let servers: Vec<KvServer> =
-        (0..3).map(|_| KvServer::spawn().unwrap()).collect();
+        (0..3).map(|_| ServerBuilder::new().spawn_kv().unwrap()).collect();
     let backends: Vec<Arc<dyn Connector>> = servers
         .iter()
         .map(|s| {
@@ -80,7 +81,7 @@ fn watch_wakes_across_sharded_tcp_fabric() {
 
 #[test]
 fn watch_fails_promptly_when_server_dies_mid_wait() {
-    let mut server = KvServer::spawn().unwrap();
+    let mut server = ServerBuilder::new().spawn_kv().unwrap();
     let conn = TcpKvConnector::connect(server.addr).unwrap();
     let handle = conn.watch("never-set");
     std::thread::sleep(Duration::from_millis(30));
@@ -98,7 +99,7 @@ fn wait_get_shares_the_connection_with_its_own_producer() {
     // Consumer parks in wait_get on the SAME TcpKvConnector whose shared
     // client the producer then writes through: only possible because the
     // wait rides an out-of-band watch instead of parking the pipe.
-    let server = KvServer::spawn().unwrap();
+    let server = ServerBuilder::new().spawn_kv().unwrap();
     let conn = Arc::new(TcpKvConnector::connect(server.addr).unwrap());
     let c2 = conn.clone();
     let waiter = std::thread::spawn(move || {
@@ -155,7 +156,7 @@ fn futures_when_all_and_result_async_across_sharded_store() {
 fn set_result_is_atomic_over_tcp() {
     // The TOCTOU regression, over a real wire: N producers race one
     // future whose channel is a TCP KV server; SetNx decides the winner.
-    let server = KvServer::spawn().unwrap();
+    let server = ServerBuilder::new().spawn_kv().unwrap();
     let store = Store::new(
         "race",
         Arc::new(TcpKvConnector::connect(server.addr).unwrap()),
@@ -183,7 +184,7 @@ fn set_result_is_atomic_over_tcp() {
 fn many_waiters_one_put_fan_out() {
     // 64 watches parked on one key over ONE pipelined connection; a
     // single put wakes every one of them.
-    let server = KvServer::spawn().unwrap();
+    let server = ServerBuilder::new().spawn_kv().unwrap();
     let client = Arc::new(KvClient::connect(server.addr).unwrap());
     let handles: Vec<_> = (0..64).map(|_| client.watch("fan")).collect();
     assert_eq!(client.watches_armed(), 64);

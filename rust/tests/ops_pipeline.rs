@@ -8,6 +8,7 @@ use std::time::{Duration, Instant};
 
 use proxystore::codec::{Bytes, Decode, Encode};
 use proxystore::kv::{KvClient, KvServer, Request};
+use proxystore::net::ServerBuilder;
 use proxystore::ops::{Op, OpResult};
 use proxystore::prelude::{Proxy, Store};
 use proxystore::shard::ShardedConnector;
@@ -16,7 +17,7 @@ use proxystore::testing::fail::FlakyConnector;
 
 #[test]
 fn pipelined_window_roundtrips_over_tcp() {
-    let server = KvServer::spawn().unwrap();
+    let server = ServerBuilder::new().spawn_kv().unwrap();
     let client = KvClient::connect(server.addr).unwrap();
     // A whole window in flight before the first wait: one shared stream.
     let puts: Vec<_> = (0..64)
@@ -55,7 +56,7 @@ fn pipelined_window_roundtrips_over_tcp() {
 fn submission_order_is_execution_order() {
     // FIFO pipelining means a get submitted after a put of the same key
     // (on the same connection) must observe it — no waits in between.
-    let server = KvServer::spawn().unwrap();
+    let server = ServerBuilder::new().spawn_kv().unwrap();
     let client = KvClient::connect(server.addr).unwrap();
     let mut pairs = Vec::new();
     for round in 0..16 {
@@ -78,7 +79,7 @@ fn submission_order_is_execution_order() {
 
 #[test]
 fn pipelined_connection_death_mid_flight() {
-    let mut server = KvServer::spawn().unwrap();
+    let mut server = ServerBuilder::new().spawn_kv().unwrap();
     let client = KvClient::connect(server.addr).unwrap();
     client.set("pre", Bytes(vec![1])).unwrap();
     // Park one op server-side so the stream is mid-flight, then kill the
@@ -101,7 +102,7 @@ fn pipelined_connection_death_mid_flight() {
 
 #[test]
 fn tcp_connector_submits_nonblocking() {
-    let server = KvServer::spawn().unwrap();
+    let server = ServerBuilder::new().spawn_kv().unwrap();
     let conn = TcpKvConnector::connect(server.addr).unwrap();
     assert!(conn.submits_nonblocking());
     let handles: Vec<_> = (0..32)
@@ -126,7 +127,7 @@ fn async_store_over_tcp_shard_fabric() {
     // The full stack: Store -> sharded fabric -> TCP backends, driven
     // through the async surface.
     let servers: Vec<KvServer> =
-        (0..3).map(|_| KvServer::spawn().unwrap()).collect();
+        (0..3).map(|_| ServerBuilder::new().spawn_kv().unwrap()).collect();
     let backends: Vec<Arc<dyn Connector>> = servers
         .iter()
         .map(|s| {
@@ -211,7 +212,7 @@ fn pending_error_propagates_through_store() {
 fn mixed_submit_and_blocking_traffic_coexist() {
     // Blocking calls and submitted ops interleave on one pipelined
     // connection without corrupting FIFO matching.
-    let server = KvServer::spawn().unwrap();
+    let server = ServerBuilder::new().spawn_kv().unwrap();
     let client = Arc::new(KvClient::connect(server.addr).unwrap());
     let hammers: Vec<_> = (0..3)
         .map(|t| {

@@ -9,6 +9,7 @@ use std::time::Duration;
 
 use proxystore::codec::{Bytes, Decode, Encode};
 use proxystore::kv::{KvClient, KvServer};
+use proxystore::net::ServerBuilder;
 use proxystore::prelude::{Proxy, Store};
 use proxystore::shard::{ElasticShards, ShardMembers};
 use proxystore::store::{Connector, ConnectorDesc, MemoryConnector};
@@ -156,7 +157,7 @@ fn rebalance_with_slow_shard_still_converges() {
 #[test]
 fn elastic_over_real_tcp_backends() {
     let servers: Vec<KvServer> =
-        (0..3).map(|_| KvServer::spawn().unwrap()).collect();
+        (0..3).map(|_| ServerBuilder::new().spawn_kv().unwrap()).collect();
     let members: ShardMembers = servers
         .iter()
         .enumerate()
@@ -177,7 +178,7 @@ fn elastic_over_real_tcp_backends() {
 
     // Scale out onto a fresh server: the migration runs over real sockets
     // (MGET/MPUT/MDEL frames), not in-process shortcuts.
-    let extra = KvServer::spawn().unwrap();
+    let extra = ServerBuilder::new().spawn_kv().unwrap();
     elastic
         .add_shard(
             3,
@@ -246,7 +247,7 @@ fn watch_armed_before_membership_change_survives_both_directions() {
 fn elastic_watch_over_tcp_fails_promptly_when_backend_dies() {
     // A watch whose only backing server dies mid-wait must surface the
     // failure instead of hanging the waiter forever.
-    let mut server = KvServer::spawn().unwrap();
+    let mut server = ServerBuilder::new().spawn_kv().unwrap();
     let members: ShardMembers = vec![(
         0,
         ConnectorDesc::TcpKv { addr: server.addr.to_string() }

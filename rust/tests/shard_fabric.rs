@@ -8,6 +8,7 @@ use std::time::Duration;
 use proxystore::codec::{Bytes, Decode, Encode};
 use proxystore::error::Error;
 use proxystore::kv::{KvClient, KvServer};
+use proxystore::net::ServerBuilder;
 use proxystore::prelude::{prefetch, Proxy, Store};
 use proxystore::shard::{HashRing, ShardedConnector, ShardedDesc};
 use proxystore::store::{Connector, ConnectorDesc};
@@ -29,7 +30,7 @@ fn sharded_proxy_resolves_through_codec_roundtrip() {
     // fabric over TCP. Nothing from the minting side is reused except the
     // serialized bytes and the live servers.
     let servers: Vec<KvServer> =
-        (0..3).map(|_| KvServer::spawn().unwrap()).collect();
+        (0..3).map(|_| ServerBuilder::new().spawn_kv().unwrap()).collect();
     let store = Store::new(
         "mint",
         tcp_fabric_desc(&servers, 1).connect().unwrap(),
@@ -65,7 +66,7 @@ fn ring_agrees_with_deserialized_fabric() {
     // Two independently decoded fabrics route identically — the property
     // that makes a sharded proxy self-contained.
     let servers: Vec<KvServer> =
-        (0..4).map(|_| KvServer::spawn().unwrap()).collect();
+        (0..4).map(|_| ServerBuilder::new().spawn_kv().unwrap()).collect();
     let desc = tcp_fabric_desc(&servers, 1).desc();
     let bytes = desc.to_bytes();
     let a = ConnectorDesc::from_bytes(&bytes).unwrap().connect().unwrap();
@@ -86,7 +87,7 @@ fn ring_agrees_with_deserialized_fabric() {
 #[test]
 fn batched_ops_one_round_trip_per_shard_over_tcp() {
     let servers: Vec<KvServer> =
-        (0..2).map(|_| KvServer::spawn().unwrap()).collect();
+        (0..2).map(|_| ServerBuilder::new().spawn_kv().unwrap()).collect();
     let store = Store::new(
         "batch",
         tcp_fabric_desc(&servers, 1).connect().unwrap(),
@@ -125,7 +126,7 @@ fn batched_ops_one_round_trip_per_shard_over_tcp() {
 #[test]
 fn replica_failover_with_real_server_death() {
     let mut servers: Vec<KvServer> =
-        (0..3).map(|_| KvServer::spawn().unwrap()).collect();
+        (0..3).map(|_| ServerBuilder::new().spawn_kv().unwrap()).collect();
     let router = Arc::new(
         ShardedConnector::new(
             servers
@@ -170,7 +171,7 @@ fn replica_failover_with_real_server_death() {
 #[test]
 fn prefetch_over_tcp_fabric_amortizes_resolution() {
     let servers: Vec<KvServer> =
-        (0..3).map(|_| KvServer::spawn().unwrap()).collect();
+        (0..3).map(|_| ServerBuilder::new().spawn_kv().unwrap()).collect();
     let store = Store::new(
         "pref",
         tcp_fabric_desc(&servers, 1).connect().unwrap(),

@@ -12,6 +12,7 @@ use std::time::Duration;
 
 use proxystore::codec::Bytes;
 use proxystore::kv::{KvClient, KvServer};
+use proxystore::net::ServerBuilder;
 use proxystore::metrics::telemetry;
 use proxystore::prelude::Store;
 use proxystore::shard::{ElasticShards, ShardMembers, ShardedConnector};
@@ -23,7 +24,7 @@ fn tcp_backends(n: usize) -> (Vec<KvServer>, Vec<Arc<dyn Connector>>) {
     let mut servers = Vec::with_capacity(n);
     let mut conns: Vec<Arc<dyn Connector>> = Vec::with_capacity(n);
     for _ in 0..n {
-        let server = KvServer::spawn().unwrap();
+        let server = ServerBuilder::new().spawn_kv().unwrap();
         conns.push(Arc::new(TcpKvConnector::connect(server.addr).unwrap()));
         servers.push(server);
     }
@@ -129,7 +130,7 @@ fn rebalance_over_tcp_reports_from_every_layer() {
 
 #[test]
 fn telemetry_snapshot_crosses_the_wire() {
-    let server = KvServer::spawn().unwrap();
+    let server = ServerBuilder::new().spawn_kv().unwrap();
     let client = KvClient::connect(server.addr).unwrap();
 
     client.set("wire-snap-key", Bytes(vec![3u8; 64])).unwrap();
