@@ -103,6 +103,16 @@ pub trait PartitionBroker: Send + Sync {
         -> Result<u64>;
 
     fn end_offset_of(&self, topic: &str, partition: u32) -> Result<u64>;
+
+    /// Scrape the member's process-wide telemetry registry. `None` means
+    /// the channel is in-process (an embedded [`BrokerState`]) — its
+    /// metrics already live in the local registry, so there is nothing
+    /// remote to fetch.
+    fn scrape_telemetry(
+        &self,
+    ) -> Result<Option<crate::metrics::TelemetrySnapshot>> {
+        Ok(None)
+    }
 }
 
 impl PartitionBroker for BrokerState {
@@ -218,6 +228,12 @@ impl PartitionBroker for BrokerClient {
     fn end_offset_of(&self, topic: &str, partition: u32) -> Result<u64> {
         BrokerClient::end_offset_of(self, topic, partition)
     }
+
+    fn scrape_telemetry(
+        &self,
+    ) -> Result<Option<crate::metrics::TelemetrySnapshot>> {
+        BrokerClient::telemetry(self).map(Some)
+    }
 }
 
 /// A broker instance behind a simulated link: every frame pays the link
@@ -312,6 +328,14 @@ impl PartitionBroker for ThrottledBroker {
     fn end_offset_of(&self, topic: &str, partition: u32) -> Result<u64> {
         self.link.transfer(0);
         self.inner.end_offset_of(topic, partition)
+    }
+
+    fn scrape_telemetry(
+        &self,
+    ) -> Result<Option<crate::metrics::TelemetrySnapshot>> {
+        // Observability traffic doesn't pay the simulated link: scrapes
+        // model an out-of-band admin plane.
+        self.inner.scrape_telemetry()
     }
 }
 

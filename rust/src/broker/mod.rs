@@ -80,6 +80,33 @@ pub enum BrokerRequest {
     EndOffsetPart { topic: String, partition: u32 },
     /// Non-empty partitions of a topic; replies `PartitionList`.
     Partitions { topic: String },
+    /// Scrape this process's telemetry registry; replies `Telemetry`
+    /// carrying an encoded [`TelemetrySnapshot`](crate::metrics::TelemetrySnapshot).
+    TelemetrySnap,
+}
+
+impl BrokerRequest {
+    /// Stable op label for metrics and the slow-op log.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BrokerRequest::Produce { .. } => "produce",
+            BrokerRequest::Fetch { .. } => "fetch",
+            BrokerRequest::Commit { .. } => "commit",
+            BrokerRequest::Committed { .. } => "committed",
+            BrokerRequest::EndOffset { .. } => "end_offset",
+            BrokerRequest::Topics => "topics",
+            BrokerRequest::Ping => "ping",
+            BrokerRequest::ProducePart { .. } => "produce_part",
+            BrokerRequest::ProduceMany { .. } => "produce_many",
+            BrokerRequest::FetchPart { .. } => "fetch_part",
+            BrokerRequest::FetchMany { .. } => "fetch_many",
+            BrokerRequest::CommitPart { .. } => "commit_part",
+            BrokerRequest::CommittedPart { .. } => "committed_part",
+            BrokerRequest::EndOffsetPart { .. } => "end_offset_part",
+            BrokerRequest::Partitions { .. } => "partitions",
+            BrokerRequest::TelemetrySnap => "telemetry",
+        }
+    }
 }
 
 /// Broker wire replies.
@@ -95,6 +122,10 @@ pub enum BrokerResponse {
     /// Multi-partition fetch result, aligned with the request.
     Batches(Vec<Vec<LogEntry>>),
     PartitionList(Vec<u32>),
+    /// Encoded [`TelemetrySnapshot`](crate::metrics::TelemetrySnapshot)
+    /// (opaque bytes keep the broker protocol decoupled from the
+    /// snapshot codec's evolution).
+    Telemetry { data: Bytes },
 }
 
 impl Encode for LogEntry {
@@ -197,6 +228,7 @@ impl Encode for BrokerRequest {
                 put_varint(buf, 14);
                 topic.encode(buf);
             }
+            BrokerRequest::TelemetrySnap => put_varint(buf, 15),
         }
     }
 }
@@ -263,6 +295,7 @@ impl Decode for BrokerRequest {
                 partition: Decode::decode(r)?,
             },
             14 => BrokerRequest::Partitions { topic: Decode::decode(r)? },
+            15 => BrokerRequest::TelemetrySnap,
             t => {
                 return Err(Error::Protocol(format!("bad broker req tag {t}")))
             }
@@ -302,6 +335,10 @@ impl Encode for BrokerResponse {
                 put_varint(buf, 7);
                 v.encode(buf);
             }
+            BrokerResponse::Telemetry { data } => {
+                put_varint(buf, 8);
+                data.encode(buf);
+            }
         }
     }
 }
@@ -317,6 +354,7 @@ impl Decode for BrokerResponse {
             5 => BrokerResponse::Offsets(Decode::decode(r)?),
             6 => BrokerResponse::Batches(Decode::decode(r)?),
             7 => BrokerResponse::PartitionList(Decode::decode(r)?),
+            8 => BrokerResponse::Telemetry { data: Decode::decode(r)? },
             t => {
                 return Err(Error::Protocol(format!("bad broker resp tag {t}")))
             }
@@ -384,6 +422,7 @@ mod tests {
             },
             BrokerRequest::EndOffsetPart { topic: "t".into(), partition: 1 },
             BrokerRequest::Partitions { topic: "t".into() },
+            BrokerRequest::TelemetrySnap,
         ] {
             let back = BrokerRequest::from_bytes(&req.to_bytes()).unwrap();
             assert_eq!(req, back);
@@ -403,6 +442,7 @@ mod tests {
                 vec![LogEntry { offset: 0, payload: Bytes(vec![4]) }],
             ]),
             BrokerResponse::PartitionList(vec![0, 3, 7]),
+            BrokerResponse::Telemetry { data: Bytes(vec![1, 2, 3]) },
         ] {
             let back = BrokerResponse::from_bytes(&resp.to_bytes()).unwrap();
             assert_eq!(resp, back);

@@ -10,12 +10,14 @@
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
 use crate::codec::{Bytes, Decode, Encode};
 use crate::error::{Error, Result};
 use crate::kv::{read_frame, write_frame};
+use crate::metrics::telemetry;
+use crate::metrics::TelemetrySnapshot;
 use crate::net::{
     ConnHandle, EventLoopPool, FrameOutcome, Ingress, NoState, ServerBuilder,
     Service,
@@ -23,6 +25,20 @@ use crate::net::{
 
 use super::state::{BrokerState, FetchReq, LogEntry};
 use super::{BrokerRequest, BrokerResponse};
+
+/// Cached registry handles for the broker's hot-path metrics.
+struct BrokerMetrics {
+    connections: Arc<telemetry::Gauge>,
+    op_us: Arc<telemetry::Histogram>,
+}
+
+fn broker_metrics() -> &'static BrokerMetrics {
+    static M: OnceLock<BrokerMetrics> = OnceLock::new();
+    M.get_or_init(|| BrokerMetrics {
+        connections: telemetry::gauge("broker.server.connections"),
+        op_us: telemetry::histogram("broker.server.op_us"),
+    })
+}
 
 /// The running ingress machinery behind a [`BrokerServer`].
 enum IngressHandle {
@@ -40,6 +56,8 @@ pub struct BrokerServer {
     state: BrokerState,
     stop: Arc<AtomicBool>,
     ingress: IngressHandle,
+    /// The HTTP admin plane, when the builder asked for one.
+    admin: Option<EventLoopPool>,
 }
 
 impl BrokerServer {
@@ -59,8 +77,17 @@ impl BrokerServer {
         &self.state
     }
 
+    /// Where the HTTP admin plane listens, when one was requested via
+    /// [`ServerBuilder::admin_addr`].
+    pub fn admin_addr(&self) -> Option<SocketAddr> {
+        self.admin.as_ref().map(|p| p.addr)
+    }
+
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
+        if let Some(pool) = &mut self.admin {
+            pool.shutdown();
+        }
         match &mut self.ingress {
             IngressHandle::Threaded { accept_thread, conns } => {
                 // Unblock the blocking accept; the loop re-checks `stop`.
@@ -99,6 +126,16 @@ impl ServerBuilder<NoState> {
 
 fn spawn_broker_server(b: ServerBuilder<BrokerState>) -> Result<BrokerServer> {
     let stop = Arc::new(AtomicBool::new(false));
+    // Spawned first so a bad admin address fails the whole spawn before
+    // any data-plane thread starts.
+    let admin = match b.admin {
+        Some(addr) => Some(crate::net::http::spawn_admin(
+            addr,
+            "broker",
+            Arc::new(|| broker_metrics().connections.get().max(0) as usize),
+        )?),
+        None => None,
+    };
     match b.ingress {
         Ingress::EventLoop => {
             let service =
@@ -115,15 +152,17 @@ fn spawn_broker_server(b: ServerBuilder<BrokerState>) -> Result<BrokerServer> {
                 state: b.state,
                 stop,
                 ingress: IngressHandle::Event(pool),
+                admin,
             })
         }
-        Ingress::Threaded => spawn_threaded(b, stop),
+        Ingress::Threaded => spawn_threaded(b, stop, admin),
     }
 }
 
 fn spawn_threaded(
     b: ServerBuilder<BrokerState>,
     stop: Arc<AtomicBool>,
+    admin: Option<EventLoopPool>,
 ) -> Result<BrokerServer> {
     let listener = TcpListener::bind(b.bind)?;
     let addr = listener.local_addr()?;
@@ -180,6 +219,7 @@ fn spawn_threaded(
             accept_thread: Some(accept_thread),
             conns,
         },
+        admin,
     })
 }
 
@@ -251,7 +291,23 @@ fn handle_broker_request(
         BrokerRequest::Partitions { topic } => {
             BrokerResponse::PartitionList(state.partitions(&topic))
         }
+        BrokerRequest::TelemetrySnap => BrokerResponse::Telemetry {
+            data: Bytes(telemetry::snapshot().to_bytes()),
+        },
     }
+}
+
+/// Execute one broker request, recording op latency and feeding the
+/// slow-op log (the shared wrapper of both ingress modes' full-op
+/// paths; zero-timeout probes stay un-instrumented).
+fn respond(state: &BrokerState, req: BrokerRequest) -> BrokerResponse {
+    let name = req.name();
+    let start = Instant::now();
+    let resp = handle_broker_request(state, req);
+    let dur = start.elapsed();
+    broker_metrics().op_us.record_duration(dur);
+    telemetry::record_slow_op(name, dur, 0, 0, "broker");
+    resp
 }
 
 /// Broker protocol logic on the reactor.
@@ -268,7 +324,7 @@ impl BrokerEventService {
         let spawned = std::thread::Builder::new()
             .name("broker-park".into())
             .spawn(move || {
-                let resp = handle_broker_request(&state, req);
+                let resp = respond(&state, req);
                 handle.complete(resp.to_bytes());
             });
         match spawned {
@@ -279,6 +335,14 @@ impl BrokerEventService {
 }
 
 impl Service for BrokerEventService {
+    fn on_open(&self, _conn: &ConnHandle) {
+        broker_metrics().connections.add(1);
+    }
+
+    fn on_close(&self, _conn_id: u64) {
+        broker_metrics().connections.add(-1);
+    }
+
     fn on_frame(&self, conn: &ConnHandle, body: Vec<u8>) -> FrameOutcome {
         let req = match BrokerRequest::from_bytes(&body) {
             Ok(req) => req,
@@ -340,9 +404,9 @@ impl Service for BrokerEventService {
                 }
                 self.defer(conn, BrokerRequest::FetchMany { reqs, timeout_ms })
             }
-            other => FrameOutcome::Reply(
-                handle_broker_request(&self.state, other).to_bytes(),
-            ),
+            other => {
+                FrameOutcome::Reply(respond(&self.state, other).to_bytes())
+            }
         }
     }
 }
@@ -352,12 +416,15 @@ fn serve_connection(stream: TcpStream, state: BrokerState) -> Result<()> {
     let mut reader =
         std::io::BufReader::with_capacity(1 << 18, stream.try_clone()?);
     let mut writer = std::io::BufWriter::with_capacity(1 << 18, stream);
-    loop {
+    broker_metrics().connections.add(1);
+    let result = (|| loop {
         let req: Option<BrokerRequest> = read_frame(&mut reader)?;
         let Some(req) = req else { return Ok(()) };
-        let resp = handle_broker_request(&state, req);
+        let resp = respond(&state, req);
         write_frame(&mut writer, &resp)?;
-    }
+    })();
+    broker_metrics().connections.add(-1);
+    result
 }
 
 /// Blocking broker client (one request in flight).
@@ -589,6 +656,19 @@ impl BrokerClient {
             BrokerResponse::PartitionList(v) => Ok(v),
             other => {
                 Err(Error::Protocol(format!("bad partitions reply {other:?}")))
+            }
+        }
+    }
+
+    /// Scrape the broker process's telemetry registry over the data
+    /// connection.
+    pub fn telemetry(&self) -> Result<TelemetrySnapshot> {
+        match self.call(BrokerRequest::TelemetrySnap)? {
+            BrokerResponse::Telemetry { data } => {
+                TelemetrySnapshot::from_bytes(&data.0)
+            }
+            other => {
+                Err(Error::Protocol(format!("bad telemetry reply {other:?}")))
             }
         }
     }

@@ -278,11 +278,27 @@ fn complete_sink(queue: &QueueSync, sink: Sink, result: Result<Response>) {
     }
 }
 
+/// One FIFO queue entry: the completion sink plus what the reader needs
+/// to record the op's client span and slow-op entry when the response
+/// lands (the span covers the full submit-to-complete round trip, so it
+/// is recorded at completion time, not submit time).
+struct PendingOp {
+    started: Instant,
+    /// Wall-clock span start in epoch microseconds; 0 when untraced.
+    start_us: u64,
+    /// `(trace_id, span_id, parent_span)` of the submit-side trace
+    /// context; `None` when the op was untraced.
+    trace: Option<(u64, u64, u64)>,
+    /// Stable op label for metrics and the slow-op log.
+    name: &'static str,
+    sink: Sink,
+}
+
 /// In-flight completions: FIFO sinks matched by queue position, watch
 /// completers routed out-of-band by id.
 struct PendingQueue {
-    /// FIFO sinks, each with its submission instant (per-op latency).
-    sinks: VecDeque<(Instant, Sink)>,
+    /// FIFO pending ops, matched to responses by queue position.
+    sinks: VecDeque<PendingOp>,
     /// Armed watches awaiting their `Notify` push.
     watches: HashMap<u64, Completer<Arc<Vec<u8>>>>,
     /// Set once the connection died; later submissions fail fast with it.
@@ -314,8 +330,8 @@ fn fail_all(queue: &QueueSync, err: Error) {
     // Submitters parked on a full window must observe `dead` and bail.
     queue.cv.notify_all();
     client_metrics().in_flight.add(-(sinks.len() as i64));
-    for (_, sink) in sinks {
-        complete_sink(queue, sink, Err(err.clone()));
+    for op in sinks {
+        complete_sink(queue, op.sink, Err(err.clone()));
     }
     for (_, completer) in watches {
         completer.complete(Err(err.clone()));
@@ -323,6 +339,11 @@ fn fail_all(queue: &QueueSync, err: Error) {
 }
 
 fn reader_loop(stream: TcpStream, queue: Arc<QueueSync>) {
+    // Slow-op entries attribute to the server this pipe talks to.
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_default();
     let mut reader = std::io::BufReader::with_capacity(1 << 18, stream);
     loop {
         match read_frame::<_, Response>(&mut reader) {
@@ -339,14 +360,35 @@ fn reader_loop(stream: TcpStream, queue: Arc<QueueSync>) {
             Ok(Some(resp)) => {
                 let sink = queue.q.lock().unwrap().sinks.pop_front();
                 match sink {
-                    Some((started, sink)) => {
+                    Some(op) => {
                         if queue.window > 0 {
                             queue.cv.notify_all(); // a window slot freed
                         }
                         let m = client_metrics();
                         m.in_flight.add(-1);
-                        m.op_us.record_duration(started.elapsed());
-                        complete_sink(&queue, sink, Ok(resp));
+                        let dur = op.started.elapsed();
+                        m.op_us.record_duration(dur);
+                        // Span + slow-op land before the completion so a
+                        // caller that blocked on this op observes them.
+                        let (trace_id, span_id) = match op.trace {
+                            Some((trace_id, span_id, parent)) => {
+                                telemetry::span_event(
+                                    trace_id,
+                                    span_id,
+                                    parent,
+                                    "kv.client",
+                                    op.name,
+                                    op.start_us,
+                                    dur.as_micros() as u64,
+                                );
+                                (trace_id, span_id)
+                            }
+                            None => (0, 0),
+                        };
+                        telemetry::record_slow_op(
+                            op.name, dur, trace_id, span_id, &peer,
+                        );
+                        complete_sink(&queue, op.sink, Ok(resp));
                     }
                     None => {
                         // A response with no matching request breaks the
@@ -609,6 +651,9 @@ impl KvClient {
     fn submit_sink(&self, req: &Request, sink: Sink) {
         let m = client_metrics();
         m.ops.incr();
+        let name = req.name();
+        let mut trace = None;
+        let mut start_us = 0;
         let traced = match telemetry::current_trace() {
             Some(ctx)
                 if !matches!(
@@ -619,14 +664,12 @@ impl KvClient {
                         | Request::Traced { .. }
                 ) =>
             {
+                // The client span is *recorded* when the response lands
+                // (reader side) so it carries the real round-trip
+                // duration; only its identity is minted here.
                 let span = telemetry::next_span_id();
-                telemetry::trace_event(
-                    ctx.trace_id,
-                    span,
-                    ctx.span_id,
-                    "kv.client",
-                    req.name(),
-                );
+                trace = Some((ctx.trace_id, span, ctx.span_id));
+                start_us = telemetry::now_us();
                 Some(Request::Traced {
                     trace_id: ctx.trace_id,
                     span_id: span,
@@ -656,7 +699,13 @@ impl KvClient {
             complete_sink(&self.queue, sink, Err(err));
             return;
         }
-        q.sinks.push_back((Instant::now(), sink));
+        q.sinks.push_back(PendingOp {
+            started: Instant::now(),
+            start_us,
+            trace,
+            name,
+            sink,
+        });
         m.in_flight.add(1);
         drop(q);
         if let Err(e) = self.write_policy(&mut writer, wire) {
@@ -736,7 +785,13 @@ impl KvClient {
             return (id, handle);
         }
         q.watches.insert(id, completer);
-        q.sinks.push_back((Instant::now(), Sink::WatchAck { id }));
+        q.sinks.push_back(PendingOp {
+            started: Instant::now(),
+            start_us: 0,
+            trace: None,
+            name: "watch",
+            sink: Sink::WatchAck { id },
+        });
         client_metrics().in_flight.add(1);
         drop(q);
         if let Err(e) = self.write_policy(&mut writer, &req) {

@@ -75,6 +75,8 @@ pub struct KvServer {
     state: KvState,
     stop: Arc<AtomicBool>,
     ingress: IngressHandle,
+    /// The HTTP admin plane, when the builder asked for one.
+    admin: Option<EventLoopPool>,
 }
 
 impl KvServer {
@@ -95,9 +97,18 @@ impl KvServer {
         &self.state
     }
 
+    /// Where the HTTP admin plane listens, when one was requested via
+    /// [`ServerBuilder::admin_addr`].
+    pub fn admin_addr(&self) -> Option<SocketAddr> {
+        self.admin.as_ref().map(|p| p.addr)
+    }
+
     /// Stop accepting, close live connections, and wind down.
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
+        if let Some(pool) = &mut self.admin {
+            pool.shutdown();
+        }
         match &mut self.ingress {
             IngressHandle::Threaded { accept_thread, conns } => {
                 // Unblock the blocking accept; the loop re-checks `stop`.
@@ -136,6 +147,17 @@ impl ServerBuilder<NoState> {
 
 fn spawn_kv_server(b: ServerBuilder<KvState>) -> Result<KvServer> {
     let stop = Arc::new(AtomicBool::new(false));
+    // The admin plane spawns first: a bad admin address fails the whole
+    // spawn before any data-plane thread starts. Both ingress modes keep
+    // the connections gauge live, so `/conns` reads it directly.
+    let admin = match b.admin {
+        Some(addr) => Some(crate::net::http::spawn_admin(
+            addr,
+            "kv",
+            Arc::new(|| server_metrics().connections.get().max(0) as usize),
+        )?),
+        None => None,
+    };
     match b.ingress {
         Ingress::EventLoop => {
             let service = Arc::new(KvEventService {
@@ -155,15 +177,17 @@ fn spawn_kv_server(b: ServerBuilder<KvState>) -> Result<KvServer> {
                 state: b.state,
                 stop,
                 ingress: IngressHandle::Event(pool),
+                admin,
             })
         }
-        Ingress::Threaded => spawn_threaded(b, stop),
+        Ingress::Threaded => spawn_threaded(b, stop, admin),
     }
 }
 
 fn spawn_threaded(
     b: ServerBuilder<KvState>,
     stop: Arc<AtomicBool>,
+    admin: Option<EventLoopPool>,
 ) -> Result<KvServer> {
     let listener = TcpListener::bind(b.bind)?;
     let addr = listener.local_addr()?;
@@ -221,6 +245,7 @@ fn spawn_threaded(
             accept_thread: Some(accept_thread),
             conns,
         },
+        admin,
     })
 }
 
@@ -315,18 +340,32 @@ fn respond(state: &KvState, req: Request) -> Response {
                 let name = inner.name();
                 let span = telemetry::next_span_id();
                 let start = Instant::now();
+                let start_us = telemetry::now_us();
                 let resp = handle_request(state, inner);
-                server_metrics().op_us.record_duration(start.elapsed());
-                telemetry::trace_event(
-                    trace_id, span, span_id, "kv.server", name,
+                let dur = start.elapsed();
+                server_metrics().op_us.record_duration(dur);
+                // The server span parents on the client's envelope span
+                // id, linking this process into the cross-node tree.
+                telemetry::span_event(
+                    trace_id,
+                    span,
+                    span_id,
+                    "kv.server",
+                    name,
+                    start_us,
+                    dur.as_micros() as u64,
                 );
+                telemetry::record_slow_op(name, dur, trace_id, span, "kv");
                 resp
             }
         },
         other => {
+            let name = other.name();
             let start = Instant::now();
             let resp = handle_request(state, other);
-            server_metrics().op_us.record_duration(start.elapsed());
+            let dur = start.elapsed();
+            server_metrics().op_us.record_duration(dur);
+            telemetry::record_slow_op(name, dur, 0, 0, "kv");
             resp
         }
     }

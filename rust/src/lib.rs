@@ -108,12 +108,37 @@
 //! Traces propagate **over the wire**: [`metrics::telemetry::start_trace`]
 //! binds a trace to the current thread, the pipelined KV client wraps
 //! each op in a `Request::Traced` envelope carrying `(trace_id, span_id)`,
-//! and the server stamps a child span per op — one snapshot then shows
-//! the client span and the server span of the same logical op joined by
-//! trace id. Snapshots are themselves wire-encodable (`Request::Telemetry`
-//! fetches a remote server's registry), renderable as text
-//! ([`metrics::TelemetrySnapshot::render`] — the CLI `stats` scenario),
-//! and dumped next to every bench CSV by [`benchlib`].
+//! and the server stamps a child span per op. Spans are **parent-linked
+//! and timed** — each records `(trace_id, span_id, parent_span, start_us,
+//! dur_us)` — so [`metrics::span_trees`] reassembles the cross-process
+//! call tree (the client root span parenting every per-shard server
+//! span) and [`metrics::chrome_trace_json`] exports it as Chrome
+//! trace-viewer JSON, loadable in Perfetto or `chrome://tracing` with one
+//! process row per node. Ops slower than
+//! [`metrics::telemetry::set_slow_threshold`] (default 1ms) additionally
+//! land in a bounded **slow-op log** with their trace/span ids and peer,
+//! surviving trace-ring eviction.
+//!
+//! Snapshots are wire-encodable and **cluster-mergeable**:
+//! `Request::Telemetry` (and the broker's `TelemetrySnap`) fetch a remote
+//! process's registry, and [`metrics::ClusterSnapshot`] fans the scrape
+//! across a whole fabric ([`metrics::ClusterSnapshot::scrape_sharded`],
+//! `scrape_elastic`, `scrape_broker_fabric`) and merges the per-node
+//! snapshots — histograms add bucket-wise, counters sum, gauges keep sum
+//! and high-water — into one cluster view
+//! ([`metrics::ClusterSnapshot::render`] — the CLI `obs` scenario).
+//!
+//! For pull-based monitoring, every server optionally serves an **HTTP
+//! admin plane** on its epoll reactor
+//! ([`net::ServerBuilder::admin_addr`], [`net::AdminService`]):
+//! `curl :PORT/metrics` returns Prometheus text exposition (names
+//! sanitized, labels escaped), `/healthz` and `/readyz` report liveness
+//! and readiness (the elastic fabric flips `/readyz` to 503 while a
+//! migration drains), `/conns` lists live connection counts and
+//! registered probes, `/trace` serves the trace ring as Chrome JSON, and
+//! `/slow` dumps the slow-op log. Text renderings
+//! ([`metrics::TelemetrySnapshot::render`] — the CLI `stats` scenario)
+//! and the per-bench dumps from [`benchlib`] remain for offline use.
 
 pub mod apps;
 pub mod benchlib;
@@ -151,7 +176,9 @@ pub mod prelude {
     pub use crate::error::{Error, Result};
     pub use crate::futures::{when_all, when_any, PendingResult, ProxyFuture};
     pub use crate::kv::{ClientOptions, FlushPolicy};
-    pub use crate::metrics::{telemetry, TelemetrySnapshot, TraceCtx};
+    pub use crate::metrics::{
+        telemetry, ClusterSnapshot, TelemetrySnapshot, TraceCtx,
+    };
     pub use crate::net::{Ingress, ServerBuilder};
     pub use crate::ops::{Op, OpResult, Pending};
     pub use crate::ownership::lifetime::StoreLifetimeExt;

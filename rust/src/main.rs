@@ -48,8 +48,15 @@ COMMANDS:
                                 telemetry plane demo: traced ops over a live
                                 TCP sharded fabric, registry snapshot fetched
                                 over the wire and rendered
-  serve-kv                      run a redis-sim KV server (ephemeral port)
-  serve-broker                  run a log-broker server (ephemeral port)
+  obs      [--shards 4] [--keys 64] [--size 4096] [--trace-out results/obs.trace.json]
+                                observability plane demo: HTTP admin endpoint
+                                scraped live, merged multi-node snapshot,
+                                cross-process span trees, Chrome trace JSON
+                                export, slow-op log
+  serve-kv                      run a redis-sim KV server (ephemeral port,
+                                HTTP admin plane on a second port)
+  serve-broker                  run a log-broker server (ephemeral port,
+                                HTTP admin plane on a second port)
   version                       print the crate version
 
 Artifacts are read from ./artifacts (override: PROXYSTORE_ARTIFACTS).
@@ -95,6 +102,7 @@ fn run(args: &Args) -> Result<()> {
         Some("rebalance") => rebalance_cmd(args),
         Some("broker-shard") => broker_shard_cmd(args),
         Some("stats") => stats_cmd(args),
+        Some("obs") => obs_cmd(args),
         Some("serve-kv") => serve_kv(),
         Some("serve-broker") => serve_broker(),
         Some(other) => Err(Error::Config(format!(
@@ -694,19 +702,156 @@ fn stats_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn obs_cmd(args: &Args) -> Result<()> {
+    use proxystore::codec::Bytes;
+    use proxystore::metrics::telemetry;
+    use proxystore::metrics::{write_text_atomic, ClusterSnapshot, SpanNode};
+    use proxystore::net::{http_get, ServerBuilder};
+    use proxystore::shard::ShardedConnector;
+    use proxystore::store::{Connector, TcpKvConnector};
+    use std::sync::Arc;
+
+    let shards: usize = args.get_parse("shards", 4)?;
+    let n_keys: usize = args.get_parse("keys", 64)?;
+    let size: usize = args.get_parse("size", 4096)?;
+    let trace_out =
+        args.get("trace-out").unwrap_or("results/obs.trace.json");
+    println!("obs: shards={shards} keys={n_keys} size={size}B");
+
+    // A live fabric with the admin plane enabled on the first server:
+    // the same epoll reactor that serves the data plane answers HTTP.
+    let mut servers = Vec::with_capacity(shards);
+    let mut backends: Vec<Arc<dyn Connector>> = Vec::with_capacity(shards);
+    for i in 0..shards {
+        let mut b = ServerBuilder::new();
+        if i == 0 {
+            b = b.admin_addr("127.0.0.1:0".parse().unwrap());
+        }
+        let server = b.spawn_kv()?;
+        backends
+            .push(Arc::new(TcpKvConnector::connect(server.addr)?)
+                as Arc<dyn Connector>);
+        servers.push(server);
+    }
+    let fabric = Arc::new(ShardedConnector::new(backends, 1, 0)?);
+    let store = Store::new("obs", fabric.clone());
+
+    // Low threshold so this short demo's round-trips land in the
+    // slow-op log; production keeps the 1ms default.
+    telemetry::set_slow_threshold(Duration::from_micros(50));
+
+    // Traced traffic: the client root span parents every per-shard
+    // server span, so the merged view reassembles one tree per op.
+    let trace = telemetry::start_trace("obs-demo");
+    let trace_id = trace.ctx().trace_id;
+    let objs: Vec<Bytes> =
+        (0..n_keys).map(|i| Bytes(vec![i as u8; size])).collect();
+    let keys = store.put_many(&objs)?;
+    let got: Vec<Option<Bytes>> = store.get_many(&keys)?;
+    let hits = got.iter().filter(|b| b.is_some()).count();
+    println!("put+get {n_keys} objects, {hits} hits");
+    drop(trace);
+
+    // Scrape the fabric: Telemetry op fanned to every shard over the
+    // wire, merged with the local registry.
+    let cs = ClusterSnapshot::scrape_sharded(&fabric);
+    println!("\n{}", cs.render());
+
+    // Cross-process span trees for the traced run.
+    fn print_tree(node: &SpanNode, depth: usize) {
+        println!(
+            "  {:indent$}{}.{} {}us [{}] span={:x} parent={:x}",
+            "",
+            node.event.subsystem,
+            node.event.name,
+            node.event.dur_us,
+            node.node,
+            node.event.span_id,
+            node.event.parent_span,
+            indent = depth * 2,
+        );
+        for child in &node.children {
+            print_tree(child, depth + 1);
+        }
+    }
+    let trees = cs.span_trees_for(trace_id);
+    let spans: usize = trees.iter().map(SpanNode::size).sum();
+    println!("# trace {trace_id:016x}: {} trees, {spans} spans", trees.len());
+    for tree in trees.iter().take(4) {
+        print_tree(tree, 0);
+    }
+    if trees.len() > 4 {
+        println!("  ... {} more trees", trees.len() - 4);
+    }
+
+    // Chrome trace-viewer export (load in Perfetto / chrome://tracing).
+    let json = cs.chrome_trace();
+    write_text_atomic(trace_out, &json)?;
+    println!("\nwrote {trace_out} ({} bytes)", json.len());
+
+    // The HTTP admin plane, scraped live over raw TCP.
+    let admin = servers[0]
+        .admin_addr()
+        .ok_or_else(|| Error::Config("admin plane not spawned".into()))?;
+    println!("\n# admin endpoint at http://{admin}");
+    for path in ["/healthz", "/readyz", "/conns"] {
+        let (status, body) = http_get(admin, path)?;
+        println!("GET {path} -> {status}: {}", body.trim_end());
+    }
+    let (status, metrics) = http_get(admin, "/metrics")?;
+    let families =
+        metrics.lines().filter(|l| l.starts_with("# TYPE")).count();
+    println!(
+        "GET /metrics -> {status}: {} bytes, {families} metric families; \
+         first lines:",
+        metrics.len()
+    );
+    for line in metrics.lines().take(6) {
+        println!("  {line}");
+    }
+    let (status, slow) = http_get(admin, "/slow")?;
+    println!(
+        "GET /slow -> {status}: {} slow ops over threshold",
+        slow.lines().count()
+    );
+    Ok(())
+}
+
 fn serve_kv() -> Result<()> {
-    let server = proxystore::net::ServerBuilder::new().spawn_kv()?;
+    use std::io::Write as _;
+    let server = proxystore::net::ServerBuilder::new()
+        .admin_addr("127.0.0.1:0".parse().unwrap())
+        .spawn_kv()?;
     println!("redis-sim KV server listening on {}", server.addr);
+    if let Some(admin) = server.admin_addr() {
+        println!(
+            "admin plane at {admin} (/metrics /healthz /readyz /conns \
+             /trace /slow)"
+        );
+    }
     println!("(ctrl-c to stop)");
+    // Supervisors read these lines through a pipe: flush past the
+    // block-buffering stdout switches to when it isn't a terminal.
+    std::io::stdout().flush()?;
     loop {
         std::thread::sleep(Duration::from_secs(3600));
     }
 }
 
 fn serve_broker() -> Result<()> {
-    let server = proxystore::net::ServerBuilder::new().spawn_broker()?;
+    use std::io::Write as _;
+    let server = proxystore::net::ServerBuilder::new()
+        .admin_addr("127.0.0.1:0".parse().unwrap())
+        .spawn_broker()?;
     println!("log broker listening on {}", server.addr);
+    if let Some(admin) = server.admin_addr() {
+        println!(
+            "admin plane at {admin} (/metrics /healthz /readyz /conns \
+             /trace /slow)"
+        );
+    }
     println!("(ctrl-c to stop)");
+    std::io::stdout().flush()?;
     loop {
         std::thread::sleep(Duration::from_secs(3600));
     }

@@ -6,18 +6,20 @@
 //! This module provides those three primitives plus summary statistics and
 //! CSV output used by the bench harness.
 
+pub mod cluster;
 mod memory;
 mod rebalance;
 mod stats;
 pub mod telemetry;
 mod timeline;
 
+pub use cluster::{ClusterSnapshot, SpanNode, chrome_trace_json, span_trees};
 pub use memory::{GaugeRegistry, MemorySampler, MemorySeries, StoreBytes, rss_bytes};
 pub use rebalance::{RebalanceMetrics, RebalanceSnapshot};
 pub use stats::{Stats, percentile};
 pub use telemetry::{
-    Counter, Gauge, Histogram, HistogramSnapshot, MirroredCounter, TraceCtx,
-    TraceEvent, TraceGuard, TelemetrySnapshot,
+    Counter, Gauge, Histogram, HistogramSnapshot, MirroredCounter, SlowOp,
+    TraceCtx, TraceEvent, TraceGuard, TelemetrySnapshot,
 };
 pub use timeline::{StageRecord, Timeline};
 

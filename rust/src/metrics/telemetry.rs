@@ -32,6 +32,16 @@
 //! Recording can be disabled process-wide ([`set_enabled`]) — the
 //! overhead gate in `benches/telemetry.rs` measures the instrumented hot
 //! path against that baseline.
+//!
+//! **Exposition & aggregation**: [`TelemetrySnapshot::render`] is the
+//! human-readable text view; [`TelemetrySnapshot::render_prometheus`] is
+//! the scrape format served by the HTTP admin endpoint (`/metrics`),
+//! sanitizing dotted names into `snake_case{label}` form. Snapshots from
+//! N nodes merge into one cluster view with [`TelemetrySnapshot::merge`]
+//! (counters sum, gauge high-waters take the max, histograms add
+//! bucket-wise). Ops slower than a configurable threshold
+//! ([`set_slow_threshold`]) additionally land in a bounded **slow-op
+//! log** ([`TelemetrySnapshot::slow_ops`], the `/slow` admin route).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
@@ -262,6 +272,30 @@ impl HistogramSnapshot {
         percentile(&samples, q)
     }
 
+    /// Fold `other` into `self` bucket-wise: counts and sums add, min/max
+    /// widen, and buckets with the same lower bound merge. This is the
+    /// cluster-aggregation primitive — merging N per-node snapshots gives
+    /// percentile estimates over the union of all observations.
+    pub fn absorb(&mut self, other: &HistogramSnapshot) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.count += other.count;
+        self.sum += other.sum;
+        let mut merged: BTreeMap<u64, u64> =
+            self.buckets.iter().copied().collect();
+        for &(lo, n) in &other.buckets {
+            *merged.entry(lo).or_insert(0) += n;
+        }
+        self.buckets = merged.into_iter().collect();
+    }
+
     fn quantile_samples(&self) -> Vec<f64> {
         if self.count == 0 {
             return Vec::new();
@@ -416,7 +450,19 @@ impl Drop for TraceGuard {
     }
 }
 
-/// One structured span event in the trace ring.
+/// Microseconds since the UNIX epoch (wall clock). Span start timestamps
+/// use this so events from different processes merge onto one timeline.
+pub fn now_us() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+/// One structured span record in the trace ring: parent-linked and
+/// carrying a wall-clock start plus duration, so merged snapshots from N
+/// processes assemble into cross-process span trees and export as Chrome
+/// trace-viewer JSON (see [`crate::metrics::cluster`]).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TraceEvent {
     /// Monotonic sequence within this process (ring ordering).
@@ -429,6 +475,10 @@ pub struct TraceEvent {
     pub subsystem: String,
     /// Operation label (`get`, `set`, `notify`, ...).
     pub name: String,
+    /// Wall-clock start, microseconds since the UNIX epoch.
+    pub start_us: u64,
+    /// Span duration in microseconds (0 for instant events).
+    pub dur_us: u64,
 }
 
 impl Encode for TraceEvent {
@@ -439,6 +489,8 @@ impl Encode for TraceEvent {
         self.parent_span.encode(buf);
         self.subsystem.encode(buf);
         self.name.encode(buf);
+        self.start_us.encode(buf);
+        self.dur_us.encode(buf);
     }
 }
 
@@ -451,15 +503,23 @@ impl Decode for TraceEvent {
             parent_span: Decode::decode(r)?,
             subsystem: Decode::decode(r)?,
             name: Decode::decode(r)?,
+            start_us: Decode::decode(r)?,
+            dur_us: Decode::decode(r)?,
         })
     }
 }
 
 /// Bounded ring of recent trace events. Only traced ops push here, so the
-/// mutex is off the untraced hot path entirely.
+/// mutex is off the untraced hot path entirely. Overflow is counted, not
+/// silent: `dropped` surfaces as the `telemetry.trace.dropped` counter.
+///
+/// The drop counter is a plain atomic rather than a registry [`Counter`]
+/// because the ring is constructed *inside* the registry's `OnceLock`
+/// init — calling `counter()` there would re-enter the lock and deadlock.
 struct TraceRing {
     events: Mutex<std::collections::VecDeque<TraceEvent>>,
     seq: AtomicU64,
+    dropped: AtomicU64,
     cap: usize,
 }
 
@@ -468,6 +528,7 @@ impl TraceRing {
         TraceRing {
             events: Mutex::new(std::collections::VecDeque::with_capacity(cap)),
             seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
             cap,
         }
     }
@@ -477,8 +538,14 @@ impl TraceRing {
         let mut ring = self.events.lock().unwrap();
         if ring.len() == self.cap {
             ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
         }
         ring.push_back(ev);
+    }
+
+    /// Events evicted by overflow since process start.
+    fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
     }
 
     fn snapshot(&self) -> Vec<TraceEvent> {
@@ -486,13 +553,16 @@ impl TraceRing {
     }
 }
 
-/// Record a span event into the global trace ring.
-pub fn trace_event(
+/// Record a parent-linked span with an explicit wall-clock start and
+/// duration into the global trace ring.
+pub fn span_event(
     trace_id: u64,
     span_id: u64,
     parent_span: u64,
     subsystem: &str,
     name: &str,
+    start_us: u64,
+    dur_us: u64,
 ) {
     if !enabled() {
         return;
@@ -504,24 +574,94 @@ pub fn trace_event(
         parent_span,
         subsystem: subsystem.to_string(),
         name: name.to_string(),
+        start_us,
+        dur_us,
     });
+}
+
+/// Record an instant span event (start = now, zero duration).
+pub fn trace_event(
+    trace_id: u64,
+    span_id: u64,
+    parent_span: u64,
+    subsystem: &str,
+    name: &str,
+) {
+    span_event(trace_id, span_id, parent_span, subsystem, name, now_us(), 0);
+}
+
+// --------------------------------------------------------------------------
+// Slow-op log
+// --------------------------------------------------------------------------
+
+/// One entry in the slow-op log: an op whose latency met the threshold.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SlowOp {
+    /// Monotonic sequence within this process.
+    pub seq: u64,
+    /// Wall-clock start, microseconds since the UNIX epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Operation label (`get`, `set`, `produce`, ...).
+    pub op: String,
+    /// Trace identity when the op was traced (0 otherwise).
+    pub trace_id: u64,
+    pub span_id: u64,
+    /// Which endpoint served it (`kv`, `broker`, a peer address, ...).
+    pub peer: String,
+}
+
+impl Encode for SlowOp {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.seq.encode(buf);
+        self.start_us.encode(buf);
+        self.dur_us.encode(buf);
+        self.op.encode(buf);
+        self.trace_id.encode(buf);
+        self.span_id.encode(buf);
+        self.peer.encode(buf);
+    }
+}
+
+impl Decode for SlowOp {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(SlowOp {
+            seq: Decode::decode(r)?,
+            start_us: Decode::decode(r)?,
+            dur_us: Decode::decode(r)?,
+            op: Decode::decode(r)?,
+            trace_id: Decode::decode(r)?,
+            span_id: Decode::decode(r)?,
+            peer: Decode::decode(r)?,
+        })
+    }
 }
 
 // --------------------------------------------------------------------------
 // Registry
 // --------------------------------------------------------------------------
 
-/// Trace events retained (older ones are dropped).
+/// Trace events retained (older ones are dropped and counted).
 const RING_CAP: usize = 1024;
 
+/// Slow ops retained (older ones are dropped).
+const SLOW_CAP: usize = 256;
+
+/// Default slow-op threshold in microseconds.
+const DEFAULT_SLOW_THRESHOLD_US: u64 = 1000;
+
 /// The process-global metric registry: named counters, gauges and
-/// histograms plus the trace ring. Lookup is a read-lock + map probe;
-/// hot paths cache the returned `Arc` handles and never look up again.
+/// histograms plus the trace ring and the slow-op log. Lookup is a
+/// read-lock + map probe; hot paths cache the returned `Arc` handles and
+/// never look up again.
 pub struct Registry {
     counters: RwLock<BTreeMap<String, Arc<Counter>>>,
     gauges: RwLock<BTreeMap<String, Arc<Gauge>>>,
     histograms: RwLock<BTreeMap<String, Arc<Histogram>>>,
     ring: TraceRing,
+    slow: Mutex<std::collections::VecDeque<SlowOp>>,
+    slow_seq: AtomicU64,
+    slow_threshold_us: AtomicU64,
 }
 
 fn get_or_create<T: Default>(
@@ -545,7 +685,46 @@ impl Registry {
             gauges: RwLock::new(BTreeMap::new()),
             histograms: RwLock::new(BTreeMap::new()),
             ring: TraceRing::new(RING_CAP),
+            slow: Mutex::new(std::collections::VecDeque::with_capacity(
+                SLOW_CAP,
+            )),
+            slow_seq: AtomicU64::new(0),
+            slow_threshold_us: AtomicU64::new(DEFAULT_SLOW_THRESHOLD_US),
         }
+    }
+
+    /// Log an op into the slow-op ring if it met the threshold. `dur` is
+    /// the observed latency; the start timestamp is reconstructed from the
+    /// wall clock. Trace ids are 0 for untraced ops.
+    pub fn record_slow_op(
+        &self,
+        op: &str,
+        dur: Duration,
+        trace_id: u64,
+        span_id: u64,
+        peer: &str,
+    ) {
+        if !enabled() {
+            return;
+        }
+        let dur_us = dur.as_micros() as u64;
+        if dur_us < self.slow_threshold_us.load(Ordering::Relaxed) {
+            return;
+        }
+        let entry = SlowOp {
+            seq: self.slow_seq.fetch_add(1, Ordering::Relaxed),
+            start_us: now_us().saturating_sub(dur_us),
+            dur_us,
+            op: op.to_string(),
+            trace_id,
+            span_id,
+            peer: peer.to_string(),
+        };
+        let mut ring = self.slow.lock().unwrap();
+        if ring.len() == SLOW_CAP {
+            ring.pop_front();
+        }
+        ring.push_back(entry);
     }
 
     /// Get or create the counter `name`.
@@ -563,16 +742,28 @@ impl Registry {
         get_or_create(&self.histograms, name)
     }
 
-    /// Plain-value copy of every metric plus the trace ring.
+    /// Plain-value copy of every metric plus the trace ring and slow-op
+    /// log. The trace ring's overflow counter is folded in as the
+    /// `telemetry.trace.dropped` counter (BTreeMap iteration is sorted, so
+    /// the insert keeps the counters vec ordered by name).
     pub fn snapshot(&self) -> TelemetrySnapshot {
+        let mut counters: Vec<(String, u64)> = self
+            .counters
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect();
+        let dropped = self.ring.dropped();
+        if dropped > 0 {
+            let name = "telemetry.trace.dropped".to_string();
+            match counters.binary_search_by(|(n, _)| n.as_str().cmp(&name)) {
+                Ok(i) => counters[i].1 += dropped,
+                Err(i) => counters.insert(i, (name, dropped)),
+            }
+        }
         TelemetrySnapshot {
-            counters: self
-                .counters
-                .read()
-                .unwrap()
-                .iter()
-                .map(|(k, v)| (k.clone(), v.get()))
-                .collect(),
+            counters,
             gauges: self
                 .gauges
                 .read()
@@ -588,6 +779,7 @@ impl Registry {
                 .map(|(k, v)| (k.clone(), v.snapshot()))
                 .collect(),
             events: self.ring.snapshot(),
+            slow_ops: self.slow.lock().unwrap().iter().cloned().collect(),
         }
     }
 }
@@ -618,9 +810,99 @@ pub fn snapshot() -> TelemetrySnapshot {
     registry().snapshot()
 }
 
+/// Set the global slow-op threshold: ops at or above it land in the
+/// slow-op log. Default 1ms.
+pub fn set_slow_threshold(d: Duration) {
+    registry()
+        .slow_threshold_us
+        .store(d.as_micros() as u64, Ordering::Relaxed);
+}
+
+/// The current global slow-op threshold.
+pub fn slow_threshold() -> Duration {
+    Duration::from_micros(
+        registry().slow_threshold_us.load(Ordering::Relaxed),
+    )
+}
+
+/// Log an op into the global slow-op ring if it met the threshold.
+pub fn record_slow_op(
+    op: &str,
+    dur: Duration,
+    trace_id: u64,
+    span_id: u64,
+    peer: &str,
+) {
+    registry().record_slow_op(op, dur, trace_id, span_id, peer);
+}
+
 // --------------------------------------------------------------------------
 // Snapshot + exposition
 // --------------------------------------------------------------------------
+
+/// Sanitize a dotted metric name into Prometheus exposition form:
+/// segments join with `_`, and an all-digit segment (an embedded instance
+/// id like `shard.3.op_us`) is lifted out as a label keyed on the segment
+/// before it — `shard.3.op_us` → `shard_op_us{shard="3"}`. Any character
+/// outside `[a-zA-Z0-9_]` maps to `_`, and a leading digit is prefixed
+/// with `_` per the exposition grammar.
+pub fn sanitize_metric_name(name: &str) -> (String, Vec<(String, String)>) {
+    let mut parts: Vec<&str> = Vec::new();
+    let mut labels: Vec<(String, String)> = Vec::new();
+    for seg in name.split('.') {
+        let all_digit =
+            !seg.is_empty() && seg.bytes().all(|b| b.is_ascii_digit());
+        if all_digit && !parts.is_empty() {
+            let key = sanitize_flat(parts[parts.len() - 1]);
+            labels.push((key, seg.to_string()));
+        } else {
+            parts.push(seg);
+        }
+    }
+    (sanitize_flat(&parts.join("_")), labels)
+}
+
+fn sanitize_flat(s: &str) -> String {
+    let mut out: String = s
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect();
+    if out.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        out.insert(0, '_');
+    }
+    out
+}
+
+/// Escape a label value per the Prometheus text exposition grammar:
+/// backslash, double-quote and newline.
+pub fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a label set (plus an optional `le` bucket bound) as
+/// `{k="v",le="x"}`, or the empty string when there are no labels.
+fn format_labels(labels: &[(String, String)], le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label_value(v)))
+        .collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
 
 /// Plain-value copy of the whole registry at one instant. Wire-encodable:
 /// the KV protocol's `Telemetry` op ships one of these, and
@@ -633,6 +915,8 @@ pub struct TelemetrySnapshot {
     pub gauges: Vec<(String, (i64, i64))>,
     pub histograms: Vec<(String, HistogramSnapshot)>,
     pub events: Vec<TraceEvent>,
+    /// Ops that exceeded the slow threshold, oldest first.
+    pub slow_ops: Vec<SlowOp>,
 }
 
 impl TelemetrySnapshot {
@@ -647,6 +931,45 @@ impl TelemetrySnapshot {
     /// Histogram by exact name.
     pub fn histogram(&self, name: &str) -> Option<&HistogramSnapshot> {
         self.histograms.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    /// Merge N per-node snapshots into one cluster view: counters sum,
+    /// gauge values sum while high-waters take the per-node max,
+    /// histograms add bucket-wise ([`HistogramSnapshot::absorb`]), and
+    /// trace events / slow ops concatenate (the span-tree assembly in
+    /// [`crate::metrics::cluster`] re-links them by span id).
+    pub fn merge<'a, I>(snaps: I) -> TelemetrySnapshot
+    where
+        I: IntoIterator<Item = &'a TelemetrySnapshot>,
+    {
+        let mut counters: BTreeMap<String, u64> = BTreeMap::new();
+        let mut gauges: BTreeMap<String, (i64, i64)> = BTreeMap::new();
+        let mut histograms: BTreeMap<String, HistogramSnapshot> =
+            BTreeMap::new();
+        let mut events: Vec<TraceEvent> = Vec::new();
+        let mut slow_ops: Vec<SlowOp> = Vec::new();
+        for snap in snaps {
+            for (name, v) in &snap.counters {
+                *counters.entry(name.clone()).or_insert(0) += v;
+            }
+            for (name, (v, hwm)) in &snap.gauges {
+                let e = gauges.entry(name.clone()).or_insert((0, i64::MIN));
+                e.0 += v;
+                e.1 = e.1.max(*hwm);
+            }
+            for (name, h) in &snap.histograms {
+                histograms.entry(name.clone()).or_default().absorb(h);
+            }
+            events.extend(snap.events.iter().cloned());
+            slow_ops.extend(snap.slow_ops.iter().cloned());
+        }
+        TelemetrySnapshot {
+            counters: counters.into_iter().collect(),
+            gauges: gauges.into_iter().collect(),
+            histograms: histograms.into_iter().collect(),
+            events,
+            slow_ops,
+        }
     }
 
     /// Dotted prefixes (`kv.client`, `shard`, ...) that have at least one
@@ -732,10 +1055,94 @@ impl TelemetrySnapshot {
             for ev in &self.events[self.events.len() - tail..] {
                 let _ = writeln!(
                     s,
-                    "  [trace {:016x} span {:x} < {:x}] {} {}",
+                    "  [trace {:016x} span {:x} < {:x}] {} {} ({}us)",
                     ev.trace_id, ev.span_id, ev.parent_span, ev.subsystem,
-                    ev.name,
+                    ev.name, ev.dur_us,
                 );
+            }
+        }
+        if !self.slow_ops.is_empty() {
+            let tail = 16.min(self.slow_ops.len());
+            let _ = writeln!(
+                s,
+                "slow ops (last {tail} of {}):",
+                self.slow_ops.len()
+            );
+            for op in &self.slow_ops[self.slow_ops.len() - tail..] {
+                let _ = writeln!(
+                    s,
+                    "  {:<16} {:>9}us  peer={} trace={:016x}",
+                    op.op, op.dur_us, op.peer, op.trace_id,
+                );
+            }
+        }
+        s
+    }
+
+    /// Prometheus text exposition of the snapshot: sanitized names
+    /// ([`sanitize_metric_name`]), one `# TYPE` line per family (several
+    /// dotted names can collapse into one labeled family, e.g.
+    /// `shard.0.op_us` + `shard.1.op_us` → `shard_op_us{shard="..."}`),
+    /// gauges also exposing a `_high_water` family, histograms in
+    /// cumulative-bucket form with `+Inf`, `_sum` and `_count`.
+    pub fn render_prometheus(&self) -> String {
+        // family name -> (type, sample lines); BTreeMap keeps the output
+        // deterministic and groups label variants under one TYPE header.
+        let mut families: BTreeMap<String, (&'static str, Vec<String>)> =
+            BTreeMap::new();
+        let mut push =
+            |family: String, kind: &'static str, line: String| {
+                families
+                    .entry(family)
+                    .or_insert_with(|| (kind, Vec::new()))
+                    .1
+                    .push(line);
+            };
+        for (name, v) in &self.counters {
+            let (flat, labels) = sanitize_metric_name(name);
+            let l = format_labels(&labels, None);
+            push(flat.clone(), "counter", format!("{flat}{l} {v}"));
+        }
+        for (name, (v, hwm)) in &self.gauges {
+            let (flat, labels) = sanitize_metric_name(name);
+            let l = format_labels(&labels, None);
+            push(flat.clone(), "gauge", format!("{flat}{l} {v}"));
+            let hw = format!("{flat}_high_water");
+            push(hw.clone(), "gauge", format!("{hw}{l} {hwm}"));
+        }
+        for (name, h) in &self.histograms {
+            let (flat, labels) = sanitize_metric_name(name);
+            let mut cum = 0u64;
+            for &(lo, n) in &h.buckets {
+                cum += n;
+                let hi = bucket_hi(bucket_index(lo));
+                let l = format_labels(&labels, Some(&hi.to_string()));
+                push(
+                    flat.clone(),
+                    "histogram",
+                    format!("{flat}_bucket{l} {cum}"),
+                );
+            }
+            let l = format_labels(&labels, Some("+Inf"));
+            push(
+                flat.clone(),
+                "histogram",
+                format!("{flat}_bucket{l} {}", h.count),
+            );
+            let l = format_labels(&labels, None);
+            push(flat.clone(), "histogram", format!("{flat}_sum{l} {}", h.sum));
+            push(
+                flat.clone(),
+                "histogram",
+                format!("{flat}_count{l} {}", h.count),
+            );
+        }
+        let mut s = String::new();
+        for (family, (kind, lines)) in &families {
+            s.push_str(&format!("# TYPE {family} {kind}\n"));
+            for line in lines {
+                s.push_str(line);
+                s.push('\n');
             }
         }
         s
@@ -748,6 +1155,7 @@ impl Encode for TelemetrySnapshot {
         self.gauges.encode(buf);
         self.histograms.encode(buf);
         self.events.encode(buf);
+        self.slow_ops.encode(buf);
     }
 }
 
@@ -758,6 +1166,7 @@ impl Decode for TelemetrySnapshot {
             gauges: Decode::decode(r)?,
             histograms: Decode::decode(r)?,
             events: Decode::decode(r)?,
+            slow_ops: Decode::decode(r)?,
         })
     }
 }
@@ -928,6 +1337,8 @@ mod tests {
                 parent_span: 0,
                 subsystem: "test".into(),
                 name: "ev".into(),
+                start_us: i,
+                dur_us: 0,
             });
         }
         let evs = ring.snapshot();
@@ -954,6 +1365,17 @@ mod tests {
                 parent_span: 4,
                 subsystem: "kv.client".into(),
                 name: "get".into(),
+                start_us: 1_000_000,
+                dur_us: 250,
+            }],
+            slow_ops: vec![SlowOp {
+                seq: 0,
+                start_us: 1_000_000,
+                dur_us: 5000,
+                op: "get".into(),
+                trace_id: 2,
+                span_id: 3,
+                peer: "kv".into(),
             }],
         };
         let back = TelemetrySnapshot::from_bytes(&snap.to_bytes()).unwrap();
@@ -975,11 +1397,220 @@ mod tests {
             gauges: vec![("watch.armed".into(), (0, 5))],
             histograms: Vec::new(),
             events: Vec::new(),
+            slow_ops: Vec::new(),
         };
         let subs = snap.active_subsystems();
         assert_eq!(
             subs,
             vec!["kv.client", "kv.server", "reactor", "watch"]
+        );
+    }
+
+    #[test]
+    fn merged_counters_sum_and_gauge_high_water_takes_max() {
+        let a = TelemetrySnapshot {
+            counters: vec![("ops".into(), 7), ("x.only_a".into(), 2)],
+            gauges: vec![("depth".into(), (3, 10))],
+            ..Default::default()
+        };
+        let b = TelemetrySnapshot {
+            counters: vec![("ops".into(), 5)],
+            gauges: vec![("depth".into(), (4, 6))],
+            ..Default::default()
+        };
+        let m = TelemetrySnapshot::merge([&a, &b]);
+        assert_eq!(m.counter("ops"), 12);
+        assert_eq!(m.counter("x.only_a"), 2);
+        let (_, (v, hwm)) = m
+            .gauges
+            .iter()
+            .find(|(n, _)| n == "depth")
+            .cloned()
+            .unwrap();
+        assert_eq!(v, 7, "gauge values sum");
+        assert_eq!(hwm, 10, "high-water takes the max");
+    }
+
+    #[test]
+    fn merged_histogram_percentiles_bracket_per_node() {
+        let _g = enabled_guard();
+        let ha = Histogram::default();
+        let hb = Histogram::default();
+        for v in 1..=1000u64 {
+            ha.record(v);
+        }
+        for v in 500..=2500u64 {
+            hb.record(v);
+        }
+        let (sa, sb) = (ha.snapshot(), hb.snapshot());
+        let mut merged = sa.clone();
+        merged.absorb(&sb);
+        assert_eq!(merged.count, sa.count + sb.count);
+        assert_eq!(merged.sum, sa.sum + sb.sum);
+        assert_eq!(merged.min, sa.min.min(sb.min));
+        assert_eq!(merged.max, sa.max.max(sb.max));
+        let total: u64 = merged.buckets.iter().map(|(_, n)| n).sum();
+        assert_eq!(total, merged.count, "bucket counts conserved");
+        // The q-th percentile of a union lies between the per-node q-th
+        // percentiles; allow one log-bucket width (~19%) of slack for the
+        // estimate.
+        for q in [25.0, 50.0, 90.0, 95.0, 99.0] {
+            let (pa, pb) = (sa.percentile(q), sb.percentile(q));
+            let pm = merged.percentile(q);
+            let (lo, hi) = (pa.min(pb), pa.max(pb));
+            assert!(
+                pm >= lo * 0.8 && pm <= hi * 1.2,
+                "p{q}: merged {pm} outside [{lo}, {hi}]"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_is_order_insensitive_for_metrics() {
+        let _g = enabled_guard();
+        let h = Histogram::default();
+        for v in [1u64, 50, 900, 7000] {
+            h.record(v);
+        }
+        let a = TelemetrySnapshot {
+            counters: vec![("c".into(), 1)],
+            gauges: vec![("g".into(), (1, 2))],
+            histograms: vec![("h".into(), h.snapshot())],
+            ..Default::default()
+        };
+        let b = TelemetrySnapshot {
+            counters: vec![("c".into(), 10)],
+            gauges: vec![("g".into(), (5, 9))],
+            histograms: vec![("h".into(), h.snapshot())],
+            ..Default::default()
+        };
+        let ab = TelemetrySnapshot::merge([&a, &b]);
+        let ba = TelemetrySnapshot::merge([&b, &a]);
+        assert_eq!(ab.counters, ba.counters);
+        assert_eq!(ab.gauges, ba.gauges);
+        assert_eq!(ab.histograms, ba.histograms);
+    }
+
+    #[test]
+    fn sanitize_lifts_ids_into_labels() {
+        assert_eq!(
+            sanitize_metric_name("kv.client.ops"),
+            ("kv_client_ops".to_string(), vec![])
+        );
+        let (name, labels) = sanitize_metric_name("shard.3.op_us");
+        assert_eq!(name, "shard_op_us");
+        assert_eq!(labels, vec![("shard".to_string(), "3".to_string())]);
+        let (name, labels) = sanitize_metric_name("broker.12.produce");
+        assert_eq!(name, "broker_produce");
+        assert_eq!(labels, vec![("broker".to_string(), "12".to_string())]);
+        // Leading digit and odd characters are neutralized.
+        assert_eq!(sanitize_metric_name("9lives-x").0, "_9lives_x");
+    }
+
+    #[test]
+    fn label_values_escape_for_exposition() {
+        assert_eq!(escape_label_value("plain"), "plain");
+        assert_eq!(
+            escape_label_value("a\"b\\c\nd"),
+            "a\\\"b\\\\c\\nd"
+        );
+        let labeled = format_labels(
+            &[("peer".to_string(), "10.0.0.1:\"x\"".to_string())],
+            None,
+        );
+        assert_eq!(labeled, "{peer=\"10.0.0.1:\\\"x\\\"\"}");
+    }
+
+    #[test]
+    fn prometheus_exposition_groups_families_and_labels_shards() {
+        let _g = enabled_guard();
+        let h0 = Histogram::default();
+        let h3 = Histogram::default();
+        h0.record(10);
+        h3.record(100);
+        let snap = TelemetrySnapshot {
+            counters: vec![("kv.client.ops".into(), 42)],
+            gauges: vec![("kv.client.inflight".into(), (2, 8))],
+            histograms: vec![
+                ("shard.0.op_us".into(), h0.snapshot()),
+                ("shard.3.op_us".into(), h3.snapshot()),
+            ],
+            ..Default::default()
+        };
+        let text = snap.render_prometheus();
+        assert!(text.contains("# TYPE kv_client_ops counter"));
+        assert!(text.contains("kv_client_ops 42"));
+        assert!(text.contains("kv_client_inflight 2"));
+        assert!(text.contains("kv_client_inflight_high_water 8"));
+        // Both shard histograms collapse into ONE labeled family with a
+        // single TYPE header.
+        assert_eq!(
+            text.matches("# TYPE shard_op_us histogram").count(),
+            1
+        );
+        assert!(text.contains("shard_op_us_bucket{shard=\"0\",le="));
+        assert!(text.contains("shard_op_us_bucket{shard=\"3\",le="));
+        assert!(text.contains("shard_op_us_bucket{shard=\"3\",le=\"+Inf\"} 1"));
+        assert!(text.contains("shard_op_us_sum{shard=\"3\"} 100"));
+        assert!(text.contains("shard_op_us_count{shard=\"3\"} 1"));
+    }
+
+    #[test]
+    fn trace_ring_overflow_is_counted_in_snapshot() {
+        let _g = enabled_guard();
+        let reg = Registry::new();
+        for i in 0..(RING_CAP as u64 + 5) {
+            reg.ring.push(TraceEvent {
+                seq: 0,
+                trace_id: i,
+                span_id: i,
+                parent_span: 0,
+                subsystem: "test".into(),
+                name: "ev".into(),
+                start_us: i,
+                dur_us: 0,
+            });
+        }
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("telemetry.trace.dropped"), 5);
+        assert!(
+            snap.active_subsystems().contains(&"telemetry".to_string()),
+            "dropped counter surfaces the telemetry subsystem"
+        );
+        assert!(snap.render().contains("telemetry.trace.dropped"));
+    }
+
+    #[test]
+    fn slow_op_log_applies_threshold_and_bounds() {
+        let _g = enabled_guard();
+        let reg = Registry::new();
+        // Default threshold is 1ms: fast ops never land.
+        reg.record_slow_op("fast", Duration::from_micros(200), 0, 0, "kv");
+        assert!(reg.snapshot().slow_ops.is_empty());
+        reg.record_slow_op("slow", Duration::from_millis(5), 7, 9, "kv");
+        let snap = reg.snapshot();
+        assert_eq!(snap.slow_ops.len(), 1);
+        let op = &snap.slow_ops[0];
+        assert_eq!(op.op, "slow");
+        assert_eq!(op.dur_us, 5000);
+        assert_eq!((op.trace_id, op.span_id), (7, 9));
+        assert_eq!(op.peer, "kv");
+        assert!(snap.render().contains("slow ops"));
+        // The ring is bounded at SLOW_CAP, oldest evicted first.
+        for i in 0..(SLOW_CAP as u64 + 10) {
+            reg.record_slow_op(
+                "bulk",
+                Duration::from_millis(2),
+                i,
+                0,
+                "kv",
+            );
+        }
+        let snap = reg.snapshot();
+        assert_eq!(snap.slow_ops.len(), SLOW_CAP);
+        assert!(
+            snap.slow_ops.windows(2).all(|w| w[0].seq < w[1].seq),
+            "slow ops ordered by seq"
         );
     }
 

@@ -61,6 +61,7 @@ pub struct ServerBuilder<S = NoState> {
     pub(crate) bind: SocketAddr,
     pub(crate) max_connections: usize,
     pub(crate) event_loops: usize,
+    pub(crate) admin: Option<SocketAddr>,
     pub(crate) state: S,
 }
 
@@ -78,6 +79,7 @@ impl ServerBuilder<NoState> {
             bind: SocketAddr::from(([127, 0, 0, 1], 0)),
             max_connections: 0,
             event_loops: default_event_loops(),
+            admin: None,
             state: NoState,
         }
     }
@@ -117,6 +119,15 @@ impl<S> ServerBuilder<S> {
         self
     }
 
+    /// Also serve the HTTP admin plane ([`crate::net::http`]) on this
+    /// address: `/metrics` (Prometheus exposition), `/healthz`, `/readyz`,
+    /// `/conns`, `/trace`, `/slow`. Runs as its own single event loop
+    /// beside the data plane; default: no admin endpoint.
+    pub fn admin_addr(mut self, addr: SocketAddr) -> Self {
+        self.admin = Some(addr);
+        self
+    }
+
     /// Attach pre-built server state, selecting which server `spawn()`
     /// produces (e.g. `KvState` → KV server, `BrokerState` → broker).
     pub fn with_state<T>(self, state: T) -> ServerBuilder<T> {
@@ -125,6 +136,7 @@ impl<S> ServerBuilder<S> {
             bind: self.bind,
             max_connections: self.max_connections,
             event_loops: self.event_loops,
+            admin: self.admin,
             state,
         }
     }

@@ -69,6 +69,22 @@ fn net_metrics() -> &'static NetMetrics {
     })
 }
 
+/// How a service's wire protocol delimits frames on the stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Framing {
+    /// `u32` little-endian length prefix before every body (the KV and
+    /// broker protocols). Replies are prefixed by the loop.
+    LengthPrefixed,
+    /// HTTP/1.1 request framing: a frame is one request head up to the
+    /// blank line plus an optional `Content-Length` body, delivered raw.
+    /// Replies are written verbatim (the service emits full responses).
+    Http,
+}
+
+/// Head-size cap for HTTP framing: a request line + headers beyond this
+/// without a blank line is a protocol violation.
+const MAX_HTTP_HEAD: usize = 16 * 1024;
+
 /// What the loop does with a completed inbound frame.
 pub enum FrameOutcome {
     /// Write this reply body (the loop adds the length prefix) in FIFO
@@ -99,6 +115,11 @@ pub trait Service: Send + Sync + 'static {
 
     /// One complete frame body arrived.
     fn on_frame(&self, conn: &ConnHandle, body: Vec<u8>) -> FrameOutcome;
+
+    /// Which wire framing this service speaks (cached per pool at spawn).
+    fn framing(&self) -> Framing {
+        Framing::LengthPrefixed
+    }
 
     /// The connection left the loop (close or handoff): release anything
     /// keyed on its id. Pushes sent after this are silently dropped.
@@ -215,9 +236,24 @@ fn push_wire_frame(wbuf: &mut Vec<u8>, body: &[u8]) {
     wbuf.extend_from_slice(body);
 }
 
+/// Queue an outbound frame under the pool's framing: length-prefixed
+/// protocols get the `u32` prefix, HTTP responses go out verbatim.
+fn push_out(framing: Framing, wbuf: &mut Vec<u8>, body: &[u8]) {
+    match framing {
+        Framing::LengthPrefixed => push_wire_frame(wbuf, body),
+        Framing::Http => wbuf.extend_from_slice(body),
+    }
+}
+
 /// Pop the next complete frame body, or `Ok(None)` if more bytes are
 /// needed. `Err` is an oversized frame (protocol violation).
-fn take_frame(conn: &mut Conn) -> std::result::Result<Option<Vec<u8>>, ()> {
+fn take_frame(
+    conn: &mut Conn,
+    framing: Framing,
+) -> std::result::Result<Option<Vec<u8>>, ()> {
+    if framing == Framing::Http {
+        return take_http_frame(conn);
+    }
     let avail = conn.rbuf.len() - conn.rpos;
     if avail < 4 {
         compact(conn);
@@ -236,6 +272,46 @@ fn take_frame(conn: &mut Conn) -> std::result::Result<Option<Vec<u8>>, ()> {
     let body = conn.rbuf[conn.rpos + 4..conn.rpos + 4 + len].to_vec();
     conn.rpos += 4 + len;
     Ok(Some(body))
+}
+
+/// Pop one complete HTTP/1.1 request (head through blank line plus any
+/// `Content-Length` body) as a raw frame.
+fn take_http_frame(
+    conn: &mut Conn,
+) -> std::result::Result<Option<Vec<u8>>, ()> {
+    let buf = &conn.rbuf[conn.rpos..];
+    let Some(head_end) =
+        buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4)
+    else {
+        if buf.len() > MAX_HTTP_HEAD {
+            return Err(()); // unbounded header section
+        }
+        compact(conn);
+        return Ok(None);
+    };
+    if head_end > MAX_HTTP_HEAD {
+        return Err(());
+    }
+    let head = &buf[..head_end];
+    let mut body_len = 0usize;
+    for line in head.split(|&b| b == b'\n') {
+        let Ok(line) = std::str::from_utf8(line) else { continue };
+        let Some((name, value)) = line.split_once(':') else { continue };
+        if name.trim().eq_ignore_ascii_case("content-length") {
+            body_len = value.trim().parse().map_err(|_| ())?;
+        }
+    }
+    if body_len > MAX_FRAME {
+        return Err(());
+    }
+    let total = head_end + body_len;
+    if buf.len() < total {
+        compact(conn);
+        return Ok(None);
+    }
+    let frame = buf[..total].to_vec();
+    conn.rpos += total;
+    Ok(Some(frame))
 }
 
 /// Reclaim consumed reassembly bytes once they dominate the buffer.
@@ -282,6 +358,7 @@ struct EventLoop<S: Service> {
     service: Arc<S>,
     conn_count: Arc<AtomicUsize>,
     max_connections: usize,
+    framing: Framing,
     scratch: Vec<u8>,
     stop: bool,
 }
@@ -431,7 +508,7 @@ impl<S: Service> EventLoop<S> {
             };
             let frame = {
                 let conn = self.conns.get_mut(&id).unwrap();
-                take_frame(conn)
+                take_frame(conn, self.framing)
             };
             match frame {
                 Ok(Some(body)) if parked => {
@@ -463,7 +540,7 @@ impl<S: Service> EventLoop<S> {
         match service.on_frame(&handle, body) {
             FrameOutcome::Reply(frame) => {
                 if let Some(conn) = self.conns.get_mut(&id) {
-                    push_wire_frame(&mut conn.wbuf, &frame);
+                    push_out(self.framing, &mut conn.wbuf, &frame);
                 }
                 true
             }
@@ -475,7 +552,7 @@ impl<S: Service> EventLoop<S> {
             }
             FrameOutcome::Handoff { reply, take } => {
                 if let Some(conn) = self.conns.get_mut(&id) {
-                    push_wire_frame(&mut conn.wbuf, &reply);
+                    push_out(self.framing, &mut conn.wbuf, &reply);
                     conn.handoff = Some(take);
                 }
                 true
@@ -565,7 +642,7 @@ impl<S: Service> EventLoop<S> {
             match msg {
                 LoopMsg::Push { conn, body, lat } => {
                     if let Some(c) = self.conns.get_mut(&conn) {
-                        push_wire_frame(&mut c.wbuf, &body);
+                        push_out(self.framing, &mut c.wbuf, &body);
                         if let Some((fired, hist)) = lat {
                             hist.record_duration(fired.elapsed());
                         }
@@ -600,7 +677,7 @@ impl<S: Service> EventLoop<S> {
             if !conn.deferred {
                 return; // stale completion (conn was reused logic-side)
             }
-            push_wire_frame(&mut conn.wbuf, &body);
+            push_out(self.framing, &mut conn.wbuf, &body);
             conn.deferred = false;
         }
         loop {
@@ -673,6 +750,7 @@ impl EventLoopPool {
         let peers: Vec<_> = parts.iter().map(|(_, s)| s.clone()).collect();
         let ids = Arc::new(AtomicU64::new(FIRST_CONN));
         let conn_count = Arc::new(AtomicUsize::new(0));
+        let framing = service.framing();
         let mut handles: Vec<LoopHandle> = Vec::with_capacity(loops);
         let mut listener = Some(listener);
         for (i, (poller, shared)) in parts.into_iter().enumerate() {
@@ -687,6 +765,7 @@ impl EventLoopPool {
                 service: service.clone(),
                 conn_count: conn_count.clone(),
                 max_connections,
+                framing,
                 scratch: vec![0; 1 << 16],
                 stop: false,
             };

@@ -1,0 +1,357 @@
+//! Zero-dependency HTTP/1.1 admin plane served by the event-loop
+//! reactor.
+//!
+//! [`AdminService`] is a [`Service`] with [`Framing::Http`]: each frame
+//! the loop delivers is one complete request (head plus any
+//! `Content-Length` body) and each reply is a full response written
+//! verbatim — the same epoll loops that serve the data plane serve the
+//! scrape endpoint, so observability costs no extra runtime machinery.
+//!
+//! Routes:
+//!
+//! - `GET /metrics` — Prometheus text exposition of the process registry
+//!   ([`TelemetrySnapshot::render_prometheus`]).
+//! - `GET /healthz` — liveness: always `200` while the loop answers.
+//! - `GET /readyz` — readiness: `200` only while every registered
+//!   [readiness probe](register_readiness) reports ready (the elastic
+//!   fabric flips its probe false while a migration drains).
+//! - `GET /conns` — live introspection: per-pool connection counts and
+//!   every registered [info probe](register_probe) (watch registry
+//!   sizes, shard membership, ...).
+//! - `GET /trace` — the trace ring as Chrome trace-viewer JSON
+//!   (loadable in Perfetto / `chrome://tracing`).
+//! - `GET /slow` — the slow-op log as text.
+//!
+//! Probes live in process-global registries so any subsystem can expose
+//! state without holding a reference to the admin service (which may not
+//! even exist yet when the subsystem starts).
+
+use std::net::SocketAddr;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::error::{Error, Result};
+use crate::metrics::telemetry;
+use crate::net::event_loop::{
+    ConnHandle, EventLoopPool, FrameOutcome, Framing, Service,
+};
+
+/// A readiness check: `true` = ready to serve.
+pub type ReadinessProbe = Arc<dyn Fn() -> bool + Send + Sync>;
+
+/// An introspection probe: renders one live-state line for `/conns`.
+pub type InfoProbe = Arc<dyn Fn() -> String + Send + Sync>;
+
+fn readiness_registry() -> &'static Mutex<Vec<(String, ReadinessProbe)>> {
+    static REG: OnceLock<Mutex<Vec<(String, ReadinessProbe)>>> =
+        OnceLock::new();
+    REG.get_or_init(Default::default)
+}
+
+fn probe_registry() -> &'static Mutex<Vec<(String, InfoProbe)>> {
+    static REG: OnceLock<Mutex<Vec<(String, InfoProbe)>>> = OnceLock::new();
+    REG.get_or_init(Default::default)
+}
+
+/// Register (or replace) the named readiness probe consulted by
+/// `/readyz`. Probes should be cheap and never block.
+pub fn register_readiness(name: &str, probe: ReadinessProbe) {
+    let mut reg = readiness_registry().lock().unwrap();
+    if let Some(slot) = reg.iter_mut().find(|(n, _)| n == name) {
+        slot.1 = probe;
+    } else {
+        reg.push((name.to_string(), probe));
+    }
+}
+
+/// Drop the named readiness probe. Returns whether it was registered.
+pub fn unregister_readiness(name: &str) -> bool {
+    let mut reg = readiness_registry().lock().unwrap();
+    let before = reg.len();
+    reg.retain(|(n, _)| n != name);
+    reg.len() != before
+}
+
+/// Names of readiness probes currently reporting not-ready.
+pub fn not_ready() -> Vec<String> {
+    readiness_registry()
+        .lock()
+        .unwrap()
+        .iter()
+        .filter(|(_, probe)| !probe())
+        .map(|(n, _)| n.clone())
+        .collect()
+}
+
+/// Register (or replace) the named introspection probe shown by
+/// `/conns`.
+pub fn register_probe(name: &str, probe: InfoProbe) {
+    let mut reg = probe_registry().lock().unwrap();
+    if let Some(slot) = reg.iter_mut().find(|(n, _)| n == name) {
+        slot.1 = probe;
+    } else {
+        reg.push((name.to_string(), probe));
+    }
+}
+
+/// Drop the named introspection probe. Returns whether it was registered.
+pub fn unregister_probe(name: &str) -> bool {
+    let mut reg = probe_registry().lock().unwrap();
+    let before = reg.len();
+    reg.retain(|(n, _)| n != name);
+    reg.len() != before
+}
+
+/// Build one full HTTP/1.1 response (keep-alive, explicit
+/// `Content-Length`).
+fn respond(status: u16, reason: &str, content_type: &str, body: &str) -> Vec<u8> {
+    format!(
+        "HTTP/1.1 {status} {reason}\r\n\
+         Content-Type: {content_type}\r\n\
+         Content-Length: {}\r\n\
+         Connection: keep-alive\r\n\
+         \r\n\
+         {body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+fn text(status: u16, reason: &str, body: &str) -> Vec<u8> {
+    respond(status, reason, "text/plain; charset=utf-8", body)
+}
+
+/// The admin-plane service: plug into an
+/// [`EventLoopPool`](crate::net::EventLoopPool) (typically one loop) via
+/// [`ServerBuilder::admin_addr`](crate::net::ServerBuilder::admin_addr).
+pub struct AdminService {
+    /// Which server this plane fronts (`kv`, `broker`) — shown in
+    /// `/conns`.
+    label: String,
+    /// Live data-plane connection count, supplied by the owning server.
+    data_conns: Option<Arc<dyn Fn() -> usize + Send + Sync>>,
+}
+
+impl AdminService {
+    pub fn new(label: &str) -> AdminService {
+        AdminService { label: label.to_string(), data_conns: None }
+    }
+
+    /// Attach the owning server's live connection counter.
+    pub fn with_data_conns(
+        mut self,
+        f: Arc<dyn Fn() -> usize + Send + Sync>,
+    ) -> AdminService {
+        self.data_conns = Some(f);
+        self
+    }
+
+    fn route(&self, path: &str) -> Vec<u8> {
+        match path {
+            "/metrics" => {
+                let body = telemetry::snapshot().render_prometheus();
+                respond(200, "OK", "text/plain; version=0.0.4", &body)
+            }
+            "/healthz" => text(200, "OK", "ok\n"),
+            "/readyz" => {
+                let blocked = not_ready();
+                if blocked.is_empty() {
+                    text(200, "OK", "ready\n")
+                } else {
+                    let body = format!("not ready: {}\n", blocked.join(", "));
+                    text(503, "Service Unavailable", &body)
+                }
+            }
+            "/conns" => {
+                let mut body = String::new();
+                if let Some(f) = &self.data_conns {
+                    body.push_str(&format!(
+                        "{}.connections {}\n",
+                        self.label,
+                        f()
+                    ));
+                }
+                for (name, probe) in probe_registry().lock().unwrap().iter()
+                {
+                    body.push_str(&format!("{name} {}\n", probe()));
+                }
+                text(200, "OK", &body)
+            }
+            "/trace" => {
+                let snap = telemetry::snapshot();
+                let body = crate::metrics::cluster::chrome_trace_json(&[(
+                    self.label.clone(),
+                    snap,
+                )]);
+                respond(200, "OK", "application/json", &body)
+            }
+            "/slow" => {
+                let mut body = String::new();
+                for op in &telemetry::snapshot().slow_ops {
+                    body.push_str(&format!(
+                        "{} {}us op={} peer={} trace={:016x} span={:x}\n",
+                        op.start_us,
+                        op.dur_us,
+                        op.op,
+                        op.peer,
+                        op.trace_id,
+                        op.span_id,
+                    ));
+                }
+                text(200, "OK", &body)
+            }
+            _ => text(404, "Not Found", "not found\n"),
+        }
+    }
+}
+
+/// Spawn the admin plane as its own single event loop beside a server's
+/// data plane. Used by the `spawn*` paths when the builder carries an
+/// [`admin_addr`](crate::net::ServerBuilder::admin_addr); `data_conns`
+/// supplies the live data-plane connection count shown by `/conns`.
+pub fn spawn_admin(
+    addr: SocketAddr,
+    label: &str,
+    data_conns: Arc<dyn Fn() -> usize + Send + Sync>,
+) -> Result<EventLoopPool> {
+    let service =
+        Arc::new(AdminService::new(label).with_data_conns(data_conns));
+    // One loop and a small cap: scrapers are few and cheap; the data
+    // plane keeps every other loop thread.
+    EventLoopPool::spawn(addr, 1, 64, service, &format!("{label}-admin"))
+}
+
+/// Minimal blocking HTTP/1.1 GET against an admin endpoint. Returns
+/// `(status, body)`. The admin plane answers keep-alive with an explicit
+/// `Content-Length`, so this reads exactly one response and returns
+/// without waiting for the server to close. Used by tests, the `obs`
+/// CLI scenario, and CI smoke checks — not a general-purpose client.
+pub fn http_get(addr: SocketAddr, path: &str) -> Result<(u16, String)> {
+    use std::io::{Read, Write};
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
+    stream.write_all(
+        format!("GET {path} HTTP/1.1\r\nHost: admin\r\n\r\n").as_bytes(),
+    )?;
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let head_end = loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos + 4;
+        }
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            return Err(Error::Protocol(
+                "admin closed before response head".into(),
+            ));
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| {
+            Error::Protocol(format!("bad admin status line: {head:?}"))
+        })?;
+    let mut content_length = 0usize;
+    for line in head.lines() {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    while buf.len() < head_end + content_length {
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            return Err(Error::Protocol(
+                "admin closed mid-body".into(),
+            ));
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    }
+    let body = String::from_utf8_lossy(
+        &buf[head_end..head_end + content_length],
+    )
+    .into_owned();
+    Ok((status, body))
+}
+
+impl Service for AdminService {
+    fn framing(&self) -> Framing {
+        Framing::Http
+    }
+
+    fn on_frame(&self, _conn: &ConnHandle, body: Vec<u8>) -> FrameOutcome {
+        // The frame is one full request; only the request line matters.
+        let head = match std::str::from_utf8(&body) {
+            Ok(s) => s,
+            Err(_) => return FrameOutcome::Close,
+        };
+        let mut parts = head.split_whitespace();
+        let (method, target) = match (parts.next(), parts.next()) {
+            (Some(m), Some(t)) => (m, t),
+            _ => return FrameOutcome::Close,
+        };
+        if method != "GET" {
+            return FrameOutcome::Reply(text(
+                405,
+                "Method Not Allowed",
+                "only GET\n",
+            ));
+        }
+        // Strip any query string; routes don't take parameters.
+        let path = target.split('?').next().unwrap_or(target);
+        FrameOutcome::Reply(self.route(path))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn readiness_registry_add_replace_remove() {
+        let name = format!("test.ready.{}", std::process::id());
+        register_readiness(&name, Arc::new(|| false));
+        assert!(not_ready().contains(&name));
+        register_readiness(&name, Arc::new(|| true));
+        assert!(!not_ready().contains(&name));
+        assert!(unregister_readiness(&name));
+        assert!(!unregister_readiness(&name));
+    }
+
+    #[test]
+    fn routes_cover_admin_surface() {
+        let svc = AdminService::new("test")
+            .with_data_conns(Arc::new(|| 3));
+        let ok = String::from_utf8(svc.route("/healthz")).unwrap();
+        assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(ok.contains("\r\n\r\nok\n"));
+        let metrics = String::from_utf8(svc.route("/metrics")).unwrap();
+        assert!(metrics.starts_with("HTTP/1.1 200 OK\r\n"));
+        let conns = String::from_utf8(svc.route("/conns")).unwrap();
+        assert!(conns.contains("test.connections 3"));
+        let trace = String::from_utf8(svc.route("/trace")).unwrap();
+        assert!(trace.contains("traceEvents"));
+        let missing = String::from_utf8(svc.route("/nope")).unwrap();
+        assert!(missing.starts_with("HTTP/1.1 404"));
+    }
+
+    #[test]
+    fn readyz_reflects_probe_state() {
+        let name = format!("test.readyz.{}", std::process::id());
+        let svc = AdminService::new("test");
+        register_readiness(&name, Arc::new(|| false));
+        let resp = String::from_utf8(svc.route("/readyz")).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 503"), "resp: {resp}");
+        assert!(resp.contains(&name));
+        unregister_readiness(&name);
+        let resp = String::from_utf8(svc.route("/readyz")).unwrap();
+        // Other tests may have registered their own failing probes; only
+        // assert ours no longer blocks.
+        assert!(!resp.contains(&name));
+    }
+
+}

@@ -15,15 +15,25 @@
 //! Protocol logic is shared between the modes: each server implements
 //! [`Service`] once and both ingresses call into the same request
 //! handlers.
+//!
+//! The reactor also carries the crate's **HTTP admin plane**
+//! ([`http::AdminService`], enabled per server via
+//! [`ServerBuilder::admin_addr`]): `/metrics`, `/healthz`, `/readyz`,
+//! `/conns`, `/trace` and `/slow` served by the same epoll machinery
+//! under [`Framing::Http`].
 
 pub(crate) mod builder;
 pub(crate) mod event_loop;
+pub mod http;
 pub(crate) mod poller;
 #[cfg(target_os = "linux")]
 pub(crate) mod sys;
 
 pub use builder::{Ingress, NoState, ServerBuilder};
-pub use event_loop::{ConnHandle, EventLoopPool, FrameOutcome, Service};
+pub use event_loop::{
+    ConnHandle, EventLoopPool, FrameOutcome, Framing, Service,
+};
+pub use http::{http_get, AdminService};
 pub use poller::{PollEvent, Poller, Waker};
 
 /// Best-effort raise of the process's open-file soft limit toward

@@ -275,6 +275,19 @@ impl ElasticShards {
             )));
         }
         reg.insert(name.to_string(), e.clone());
+        // Readiness flips false while a migration drains: a scraper (or a
+        // load balancer) polling `/readyz` sees the fabric as not-ready
+        // until the old epoch retires. The probe holds a Weak so it never
+        // keeps an unregistered fabric's backends alive; a dead fabric
+        // reads as ready.
+        let weak = Arc::downgrade(&e.inner);
+        crate::net::http::register_readiness(
+            &format!("elastic.{name}"),
+            Arc::new(move || match weak.upgrade() {
+                Some(inner) => inner.state.read().unwrap().prev.is_none(),
+                None => true,
+            }),
+        );
         Ok(e)
     }
 
@@ -283,6 +296,7 @@ impl ElasticShards {
     /// descriptors for it will rebuild from their membership snapshot
     /// instead of attaching. Returns whether the name was registered.
     pub fn unregister(name: &str) -> bool {
+        crate::net::http::unregister_readiness(&format!("elastic.{name}"));
         registry().lock().unwrap().remove(name).is_some()
     }
 
@@ -354,6 +368,12 @@ impl ElasticShards {
     /// Whether a migration is draining (an old epoch is still live).
     pub fn migrating(&self) -> bool {
         self.inner.state.read().unwrap().prev.is_some()
+    }
+
+    /// Every `(ring_id, backend)` pair in the current epoch — the
+    /// enumeration cluster telemetry scraping fans across.
+    pub fn members(&self) -> ShardMembers {
+        self.inner.state.read().unwrap().members.clone()
     }
 
     /// Counter snapshot.

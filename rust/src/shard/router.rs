@@ -189,6 +189,16 @@ impl ShardedConnector {
         &self.ids
     }
 
+    /// Every `(ring_id, backend)` pair in the fabric — the enumeration
+    /// cluster telemetry scraping fans across.
+    pub fn members(&self) -> Vec<(usize, Arc<dyn Connector>)> {
+        self.ids
+            .iter()
+            .zip(&self.shards)
+            .map(|(&id, c)| (id, c.clone()))
+            .collect()
+    }
+
     /// Backend position of a ring id.
     fn idx(&self, id: usize) -> usize {
         // Fabrics hold a handful of shards; a linear scan beats a map.

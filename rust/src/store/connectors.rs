@@ -15,7 +15,7 @@ use std::time::Duration;
 use crate::codec::{Bytes, Decode, Encode, Reader, get_varint, put_varint};
 use crate::error::{Error, Result};
 use crate::kv::{ClientOptions, KvClient, KvState};
-use crate::metrics::StoreBytes;
+use crate::metrics::{StoreBytes, TelemetrySnapshot};
 use crate::netsim::Link;
 use crate::ops::{Op, OpResult, Pending};
 
@@ -208,6 +208,16 @@ pub trait Connector: Send + Sync {
     /// Store-resident byte gauge, when the channel can report one.
     fn gauge(&self) -> Option<Arc<StoreBytes>> {
         None
+    }
+
+    /// Fetch the remote endpoint's telemetry snapshot, when the channel
+    /// fronts a server that can report one (the `Telemetry` wire op). The
+    /// default is `None`: in-process channels share *this* process's
+    /// registry, so there is nothing remote to scrape. Cluster
+    /// aggregation ([`crate::metrics::cluster`]) fans this across every
+    /// fabric member.
+    fn scrape_telemetry(&self) -> Result<Option<TelemetrySnapshot>> {
+        Ok(None)
     }
 }
 
@@ -776,6 +786,10 @@ impl Connector for TcpKvConnector {
     fn len(&self) -> Result<usize> {
         Ok(self.client.stats()?.0 as usize)
     }
+
+    fn scrape_telemetry(&self) -> Result<Option<TelemetrySnapshot>> {
+        Ok(Some(self.client.telemetry()?))
+    }
 }
 
 // --------------------------------------------------------------------------
@@ -969,6 +983,10 @@ impl Connector for ThrottledConnector {
 
     fn gauge(&self) -> Option<Arc<StoreBytes>> {
         self.shared.inner.gauge()
+    }
+
+    fn scrape_telemetry(&self) -> Result<Option<TelemetrySnapshot>> {
+        self.shared.inner.scrape_telemetry()
     }
 }
 

@@ -8,15 +8,18 @@
 //! exact global count.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use proxystore::codec::Bytes;
 use proxystore::kv::{KvClient, KvServer};
-use proxystore::net::ServerBuilder;
 use proxystore::metrics::telemetry;
+use proxystore::metrics::{ClusterSnapshot, SpanNode};
+use proxystore::net::{http_get, ServerBuilder};
 use proxystore::prelude::Store;
 use proxystore::shard::{ElasticShards, ShardMembers, ShardedConnector};
-use proxystore::store::{Connector, TcpKvConnector};
+use proxystore::store::{
+    Connector, MemoryConnector, TcpKvConnector, ThrottledConnector,
+};
 
 /// N live TCP KV servers and connectors onto them. The servers must stay
 /// alive for the duration of the test — return them alongside.
@@ -148,4 +151,257 @@ fn telemetry_snapshot_crosses_the_wire() {
     assert!(op_us.count >= 2);
     // Encode → decode is lossless for the rendered view too.
     assert!(!remote.render().is_empty());
+}
+
+/// Structural JSON check without a parser dependency: every bracket
+/// balances, tracked with string/escape awareness.
+fn assert_json_balanced(s: &str) {
+    let mut stack: Vec<char> = Vec::new();
+    let mut in_string = false;
+    let mut escaped = false;
+    for c in s.chars() {
+        if in_string {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_string = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_string = true,
+            '{' | '[' => stack.push(c),
+            '}' => assert_eq!(stack.pop(), Some('{'), "unbalanced }}"),
+            ']' => assert_eq!(stack.pop(), Some('['), "unbalanced ]"),
+            _ => {}
+        }
+    }
+    assert!(!in_string, "unterminated string");
+    assert!(stack.is_empty(), "unclosed brackets: {stack:?}");
+}
+
+#[test]
+fn cluster_scrape_assembles_cross_process_span_trees() {
+    let (_servers, conns) = tcp_backends(2);
+    let fabric = Arc::new(ShardedConnector::new(conns, 1, 0).unwrap());
+    let store = Store::new("spantree-itest", fabric.clone());
+
+    let guard = telemetry::start_trace("spantree-itest");
+    let trace_id = guard.ctx().trace_id;
+    let root_span = guard.ctx().span_id;
+    // Enough individually-traced ops that both shards participate.
+    let keys: Vec<String> = (0..8)
+        .map(|i| store.put(&Bytes(vec![i as u8; 64])).unwrap())
+        .collect();
+    for key in &keys {
+        assert!(store.get::<Bytes>(key).unwrap().is_some());
+    }
+    drop(guard);
+
+    // Fan the Telemetry op across the fabric over the wire and merge
+    // with the local registry.
+    let cs = ClusterSnapshot::scrape_sharded(&fabric);
+    assert!(cs.errors.is_empty(), "scrape errors: {:?}", cs.errors);
+    assert!(cs.nodes.len() >= 3, "local + 2 shards, got {}", cs.nodes.len());
+
+    // One tree per trace: the start_trace root span at the top, a
+    // client span per op under it, each parenting the server half that
+    // was stamped on the other side of the TCP connection.
+    let trees = cs.span_trees_for(trace_id);
+    assert_eq!(trees.len(), 1, "one root expected, got {}", trees.len());
+    let root = &trees[0];
+    assert_eq!(root.event.span_id, root_span);
+    assert_eq!(root.event.subsystem, "trace");
+    let clients: Vec<&SpanNode> = root
+        .children
+        .iter()
+        .filter(|c| c.event.subsystem == "kv.client")
+        .collect();
+    assert!(
+        clients.len() >= 16,
+        "8 puts + 8 gets should each leave a client span, got {}",
+        clients.len()
+    );
+    for c in &clients {
+        assert!(
+            c.event.dur_us > 0,
+            "client span carries its round-trip duration: {:?}",
+            c.event
+        );
+        let server_halves = c
+            .children
+            .iter()
+            .filter(|s| s.event.subsystem == "kv.server")
+            .count();
+        assert_eq!(
+            server_halves, 1,
+            "client span {:x} should parent exactly its server half",
+            c.event.span_id
+        );
+    }
+
+    // The Chrome trace-viewer export covers every span in the tree and
+    // is structurally valid JSON.
+    let json = cs.chrome_trace();
+    assert_json_balanced(&json);
+    assert!(json.starts_with("{\"traceEvents\":["));
+    assert!(json.contains("\"ph\":\"M\""), "process_name metadata missing");
+    let complete = json.matches("\"ph\":\"X\"").count();
+    let tree_spans: usize = trees.iter().map(SpanNode::size).sum();
+    assert!(
+        complete >= tree_spans,
+        "{complete} complete events < {tree_spans} tree spans"
+    );
+    for name in ["set", "get"] {
+        assert!(
+            json.contains(&format!("\"name\":\"{name}\"")),
+            "span name {name:?} missing from export"
+        );
+    }
+}
+
+#[test]
+fn admin_endpoint_serves_prometheus_exposition() {
+    let server = ServerBuilder::new()
+        .admin_addr("127.0.0.1:0".parse().unwrap())
+        .spawn_kv()
+        .unwrap();
+    let client = KvClient::connect(server.addr).unwrap();
+    client.set("admin-itest", Bytes(vec![1u8; 32])).unwrap();
+    assert!(client.get("admin-itest").unwrap().is_some());
+
+    let admin = server.admin_addr().expect("admin plane spawned");
+    let (status, body) = http_get(admin, "/healthz").unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(body, "ok\n");
+
+    let (status, body) = http_get(admin, "/metrics").unwrap();
+    assert_eq!(status, 200);
+    assert!(body.contains("# TYPE"), "no TYPE headers: {body:?}");
+    // Valid exposition: every sample line is `name[{labels}] value`
+    // with a sanitized name and a numeric value.
+    let mut samples = 0usize;
+    for line in body.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name_part, value) = line
+            .rsplit_once(' ')
+            .unwrap_or_else(|| panic!("bad sample line {line:?}"));
+        let name = name_part.split('{').next().unwrap();
+        let mut chars = name.chars();
+        let first = chars.next().unwrap_or(' ');
+        assert!(
+            first.is_ascii_alphabetic() || first == '_' || first == ':',
+            "bad metric name {name:?} in {line:?}"
+        );
+        assert!(
+            chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+            "unsanitized metric name {name:?} in {line:?}"
+        );
+        assert!(
+            value.parse::<f64>().is_ok(),
+            "non-numeric sample value in {line:?}"
+        );
+        samples += 1;
+    }
+    assert!(samples > 0, "empty exposition");
+    // The plane reflects the very traffic this test just sent.
+    assert!(
+        body.contains("kv_server_frames_in"),
+        "server family missing from exposition"
+    );
+
+    // The rest of the admin surface answers on the same connection
+    // semantics: trace export is valid JSON, slow log and conns render,
+    // unknown routes 404, non-GET methods are rejected by routing.
+    let (status, trace) = http_get(admin, "/trace").unwrap();
+    assert_eq!(status, 200);
+    assert_json_balanced(&trace);
+    assert!(trace.starts_with("{\"traceEvents\":["));
+    let (status, _) = http_get(admin, "/slow").unwrap();
+    assert_eq!(status, 200);
+    let (status, conns) = http_get(admin, "/conns").unwrap();
+    assert_eq!(status, 200);
+    assert!(conns.contains("kv.connections"), "conns: {conns:?}");
+    let (status, _) = http_get(admin, "/nope").unwrap();
+    assert_eq!(status, 404);
+    // Query strings route to the bare path.
+    let (status, _) = http_get(admin, "/healthz?verbose=1").unwrap();
+    assert_eq!(status, 200);
+}
+
+#[test]
+fn readyz_flips_not_ready_while_elastic_migration_drains() {
+    // A standalone admin plane: the readiness registry is
+    // process-global, so any endpoint reflects the elastic probe.
+    let mut admin_pool = proxystore::net::http::spawn_admin(
+        "127.0.0.1:0".parse().unwrap(),
+        "readyz-itest",
+        Arc::new(|| 0),
+    )
+    .unwrap();
+    let admin = admin_pool.addr;
+    let probe = "elastic.readyz-itest";
+
+    let members: ShardMembers =
+        (0..2).map(|id| (id, MemoryConnector::new())).collect();
+    let elastic = ElasticShards::new("readyz-itest", members, 1, 16).unwrap();
+    let store = Store::new("readyz-itest", Arc::new(elastic.clone()));
+
+    // Ready while the membership is stable.
+    let (_, body) = http_get(admin, "/readyz").unwrap();
+    assert!(!body.contains(probe), "ready fabric blocks readyz: {body:?}");
+
+    // Data worth migrating, then a membership change onto a throttled
+    // backend: the ~1/3 of keys that remap now take real wall-clock to
+    // move, holding the drain window open while we scrape.
+    let objs: Vec<Bytes> =
+        (0..256).map(|i| Bytes(vec![(i % 251) as u8; 4096])).collect();
+    store.put_many(&objs).unwrap();
+    let slow_backend = ThrottledConnector::wrap(
+        MemoryConnector::new(),
+        Duration::from_millis(20),
+        200_000.0,
+    );
+    elastic.add_shard(2, slow_backend).unwrap();
+
+    // The probe reports not-ready for the whole drain; poll until the
+    // endpoint shows it (immediately, in practice).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let saw_not_ready = loop {
+        let (status, body) = http_get(admin, "/readyz").unwrap();
+        if status == 503 && body.contains(probe) {
+            break true;
+        }
+        if !elastic.migrating() || Instant::now() > deadline {
+            break false;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    };
+    assert!(
+        saw_not_ready,
+        "migration drained without /readyz ever showing {probe}"
+    );
+
+    assert!(elastic.wait_quiescent(Some(Duration::from_secs(60))));
+    // Flipped back: this fabric no longer blocks readiness. (Parallel
+    // tests may hold their own probes, so assert on ours, and on the
+    // full 200 only when nothing else is draining.)
+    let (status, body) = http_get(admin, "/readyz").unwrap();
+    assert!(
+        !body.contains(probe),
+        "drained fabric still blocks readyz: {body:?}"
+    );
+    if status == 200 {
+        assert_eq!(body, "ready\n");
+    }
+
+    // Keys survived the throttled migration.
+    for (i, key) in store.put_many(&objs[..4]).unwrap().iter().enumerate() {
+        assert!(store.get::<Bytes>(key).unwrap().is_some(), "key {i} lost");
+    }
+    admin_pool.shutdown();
 }
