@@ -1,0 +1,156 @@
+//! Durable vs RAM-only write-path overhead over the TCP KV wire: the
+//! acceptance bench for the durability plane.
+//!
+//! Three servers, identical ingress, one pipelined connection each:
+//! RAM-only (no durability), WAL with group commit every 256 records
+//! (the default production policy), and WAL with fsync per op (the
+//! strongest policy, reported for context). Rounds interleave the modes
+//! and the best round per mode is kept, so transient noise hits every
+//! mode equally. Acceptance bar: group-commit durable puts sustain
+//! >= 70% of RAM-only throughput.
+
+use proxystore::benchlib::{once, results_dir, Bench, Scale};
+use proxystore::kv::KvClient;
+use proxystore::net::ServerBuilder;
+use proxystore::ops::Op;
+use proxystore::persist::{DurabilityOptions, FsyncPolicy};
+
+const WINDOW: usize = 64;
+
+/// Root for bench data dirs: tmpfs when available (so the bench measures
+/// the WAL write path, not the CI host's disk), else the system temp dir.
+fn scratch_root() -> std::path::PathBuf {
+    let shm = std::path::Path::new("/dev/shm");
+    let base = if shm.is_dir() {
+        shm.to_path_buf()
+    } else {
+        std::env::temp_dir()
+    };
+    base.join(format!("proxystore-bench-persist-{}", std::process::id()))
+}
+
+/// ops/sec for `n_ops` pipelined puts on one connection.
+fn pipelined_puts(client: &KvClient, n_ops: usize, payload: &[u8]) -> f64 {
+    let (_, secs) = once(|| {
+        let mut handles = Vec::with_capacity(WINDOW);
+        for i in 0..n_ops {
+            handles.push(client.submit_op(Op::Put {
+                key: format!("k-{i}"),
+                data: payload.to_vec(),
+            }));
+            if handles.len() == WINDOW {
+                for h in handles.drain(..) {
+                    h.wait().expect("put").into_unit().expect("unit");
+                }
+            }
+        }
+        for h in handles {
+            h.wait().expect("put").into_unit().expect("unit");
+        }
+    });
+    n_ops as f64 / secs
+}
+
+struct Mode {
+    name: &'static str,
+    client: KvClient,
+    best: f64,
+}
+
+fn main() {
+    let scale = Scale::from_env();
+    let n_ops = scale.pick(2048, 16384, 65536);
+    let rounds = scale.pick(2, 3, 5);
+    let payload = vec![7u8; 256];
+    let root = scratch_root();
+
+    // All three servers stay up for the whole bench; keys are wiped
+    // between rounds so resident size stays flat.
+    let ram = ServerBuilder::new().spawn_kv().expect("ram server");
+    let group = ServerBuilder::new()
+        .durability(
+            DurabilityOptions::new(root.join("group"))
+                .fsync(FsyncPolicy::EveryN(256)),
+        )
+        .spawn_kv()
+        .expect("group-commit server");
+    let every = ServerBuilder::new()
+        .durability(
+            DurabilityOptions::new(root.join("everyop"))
+                .fsync(FsyncPolicy::EveryOp),
+        )
+        .spawn_kv()
+        .expect("fsync-per-op server");
+
+    let mut modes = [
+        Mode {
+            name: "ram",
+            client: KvClient::connect(ram.addr).expect("client"),
+            best: 0.0,
+        },
+        Mode {
+            name: "wal_group256",
+            client: KvClient::connect(group.addr).expect("client"),
+            best: 0.0,
+        },
+        Mode {
+            name: "wal_everyop",
+            client: KvClient::connect(every.addr).expect("client"),
+            best: 0.0,
+        },
+    ];
+
+    let mut bench =
+        Bench::new("persist", "mode,round,put_ops_s,best_ops_s");
+    bench.note(&format!(
+        "{n_ops} pipelined 256B puts per round, {rounds} interleaved \
+         rounds, window {WINDOW}, data dirs under {}",
+        root.display()
+    ));
+
+    for mode in modes.iter_mut() {
+        // Warm: connection, allocator, and (for durable modes) the WAL's
+        // first segment + dir fsyncs.
+        pipelined_puts(&mode.client, WINDOW * 4, &payload);
+        mode.client.flush_all().expect("flush");
+    }
+
+    for round in 0..rounds {
+        for mode in modes.iter_mut() {
+            let ops_s = pipelined_puts(&mode.client, n_ops, &payload);
+            mode.best = mode.best.max(ops_s);
+            bench.row(format!(
+                "{},{round},{ops_s:.0},{:.0}",
+                mode.name, mode.best
+            ));
+            mode.client.flush_all().expect("flush");
+        }
+    }
+
+    let ram_best = modes[0].best;
+    let group_best = modes[1].best;
+    let every_best = modes[2].best;
+    let ratio = group_best / ram_best;
+    bench.note(&format!(
+        "fsync-per-op sustains {:.0}% of RAM-only (no bar; strongest \
+         policy, reported for context)",
+        100.0 * every_best / ram_best
+    ));
+    bench.compare(
+        "group-commit durable put throughput vs RAM-only",
+        ">=70%",
+        &format!("{:.0}%", ratio * 100.0),
+        ratio >= 0.70,
+    );
+    bench.finish();
+    println!("  (results under {})", results_dir());
+
+    let _ = std::fs::remove_dir_all(&root);
+    assert!(
+        ratio >= 0.70,
+        "durable write path too slow: group-commit puts at \
+         {group_best:.0} ops/s vs RAM-only {ram_best:.0} ops/s \
+         ({:.0}% < 70%)",
+        ratio * 100.0
+    );
+}

@@ -10,6 +10,17 @@ use std::time::{Duration, Instant};
 
 use crate::metrics::{telemetry, write_csv, write_text_atomic, Stats};
 
+/// Directory bench artifacts (CSVs, telemetry dumps, scenario listings)
+/// are written under. Defaults to `results/` relative to the working
+/// directory; override with the `PALLAS_RESULTS_DIR` env var so CI and
+/// multi-run sweeps can redirect output without touching bench code.
+pub fn results_dir() -> String {
+    match std::env::var("PALLAS_RESULTS_DIR") {
+        Ok(dir) if !dir.is_empty() => dir,
+        _ => "results".to_string(),
+    }
+}
+
 /// Time `f` over `samples` runs after `warmup` runs; returns per-run
 /// seconds.
 pub fn sample<T>(
@@ -85,7 +96,8 @@ impl Bench {
     /// Write the CSV (plus a rendered telemetry snapshot alongside it)
     /// and finish.
     pub fn finish(self) {
-        let path = format!("results/{}.csv", self.name);
+        let dir = results_dir();
+        let path = format!("{dir}/{}.csv", self.name);
         if let Err(e) = write_csv(&path, &self.header, &self.rows) {
             eprintln!("  (csv write failed: {e})");
         } else {
@@ -99,7 +111,7 @@ impl Bench {
         // ran; dump it next to the CSV so regressions come with their
         // telemetry attached.
         let snap = telemetry::snapshot();
-        let tpath = format!("results/{}.telemetry.txt", self.name);
+        let tpath = format!("{dir}/{}.telemetry.txt", self.name);
         if let Err(e) = write_text_atomic(&tpath, &snap.render()) {
             eprintln!("  (telemetry write failed: {e})");
         } else {
@@ -192,6 +204,17 @@ mod tests {
         assert_eq!(Scale::Smoke.pick(1, 2, 3), 1);
         assert_eq!(Scale::Default.pick(1, 2, 3), 2);
         assert_eq!(Scale::Full.pick(1, 2, 3), 3);
+    }
+
+    #[test]
+    fn results_dir_honours_env_override() {
+        // No other test touches this var, so set/unset here is safe.
+        std::env::set_var("PALLAS_RESULTS_DIR", "/tmp/pallas-results-test");
+        assert_eq!(results_dir(), "/tmp/pallas-results-test");
+        std::env::set_var("PALLAS_RESULTS_DIR", "");
+        assert_eq!(results_dir(), "results");
+        std::env::remove_var("PALLAS_RESULTS_DIR");
+        assert_eq!(results_dir(), "results");
     }
 
     #[test]

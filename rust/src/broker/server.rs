@@ -118,9 +118,16 @@ impl ServerBuilder<BrokerState> {
 }
 
 impl ServerBuilder<NoState> {
-    /// Spawn a broker server with fresh state.
+    /// Spawn a broker server with fresh state — or, when
+    /// [`ServerBuilder::data_dir`] / `durability` was set, a durable
+    /// broker recovered from that directory (per-partition log replay +
+    /// commit checkpoint).
     pub fn spawn_broker(self) -> Result<BrokerServer> {
-        self.with_state(BrokerState::new()).spawn()
+        let state = match &self.durability {
+            Some(opts) => BrokerState::open_durable(opts)?,
+            None => BrokerState::new(),
+        };
+        self.with_state(state).spawn()
     }
 }
 

@@ -139,9 +139,15 @@ impl ServerBuilder<KvState> {
 }
 
 impl ServerBuilder<NoState> {
-    /// Spawn a KV server with fresh state.
+    /// Spawn a KV server with fresh state — or, when
+    /// [`ServerBuilder::data_dir`] / `durability` was set, a durable
+    /// engine recovered from that directory (snapshot + WAL replay).
     pub fn spawn_kv(self) -> Result<KvServer> {
-        self.with_state(KvState::new()).spawn()
+        let state = match &self.durability {
+            Some(opts) => KvState::open_durable(opts)?,
+            None => KvState::new(),
+        };
+        self.with_state(state).spawn()
     }
 }
 

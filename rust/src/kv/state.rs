@@ -12,16 +12,32 @@
 //! the same lock for a consistent receiver count but the actual channel
 //! sends never block (unbounded `mpsc`), so a slow subscriber cannot
 //! stall writers — matching Redis' fire-and-forget pub/sub semantics.
+//!
+//! The engine is optionally **durable** ([`KvState::open_durable`]): every
+//! key/value mutation (`set`/`set_nx`/`mset`/`del`/`mdel`/`flush_all`)
+//! appends a record to a segmented WAL *under the engine lock* (so log
+//! order equals apply order) and group-commits it *after* releasing the
+//! lock, before the caller acks. Recovery loads the newest snapshot and
+//! replays the WAL tail; replay records are idempotent upserts/deletes, so
+//! a snapshot raced by concurrent writers still converges. Durability
+//! covers the key/value map only — lists, counters, pub/sub channels and
+//! armed watches are transient by design (they encode in-flight
+//! coordination, not data of record).
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::codec::Bytes;
+use crate::codec::{get_varint, put_varint, Bytes, Reader};
 use crate::error::{Error, Result};
 use crate::metrics::{telemetry, StoreBytes};
+use crate::persist::{
+    load_latest_snapshot, write_snapshot, DurabilityOptions, RecoveryStats,
+    Wal,
+};
 
 /// Cached watch-plane registry handles (process-wide across engines).
 struct WatchMetrics {
@@ -75,6 +91,105 @@ impl Inner {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Durability: WAL record codec + recovery
+// ---------------------------------------------------------------------------
+
+/// WAL record tags for KV mutations.
+const REC_SET: u8 = 1;
+const REC_DEL: u8 = 2;
+const REC_CLEAR: u8 = 3;
+
+fn encode_set(key: &str, value: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(key.len() + value.len() + 16);
+    buf.push(REC_SET);
+    put_varint(&mut buf, key.len() as u64);
+    buf.extend_from_slice(key.as_bytes());
+    put_varint(&mut buf, value.len() as u64);
+    buf.extend_from_slice(value);
+    buf
+}
+
+fn encode_del(key: &str) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(key.len() + 8);
+    buf.push(REC_DEL);
+    put_varint(&mut buf, key.len() as u64);
+    buf.extend_from_slice(key.as_bytes());
+    buf
+}
+
+/// Apply one CRC-validated replay record to the recovering map.
+/// Records are idempotent upserts/deletes, so replaying a tail that
+/// overlaps the snapshot horizon converges to the same state.
+fn apply_record(data: &mut HashMap<String, Arc<Vec<u8>>>, rec: &[u8]) -> Result<()> {
+    let mut r = Reader::new(rec);
+    match r.take(1)?[0] {
+        REC_SET => {
+            let klen = get_varint(&mut r)? as usize;
+            let key = std::str::from_utf8(r.take(klen)?)
+                .map_err(|_| Error::Codec("wal key not utf8".into()))?
+                .to_string();
+            let vlen = get_varint(&mut r)? as usize;
+            let val = r.take(vlen)?.to_vec();
+            data.insert(key, Arc::new(val));
+        }
+        REC_DEL => {
+            let klen = get_varint(&mut r)? as usize;
+            let key = std::str::from_utf8(r.take(klen)?)
+                .map_err(|_| Error::Codec("wal key not utf8".into()))?;
+            data.remove(key);
+        }
+        REC_CLEAR => data.clear(),
+        tag => {
+            return Err(Error::Codec(format!("unknown wal record tag {tag}")))
+        }
+    }
+    Ok(())
+}
+
+fn encode_snapshot(entries: &[(String, Arc<Vec<u8>>)]) -> Vec<u8> {
+    let total: usize = entries.iter().map(|(k, v)| k.len() + v.len() + 16).sum();
+    let mut buf = Vec::with_capacity(total + 8);
+    put_varint(&mut buf, entries.len() as u64);
+    for (k, v) in entries {
+        put_varint(&mut buf, k.len() as u64);
+        buf.extend_from_slice(k.as_bytes());
+        put_varint(&mut buf, v.len() as u64);
+        buf.extend_from_slice(v);
+    }
+    buf
+}
+
+fn decode_snapshot(
+    payload: &[u8],
+    data: &mut HashMap<String, Arc<Vec<u8>>>,
+) -> Result<()> {
+    let mut r = Reader::new(payload);
+    let n = get_varint(&mut r)?;
+    for _ in 0..n {
+        let klen = get_varint(&mut r)? as usize;
+        let key = std::str::from_utf8(r.take(klen)?)
+            .map_err(|_| Error::Codec("snapshot key not utf8".into()))?
+            .to_string();
+        let vlen = get_varint(&mut r)? as usize;
+        data.insert(key, Arc::new(r.take(vlen)?.to_vec()));
+    }
+    Ok(())
+}
+
+/// Durability sidecar of one engine: the mutation WAL plus snapshot
+/// bookkeeping. Shared by all clones of the owning [`KvState`].
+struct KvPersist {
+    wal: Wal,
+    snap_dir: PathBuf,
+    snapshot_every: u64,
+    /// Mutations logged since the last snapshot.
+    since_snapshot: AtomicU64,
+    /// Single-writer latch for snapshot rolls.
+    snapshotting: AtomicBool,
+    recovery: RecoveryStats,
+}
+
 /// The storage engine. Cheap to clone (Arc inside).
 #[derive(Clone)]
 pub struct KvState {
@@ -83,6 +198,8 @@ pub struct KvState {
     pub gauge: Arc<StoreBytes>,
     ops: Arc<AtomicU64>,
     next_watch: Arc<AtomicU64>,
+    /// `Some` when the engine writes through to a data dir.
+    persist: Option<Arc<KvPersist>>,
 }
 
 impl Default for KvState {
@@ -98,6 +215,154 @@ impl KvState {
             gauge: StoreBytes::new(),
             ops: Arc::new(AtomicU64::new(0)),
             next_watch: Arc::new(AtomicU64::new(0)),
+            persist: None,
+        }
+    }
+
+    /// Open a durable engine rooted at `opts.data_dir/kv`: recover the
+    /// key/value map from the newest snapshot plus WAL tail replay, then
+    /// write-through every subsequent mutation.
+    ///
+    /// Lists, counters, pub/sub and watches start empty — only the
+    /// key/value map is durable (see the module docs).
+    pub fn open_durable(opts: &DurabilityOptions) -> Result<KvState> {
+        let kv_dir = opts.data_dir.join("kv");
+        let wal_dir = kv_dir.join("wal");
+        let snap_dir = kv_dir.join("snap");
+        std::fs::create_dir_all(&wal_dir)?;
+        std::fs::create_dir_all(&snap_dir)?;
+
+        let mut data: HashMap<String, Arc<Vec<u8>>> = HashMap::new();
+        let mut from_seq = 0u64;
+        let mut snapshot_seq = None;
+        if let Some((seq, payload)) = load_latest_snapshot(&snap_dir)? {
+            decode_snapshot(&payload, &mut data)?;
+            from_seq = seq + 1;
+            snapshot_seq = Some(seq);
+        }
+        let mut replay_err = None;
+        let stats = Wal::replay(&wal_dir, from_seq, |_seq, rec| {
+            if replay_err.is_none() {
+                if let Err(e) = apply_record(&mut data, rec) {
+                    replay_err = Some(e);
+                }
+            }
+        })?;
+        if let Some(e) = replay_err {
+            return Err(e);
+        }
+        let wal =
+            Wal::open(&wal_dir, stats.next_seq, opts.segment_bytes, opts.fsync)?;
+
+        let gauge = StoreBytes::new();
+        gauge.add(data.values().map(|v| v.len()).sum());
+        Ok(KvState {
+            inner: Arc::new((
+                Mutex::new(Inner { data, ..Inner::default() }),
+                Condvar::new(),
+            )),
+            gauge,
+            ops: Arc::new(AtomicU64::new(0)),
+            next_watch: Arc::new(AtomicU64::new(0)),
+            persist: Some(Arc::new(KvPersist {
+                wal,
+                snap_dir,
+                snapshot_every: opts.snapshot_every_ops,
+                since_snapshot: AtomicU64::new(0),
+                snapshotting: AtomicBool::new(false),
+                recovery: RecoveryStats {
+                    snapshot_seq,
+                    replayed_records: stats.replayed,
+                    truncated_records: stats.truncated,
+                },
+            })),
+        })
+    }
+
+    /// What recovery found at open, or `None` for a RAM-only engine.
+    pub fn recovery_stats(&self) -> Option<RecoveryStats> {
+        self.persist.as_ref().map(|p| p.recovery)
+    }
+
+    /// True when mutations write through to a data dir.
+    pub fn is_durable(&self) -> bool {
+        self.persist.is_some()
+    }
+
+    /// Append one WAL record. Must be called under the engine lock so
+    /// log order equals apply order. Fail-stop: an engine that cannot
+    /// log a mutation must not ack it, so I/O errors panic.
+    fn log(&self, record: Vec<u8>) -> Option<u64> {
+        self.persist.as_ref().map(|p| {
+            p.since_snapshot.fetch_add(1, Ordering::Relaxed);
+            p.wal.append(&record).unwrap_or_else(|e| {
+                panic!("kv wal append failed (fail-stop): {e}")
+            })
+        })
+    }
+
+    /// Group-commit the mutation logged as `seq` (call after releasing
+    /// the engine lock, before acking), then roll a snapshot if the
+    /// configured mutation budget since the last one is spent.
+    fn commit_logged(&self, seq: Option<u64>) {
+        let (Some(p), Some(seq)) = (self.persist.as_ref(), seq) else {
+            return;
+        };
+        if let Err(e) = p.wal.commit(seq) {
+            panic!("kv wal commit failed (fail-stop): {e}");
+        }
+        if p.snapshot_every > 0
+            && p.since_snapshot.load(Ordering::Relaxed) >= p.snapshot_every
+        {
+            self.snapshot_now();
+        }
+    }
+
+    /// Write a point-in-time snapshot and reclaim WAL segments below its
+    /// horizon. No-op on RAM-only engines; concurrent callers coalesce
+    /// (one writes, the rest return immediately).
+    pub fn snapshot_now(&self) {
+        let Some(p) = self.persist.as_ref() else { return };
+        if p.snapshotting.swap(true, Ordering::Acquire) {
+            return;
+        }
+        let result = (|| -> Result<()> {
+            // Clone the map (Arc values — cheap) and read the WAL
+            // frontier under the engine lock: every seq < frontier is
+            // both logged and applied, so the image covers exactly the
+            // records below it.
+            let (m, _) = &*self.inner;
+            let (entries, next_seq) = {
+                let inner = m.lock().unwrap();
+                let entries: Vec<(String, Arc<Vec<u8>>)> = inner
+                    .data
+                    .iter()
+                    .map(|(k, v)| (k.clone(), v.clone()))
+                    .collect();
+                (entries, p.wal.next_seq())
+            };
+            p.since_snapshot.store(0, Ordering::Relaxed);
+            if next_seq == 0 {
+                return Ok(()); // nothing ever logged
+            }
+            let horizon = next_seq - 1;
+            write_snapshot(&p.snap_dir, horizon, &encode_snapshot(&entries))?;
+            p.wal.truncate_below(horizon)?;
+            Ok(())
+        })();
+        p.snapshotting.store(false, Ordering::Release);
+        if let Err(e) = result {
+            panic!("kv snapshot failed (fail-stop): {e}");
+        }
+    }
+
+    /// Force buffered WAL records to disk (clean shutdown aid; acked
+    /// durability normally follows the configured fsync policy).
+    pub fn persist_sync(&self) {
+        if let Some(p) = self.persist.as_ref() {
+            if let Err(e) = p.wal.sync() {
+                panic!("kv wal sync failed (fail-stop): {e}");
+            }
         }
     }
 
@@ -112,7 +377,7 @@ impl KvState {
     pub fn set(&self, key: &str, value: Bytes) {
         self.bump();
         let (m, _) = &*self.inner;
-        let (watchers, stored) = {
+        let (watchers, stored, logged) = {
             let mut inner = m.lock().unwrap();
             self.gauge.add(value.0.len());
             let stored = Arc::new(value.0);
@@ -121,8 +386,11 @@ impl KvState {
             {
                 self.gauge.sub(old.len());
             }
-            (inner.take_watches(key), stored)
+            let logged = self.log(encode_set(key, &stored));
+            (inner.take_watches(key), stored, logged)
         };
+        // Commit (group fsync per policy) before acking or waking anyone.
+        self.commit_logged(logged);
         // Fire outside the engine lock: exactly this key's waiters wake,
         // and their callbacks may chain freely.
         for (_, cb) in watchers {
@@ -134,7 +402,7 @@ impl KvState {
     pub fn set_nx(&self, key: &str, value: Bytes) -> bool {
         self.bump();
         let (m, _) = &*self.inner;
-        let (watchers, stored) = {
+        let (watchers, stored, logged) = {
             let mut inner = m.lock().unwrap();
             if inner.data.contains_key(key) {
                 return false;
@@ -142,8 +410,12 @@ impl KvState {
             self.gauge.add(value.0.len());
             let stored = Arc::new(value.0);
             inner.data.insert(key.to_string(), stored.clone());
-            (inner.take_watches(key), stored)
+            // A winning set_nx logs as a plain Set: replay stays
+            // idempotent and losing attempts never touch the WAL.
+            let logged = self.log(encode_set(key, &stored));
+            (inner.take_watches(key), stored, logged)
         };
+        self.commit_logged(logged);
         for (_, cb) in watchers {
             cb(stored.clone());
         }
@@ -185,6 +457,7 @@ impl KvState {
         self.bump();
         let (m, _) = &*self.inner;
         let mut fired: Vec<(WatchCallback, Arc<Vec<u8>>)> = Vec::new();
+        let mut logged = None;
         {
             let mut inner = m.lock().unwrap();
             for (key, value) in items {
@@ -193,11 +466,14 @@ impl KvState {
                 for (_, cb) in inner.take_watches(&key) {
                     fired.push((cb, stored.clone()));
                 }
+                // One record per pair; the batch group-commits once below.
+                logged = self.log(encode_set(&key, &stored)).or(logged);
                 if let Some(old) = inner.data.insert(key, stored) {
                     self.gauge.sub(old.len());
                 }
             }
         }
+        self.commit_logged(logged);
         for (cb, stored) in fired {
             cb(stored);
         }
@@ -330,16 +606,22 @@ impl KvState {
     pub fn mdel(&self, keys: &[String]) -> i64 {
         self.bump();
         let (m, _) = &*self.inner;
-        let mut inner = m.lock().unwrap();
-        let mut removed = 0;
-        let mut freed = 0;
-        for key in keys {
-            if let Some(old) = inner.data.remove(key) {
-                freed += old.len();
-                removed += 1;
+        let (removed, logged) = {
+            let mut inner = m.lock().unwrap();
+            let mut removed = 0;
+            let mut freed = 0;
+            let mut logged = None;
+            for key in keys {
+                if let Some(old) = inner.data.remove(key) {
+                    freed += old.len();
+                    removed += 1;
+                    logged = self.log(encode_del(key)).or(logged);
+                }
             }
-        }
-        self.gauge.sub(freed);
+            self.gauge.sub(freed);
+            (removed, logged)
+        };
+        self.commit_logged(logged);
         removed
     }
 
@@ -347,14 +629,18 @@ impl KvState {
     pub fn del(&self, key: &str) -> bool {
         self.bump();
         let (m, _) = &*self.inner;
-        let mut inner = m.lock().unwrap();
-        match inner.data.remove(key) {
-            Some(old) => {
-                self.gauge.sub(old.len());
-                true
+        let logged = {
+            let mut inner = m.lock().unwrap();
+            match inner.data.remove(key) {
+                Some(old) => {
+                    self.gauge.sub(old.len());
+                    self.log(encode_del(key))
+                }
+                None => return false,
             }
-            None => false,
-        }
+        };
+        self.commit_logged(logged);
+        true
     }
 
     pub fn exists(&self, key: &str) -> bool {
@@ -478,18 +764,23 @@ impl KvState {
     pub fn flush_all(&self) {
         self.bump();
         let (m, cv) = &*self.inner;
-        let mut inner = m.lock().unwrap();
-        let freed: usize = inner.data.values().map(|v| v.len()).sum::<usize>()
-            + inner
-                .lists
-                .values()
-                .flat_map(|q| q.iter().map(|v| v.0.len()))
-                .sum::<usize>();
-        self.gauge.sub(freed);
-        inner.data.clear();
-        inner.lists.clear();
-        inner.counters.clear();
-        cv.notify_all();
+        let logged = {
+            let mut inner = m.lock().unwrap();
+            let freed: usize =
+                inner.data.values().map(|v| v.len()).sum::<usize>()
+                    + inner
+                        .lists
+                        .values()
+                        .flat_map(|q| q.iter().map(|v| v.0.len()))
+                        .sum::<usize>();
+            self.gauge.sub(freed);
+            inner.data.clear();
+            inner.lists.clear();
+            inner.counters.clear();
+            cv.notify_all();
+            self.log(vec![REC_CLEAR])
+        };
+        self.commit_logged(logged);
     }
 
     pub fn stats(&self) -> (u64, u64, u64) {
@@ -774,5 +1065,103 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         kv.mset(vec![("batched".into(), Bytes(vec![3]))]);
         assert_eq!(h.join().unwrap(), Some(Bytes(vec![3])));
+    }
+
+    fn durable_opts(tag: &str) -> DurabilityOptions {
+        let dir = std::env::temp_dir().join(format!(
+            "pallas-kvstate-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        DurabilityOptions::new(dir)
+    }
+
+    #[test]
+    fn durable_mutations_survive_reopen() {
+        let opts =
+            durable_opts("reopen").fsync(crate::persist::FsyncPolicy::Off);
+        let kv = KvState::open_durable(&opts).unwrap();
+        assert!(kv.is_durable());
+        assert_eq!(kv.recovery_stats().unwrap().replayed_records, 0);
+        kv.set("a", Bytes(vec![1; 8]));
+        kv.set("b", Bytes(vec![2; 8]));
+        kv.mset(vec![
+            ("c".into(), Bytes(vec![3; 4])),
+            ("a".into(), Bytes(vec![9; 2])), // overwrite
+        ]);
+        assert!(kv.set_nx("d", Bytes(vec![4])));
+        assert!(!kv.set_nx("d", Bytes(vec![5]))); // loser: not logged
+        assert!(kv.del("b"));
+        assert_eq!(kv.mdel(&["c".into(), "missing".into()]), 1);
+        kv.persist_sync();
+        drop(kv);
+
+        let kv = KvState::open_durable(&opts).unwrap();
+        let stats = kv.recovery_stats().unwrap();
+        // set a, set b, 2x mset, set_nx d, del b, mdel c = 7 records.
+        assert_eq!(stats.replayed_records, 7);
+        assert_eq!(stats.truncated_records, 0);
+        assert_eq!(kv.get("a"), Some(Bytes(vec![9; 2])));
+        assert!(kv.get("b").is_none());
+        assert!(kv.get("c").is_none());
+        assert_eq!(kv.get("d"), Some(Bytes(vec![4])));
+        // Gauge reflects recovered residency: a (2) + d (1).
+        assert_eq!(kv.gauge.get(), 3);
+        let _ = std::fs::remove_dir_all(&opts.data_dir);
+    }
+
+    #[test]
+    fn durable_snapshot_pins_and_reclaims_wal() {
+        let opts = durable_opts("snap")
+            .fsync(crate::persist::FsyncPolicy::Off)
+            .segment_bytes(4096)
+            .snapshot_every_ops(32);
+        let kv = KvState::open_durable(&opts).unwrap();
+        for i in 0..100u32 {
+            kv.set(&format!("k{i}"), Bytes(vec![i as u8; 256]));
+        }
+        kv.persist_sync();
+        drop(kv);
+
+        // A snapshot rolled (≥32 mutations) and reclaimed covered
+        // segments: recovery seeds from it and replays only the tail.
+        let kv = KvState::open_durable(&opts).unwrap();
+        let stats = kv.recovery_stats().unwrap();
+        assert!(stats.snapshot_seq.is_some());
+        assert!(
+            stats.replayed_records < 100,
+            "tail replay only, got {}",
+            stats.replayed_records
+        );
+        for i in 0..100u32 {
+            assert_eq!(
+                kv.get(&format!("k{i}")),
+                Some(Bytes(vec![i as u8; 256]))
+            );
+        }
+        // New writes continue cleanly after recovery.
+        kv.set("post", Bytes(vec![7]));
+        kv.persist_sync();
+        drop(kv);
+        let kv = KvState::open_durable(&opts).unwrap();
+        assert_eq!(kv.get("post"), Some(Bytes(vec![7])));
+        let _ = std::fs::remove_dir_all(&opts.data_dir);
+    }
+
+    #[test]
+    fn durable_flush_all_clears_recovered_state() {
+        let opts =
+            durable_opts("flush").fsync(crate::persist::FsyncPolicy::Off);
+        let kv = KvState::open_durable(&opts).unwrap();
+        kv.set("gone", Bytes(vec![1; 16]));
+        kv.flush_all();
+        kv.set("kept", Bytes(vec![2; 16]));
+        kv.persist_sync();
+        drop(kv);
+        let kv = KvState::open_durable(&opts).unwrap();
+        assert!(kv.get("gone").is_none());
+        assert_eq!(kv.get("kept"), Some(Bytes(vec![2; 16])));
+        let _ = std::fs::remove_dir_all(&opts.data_dir);
     }
 }

@@ -139,6 +139,49 @@
 //! `/slow` dumps the slow-op log. Text renderings
 //! ([`metrics::TelemetrySnapshot::render`] — the CLI `stats` scenario)
 //! and the per-bench dumps from [`benchlib`] remain for offline use.
+//!
+//! # Durability
+//!
+//! Both engines can serve **durably** from a data directory
+//! ([`persist`]): point the builder at one and every acked mutation
+//! survives a crash.
+//!
+//! ```no_run
+//! use proxystore::net::ServerBuilder;
+//! let server = ServerBuilder::new().data_dir("/var/lib/pallas").spawn_kv()?;
+//! # Ok::<(), proxystore::Error>(())
+//! ```
+//!
+//! The write path is a **segmented write-ahead log**
+//! ([`persist::Wal`]): each mutation is encoded and appended under the
+//! engine lock (so log order equals apply order), then group-committed —
+//! concurrent committers coalesce onto one `fsync`, with the policy
+//! ([`persist::FsyncPolicy`]) choosing between `EveryOp` (strongest:
+//! every ack implies data on disk), `EveryN` (default, bounded loss
+//! window, near-RAM throughput), and `Off` (rotation-only fsync).
+//! Records are CRC-framed; replay stops at a torn tail (truncating it
+//! physically, counted in `recovery.truncated_records`) and discards
+//! anything after a corrupt record. Periodic **snapshots**
+//! ([`persist::write_snapshot`]) bound replay time: a snapshot pins the
+//! WAL horizon and closed segments at or below it are reclaimed.
+//!
+//! On disk, `<data_dir>/kv/{wal,snap}` holds the KV shard's log and
+//! snapshots, and `<data_dir>/broker/topics/<hex(topic)>/p<N>/` holds one
+//! log per partition — the WAL sequence number *is* the partition offset
+//! — plus a committed-offsets checkpoint. Broker retention
+//! ([`persist::DurabilityOptions::retain_segments`]/`retain_bytes`)
+//! drops the oldest closed segments; recovery blanks the reclaimed
+//! prefix so offsets stay dense.
+//!
+//! Recovery is automatic: reopening the same data dir loads the newest
+//! valid snapshot, replays the WAL tail, and reports
+//! [`RecoveryStats`](persist::RecoveryStats). A restarted shard rebinds
+//! its old address ([`testing::fail::RestartableServer`] scripts this)
+//! and [`shard::ElasticShards::rejoin_shard`] splices it back into a
+//! live elastic fabric in place — same ring id, empty migration delta —
+//! so reads never miss. Telemetry lands in the same registry
+//! (`wal.appends`, `wal.fsync_us`, `snapshot.duration_us`,
+//! `recovery.replayed_records`), visible in `/metrics`.
 
 pub mod apps;
 pub mod benchlib;
@@ -154,6 +197,7 @@ pub mod net;
 pub mod netsim;
 pub mod ops;
 pub mod ownership;
+pub mod persist;
 pub mod proxy;
 pub mod rng;
 pub mod runtime;
@@ -181,6 +225,7 @@ pub mod prelude {
     };
     pub use crate::net::{Ingress, ServerBuilder};
     pub use crate::ops::{Op, OpResult, Pending};
+    pub use crate::persist::{DurabilityOptions, FsyncPolicy};
     pub use crate::ownership::lifetime::StoreLifetimeExt;
     pub use crate::ownership::{
         borrow, clone_owned, into_owned, mut_borrow, update, ContextLifetime,

@@ -27,6 +27,9 @@
 //! fresh-state case. The `spawn*` impls live next to each server.
 
 use std::net::SocketAddr;
+use std::path::Path;
+
+use crate::persist::DurabilityOptions;
 
 /// How a server accepts and serves connections.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -62,6 +65,7 @@ pub struct ServerBuilder<S = NoState> {
     pub(crate) max_connections: usize,
     pub(crate) event_loops: usize,
     pub(crate) admin: Option<SocketAddr>,
+    pub(crate) durability: Option<DurabilityOptions>,
     pub(crate) state: S,
 }
 
@@ -80,6 +84,7 @@ impl ServerBuilder<NoState> {
             max_connections: 0,
             event_loops: default_event_loops(),
             admin: None,
+            durability: None,
             state: NoState,
         }
     }
@@ -128,6 +133,24 @@ impl<S> ServerBuilder<S> {
         self
     }
 
+    /// Serve durably from `path`: the spawned server opens its engine
+    /// with [`DurabilityOptions::new`] defaults rooted there (WAL +
+    /// snapshots for KV, per-partition log segments for the broker) and
+    /// recovers whatever state the directory already holds. Shorthand
+    /// for [`ServerBuilder::durability`]; default: RAM-only.
+    pub fn data_dir(self, path: impl AsRef<Path>) -> Self {
+        self.durability(DurabilityOptions::new(path.as_ref()))
+    }
+
+    /// Serve durably with explicit tuning (fsync policy, segment size,
+    /// snapshot cadence, broker retention). Ignored by
+    /// `with_state(...).spawn()` — pre-built state decides its own
+    /// durability via `KvState::open_durable` / `BrokerState::open_durable`.
+    pub fn durability(mut self, opts: DurabilityOptions) -> Self {
+        self.durability = Some(opts);
+        self
+    }
+
     /// Attach pre-built server state, selecting which server `spawn()`
     /// produces (e.g. `KvState` → KV server, `BrokerState` → broker).
     pub fn with_state<T>(self, state: T) -> ServerBuilder<T> {
@@ -137,6 +160,7 @@ impl<S> ServerBuilder<S> {
             max_connections: self.max_connections,
             event_loops: self.event_loops,
             admin: self.admin,
+            durability: self.durability,
             state,
         }
     }

@@ -1,0 +1,184 @@
+//! Atomic point-in-time snapshots.
+//!
+//! A snapshot is one file `{seq:020}.snap` whose name carries the WAL
+//! sequence horizon it covers: every logged mutation with seq ≤ that
+//! horizon is folded into the image, so recovery loads the newest valid
+//! snapshot and replays only WAL records after it, and
+//! [`super::Wal::truncate_below`] may reclaim segments at or below the
+//! horizon.
+//!
+//! File format: `b"PXSNAP1\n"` magic, `seq: u64 LE`, `len: u64 LE`,
+//! `payload`, `crc32(payload): u32 LE`. Writes are crash-atomic: the
+//! bytes land in a temp file which is fsynced, renamed into place, and
+//! the directory fsynced — a crash mid-write leaves the previous
+//! snapshot untouched. [`load_latest_snapshot`] validates magic, length
+//! and CRC, and falls back to the next-older snapshot if the newest is
+//! damaged.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use super::{crc32, metrics};
+use crate::Result;
+
+const MAGIC: &[u8; 8] = b"PXSNAP1\n";
+
+fn snap_path(dir: &Path, seq: u64) -> PathBuf {
+    dir.join(format!("{seq:020}.snap"))
+}
+
+fn snap_seq(path: &Path) -> Option<u64> {
+    let stem = path.file_name()?.to_str()?.strip_suffix(".snap")?;
+    if stem.len() != 20 || !stem.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    stem.parse().ok()
+}
+
+/// Write a snapshot covering WAL horizon `seq` atomically, then prune
+/// older snapshot files (the newest valid image is all recovery needs;
+/// one older generation is kept as a fallback against a bad disk).
+pub fn write_snapshot(dir: &Path, seq: u64, payload: &[u8]) -> Result<PathBuf> {
+    let m = metrics();
+    let t0 = Instant::now();
+    fs::create_dir_all(dir)?;
+    let tmp = dir.join(format!(".snap-{}.tmp", std::process::id()));
+    {
+        let mut f = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&tmp)?;
+        f.write_all(MAGIC)?;
+        f.write_all(&seq.to_le_bytes())?;
+        f.write_all(&(payload.len() as u64).to_le_bytes())?;
+        f.write_all(payload)?;
+        f.write_all(&crc32(payload).to_le_bytes())?;
+        f.sync_all()?;
+    }
+    let path = snap_path(dir, seq);
+    fs::rename(&tmp, &path)?;
+    File::open(dir)?.sync_all()?;
+    // Keep the new image plus one older generation.
+    let mut seqs: Vec<u64> = fs::read_dir(dir)?
+        .filter_map(|e| snap_seq(&e.ok()?.path()))
+        .filter(|s| *s < seq)
+        .collect();
+    seqs.sort_unstable();
+    for old in seqs.iter().rev().skip(1) {
+        fs::remove_file(snap_path(dir, *old))?;
+    }
+    m.snapshots.incr();
+    m.snapshot_us.record_duration(t0.elapsed());
+    Ok(path)
+}
+
+/// Load the newest valid snapshot in `dir`, returning `(seq, payload)`.
+/// Corrupt or truncated images are skipped in favor of older ones;
+/// `None` means no usable snapshot exists (recover from the WAL alone).
+pub fn load_latest_snapshot(dir: &Path) -> Result<Option<(u64, Vec<u8>)>> {
+    if !dir.exists() {
+        return Ok(None);
+    }
+    let mut seqs: Vec<u64> = fs::read_dir(dir)?
+        .filter_map(|e| snap_seq(&e.ok()?.path()))
+        .collect();
+    seqs.sort_unstable();
+    for seq in seqs.into_iter().rev() {
+        let mut buf = Vec::new();
+        File::open(snap_path(dir, seq))?.read_to_end(&mut buf)?;
+        if let Some(payload) = validate(&buf, seq) {
+            return Ok(Some((seq, payload)));
+        }
+    }
+    Ok(None)
+}
+
+fn validate(buf: &[u8], seq: u64) -> Option<Vec<u8>> {
+    let head = MAGIC.len() + 8 + 8;
+    if buf.len() < head + 4 || &buf[..MAGIC.len()] != MAGIC {
+        return None;
+    }
+    let file_seq =
+        u64::from_le_bytes(buf[MAGIC.len()..MAGIC.len() + 8].try_into().ok()?);
+    let len = u64::from_le_bytes(
+        buf[MAGIC.len() + 8..MAGIC.len() + 16].try_into().ok()?,
+    ) as usize;
+    if file_seq != seq || buf.len() != head + len + 4 {
+        return None;
+    }
+    let payload = &buf[head..head + len];
+    let crc = u32::from_le_bytes(buf[head + len..].try_into().ok()?);
+    if crc32(payload) != crc {
+        return None;
+    }
+    Some(payload.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "pallas-snap-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_and_prune() {
+        let dir = tmpdir("rt");
+        assert!(load_latest_snapshot(&dir).unwrap().is_none());
+        write_snapshot(&dir, 10, b"ten").unwrap();
+        write_snapshot(&dir, 20, b"twenty").unwrap();
+        write_snapshot(&dir, 30, b"thirty").unwrap();
+        let (seq, payload) = load_latest_snapshot(&dir).unwrap().unwrap();
+        assert_eq!((seq, payload.as_slice()), (30, b"thirty".as_slice()));
+        // Newest + one fallback generation survive pruning.
+        let n = fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| {
+                snap_seq(&e.as_ref().unwrap().path()).is_some()
+            })
+            .count();
+        assert_eq!(n, 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_to_older() {
+        let dir = tmpdir("fallback");
+        write_snapshot(&dir, 5, b"good-old").unwrap();
+        let newest = write_snapshot(&dir, 9, b"good-new").unwrap();
+        // Flip a payload byte in the newest image.
+        let mut buf = fs::read(&newest).unwrap();
+        let off = MAGIC.len() + 16;
+        buf[off] ^= 0xFF;
+        fs::write(&newest, &buf).unwrap();
+        let (seq, payload) = load_latest_snapshot(&dir).unwrap().unwrap();
+        assert_eq!((seq, payload.as_slice()), (5, b"good-old".as_slice()));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_image_rejected() {
+        let dir = tmpdir("trunc");
+        let p = write_snapshot(&dir, 7, b"payload-bytes").unwrap();
+        let bytes = fs::metadata(&p).unwrap().len();
+        OpenOptions::new()
+            .write(true)
+            .open(&p)
+            .unwrap()
+            .set_len(bytes - 2)
+            .unwrap();
+        assert!(load_latest_snapshot(&dir).unwrap().is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

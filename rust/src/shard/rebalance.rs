@@ -421,6 +421,32 @@ impl ElasticShards {
         })
     }
 
+    /// Reconnect a live shard id to a fresh backend — the recovery path
+    /// for a crashed-and-restarted shard (e.g. a durable KV server
+    /// brought back on the same address after replaying its WAL).
+    ///
+    /// The id keeps its ring position, so the placement delta is empty:
+    /// no keys migrate, the epoch flips and finalizes immediately, and
+    /// reads that were riding replica fallback while the shard was down
+    /// resume hitting it through the new connector. Old connectors to a
+    /// dead process never reconnect (the pipelined client fails fast on
+    /// a dead pipe), which is why rejoin takes a *new* backend.
+    pub fn rejoin_shard(
+        &self,
+        id: usize,
+        backend: Arc<dyn Connector>,
+    ) -> Result<()> {
+        self.rebalance(move |members| {
+            match members.iter_mut().find(|(m, _)| *m == id) {
+                Some(slot) => {
+                    slot.1 = backend;
+                    Ok(())
+                }
+                None => Err(Error::Config(format!("shard id {id} not live"))),
+            }
+        })
+    }
+
     /// Shrink the fabric: retire a shard id, draining its keys onto the
     /// survivors. The removed backend keeps serving reads until the
     /// migration finishes, then drops out of the fabric.

@@ -387,6 +387,141 @@ impl PartitionBroker for FlakyBroker {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Crash/restart harness
+// ---------------------------------------------------------------------------
+
+enum RestartHandle {
+    Kv(Option<crate::kv::KvServer>),
+    Broker(Option<crate::broker::BrokerServer>),
+}
+
+/// A KV or broker server that can be hard-killed and restarted on the
+/// **same port and data dir** — the crash-recovery test double.
+///
+/// "Kill" drops the server handle with no flush, no snapshot, no
+/// goodbye: exactly what a `kill -9` leaves behind. Whatever survives is
+/// whatever the durability plane's fsync policy already put on disk.
+/// "Restart" rebinds the original address (with a short retry while the
+/// OS releases the listener) and re-opens the same
+/// [`DurabilityOptions`], so the new process-equivalent recovers via
+/// snapshot + WAL replay and serves the keys its predecessor acked.
+///
+/// ```no_run
+/// use proxystore::persist::DurabilityOptions;
+/// use proxystore::testing::fail::RestartableServer;
+///
+/// let opts = DurabilityOptions::new("/tmp/crash-test");
+/// let mut server = RestartableServer::kv(opts).unwrap();
+/// let addr = server.addr();
+/// // ... write through a client, then:
+/// server.kill();
+/// server.restart().unwrap();
+/// assert_eq!(server.addr(), addr); // same address, recovered state
+/// ```
+pub struct RestartableServer {
+    addr: std::net::SocketAddr,
+    opts: crate::persist::DurabilityOptions,
+    handle: RestartHandle,
+}
+
+impl RestartableServer {
+    /// Spawn a durable KV server on an ephemeral port.
+    pub fn kv(opts: crate::persist::DurabilityOptions) -> Result<Self> {
+        let server =
+            crate::net::ServerBuilder::new().durability(opts.clone()).spawn_kv()?;
+        Ok(RestartableServer {
+            addr: server.addr,
+            opts,
+            handle: RestartHandle::Kv(Some(server)),
+        })
+    }
+
+    /// Spawn a durable broker server on an ephemeral port.
+    pub fn broker(opts: crate::persist::DurabilityOptions) -> Result<Self> {
+        let server = crate::net::ServerBuilder::new()
+            .durability(opts.clone())
+            .spawn_broker()?;
+        Ok(RestartableServer {
+            addr: server.addr,
+            opts,
+            handle: RestartHandle::Broker(Some(server)),
+        })
+    }
+
+    /// The address this server serves on — stable across restarts.
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// The durability options every incarnation opens.
+    pub fn options(&self) -> &crate::persist::DurabilityOptions {
+        &self.opts
+    }
+
+    pub fn is_running(&self) -> bool {
+        match &self.handle {
+            RestartHandle::Kv(h) => h.is_some(),
+            RestartHandle::Broker(h) => h.is_some(),
+        }
+    }
+
+    /// Hard-kill: drop the server with no flush or snapshot. Connected
+    /// clients see a dead pipe; unsynced WAL tail records are lost,
+    /// mimicking a process crash.
+    pub fn kill(&mut self) {
+        match &mut self.handle {
+            RestartHandle::Kv(h) => drop(h.take()),
+            RestartHandle::Broker(h) => drop(h.take()),
+        }
+    }
+
+    /// Restart on the same address + data dir, recovering engine state
+    /// from disk. Retries the bind briefly (the dying listener's socket
+    /// may take a beat to release even with `SO_REUSEADDR`).
+    pub fn restart(&mut self) -> Result<()> {
+        if self.is_running() {
+            return Err(Error::Config("server already running".into()));
+        }
+        let mut last = Error::Config("restart never attempted".into());
+        for _ in 0..50 {
+            let builder = crate::net::ServerBuilder::new()
+                .bind(self.addr)
+                .durability(self.opts.clone());
+            let result = match &mut self.handle {
+                RestartHandle::Kv(slot) => builder.spawn_kv().map(|s| {
+                    *slot = Some(s);
+                }),
+                RestartHandle::Broker(slot) => builder.spawn_broker().map(|s| {
+                    *slot = Some(s);
+                }),
+            };
+            match result {
+                Ok(()) => return Ok(()),
+                Err(e) => last = e,
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        Err(last)
+    }
+
+    /// The live KV engine, when running as a KV server.
+    pub fn kv_state(&self) -> Option<&crate::kv::KvState> {
+        match &self.handle {
+            RestartHandle::Kv(Some(s)) => Some(s.state()),
+            _ => None,
+        }
+    }
+
+    /// The live broker engine, when running as a broker.
+    pub fn broker_state(&self) -> Option<&crate::broker::BrokerState> {
+        match &self.handle {
+            RestartHandle::Broker(Some(s)) => Some(s.state()),
+            _ => None,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
