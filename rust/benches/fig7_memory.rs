@@ -8,7 +8,7 @@
 use std::time::Duration;
 
 use proxystore::apps::membench::{run, MemBenchConfig, MemMode};
-use proxystore::benchlib::{fmt_secs, Bench, Scale};
+use proxystore::benchlib::{fmt_bytes, fmt_secs, peak_rss_bytes, Bench, Scale};
 
 fn main() {
     let scale = Scale::from_env();
@@ -27,22 +27,38 @@ fn main() {
     );
     bench.note(&format!("{cfg:?} (paper: 8 rounds × 32 mappers × 100MB)"));
 
+    // Real process memory alongside the simulated store series: VmHWM is
+    // a monotonic high-water mark, so the per-mode delta attributes any
+    // growth to whichever run first pushed the ceiling up (0 = unknown
+    // off Linux).
+    let rss_baseline = peak_rss_bytes();
+    let mut rss_prev = rss_baseline;
     let mut summary = Vec::new();
     for mode in MemMode::all() {
         let r = run(&cfg, mode).expect("fig7 run");
         for row in r.series.csv_rows() {
             bench.row(format!("{},{row}", mode.label()));
         }
+        let rss_now = peak_rss_bytes();
         println!(
-            "  [{}] peak={:.1}MB mean={:.1}MB final={:.1}MB makespan={}",
+            "  [{}] peak={:.1}MB mean={:.1}MB final={:.1}MB makespan={} \
+             peak_rss=+{}",
             mode.label(),
             r.series.peak_store() as f64 / 1e6,
             r.series.mean_store() / 1e6,
             r.series.final_store() as f64 / 1e6,
-            fmt_secs(r.makespan)
+            fmt_secs(r.makespan),
+            fmt_bytes(rss_now.saturating_sub(rss_prev) as usize)
         );
+        rss_prev = rss_now;
         summary.push((mode, r));
     }
+    bench.note(&format!(
+        "process peak rss: {} baseline -> {} after sweep (map_input {})",
+        fmt_bytes(rss_baseline as usize),
+        fmt_bytes(rss_prev as usize),
+        fmt_bytes(cfg.map_input)
+    ));
 
     let get = |m: MemMode| summary.iter().find(|(mode, _)| *mode == m).unwrap();
     let (_, default) = get(MemMode::Default);

@@ -151,6 +151,31 @@ impl Scale {
     }
 }
 
+/// Peak resident set size (VmHWM) of this process in bytes, read from
+/// `/proc/self/status`. Returns 0 where the interface is missing
+/// (non-Linux) or unparsable, so callers must treat 0 as "unknown"
+/// rather than a measurement. The kernel value is a monotonic
+/// high-water mark: deltas between two calls attribute growth to
+/// whatever ran in between, but never go negative.
+pub fn peak_rss_bytes() -> u64 {
+    let status = match std::fs::read_to_string("/proc/self/status") {
+        Ok(s) => s,
+        Err(_) => return 0,
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse::<u64>()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
 /// Convenience: seconds → human string.
 pub fn fmt_secs(s: f64) -> String {
     if s >= 1.0 {
@@ -215,6 +240,17 @@ mod tests {
         assert_eq!(results_dir(), "results");
         std::env::remove_var("PALLAS_RESULTS_DIR");
         assert_eq!(results_dir(), "results");
+    }
+
+    #[test]
+    fn peak_rss_reads_high_water() {
+        let rss = peak_rss_bytes();
+        if cfg!(target_os = "linux") {
+            // Any running process has touched at least a page.
+            assert!(rss > 0);
+            // Monotonic: a second read never shrinks.
+            assert!(peak_rss_bytes() >= rss);
+        }
     }
 
     #[test]

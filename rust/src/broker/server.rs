@@ -364,7 +364,7 @@ impl Service for BrokerEventService {
                     self.state.fetch(&topic, offset, max, Duration::ZERO);
                 if !entries.is_empty() || timeout_ms == 0 {
                     return FrameOutcome::Reply(
-                        BrokerResponse::Entries(entries).to_bytes(),
+                        BrokerResponse::Entries(entries).to_bytes().into(),
                     );
                 }
                 self.defer(
@@ -388,7 +388,7 @@ impl Service for BrokerEventService {
                 );
                 if !entries.is_empty() || timeout_ms == 0 {
                     return FrameOutcome::Reply(
-                        BrokerResponse::Entries(entries).to_bytes(),
+                        BrokerResponse::Entries(entries).to_bytes().into(),
                     );
                 }
                 self.defer(
@@ -406,14 +406,14 @@ impl Service for BrokerEventService {
                 let batches = self.state.fetch_many(&reqs, Duration::ZERO);
                 if batches.iter().any(|b| !b.is_empty()) || timeout_ms == 0 {
                     return FrameOutcome::Reply(
-                        BrokerResponse::Batches(batches).to_bytes(),
+                        BrokerResponse::Batches(batches).to_bytes().into(),
                     );
                 }
                 self.defer(conn, BrokerRequest::FetchMany { reqs, timeout_ms })
             }
-            other => {
-                FrameOutcome::Reply(respond(&self.state, other).to_bytes())
-            }
+            other => FrameOutcome::Reply(
+                respond(&self.state, other).to_bytes().into(),
+            ),
         }
     }
 }

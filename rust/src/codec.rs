@@ -9,6 +9,7 @@
 //! framing.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::error::{Error, Result};
 
@@ -67,6 +68,15 @@ impl<'a> Reader<'a> {
 
     pub fn is_empty(&self) -> bool {
         self.remaining() == 0
+    }
+
+    /// Bytes consumed so far (the cursor offset into the input). Lets
+    /// owned decoders ([`Decode::from_owned`] on [`Buf`], the KV
+    /// client's response
+    /// path) convert a borrowed parse position back into a window over
+    /// the original allocation.
+    pub fn position(&self) -> usize {
+        self.pos
     }
 
     /// Take `n` raw bytes.
@@ -244,6 +254,230 @@ impl Decode for Bytes {
         };
         data.drain(..header_len);
         Ok(Bytes(data))
+    }
+}
+
+/// Cheaply-clonable byte buffer: an `Arc`-backed allocation plus an
+/// `(offset, len)` window into it. Cloning is a refcount bump; slicing
+/// mints a narrower window over the same allocation. This is the value
+/// currency of the zero-copy data plane: the KV engine stores `Buf`s,
+/// responses carry them, and the event loop's scatter-gather outbox
+/// writes them straight to the socket — the payload bytes are allocated
+/// once (at `SET` decode or engine insert) and never copied again.
+///
+/// Wire format is identical to [`Bytes`] (varint length + raw bytes), so
+/// the two interoperate frame-for-frame. The borrowed [`Decode::decode`]
+/// path necessarily copies (it only sees a slice); the owned
+/// [`Decode::from_owned`] path wraps the whole input allocation and
+/// windows past the header — zero copy, zero memmove.
+#[derive(Clone, Default)]
+pub struct Buf {
+    data: Arc<Vec<u8>>,
+    off: usize,
+    len: usize,
+}
+
+impl Buf {
+    /// Wrap an owned vector (full window, no copy).
+    pub fn from_vec(data: Vec<u8>) -> Buf {
+        let len = data.len();
+        Buf { data: Arc::new(data), off: 0, len }
+    }
+
+    /// Share an existing allocation (full window, refcount bump).
+    pub fn from_arc(data: Arc<Vec<u8>>) -> Buf {
+        let len = data.len();
+        Buf { data, off: 0, len }
+    }
+
+    /// Window `data[off..off + len]`. Panics if the window exceeds the
+    /// allocation — windows are always constructed from validated parse
+    /// positions, so an out-of-range window is a logic error.
+    pub fn window(data: Arc<Vec<u8>>, off: usize, len: usize) -> Buf {
+        assert!(
+            off.checked_add(len).is_some_and(|end| end <= data.len()),
+            "buf window {off}+{len} exceeds allocation {}",
+            data.len()
+        );
+        Buf { data, off, len }
+    }
+
+    /// Sub-window relative to this window (refcount bump, no copy).
+    /// Panics when the range exceeds this window, like slice indexing.
+    pub fn slice(&self, off: usize, len: usize) -> Buf {
+        assert!(
+            off.checked_add(len).is_some_and(|end| end <= self.len),
+            "buf slice {off}+{len} exceeds window {}",
+            self.len
+        );
+        Buf { data: self.data.clone(), off: self.off + off, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data[self.off..self.off + self.len]
+    }
+
+    /// Whether this window covers its whole backing allocation — the
+    /// invariant under which [`Buf::to_blob`]/[`Buf::into_blob`] are
+    /// free (engine-stored values always qualify; client-decoded
+    /// windows over a frame body do not).
+    pub fn is_full_window(&self) -> bool {
+        self.off == 0 && self.len == self.data.len()
+    }
+
+    /// Shared-allocation view as a [`Blob`](crate::store::Blob):
+    /// refcount bump when the window is the whole allocation, one copy
+    /// otherwise.
+    pub fn to_blob(&self) -> Arc<Vec<u8>> {
+        if self.is_full_window() {
+            self.data.clone()
+        } else {
+            Arc::new(self.as_slice().to_vec())
+        }
+    }
+
+    /// Consuming [`Buf::to_blob`]: free for a full window; a sole-owner
+    /// sub-window shifts down in place (memmove, no allocation); only a
+    /// still-shared sub-window copies. A `Blob`'s whole allocation IS
+    /// the value, so sub-windows cannot simply hand the Arc over.
+    pub fn into_blob(self) -> Arc<Vec<u8>> {
+        if self.is_full_window() {
+            self.data
+        } else {
+            match Arc::try_unwrap(self.data) {
+                // Sole owner: shift the window down in place (memmove,
+                // no allocation) — same cost the pre-Buf decode paid.
+                Ok(mut v) => {
+                    v.drain(..self.off);
+                    v.truncate(self.len);
+                    Arc::new(v)
+                }
+                Err(shared) => {
+                    Arc::new(shared[self.off..self.off + self.len].to_vec())
+                }
+            }
+        }
+    }
+
+    /// Take the bytes as an owned `Vec`: no copy for a sole-owner full
+    /// window, an in-place memmove for a sole-owner sub-window, one copy
+    /// only when the allocation is still shared.
+    pub fn into_vec(self) -> Vec<u8> {
+        match Arc::try_unwrap(self.data) {
+            Ok(mut v) => {
+                if self.off > 0 {
+                    v.drain(..self.off);
+                }
+                v.truncate(self.len);
+                v
+            }
+            Err(shared) => shared[self.off..self.off + self.len].to_vec(),
+        }
+    }
+}
+
+impl std::ops::Deref for Buf {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Buf {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Buf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Windows can be huge (the whole point); keep Debug bounded.
+        if self.len <= 32 {
+            write!(f, "Buf({:?})", self.as_slice())
+        } else {
+            write!(
+                f,
+                "Buf(len={}, head={:?}..)",
+                self.len,
+                &self.as_slice()[..16]
+            )
+        }
+    }
+}
+
+impl PartialEq for Buf {
+    fn eq(&self, other: &Buf) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Buf {}
+
+impl From<Vec<u8>> for Buf {
+    fn from(v: Vec<u8>) -> Buf {
+        Buf::from_vec(v)
+    }
+}
+
+impl From<Bytes> for Buf {
+    fn from(b: Bytes) -> Buf {
+        Buf::from_vec(b.0)
+    }
+}
+
+impl From<Buf> for Bytes {
+    fn from(b: Buf) -> Bytes {
+        Bytes(b.into_vec())
+    }
+}
+
+impl Encode for Buf {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.reserve(self.len + 10);
+        put_varint(buf, self.len as u64);
+        buf.extend_from_slice(self.as_slice());
+    }
+
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(self.len + 10);
+        self.encode(&mut buf);
+        buf
+    }
+}
+
+impl Decode for Buf {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        // Borrowed input: a copy is unavoidable here. The zero-copy
+        // path is `from_owned` below.
+        let n = get_len(r)?;
+        Ok(Buf::from_vec(r.take(n)?.to_vec()))
+    }
+
+    fn from_owned(data: Vec<u8>) -> Result<Self> {
+        // Validate the header, then window past it over the original
+        // allocation: no copy, no memmove (unlike `Bytes::from_owned`,
+        // which shifts the payload down).
+        let (off, len) = {
+            let mut r = Reader::new(&data);
+            let n = get_len(&mut r)?;
+            if r.remaining() != n {
+                return Err(Error::Codec(format!(
+                    "buf payload {} != declared {n}",
+                    r.remaining()
+                )));
+            }
+            (r.position(), n)
+        };
+        Ok(Buf::window(Arc::new(data), off, len))
     }
 }
 
@@ -449,6 +683,123 @@ mod tests {
     fn invalid_bool_and_option_tags() {
         assert!(bool::from_bytes(&[2]).is_err());
         assert!(Option::<u8>::from_bytes(&[9, 1]).is_err());
+    }
+
+    #[test]
+    fn buf_roundtrips_at_size_edges() {
+        // Empty, 1-byte, varint-length boundaries (127/128: 1→2 header
+        // bytes), and a 64 MiB bulk object.
+        for size in [0usize, 1, 127, 128, 16384, 64 << 20] {
+            let payload: Vec<u8> =
+                (0..size).map(|i| (i % 251) as u8).collect();
+            let buf = Buf::from_vec(payload.clone());
+            assert_eq!(buf.len(), size);
+            assert_eq!(buf.is_empty(), size == 0);
+            let wire = buf.to_bytes();
+            // Wire-compatible with Bytes in both directions.
+            assert_eq!(wire, Bytes(payload.clone()).to_bytes());
+            let back = Buf::from_bytes(&wire).unwrap();
+            assert_eq!(back, buf);
+            assert_eq!(back.as_slice(), &payload[..]);
+            let as_bytes = Bytes::from_bytes(&wire).unwrap();
+            assert_eq!(as_bytes.0, payload);
+        }
+    }
+
+    #[test]
+    fn buf_windowing_and_slicing() {
+        let data = Arc::new((0u8..100).collect::<Vec<u8>>());
+        let whole = Buf::from_arc(data.clone());
+        assert!(whole.is_full_window());
+        // Window at the start, middle, end, and the empty end boundary.
+        let head = Buf::window(data.clone(), 0, 10);
+        let mid = whole.slice(40, 20);
+        let tail = Buf::window(data.clone(), 90, 10);
+        let empty_end = Buf::window(data.clone(), 100, 0);
+        assert_eq!(head.as_slice(), &(0u8..10).collect::<Vec<u8>>()[..]);
+        assert_eq!(mid.as_slice(), &(40u8..60).collect::<Vec<u8>>()[..]);
+        assert_eq!(tail.as_slice(), &(90u8..100).collect::<Vec<u8>>()[..]);
+        assert!(empty_end.is_empty() && !empty_end.is_full_window());
+        // Slicing a window re-bases onto the same allocation.
+        let sub = mid.slice(5, 5);
+        assert_eq!(sub.as_slice(), &[45, 46, 47, 48, 49]);
+        assert_eq!(Arc::strong_count(&data), 7, "no hidden copies");
+        // A full-window blob is the same allocation, not a copy.
+        let blob = whole.to_blob();
+        assert!(Arc::ptr_eq(&blob, &data));
+        // A sub-window blob is a (correct) copy.
+        assert_eq!(*mid.to_blob(), (40u8..60).collect::<Vec<u8>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn buf_window_past_end_panics() {
+        let data = Arc::new(vec![0u8; 8]);
+        let _ = Buf::window(data, 4, 5);
+    }
+
+    #[test]
+    fn buf_from_owned_takes_zero_copy_tail() {
+        // `Buf::from_owned` must window over the original allocation:
+        // same backing pointer (shifted by the header), same capacity —
+        // no realloc, no memmove.
+        let payload = vec![7u8; 1 << 20];
+        let wire = Bytes(payload.clone()).to_bytes();
+        let wire_ptr = wire.as_ptr() as usize;
+        let wire_cap = wire.capacity();
+        let header = wire.len() - payload.len();
+        let buf = Buf::from_owned(wire).unwrap();
+        assert_eq!(buf.as_slice(), &payload[..]);
+        assert_eq!(buf.as_ptr() as usize, wire_ptr + header);
+        assert!(!buf.is_full_window());
+        // The backing allocation is the untouched wire buffer.
+        let backing = buf.data.clone();
+        assert_eq!(backing.capacity(), wire_cap);
+        assert_eq!(backing.as_ptr() as usize, wire_ptr);
+    }
+
+    #[test]
+    fn bytes_from_owned_reuses_allocation() {
+        // `Bytes::from_owned` shifts the header off in place: capacity
+        // identity proves no reallocation happened.
+        let payload = vec![3u8; 4096];
+        let wire = Bytes(payload.clone()).to_bytes();
+        let wire_cap = wire.capacity();
+        let b = Bytes::from_owned(wire).unwrap();
+        assert_eq!(b.0, payload);
+        assert_eq!(b.0.capacity(), wire_cap, "must not realloc");
+    }
+
+    #[test]
+    fn buf_into_vec_and_blob_ownership() {
+        // Sole-owner full window: the vec moves out untouched.
+        let v = vec![1u8, 2, 3];
+        let ptr = v.as_ptr() as usize;
+        let out = Buf::from_vec(v).into_vec();
+        assert_eq!(out.as_ptr() as usize, ptr);
+        assert_eq!(out, vec![1, 2, 3]);
+        // Sole-owner sub-window: in-place shift, same allocation.
+        let wire = Bytes(vec![9u8; 64]).to_bytes();
+        let cap = wire.capacity();
+        let out = Buf::from_owned(wire).unwrap().into_vec();
+        assert_eq!(out, vec![9u8; 64]);
+        assert_eq!(out.capacity(), cap);
+        // Shared allocation: copies, leaving the other clone intact.
+        let a = Buf::from_vec(vec![5u8; 16]);
+        let b = a.clone();
+        assert_eq!(b.into_vec(), vec![5u8; 16]);
+        assert_eq!(a.as_slice(), &[5u8; 16]);
+        assert!(Arc::ptr_eq(&a.to_blob(), &a.into_blob()));
+    }
+
+    #[test]
+    fn buf_hostile_and_truncated_input() {
+        let mut buf = Vec::new();
+        put_varint(&mut buf, u64::MAX / 2);
+        assert!(Buf::from_bytes(&buf).is_err());
+        assert!(Buf::from_owned(buf).is_err());
+        let wire = Bytes(vec![1, 2, 3]).to_bytes();
+        assert!(Buf::from_owned(wire[..wire.len() - 1].to_vec()).is_err());
     }
 
     #[test]

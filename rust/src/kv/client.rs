@@ -56,11 +56,12 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::codec::{
-    get_varint, put_varint, Bytes, Decode, Encode, Reader,
+    get_varint, put_varint, Buf, Bytes, Decode, Encode, Reader,
 };
 use crate::error::{Error, Result};
 use crate::kv::protocol::{
-    read_frame, write_frame, write_frame_unflushed, Request, Response,
+    decode_response_owned, read_frame, read_frame_raw, write_frame,
+    write_frame_unflushed, Request, Response,
 };
 use crate::kv::state::PubSubMsg;
 use crate::metrics::telemetry::{self, TelemetrySnapshot};
@@ -220,10 +221,10 @@ fn convert(kind: OpKind, resp: Response) -> Result<OpResult> {
             Ok(OpResult::Unit)
         }
         (OpKind::Value, Response::Value(v)) => {
-            Ok(OpResult::Value(v.map(|b| Arc::new(b.0))))
+            Ok(OpResult::Value(v.map(Buf::into_blob)))
         }
         (OpKind::Values, Response::Values(v)) => Ok(OpResult::Values(
-            v.into_iter().map(|o| o.map(|b| Arc::new(b.0))).collect(),
+            v.into_iter().map(|o| o.map(Buf::into_blob)).collect(),
         )),
         (OpKind::Bool, Response::Int(v)) => Ok(OpResult::Bool(v == 1)),
         (OpKind::Bools, Response::Bools(v)) => Ok(OpResult::Bools(v)),
@@ -346,18 +347,35 @@ fn reader_loop(stream: TcpStream, queue: Arc<QueueSync>) {
         .unwrap_or_default();
     let mut reader = std::io::BufReader::with_capacity(1 << 18, stream);
     loop {
-        match read_frame::<_, Response>(&mut reader) {
-            Ok(Some(Response::Notify { id, value })) => {
+        // Read the raw body, then decode owned: value payloads become
+        // windows over the frame's single allocation, so a bulk GET
+        // reply is read off the socket once and never copied again.
+        let body = match read_frame_raw(&mut reader) {
+            Ok(Some(body)) => body,
+            Ok(None) => {
+                fail_all(
+                    &queue,
+                    Error::Connector("kv server closed connection".into()),
+                );
+                return;
+            }
+            Err(e) => {
+                fail_all(&queue, e);
+                return;
+            }
+        };
+        match decode_response_owned(body) {
+            Ok(Response::Notify { id, value }) => {
                 // Out-of-band: routed by watch id, never FIFO-matched —
                 // this is what keeps a parked watch from stalling the
                 // shared response stream. An unknown id is a watch that
                 // was disarmed after firing raced the wire; drop it.
                 let watch = queue.q.lock().unwrap().watches.remove(&id);
                 if let Some(completer) = watch {
-                    completer.complete(Ok(Arc::new(value.0)));
+                    completer.complete(Ok(value.into_blob()));
                 }
             }
-            Ok(Some(resp)) => {
+            Ok(resp) => {
                 let sink = queue.q.lock().unwrap().sinks.pop_front();
                 match sink {
                     Some(op) => {
@@ -402,13 +420,6 @@ fn reader_loop(stream: TcpStream, queue: Arc<QueueSync>) {
                         return;
                     }
                 }
-            }
-            Ok(None) => {
-                fail_all(
-                    &queue,
-                    Error::Connector("kv server closed connection".into()),
-                );
-                return;
             }
             Err(e) => {
                 fail_all(&queue, e);
@@ -836,7 +847,7 @@ impl KvClient {
         }
     }
 
-    fn expect_value(&self, req: Request) -> Result<Option<Bytes>> {
+    fn expect_value(&self, req: Request) -> Result<Option<Buf>> {
         match self.call(req)? {
             Response::Value(v) => Ok(v),
             other => {
@@ -858,6 +869,14 @@ impl KvClient {
     }
 
     pub fn get(&self, key: &str) -> Result<Option<Bytes>> {
+        Ok(self.get_view(key)?.map(|b| Bytes(b.into_vec())))
+    }
+
+    /// Zero-copy get: the returned [`Buf`] is a window over the response
+    /// frame's own allocation — the value is read off the socket once and
+    /// never copied again. [`KvClient::get`] is this plus a flatten into
+    /// owned [`Bytes`] for callers that need a `Vec`.
+    pub fn get_view(&self, key: &str) -> Result<Option<Buf>> {
         self.expect_value(Request::Get { key: key.into() })
     }
 
@@ -867,6 +886,16 @@ impl KvClient {
     }
 
     pub fn mget(&self, keys: &[String]) -> Result<Vec<Option<Bytes>>> {
+        Ok(self
+            .mget_view(keys)?
+            .into_iter()
+            .map(|o| o.map(|b| Bytes(b.into_vec())))
+            .collect())
+    }
+
+    /// Zero-copy batched get: every present value is a window over the
+    /// one response-frame allocation the batch arrived in.
+    pub fn mget_view(&self, keys: &[String]) -> Result<Vec<Option<Buf>>> {
         match self.call(Request::MGet { keys: keys.to_vec() })? {
             Response::Values(v) => Ok(v),
             other => {
@@ -949,10 +978,12 @@ impl KvClient {
         list: &str,
         timeout: Option<Duration>,
     ) -> Result<Option<Bytes>> {
-        self.expect_value(Request::BRPop {
-            list: list.into(),
-            timeout_ms: timeout.map(|d| d.as_millis() as u64).unwrap_or(0),
-        })
+        Ok(self
+            .expect_value(Request::BRPop {
+                list: list.into(),
+                timeout_ms: timeout.map(|d| d.as_millis() as u64).unwrap_or(0),
+            })?
+            .map(|b| Bytes(b.into_vec())))
     }
 
     pub fn flush_all(&self) -> Result<()> {

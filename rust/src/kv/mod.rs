@@ -32,7 +32,8 @@ mod state;
 
 pub use client::{ClientOptions, FlushPolicy, KvClient, KvSubscriber};
 pub use protocol::{
-    read_frame, write_frame, write_frame_unflushed, Request, Response,
+    decode_response_owned, read_frame, read_frame_raw, write_frame,
+    write_frame_reusing, write_frame_unflushed, Request, Response,
 };
 pub use server::KvServer;
 pub use state::{KvState, PubSubMsg};

@@ -24,9 +24,13 @@
 //! `WaitGet` did (which still exists, still parks, and is still FIFO).
 
 use std::io::{Read, Write};
+use std::sync::Arc;
 
-use crate::codec::{Bytes, Decode, Encode, Reader, get_varint, put_varint};
+use crate::codec::{
+    Buf, Bytes, Decode, Encode, Reader, get_varint, put_varint,
+};
 use crate::error::{Error, Result};
+use crate::net::WireFrame;
 
 /// Client → server commands.
 #[derive(Debug, Clone, PartialEq)]
@@ -101,10 +105,13 @@ pub enum Request {
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
     Ok,
-    /// GET/WaitGet/BRPop result; `None` = missing/timeout.
-    Value(Option<Bytes>),
+    /// GET/WaitGet/BRPop result; `None` = missing/timeout. The payload
+    /// is a [`Buf`] window — on the server a refcount bump of the engine
+    /// map's cached allocation, on the client a window into the received
+    /// frame — so values cross this type without being copied.
+    Value(Option<Buf>),
     /// MGET result, positionally aligned with the request keys.
-    Values(Vec<Option<Bytes>>),
+    Values(Vec<Option<Buf>>),
     /// MEXISTS result, positionally aligned with the request keys.
     Bools(Vec<bool>),
     Int(i64),
@@ -113,7 +120,7 @@ pub enum Response {
     Message { channel: String, payload: Bytes },
     /// Out-of-band watch firing: pushed whenever a watched key is stored,
     /// routed client-side by the watch `id` (never FIFO-matched).
-    Notify { id: u64, value: Bytes },
+    Notify { id: u64, value: Buf },
     /// Stats: (n_keys, resident_bytes, ops_served).
     StatsReply { keys: u64, bytes: u64, ops: u64 },
     Error(String),
@@ -289,6 +296,141 @@ impl Encode for Response {
     }
 }
 
+impl Response {
+    /// Encode into a gather [`WireFrame`]: header bytes (tags, lengths,
+    /// scalar fields) are owned, every value payload is attached as a
+    /// `Shared` window of its cached allocation — a refcount bump, never
+    /// a copy. Wire bytes are identical to [`Encode::to_bytes`]; only
+    /// the ownership of the payload ranges differs. Variants without
+    /// bulk payloads fall back to a flat single-segment encode.
+    pub fn into_frame(self) -> WireFrame {
+        let mut frame = WireFrame::new();
+        let mut head = Vec::new();
+        match self {
+            Response::Value(v) => {
+                put_varint(&mut head, 1);
+                push_opt_payload(&mut frame, &mut head, v);
+            }
+            Response::Values(vs) => {
+                put_varint(&mut head, 2);
+                put_varint(&mut head, vs.len() as u64);
+                for v in vs {
+                    push_opt_payload(&mut frame, &mut head, v);
+                }
+            }
+            Response::Notify { id, value } => {
+                put_varint(&mut head, 9);
+                id.encode(&mut head);
+                push_payload(&mut frame, &mut head, value);
+            }
+            other => other.encode(&mut head),
+        }
+        frame.push_owned(head);
+        frame
+    }
+
+    /// Total value-payload bytes this response carries — the bytes the
+    /// zero-copy plane ships as shared segments instead of copying.
+    pub fn payload_len(&self) -> usize {
+        match self {
+            Response::Value(v) => v.as_ref().map_or(0, |b| b.len()),
+            Response::Values(vs) => vs.iter().flatten().map(|b| b.len()).sum(),
+            Response::Notify { value, .. } => value.len(),
+            _ => 0,
+        }
+    }
+}
+
+/// Append one value payload: its length varint joins the pending header
+/// bytes, the bytes themselves ride as a `Shared` segment. (The outbox
+/// inlines tiny shared segments on its side — one threshold, one
+/// `data.bytes_copied` counting site.)
+fn push_payload(frame: &mut WireFrame, head: &mut Vec<u8>, value: Buf) {
+    put_varint(head, value.len() as u64);
+    if !value.is_empty() {
+        frame.push_owned(std::mem::take(head));
+        frame.push_shared(value);
+    }
+}
+
+fn push_opt_payload(
+    frame: &mut WireFrame,
+    head: &mut Vec<u8>,
+    value: Option<Buf>,
+) {
+    match value {
+        None => head.push(0),
+        Some(b) => {
+            head.push(1);
+            push_payload(frame, head, b);
+        }
+    }
+}
+
+/// Decode a response from an owned frame body, windowing value payloads
+/// (`Value`/`Values`/`Notify`) straight over `data` instead of copying
+/// them out — the client-side half of the zero-copy data plane. Other
+/// variants take the ordinary borrowed decode.
+pub fn decode_response_owned(data: Vec<u8>) -> Result<Response> {
+    {
+        let mut r = Reader::new(&data);
+        match get_varint(&mut r)? {
+            1 | 2 | 9 => {}
+            _ => return Response::from_bytes(&data),
+        }
+    }
+    let arc = Arc::new(data);
+    let mut r = Reader::new(arc.as_slice());
+    let resp = match get_varint(&mut r)? {
+        1 => Response::Value(take_opt_window(&mut r, &arc)?),
+        2 => {
+            let n = get_varint(&mut r)? as usize;
+            let mut vs = Vec::with_capacity(n.min(r.remaining()));
+            for _ in 0..n {
+                vs.push(take_opt_window(&mut r, &arc)?);
+            }
+            Response::Values(vs)
+        }
+        9 => Response::Notify {
+            id: Decode::decode(&mut r)?,
+            value: take_window(&mut r, &arc)?,
+        },
+        _ => unreachable!("tag screened above"),
+    };
+    if !r.is_empty() {
+        return Err(Error::Codec(format!(
+            "{} trailing bytes after decode",
+            r.remaining()
+        )));
+    }
+    Ok(resp)
+}
+
+/// Parse one length-prefixed payload as a window over `arc` (validated
+/// by advancing the reader, so a hostile length fails before any window
+/// is minted).
+fn take_window(r: &mut Reader<'_>, arc: &Arc<Vec<u8>>) -> Result<Buf> {
+    let n = get_varint(r)?;
+    if n > r.remaining() as u64 {
+        return Err(Error::Codec(format!("length {n} exceeds input")));
+    }
+    let n = n as usize;
+    let off = r.position();
+    r.take(n)?;
+    Ok(Buf::window(Arc::clone(arc), off, n))
+}
+
+fn take_opt_window(
+    r: &mut Reader<'_>,
+    arc: &Arc<Vec<u8>>,
+) -> Result<Option<Buf>> {
+    match r.take(1)?[0] {
+        0 => Ok(None),
+        1 => Ok(Some(take_window(r, arc)?)),
+        b => Err(Error::Codec(format!("invalid option tag {b}"))),
+    }
+}
+
 impl Decode for Response {
     fn decode(r: &mut Reader<'_>) -> Result<Self> {
         Ok(match get_varint(r)? {
@@ -337,8 +479,36 @@ pub fn write_frame_unflushed<W: Write, T: Encode>(
     Ok(())
 }
 
+/// Write one length-prefixed frame, encoding into `scratch` (cleared,
+/// capacity kept) instead of a fresh per-frame allocation — the threaded
+/// ingress keeps one scratch per connection writer so steady-state
+/// replies allocate nothing.
+pub fn write_frame_reusing<W: Write, T: Encode>(
+    w: &mut W,
+    msg: &T,
+    scratch: &mut Vec<u8>,
+) -> Result<()> {
+    scratch.clear();
+    msg.encode(scratch);
+    w.write_all(&(scratch.len() as u32).to_le_bytes())?;
+    w.write_all(scratch)?;
+    w.flush()?;
+    Ok(())
+}
+
 /// Read one length-prefixed frame; `None` on clean EOF at a frame boundary.
 pub fn read_frame<R: Read, T: Decode>(r: &mut R) -> Result<Option<T>> {
+    match read_frame_raw(r)? {
+        Some(body) => Ok(Some(T::from_bytes(&body)?)),
+        None => Ok(None),
+    }
+}
+
+/// Read one length-prefixed frame body without decoding it; `None` on
+/// clean EOF at a frame boundary. The pipelined client reads raw bodies
+/// so [`decode_response_owned`] can window value payloads over the
+/// frame's own allocation instead of copying them out.
+pub fn read_frame_raw<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
     let mut len_buf = [0u8; 4];
     match r.read_exact(&mut len_buf) {
         Ok(()) => {}
@@ -362,7 +532,7 @@ pub fn read_frame<R: Read, T: Decode>(r: &mut R) -> Result<Option<T>> {
             format!("frame truncated: {n}/{len}"),
         ))));
     }
-    Ok(Some(T::from_bytes(&body)?))
+    Ok(Some(body))
 }
 
 #[cfg(test)]
@@ -438,13 +608,18 @@ mod tests {
         assert_eq!(traced.name(), "set");
     }
 
-    #[test]
-    fn responses_roundtrip() {
-        for resp in [
+    fn sample_responses() -> Vec<Response> {
+        vec![
             Response::Ok,
             Response::Value(None),
-            Response::Value(Some(Bytes(vec![0; 10]))),
-            Response::Values(vec![None, Some(Bytes(vec![1]))]),
+            Response::Value(Some(Buf::from_vec(vec![0; 10]))),
+            Response::Value(Some(Buf::from_vec(vec![7; 4096]))),
+            Response::Values(vec![None, Some(Buf::from_vec(vec![1]))]),
+            Response::Values(vec![
+                Some(Buf::from_vec(vec![9; 2000])),
+                None,
+                Some(Buf::from_vec(Vec::new())),
+            ]),
             Response::Bools(vec![true, false, true]),
             Response::Bools(Vec::new()),
             Response::Int(-7),
@@ -453,19 +628,87 @@ mod tests {
                 channel: "c".into(),
                 payload: Bytes(vec![2]),
             },
-            Response::Notify { id: 42, value: Bytes(vec![1, 2, 3]) },
-            Response::Notify { id: 0, value: Bytes(Vec::new()) },
+            Response::Notify { id: 42, value: Buf::from_vec(vec![1, 2, 3]) },
+            Response::Notify { id: 0, value: Buf::from_vec(Vec::new()) },
             Response::StatsReply { keys: 1, bytes: 2, ops: 3 },
             Response::Error("boom".into()),
             Response::Telemetry { data: Bytes(vec![1, 2, 3]) },
             Response::Telemetry { data: Bytes(Vec::new()) },
-        ] {
+        ]
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        for resp in sample_responses() {
             let mut buf = Vec::new();
             write_frame(&mut buf, &resp).unwrap();
             let mut cur = std::io::Cursor::new(buf);
             let back: Response = read_frame(&mut cur).unwrap().unwrap();
             assert_eq!(resp, back);
         }
+    }
+
+    #[test]
+    fn into_frame_matches_flat_encoding() {
+        // The gather frame must put the exact same bytes on the wire as
+        // the flat encoder, for every response shape.
+        for resp in sample_responses() {
+            let flat = resp.to_bytes();
+            let frame = resp.into_frame();
+            assert_eq!(frame.len(), flat.len());
+            assert_eq!(frame.concat(), flat);
+        }
+    }
+
+    #[test]
+    fn decode_response_owned_windows_payloads_in_place() {
+        let payload: Vec<u8> = (0..1 << 20).map(|i| (i % 251) as u8).collect();
+        let resp = Response::Value(Some(Buf::from_vec(payload.clone())));
+        let body = resp.to_bytes();
+        let body_ptr = body.as_ptr();
+        let body_len = body.len();
+        let back = decode_response_owned(body).unwrap();
+        let Response::Value(Some(v)) = &back else {
+            panic!("wrong variant: {back:?}")
+        };
+        assert_eq!(v.as_slice(), &payload[..]);
+        // Zero-copy: the payload window points inside the original frame
+        // allocation (tag + option byte + length varint, then payload).
+        let off = unsafe { v.as_slice().as_ptr().offset_from(body_ptr) };
+        assert!(
+            off > 0 && (off as usize) + v.len() <= body_len,
+            "payload window escaped the frame allocation (off={off})"
+        );
+    }
+
+    #[test]
+    fn decode_response_owned_other_variants_and_hostile_input() {
+        // Non-payload variants fall back to the flat decoder.
+        let resp = Response::Int(-7);
+        assert_eq!(decode_response_owned(resp.to_bytes()).unwrap(), resp);
+        // A frame whose declared payload length overruns the body fails
+        // before any window is minted.
+        let mut bad = Vec::new();
+        put_varint(&mut bad, 1); // Value tag
+        bad.push(1); // Some
+        put_varint(&mut bad, 1000); // declared len >> actual
+        bad.extend_from_slice(&[1, 2, 3]);
+        assert!(decode_response_owned(bad).is_err());
+        // Trailing bytes after a complete response are rejected.
+        let mut trailing = Response::Value(None).to_bytes();
+        trailing.push(0);
+        assert!(decode_response_owned(trailing).is_err());
+    }
+
+    #[test]
+    fn write_frame_reusing_matches_plain_write() {
+        let resp = Response::Value(Some(Buf::from_vec(vec![5; 300])));
+        let mut plain = Vec::new();
+        write_frame(&mut plain, &resp).unwrap();
+        let mut reused = Vec::new();
+        let mut scratch = vec![0xAAu8; 8]; // stale bytes must not leak
+        write_frame_reusing(&mut reused, &resp, &mut scratch).unwrap();
+        assert_eq!(plain, reused);
     }
 
     #[test]

@@ -26,14 +26,16 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
-use crate::codec::{Bytes, Decode, Encode};
+use crate::codec::{Buf, Bytes, Decode, Encode};
 use crate::error::Result;
-use crate::kv::protocol::{read_frame, write_frame, Request, Response};
+use crate::kv::protocol::{
+    read_frame, write_frame_reusing, Request, Response,
+};
 use crate::kv::state::{KvState, PubSubMsg};
 use crate::metrics::telemetry;
 use crate::net::{
     ConnHandle, EventLoopPool, FrameOutcome, Ingress, NoState, ServerBuilder,
-    Service,
+    Service, WireFrame,
 };
 
 /// Cached registry handles for the server's hot-path metrics (one lookup
@@ -169,6 +171,7 @@ fn spawn_kv_server(b: ServerBuilder<KvState>) -> Result<KvServer> {
             let service = Arc::new(KvEventService {
                 state: b.state.clone(),
                 stop: stop.clone(),
+                zero_copy: b.zero_copy,
                 armed: Arc::new(Mutex::new(HashMap::new())),
             });
             let pool = EventLoopPool::spawn(
@@ -257,28 +260,32 @@ fn spawn_threaded(
 
 fn handle_request(state: &KvState, req: Request) -> Response {
     match req {
-        Request::Get { key } => Response::Value(state.get(&key)),
+        Request::Get { key } => Response::Value(state.get_buf(&key)),
         Request::Set { key, value } => {
             if let Err(e) = KvState::check_value_size(&value) {
                 return Response::Error(e.to_string());
             }
+            telemetry::data_metrics().value_bytes_in.add(value.0.len() as u64);
             state.set(&key, value);
             Response::Ok
         }
         Request::SetNx { key, value } => {
+            telemetry::data_metrics().value_bytes_in.add(value.0.len() as u64);
             Response::Int(i64::from(state.set_nx(&key, value)))
         }
         Request::Del { key } => Response::Int(i64::from(state.del(&key))),
         Request::MDel { keys } => Response::Int(state.mdel(&keys)),
         Request::MExists { keys } => Response::Bools(state.mexists(&keys)),
         Request::Exists { key } => Response::Int(i64::from(state.exists(&key))),
-        Request::MGet { keys } => Response::Values(state.mget(&keys)),
+        Request::MGet { keys } => Response::Values(state.mget_buf(&keys)),
         Request::MPut { items } => {
             for (_, value) in &items {
                 if let Err(e) = KvState::check_value_size(value) {
                     return Response::Error(e.to_string());
                 }
             }
+            let total: usize = items.iter().map(|(_, v)| v.0.len()).sum();
+            telemetry::data_metrics().value_bytes_in.add(total as u64);
             state.mset(items);
             Response::Ok
         }
@@ -288,7 +295,9 @@ fn handle_request(state: &KvState, req: Request) -> Response {
             } else {
                 Some(Duration::from_millis(timeout_ms))
             };
-            Response::Value(state.wait_get(&key, timeout))
+            Response::Value(
+                state.wait_get_shared(&key, timeout).map(Buf::from_arc),
+            )
         }
         Request::Incr { key, by } => Response::Int(state.incr(&key, by)),
         Request::Keys { prefix } => Response::KeysList(state.keys(&prefix)),
@@ -305,7 +314,9 @@ fn handle_request(state: &KvState, req: Request) -> Response {
             } else {
                 Some(Duration::from_millis(timeout_ms))
             };
-            Response::Value(state.brpop(&list, timeout))
+            Response::Value(
+                state.brpop(&list, timeout).map(|v| Buf::from_vec(v.0)),
+            )
         }
         Request::FlushAll => {
             state.flush_all();
@@ -389,6 +400,27 @@ fn is_blocking(req: &Request) -> bool {
     }
 }
 
+/// Flatten a response for the reactor's outbox. Zero-copy mode emits a
+/// segmented frame whose payload segments alias the engine's buffers;
+/// copy mode re-encodes everything into one flat buffer (the
+/// pre-zero-copy behaviour, kept as a bench baseline) and charges the
+/// payload bytes to `data.bytes_copied`.
+fn encode_reply(resp: Response, zero_copy: bool) -> WireFrame {
+    let out = resp.payload_len() as u64;
+    let dm = telemetry::data_metrics();
+    if out > 0 {
+        dm.value_bytes_out.add(out);
+    }
+    if zero_copy {
+        resp.into_frame()
+    } else {
+        if out > 0 {
+            dm.bytes_copied.add(out);
+        }
+        WireFrame::from_vec(resp.to_bytes())
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Event-driven ingress
 // ---------------------------------------------------------------------------
@@ -398,6 +430,8 @@ fn is_blocking(req: &Request) -> bool {
 struct KvEventService {
     state: KvState,
     stop: Arc<AtomicBool>,
+    /// Reply framing mode; see [`ServerBuilder::zero_copy`].
+    zero_copy: bool,
     /// conn id -> (client watch id -> (key, registry token)), shared with
     /// the fire callbacks so a fired watch prunes its own entry.
     #[allow(clippy::type_complexity)]
@@ -411,12 +445,13 @@ impl KvEventService {
     fn defer(&self, conn: &ConnHandle, req: Request) -> FrameOutcome {
         let state = self.state.clone();
         let handle = conn.clone();
+        let zero_copy = self.zero_copy;
         let spawned = std::thread::Builder::new()
             .name("kv-park".into())
             .spawn(move || {
                 let resp = respond(&state, req);
                 server_metrics().frames_out.incr();
-                handle.complete(resp.to_bytes());
+                handle.complete(encode_reply(resp, zero_copy));
             });
         match spawned {
             Ok(_) => FrameOutcome::Deferred,
@@ -446,7 +481,7 @@ impl Service for KvEventService {
                 let stop = self.stop.clone();
                 m.frames_out.incr();
                 FrameOutcome::Handoff {
-                    reply: Response::Ok.to_bytes(),
+                    reply: Response::Ok.to_bytes().into(),
                     take: Box::new(move |stream| {
                         let _ = std::thread::Builder::new()
                             .name("kv-sub".into())
@@ -462,6 +497,7 @@ impl Service for KvEventService {
                 let push = conn.clone();
                 let armed = self.armed.clone();
                 let conn_id = conn.conn_id();
+                let zero_copy = self.zero_copy;
                 let token = self.state.watch(
                     &key,
                     Box::new(move |v| {
@@ -472,9 +508,12 @@ impl Service for KvEventService {
                             per.remove(&id);
                         }
                         let m = server_metrics();
-                        let frame =
-                            Response::Notify { id, value: Bytes(v.to_vec()) }
-                                .to_bytes();
+                        // The engine hands the stored allocation over;
+                        // the push rides it as a shared window.
+                        let frame = encode_reply(
+                            Response::Notify { id, value: Buf::from_arc(v) },
+                            zero_copy,
+                        );
                         push.push_frame(
                             frame,
                             Some((fired, m.wake_us.clone())),
@@ -492,7 +531,7 @@ impl Service for KvEventService {
                         .insert(id, (key, token));
                 }
                 m.frames_out.incr();
-                FrameOutcome::Reply(Response::Ok.to_bytes())
+                FrameOutcome::Reply(Response::Ok.to_bytes().into())
             }
             Request::Unwatch { key, id } => {
                 let entry = self
@@ -510,19 +549,20 @@ impl Service for KvEventService {
                 };
                 m.frames_out.incr();
                 FrameOutcome::Reply(
-                    Response::Int(i64::from(removed)).to_bytes(),
+                    Response::Int(i64::from(removed)).to_bytes().into(),
                 )
             }
             Request::WaitGet { key, timeout_ms } => {
                 // Probe: an atomic get — a present value answers without
                 // parking, only a miss pays for a helper thread.
                 let start = Instant::now();
-                if let Some(v) = self.state.get(&key) {
+                if let Some(v) = self.state.get_buf(&key) {
                     m.op_us.record_duration(start.elapsed());
                     m.frames_out.incr();
-                    return FrameOutcome::Reply(
-                        Response::Value(Some(v)).to_bytes(),
-                    );
+                    return FrameOutcome::Reply(encode_reply(
+                        Response::Value(Some(v)),
+                        self.zero_copy,
+                    ));
                 }
                 self.defer(conn, Request::WaitGet { key, timeout_ms })
             }
@@ -535,16 +575,20 @@ impl Service for KvEventService {
                 {
                     m.op_us.record_duration(start.elapsed());
                     m.frames_out.incr();
-                    return FrameOutcome::Reply(
-                        Response::Value(Some(v)).to_bytes(),
-                    );
+                    return FrameOutcome::Reply(encode_reply(
+                        Response::Value(Some(Buf::from_vec(v.0))),
+                        self.zero_copy,
+                    ));
                 }
                 self.defer(conn, Request::BRPop { list, timeout_ms })
             }
             req if is_blocking(&req) => self.defer(conn, req),
             other => {
                 m.frames_out.incr();
-                FrameOutcome::Reply(respond(&self.state, other).to_bytes())
+                FrameOutcome::Reply(encode_reply(
+                    respond(&self.state, other),
+                    self.zero_copy,
+                ))
             }
         }
     }
@@ -571,6 +615,8 @@ fn pump_subscriber(
 ) {
     let _ = stream.set_write_timeout(Some(WRITE_STALL_CAP));
     let mut writer = BufWriter::with_capacity(1 << 18, stream);
+    // One encode buffer for the life of the subscription, not per push.
+    let mut scratch = Vec::new();
     loop {
         match rx.recv_timeout(Duration::from_millis(100)) {
             Ok(msg) => {
@@ -578,7 +624,9 @@ fn pump_subscriber(
                     channel: msg.channel,
                     payload: msg.payload,
                 };
-                if write_frame(&mut writer, &push).is_err() {
+                if write_frame_reusing(&mut writer, &push, &mut scratch)
+                    .is_err()
+                {
                     return; // subscriber gone
                 }
                 server_metrics().frames_out.incr();
@@ -597,10 +645,18 @@ fn pump_subscriber(
 // Threaded ingress
 // ---------------------------------------------------------------------------
 
+/// The write half of a threaded connection: socket buffer plus a
+/// reusable encode scratch, so steady-state frames cost zero fresh
+/// allocations instead of one `Vec` each.
+struct ConnWriter {
+    writer: BufWriter<TcpStream>,
+    scratch: Vec<u8>,
+}
+
 /// The sharable write half of a threaded connection: FIFO responses from
 /// the request loop and out-of-band `Notify` pushes from watch callbacks
 /// interleave at frame granularity under one lock.
-type SharedWriter = Arc<Mutex<BufWriter<TcpStream>>>;
+type SharedWriter = Arc<Mutex<ConnWriter>>;
 
 /// Cap on how long any single frame write may block on a peer's socket
 /// buffer. Notify pushes run on the *storing* connection's thread, so
@@ -614,9 +670,22 @@ const WRITE_STALL_CAP: Duration = Duration::from_secs(5);
 /// registry token).
 type ArmedWatches = Arc<Mutex<HashMap<u64, (String, u64)>>>;
 
-/// Write one FIFO/push frame and count it.
-fn send<T: Encode>(writer: &SharedWriter, msg: &T) -> Result<()> {
-    write_frame(&mut *writer.lock().unwrap(), msg)?;
+/// Write one FIFO/push frame and count it. The threaded path always
+/// flat-encodes through the connection scratch, so value payloads are
+/// charged to `data.bytes_copied` (the event loop's zero-copy mode is
+/// what avoids them).
+fn send(writer: &SharedWriter, msg: &Response) -> Result<()> {
+    send_locked(&mut writer.lock().unwrap(), msg)
+}
+
+fn send_locked(conn: &mut ConnWriter, msg: &Response) -> Result<()> {
+    let out = msg.payload_len() as u64;
+    if out > 0 {
+        let dm = telemetry::data_metrics();
+        dm.value_bytes_out.add(out);
+        dm.bytes_copied.add(out);
+    }
+    write_frame_reusing(&mut conn.writer, msg, &mut conn.scratch)?;
     server_metrics().frames_out.incr();
     Ok(())
 }
@@ -630,8 +699,10 @@ fn serve_connection(
     stream.set_write_timeout(Some(WRITE_STALL_CAP))?;
     let mut reader =
         std::io::BufReader::with_capacity(1 << 18, stream.try_clone()?);
-    let writer: SharedWriter =
-        Arc::new(Mutex::new(BufWriter::with_capacity(1 << 18, stream)));
+    let writer: SharedWriter = Arc::new(Mutex::new(ConnWriter {
+        writer: BufWriter::with_capacity(1 << 18, stream),
+        scratch: Vec::new(),
+    }));
     let armed: ArmedWatches = Arc::new(Mutex::new(HashMap::new()));
     server_metrics().connections.add(1);
     let result = serve_requests(&mut reader, &writer, &state, &stop, &armed);
@@ -703,13 +774,12 @@ fn serve_requests(
                         // write timeout.
                         let fired = Instant::now();
                         prune.lock().unwrap().remove(&id);
-                        let sent = write_frame(
-                            &mut *push.lock().unwrap(),
-                            &Response::Notify { id, value: Bytes(v.to_vec()) },
+                        let sent = send_locked(
+                            &mut push.lock().unwrap(),
+                            &Response::Notify { id, value: Buf::from_arc(v) },
                         );
                         if sent.is_ok() {
                             let m = server_metrics();
-                            m.frames_out.incr();
                             m.notify_pushes.incr();
                             m.wake_us.record_duration(fired.elapsed());
                         }

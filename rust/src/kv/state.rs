@@ -31,7 +31,7 @@ use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::codec::{get_varint, put_varint, Bytes, Reader};
+use crate::codec::{get_varint, put_varint, Buf, Bytes, Reader};
 use crate::error::{Error, Result};
 use crate::metrics::{telemetry, StoreBytes};
 use crate::persist::{
@@ -69,7 +69,11 @@ pub type WatchCallback = Box<dyn FnOnce(Arc<Vec<u8>>) + Send>;
 
 #[derive(Default)]
 struct Inner {
-    data: HashMap<String, Arc<Vec<u8>>>,
+    /// The engine map stores [`Buf`]s — write paths insert full windows
+    /// over the received value, so every read (`get_buf`, WAL append,
+    /// snapshot encode, watch fire) shares the same allocation and
+    /// conversions back to `Arc<Vec<u8>>` stay free.
+    data: HashMap<String, Buf>,
     lists: HashMap<String, VecDeque<Bytes>>,
     counters: HashMap<String, i64>,
     subscribers: HashMap<String, Vec<mpsc::Sender<PubSubMsg>>>,
@@ -121,7 +125,7 @@ fn encode_del(key: &str) -> Vec<u8> {
 /// Apply one CRC-validated replay record to the recovering map.
 /// Records are idempotent upserts/deletes, so replaying a tail that
 /// overlaps the snapshot horizon converges to the same state.
-fn apply_record(data: &mut HashMap<String, Arc<Vec<u8>>>, rec: &[u8]) -> Result<()> {
+fn apply_record(data: &mut HashMap<String, Buf>, rec: &[u8]) -> Result<()> {
     let mut r = Reader::new(rec);
     match r.take(1)?[0] {
         REC_SET => {
@@ -131,7 +135,7 @@ fn apply_record(data: &mut HashMap<String, Arc<Vec<u8>>>, rec: &[u8]) -> Result<
                 .to_string();
             let vlen = get_varint(&mut r)? as usize;
             let val = r.take(vlen)?.to_vec();
-            data.insert(key, Arc::new(val));
+            data.insert(key, Buf::from_vec(val));
         }
         REC_DEL => {
             let klen = get_varint(&mut r)? as usize;
@@ -147,7 +151,7 @@ fn apply_record(data: &mut HashMap<String, Arc<Vec<u8>>>, rec: &[u8]) -> Result<
     Ok(())
 }
 
-fn encode_snapshot(entries: &[(String, Arc<Vec<u8>>)]) -> Vec<u8> {
+fn encode_snapshot(entries: &[(String, Buf)]) -> Vec<u8> {
     let total: usize = entries.iter().map(|(k, v)| k.len() + v.len() + 16).sum();
     let mut buf = Vec::with_capacity(total + 8);
     put_varint(&mut buf, entries.len() as u64);
@@ -162,7 +166,7 @@ fn encode_snapshot(entries: &[(String, Arc<Vec<u8>>)]) -> Vec<u8> {
 
 fn decode_snapshot(
     payload: &[u8],
-    data: &mut HashMap<String, Arc<Vec<u8>>>,
+    data: &mut HashMap<String, Buf>,
 ) -> Result<()> {
     let mut r = Reader::new(payload);
     let n = get_varint(&mut r)?;
@@ -172,7 +176,7 @@ fn decode_snapshot(
             .map_err(|_| Error::Codec("snapshot key not utf8".into()))?
             .to_string();
         let vlen = get_varint(&mut r)? as usize;
-        data.insert(key, Arc::new(r.take(vlen)?.to_vec()));
+        data.insert(key, Buf::from_vec(r.take(vlen)?.to_vec()));
     }
     Ok(())
 }
@@ -232,7 +236,7 @@ impl KvState {
         std::fs::create_dir_all(&wal_dir)?;
         std::fs::create_dir_all(&snap_dir)?;
 
-        let mut data: HashMap<String, Arc<Vec<u8>>> = HashMap::new();
+        let mut data: HashMap<String, Buf> = HashMap::new();
         let mut from_seq = 0u64;
         let mut snapshot_seq = None;
         if let Some((seq, payload)) = load_latest_snapshot(&snap_dir)? {
@@ -334,7 +338,7 @@ impl KvState {
             let (m, _) = &*self.inner;
             let (entries, next_seq) = {
                 let inner = m.lock().unwrap();
-                let entries: Vec<(String, Arc<Vec<u8>>)> = inner
+                let entries: Vec<(String, Buf)> = inner
                     .data
                     .iter()
                     .map(|(k, v)| (k.clone(), v.clone()))
@@ -380,12 +384,14 @@ impl KvState {
         let (watchers, stored, logged) = {
             let mut inner = m.lock().unwrap();
             self.gauge.add(value.0.len());
-            let stored = Arc::new(value.0);
+            let stored = Buf::from_vec(value.0);
             if let Some(old) =
                 inner.data.insert(key.to_string(), stored.clone())
             {
                 self.gauge.sub(old.len());
             }
+            // The WAL record encodes from the same allocation the map
+            // now shares — no staging copy of the value.
             let logged = self.log(encode_set(key, &stored));
             (inner.take_watches(key), stored, logged)
         };
@@ -394,7 +400,7 @@ impl KvState {
         // Fire outside the engine lock: exactly this key's waiters wake,
         // and their callbacks may chain freely.
         for (_, cb) in watchers {
-            cb(stored.clone());
+            cb(stored.to_blob());
         }
     }
 
@@ -408,7 +414,7 @@ impl KvState {
                 return false;
             }
             self.gauge.add(value.0.len());
-            let stored = Arc::new(value.0);
+            let stored = Buf::from_vec(value.0);
             inner.data.insert(key.to_string(), stored.clone());
             // A winning set_nx logs as a plain Set: replay stays
             // idempotent and losing attempts never touch the WAL.
@@ -417,7 +423,7 @@ impl KvState {
         };
         self.commit_logged(logged);
         for (_, cb) in watchers {
-            cb(stored.clone());
+            cb(stored.to_blob());
         }
         true
     }
@@ -426,9 +432,16 @@ impl KvState {
         self.get_shared(key).map(|b| Bytes(b.to_vec()))
     }
 
-    /// Zero-copy read: the returned `Arc` shares the stored allocation.
-    /// This is the embedded-connector hot path (proxy resolution).
+    /// Zero-copy read: the returned `Arc` shares the stored allocation
+    /// (free — write paths store full windows). This is the
+    /// embedded-connector hot path (proxy resolution).
     pub fn get_shared(&self, key: &str) -> Option<Arc<Vec<u8>>> {
+        self.get_buf(key).map(|b| b.to_blob())
+    }
+
+    /// Zero-copy read as a [`Buf`] window: a refcount bump of the engine
+    /// map's cached allocation — the TCP server's GET response path.
+    pub fn get_buf(&self, key: &str) -> Option<Buf> {
         self.bump();
         let (m, _) = &*self.inner;
         m.lock().unwrap().data.get(key).cloned()
@@ -445,6 +458,15 @@ impl KvState {
     /// acquisition, sharing the stored allocations (embedded fast path of
     /// the shard fabric's `get_many`).
     pub fn mget_shared(&self, keys: &[String]) -> Vec<Option<Arc<Vec<u8>>>> {
+        self.mget_buf(keys)
+            .into_iter()
+            .map(|o| o.map(|b| b.to_blob()))
+            .collect()
+    }
+
+    /// Batched zero-copy read as [`Buf`] windows (the MGET response
+    /// path): one lock acquisition, one refcount bump per hit.
+    pub fn mget_buf(&self, keys: &[String]) -> Vec<Option<Buf>> {
         self.bump();
         let (m, _) = &*self.inner;
         let inner = m.lock().unwrap();
@@ -462,9 +484,9 @@ impl KvState {
             let mut inner = m.lock().unwrap();
             for (key, value) in items {
                 self.gauge.add(value.0.len());
-                let stored = Arc::new(value.0);
+                let stored = Buf::from_vec(value.0);
                 for (_, cb) in inner.take_watches(&key) {
-                    fired.push((cb, stored.clone()));
+                    fired.push((cb, stored.to_blob()));
                 }
                 // One record per pair; the batch group-commits once below.
                 logged = self.log(encode_set(&key, &stored)).or(logged);
@@ -492,7 +514,7 @@ impl KvState {
         let (m, _) = &*self.inner;
         let mut inner = m.lock().unwrap();
         if let Some(v) = inner.data.get(key) {
-            let v = v.clone();
+            let v = v.to_blob();
             drop(inner);
             cb(v);
             return None;

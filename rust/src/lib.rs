@@ -84,6 +84,43 @@
 //! through [`store::TcpKvConnector`] descriptors so proxies round-trip
 //! the tuning.
 //!
+//! # Zero-copy data plane
+//!
+//! Bulk value bytes cross the process without being copied. The unit of
+//! sharing is [`codec::Buf`] — a cheaply clonable window (`Arc` +
+//! offset/len) over an immutable byte allocation:
+//!
+//! * **Engine** — [`kv::KvState`] stores values as full-window `Buf`s,
+//!   so a GET/MGET response, a watch `Notify`, the WAL append, and a
+//!   snapshot all share the one stored allocation (refcount bumps, not
+//!   copies).
+//! * **Server egress** — [`kv::Response`] carries `Buf` payloads and
+//!   encodes into a segmented [`net::WireFrame`]: header bytes are
+//!   owned, payloads ride as shared segments. The epoll write path
+//!   queues segments in a per-connection outbox and drains them with
+//!   scatter-gather `writev`, so a 16 MiB reply costs one small header
+//!   allocation and zero payload copies on the server.
+//! * **Client ingress** — the pipelined client reads each response
+//!   frame into one buffer and decodes *owned*
+//!   ([`kv::decode_response_owned`]): values become `Buf` windows into
+//!   that same buffer. [`kv::KvClient::get_view`] /
+//!   [`store::Connector::get_view`] / [`store::Store::get_view`]
+//!   surface the view; the owned `get` APIs flatten it for callers
+//!   that need a `Vec`.
+//!
+//! Ownership rule: a `Buf` is immutable and outlives every clone of its
+//! window — holding a view pins the whole backing allocation, so drop
+//! views promptly when the value is a small slice of a large batch
+//! frame. A copy is still taken where framing demands it: WAL records
+//! (CRC framing re-encodes the record), the threaded ingress (flat
+//! per-frame encode through a reused scratch buffer), sub-512 B shared
+//! segments (inlined into the outbox — cheaper than an iovec entry; the
+//! only outbox site counted in `data.bytes_copied`), and copy-mode
+//! servers ([`net::ServerBuilder::zero_copy`]`(false)`, the bench
+//! baseline). The `data.bytes_copied` / `data.value_bytes_{in,out}`
+//! counters in `/metrics` make the difference measurable, and
+//! `benches/zerocopy.rs` gates on it.
+//!
 //! *Migration note:* the former constructors
 //! (`KvServer::spawn{,_with_state}`, `BrokerServer::spawn{,_with_state}`)
 //! are deprecated shims; use `ServerBuilder::new().spawn_kv()` /
@@ -216,7 +253,7 @@ pub fn version() -> &'static str {
 
 /// Convenience prelude for examples and applications.
 pub mod prelude {
-    pub use crate::codec::{Bytes, Decode, Encode, F32s};
+    pub use crate::codec::{Buf, Bytes, Decode, Encode, F32s};
     pub use crate::error::{Error, Result};
     pub use crate::futures::{when_all, when_any, PendingResult, ProxyFuture};
     pub use crate::kv::{ClientOptions, FlushPolicy};

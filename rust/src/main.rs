@@ -131,6 +131,20 @@ fn quickstart() -> Result<()> {
     fut.set_result(&42)?;
     println!("consumer observed: {}", consumer.join().unwrap());
 
+    println!("\n# zero-copy views");
+    // `get::<T>` decodes an owned object; `get_view` hands back a `Buf`
+    // window over the channel's own allocation — the serialized bytes
+    // without a copy. Clones of the view are refcount bumps.
+    let key = store.put(&vec![7u8; 1 << 20])?;
+    let view = store.get_view(&key)?.expect("just stored");
+    let again = view.clone();
+    println!(
+        "viewed {} serialized bytes twice, zero copies ({} == {})",
+        view.len(),
+        view.as_ptr() as usize,
+        again.as_ptr() as usize,
+    );
+
     println!("\n# ownership");
     let owned = store.owned_proxy(&"owned".to_string())?;
     let key = owned.key().to_string();

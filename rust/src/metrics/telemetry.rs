@@ -810,6 +810,31 @@ pub fn snapshot() -> TelemetrySnapshot {
     registry().snapshot()
 }
 
+/// Cached registry handles for the zero-copy data plane: how many value
+/// bytes the server actually memcpy'd versus moved by reference, plus
+/// raw value volume in each direction. Copy regressions show up in
+/// `/metrics` without a profiler.
+pub struct DataMetrics {
+    /// Value-payload bytes copied on the server data path (serving a
+    /// large object zero-copy adds only its header here).
+    pub bytes_copied: Arc<Counter>,
+    /// Value-payload bytes received in write-side ops (SET et al.).
+    pub value_bytes_in: Arc<Counter>,
+    /// Value-payload bytes served in read-side replies and pushes.
+    pub value_bytes_out: Arc<Counter>,
+}
+
+/// Cached [`DataMetrics`] accessor for hot paths (one registry lookup
+/// per process, not per op).
+pub fn data_metrics() -> &'static DataMetrics {
+    static M: OnceLock<DataMetrics> = OnceLock::new();
+    M.get_or_init(|| DataMetrics {
+        bytes_copied: counter("data.bytes_copied"),
+        value_bytes_in: counter("data.value_bytes_in"),
+        value_bytes_out: counter("data.value_bytes_out"),
+    })
+}
+
 /// Set the global slow-op threshold: ops at or above it land in the
 /// slow-op log. Default 1ms.
 pub fn set_slow_threshold(d: Duration) {

@@ -66,6 +66,7 @@ pub struct ServerBuilder<S = NoState> {
     pub(crate) event_loops: usize,
     pub(crate) admin: Option<SocketAddr>,
     pub(crate) durability: Option<DurabilityOptions>,
+    pub(crate) zero_copy: bool,
     pub(crate) state: S,
 }
 
@@ -85,6 +86,7 @@ impl ServerBuilder<NoState> {
             event_loops: default_event_loops(),
             admin: None,
             durability: None,
+            zero_copy: true,
             state: NoState,
         }
     }
@@ -151,6 +153,16 @@ impl<S> ServerBuilder<S> {
         self
     }
 
+    /// Emit value payloads as shared segments over the scatter-gather
+    /// write path (default `true`). Disabling re-encodes every reply
+    /// into one flat buffer — the pre-zero-copy behaviour, kept as a
+    /// measurable baseline for the `zerocopy` bench; copied payload
+    /// bytes are then charged to the `data.bytes_copied` counter.
+    pub fn zero_copy(mut self, on: bool) -> Self {
+        self.zero_copy = on;
+        self
+    }
+
     /// Attach pre-built server state, selecting which server `spawn()`
     /// produces (e.g. `KvState` → KV server, `BrokerState` → broker).
     pub fn with_state<T>(self, state: T) -> ServerBuilder<T> {
@@ -161,6 +173,7 @@ impl<S> ServerBuilder<S> {
             event_loops: self.event_loops,
             admin: self.admin,
             durability: self.durability,
+            zero_copy: self.zero_copy,
             state,
         }
     }

@@ -6,9 +6,12 @@
 //! busy-wait) and deals accepted sockets round-robin across the loops;
 //! each connection is a small state machine: incremental frame
 //! reassembly on readable (partial length prefixes and split bodies are
-//! just buffered bytes), and buffered writes flushed once per readiness
-//! burst — many small replies coalesce into one syscall. Write interest
-//! is only armed while a connection has unflushed bytes.
+//! just buffered bytes), and a per-connection segment [`Outbox`] flushed
+//! once per readiness burst with scatter-gather `writev` — many small
+//! replies coalesce into one owned tail segment while large [`Buf`]
+//! payloads ride the queue by reference, so a 16 MiB GET reply costs one
+//! header allocation and zero payload copies. Write interest is only
+//! armed while a connection has unflushed bytes.
 //!
 //! Protocol behaviour plugs in through [`Service`]: one callback per
 //! complete frame, returning a [`FrameOutcome`]. Fast ops reply inline
@@ -23,13 +26,14 @@
 //! per-connection writer mutex anywhere.
 
 use std::collections::{HashMap, VecDeque};
-use std::io::{Read, Write};
+use std::io::Read;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::os::fd::AsRawFd;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
+use crate::codec::Buf;
 use crate::error::{Error, Result};
 use crate::metrics::telemetry;
 use crate::net::poller::{Poller, Waker};
@@ -85,11 +89,102 @@ pub enum Framing {
 /// without a blank line is a protocol violation.
 const MAX_HTTP_HEAD: usize = 16 * 1024;
 
+/// One gather segment of an outbound [`WireFrame`].
+pub enum FrameSeg {
+    /// Frame-private bytes (headers, small bodies): moved into the
+    /// outbox, never re-copied.
+    Owned(Vec<u8>),
+    /// A refcounted window over shared value bytes: queueing one is a
+    /// refcount bump, and the payload leaves through `writev` straight
+    /// from the cached allocation.
+    Shared(Buf),
+}
+
+impl FrameSeg {
+    fn as_slice(&self) -> &[u8] {
+        match self {
+            FrameSeg::Owned(v) => v,
+            FrameSeg::Shared(b) => b.as_slice(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+}
+
+/// An outbound frame as a segment list — the unit services hand the
+/// loop. A flat `Vec<u8>` converts into one owned segment (`body.into()`
+/// at legacy call sites); the zero-copy encode paths build
+/// `[Owned(header), Shared(payload)]` frames so large values cross the
+/// outbox by reference instead of by copy.
+#[derive(Default)]
+pub struct WireFrame {
+    segs: Vec<FrameSeg>,
+    len: usize,
+}
+
+impl WireFrame {
+    pub fn new() -> WireFrame {
+        WireFrame::default()
+    }
+
+    /// A single-segment frame owning `body` outright.
+    pub fn from_vec(body: Vec<u8>) -> WireFrame {
+        let mut f = WireFrame::new();
+        f.push_owned(body);
+        f
+    }
+
+    /// Append frame-private bytes (empty vectors are dropped).
+    pub fn push_owned(&mut self, body: Vec<u8>) {
+        if !body.is_empty() {
+            self.len += body.len();
+            self.segs.push(FrameSeg::Owned(body));
+        }
+    }
+
+    /// Append a shared payload window (empty windows are dropped).
+    pub fn push_shared(&mut self, payload: Buf) {
+        if !payload.is_empty() {
+            self.len += payload.len();
+            self.segs.push(FrameSeg::Shared(payload));
+        }
+    }
+
+    /// Total body length across all segments (what the length prefix
+    /// advertises).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Flatten every segment into one contiguous body — the copy-mode
+    /// baseline and test comparisons; the zero-copy data path never
+    /// calls this.
+    pub fn concat(&self) -> Vec<u8> {
+        let mut flat = Vec::with_capacity(self.len);
+        for seg in &self.segs {
+            flat.extend_from_slice(seg.as_slice());
+        }
+        flat
+    }
+}
+
+impl From<Vec<u8>> for WireFrame {
+    fn from(body: Vec<u8>) -> WireFrame {
+        WireFrame::from_vec(body)
+    }
+}
+
 /// What the loop does with a completed inbound frame.
 pub enum FrameOutcome {
-    /// Write this reply body (the loop adds the length prefix) in FIFO
+    /// Write this reply frame (the loop adds the length prefix) in FIFO
     /// position.
-    Reply(Vec<u8>),
+    Reply(WireFrame),
     /// The service owns the reply: a helper thread will deliver it via
     /// [`ConnHandle::complete`]. Until then the loop buffers this
     /// connection's later frames and replays them in order — FIFO holds
@@ -99,7 +194,7 @@ pub enum FrameOutcome {
     /// write buffer drains (subscribe push mode). `take` runs on the
     /// loop thread and must hand the stream to its own thread promptly.
     Handoff {
-        reply: Vec<u8>,
+        reply: WireFrame,
         take: Box<dyn FnOnce(TcpStream) + Send>,
     },
     /// Protocol violation: drop the connection.
@@ -134,11 +229,11 @@ enum LoopMsg {
     /// `lat` records fire-to-write latency into the given histogram.
     Push {
         conn: u64,
-        body: Vec<u8>,
+        frame: WireFrame,
         lat: Option<(Instant, Arc<telemetry::Histogram>)>,
     },
     /// FIFO reply finishing a [`FrameOutcome::Deferred`] op.
-    Complete { conn: u64, body: Vec<u8> },
+    Complete { conn: u64, frame: WireFrame },
     /// Force-close a connection.
     CloseConn { conn: u64 },
     /// A freshly accepted socket dealt over from the accepting loop.
@@ -178,16 +273,23 @@ impl ConnHandle {
     /// loop. `lat` stamps fire-to-write latency into a histogram.
     pub fn push_frame(
         &self,
-        body: Vec<u8>,
+        frame: impl Into<WireFrame>,
         lat: Option<(Instant, Arc<telemetry::Histogram>)>,
     ) {
-        self.shared.send(LoopMsg::Push { conn: self.conn_id, body, lat });
+        self.shared.send(LoopMsg::Push {
+            conn: self.conn_id,
+            frame: frame.into(),
+            lat,
+        });
     }
 
     /// Deliver the FIFO reply of a deferred op; the loop then replays any
     /// frames it buffered behind it.
-    pub fn complete(&self, body: Vec<u8>) {
-        self.shared.send(LoopMsg::Complete { conn: self.conn_id, body });
+    pub fn complete(&self, frame: impl Into<WireFrame>) {
+        self.shared.send(LoopMsg::Complete {
+            conn: self.conn_id,
+            frame: frame.into(),
+        });
     }
 
     /// Ask the loop to drop this connection.
@@ -203,15 +305,14 @@ struct Conn {
     /// consumed frames (compacted lazily).
     rbuf: Vec<u8>,
     rpos: usize,
-    /// Coalesced write buffer: complete frames awaiting the socket.
-    wbuf: Vec<u8>,
-    wpos: usize,
+    /// Outbound segment queue: complete frames awaiting the socket.
+    out: Outbox,
     /// Whether the poller registration currently includes write interest.
     writable_interest: bool,
     /// A deferred op is in flight; inbound frames queue in `backlog`.
     deferred: bool,
     backlog: VecDeque<Vec<u8>>,
-    /// Pending stream handoff, executed once `wbuf` drains.
+    /// Pending stream handoff, executed once the outbox drains.
     handoff: Option<Box<dyn FnOnce(TcpStream) + Send>>,
 }
 
@@ -221,8 +322,7 @@ impl Conn {
             stream,
             rbuf: Vec::new(),
             rpos: 0,
-            wbuf: Vec::new(),
-            wpos: 0,
+            out: Outbox::new(),
             writable_interest: false,
             deferred: false,
             backlog: VecDeque::new(),
@@ -231,17 +331,94 @@ impl Conn {
     }
 }
 
-fn push_wire_frame(wbuf: &mut Vec<u8>, body: &[u8]) {
-    wbuf.extend_from_slice(&(body.len() as u32).to_le_bytes());
-    wbuf.extend_from_slice(body);
+/// Owned segments at or under this size are memcpy'd into the outbox's
+/// owned tail (coalescing many small frames into one gather entry, as
+/// the flat write buffer always did); larger ones are queued by move.
+const OWNED_INLINE_MAX: usize = 16 * 1024;
+
+/// `Shared` segments at or under this size are copied into the owned
+/// tail instead of occupying their own iovec slot — a sub-KiB memcpy is
+/// cheaper than an extra gather entry. These are the only payload bytes
+/// the outbox ever copies, and they are counted in `data.bytes_copied`.
+const SHARED_INLINE_MAX: usize = 512;
+
+/// Per-connection outbound segment queue, drained with `writev`.
+struct Outbox {
+    segs: VecDeque<FrameSeg>,
+    /// Bytes of the front segment already written to the socket.
+    front_pos: usize,
+    /// Total unflushed bytes across every segment.
+    len: usize,
 }
 
-/// Queue an outbound frame under the pool's framing: length-prefixed
-/// protocols get the `u32` prefix, HTTP responses go out verbatim.
-fn push_out(framing: Framing, wbuf: &mut Vec<u8>, body: &[u8]) {
-    match framing {
-        Framing::LengthPrefixed => push_wire_frame(wbuf, body),
-        Framing::Http => wbuf.extend_from_slice(body),
+impl Outbox {
+    fn new() -> Outbox {
+        Outbox { segs: VecDeque::new(), front_pos: 0, len: 0 }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append raw bytes to the owned tail segment (creating one if the
+    /// queue is empty or ends in a shared segment).
+    fn extend_owned(&mut self, bytes: &[u8]) {
+        if bytes.is_empty() {
+            return;
+        }
+        self.len += bytes.len();
+        if let Some(FrameSeg::Owned(tail)) = self.segs.back_mut() {
+            tail.extend_from_slice(bytes);
+        } else {
+            self.segs.push_back(FrameSeg::Owned(bytes.to_vec()));
+        }
+    }
+
+    /// Queue a frame under the pool's framing: length-prefixed protocols
+    /// get the `u32` prefix first, HTTP responses go out verbatim. Small
+    /// segments coalesce into the owned tail; large owned segments move
+    /// in and large shared segments ride by reference.
+    fn push_frame(&mut self, framing: Framing, frame: WireFrame) {
+        if framing == Framing::LengthPrefixed {
+            self.extend_owned(&(frame.len() as u32).to_le_bytes());
+        }
+        for seg in frame.segs {
+            match seg {
+                FrameSeg::Owned(v) if v.len() <= OWNED_INLINE_MAX => {
+                    self.extend_owned(&v);
+                }
+                FrameSeg::Owned(v) => {
+                    self.len += v.len();
+                    self.segs.push_back(FrameSeg::Owned(v));
+                }
+                FrameSeg::Shared(b) if b.len() <= SHARED_INLINE_MAX => {
+                    telemetry::data_metrics()
+                        .bytes_copied
+                        .add(b.len() as u64);
+                    self.extend_owned(&b);
+                }
+                FrameSeg::Shared(b) => {
+                    self.len += b.len();
+                    self.segs.push_back(FrameSeg::Shared(b));
+                }
+            }
+        }
+    }
+
+    /// Drop `n` freshly written bytes off the front of the queue.
+    fn advance(&mut self, mut n: usize) {
+        self.len -= n;
+        while n > 0 {
+            let left = self.segs.front().expect("advance past end").len()
+                - self.front_pos;
+            if n < left {
+                self.front_pos += n;
+                return;
+            }
+            n -= left;
+            self.front_pos = 0;
+            self.segs.pop_front();
+        }
     }
 }
 
@@ -331,11 +508,36 @@ enum FlushResult {
     Dead,
 }
 
-fn flush_wbuf(conn: &mut Conn) -> FlushResult {
-    while conn.wpos < conn.wbuf.len() {
-        match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+/// One gather write against the socket: `writev` over the live segments
+/// on Linux (up to [`IOV_MAX_BATCH`](crate::net::sys::IOV_MAX_BATCH)
+/// per call), a single-segment `write` elsewhere. Returns bytes written.
+fn write_once(stream: &mut TcpStream, out: &Outbox) -> std::io::Result<usize> {
+    #[cfg(target_os = "linux")]
+    {
+        use crate::net::sys;
+        let mut iov: Vec<sys::IoVec> =
+            Vec::with_capacity(out.segs.len().min(sys::IOV_MAX_BATCH));
+        for (i, seg) in out.segs.iter().take(sys::IOV_MAX_BATCH).enumerate()
+        {
+            let bytes = seg.as_slice();
+            let bytes = if i == 0 { &bytes[out.front_pos..] } else { bytes };
+            iov.push(sys::IoVec { base: bytes.as_ptr(), len: bytes.len() });
+        }
+        sys::writev_segments(stream.as_raw_fd(), &iov)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        use std::io::Write;
+        let front = out.segs.front().expect("write_once on empty outbox");
+        stream.write(&front.as_slice()[out.front_pos..])
+    }
+}
+
+fn flush_outbox(conn: &mut Conn) -> FlushResult {
+    while !conn.out.is_empty() {
+        match write_once(&mut conn.stream, &conn.out) {
             Ok(0) => return FlushResult::Dead,
-            Ok(n) => conn.wpos += n,
+            Ok(n) => conn.out.advance(n),
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 return FlushResult::Partial;
             }
@@ -540,7 +742,7 @@ impl<S: Service> EventLoop<S> {
         match service.on_frame(&handle, body) {
             FrameOutcome::Reply(frame) => {
                 if let Some(conn) = self.conns.get_mut(&id) {
-                    push_out(self.framing, &mut conn.wbuf, &frame);
+                    conn.out.push_frame(self.framing, frame);
                 }
                 true
             }
@@ -552,7 +754,7 @@ impl<S: Service> EventLoop<S> {
             }
             FrameOutcome::Handoff { reply, take } => {
                 if let Some(conn) = self.conns.get_mut(&id) {
-                    push_out(self.framing, &mut conn.wbuf, &reply);
+                    conn.out.push_frame(self.framing, reply);
                     conn.handoff = Some(take);
                 }
                 true
@@ -566,7 +768,7 @@ impl<S: Service> EventLoop<S> {
     fn try_flush(&mut self, id: u64) -> bool {
         let result = {
             let Some(conn) = self.conns.get_mut(&id) else { return false };
-            flush_wbuf(conn)
+            flush_outbox(conn)
         };
         match result {
             FlushResult::Dead => {
@@ -576,8 +778,6 @@ impl<S: Service> EventLoop<S> {
             FlushResult::Drained => {
                 let (has_handoff, clear_interest, fd) = {
                     let conn = self.conns.get_mut(&id).unwrap();
-                    conn.wbuf.clear();
-                    conn.wpos = 0;
                     (
                         conn.handoff.is_some(),
                         conn.writable_interest,
@@ -596,7 +796,7 @@ impl<S: Service> EventLoop<S> {
             }
             FlushResult::Partial => {
                 let conn = self.conns.get_mut(&id).unwrap();
-                if conn.wbuf.len() - conn.wpos > WBUF_CAP {
+                if conn.out.len > WBUF_CAP {
                     // Peer stopped reading with pushes still accumulating.
                     self.close_conn(id);
                     return false;
@@ -640,18 +840,18 @@ impl<S: Service> EventLoop<S> {
         let mut touched: Vec<u64> = Vec::new();
         for msg in msgs {
             match msg {
-                LoopMsg::Push { conn, body, lat } => {
+                LoopMsg::Push { conn, frame, lat } => {
                     if let Some(c) = self.conns.get_mut(&conn) {
-                        push_out(self.framing, &mut c.wbuf, &body);
+                        c.out.push_frame(self.framing, frame);
                         if let Some((fired, hist)) = lat {
                             hist.record_duration(fired.elapsed());
                         }
                         touched.push(conn);
                     }
                 }
-                LoopMsg::Complete { conn, body } => {
+                LoopMsg::Complete { conn, frame } => {
                     if self.conns.contains_key(&conn) {
-                        self.complete_conn(conn, body);
+                        self.complete_conn(conn, frame);
                         touched.push(conn);
                     }
                 }
@@ -671,13 +871,13 @@ impl<S: Service> EventLoop<S> {
 
     /// Finish a deferred op, then replay buffered frames in FIFO order
     /// until the backlog empties or another op defers.
-    fn complete_conn(&mut self, id: u64, body: Vec<u8>) {
+    fn complete_conn(&mut self, id: u64, frame: WireFrame) {
         {
             let Some(conn) = self.conns.get_mut(&id) else { return };
             if !conn.deferred {
                 return; // stale completion (conn was reused logic-side)
             }
-            push_out(self.framing, &mut conn.wbuf, &body);
+            conn.out.push_frame(self.framing, frame);
             conn.deferred = false;
         }
         loop {
@@ -821,7 +1021,13 @@ impl Drop for EventLoopPool {
 #[cfg(all(test, target_os = "linux"))]
 mod tests {
     use super::*;
+    use std::io::Write;
     use std::time::Duration;
+
+    fn push_wire_frame(wire: &mut Vec<u8>, body: &[u8]) {
+        wire.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        wire.extend_from_slice(body);
+    }
 
     fn write_raw_frame(s: &mut TcpStream, body: &[u8]) {
         s.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
@@ -840,7 +1046,7 @@ mod tests {
 
     impl Service for Echo {
         fn on_frame(&self, _conn: &ConnHandle, body: Vec<u8>) -> FrameOutcome {
-            FrameOutcome::Reply(body)
+            FrameOutcome::Reply(body.into())
         }
     }
 
@@ -905,7 +1111,7 @@ mod tests {
                 });
                 return FrameOutcome::Deferred;
             }
-            FrameOutcome::Reply(body)
+            FrameOutcome::Reply(body.into())
         }
     }
 
@@ -927,6 +1133,52 @@ mod tests {
         assert_eq!(read_raw_frame(&mut c)[0], 100, "deferred reply first");
         assert_eq!(read_raw_frame(&mut c)[0], 2);
         assert_eq!(read_raw_frame(&mut c)[0], 4);
+    }
+
+    /// Echoes each body as a two-segment frame: the first half owned,
+    /// the second half a `Shared` window — so the test exercises both
+    /// the inline-coalescing path (small shared tails) and the iovec
+    /// path (large shared payloads spanning partial `writev` flushes).
+    struct SegEcho;
+
+    impl Service for SegEcho {
+        fn on_frame(&self, _conn: &ConnHandle, body: Vec<u8>) -> FrameOutcome {
+            let mid = body.len() / 2;
+            let mut f = WireFrame::new();
+            f.push_owned(body[..mid].to_vec());
+            f.push_shared(Buf::from_vec(body[mid..].to_vec()));
+            FrameOutcome::Reply(f)
+        }
+    }
+
+    #[test]
+    fn multi_segment_replies_preserve_bytes_and_order() {
+        let pool = EventLoopPool::spawn(
+            "127.0.0.1:0".parse().unwrap(),
+            1,
+            0,
+            Arc::new(SegEcho),
+            "seg-echo",
+        )
+        .unwrap();
+        let mut c = TcpStream::connect(pool.addr).unwrap();
+        // Sizes straddling the empty frame, the shared-inline threshold,
+        // and a payload big enough to force partial writev flushes.
+        for len in [0usize, 1, 9, 1023, 4096, 4 << 20] {
+            let body: Vec<u8> = (0..len).map(|i| (i % 251) as u8).collect();
+            write_raw_frame(&mut c, &body);
+            assert_eq!(read_raw_frame(&mut c), body, "len={len}");
+        }
+        // A pipelined burst of multi-segment replies (shared halves above
+        // the inline threshold, so segments interleave) stays in order.
+        let mut burst = Vec::new();
+        for i in 0..50u8 {
+            push_wire_frame(&mut burst, &[i; 1200]);
+        }
+        c.write_all(&burst).unwrap();
+        for i in 0..50u8 {
+            assert_eq!(read_raw_frame(&mut c), vec![i; 1200]);
+        }
     }
 
     #[test]

@@ -295,15 +295,13 @@ impl Service for AdminService {
             _ => return FrameOutcome::Close,
         };
         if method != "GET" {
-            return FrameOutcome::Reply(text(
-                405,
-                "Method Not Allowed",
-                "only GET\n",
-            ));
+            return FrameOutcome::Reply(
+                text(405, "Method Not Allowed", "only GET\n").into(),
+            );
         }
         // Strip any query string; routes don't take parameters.
         let path = target.split('?').next().unwrap_or(target);
-        FrameOutcome::Reply(self.route(path))
+        FrameOutcome::Reply(self.route(path).into())
     }
 }
 

@@ -31,7 +31,8 @@ pub(crate) mod sys;
 
 pub use builder::{Ingress, NoState, ServerBuilder};
 pub use event_loop::{
-    ConnHandle, EventLoopPool, FrameOutcome, Framing, Service,
+    ConnHandle, EventLoopPool, FrameOutcome, FrameSeg, Framing, Service,
+    WireFrame,
 };
 pub use http::{http_get, AdminService};
 pub use poller::{PollEvent, Poller, Waker};

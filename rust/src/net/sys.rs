@@ -1,7 +1,8 @@
-//! Raw Linux syscall surface for the reactor: epoll, eventfd, and the
-//! fd rlimit — declared `extern "C"` against the C runtime std already
-//! links, so the crate stays zero-dependency (no `libc` crate). Only
-//! compiled on Linux; the poller's portable stub covers everything else.
+//! Raw Linux syscall surface for the reactor: epoll, eventfd, writev,
+//! and the fd rlimit — declared `extern "C"` against the C runtime std
+//! already links, so the crate stays zero-dependency (no `libc` crate).
+//! Only compiled on Linux; the poller's portable stub covers everything
+//! else.
 
 use std::io;
 use std::os::fd::{FromRawFd, OwnedFd};
@@ -39,6 +40,18 @@ struct RLimit {
     max: u64,
 }
 
+/// `struct iovec` for [`writev`]: one gather segment.
+#[repr(C)]
+pub struct IoVec {
+    pub base: *const u8,
+    pub len: usize,
+}
+
+/// Max segments per [`writev`] call (kernel `UIO_MAXIOV` is 1024; a
+/// smaller batch keeps each syscall's copy-to-kernel bounded while still
+/// amortizing it across many frames).
+pub const IOV_MAX_BATCH: usize = 64;
+
 extern "C" {
     fn epoll_create1(flags: c_int) -> c_int;
     fn epoll_ctl(
@@ -56,6 +69,7 @@ extern "C" {
     fn eventfd(initval: u32, flags: c_int) -> c_int;
     fn getrlimit(resource: c_int, rlim: *mut RLimit) -> c_int;
     fn setrlimit(resource: c_int, rlim: *const RLimit) -> c_int;
+    fn writev(fd: c_int, iov: *const IoVec, iovcnt: c_int) -> isize;
 }
 
 fn cvt(ret: c_int) -> io::Result<c_int> {
@@ -95,6 +109,24 @@ pub fn epoll_wait_events(
         epoll_wait(epfd, events.as_mut_ptr(), events.len() as c_int, timeout_ms)
     })?;
     Ok(n as usize)
+}
+
+/// Scatter-gather write: one syscall pushes every segment in `iov` (up
+/// to a short count) without first concatenating them into a staging
+/// buffer — the syscall half of the zero-copy data plane. Returns the
+/// bytes written; callers handle short writes exactly as for `write`.
+///
+/// Safety: each `IoVec` must point at `len` readable bytes for the
+/// duration of the call; the safe builder in the event loop derives them
+/// from live slices.
+pub fn writev_segments(fd: c_int, iov: &[IoVec]) -> io::Result<usize> {
+    let cnt = iov.len().min(IOV_MAX_BATCH) as c_int;
+    let n = unsafe { writev(fd, iov.as_ptr(), cnt) };
+    if n < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(n as usize)
+    }
 }
 
 /// Nonblocking eventfd as an owned fd — the loop's cross-thread waker.

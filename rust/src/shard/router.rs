@@ -13,6 +13,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::codec::Buf;
 use crate::error::{Error, Result};
 use crate::metrics::telemetry::{self, MirroredCounter};
 use crate::ops::reactor::fan_out_ops;
@@ -385,6 +386,35 @@ impl Connector for ShardedConnector {
         // degraded can be reported absent while its only copy sits on a
         // temporarily unreachable backend — `degraded_writes` makes that
         // window observable.
+        match last_err {
+            Some(e) if healthy_misses == 0 => Err(e),
+            _ => Ok(None),
+        }
+    }
+
+    /// Same replica walk as [`ShardedConnector::get`], but each backend
+    /// serves its zero-copy view — on TCP shards the value stays in the
+    /// response frame's allocation all the way to the caller.
+    fn get_view(&self, key: &str) -> Result<Option<Buf>> {
+        let reps = self.replica_idxs(key);
+        let mut healthy_misses = 0usize;
+        let mut last_err = None;
+        for (attempt, &shard) in reps.iter().enumerate() {
+            let t = Instant::now();
+            let res = self.shards[shard].get_view(key);
+            self.shard_op_us[shard].record_duration(t.elapsed());
+            match res {
+                Ok(Some(view)) => {
+                    if attempt > 0 {
+                        self.fallbacks.incr();
+                    }
+                    return Ok(Some(view));
+                }
+                Ok(None) => healthy_misses += 1,
+                Err(e) => last_err = Some(e),
+            }
+        }
+        // Same miss-vs-error policy as `get` above.
         match last_err {
             Some(e) if healthy_misses == 0 => Err(e),
             _ => Ok(None),

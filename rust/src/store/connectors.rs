@@ -12,7 +12,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::codec::{Bytes, Decode, Encode, Reader, get_varint, put_varint};
+use crate::codec::{Buf, Bytes, Decode, Encode, Reader, get_varint, put_varint};
 use crate::error::{Error, Result};
 use crate::kv::{ClientOptions, KvClient, KvState};
 use crate::metrics::{StoreBytes, TelemetrySnapshot};
@@ -33,6 +33,15 @@ pub trait Connector: Send + Sync {
     fn put(&self, key: &str, data: Vec<u8>) -> Result<()>;
 
     fn get(&self, key: &str) -> Result<Option<Blob>>;
+
+    /// Zero-copy read: a [`Buf`] window over whatever allocation the
+    /// channel already holds — the memory engine's stored buffer, the
+    /// TCP client's response frame. The default flattens
+    /// [`Connector::get`]'s blob into a full-window `Buf` (one refcount
+    /// bump, no byte copy), so every connector has a view path.
+    fn get_view(&self, key: &str) -> Result<Option<Buf>> {
+        Ok(self.get(key)?.map(Buf::from_arc))
+    }
 
     /// Store only if absent; returns whether *this* call stored it — the
     /// single-assignment primitive ProxyFutures' `set_result` rides. The
@@ -486,6 +495,12 @@ impl Connector for MemoryConnector {
         Ok(self.state.get_shared(key))
     }
 
+    fn get_view(&self, key: &str) -> Result<Option<Buf>> {
+        // The engine stores full-window `Buf`s, so this is the stored
+        // allocation itself — a refcount bump, never a copy.
+        Ok(self.state.get_buf(key))
+    }
+
     fn put_nx(&self, key: &str, data: Vec<u8>) -> Result<bool> {
         // Native conditional write: atomic under the engine lock.
         Ok(self.state.set_nx(key, Bytes(data)))
@@ -704,7 +719,13 @@ impl Connector for TcpKvConnector {
     }
 
     fn get(&self, key: &str) -> Result<Option<Blob>> {
-        Ok(self.client.get(key)?.map(|b| Arc::new(b.0)))
+        Ok(self.client.get_view(key)?.map(|b| b.into_blob()))
+    }
+
+    fn get_view(&self, key: &str) -> Result<Option<Buf>> {
+        // The view IS the response frame's allocation: the value crosses
+        // the socket into one buffer and is never copied again.
+        self.client.get_view(key)
     }
 
     fn put_nx(&self, key: &str, data: Vec<u8>) -> Result<bool> {
@@ -741,9 +762,9 @@ impl Connector for TcpKvConnector {
         // Native MGET: one round trip regardless of batch size.
         Ok(self
             .client
-            .mget(keys)?
+            .mget_view(keys)?
             .into_iter()
-            .map(|o| o.map(|b| Arc::new(b.0)))
+            .map(|o| o.map(|b| b.into_blob()))
             .collect())
     }
 

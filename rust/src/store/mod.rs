@@ -153,6 +153,23 @@ impl Store {
         }
     }
 
+    /// Fetch the raw serialized bytes as a zero-copy view: a
+    /// [`Buf`](crate::codec::Buf) window over the channel's own
+    /// allocation (the memory engine's stored value, a TCP response
+    /// frame). Use when the caller wants the bytes themselves — e.g. to
+    /// forward them — rather than a decoded object; counts toward the
+    /// same get metrics as [`Store::get`].
+    pub fn get_view(&self, key: &str) -> Result<Option<crate::codec::Buf>> {
+        self.inner.gets.incr();
+        match self.inner.connector.get_view(key)? {
+            Some(view) => {
+                self.inner.get_bytes.add(view.len() as u64);
+                Ok(Some(view))
+            }
+            None => Ok(None),
+        }
+    }
+
     /// Blocking fetch for a key that may not exist yet: arms a watch on
     /// the connector's event plane and parks on the handle — one push
     /// wakes the wait (`Ok(None)` = timed out).

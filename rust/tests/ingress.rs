@@ -64,7 +64,7 @@ fn event_ingress_reassembles_bytewise_dribbled_frames() {
     conn.write_all(b).unwrap();
     conn.flush().unwrap();
     match read_frame::<_, Response>(&mut conn).unwrap() {
-        Some(Response::Value(Some(v))) => assert_eq!(v.0, vec![42u8; 64]),
+        Some(Response::Value(Some(v))) => assert_eq!(&v[..], &[42u8; 64][..]),
         other => panic!("unexpected reply: {other:?}"),
     }
 }
